@@ -1,0 +1,83 @@
+//! End-to-end driver: the paper's full pipeline on a real small workload.
+//!
+//! Runs all eight algorithms (4 Cluster Kriging flavors + 4 baselines) on
+//! two regimes — the CCPP-like plant data (n≈4800, d=4) and a 20-d
+//! synthetic benchmark (n=3000) — reporting R²/SMSE/MSLL and fit/predict
+//! wall-clock per algorithm: one live row of the paper's Tables I–III and
+//! Fig. 2 per run. Results are recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example large_scale_regression [-- --paper-scale]
+//! ```
+
+use cluster_kriging::data::functions::by_name;
+use cluster_kriging::data::synthetic::from_benchmark;
+use cluster_kriging::data::uci_like;
+use cluster_kriging::eval::{evaluate, AlgoSpec, HarnessConfig};
+
+fn main() -> anyhow::Result<()> {
+    let paper_scale = std::env::args().any(|a| a == "--paper-scale");
+    let (n_ccpp, n_syn) = if paper_scale { (9568, 10_000) } else { (4800, 3000) };
+
+    let workloads = vec![
+        uci_like::ccpp_sized(n_ccpp, 11),
+        from_benchmark(by_name("rast").unwrap(), n_syn, 20, 0.0, 12),
+    ];
+
+    let cfg = HarnessConfig::fast();
+    for data in &workloads {
+        let (train, test) = data.split(0.8, 3);
+        println!(
+            "\n=== {} — {} train / {} test, d={} ===",
+            data.name,
+            train.n(),
+            test.n(),
+            train.d()
+        );
+        println!(
+            "{:<10} {:>5} {:>9} {:>9} {:>9} {:>10} {:>10}",
+            "algo", "knob", "R2", "SMSE", "MSLL", "fit(s)", "pred(s)"
+        );
+
+        let k = if train.n() > 4000 { 16 } else { 8 };
+        let specs = vec![
+            AlgoSpec::Sod { m: (train.n() / 8).min(1024) },
+            AlgoSpec::Fitc { m: 128 },
+            AlgoSpec::Bcm { k, shared: false },
+            AlgoSpec::Bcm { k, shared: true },
+            AlgoSpec::ClusterKriging { flavor: "OWCK", k },
+            AlgoSpec::ClusterKriging { flavor: "OWFCK", k },
+            AlgoSpec::ClusterKriging { flavor: "GMMCK", k },
+            AlgoSpec::ClusterKriging { flavor: "MTCK", k },
+        ];
+
+        let mut rows = Vec::new();
+        for spec in &specs {
+            match evaluate(spec, &train, &test, &cfg) {
+                Ok(r) => {
+                    println!(
+                        "{:<10} {:>5} {:>9.4} {:>9.4} {:>9.3} {:>10.3} {:>10.3}",
+                        r.algo,
+                        r.knob,
+                        r.scores.r2,
+                        r.scores.smse,
+                        r.scores.msll,
+                        r.fit_seconds,
+                        r.predict_seconds
+                    );
+                    rows.push(r);
+                }
+                Err(e) => println!("{:<10} FAILED: {e:#}", spec.name()),
+            }
+        }
+
+        // Paper's headline check: a Cluster Kriging flavor should hold the
+        // best R² (Tables I–III show GMMCK/MTCK winning everywhere).
+        if let Some(best) = rows.iter().max_by(|a, b| {
+            a.scores.r2.partial_cmp(&b.scores.r2).unwrap()
+        }) {
+            println!("--> best: {} (R² {:.4})", best.algo, best.scores.r2);
+        }
+    }
+    Ok(())
+}

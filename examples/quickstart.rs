@@ -1,0 +1,54 @@
+//! Quickstart: fit Cluster Kriging on a synthetic function and predict.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use cluster_kriging::cluster_kriging::{builder, ClusterKriging};
+use cluster_kriging::data::functions::by_name;
+use cluster_kriging::data::synthetic::from_benchmark;
+use cluster_kriging::kriging::{HyperOpt, Surrogate};
+use cluster_kriging::metrics;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A dataset: 800 noisy samples of the 2-d Himmelblau function.
+    let bench = by_name("himmelblau").expect("registered benchmark");
+    let data = from_benchmark(bench, 800, 2, 0.5, /*seed=*/ 42);
+    let (train, test) = data.split(0.8, 7);
+    println!("dataset: {} train / {} test points, {} dims", train.n(), test.n(), train.d());
+
+    // 2. Fit GMM Cluster Kriging with 4 clusters. Each cluster's Kriging
+    //    model optimizes its own hyper-parameters, in parallel.
+    let hyperopt = HyperOpt::default();
+    let cfg = builder::flavor("GMMCK", /*k=*/ 4, /*seed=*/ 1, hyperopt)?;
+    let t0 = std::time::Instant::now();
+    let model = ClusterKriging::fit(&train.x, &train.y, cfg)?;
+    println!(
+        "fitted {} with clusters {:?} in {:.2}s",
+        model.name(),
+        model.cluster_sizes,
+        t0.elapsed().as_secs_f64()
+    );
+
+    // 3. Predict the held-out points — mean AND Kriging variance.
+    let pred = model.predict(&test.x)?;
+    println!("R²   = {:.4}", metrics::r2(&test.y, &pred.mean));
+    println!("SMSE = {:.4}", metrics::smse(&test.y, &pred.mean));
+
+    // 4. The Kriging variance quantifies uncertainty per point.
+    let i_conf = cluster_kriging::util::stats::argmin(&pred.variance);
+    let i_unc = cluster_kriging::util::stats::argmax(&pred.variance);
+    println!(
+        "most confident prediction : mean {:.2} ± {:.2} (true {:.2})",
+        pred.mean[i_conf],
+        pred.variance[i_conf].sqrt(),
+        test.y[i_conf]
+    );
+    println!(
+        "least confident prediction: mean {:.2} ± {:.2} (true {:.2})",
+        pred.mean[i_unc],
+        pred.variance[i_unc].sqrt(),
+        test.y[i_unc]
+    );
+    Ok(())
+}

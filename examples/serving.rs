@@ -1,0 +1,83 @@
+//! Serving: fit MTCK on the CCPP-like plant data, start the TCP
+//! prediction server, and drive it with concurrent clients — reporting
+//! throughput and latency percentiles from the coordinator's metrics.
+//!
+//! ```bash
+//! cargo run --release --example serving
+//! ```
+
+use cluster_kriging::cluster_kriging::{builder, ClusterKriging};
+use cluster_kriging::coordinator::{BatcherConfig, Client, Server, ServerConfig};
+use cluster_kriging::data::uci_like;
+use cluster_kriging::kriging::{HyperOpt, Surrogate};
+use cluster_kriging::util::rng::Rng;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Fit the model (offline phase).
+    let data = uci_like::ccpp_sized(3000, 21);
+    let (train, _) = data.split(0.9, 1);
+    let dim = train.d();
+    println!("fitting MTCK on {} ({} × {dim})…", train.name, train.n());
+    let cfg = builder::flavor(
+        "MTCK",
+        8,
+        1,
+        HyperOpt { restarts: 1, max_evals: 20, ..HyperOpt::default() },
+    )?;
+    let model = ClusterKriging::fit(&train.x, &train.y, cfg)?;
+    let model: Arc<dyn Surrogate> = Arc::new(model);
+
+    // 2. Start the coordinator (online phase — pure rust, no python).
+    let server = Server::start(
+        model,
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            batcher: BatcherConfig::default(),
+            dim,
+        },
+    )?;
+    let addr = server.local_addr.to_string();
+    println!("server on {addr}");
+
+    // 3. Drive it: 8 concurrent clients, 250 requests each.
+    let clients = 8;
+    let per_client = 250;
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<f64> {
+            let mut rng = Rng::new(c as u64 + 100);
+            let mut client = Client::connect(&addr)?;
+            let mut checksum = 0.0;
+            for _ in 0..per_client {
+                let point = vec![
+                    rng.uniform_in(2.0, 37.0),
+                    rng.uniform_in(26.0, 81.0),
+                    rng.uniform_in(993.0, 1033.0),
+                    rng.uniform_in(26.0, 100.0),
+                ];
+                let (mean, var) = client.predict(&point)?;
+                anyhow::ensure!(mean.is_finite() && var >= 0.0);
+                checksum += mean;
+            }
+            Ok(checksum)
+        }));
+    }
+    for h in handles {
+        h.join().unwrap()?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // 4. Report.
+    let total = clients * per_client;
+    println!("\n{total} predictions in {wall:.2}s = {:.0} pred/s", total as f64 / wall);
+    println!("metrics: {}", server.metrics.summary());
+    println!(
+        "dynamic batching amortized {} predictions into {} model calls",
+        server.metrics.predictions.load(std::sync::atomic::Ordering::Relaxed),
+        server.metrics.batches.load(std::sync::atomic::Ordering::Relaxed),
+    );
+    Ok(())
+}

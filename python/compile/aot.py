@@ -1,0 +1,125 @@
+"""AOT lowering: jax (L2 + L1) → HLO text artifacts for the rust runtime.
+
+HLO *text* is the interchange format, NOT serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts are shape-bucketed: one (fit, predict, nll) triple per
+(n_bucket, d) pair, plus a manifest.json the rust registry reads. The
+rust side pads clusters to the next bucket and masks the padding.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--buckets 64,128,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Default shape buckets: cluster sizes the paper's recommendation
+# (100-1000 records per cluster, §VI-D) actually produces, and the input
+# dims of the paper's datasets (ccpp=4, concrete=8, sarcos=21, synth=20).
+DEFAULT_N_BUCKETS = [64, 128, 256, 512, 1024]
+DEFAULT_DIMS = [2, 4, 8, 20, 21]
+# Predict batch size per executable invocation.
+PREDICT_BATCH = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    rust side unwraps a single tuple output)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_fit(n: int, d: int) -> str:
+    return to_hlo_text(
+        jax.jit(model.kriging_fit).lower(
+            f32(n, d), f32(n), f32(d), f32(), f32(n)
+        )
+    )
+
+
+def lower_predict(n: int, d: int, m: int) -> str:
+    return to_hlo_text(
+        jax.jit(model.kriging_predict).lower(
+            f32(m, d), f32(n, d), f32(d), f32(), f32(n),
+            f32(n, n), f32(n), f32(n), f32(), f32(),
+        )
+    )
+
+
+def lower_nll(n: int, d: int) -> str:
+    return to_hlo_text(
+        jax.jit(model.kriging_nll).lower(
+            f32(n, d), f32(n), f32(d), f32(), f32(n)
+        )
+    )
+
+
+def build(out_dir: str, n_buckets, dims, predict_batch: int) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "format": "hlo-text",
+        "predict_batch": predict_batch,
+        "entries": [],
+    }
+    for n in n_buckets:
+        for d in dims:
+            for kind, lower in (
+                ("fit", lambda: lower_fit(n, d)),
+                ("predict", lambda: lower_predict(n, d, predict_batch)),
+                ("nll", lambda: lower_nll(n, d)),
+            ):
+                name = f"{kind}_n{n}_d{d}.hlo.txt"
+                path = os.path.join(out_dir, name)
+                text = lower()
+                with open(path, "w") as fh:
+                    fh.write(text)
+                manifest["entries"].append(
+                    {"kind": kind, "n": n, "d": d, "file": name}
+                )
+                print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--buckets",
+        default=",".join(str(b) for b in DEFAULT_N_BUCKETS),
+        help="comma-separated cluster-size buckets",
+    )
+    ap.add_argument(
+        "--dims",
+        default=",".join(str(d) for d in DEFAULT_DIMS),
+        help="comma-separated input dims",
+    )
+    ap.add_argument("--predict-batch", type=int, default=PREDICT_BATCH)
+    args = ap.parse_args()
+    n_buckets = [int(b) for b in args.buckets.split(",") if b]
+    dims = [int(d) for d in args.dims.split(",") if d]
+    manifest = build(args.out_dir, n_buckets, dims, args.predict_batch)
+    print(f"{len(manifest['entries'])} artifacts -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

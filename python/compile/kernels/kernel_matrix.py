@@ -1,0 +1,117 @@
+"""L1 — Pallas kernels for the Kriging covariance hot spot.
+
+The O(n² d) kernel-matrix assembly is the densest compute in a Kriging
+fit (everything else is the Cholesky, which XLA provides natively). We
+express it as a tiled Pallas kernel:
+
+* grid over (row-block i, col-block j) output tiles;
+* each program loads one (bm, d) and one (bn, d) slab of inputs plus the
+  θ vector into VMEM, accumulates the θ-weighted squared distance with an
+  explicit d-loop of rank-1 outer updates (MXU-friendly FMA shape), and
+  applies the exponential.
+
+TPU adaptation note (DESIGN.md §Hardware-Adaptation): the paper targets
+CPUs; on TPU the same computation is a classic "pairwise distance"
+pattern — BlockSpec expresses the HBM→VMEM schedule, and the inner
+accumulation maps onto the VPU/MXU. We size blocks so
+2·(block·d) + block² fits comfortably in ~16 MiB VMEM.
+
+Kernels MUST be lowered with interpret=True here: the CPU PJRT plugin
+cannot execute Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile edge. 128 f32 rows × d ≤ 32 cols ≈ 16 KiB per input slab,
+# 64 KiB per output tile — far inside VMEM, large enough to amortize.
+DEFAULT_BLOCK = 128
+
+
+def _corr_kernel(x_ref, xt_ref, theta_ref, out_ref):
+    """One (bm, bn) tile of the correlation matrix.
+
+    out[a, b] = exp(-sum_k theta[k] * (x[a, k] - xt[b, k])^2)
+    """
+    x = x_ref[...]          # (bm, d)
+    xt = xt_ref[...]        # (bn, d)
+    theta = theta_ref[...]  # (d,)
+    d = x.shape[1]
+    acc = jnp.zeros((x.shape[0], xt.shape[0]), dtype=jnp.float32)
+    # d-inner loop of rank-1 updates keeps the working set at one column
+    # pair per step; unrolled by the compiler for small d.
+    for k in range(d):
+        diff = x[:, k:k + 1] - xt[:, k:k + 1].T  # (bm, bn)
+        acc = acc + theta[k] * diff * diff
+    out_ref[...] = jnp.exp(-acc)
+
+
+def _pick_block(n: int, requested: int) -> int:
+    """Largest divisor of n that is <= requested (grid must tile exactly)."""
+    b = min(requested, n)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def corr_matrix(x, theta, block: int = DEFAULT_BLOCK):
+    """Full n×n squared-exponential correlation matrix (paper Eq. 1,
+    σ²=1) via the tiled Pallas kernel. x: (n, d) f32, theta: (d,) f32."""
+    n, d = x.shape
+    bm = _pick_block(n, block)
+    grid = (n // bm, n // bm)
+    return pl.pallas_call(
+        _corr_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((d,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(x, x, theta)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def cross_corr(xt, x, theta, block: int = DEFAULT_BLOCK):
+    """m×n cross-correlation between test rows xt and training rows x."""
+    m, d = xt.shape
+    n, _ = x.shape
+    bm = _pick_block(m, block)
+    bn = _pick_block(n, block)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _corr_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((d,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(xt, x, theta)
+
+
+def vmem_bytes(block: int, d: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one program instance (perf model for
+    DESIGN.md §Perf: two input slabs, θ, the accumulator and the output
+    tile)."""
+    return dtype_bytes * (2 * block * d + d + 2 * block * block)
+
+
+def arithmetic_intensity(block: int, d: int) -> float:
+    """FLOPs per byte moved for one tile: 3·d FLOPs per output element
+    (sub, mul, fma) + exp, over the slab traffic."""
+    flops = block * block * (3 * d + 1)
+    bytes_moved = vmem_bytes(block, d)
+    return flops / bytes_moved

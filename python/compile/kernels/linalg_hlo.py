@@ -1,0 +1,83 @@
+"""Pure-HLO dense linear algebra for the AOT path.
+
+jax lowers `jnp.linalg.cholesky` / `solve_triangular` on CPU to LAPACK
+custom-calls (`lapack_spotrf_ffi`, `lapack_strsm_ffi`) with the
+API_VERSION_TYPED_FFI ABI — which the xla_extension 0.5.1 runtime behind
+the rust `xla` crate cannot execute. These replacements lower to plain
+HLO while-loops (fori_loop + masked updates), so the artifacts run on
+any PJRT backend.
+
+Cost: same O(n³) flops as LAPACK, expressed as n sequential column
+updates of O(n²) work — XLA fuses each step into a couple of kernels.
+Correctness is pinned against jax.scipy in python/tests/test_linalg_hlo.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def cholesky(a):
+    """Lower-triangular L with L Lᵀ = a, via the column-wise
+    Cholesky–Banachiewicz recurrence as a fori_loop."""
+    n = a.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, l):
+        # v = a[:, j] − L[:, :j] · L[j, :j] computed with a column mask so
+        # all shapes stay static.
+        col_mask = (idx < j).astype(a.dtype)          # (n,)
+        lj = l[j, :] * col_mask                        # row j, cols < j
+        v = a[:, j] - l @ lj                           # (n,)
+        diag = jnp.sqrt(jnp.maximum(v[j], 1e-30))
+        col = v / diag
+        col = jnp.where(idx >= j, col, 0.0)            # keep lower triangle
+        return l.at[:, j].set(col)
+
+    return lax.fori_loop(0, n, body, jnp.zeros_like(a))
+
+
+def solve_lower(l, b):
+    """Solve L z = b (forward substitution) for vector or matrix b."""
+    n = l.shape[0]
+    idx = jnp.arange(n)
+    b2 = b if b.ndim == 2 else b[:, None]
+
+    def body(i, z):
+        row_mask = (idx < i).astype(l.dtype)
+        li = l[i, :] * row_mask                        # (n,)
+        zi = (b2[i, :] - li @ z) / l[i, i]
+        return z.at[i, :].set(zi)
+
+    z = lax.fori_loop(0, n, body, jnp.zeros_like(b2))
+    return z if b.ndim == 2 else z[:, 0]
+
+
+def solve_upper_t(l, b):
+    """Solve Lᵀ x = b (backward substitution using the lower factor)."""
+    n = l.shape[0]
+    idx = jnp.arange(n)
+    b2 = b if b.ndim == 2 else b[:, None]
+
+    def body(step, x):
+        i = n - 1 - step
+        row_mask = (idx > i).astype(l.dtype)
+        # (Lᵀ)[i, :] = L[:, i]; use entries below the diagonal.
+        ci = l[:, i] * row_mask
+        xi = (b2[i, :] - ci @ x) / l[i, i]
+        return x.at[i, :].set(xi)
+
+    x = lax.fori_loop(0, n, body, jnp.zeros_like(b2))
+    return x if b.ndim == 2 else x[:, 0]
+
+
+def psd_solve(l, b):
+    """Solve (L Lᵀ) x = b given the Cholesky factor."""
+    return solve_upper_t(l, solve_lower(l, b))
+
+
+def register_jax_config():
+    """x64 stays off — artifacts are f32 end-to-end."""
+    jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracle for the Pallas kernels and the L2 Kriging graphs.
+
+Every Pallas kernel and every AOT graph is checked against these
+reference implementations in python/tests (hypothesis sweeps shapes);
+the rust native backend implements the same equations, closing the
+three-way consistency triangle: pallas == jnp == rust.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def corr_matrix_ref(x, theta):
+    """Anisotropic squared-exponential correlation matrix (paper Eq. 1,
+    sigma^2 = 1): R[i, j] = exp(-sum_k theta_k (x[i,k] - x[j,k])^2)."""
+    diff = x[:, None, :] - x[None, :, :]          # (n, n, d)
+    wsq = jnp.einsum("ijk,k->ij", diff * diff, theta)
+    return jnp.exp(-wsq)
+
+
+def cross_corr_ref(xt, x, theta):
+    """Cross-correlation between test and training rows."""
+    diff = xt[:, None, :] - x[None, :, :]          # (m, n, d)
+    wsq = jnp.einsum("ijk,k->ij", diff * diff, theta)
+    return jnp.exp(-wsq)
+
+
+def ok_fit_ref(x, y, theta, nugget, mask):
+    """Ordinary Kriging fit (paper Eq. 4-5 precomputation) with padding.
+
+    mask is a 0/1 vector: padded rows get zero correlation to everything,
+    a unit diagonal and zero target, making them exact no-ops.
+    Returns (L, alpha, c_inv_m, mu, sigma2, nll).
+    """
+    r = corr_matrix_ref(x, theta)
+    mm = mask[:, None] * mask[None, :]
+    c = r * mm + jnp.diag(1.0 - mask) + nugget * jnp.diag(mask)
+    l = jnp.linalg.cholesky(c)
+    ym = y * mask
+
+    def solve(b):
+        z = jax.scipy.linalg.solve_triangular(l, b, lower=True)
+        return jax.scipy.linalg.solve_triangular(l.T, z, lower=False)
+
+    c_inv_m = solve(mask)
+    c_inv_y = solve(ym)
+    m_c_m = jnp.dot(mask, c_inv_m)
+    mu = jnp.dot(mask, c_inv_y) / m_c_m
+    alpha = c_inv_y - mu * c_inv_m
+    n_valid = jnp.sum(mask)
+    sigma2 = jnp.dot(ym - mu * mask, alpha) / n_valid
+    # Padded diagonal entries are exactly 1 -> contribute 0 to logdet.
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(l)))
+    nll = 0.5 * (n_valid * jnp.log(jnp.maximum(sigma2, 1e-30)) + logdet)
+    return l, alpha, c_inv_m, mu, sigma2, nll
+
+
+def ok_predict_ref(xt, x, theta, nugget, mask, l, alpha, c_inv_m, mu, sigma2):
+    """Ordinary Kriging posterior at test rows (paper Eq. 4-5)."""
+    rt = cross_corr_ref(xt, x, theta) * mask[None, :]   # (m, n)
+    mean = mu + rt @ alpha
+
+    z = jax.scipy.linalg.solve_triangular(l, rt.T, lower=True)
+    c_inv_r = jax.scipy.linalg.solve_triangular(l.T, z, lower=False)  # (n, m)
+    r_c_r = jnp.sum(rt.T * c_inv_r, axis=0)
+    one_c_r = rt @ c_inv_m
+    m_c_m = jnp.dot(mask, c_inv_m)
+    trend = (1.0 - one_c_r) ** 2 / m_c_m
+    var = sigma2 * (nugget + 1.0 - r_c_r + trend)
+    return mean, jnp.maximum(var, 0.0)

@@ -1,0 +1,83 @@
+"""L2 — the Kriging fit / predict compute graphs.
+
+These are the jax functions AOT-lowered (by aot.py) into the HLO
+artifacts the rust runtime executes. Both call the L1 Pallas kernel for
+the covariance assembly so the kernel lowers into the same HLO module,
+then use XLA-native Cholesky / triangular solves.
+
+Shapes are static per artifact (PJRT executables are shape-specialized).
+The rust side pads a cluster of size n to the bucket size and passes a
+0/1 validity mask; masked rows are exact no-ops (see ref.ok_fit_ref).
+
+Python never runs at request time — these functions exist only in the
+compile path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels import kernel_matrix as km
+from compile.kernels import linalg_hlo as lh
+
+
+def kriging_fit(x, y, theta, nugget, mask):
+    """Fit Ordinary Kriging on (x, y) with padding mask.
+
+    Args:
+      x:      (n, d) f32 — padded training inputs.
+      y:      (n,)  f32 — padded targets (zeros in padded slots).
+      theta:  (d,)  f32 — kernel inverse-length-scales (Eq. 1).
+      nugget: ()    f32 — relative nugget λ.
+      mask:   (n,)  f32 — 1.0 for real rows, 0.0 for padding.
+
+    Returns (L, alpha, c_inv_m, mu, sigma2, nll) — everything the predict
+    graph and the coordinator's model registry need.
+    """
+    r = km.corr_matrix(x, theta)                     # L1 Pallas kernel
+    mm = mask[:, None] * mask[None, :]
+    c = r * mm + jnp.diag(1.0 - mask) + nugget * jnp.diag(mask)
+    # Pure-HLO Cholesky/solves: CPU jax would emit LAPACK FFI custom-calls
+    # that the rust runtime's XLA cannot execute (see linalg_hlo.py).
+    l = lh.cholesky(c)
+    ym = y * mask
+
+    c_inv_m = lh.psd_solve(l, mask)
+    c_inv_y = lh.psd_solve(l, ym)
+    m_c_m = jnp.dot(mask, c_inv_m)
+    mu = jnp.dot(mask, c_inv_y) / m_c_m
+    alpha = c_inv_y - mu * c_inv_m
+    n_valid = jnp.sum(mask)
+    sigma2 = jnp.dot(ym - mu * mask, alpha) / n_valid
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(l)))
+    nll = 0.5 * (n_valid * jnp.log(jnp.maximum(sigma2, 1e-30)) + logdet)
+    return l, alpha, c_inv_m, mu, sigma2, nll
+
+
+def kriging_predict(xt, x, theta, nugget, mask, l, alpha, c_inv_m, mu, sigma2):
+    """Posterior mean and Kriging variance (Eq. 4-5) for a test batch.
+
+    Args:
+      xt: (m, d) f32 — padded test batch.
+      The rest are the fit artifacts / training data for one cluster.
+
+    Returns (mean, variance), each (m,) f32.
+    """
+    rt = km.cross_corr(xt, x, theta) * mask[None, :]   # (m, n) via L1
+    mean = mu + rt @ alpha
+
+    c_inv_r = lh.psd_solve(l, rt.T)                    # (n, m), pure HLO
+    r_c_r = jnp.sum(rt.T * c_inv_r, axis=0)
+    one_c_r = rt @ c_inv_m
+    m_c_m = jnp.dot(mask, c_inv_m)
+    trend = (1.0 - one_c_r) ** 2 / m_c_m
+    var = sigma2 * (nugget + 1.0 - r_c_r + trend)
+    return mean, jnp.maximum(var, 0.0)
+
+
+def kriging_nll(x, y, theta, nugget, mask):
+    """Concentrated negative log-likelihood only — the objective the
+    coordinator's hyper-parameter search evaluates per candidate θ. A
+    separate (smaller) artifact so the search doesn't haul the full fit
+    outputs across the PJRT boundary on every evaluation."""
+    return kriging_fit(x, y, theta, nugget, mask)[5]

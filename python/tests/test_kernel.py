@@ -1,0 +1,123 @@
+"""L1 correctness: Pallas kernel vs pure-jnp reference.
+
+Hypothesis sweeps shapes and values; assert_allclose against ref.py is
+the core correctness signal for the AOT path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import kernel_matrix as km
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, *shape, lo=-3.0, hi=3.0):
+    return jnp.asarray(
+        rng.uniform(lo, hi, size=shape).astype(np.float32)
+    )
+
+
+class TestCorrMatrix:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.sampled_from([1, 2, 3, 8, 17, 64, 96]),
+        d=st.integers(min_value=1, max_value=8),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_reference(self, n, d, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, n, d)
+        theta = rand(rng, d, lo=0.05, hi=2.0)
+        got = km.corr_matrix(x, theta)
+        want = ref.corr_matrix_ref(x, theta)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_unit_diagonal_and_symmetry(self):
+        rng = np.random.default_rng(0)
+        x = rand(rng, 32, 3)
+        theta = rand(rng, 3, lo=0.1, hi=1.0)
+        r = np.asarray(km.corr_matrix(x, theta))
+        np.testing.assert_allclose(np.diag(r), 1.0, atol=1e-6)
+        np.testing.assert_allclose(r, r.T, atol=1e-6)
+
+    def test_values_in_unit_interval(self):
+        rng = np.random.default_rng(1)
+        x = rand(rng, 24, 4, lo=-10, hi=10)
+        theta = rand(rng, 4, lo=0.01, hi=5.0)
+        r = np.asarray(km.corr_matrix(x, theta))
+        assert (r >= 0).all() and (r <= 1 + 1e-6).all()
+
+    def test_block_size_invariance(self):
+        # Different tilings must give identical results.
+        rng = np.random.default_rng(2)
+        x = rand(rng, 64, 3)
+        theta = rand(rng, 3, lo=0.1, hi=1.0)
+        a = km.corr_matrix(x, theta, block=64)
+        b = km.corr_matrix(x, theta, block=16)
+        c = km.corr_matrix(x, theta, block=128)  # clamps to 64
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+        np.testing.assert_allclose(a, c, rtol=1e-6)
+
+    def test_non_divisible_shapes(self):
+        # _pick_block must find an exact tiling for awkward n.
+        rng = np.random.default_rng(3)
+        for n in [7, 30, 33, 100]:
+            x = rand(rng, n, 2)
+            theta = rand(rng, 2, lo=0.1, hi=1.0)
+            got = km.corr_matrix(x, theta)
+            want = ref.corr_matrix_ref(x, theta)
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+class TestCrossCorr:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.sampled_from([1, 5, 16, 64]),
+        n=st.sampled_from([1, 9, 32, 96]),
+        d=st.integers(min_value=1, max_value=6),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_reference(self, m, n, d, seed):
+        rng = np.random.default_rng(seed)
+        xt = rand(rng, m, d)
+        x = rand(rng, n, d)
+        theta = rand(rng, d, lo=0.05, hi=2.0)
+        got = km.cross_corr(xt, x, theta)
+        want = ref.cross_corr_ref(xt, x, theta)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_consistent_with_corr_matrix(self):
+        rng = np.random.default_rng(4)
+        x = rand(rng, 16, 3)
+        theta = rand(rng, 3, lo=0.1, hi=1.0)
+        full = km.corr_matrix(x, theta)
+        cross = km.cross_corr(x, x, theta)
+        np.testing.assert_allclose(full, cross, rtol=1e-6)
+
+
+class TestPerfModel:
+    def test_vmem_fits_in_budget(self):
+        # Default block with the largest dim bucket stays far below the
+        # ~16 MiB VMEM of a TPU core (DESIGN.md §Perf).
+        assert km.vmem_bytes(km.DEFAULT_BLOCK, 21) < 16 * 2**20 / 4
+
+    def test_arithmetic_intensity_grows_with_d(self):
+        assert km.arithmetic_intensity(128, 21) > km.arithmetic_intensity(128, 2)
+
+    def test_pick_block_divides(self):
+        for n in [1, 7, 64, 100, 1024]:
+            b = km._pick_block(n, 128)
+            assert n % b == 0 and 1 <= b <= min(n, 128)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_dtype_preserved(dtype):
+    rng = np.random.default_rng(5)
+    x = rand(rng, 8, 2).astype(dtype)
+    theta = rand(rng, 2, lo=0.1, hi=1.0).astype(dtype)
+    assert km.corr_matrix(x, theta).dtype == dtype

@@ -1,0 +1,153 @@
+"""L2 correctness: fit/predict graphs vs closed-form jnp, mask semantics,
+and agreement with a brute-force dense solve."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_problem(rng, n, d, n_valid=None):
+    x = jnp.asarray(rng.uniform(-2, 2, size=(n, d)).astype(np.float32))
+    y = jnp.asarray(
+        (np.sin(np.asarray(x)[:, 0]) + 0.5 * np.asarray(x).sum(axis=1)).astype(
+            np.float32
+        )
+    )
+    theta = jnp.asarray(rng.uniform(0.2, 1.5, size=(d,)).astype(np.float32))
+    mask = np.ones(n, dtype=np.float32)
+    if n_valid is not None:
+        mask[n_valid:] = 0.0
+    mask = jnp.asarray(mask)
+    y = y * mask
+    x = x * mask[:, None]
+    return x, y, theta, mask
+
+
+class TestFitGraph:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.sampled_from([8, 16, 32]),
+        d=st.integers(min_value=1, max_value=4),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_reference(self, n, d, seed):
+        rng = np.random.default_rng(seed)
+        x, y, theta, mask = make_problem(rng, n, d)
+        # Nugget 1e-3 bounds the condition number so the f32 comparison is
+        # meaningful for arbitrary hypothesis-generated geometries (the
+        # solve amplifies ~1e-7 kernel diffs by the condition number).
+        got = model.kriging_fit(x, y, theta, jnp.float32(1e-3), mask)
+        want = ref.ok_fit_ref(x, y, theta, jnp.float32(1e-3), mask)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=3e-3, atol=2e-3)
+
+    def test_dense_solve_cross_check(self):
+        # alpha must satisfy C alpha = y - mu 1 on the valid block.
+        rng = np.random.default_rng(7)
+        x, y, theta, mask = make_problem(rng, 16, 2)
+        nugget = jnp.float32(1e-4)
+        l, alpha, c_inv_m, mu, sigma2, nll = model.kriging_fit(
+            x, y, theta, nugget, mask
+        )
+        r = ref.corr_matrix_ref(x, theta)
+        c = np.asarray(r) + 1e-4 * np.eye(16)
+        resid = np.asarray(y) - float(mu)
+        alpha_dense = np.linalg.solve(c, resid)
+        np.testing.assert_allclose(np.asarray(alpha), alpha_dense, rtol=1e-3, atol=1e-4)
+        assert float(sigma2) > 0
+
+    def test_mask_semantics_padding_is_noop(self):
+        # Fitting n=12 valid rows padded to 16 must equal fitting the 12
+        # rows unpadded.
+        rng = np.random.default_rng(8)
+        x, y, theta, mask = make_problem(rng, 16, 3, n_valid=12)
+        nugget = jnp.float32(1e-6)
+        padded = model.kriging_fit(x, y, theta, nugget, mask)
+        unpadded = model.kriging_fit(
+            x[:12], y[:12], theta, nugget, jnp.ones(12, jnp.float32)
+        )
+        # mu, sigma2, nll identical.
+        for gi, wi in zip(padded[3:], unpadded[3:]):
+            np.testing.assert_allclose(gi, wi, rtol=1e-4, atol=1e-5)
+        # alpha: first 12 match, padded entries exactly 0.
+        np.testing.assert_allclose(
+            padded[1][:12], unpadded[1], rtol=1e-4, atol=1e-5
+        )
+        np.testing.assert_allclose(padded[1][12:], 0.0, atol=1e-6)
+
+
+class TestPredictGraph:
+    def _fit(self, rng, n, d, n_valid=None):
+        x, y, theta, mask = make_problem(rng, n, d, n_valid)
+        nugget = jnp.float32(1e-6)
+        fit = model.kriging_fit(x, y, theta, nugget, mask)
+        return x, y, theta, nugget, mask, fit
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_matches_reference(self, seed):
+        rng = np.random.default_rng(seed)
+        x, y, theta, nugget, mask, fit = self._fit(rng, 16, 2)
+        xt = jnp.asarray(rng.uniform(-2, 2, size=(8, 2)).astype(np.float32))
+        got_mean, got_var = model.kriging_predict(
+            xt, x, theta, nugget, mask, *fit[:5]
+        )
+        want_mean, want_var = ref.ok_predict_ref(
+            xt, x, theta, nugget, mask, *fit[:5]
+        )
+        np.testing.assert_allclose(got_mean, want_mean, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(got_var, want_var, rtol=1e-3, atol=1e-5)
+
+    def test_interpolates_training_points(self):
+        rng = np.random.default_rng(9)
+        x, y, theta, nugget, mask, fit = self._fit(rng, 16, 2)
+        mean, var = model.kriging_predict(x, x, theta, nugget, mask, *fit[:5])
+        np.testing.assert_allclose(mean, y, rtol=1e-3, atol=1e-3)
+        assert np.asarray(var).max() < 1e-3
+
+    def test_variance_grows_off_data(self):
+        rng = np.random.default_rng(10)
+        x, y, theta, nugget, mask, fit = self._fit(rng, 16, 2)
+        far = jnp.asarray(np.full((4, 2), 50.0, dtype=np.float32))
+        _, var_far = model.kriging_predict(far, x, theta, nugget, mask, *fit[:5])
+        near = x[:4]
+        _, var_near = model.kriging_predict(near, x, theta, nugget, mask, *fit[:5])
+        assert np.asarray(var_far).min() > np.asarray(var_near).max()
+
+    def test_padded_fit_predicts_like_unpadded(self):
+        rng = np.random.default_rng(11)
+        x, y, theta, nugget, mask, fit = self._fit(rng, 16, 2, n_valid=10)
+        xt = jnp.asarray(rng.uniform(-2, 2, size=(6, 2)).astype(np.float32))
+        mean_p, var_p = model.kriging_predict(xt, x, theta, nugget, mask, *fit[:5])
+        fit_u = model.kriging_fit(
+            x[:10], y[:10], theta, nugget, jnp.ones(10, jnp.float32)
+        )
+        mean_u, var_u = model.kriging_predict(
+            xt, x[:10], theta, nugget, jnp.ones(10, jnp.float32), *fit_u[:5]
+        )
+        np.testing.assert_allclose(mean_p, mean_u, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(var_p, var_u, rtol=1e-3, atol=1e-5)
+
+
+class TestNllGraph:
+    def test_nll_matches_fit_output(self):
+        rng = np.random.default_rng(12)
+        x, y, theta, mask = make_problem(rng, 16, 2)
+        nugget = jnp.float32(1e-6)
+        fit_nll = model.kriging_fit(x, y, theta, nugget, mask)[5]
+        only_nll = model.kriging_nll(x, y, theta, nugget, mask)
+        np.testing.assert_allclose(fit_nll, only_nll, rtol=1e-6)
+
+    def test_good_theta_beats_bad(self):
+        rng = np.random.default_rng(13)
+        x, y, _, mask = make_problem(rng, 32, 2)
+        nugget = jnp.float32(1e-6)
+        good = model.kriging_nll(x, y, jnp.asarray([0.5, 0.5], jnp.float32), nugget, mask)
+        bad = model.kriging_nll(x, y, jnp.asarray([500.0, 500.0], jnp.float32), nugget, mask)
+        assert float(good) < float(bad)

@@ -1,0 +1,64 @@
+//! Bench: regenerate Figure 2 — the training-time vs R² trade-off curves
+//! with per-algorithm hyper-parameter sweeps and the non-dominated front.
+//!
+//! Produces `results/fig2.csv` (one row per dataset × algorithm × knob)
+//! and prints a per-dataset summary with the Pareto front, mirroring the
+//! paper's four panels (Concrete, CCPP, SARCOS, H1).
+//!
+//! ```bash
+//! cargo bench --bench bench_fig2
+//! ```
+
+use cluster_kriging::eval::experiments::{run_all, ExperimentConfig};
+use cluster_kriging::eval::report::{fig2_csv, pareto_front};
+use cluster_kriging::eval::HarnessConfig;
+
+fn main() -> anyhow::Result<()> {
+    let paper_scale = std::env::var("CKRIG_PAPER_SCALE").is_ok();
+    // The paper's Fig. 2 shows Concrete, CCPP, SARCOS and H1.
+    let cfg = ExperimentConfig {
+        paper_scale,
+        folds: 3,
+        harness: HarnessConfig::fast(),
+        seed: 0xF16,
+        only_datasets: vec![
+            "concrete".into(),
+            "ccpp".into(),
+            "sarcos".into(),
+            "h1".into(),
+        ],
+        only_algos: Vec::new(),
+    };
+
+    let t0 = std::time::Instant::now();
+    let grids = run_all(&cfg)?;
+    eprintln!("sweeps complete in {:.1}s\n", t0.elapsed().as_secs_f64());
+
+    std::fs::create_dir_all("results").ok();
+    let csv = fig2_csv(&grids);
+    std::fs::write("results/fig2.csv", &csv)?;
+    eprintln!("wrote results/fig2.csv ({} rows)", csv.lines().count() - 1);
+
+    for grid in &grids {
+        if grid.is_empty() {
+            continue;
+        }
+        println!("--- {} (fit-time s → R², per algorithm sweep) ---", grid[0].dataset);
+        let mut all_points = Vec::new();
+        for cell in grid {
+            let series: Vec<String> = cell
+                .sweep
+                .iter()
+                .map(|r| format!("({:.2}s,{:.3})", r.fit_seconds, r.scores.r2))
+                .collect();
+            println!("  {:<8} {}", cell.algo, series.join(" "));
+            all_points
+                .extend(cell.sweep.iter().map(|r| (r.fit_seconds, r.scores.r2)));
+        }
+        let front = pareto_front(&all_points);
+        let front_str: Vec<String> =
+            front.iter().map(|(t, r)| format!("({t:.2}s,{r:.3})")).collect();
+        println!("  non-dominated front: {}", front_str.join(" "));
+    }
+    Ok(())
+}

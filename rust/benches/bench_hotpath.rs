@@ -1,0 +1,156 @@
+//! Bench: the paper's §IV complexity claim (experiment C1 in DESIGN.md).
+//!
+//!   single Kriging fit:            O(n³)
+//!   Cluster Kriging, sequential:   k · (n/k)³ = n³/k²
+//!   Cluster Kriging, parallel:     (n/k)³
+//!
+//! Measures wall-clock fit time at fixed n over a k sweep, sequential vs
+//! parallel workers, plus the PJRT-vs-native fit/predict comparison when
+//! artifacts are present.
+//!
+//! ```bash
+//! cargo bench --bench bench_hotpath
+//! ```
+
+use cluster_kriging::cluster_kriging::{
+    ClusterKriging, ClusterKrigingConfig, Combiner, KMeansPartitioner,
+};
+use cluster_kriging::kernel::{Kernel, KernelKind};
+use cluster_kriging::kriging::{HyperOpt, NuggetMode, OrdinaryKriging};
+use cluster_kriging::util::matrix::Matrix;
+use cluster_kriging::util::rng::Rng;
+
+/// One fixed-θ fit so timings measure the linear algebra, not the search.
+fn fixed_theta_opt() -> HyperOpt {
+    HyperOpt {
+        restarts: 1,
+        max_evals: 1,
+        isotropic: true,
+        nugget: NuggetMode::Fixed(1e-6),
+        ..HyperOpt::default()
+    }
+}
+
+fn main() {
+    let mut rng = Rng::new(3);
+    let n = std::env::var("CKRIG_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2000usize);
+    let d = 4;
+    let x = Matrix::from_vec(n, d, rng.uniform_vec(n * d, -3.0, 3.0));
+    let y: Vec<f64> = (0..n).map(|i| x.row(i)[0].sin() + x.row(i)[2]).collect();
+
+    println!("== C1: fit-time vs k at n={n} (paper §IV: n³/k² sequential, (n/k)³ parallel) ==");
+    println!(
+        "{:>4} {:>14} {:>14} {:>10} {:>12}",
+        "k", "sequential(s)", "parallel(s)", "seq_speedup", "par_speedup"
+    );
+
+    let mut t_k1_seq = 0.0;
+    for k in [1usize, 2, 4, 8, 16] {
+        let fit_with = |workers: usize| -> f64 {
+            let cfg = ClusterKrigingConfig {
+                partitioner: Box::new(KMeansPartitioner { k, seed: 5 }),
+                combiner: Combiner::OptimalWeights,
+                hyperopt: fixed_theta_opt(),
+                workers: Some(workers),
+                flavor: "OWCK".into(),
+            };
+            let t0 = std::time::Instant::now();
+            let model = ClusterKriging::fit(&x, &y, cfg).unwrap();
+            std::hint::black_box(model);
+            t0.elapsed().as_secs_f64()
+        };
+        let t_seq = fit_with(1);
+        let t_par = fit_with(k.min(16));
+        if k == 1 {
+            t_k1_seq = t_seq;
+        }
+        println!(
+            "{k:>4} {t_seq:>14.3} {t_par:>14.3} {:>10.1}x {:>11.1}x",
+            t_k1_seq / t_seq,
+            t_k1_seq / t_par
+        );
+    }
+    println!("(paper predicts seq_speedup ≈ k², par_speedup ≈ k³ until cores saturate)");
+
+    println!("\n== prediction latency: all-model weighting vs single-model routing ==");
+    let mut lat = |flavor: &'static str, combiner: Combiner| {
+        let cfg = ClusterKrigingConfig {
+            partitioner: Box::new(KMeansPartitioner { k: 8, seed: 5 }),
+            combiner,
+            hyperopt: fixed_theta_opt(),
+            workers: None,
+            flavor: flavor.into(),
+        };
+        let model = ClusterKriging::fit(&x, &y, cfg).unwrap();
+        let probe = vec![0.1; d];
+        let t0 = std::time::Instant::now();
+        let reps = 200;
+        for _ in 0..reps {
+            std::hint::black_box(model.predict_one(&probe));
+        }
+        let per = t0.elapsed().as_secs_f64() / reps as f64;
+        println!("  {flavor:<22} {:>10.1} µs/point", per * 1e6);
+    };
+    lat("weighted (OWCK-style)", Combiner::OptimalWeights);
+    lat("routed (MTCK-style)", Combiner::SingleModel);
+    println!("(§IV-C3: single-model routing should be ~k× cheaper)");
+
+    // PJRT vs native single-cluster fit, when artifacts exist.
+    let artifacts = std::path::Path::new("artifacts");
+    if artifacts.join("fit_n64_d2.hlo.txt").exists() {
+        println!("\n== PJRT (AOT jax/pallas) vs native rust backend, one cluster ==");
+        let rt = cluster_kriging::runtime::PjrtRuntime::load(artifacts).unwrap();
+        let nn = 48;
+        let xx = Matrix::from_vec(nn, 2, rng.uniform_vec(nn * 2, -2.0, 2.0));
+        let yy: Vec<f64> = (0..nn).map(|i| xx.row(i)[0].sin()).collect();
+        let theta = [0.7, 0.7];
+
+        let t0 = std::time::Instant::now();
+        let reps = 20;
+        for _ in 0..reps {
+            std::hint::black_box(rt.fit(&xx, &yy, &theta, 1e-6).unwrap());
+        }
+        let pjrt_fit = t0.elapsed().as_secs_f64() / reps as f64;
+
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(
+                OrdinaryKriging::fit(
+                    xx.clone(),
+                    &yy,
+                    Kernel::new(KernelKind::SquaredExponential, theta.to_vec()),
+                    1e-6,
+                )
+                .unwrap(),
+            );
+        }
+        let native_fit = t0.elapsed().as_secs_f64() / reps as f64;
+        println!("  fit n={nn} (pad→64): pjrt {:.2}ms vs native {:.2}ms", pjrt_fit * 1e3, native_fit * 1e3);
+
+        let model = rt.fit(&xx, &yy, &theta, 1e-6).unwrap();
+        let native =
+            OrdinaryKriging::fit(xx.clone(), &yy, Kernel::new(KernelKind::SquaredExponential, theta.to_vec()), 1e-6)
+                .unwrap();
+        let xt = Matrix::from_vec(64, 2, rng.uniform_vec(128, -2.0, 2.0));
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(rt.predict(&model, &xt).unwrap());
+        }
+        let pjrt_pred = t0.elapsed().as_secs_f64() / reps as f64;
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(native.predict(&xt).unwrap());
+        }
+        let native_pred = t0.elapsed().as_secs_f64() / reps as f64;
+        println!(
+            "  predict 64 pts:      pjrt {:.2}ms vs native {:.2}ms",
+            pjrt_pred * 1e3,
+            native_pred * 1e3
+        );
+    } else {
+        println!("\n(skipping PJRT comparison: run `make artifacts` first)");
+    }
+}

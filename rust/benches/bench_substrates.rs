@@ -1,0 +1,81 @@
+//! Micro-benchmarks of the substrates: kernel-matrix assembly, Cholesky,
+//! blocked matmul, and the four partitioners. These are the profile
+//! targets of the L3 perf pass (EXPERIMENTS.md §Perf).
+//!
+//! ```bash
+//! cargo bench --bench bench_substrates
+//! ```
+
+use cluster_kriging::clustering::{fcm, gmm, kmeans, regression_tree};
+use cluster_kriging::kernel::{Kernel, KernelKind};
+use cluster_kriging::linalg::{blas, Cholesky};
+use cluster_kriging::util::matrix::Matrix;
+use cluster_kriging::util::rng::Rng;
+use cluster_kriging::util::timer::fmt_seconds;
+
+/// Run `f` `reps` times, report best wall-clock (standard micro-bench
+/// practice: min filters scheduler noise).
+fn bench<R>(name: &str, reps: usize, mut f: impl FnMut() -> R) {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(f());
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    println!("{name:<44} {:>10}", fmt_seconds(best));
+}
+
+fn main() {
+    let mut rng = Rng::new(7);
+
+    println!("== kernel matrix (SE, d=8) — the O(n²d) hot spot ==");
+    for n in [256, 512, 1024, 2048] {
+        let x = Matrix::from_vec(n, 8, rng.uniform_vec(n * 8, -2.0, 2.0));
+        let k = Kernel::new(KernelKind::SquaredExponential, vec![0.5; 8]);
+        bench(&format!("corr_matrix n={n}"), 3, || k.corr_matrix(&x));
+        bench(&format!("corr_matrix_parallel n={n} (8 workers)"), 3, || {
+            k.corr_matrix_parallel(&x, 8)
+        });
+    }
+
+    println!("\n== Cholesky factorization — the O(n³) core ==");
+    for n in [256, 512, 1024] {
+        let a = Matrix::from_vec(n, n, rng.uniform_vec(n * n, -1.0, 1.0));
+        let mut spd = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for p in 0..n.min(64) {
+                    acc += a[(i, p)] * a[(j, p)];
+                }
+                spd[(i, j)] = acc / 64.0;
+            }
+            spd[(i, i)] += 2.0;
+        }
+        bench(&format!("cholesky n={n}"), 3, || Cholesky::new(&spd).unwrap());
+        let chol = Cholesky::new(&spd).unwrap();
+        let b = rng.uniform_vec(n, -1.0, 1.0);
+        bench(&format!("chol_solve n={n}"), 10, || chol.solve(&b));
+    }
+
+    println!("\n== blocked matmul ==");
+    for n in [128, 256, 512] {
+        let a = Matrix::from_vec(n, n, rng.uniform_vec(n * n, -1.0, 1.0));
+        let b = Matrix::from_vec(n, n, rng.uniform_vec(n * n, -1.0, 1.0));
+        bench(&format!("matmul n={n}"), 3, || blas::matmul(&a, &b));
+        bench(&format!("matmul_parallel n={n} (8 workers)"), 3, || {
+            blas::matmul_parallel(&a, &b, 8)
+        });
+    }
+
+    println!("\n== partitioners (n=5000, d=8, k=8) ==");
+    let n = 5000;
+    let x = Matrix::from_vec(n, 8, rng.uniform_vec(n * 8, -3.0, 3.0));
+    let y: Vec<f64> = (0..n).map(|i| x.row(i)[0].sin() * 3.0 + x.row(i)[1]).collect();
+    bench("kmeans k=8", 3, || kmeans::fit(&x, &kmeans::KMeansConfig::new(8)));
+    bench("fcm k=8", 3, || fcm::fit(&x, &fcm::FcmConfig::new(8)));
+    bench("gmm k=8 (diag)", 3, || gmm::fit(&x, &gmm::GmmConfig::new(8)));
+    bench("regression_tree 8 leaves", 3, || {
+        regression_tree::fit(&x, &y, &regression_tree::TreeConfig::with_max_leaves(n, 8))
+    });
+}

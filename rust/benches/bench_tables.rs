@@ -1,0 +1,59 @@
+//! Bench: regenerate the paper's Tables I (R²), II (MSLL), III (SMSE).
+//!
+//! Runs the full algorithm × dataset grid at a CI-friendly scale and
+//! prints the three tables in the paper's layout. Set CKRIG_PAPER_SCALE=1
+//! for the published dataset sizes and sweep grids (long).
+//!
+//! ```bash
+//! cargo bench --bench bench_tables
+//! ```
+
+use cluster_kriging::eval::experiments::{run_all, ExperimentConfig};
+use cluster_kriging::eval::report::{render_table, PaperTable};
+use cluster_kriging::eval::HarnessConfig;
+
+fn main() -> anyhow::Result<()> {
+    let paper_scale = std::env::var("CKRIG_PAPER_SCALE").is_ok();
+    // Bench default: the three UCI-like sets plus two synthetic regimes
+    // (one easy, one multimodal) keeps the run minutes-scale while
+    // exercising every algorithm. CKRIG_ALL_DATASETS=1 runs all 11.
+    let only_datasets = if std::env::var("CKRIG_ALL_DATASETS").is_ok() {
+        Vec::new()
+    } else {
+        vec![
+            "concrete".to_string(),
+            "ccpp".to_string(),
+            "rosenbrock".to_string(),
+            "rast".to_string(),
+        ]
+    };
+
+    let cfg = ExperimentConfig {
+        paper_scale,
+        folds: 3,
+        harness: HarnessConfig::fast(),
+        seed: 0xE8,
+        only_datasets,
+        only_algos: Vec::new(),
+    };
+
+    eprintln!(
+        "bench_tables: paper_scale={paper_scale}, datasets={:?}",
+        if cfg.only_datasets.is_empty() { vec!["<all 11>".to_string()] } else { cfg.only_datasets.clone() }
+    );
+    let t0 = std::time::Instant::now();
+    let grids = run_all(&cfg)?;
+    eprintln!("grid complete in {:.1}s\n", t0.elapsed().as_secs_f64());
+
+    for table in [PaperTable::R2, PaperTable::Msll, PaperTable::Smse] {
+        println!("{}\n", render_table(&grids, table));
+    }
+
+    // Persist for EXPERIMENTS.md.
+    std::fs::create_dir_all("results").ok();
+    for (t, table) in [(1, PaperTable::R2), (2, PaperTable::Msll), (3, PaperTable::Smse)] {
+        std::fs::write(format!("results/table{t}.md"), render_table(&grids, table))?;
+    }
+    eprintln!("wrote results/table{{1,2,3}}.md");
+    Ok(())
+}

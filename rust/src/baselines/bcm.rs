@@ -1,0 +1,240 @@
+//! Bayesian Committee Machine (Tresp 2000) — paper §III.
+//!
+//! Splits the training set into `k` random modules, fits a GP per module,
+//! and combines module posteriors by multiplying their densities and
+//! dividing out the `k−1` extra prior factors:
+//!
+//!   σ_bcm⁻²(x) = Σₗ σₗ⁻²(x) − (k−1)·σ_prior⁻²(x)
+//!   m_bcm(x)   = σ_bcm²(x) · Σₗ σₗ⁻²(x)·mₗ(x)
+//!
+//! Two variants as in the paper's experiments: **shared** hyper-parameters
+//! (one ML fit on a subset, reused by all modules) and **individual**
+//! (each module optimizes its own θ). The individual variant's
+//! inconsistent priors are exactly what destabilizes BCM at k ≥ 8 — the
+//! instability the paper reports (Tables I–III) reproduces here.
+
+use crate::kernel::Kernel;
+use crate::kriging::{HyperOpt, OrdinaryKriging, Prediction, Surrogate};
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+use crate::util::threadpool::{default_workers, scoped_map};
+use anyhow::{bail, Result};
+
+/// Hyper-parameter sharing mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BcmMode {
+    /// One θ estimated on a subset, shared by every module ("BCM sh.").
+    Shared,
+    /// Each module estimates its own θ ("BCM").
+    Individual,
+}
+
+#[derive(Debug, Clone)]
+pub struct BcmConfig {
+    pub k: usize,
+    pub mode: BcmMode,
+    pub hyperopt: HyperOpt,
+    pub seed: u64,
+    /// Subset size for the shared-θ estimation fit.
+    pub shared_fit_size: usize,
+}
+
+impl BcmConfig {
+    pub fn new(k: usize, mode: BcmMode) -> Self {
+        Self { k, mode, hyperopt: HyperOpt::default(), seed: 0xBC, shared_fit_size: 256 }
+    }
+}
+
+/// Fitted Bayesian Committee Machine.
+pub struct Bcm {
+    modules: Vec<OrdinaryKriging>,
+    mode: BcmMode,
+    name: String,
+}
+
+impl Bcm {
+    pub fn fit(x: &Matrix, y: &[f64], cfg: &BcmConfig) -> Result<Self> {
+        let n = x.rows();
+        if n == 0 {
+            bail!("empty training set");
+        }
+        if n != y.len() {
+            bail!("x/y length mismatch");
+        }
+        let k = cfg.k.min(n).max(1);
+        let clusters = crate::clustering::random::partition(n, k, cfg.seed);
+
+        // Shared mode: estimate θ once on a random subset.
+        let shared_kernel: Option<(Kernel, f64)> = match cfg.mode {
+            BcmMode::Shared => {
+                let m = cfg.shared_fit_size.min(n);
+                let idx = Rng::new(cfg.seed ^ 0x5A5A).sample_indices(n, m);
+                let xs = x.select_rows(&idx);
+                let ys: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
+                let fit = cfg.hyperopt.fit(xs, &ys)?;
+                Some((fit.kernel().clone(), fit.nugget()))
+            }
+            BcmMode::Individual => None,
+        };
+
+        let fits: Vec<Result<OrdinaryKriging>> =
+            scoped_map(&clusters, default_workers(), |ci, rows| {
+                let xs = x.select_rows(rows);
+                let ys: Vec<f64> = rows.iter().map(|&i| y[i]).collect();
+                match &shared_kernel {
+                    Some((kernel, nugget)) => {
+                        Ok(OrdinaryKriging::fit(xs, &ys, kernel.clone(), *nugget)?)
+                    }
+                    None => {
+                        let mut opt = cfg.hyperopt.clone();
+                        opt.seed = cfg.hyperopt.seed.wrapping_add(ci as u64);
+                        Ok(opt.fit(xs, &ys)?)
+                    }
+                }
+            });
+
+        let modules: Vec<OrdinaryKriging> = fits.into_iter().collect::<Result<_>>()?;
+        let name = match cfg.mode {
+            BcmMode::Shared => "BCM sh.".to_string(),
+            BcmMode::Individual => "BCM".to_string(),
+        };
+        Ok(Self { modules, mode: cfg.mode, name })
+    }
+
+    pub fn k(&self) -> usize {
+        self.modules.len()
+    }
+
+    pub fn mode(&self) -> BcmMode {
+        self.mode
+    }
+
+    /// BCM combination at one point.
+    pub fn predict_one(&self, xt: &[f64]) -> (f64, f64) {
+        let k = self.modules.len() as f64;
+        let mut precision_sum = 0.0;
+        let mut weighted_mean = 0.0;
+        let mut prior_prec_sum = 0.0;
+        for m in &self.modules {
+            let (mu, var) = m.predict_one(xt);
+            let var = var.max(1e-12);
+            precision_sum += 1.0 / var;
+            weighted_mean += mu / var;
+            // Module prior variance: σ̂²·(1 + λ) — the process variance the
+            // module reverts to far from its data.
+            let prior = (m.sigma2() * (1.0 + m.nugget())).max(1e-12);
+            prior_prec_sum += 1.0 / prior;
+        }
+        // BCM precision correction: subtract (k−1) times the (average)
+        // prior precision. This is where mismatched per-module priors make
+        // the combination inconsistent — precisions can go ≤ 0.
+        let prior_precision = prior_prec_sum / k;
+        let bcm_precision = precision_sum - (k - 1.0) * prior_precision;
+        if bcm_precision <= 1e-12 {
+            // Degenerate precision: fall back to the naive product-of-
+            // experts (no prior correction), keeping the prediction finite
+            // but (faithfully to the paper) badly calibrated.
+            let var = 1.0 / precision_sum;
+            return (weighted_mean * var, var);
+        }
+        let var = 1.0 / bcm_precision;
+        (weighted_mean * var, var)
+    }
+}
+
+impl Surrogate for Bcm {
+    fn predict(&self, xt: &Matrix) -> Result<Prediction> {
+        let rows: Vec<usize> = (0..xt.rows()).collect();
+        let outs = scoped_map(&rows, default_workers(), |_, &i| self.predict_one(xt.row(i)));
+        Ok(Prediction {
+            mean: outs.iter().map(|p| p.0).collect(),
+            variance: outs.iter().map(|p| p.1).collect(),
+        })
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::gen_matrix;
+
+    fn smooth(n: usize, seed: u64) -> (Matrix, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let x = gen_matrix(&mut rng, n, 2, -2.0, 2.0);
+        let y: Vec<f64> = (0..n).map(|i| (x.row(i)[0] + x.row(i)[1]).sin()).collect();
+        (x, y)
+    }
+
+    fn fast_opt() -> HyperOpt {
+        HyperOpt { restarts: 1, max_evals: 15, isotropic: true, ..HyperOpt::default() }
+    }
+
+    #[test]
+    fn small_k_predicts_well() {
+        let (x, y) = smooth(120, 1);
+        let cfg = BcmConfig { hyperopt: fast_opt(), ..BcmConfig::new(2, BcmMode::Individual) };
+        let bcm = Bcm::fit(&x, &y, &cfg).unwrap();
+        assert_eq!(bcm.k(), 2);
+        let pred = bcm.predict(&x).unwrap();
+        let smse = pred
+            .mean
+            .iter()
+            .zip(&y)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            / y.len() as f64
+            / crate::util::stats::variance(&y);
+        assert!(smse < 0.2, "SMSE {smse}");
+    }
+
+    #[test]
+    fn shared_mode_has_common_hyperparameters() {
+        let (x, y) = smooth(90, 2);
+        let cfg = BcmConfig {
+            hyperopt: fast_opt(),
+            shared_fit_size: 50,
+            ..BcmConfig::new(3, BcmMode::Shared)
+        };
+        let bcm = Bcm::fit(&x, &y, &cfg).unwrap();
+        let t0 = bcm.modules[0].kernel().theta.clone();
+        for m in &bcm.modules[1..] {
+            assert_eq!(m.kernel().theta, t0, "shared θ differs");
+        }
+    }
+
+    #[test]
+    fn individual_mode_modules_differ() {
+        let (x, y) = smooth(120, 3);
+        let cfg = BcmConfig { hyperopt: fast_opt(), ..BcmConfig::new(4, BcmMode::Individual) };
+        let bcm = Bcm::fit(&x, &y, &cfg).unwrap();
+        // At least one pair of modules should have different θ (they see
+        // different data and use different restart seeds).
+        let distinct = bcm
+            .modules
+            .windows(2)
+            .any(|w| w[0].kernel().theta != w[1].kernel().theta);
+        assert!(distinct, "individual θ identical across all modules");
+    }
+
+    #[test]
+    fn predictions_finite_even_at_large_k() {
+        // The paper's instability regime: predictions may be bad but must
+        // remain finite (the harness needs scores, not panics).
+        let (x, y) = smooth(160, 4);
+        let cfg = BcmConfig { hyperopt: fast_opt(), ..BcmConfig::new(16, BcmMode::Individual) };
+        let bcm = Bcm::fit(&x, &y, &cfg).unwrap();
+        let pred = bcm.predict(&x).unwrap();
+        assert!(pred.mean.iter().all(|v| v.is_finite()));
+        assert!(pred.variance.iter().all(|v| v.is_finite() && *v > 0.0));
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        let cfg = BcmConfig::new(2, BcmMode::Shared);
+        assert!(Bcm::fit(&Matrix::zeros(0, 1), &[], &cfg).is_err());
+    }
+}

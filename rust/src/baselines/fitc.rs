@@ -1,0 +1,274 @@
+//! FITC — Fully Independent Training Conditional (Snelson & Ghahramani),
+//! paper §III.
+//!
+//! Sparse GP with `m` inducing (pseudo-)inputs `Xu`. The covariance is
+//! approximated by `Q = Knm Kmm⁻¹ Kmn` plus an exact diagonal correction:
+//! `Λ = diag(Knn − Q) + σ_n²I`. Everything costs `O(n m²)`.
+//!
+//! Zero-mean formulation on centered targets; hyper-parameters
+//! (isotropic log θ, log signal variance, log noise variance) are
+//! estimated by Nelder–Mead on the exact FITC marginal likelihood.
+
+use crate::kernel::{Kernel, KernelKind};
+use crate::kriging::hyperopt::nelder_mead;
+use crate::kriging::{Prediction, Surrogate};
+use crate::linalg::Cholesky;
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+
+const LOG_2PI: f64 = 1.8378770664093453;
+
+/// Configuration for a FITC fit.
+#[derive(Debug, Clone)]
+pub struct FitcConfig {
+    /// Number of inducing points (chosen as a random training subset, the
+    /// common practice the paper mentions).
+    pub inducing: usize,
+    /// Nelder–Mead evaluation budget for the ML search.
+    pub max_evals: usize,
+    pub seed: u64,
+}
+
+impl FitcConfig {
+    pub fn new(inducing: usize) -> Self {
+        Self { inducing, max_evals: 40, seed: 0xF17C }
+    }
+}
+
+/// Fitted FITC model.
+pub struct Fitc {
+    kernel: Kernel,
+    /// Signal (process) variance σ_f².
+    sigma_f2: f64,
+    /// Noise variance σ_n².
+    sigma_n2: f64,
+    xu: Matrix,
+    /// Cholesky of Kmm.
+    kmm_chol: Cholesky,
+    /// Cholesky of B = Kmm + Kmn Λ⁻¹ Knm.
+    b_chol: Cholesky,
+    /// B⁻¹ Kmn Λ⁻¹ y_c — prediction weights.
+    alpha: Vec<f64>,
+    y_mean: f64,
+    /// Negative log marginal likelihood at the fitted parameters.
+    pub nll: f64,
+}
+
+impl Fitc {
+    /// Fit FITC on `(x, y)`.
+    pub fn fit(x: &Matrix, y: &[f64], cfg: &FitcConfig) -> Result<Self> {
+        let (n, d) = x.shape();
+        if n == 0 {
+            bail!("empty training set");
+        }
+        if n != y.len() {
+            bail!("x/y length mismatch");
+        }
+        let m = cfg.inducing.min(n).max(1);
+        let idx = Rng::new(cfg.seed).sample_indices(n, m);
+        let xu = x.select_rows(&idx);
+
+        let y_mean = crate::util::stats::mean(y);
+        let yc: Vec<f64> = y.iter().map(|v| v - y_mean).collect();
+        let y_var = crate::util::stats::variance(y).max(1e-12);
+
+        // ML search over [log10 θ_iso, log10 σf² (relative), log10 σn²
+        // (relative)]; variances relative to the target variance.
+        let mut best: Option<(Fitc, f64)> = None;
+        let mut objective = |p: &[f64]| -> f64 {
+            let theta = 10f64.powf(p[0].clamp(-3.0, 3.0));
+            let sigma_f2 = y_var * 10f64.powf(p[1].clamp(-3.0, 2.0));
+            let sigma_n2 = y_var * 10f64.powf(p[2].clamp(-8.0, 0.5));
+            match Self::build(x, &yc, y_mean, &xu, d, theta, sigma_f2, sigma_n2) {
+                Ok(model) => {
+                    let nll = model.nll;
+                    if best.as_ref().map(|(_, b)| nll < *b).unwrap_or(true) {
+                        best = Some((model, nll));
+                    }
+                    nll
+                }
+                Err(_) => f64::INFINITY,
+            }
+        };
+        nelder_mead(&[0.0, 0.0, -2.0], 0.7, cfg.max_evals, &mut objective);
+        best.map(|(m, _)| m).context("FITC: no parameter setting produced a valid model")
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn build(
+        x: &Matrix,
+        yc: &[f64],
+        y_mean: f64,
+        xu: &Matrix,
+        d: usize,
+        theta: f64,
+        sigma_f2: f64,
+        sigma_n2: f64,
+    ) -> Result<Self> {
+        let n = x.rows();
+        let m = xu.rows();
+        let kernel = Kernel::new(KernelKind::SquaredExponential, vec![theta; d]);
+
+        // Kmm (with tiny jitter) and Knm, scaled by σf².
+        let mut kmm = kernel.corr_matrix(xu);
+        kmm.scale(sigma_f2);
+        for i in 0..m {
+            kmm[(i, i)] += sigma_f2 * 1e-8;
+        }
+        let kmm_chol = Cholesky::new_regularized(&kmm)?;
+        let mut knm = kernel.cross_corr(x, xu);
+        knm.scale(sigma_f2);
+
+        // Λ_ii = σf² − q_ii + σn²,  q_ii = knm_i Kmm⁻¹ knm_iᵀ.
+        let mut lambda = vec![0.0; n];
+        for i in 0..n {
+            let row = knm.row(i).to_vec();
+            let q_ii = kmm_chol.quad_form(&row);
+            lambda[i] = (sigma_f2 - q_ii).max(1e-12) + sigma_n2;
+        }
+
+        // B = Kmm + Knmᵀ Λ⁻¹ Knm.
+        let mut b = kmm.clone();
+        for i in 0..n {
+            let li = 1.0 / lambda[i];
+            let row = knm.row(i);
+            for p in 0..m {
+                let rp = row[p] * li;
+                for q in 0..m {
+                    b[(p, q)] += rp * row[q];
+                }
+            }
+        }
+        let b_chol = Cholesky::new_regularized(&b)?;
+
+        // t = Knmᵀ Λ⁻¹ y_c;  α = B⁻¹ t.
+        let mut t = vec![0.0; m];
+        for i in 0..n {
+            let w = yc[i] / lambda[i];
+            let row = knm.row(i);
+            for p in 0..m {
+                t[p] += w * row[p];
+            }
+        }
+        let alpha = b_chol.solve(&t);
+
+        // NLL via the matrix determinant / inversion lemmas:
+        // log|Q+Λ| = log|B| − log|Kmm| + Σ log λᵢ
+        // yᵀ(Q+Λ)⁻¹y = yᵀΛ⁻¹y − tᵀB⁻¹t.
+        let log_det =
+            b_chol.log_det() - kmm_chol.log_det() + lambda.iter().map(|l| l.ln()).sum::<f64>();
+        let quad = yc.iter().zip(&lambda).map(|(v, l)| v * v / l).sum::<f64>()
+            - t.iter().zip(&alpha).map(|(a, b)| a * b).sum::<f64>();
+        let nll = 0.5 * (log_det + quad + n as f64 * LOG_2PI);
+        if !nll.is_finite() {
+            bail!("non-finite FITC likelihood");
+        }
+
+        Ok(Self {
+            kernel,
+            sigma_f2,
+            sigma_n2,
+            xu: xu.clone(),
+            kmm_chol,
+            b_chol,
+            alpha,
+            y_mean,
+            nll,
+        })
+    }
+
+    /// Posterior mean/variance at a single point.
+    pub fn predict_one(&self, xt: &[f64]) -> (f64, f64) {
+        let m = self.xu.rows();
+        let mut ks = Vec::with_capacity(m);
+        for j in 0..m {
+            ks.push(self.sigma_f2 * self.kernel.corr(xt, self.xu.row(j)));
+        }
+        let mean = self.y_mean + ks.iter().zip(&self.alpha).map(|(a, b)| a * b).sum::<f64>();
+        // var = k** − k*ᵀKmm⁻¹k* + k*ᵀB⁻¹k* + σn².
+        let var = self.sigma_f2 - self.kmm_chol.quad_form(&ks) + self.b_chol.quad_form(&ks)
+            + self.sigma_n2;
+        (mean, var.max(0.0))
+    }
+
+    pub fn n_inducing(&self) -> usize {
+        self.xu.rows()
+    }
+}
+
+impl Surrogate for Fitc {
+    fn predict(&self, xt: &Matrix) -> Result<Prediction> {
+        let mut mean = Vec::with_capacity(xt.rows());
+        let mut variance = Vec::with_capacity(xt.rows());
+        for i in 0..xt.rows() {
+            let (mu, var) = self.predict_one(xt.row(i));
+            mean.push(mu);
+            variance.push(var);
+        }
+        Ok(Prediction { mean, variance })
+    }
+
+    fn name(&self) -> &str {
+        "FITC"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::gen_matrix;
+
+    fn smooth(n: usize, seed: u64) -> (Matrix, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let x = gen_matrix(&mut rng, n, 2, -2.0, 2.0);
+        let y: Vec<f64> = (0..n).map(|i| x.row(i)[0].sin() + x.row(i)[1]).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn fits_smooth_function_reasonably() {
+        let (x, y) = smooth(150, 1);
+        let f = Fitc::fit(&x, &y, &FitcConfig::new(40)).unwrap();
+        assert_eq!(f.n_inducing(), 40);
+        let pred = f.predict(&x).unwrap();
+        let smse = pred
+            .mean
+            .iter()
+            .zip(&y)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            / y.len() as f64
+            / crate::util::stats::variance(&y);
+        assert!(smse < 0.15, "SMSE {smse}");
+    }
+
+    #[test]
+    fn more_inducing_points_no_worse() {
+        let (x, y) = smooth(120, 2);
+        let few = Fitc::fit(&x, &y, &FitcConfig::new(5)).unwrap();
+        let many = Fitc::fit(&x, &y, &FitcConfig::new(60)).unwrap();
+        let pred_few = few.predict(&x).unwrap();
+        let pred_many = many.predict(&x).unwrap();
+        let sse = |p: &Prediction| -> f64 {
+            p.mean.iter().zip(&y).map(|(a, b)| (a - b) * (a - b)).sum()
+        };
+        assert!(sse(&pred_many) <= sse(&pred_few) * 1.5, "many inducing much worse");
+    }
+
+    #[test]
+    fn variance_positive_and_grows_off_data() {
+        let (x, y) = smooth(80, 3);
+        let f = Fitc::fit(&x, &y, &FitcConfig::new(30)).unwrap();
+        let (_, v_near) = f.predict_one(&[0.0, 0.0]);
+        let (_, v_far) = f.predict_one(&[30.0, 30.0]);
+        assert!(v_near >= 0.0);
+        assert!(v_far > v_near);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(Fitc::fit(&Matrix::zeros(0, 1), &[], &FitcConfig::new(5)).is_err());
+        assert!(Fitc::fit(&Matrix::zeros(3, 1), &[1.0], &FitcConfig::new(5)).is_err());
+    }
+}

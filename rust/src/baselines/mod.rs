@@ -1,0 +1,11 @@
+//! State-of-the-art Kriging approximation baselines the paper compares
+//! against (§III, §VI): Subset of Data, FITC sparse GP and the Bayesian
+//! Committee Machine (shared / individual hyper-parameters).
+
+pub mod bcm;
+pub mod fitc;
+pub mod sod;
+
+pub use bcm::{Bcm, BcmConfig, BcmMode};
+pub use fitc::{Fitc, FitcConfig};
+pub use sod::SubsetOfData;

@@ -1,0 +1,98 @@
+//! Subset of Data (SoD) baseline — paper §III.
+//!
+//! The simplest complexity reduction: fit ordinary Kriging on `m < n`
+//! uniformly sampled points and discard the rest. Fast but wasteful with
+//! information — the paper's accuracy/time reference point.
+
+use crate::kriging::{HyperOpt, OrdinaryKriging, Prediction, Surrogate};
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+/// Fitted Subset-of-Data model.
+pub struct SubsetOfData {
+    model: OrdinaryKriging,
+    pub subset_size: usize,
+}
+
+impl SubsetOfData {
+    /// Fit on a random subset of `m` rows (all rows if `m >= n`).
+    pub fn fit(
+        x: &Matrix,
+        y: &[f64],
+        m: usize,
+        seed: u64,
+        hyperopt: &HyperOpt,
+    ) -> Result<Self> {
+        if x.rows() == 0 {
+            bail!("empty training set");
+        }
+        if x.rows() != y.len() {
+            bail!("x/y length mismatch");
+        }
+        let n = x.rows();
+        let m = m.min(n).max(1);
+        let idx = Rng::new(seed).sample_indices(n, m);
+        let xs = x.select_rows(&idx);
+        let ys: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
+        let model = hyperopt.fit(xs, &ys)?;
+        Ok(Self { model, subset_size: m })
+    }
+
+    pub fn inner(&self) -> &OrdinaryKriging {
+        &self.model
+    }
+}
+
+impl Surrogate for SubsetOfData {
+    fn predict(&self, xt: &Matrix) -> Result<Prediction> {
+        Ok(self.model.predict(xt)?)
+    }
+
+    fn name(&self) -> &str {
+        "SoD"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::gen_matrix;
+
+    #[test]
+    fn fits_on_subset_and_predicts() {
+        let mut rng = Rng::new(1);
+        let x = gen_matrix(&mut rng, 100, 2, -2.0, 2.0);
+        let y: Vec<f64> = (0..100).map(|i| x.row(i)[0] + x.row(i)[1]).collect();
+        let opt = HyperOpt { restarts: 1, max_evals: 15, isotropic: true, ..HyperOpt::default() };
+        let sod = SubsetOfData::fit(&x, &y, 40, 7, &opt).unwrap();
+        assert_eq!(sod.subset_size, 40);
+        assert_eq!(sod.inner().n_train(), 40);
+        let pred = sod.predict(&x).unwrap();
+        // Smooth linear target: even a subset should fit decently.
+        let sse: f64 = pred
+            .mean
+            .iter()
+            .zip(&y)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            / y.len() as f64;
+        assert!(sse / crate::util::stats::variance(&y) < 0.1);
+    }
+
+    #[test]
+    fn m_larger_than_n_uses_all() {
+        let mut rng = Rng::new(2);
+        let x = gen_matrix(&mut rng, 20, 1, -1.0, 1.0);
+        let y: Vec<f64> = (0..20).map(|i| x.row(i)[0]).collect();
+        let opt = HyperOpt { restarts: 1, max_evals: 10, ..HyperOpt::default() };
+        let sod = SubsetOfData::fit(&x, &y, 100, 1, &opt).unwrap();
+        assert_eq!(sod.subset_size, 20);
+    }
+
+    #[test]
+    fn rejects_empty() {
+        let opt = HyperOpt::default();
+        assert!(SubsetOfData::fit(&Matrix::zeros(0, 1), &[], 5, 1, &opt).is_err());
+    }
+}

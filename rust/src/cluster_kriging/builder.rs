@@ -1,0 +1,111 @@
+//! Flavor presets — the paper's four Cluster Kriging algorithms (§V).
+//!
+//! | name  | partitioner          | combiner            |
+//! |-------|----------------------|---------------------|
+//! | OWCK  | k-means              | optimal weights     |
+//! | OWFCK | fuzzy C-means (o=1.1)| optimal weights     |
+//! | GMMCK | GMM (o=1.1)          | membership mixture  |
+//! | MTCK  | regression tree      | single model        |
+//!
+//! Plus `RANDOM-CK` (random partition + optimal weights) as the ablation
+//! flavor quantifying the value of informed partitioning.
+
+use crate::cluster_kriging::combiner::Combiner;
+use crate::cluster_kriging::model::ClusterKrigingConfig;
+use crate::cluster_kriging::partitioner::{
+    FcmPartitioner, GmmPartitioner, KMeansPartitioner, RandomPartitioner, TreePartitioner,
+};
+use crate::kriging::HyperOpt;
+use anyhow::bail;
+
+/// Overlap used by the paper's experiments (§VI-A: "overlap … set to 10%").
+pub const PAPER_OVERLAP: f64 = 1.1;
+
+/// All flavor names accepted by [`flavor`].
+pub const FLAVORS: [&str; 5] = ["OWCK", "OWFCK", "GMMCK", "MTCK", "RANDOM-CK"];
+
+/// Build the configuration for a named flavor with `k` clusters.
+pub fn flavor(
+    name: &str,
+    k: usize,
+    seed: u64,
+    hyperopt: HyperOpt,
+) -> anyhow::Result<ClusterKrigingConfig> {
+    let cfg = match name {
+        "OWCK" => ClusterKrigingConfig {
+            partitioner: Box::new(KMeansPartitioner { k, seed }),
+            combiner: Combiner::OptimalWeights,
+            hyperopt,
+            workers: None,
+            flavor: "OWCK".into(),
+        },
+        "OWFCK" => ClusterKrigingConfig {
+            partitioner: Box::new(FcmPartitioner { k, overlap: PAPER_OVERLAP, seed }),
+            combiner: Combiner::OptimalWeights,
+            hyperopt,
+            workers: None,
+            flavor: "OWFCK".into(),
+        },
+        "GMMCK" => ClusterKrigingConfig {
+            partitioner: Box::new(GmmPartitioner {
+                seed,
+                overlap: PAPER_OVERLAP,
+                ..GmmPartitioner::new(k)
+            }),
+            combiner: Combiner::MembershipMixture,
+            hyperopt,
+            workers: None,
+            flavor: "GMMCK".into(),
+        },
+        "MTCK" => ClusterKrigingConfig {
+            partitioner: Box::new(TreePartitioner { leaves: k, min_leaf_size: None }),
+            combiner: Combiner::SingleModel,
+            hyperopt,
+            workers: None,
+            flavor: "MTCK".into(),
+        },
+        "RANDOM-CK" => ClusterKrigingConfig {
+            partitioner: Box::new(RandomPartitioner { k, seed }),
+            combiner: Combiner::OptimalWeights,
+            hyperopt,
+            workers: None,
+            flavor: "RANDOM-CK".into(),
+        },
+        other => bail!("unknown Cluster Kriging flavor {other:?} (expected one of {FLAVORS:?})"),
+    };
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_flavors_buildable() {
+        for name in FLAVORS {
+            let cfg = flavor(name, 4, 1, HyperOpt::default()).unwrap();
+            assert_eq!(cfg.flavor, name);
+        }
+    }
+
+    #[test]
+    fn unknown_flavor_rejected() {
+        assert!(flavor("BOGUS", 2, 1, HyperOpt::default()).is_err());
+    }
+
+    #[test]
+    fn combiners_match_paper_table() {
+        assert_eq!(
+            flavor("OWCK", 2, 1, HyperOpt::default()).unwrap().combiner,
+            Combiner::OptimalWeights
+        );
+        assert_eq!(
+            flavor("GMMCK", 2, 1, HyperOpt::default()).unwrap().combiner,
+            Combiner::MembershipMixture
+        );
+        assert_eq!(
+            flavor("MTCK", 2, 1, HyperOpt::default()).unwrap().combiner,
+            Combiner::SingleModel
+        );
+    }
+}

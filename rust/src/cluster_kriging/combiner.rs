@@ -1,0 +1,215 @@
+//! Prediction-combination stage of Cluster Kriging (paper §IV-C).
+//!
+//! Three schemes, matching the paper:
+//! * [`Combiner::OptimalWeights`] — inverse-variance weights minimizing the
+//!   combined Kriging variance (Eq. 11–12), used by OWCK/OWFCK;
+//! * [`Combiner::MembershipMixture`] — membership-probability mixture with
+//!   the law-of-total-variance spread (Eq. 13–16), used by GMMCK;
+//! * [`Combiner::SingleModel`] — route to one model (§IV-C3), used by MTCK.
+
+/// Per-cluster posterior (mean, variance) pairs at one test point.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterPrediction {
+    pub mean: f64,
+    pub variance: f64,
+}
+
+/// Prediction-combination scheme.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Combiner {
+    /// Eq. 12: wₗ* ∝ 1/σₗ²; combined variance Σ wₗ²σₗ².
+    OptimalWeights,
+    /// Eq. 13–16: weights are membership probabilities; the combined
+    /// variance uses the mixture (law of total variance) form.
+    MembershipMixture,
+    /// §IV-C3: use only the routed model's prediction.
+    SingleModel,
+}
+
+impl Combiner {
+    pub fn name(self) -> &'static str {
+        match self {
+            Combiner::OptimalWeights => "optimal_weights",
+            Combiner::MembershipMixture => "membership_mixture",
+            Combiner::SingleModel => "single_model",
+        }
+    }
+
+    /// Combine per-cluster predictions into one posterior.
+    ///
+    /// `membership_weights` are the Eq. 13 weights (only used by
+    /// `MembershipMixture`); `routed` is the single-model choice (only
+    /// used by `SingleModel`).
+    pub fn combine(
+        self,
+        preds: &[ClusterPrediction],
+        membership_weights: &[f64],
+        routed: usize,
+    ) -> ClusterPrediction {
+        assert!(!preds.is_empty(), "combine: no predictions");
+        match self {
+            Combiner::OptimalWeights => combine_optimal(preds),
+            Combiner::MembershipMixture => combine_mixture(preds, membership_weights),
+            Combiner::SingleModel => preds[routed.min(preds.len() - 1)],
+        }
+    }
+}
+
+/// Optimal (minimum-variance) weighting, Eq. 12:
+/// wₗ* = (1/σₗ²) / Σᵢ (1/σᵢ²);  mean = Σ wₗ mₗ;  var = Σ wₗ² σₗ².
+fn combine_optimal(preds: &[ClusterPrediction]) -> ClusterPrediction {
+    // Zero-variance guard: a model that is *certain* dominates. If any σ²
+    // underflows, fall back to averaging only the certain models.
+    const EPS: f64 = 1e-300;
+    let certain: Vec<&ClusterPrediction> =
+        preds.iter().filter(|p| p.variance <= EPS).collect();
+    if !certain.is_empty() {
+        let mean = certain.iter().map(|p| p.mean).sum::<f64>() / certain.len() as f64;
+        return ClusterPrediction { mean, variance: 0.0 };
+    }
+    let inv_sum: f64 = preds.iter().map(|p| 1.0 / p.variance).sum();
+    let mut mean = 0.0;
+    let mut variance = 0.0;
+    for p in preds {
+        let w = (1.0 / p.variance) / inv_sum;
+        mean += w * p.mean;
+        variance += w * w * p.variance;
+    }
+    ClusterPrediction { mean, variance }
+}
+
+/// Membership-probability mixture, Eq. 15–16:
+/// mean = Σ wₗ mₗ;  var = Σ wₗ (σₗ² + mₗ²) − mean².
+fn combine_mixture(preds: &[ClusterPrediction], weights: &[f64]) -> ClusterPrediction {
+    assert_eq!(preds.len(), weights.len(), "mixture: weight/pred mismatch");
+    let wsum: f64 = weights.iter().sum();
+    // Degenerate membership (all ~0, e.g. far outside the GMM support):
+    // fall back to uniform weights.
+    let uniform = 1.0 / preds.len() as f64;
+    let norm = |w: f64| if wsum > 1e-12 { w / wsum } else { uniform };
+    let mut mean = 0.0;
+    for (p, &w) in preds.iter().zip(weights) {
+        mean += norm(w) * p.mean;
+    }
+    let mut second = 0.0;
+    for (p, &w) in preds.iter().zip(weights) {
+        second += norm(w) * (p.variance + p.mean * p.mean);
+    }
+    ClusterPrediction { mean, variance: (second - mean * mean).max(0.0) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check_default, gen_size};
+
+    fn p(mean: f64, variance: f64) -> ClusterPrediction {
+        ClusterPrediction { mean, variance }
+    }
+
+    #[test]
+    fn optimal_weights_match_eq12_closed_form() {
+        // σ² = [1, 4]: w = [0.8, 0.2].
+        let preds = [p(10.0, 1.0), p(20.0, 4.0)];
+        let out = Combiner::OptimalWeights.combine(&preds, &[], 0);
+        assert!((out.mean - (0.8 * 10.0 + 0.2 * 20.0)).abs() < 1e-12);
+        assert!((out.variance - (0.64 * 1.0 + 0.04 * 4.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn optimal_weights_certain_model_dominates() {
+        let preds = [p(5.0, 0.0), p(100.0, 1.0)];
+        let out = Combiner::OptimalWeights.combine(&preds, &[], 0);
+        assert_eq!(out.mean, 5.0);
+        assert_eq!(out.variance, 0.0);
+    }
+
+    #[test]
+    fn optimal_variance_not_above_best_single_prop() {
+        // The whole point of Eq. 12: combined variance ≤ min σₗ².
+        check_default(|rng| {
+            let k = gen_size(rng, 1, 8);
+            let preds: Vec<ClusterPrediction> = (0..k)
+                .map(|_| p(rng.uniform_in(-5.0, 5.0), rng.uniform_in(0.01, 4.0)))
+                .collect();
+            let out = Combiner::OptimalWeights.combine(&preds, &[], 0);
+            let best = preds.iter().map(|q| q.variance).fold(f64::INFINITY, f64::min);
+            crate::prop_assert!(
+                out.variance <= best + 1e-12,
+                "combined {} > best single {best}",
+                out.variance
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn optimal_beats_uniform_weighting_prop() {
+        // Optimal weights minimize Σw²σ² over the simplex, so they can't
+        // lose to uniform weights.
+        check_default(|rng| {
+            let k = gen_size(rng, 2, 6);
+            let preds: Vec<ClusterPrediction> =
+                (0..k).map(|_| p(0.0, rng.uniform_in(0.05, 3.0))).collect();
+            let out = Combiner::OptimalWeights.combine(&preds, &[], 0);
+            let uni = 1.0 / k as f64;
+            let uniform_var: f64 = preds.iter().map(|q| uni * uni * q.variance).sum();
+            crate::prop_assert!(out.variance <= uniform_var + 1e-12);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mixture_matches_eq15_16() {
+        let preds = [p(1.0, 0.5), p(3.0, 1.0)];
+        let w = [0.25, 0.75];
+        let out = Combiner::MembershipMixture.combine(&preds, &w, 0);
+        let mean = 0.25 * 1.0 + 0.75 * 3.0;
+        let second = 0.25 * (0.5 + 1.0) + 0.75 * (1.0 + 9.0);
+        assert!((out.mean - mean).abs() < 1e-12);
+        assert!((out.variance - (second - mean * mean)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mixture_one_hot_recovers_single_model() {
+        let preds = [p(1.0, 0.5), p(3.0, 2.0)];
+        let out = Combiner::MembershipMixture.combine(&preds, &[0.0, 1.0], 0);
+        assert!((out.mean - 3.0).abs() < 1e-12);
+        assert!((out.variance - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mixture_variance_includes_disagreement() {
+        // Identical variances but different means → mixture variance must
+        // exceed the common variance (models disagree).
+        let preds = [p(0.0, 1.0), p(10.0, 1.0)];
+        let out = Combiner::MembershipMixture.combine(&preds, &[0.5, 0.5], 0);
+        assert!(out.variance > 1.0);
+        assert!((out.mean - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mixture_degenerate_weights_fall_back_to_uniform() {
+        let preds = [p(2.0, 1.0), p(4.0, 1.0)];
+        let out = Combiner::MembershipMixture.combine(&preds, &[0.0, 0.0], 0);
+        assert!((out.mean - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_model_routes() {
+        let preds = [p(1.0, 0.1), p(2.0, 0.2), p(3.0, 0.3)];
+        let out = Combiner::SingleModel.combine(&preds, &[], 1);
+        assert_eq!(out.mean, 2.0);
+        assert_eq!(out.variance, 0.2);
+        // Out-of-range routing clamps instead of panicking.
+        let clamped = Combiner::SingleModel.combine(&preds, &[], 99);
+        assert_eq!(clamped.mean, 3.0);
+    }
+
+    #[test]
+    fn names_stable() {
+        assert_eq!(Combiner::OptimalWeights.name(), "optimal_weights");
+        assert_eq!(Combiner::MembershipMixture.name(), "membership_mixture");
+        assert_eq!(Combiner::SingleModel.name(), "single_model");
+    }
+}

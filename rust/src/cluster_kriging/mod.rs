@@ -1,0 +1,23 @@
+//! Cluster Kriging — the paper's framework (§IV) and flavors (§V).
+//!
+//! Three pluggable stages:
+//! 1. **Partitioning** ([`partitioner`]) — k-means, fuzzy C-means, GMM,
+//!    regression tree or random;
+//! 2. **Modeling** ([`model`]) — one [`crate::kriging::OrdinaryKriging`]
+//!    per cluster, hyper-parameters optimized independently, fitted in
+//!    parallel;
+//! 3. **Prediction** ([`combiner`]) — optimal inverse-variance weights,
+//!    membership-probability mixture, or single-model routing.
+
+pub mod builder;
+pub mod combiner;
+pub mod model;
+pub mod partitioner;
+
+pub use builder::{flavor, FLAVORS, PAPER_OVERLAP};
+pub use combiner::{ClusterPrediction, Combiner};
+pub use model::{ClusterKriging, ClusterKrigingConfig};
+pub use partitioner::{
+    FcmPartitioner, GmmPartitioner, KMeansPartitioner, Membership, Partition, Partitioner,
+    RandomPartitioner, TreePartitioner,
+};

@@ -1,0 +1,402 @@
+//! The Cluster Kriging model: partition → (parallel) fit → combine.
+//!
+//! This is the paper's central contribution (§IV). Complexity: a single
+//! Kriging fit is O(n³); partitioning into k clusters gives k·(n/k)³ =
+//! n³/k² sequentially, and (n/k)³ with k-way fit parallelism — which
+//! [`ClusterKriging::fit`] exploits via the worker pool.
+
+use crate::cluster_kriging::combiner::{ClusterPrediction, Combiner};
+use crate::cluster_kriging::partitioner::{Membership, Partition, Partitioner};
+use crate::kriging::{HyperOpt, OrdinaryKriging, Prediction, Surrogate};
+use crate::util::matrix::Matrix;
+use crate::util::threadpool::{default_workers, scoped_map};
+use anyhow::{bail, Context, Result};
+
+/// Configuration for a Cluster Kriging fit.
+pub struct ClusterKrigingConfig {
+    pub partitioner: Box<dyn Partitioner>,
+    pub combiner: Combiner,
+    /// Per-cluster hyper-parameter search settings.
+    pub hyperopt: HyperOpt,
+    /// Worker threads for the parallel fit (None → machine default).
+    pub workers: Option<usize>,
+    /// Display name of the flavor ("OWCK", "MTCK", ...).
+    pub flavor: String,
+}
+
+/// A fitted Cluster Kriging model.
+pub struct ClusterKriging {
+    models: Vec<OrdinaryKriging>,
+    membership: Membership,
+    combiner: Combiner,
+    flavor: String,
+    /// Cluster sizes (diagnostics / reports).
+    pub cluster_sizes: Vec<usize>,
+}
+
+impl ClusterKriging {
+    /// Partition `(x, y)` and fit one Kriging model per cluster in
+    /// parallel. Clusters that fail to fit (degenerate data) are dropped
+    /// with their membership mass redistributed; fitting fails only if
+    /// *every* cluster fails.
+    pub fn fit(x: &Matrix, y: &[f64], cfg: ClusterKrigingConfig) -> Result<Self> {
+        if x.rows() != y.len() {
+            bail!("x has {} rows but y has {}", x.rows(), y.len());
+        }
+        if x.rows() == 0 {
+            bail!("empty training set");
+        }
+        let partition: Partition = cfg.partitioner.partition(x, y);
+        if !partition.covers(x.rows()) {
+            bail!("partitioner {} produced a non-covering partition", cfg.partitioner.name());
+        }
+
+        let workers = cfg.workers.unwrap_or_else(default_workers);
+        // Fit each cluster independently — the paper's parallel step.
+        let fits: Vec<Result<OrdinaryKriging>> =
+            scoped_map(&partition.clusters, workers, |ci, rows| {
+                let xs = x.select_rows(rows);
+                let ys: Vec<f64> = rows.iter().map(|&i| y[i]).collect();
+                // Derive a per-cluster seed so restarts differ across
+                // clusters but runs stay reproducible.
+                let mut opt = cfg.hyperopt.clone();
+                opt.seed = cfg.hyperopt.seed.wrapping_add(ci as u64);
+                opt.fit(xs, &ys).with_context(|| format!("cluster {ci} fit failed"))
+            });
+
+        let mut models = Vec::with_capacity(fits.len());
+        let mut kept = Vec::with_capacity(fits.len());
+        let mut cluster_sizes = Vec::with_capacity(fits.len());
+        for (ci, fit) in fits.into_iter().enumerate() {
+            match fit {
+                Ok(m) => {
+                    cluster_sizes.push(m.n_train());
+                    models.push(m);
+                    kept.push(ci);
+                }
+                Err(e) => log::warn!("dropping cluster {ci}: {e:#}"),
+            }
+        }
+        if models.is_empty() {
+            bail!("all {} clusters failed to fit", partition.k());
+        }
+
+        // If clusters were dropped, remap membership onto the kept set.
+        let original_k = partition.k();
+        let membership = if kept.len() == original_k {
+            partition.membership
+        } else {
+            remap_membership(partition.membership, kept, original_k)
+        };
+
+        Ok(Self {
+            models,
+            membership,
+            combiner: cfg.combiner,
+            flavor: cfg.flavor,
+            cluster_sizes,
+        })
+    }
+
+    pub fn k(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn combiner(&self) -> Combiner {
+        self.combiner
+    }
+
+    pub fn models(&self) -> &[OrdinaryKriging] {
+        &self.models
+    }
+
+    /// Predict one point: gather per-cluster posteriors and combine.
+    ///
+    /// `SingleModel` only evaluates the routed model (the MTCK prediction
+    /// speedup from §IV-C3); the weighting combiners evaluate all k.
+    pub fn predict_one(&self, xt: &[f64]) -> ClusterPrediction {
+        match self.combiner {
+            Combiner::SingleModel => {
+                let routed = self.membership.route(xt).min(self.k() - 1);
+                let (mean, variance) = self.models[routed].predict_one(xt);
+                ClusterPrediction { mean, variance }
+            }
+            _ => {
+                let preds: Vec<ClusterPrediction> = self
+                    .models
+                    .iter()
+                    .map(|m| {
+                        let (mean, variance) = m.predict_one(xt);
+                        ClusterPrediction { mean, variance }
+                    })
+                    .collect();
+                let weights = self.membership.weights(xt, self.k());
+                self.combiner.combine(&preds, &weights, 0)
+            }
+        }
+    }
+
+    /// Batch prediction.
+    ///
+    /// Weighted combiners evaluate every model over the whole batch with
+    /// the blocked predict path (one cross-correlation block + multi-RHS
+    /// solve per model); single-model routing groups points per routed
+    /// cluster and batches each group — both avoid the per-point solve
+    /// the naive loop would pay (§Perf).
+    pub fn predict_batch(&self, xt: &Matrix) -> Prediction {
+        let m = xt.rows();
+        match self.combiner {
+            Combiner::SingleModel => {
+                // Group rows by routed cluster, batch-predict per group.
+                let mut groups: Vec<Vec<usize>> = vec![Vec::new(); self.k()];
+                for i in 0..m {
+                    groups[self.membership.route(xt.row(i)).min(self.k() - 1)].push(i);
+                }
+                let mut mean = vec![0.0; m];
+                let mut variance = vec![0.0; m];
+                let outs = scoped_map(&groups, default_workers(), |ci, rows| {
+                    if rows.is_empty() {
+                        return None;
+                    }
+                    let sub = xt.select_rows(rows);
+                    Some(self.models[ci].predict(&sub).expect("dims checked"))
+                });
+                for (ci, out) in outs.into_iter().enumerate() {
+                    if let Some(pred) = out {
+                        for (local, &row) in groups[ci].iter().enumerate() {
+                            mean[row] = pred.mean[local];
+                            variance[row] = pred.variance[local];
+                        }
+                    }
+                }
+                Prediction { mean, variance }
+            }
+            _ => {
+                // Every model predicts the full batch (in parallel across
+                // models), then combine per point.
+                let models: Vec<usize> = (0..self.k()).collect();
+                let per_model = scoped_map(&models, default_workers(), |_, &ci| {
+                    self.models[ci].predict(xt).expect("dims checked")
+                });
+                let mut mean = Vec::with_capacity(m);
+                let mut variance = Vec::with_capacity(m);
+                let mut preds = Vec::with_capacity(self.k());
+                for i in 0..m {
+                    preds.clear();
+                    for pm in &per_model {
+                        preds.push(ClusterPrediction {
+                            mean: pm.mean[i],
+                            variance: pm.variance[i],
+                        });
+                    }
+                    let weights = self.membership.weights(xt.row(i), self.k());
+                    let out = self.combiner.combine(&preds, &weights, 0);
+                    mean.push(out.mean);
+                    variance.push(out.variance);
+                }
+                Prediction { mean, variance }
+            }
+        }
+    }
+}
+
+impl Surrogate for ClusterKriging {
+    fn predict(&self, xt: &Matrix) -> Result<Prediction> {
+        Ok(self.predict_batch(xt))
+    }
+
+    fn name(&self) -> &str {
+        &self.flavor
+    }
+}
+
+/// Remap a membership oracle after dropping clusters: weights of dropped
+/// clusters are discarded and the rest renormalized; hard routes to a
+/// dropped cluster fall back to the first kept one.
+fn remap_membership(membership: Membership, kept: Vec<usize>, original_k: usize) -> Membership {
+    match membership {
+        Membership::Hard(f) => {
+            let lookup: Vec<Option<usize>> = (0..original_k)
+                .map(|orig| kept.iter().position(|&kc| kc == orig))
+                .collect();
+            Membership::Hard(Box::new(move |x| lookup[f(x)].unwrap_or(0)))
+        }
+        Membership::Soft(f) => {
+            let kept = kept.clone();
+            Membership::Soft(Box::new(move |x| {
+                let full = f(x);
+                let mut w: Vec<f64> = kept.iter().map(|&c| full[c]).collect();
+                let s: f64 = w.iter().sum();
+                if s > 1e-12 {
+                    for v in &mut w {
+                        *v /= s;
+                    }
+                } else {
+                    let u = 1.0 / w.len() as f64;
+                    for v in &mut w {
+                        *v = u;
+                    }
+                }
+                w
+            }))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster_kriging::builder;
+    use crate::kriging::hyperopt::NuggetMode;
+    use crate::util::proptest::gen_matrix;
+    use crate::util::rng::Rng;
+
+    fn smooth_dataset(n: usize, seed: u64) -> (Matrix, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let x = gen_matrix(&mut rng, n, 2, -3.0, 3.0);
+        let y: Vec<f64> = (0..n)
+            .map(|i| {
+                let r = x.row(i);
+                (r[0]).sin() + 0.3 * r[1] * r[1]
+            })
+            .collect();
+        (x, y)
+    }
+
+    fn fast_hyperopt() -> HyperOpt {
+        HyperOpt {
+            restarts: 1,
+            max_evals: 15,
+            isotropic: true,
+            nugget: NuggetMode::Fixed(1e-8),
+            ..HyperOpt::default()
+        }
+    }
+
+    #[test]
+    fn owck_fits_and_predicts_accurately() {
+        let (x, y) = smooth_dataset(160, 1);
+        let model = ClusterKriging::fit(
+            &x,
+            &y,
+            ClusterKrigingConfig {
+                partitioner: Box::new(
+                    crate::cluster_kriging::partitioner::KMeansPartitioner { k: 4, seed: 2 },
+                ),
+                combiner: Combiner::OptimalWeights,
+                hyperopt: fast_hyperopt(),
+                workers: Some(4),
+                flavor: "OWCK".into(),
+            },
+        )
+        .unwrap();
+        assert_eq!(model.k(), 4);
+        // In-sample accuracy should be high for smooth data.
+        let pred = model.predict_batch(&x);
+        let sse: f64 =
+            pred.mean.iter().zip(&y).map(|(a, b)| (a - b) * (a - b)).sum::<f64>() / y.len() as f64;
+        let var = crate::util::stats::variance(&y);
+        assert!(sse / var < 0.05, "SMSE {} too high", sse / var);
+    }
+
+    #[test]
+    fn all_flavors_produce_finite_predictions() {
+        let (x, y) = smooth_dataset(120, 3);
+        let mut rng = Rng::new(4);
+        let xt = gen_matrix(&mut rng, 20, 2, -3.0, 3.0);
+        for flavor in ["OWCK", "OWFCK", "GMMCK", "MTCK"] {
+            let cfg = builder::flavor(flavor, 3, 7, fast_hyperopt()).unwrap();
+            let model = ClusterKriging::fit(&x, &y, cfg).unwrap();
+            let pred = model.predict_batch(&xt);
+            assert!(pred.mean.iter().all(|v| v.is_finite()), "{flavor}: non-finite mean");
+            assert!(
+                pred.variance.iter().all(|v| v.is_finite() && *v >= 0.0),
+                "{flavor}: bad variance"
+            );
+        }
+    }
+
+    #[test]
+    fn k1_matches_plain_kriging() {
+        // Cluster Kriging with one cluster must equal ordinary Kriging.
+        let (x, y) = smooth_dataset(50, 5);
+        let opt = fast_hyperopt();
+        let plain = opt.fit(x.clone(), &y).unwrap();
+        let ck = ClusterKriging::fit(
+            &x,
+            &y,
+            ClusterKrigingConfig {
+                partitioner: Box::new(
+                    crate::cluster_kriging::partitioner::KMeansPartitioner { k: 1, seed: 1 },
+                ),
+                combiner: Combiner::OptimalWeights,
+                hyperopt: opt,
+                workers: Some(1),
+                flavor: "OWCK".into(),
+            },
+        )
+        .unwrap();
+        let mut rng = Rng::new(6);
+        let xt = gen_matrix(&mut rng, 10, 2, -2.0, 2.0);
+        let pp = plain.predict(&xt).unwrap();
+        let pc = ck.predict_batch(&xt);
+        for i in 0..10 {
+            assert!((pp.mean[i] - pc.mean[i]).abs() < 1e-9, "mean differs at {i}");
+            assert!((pp.variance[i] - pc.variance[i]).abs() < 1e-9, "var differs at {i}");
+        }
+    }
+
+    #[test]
+    fn mtck_only_uses_routed_model() {
+        let (x, y) = smooth_dataset(100, 7);
+        let cfg = builder::flavor("MTCK", 4, 11, fast_hyperopt()).unwrap();
+        let model = ClusterKriging::fit(&x, &y, cfg).unwrap();
+        // SingleModel prediction equals the routed model's own prediction.
+        let probe = [0.5, -0.5];
+        let out = model.predict_one(&probe);
+        let any_match = model.models().iter().any(|m| {
+            let (mu, var) = m.predict_one(&probe);
+            (mu - out.mean).abs() < 1e-12 && (var - out.variance).abs() < 1e-12
+        });
+        assert!(any_match, "MTCK output doesn't match any single model");
+    }
+
+    #[test]
+    fn fit_errors_on_bad_input() {
+        let cfg = builder::flavor("OWCK", 2, 1, fast_hyperopt()).unwrap();
+        assert!(ClusterKriging::fit(&Matrix::zeros(0, 2), &[], cfg).is_err());
+        let cfg = builder::flavor("OWCK", 2, 1, fast_hyperopt()).unwrap();
+        assert!(
+            ClusterKriging::fit(&Matrix::zeros(3, 2), &[1.0, 2.0], cfg).is_err(),
+            "length mismatch accepted"
+        );
+    }
+
+    #[test]
+    fn parallel_and_serial_fits_agree() {
+        let (x, y) = smooth_dataset(80, 9);
+        let fit = |workers| {
+            ClusterKriging::fit(
+                &x,
+                &y,
+                ClusterKrigingConfig {
+                    partitioner: Box::new(
+                        crate::cluster_kriging::partitioner::KMeansPartitioner { k: 4, seed: 3 },
+                    ),
+                    combiner: Combiner::OptimalWeights,
+                    hyperopt: fast_hyperopt(),
+                    workers: Some(workers),
+                    flavor: "OWCK".into(),
+                },
+            )
+            .unwrap()
+        };
+        let serial = fit(1);
+        let parallel = fit(4);
+        let probe = [1.0, 1.0];
+        let a = serial.predict_one(&probe);
+        let b = parallel.predict_one(&probe);
+        assert!((a.mean - b.mean).abs() < 1e-12);
+        assert!((a.variance - b.variance).abs() < 1e-12);
+    }
+}

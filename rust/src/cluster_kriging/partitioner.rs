@@ -1,0 +1,319 @@
+//! Partitioning stage of the Cluster Kriging framework (paper §IV-A).
+//!
+//! A [`Partitioner`] turns a training set into (possibly overlapping)
+//! clusters of row indices plus a [`Membership`] oracle used at prediction
+//! time to weight or route among the per-cluster models.
+
+use crate::clustering::{fcm, gmm, kmeans, random, regression_tree};
+use crate::util::matrix::Matrix;
+
+/// How a fitted partition assigns an *unseen* point to clusters.
+pub enum Membership {
+    /// Hard assignment: exactly one cluster per point (k-means, tree).
+    Hard(Box<dyn Fn(&[f64]) -> usize + Send + Sync>),
+    /// Soft assignment: a probability/weight vector over clusters.
+    Soft(Box<dyn Fn(&[f64]) -> Vec<f64> + Send + Sync>),
+}
+
+impl Membership {
+    /// Weight vector for a point (hard assignments become one-hot).
+    pub fn weights(&self, x: &[f64], k: usize) -> Vec<f64> {
+        match self {
+            Membership::Hard(f) => {
+                let mut w = vec![0.0; k];
+                w[f(x).min(k - 1)] = 1.0;
+                w
+            }
+            Membership::Soft(f) => f(x),
+        }
+    }
+
+    /// Single cluster choice (soft assignments take the argmax).
+    pub fn route(&self, x: &[f64]) -> usize {
+        match self {
+            Membership::Hard(f) => f(x),
+            Membership::Soft(f) => crate::util::stats::argmax(&f(x)),
+        }
+    }
+}
+
+/// Result of partitioning a training set.
+pub struct Partition {
+    /// Row indices per cluster. May overlap (FCM/GMM with o > 1) but must
+    /// cover every row.
+    pub clusters: Vec<Vec<usize>>,
+    /// Unseen-point membership oracle.
+    pub membership: Membership,
+}
+
+impl Partition {
+    pub fn k(&self) -> usize {
+        self.clusters.len()
+    }
+
+    /// Validate coverage (every training row in ≥ 1 cluster).
+    pub fn covers(&self, n: usize) -> bool {
+        let mut seen = vec![false; n];
+        for cl in &self.clusters {
+            for &i in cl {
+                if i >= n {
+                    return false;
+                }
+                seen[i] = true;
+            }
+        }
+        seen.iter().all(|&s| s)
+    }
+}
+
+/// A partitioning strategy: the pluggable first stage of Cluster Kriging.
+pub trait Partitioner: Send + Sync {
+    /// Partition `(x, y)` into clusters.
+    fn partition(&self, x: &Matrix, y: &[f64]) -> Partition;
+    fn name(&self) -> &'static str;
+}
+
+/// K-means hard partitioner (OWCK).
+#[derive(Debug, Clone)]
+pub struct KMeansPartitioner {
+    pub k: usize,
+    pub seed: u64,
+}
+
+impl Partitioner for KMeansPartitioner {
+    fn partition(&self, x: &Matrix, _y: &[f64]) -> Partition {
+        let km = kmeans::fit(
+            x,
+            &kmeans::KMeansConfig { seed: self.seed, ..kmeans::KMeansConfig::new(self.k) },
+        );
+        let k = self.k;
+        let mut clusters = vec![Vec::new(); k];
+        for (i, &l) in km.labels.iter().enumerate() {
+            clusters[l].push(i);
+        }
+        let centroids = km.centroids;
+        Partition {
+            clusters,
+            membership: Membership::Hard(Box::new(move |p| {
+                kmeans::assign(&centroids, &Matrix::from_vec(1, p.len(), p.to_vec()))[0]
+            })),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "kmeans"
+    }
+}
+
+/// Fuzzy C-means overlapping partitioner (OWFCK). `overlap` is the paper's
+/// `o ∈ [1, 2]`; the paper's experiments use 10% overlap → o = 1.1.
+#[derive(Debug, Clone)]
+pub struct FcmPartitioner {
+    pub k: usize,
+    pub overlap: f64,
+    pub seed: u64,
+}
+
+impl Partitioner for FcmPartitioner {
+    fn partition(&self, x: &Matrix, _y: &[f64]) -> Partition {
+        let f = fcm::fit(
+            x,
+            &fcm::FcmConfig { seed: self.seed, ..fcm::FcmConfig::new(self.k) },
+        );
+        let clusters = f.overlapping_assignment(self.overlap);
+        Partition {
+            clusters,
+            membership: Membership::Soft(Box::new(move |p| f.membership_of(p))),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "fcm"
+    }
+}
+
+/// Gaussian-mixture overlapping partitioner (GMMCK).
+#[derive(Debug, Clone)]
+pub struct GmmPartitioner {
+    pub k: usize,
+    pub overlap: f64,
+    pub covariance: gmm::CovarianceType,
+    pub seed: u64,
+}
+
+impl GmmPartitioner {
+    pub fn new(k: usize) -> Self {
+        Self { k, overlap: 1.1, covariance: gmm::CovarianceType::Diagonal, seed: 0x96 }
+    }
+}
+
+impl Partitioner for GmmPartitioner {
+    fn partition(&self, x: &Matrix, _y: &[f64]) -> Partition {
+        let g = gmm::fit(
+            x,
+            &gmm::GmmConfig {
+                covariance: self.covariance,
+                seed: self.seed,
+                ..gmm::GmmConfig::new(self.k)
+            },
+        );
+        let clusters = g.overlapping_assignment(self.overlap);
+        Partition {
+            clusters,
+            membership: Membership::Soft(Box::new(move |p| g.membership_of(p))),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "gmm"
+    }
+}
+
+/// Regression-tree objective-space partitioner (MTCK).
+#[derive(Debug, Clone)]
+pub struct TreePartitioner {
+    /// Target number of leaves (clusters).
+    pub leaves: usize,
+    /// Optional explicit min leaf size (else derived from `leaves`).
+    pub min_leaf_size: Option<usize>,
+}
+
+impl Partitioner for TreePartitioner {
+    fn partition(&self, x: &Matrix, y: &[f64]) -> Partition {
+        let cfg = match self.min_leaf_size {
+            Some(m) => regression_tree::TreeConfig {
+                max_leaves: Some(self.leaves),
+                ..regression_tree::TreeConfig::new(m)
+            },
+            None => regression_tree::TreeConfig::with_max_leaves(x.rows(), self.leaves),
+        };
+        let tree = regression_tree::fit(x, y, &cfg);
+        let clusters = tree.clusters.clone();
+        Partition {
+            clusters,
+            membership: Membership::Hard(Box::new(move |p| tree.route(p))),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "regression_tree"
+    }
+}
+
+/// Random partitioner (ablation baseline; routes unseen points to the
+/// nearest cluster mean so predictions remain well-defined).
+#[derive(Debug, Clone)]
+pub struct RandomPartitioner {
+    pub k: usize,
+    pub seed: u64,
+}
+
+impl Partitioner for RandomPartitioner {
+    fn partition(&self, x: &Matrix, _y: &[f64]) -> Partition {
+        let clusters = random::partition(x.rows(), self.k, self.seed);
+        // Mean of each random cluster for unseen routing.
+        let d = x.cols();
+        let mut means = Matrix::zeros(self.k, d);
+        for (c, cl) in clusters.iter().enumerate() {
+            for &i in cl {
+                let xi = x.row(i);
+                let row = means.row_mut(c);
+                for j in 0..d {
+                    row[j] += xi[j] / cl.len() as f64;
+                }
+            }
+        }
+        Partition {
+            clusters,
+            membership: Membership::Hard(Box::new(move |p| {
+                kmeans::assign(&means, &Matrix::from_vec(1, p.len(), p.to_vec()))[0]
+            })),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check_default, gen_matrix, gen_size, gen_vec};
+
+    fn partitioners(k: usize, seed: u64) -> Vec<Box<dyn Partitioner>> {
+        vec![
+            Box::new(KMeansPartitioner { k, seed }),
+            Box::new(FcmPartitioner { k, overlap: 1.1, seed }),
+            Box::new(GmmPartitioner { seed, ..GmmPartitioner::new(k) }),
+            Box::new(TreePartitioner { leaves: k, min_leaf_size: None }),
+            Box::new(RandomPartitioner { k, seed }),
+        ]
+    }
+
+    #[test]
+    fn all_partitioners_cover_data_prop() {
+        check_default(|rng| {
+            let n = gen_size(rng, 20, 60);
+            let k = gen_size(rng, 2, 4);
+            let x = gen_matrix(rng, n, 2, -3.0, 3.0);
+            let y = gen_vec(rng, n, -1.0, 1.0);
+            for p in partitioners(k, rng.next_u64()) {
+                let part = p.partition(&x, &y);
+                crate::prop_assert!(part.covers(n), "{}: coverage hole", p.name());
+                crate::prop_assert!(part.k() >= 1 && part.k() <= k, "{}: bad k", p.name());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn membership_weights_simplex_prop() {
+        check_default(|rng| {
+            let n = gen_size(rng, 20, 50);
+            let k = 3;
+            let x = gen_matrix(rng, n, 2, -2.0, 2.0);
+            let y = gen_vec(rng, n, -1.0, 1.0);
+            for p in partitioners(k, rng.next_u64()) {
+                let part = p.partition(&x, &y);
+                let probe = gen_vec(rng, 2, -2.0, 2.0);
+                let w = part.membership.weights(&probe, part.k());
+                crate::prop_assert!(w.len() == part.k(), "{}: wrong weight len", p.name());
+                let s: f64 = w.iter().sum();
+                crate::prop_assert!((s - 1.0).abs() < 1e-6, "{}: weights sum {s}", p.name());
+                let r = part.membership.route(&probe);
+                crate::prop_assert!(r < part.k(), "{}: route out of range", p.name());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn hard_partitioners_are_disjoint() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let x = gen_matrix(&mut rng, 50, 2, -2.0, 2.0);
+        let y: Vec<f64> = (0..50).map(|i| x.row(i)[0]).collect();
+        for p in [
+            &KMeansPartitioner { k: 4, seed: 1 } as &dyn Partitioner,
+            &TreePartitioner { leaves: 4, min_leaf_size: None },
+            &RandomPartitioner { k: 4, seed: 1 },
+        ] {
+            let part = p.partition(&x, &y);
+            let total: usize = part.clusters.iter().map(|c| c.len()).sum();
+            assert_eq!(total, 50, "{}: overlapping clusters", p.name());
+        }
+    }
+
+    #[test]
+    fn route_consistent_with_hard_weights() {
+        let mut rng = crate::util::rng::Rng::new(4);
+        let x = gen_matrix(&mut rng, 40, 2, -2.0, 2.0);
+        let y: Vec<f64> = (0..40).map(|i| x.row(i)[1]).collect();
+        let part = KMeansPartitioner { k: 3, seed: 5 }.partition(&x, &y);
+        let probe = [0.3, -0.7];
+        let w = part.membership.weights(&probe, part.k());
+        let r = part.membership.route(&probe);
+        assert_eq!(w[r], 1.0);
+        assert_eq!(w.iter().filter(|&&v| v > 0.0).count(), 1);
+    }
+}

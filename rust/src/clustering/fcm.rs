@@ -1,0 +1,339 @@
+//! Fuzzy C-Means clustering — paper §IV-A2, Eq. 8–9.
+//!
+//! Produces per-point membership coefficients over k clusters (simplex
+//! rows). OWFCK uses the overlap rule from the paper: for each cluster,
+//! the `(n·o)/k` points with the highest membership are assigned, where
+//! `o ∈ [1, 2]` controls overlap (o=1 disjoint-ish, o=2 fully shared).
+
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+use crate::util::stats::sq_dist;
+
+/// Fitted fuzzy C-means model.
+#[derive(Debug, Clone)]
+pub struct FuzzyCMeans {
+    /// k×d cluster centroids.
+    pub centroids: Matrix,
+    /// n×k membership coefficients (rows sum to 1).
+    pub memberships: Matrix,
+    /// Fuzzifier m used for the fit.
+    pub fuzzifier: f64,
+    /// Final value of the Eq. 8 objective.
+    pub objective: f64,
+    pub iterations: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct FcmConfig {
+    pub k: usize,
+    /// Fuzzifier m > 1 (paper sets m = 2).
+    pub fuzzifier: f64,
+    pub max_iters: usize,
+    /// Stop when max |Δmembership| < tol.
+    pub tol: f64,
+    pub seed: u64,
+}
+
+impl FcmConfig {
+    pub fn new(k: usize) -> Self {
+        Self { k, fuzzifier: 2.0, max_iters: 150, tol: 1e-5, seed: 0xFC }
+    }
+}
+
+/// Fit fuzzy C-means on the rows of `x`.
+pub fn fit(x: &Matrix, cfg: &FcmConfig) -> FuzzyCMeans {
+    let (n, d) = x.shape();
+    let k = cfg.k;
+    assert!(k >= 1 && k <= n, "fcm: bad k={k} for n={n}");
+    assert!(cfg.fuzzifier > 1.0, "fuzzifier must be > 1");
+    let mut rng = Rng::new(cfg.seed);
+
+    // Random simplex initialization of memberships.
+    let mut w = Matrix::zeros(n, k);
+    for i in 0..n {
+        let mut row_sum = 0.0;
+        for c in 0..k {
+            let v = rng.uniform() + 1e-9;
+            w[(i, c)] = v;
+            row_sum += v;
+        }
+        for c in 0..k {
+            w[(i, c)] /= row_sum;
+        }
+    }
+
+    let mut centroids = Matrix::zeros(k, d);
+    let m = cfg.fuzzifier;
+    let mut iterations = 0;
+
+    for iter in 0..cfg.max_iters {
+        iterations = iter + 1;
+        // Centroid update: weighted mean with weights w^m (m=2 ⇒ w·w).
+        let wpow = |v: f64| if (m - 2.0).abs() < 1e-12 { v * v } else { v.powf(m) };
+        for c in 0..k {
+            let mut num = vec![0.0; d];
+            let mut den = 0.0;
+            for i in 0..n {
+                let wm = wpow(w[(i, c)]);
+                den += wm;
+                let xi = x.row(i);
+                for j in 0..d {
+                    num[j] += wm * xi[j];
+                }
+            }
+            let row = centroids.row_mut(c);
+            for j in 0..d {
+                row[j] = if den > 0.0 { num[j] / den } else { 0.0 };
+            }
+        }
+
+        // Membership update (Eq. 9).
+        //
+        // For the paper's fuzzifier m=2 the exponent 2/(m−1) = 2, so the
+        // ratio (dᵢ/dⱼ)² equals the ratio of *squared* distances — the
+        // sqrt and powf disappear and the row update becomes
+        // wᵢc = (1/d²ᵢc) / Σⱼ (1/d²ᵢⱼ). This is the fit hot loop (§Perf).
+        let mut max_delta: f64 = 0.0;
+        let fast_m2 = (m - 2.0).abs() < 1e-12;
+        let mut sqd = vec![0.0; k];
+        let mut inv = vec![0.0; k];
+        for i in 0..n {
+            let xi = x.row(i);
+            for c in 0..k {
+                sqd[c] = sq_dist(xi, centroids.row(c));
+            }
+            // Point on a centroid: crisp membership.
+            if let Some(zero) = sqd.iter().position(|&d| d < 1e-24) {
+                for c in 0..k {
+                    let new = if c == zero { 1.0 } else { 0.0 };
+                    max_delta = max_delta.max((w[(i, c)] - new).abs());
+                    w[(i, c)] = new;
+                }
+                continue;
+            }
+            if fast_m2 {
+                let mut total = 0.0;
+                for c in 0..k {
+                    inv[c] = 1.0 / sqd[c];
+                    total += inv[c];
+                }
+                let norm = 1.0 / total;
+                for c in 0..k {
+                    let new = inv[c] * norm;
+                    max_delta = max_delta.max((w[(i, c)] - new).abs());
+                    w[(i, c)] = new;
+                }
+            } else {
+                let exponent = 2.0 / (m - 1.0);
+                for c in 0..k {
+                    let denom: f64 = (0..k)
+                        .map(|cc| (sqd[c] / sqd[cc]).sqrt().powf(exponent))
+                        .sum();
+                    let new = 1.0 / denom;
+                    max_delta = max_delta.max((w[(i, c)] - new).abs());
+                    w[(i, c)] = new;
+                }
+            }
+        }
+
+        if max_delta < cfg.tol {
+            break;
+        }
+    }
+
+    // Eq. 8 objective at the fixed point.
+    let mut objective = 0.0;
+    for i in 0..n {
+        for c in 0..k {
+            let wm = if (m - 2.0).abs() < 1e-12 {
+                w[(i, c)] * w[(i, c)]
+            } else {
+                w[(i, c)].powf(m)
+            };
+            objective += wm * sq_dist(x.row(i), centroids.row(c));
+        }
+    }
+
+    FuzzyCMeans { centroids, memberships: w, fuzzifier: m, objective, iterations }
+}
+
+impl FuzzyCMeans {
+    /// Membership row for an unseen point (Eq. 9 with fitted centroids).
+    pub fn membership_of(&self, xt: &[f64]) -> Vec<f64> {
+        let k = self.centroids.rows();
+        let exponent = 2.0 / (self.fuzzifier - 1.0);
+        let dists: Vec<f64> =
+            (0..k).map(|c| sq_dist(xt, self.centroids.row(c)).sqrt()).collect();
+        if let Some(zero) = dists.iter().position(|&d| d < 1e-12) {
+            let mut out = vec![0.0; k];
+            out[zero] = 1.0;
+            return out;
+        }
+        (0..k)
+            .map(|c| {
+                let denom: f64 =
+                    (0..k).map(|cc| (dists[c] / dists[cc]).powf(exponent)).sum();
+                1.0 / denom
+            })
+            .collect()
+    }
+
+    /// Overlapping cluster assignment (paper §IV-A2): cluster `c` receives
+    /// the `⌈n·o/k⌉` points with the highest membership in `c`. Every
+    /// point is guaranteed to appear in at least one cluster (its argmax).
+    pub fn overlapping_assignment(&self, overlap: f64) -> Vec<Vec<usize>> {
+        assert!((1.0..=2.0).contains(&overlap), "overlap o must be in [1, 2]");
+        let (n, k) = self.memberships.shape();
+        let per_cluster = ((n as f64 * overlap) / k as f64).ceil() as usize;
+        let per_cluster = per_cluster.clamp(1, n);
+        let mut clusters: Vec<Vec<usize>> = Vec::with_capacity(k);
+        for c in 0..k {
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| {
+                self.memberships[(b, c)].partial_cmp(&self.memberships[(a, c)]).unwrap()
+            });
+            idx.truncate(per_cluster);
+            idx.sort_unstable();
+            clusters.push(idx);
+        }
+        // Guarantee coverage: each point joins its argmax cluster if missed.
+        for i in 0..n {
+            let row = self.memberships.row(i);
+            let best = crate::util::stats::argmax(row);
+            if !clusters[best].contains(&i) {
+                clusters[best].push(i);
+            }
+        }
+        for cl in &mut clusters {
+            cl.sort_unstable();
+            cl.dedup();
+        }
+        clusters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check_default, gen_matrix, gen_size};
+
+    fn two_blobs(n_per: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut data = Vec::new();
+        for _ in 0..n_per {
+            data.push(rng.normal_with(0.0, 0.2));
+            data.push(rng.normal_with(0.0, 0.2));
+        }
+        for _ in 0..n_per {
+            data.push(rng.normal_with(8.0, 0.2));
+            data.push(rng.normal_with(8.0, 0.2));
+        }
+        Matrix::from_vec(2 * n_per, 2, data)
+    }
+
+    #[test]
+    fn memberships_form_simplex_prop() {
+        check_default(|rng| {
+            let n = gen_size(rng, 6, 40);
+            let k = gen_size(rng, 1, 4.min(n));
+            let x = gen_matrix(rng, n, 2, -3.0, 3.0);
+            let f = fit(&x, &FcmConfig { seed: rng.next_u64(), ..FcmConfig::new(k) });
+            for i in 0..n {
+                let row_sum: f64 = f.memberships.row(i).iter().sum();
+                crate::prop_assert!((row_sum - 1.0).abs() < 1e-9, "row {i} sums to {row_sum}");
+                crate::prop_assert!(
+                    f.memberships.row(i).iter().all(|&w| (0.0..=1.0 + 1e-12).contains(&w)),
+                    "membership out of range"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn blobs_get_crisp_memberships() {
+        let x = two_blobs(30, 1);
+        let f = fit(&x, &FcmConfig::new(2));
+        // Points deep in blob A should have >0.9 membership in one cluster.
+        let first_cluster = crate::util::stats::argmax(f.memberships.row(0));
+        for i in 0..30 {
+            assert!(
+                f.memberships[(i, first_cluster)] > 0.9,
+                "point {i}: weak membership {}",
+                f.memberships[(i, first_cluster)]
+            );
+        }
+        for i in 30..60 {
+            assert!(f.memberships[(i, first_cluster)] < 0.1);
+        }
+    }
+
+    #[test]
+    fn unseen_membership_matches_training_regions() {
+        let x = two_blobs(25, 2);
+        let f = fit(&x, &FcmConfig::new(2));
+        let at_a = f.membership_of(&[0.0, 0.0]);
+        let at_b = f.membership_of(&[8.0, 8.0]);
+        assert!((at_a.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        // Opposite dominant clusters.
+        assert_ne!(
+            crate::util::stats::argmax(&at_a),
+            crate::util::stats::argmax(&at_b)
+        );
+        assert!(at_a.iter().cloned().fold(0.0, f64::max) > 0.95);
+    }
+
+    #[test]
+    fn centroid_membership_is_crisp() {
+        let x = two_blobs(20, 3);
+        let f = fit(&x, &FcmConfig::new(2));
+        let c0: Vec<f64> = f.centroids.row(0).to_vec();
+        let m = f.membership_of(&c0);
+        assert!((m[0] - 1.0).abs() < 1e-9 || (m[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overlap_sizes_and_coverage_prop() {
+        check_default(|rng| {
+            let n = gen_size(rng, 10, 50);
+            let k = gen_size(rng, 2, 4.min(n));
+            let x = gen_matrix(rng, n, 2, -2.0, 2.0);
+            let f = fit(&x, &FcmConfig { seed: rng.next_u64(), ..FcmConfig::new(k) });
+            let o = 1.0 + rng.uniform();
+            let clusters = f.overlapping_assignment(o);
+            crate::prop_assert!(clusters.len() == k);
+            // Coverage: every point appears somewhere.
+            let mut covered = vec![false; n];
+            for cl in &clusters {
+                for &i in cl {
+                    crate::prop_assert!(i < n);
+                    covered[i] = true;
+                }
+            }
+            crate::prop_assert!(covered.iter().all(|&c| c), "coverage hole");
+            // Base size respects ⌈n·o/k⌉ (before the coverage fix-up).
+            let base = ((n as f64 * o) / k as f64).ceil() as usize;
+            for cl in &clusters {
+                crate::prop_assert!(cl.len() >= base.min(n), "cluster smaller than quota");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn higher_overlap_grows_clusters() {
+        let x = two_blobs(40, 4);
+        let f = fit(&x, &FcmConfig::new(4));
+        let small: usize = f.overlapping_assignment(1.0).iter().map(|c| c.len()).sum();
+        let large: usize = f.overlapping_assignment(1.8).iter().map(|c| c.len()).sum();
+        assert!(large > small, "{large} <= {small}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let x = two_blobs(15, 5);
+        let a = fit(&x, &FcmConfig::new(3));
+        let b = fit(&x, &FcmConfig::new(3));
+        assert_eq!(a.memberships, b.memberships);
+    }
+}

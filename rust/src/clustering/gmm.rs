@@ -1,0 +1,453 @@
+//! Gaussian Mixture Model fitted by Expectation–Maximization.
+//!
+//! The soft-clustering partitioner behind GMMCK (paper §IV-A2). The E-step
+//! responsibilities double as the *membership probabilities* used as
+//! prediction weights in Eq. 13–16. Supports diagonal covariance (the
+//! paper's recommendation for high-dimensional data) and full covariance
+//! (small d), both with log-space responsibilities for stability.
+
+use crate::clustering::kmeans::{self, KMeansConfig};
+use crate::linalg::Cholesky;
+use crate::util::matrix::Matrix;
+use crate::util::stats::log_sum_exp;
+
+const LOG_2PI: f64 = 1.8378770664093453; // ln(2π)
+
+/// Covariance structure per component.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CovarianceType {
+    /// Per-dimension variances only — O(d) storage, robust in high d.
+    Diagonal,
+    /// Full d×d covariance via Cholesky — small d only.
+    Full,
+}
+
+#[derive(Debug, Clone)]
+pub struct GmmConfig {
+    pub k: usize,
+    pub covariance: CovarianceType,
+    pub max_iters: usize,
+    /// EM stops when log-likelihood improves by less than `tol` (absolute).
+    pub tol: f64,
+    /// Variance floor added to covariance diagonals.
+    pub reg_covar: f64,
+    pub seed: u64,
+}
+
+impl GmmConfig {
+    pub fn new(k: usize) -> Self {
+        Self {
+            k,
+            covariance: CovarianceType::Diagonal,
+            max_iters: 100,
+            tol: 1e-6,
+            reg_covar: 1e-6,
+            seed: 0x96,
+        }
+    }
+}
+
+/// One mixture component.
+#[derive(Debug, Clone)]
+struct Component {
+    weight: f64,
+    mean: Vec<f64>,
+    /// Diagonal: variances (len d). Full: row-major d×d covariance.
+    cov: Vec<f64>,
+    /// Full covariance only: cached Cholesky of cov for log-density.
+    chol: Option<Cholesky>,
+}
+
+/// Fitted Gaussian mixture model.
+#[derive(Debug, Clone)]
+pub struct Gmm {
+    components: Vec<Component>,
+    pub covariance: CovarianceType,
+    dim: usize,
+    /// Final mean log-likelihood per point.
+    pub log_likelihood: f64,
+    pub iterations: usize,
+    /// n×k responsibilities from the final E-step.
+    pub responsibilities: Matrix,
+}
+
+/// Fit a GMM with EM, initialized from a k-means run.
+pub fn fit(x: &Matrix, cfg: &GmmConfig) -> Gmm {
+    let (n, d) = x.shape();
+    let k = cfg.k;
+    assert!(k >= 1 && k <= n, "gmm: bad k={k} for n={n}");
+
+    // K-means init: means from centroids, variances from within-cluster
+    // scatter, weights from cluster sizes.
+    let km = kmeans::fit(x, &KMeansConfig { seed: cfg.seed, ..KMeansConfig::new(k) });
+    let mut components = Vec::with_capacity(k);
+    for c in 0..k {
+        let members: Vec<usize> = (0..n).filter(|&i| km.labels[i] == c).collect();
+        let count = members.len().max(1) as f64;
+        let mean: Vec<f64> = km.centroids.row(c).to_vec();
+        let cov = match cfg.covariance {
+            CovarianceType::Diagonal => {
+                let mut var = vec![0.0; d];
+                for &i in &members {
+                    let xi = x.row(i);
+                    for j in 0..d {
+                        let dv = xi[j] - mean[j];
+                        var[j] += dv * dv;
+                    }
+                }
+                var.iter().map(|v| v / count + cfg.reg_covar).collect()
+            }
+            CovarianceType::Full => {
+                let mut cov = vec![0.0; d * d];
+                for &i in &members {
+                    let xi = x.row(i);
+                    for p in 0..d {
+                        for q in 0..d {
+                            cov[p * d + q] += (xi[p] - mean[p]) * (xi[q] - mean[q]);
+                        }
+                    }
+                }
+                for p in 0..d {
+                    for q in 0..d {
+                        cov[p * d + q] /= count;
+                    }
+                    cov[p * d + p] += cfg.reg_covar;
+                }
+                cov
+            }
+        };
+        components.push(Component {
+            weight: members.len().max(1) as f64 / n as f64,
+            mean,
+            cov,
+            chol: None,
+        });
+    }
+    normalize_weights(&mut components);
+    refresh_cholesky(&mut components, cfg.covariance, d);
+
+    let mut log_resp = Matrix::zeros(n, k);
+    let mut prev_ll = f64::NEG_INFINITY;
+    let mut ll = prev_ll;
+    let mut iterations = 0;
+
+    for iter in 0..cfg.max_iters {
+        iterations = iter + 1;
+        // E-step: log responsibilities.
+        let mut total_ll = 0.0;
+        for i in 0..n {
+            let xi = x.row(i);
+            let mut logs = vec![0.0; k];
+            for (c, comp) in components.iter().enumerate() {
+                logs[c] = comp.weight.max(1e-300).ln()
+                    + log_density(comp, cfg.covariance, xi);
+            }
+            let norm = log_sum_exp(&logs);
+            total_ll += norm;
+            for c in 0..k {
+                log_resp[(i, c)] = logs[c] - norm;
+            }
+        }
+        ll = total_ll / n as f64;
+
+        // M-step.
+        for (c, comp) in components.iter_mut().enumerate() {
+            let resp: Vec<f64> = (0..n).map(|i| log_resp[(i, c)].exp()).collect();
+            let nk: f64 = resp.iter().sum::<f64>().max(1e-10);
+            comp.weight = nk / n as f64;
+            for j in 0..d {
+                comp.mean[j] = (0..n).map(|i| resp[i] * x[(i, j)]).sum::<f64>() / nk;
+            }
+            match cfg.covariance {
+                CovarianceType::Diagonal => {
+                    for j in 0..d {
+                        let var: f64 = (0..n)
+                            .map(|i| {
+                                let dv = x[(i, j)] - comp.mean[j];
+                                resp[i] * dv * dv
+                            })
+                            .sum::<f64>()
+                            / nk;
+                        comp.cov[j] = var + cfg.reg_covar;
+                    }
+                }
+                CovarianceType::Full => {
+                    for v in comp.cov.iter_mut() {
+                        *v = 0.0;
+                    }
+                    for i in 0..n {
+                        let xi = x.row(i);
+                        let r = resp[i];
+                        if r < 1e-14 {
+                            continue;
+                        }
+                        for p in 0..d {
+                            let dp = xi[p] - comp.mean[p];
+                            for q in 0..d {
+                                comp.cov[p * d + q] += r * dp * (xi[q] - comp.mean[q]);
+                            }
+                        }
+                    }
+                    for p in 0..d {
+                        for q in 0..d {
+                            comp.cov[p * d + q] /= nk;
+                        }
+                        comp.cov[p * d + p] += cfg.reg_covar;
+                    }
+                }
+            }
+        }
+        normalize_weights(&mut components);
+        refresh_cholesky(&mut components, cfg.covariance, d);
+
+        if (ll - prev_ll).abs() < cfg.tol {
+            break;
+        }
+        prev_ll = ll;
+    }
+
+    // Final responsibilities in linear space.
+    let mut responsibilities = Matrix::zeros(n, k);
+    for i in 0..n {
+        for c in 0..k {
+            responsibilities[(i, c)] = log_resp[(i, c)].exp();
+        }
+    }
+
+    Gmm {
+        components,
+        covariance: cfg.covariance,
+        dim: d,
+        log_likelihood: ll,
+        iterations,
+        responsibilities,
+    }
+}
+
+fn normalize_weights(components: &mut [Component]) {
+    let total: f64 = components.iter().map(|c| c.weight).sum();
+    for c in components.iter_mut() {
+        c.weight /= total;
+    }
+}
+
+fn refresh_cholesky(components: &mut [Component], cov_type: CovarianceType, d: usize) {
+    if cov_type != CovarianceType::Full {
+        return;
+    }
+    for comp in components.iter_mut() {
+        let m = Matrix::from_vec(d, d, comp.cov.clone());
+        comp.chol = Some(
+            Cholesky::new_regularized(&m).expect("regularized covariance must factor"),
+        );
+    }
+}
+
+/// Log multivariate normal density of `x` under one component.
+fn log_density(comp: &Component, cov_type: CovarianceType, x: &[f64]) -> f64 {
+    let d = comp.mean.len();
+    match cov_type {
+        CovarianceType::Diagonal => {
+            let mut maha = 0.0;
+            let mut log_det = 0.0;
+            for j in 0..d {
+                let var = comp.cov[j];
+                let dv = x[j] - comp.mean[j];
+                maha += dv * dv / var;
+                log_det += var.ln();
+            }
+            -0.5 * (d as f64 * LOG_2PI + log_det + maha)
+        }
+        CovarianceType::Full => {
+            let chol = comp.chol.as_ref().expect("cholesky not refreshed");
+            let diff: Vec<f64> = (0..d).map(|j| x[j] - comp.mean[j]).collect();
+            let maha = chol.quad_form(&diff);
+            -0.5 * (d as f64 * LOG_2PI + chol.log_det() + maha)
+        }
+    }
+}
+
+impl Gmm {
+    pub fn k(&self) -> usize {
+        self.components.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn weights(&self) -> Vec<f64> {
+        self.components.iter().map(|c| c.weight).collect()
+    }
+
+    pub fn mean(&self, c: usize) -> &[f64] {
+        &self.components[c].mean
+    }
+
+    /// Posterior membership probabilities Pr(C = l | x) for an unseen
+    /// point — the Eq. 13 weights.
+    pub fn membership_of(&self, x: &[f64]) -> Vec<f64> {
+        let k = self.k();
+        let mut logs = vec![0.0; k];
+        for (c, comp) in self.components.iter().enumerate() {
+            logs[c] = comp.weight.max(1e-300).ln() + log_density(comp, self.covariance, x);
+        }
+        let norm = log_sum_exp(&logs);
+        logs.iter().map(|l| (l - norm).exp()).collect()
+    }
+
+    /// Hard label: argmax responsibility.
+    pub fn predict(&self, x: &[f64]) -> usize {
+        crate::util::stats::argmax(&self.membership_of(x))
+    }
+
+    /// Overlapping assignment mirroring the FCM rule (paper §IV-A2): each
+    /// cluster takes its top `⌈n·o/k⌉` points by responsibility, plus
+    /// argmax coverage.
+    pub fn overlapping_assignment(&self, overlap: f64) -> Vec<Vec<usize>> {
+        assert!((1.0..=2.0).contains(&overlap), "overlap o must be in [1, 2]");
+        let (n, k) = self.responsibilities.shape();
+        let per_cluster = (((n as f64) * overlap) / k as f64).ceil() as usize;
+        let per_cluster = per_cluster.clamp(1, n);
+        let mut clusters = Vec::with_capacity(k);
+        for c in 0..k {
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| {
+                self.responsibilities[(b, c)]
+                    .partial_cmp(&self.responsibilities[(a, c)])
+                    .unwrap()
+            });
+            idx.truncate(per_cluster);
+            clusters.push(idx);
+        }
+        for i in 0..n {
+            let best = crate::util::stats::argmax(self.responsibilities.row(i));
+            if !clusters[best].contains(&i) {
+                clusters[best].push(i);
+            }
+        }
+        for cl in &mut clusters {
+            cl.sort_unstable();
+            cl.dedup();
+        }
+        clusters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check_default, gen_matrix, gen_size};
+    use crate::util::rng::Rng;
+
+    fn blobs(seed: u64, n_per: usize, centers: &[(f64, f64)], sd: f64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut data = Vec::new();
+        for &(cx, cy) in centers {
+            for _ in 0..n_per {
+                data.push(rng.normal_with(cx, sd));
+                data.push(rng.normal_with(cy, sd));
+            }
+        }
+        Matrix::from_vec(centers.len() * n_per, 2, data)
+    }
+
+    #[test]
+    fn recovers_two_blobs_diagonal() {
+        let x = blobs(1, 60, &[(0.0, 0.0), (10.0, 10.0)], 0.5);
+        let g = fit(&x, &GmmConfig::new(2));
+        // Means near the true centers (order unknown).
+        let m0 = g.mean(0)[0];
+        let near_zero = m0.abs() < 1.0;
+        let (a, b) = if near_zero { (0, 1) } else { (1, 0) };
+        assert!(g.mean(a)[0].abs() < 1.0 && g.mean(a)[1].abs() < 1.0);
+        assert!((g.mean(b)[0] - 10.0).abs() < 1.0);
+        // Balanced weights.
+        assert!((g.weights()[0] - 0.5).abs() < 0.1);
+    }
+
+    #[test]
+    fn full_covariance_handles_correlated_blob() {
+        // Single anisotropic correlated cluster: full-cov log-likelihood
+        // should beat diagonal.
+        let mut rng = Rng::new(2);
+        let mut data = Vec::new();
+        for _ in 0..200 {
+            let t = rng.normal();
+            let noise = rng.normal_with(0.0, 0.1);
+            data.push(t);
+            data.push(t + noise); // strongly correlated dims
+        }
+        let x = Matrix::from_vec(200, 2, data);
+        let diag = fit(&x, &GmmConfig { covariance: CovarianceType::Diagonal, ..GmmConfig::new(1) });
+        let full = fit(&x, &GmmConfig { covariance: CovarianceType::Full, ..GmmConfig::new(1) });
+        assert!(
+            full.log_likelihood > diag.log_likelihood + 0.3,
+            "full {} vs diag {}",
+            full.log_likelihood,
+            diag.log_likelihood
+        );
+    }
+
+    #[test]
+    fn responsibilities_simplex_prop() {
+        check_default(|rng| {
+            let n = gen_size(rng, 8, 40);
+            let k = gen_size(rng, 1, 3.min(n));
+            let x = gen_matrix(rng, n, 2, -4.0, 4.0);
+            for cov in [CovarianceType::Diagonal, CovarianceType::Full] {
+                let g = fit(
+                    &x,
+                    &GmmConfig { covariance: cov, seed: rng.next_u64(), ..GmmConfig::new(k) },
+                );
+                for i in 0..n {
+                    let s: f64 = g.responsibilities.row(i).iter().sum();
+                    crate::prop_assert!((s - 1.0).abs() < 1e-6, "resp row {i} sums {s}");
+                }
+                let m = g.membership_of(x.row(0));
+                let s: f64 = m.iter().sum();
+                crate::prop_assert!((s - 1.0).abs() < 1e-9, "membership sums {s}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn em_increases_likelihood() {
+        let x = blobs(3, 50, &[(0.0, 0.0), (5.0, 5.0), (-5.0, 5.0)], 0.6);
+        let short = fit(&x, &GmmConfig { max_iters: 1, ..GmmConfig::new(3) });
+        let long = fit(&x, &GmmConfig { max_iters: 50, ..GmmConfig::new(3) });
+        assert!(long.log_likelihood >= short.log_likelihood - 1e-9);
+    }
+
+    #[test]
+    fn membership_of_far_point_prefers_nearest_component() {
+        let x = blobs(4, 40, &[(0.0, 0.0), (10.0, 0.0)], 0.4);
+        let g = fit(&x, &GmmConfig::new(2));
+        let m = g.membership_of(&[-1.0, 0.0]);
+        let near_label = g.predict(&[0.0, 0.0]);
+        assert!(m[near_label] > 0.99);
+    }
+
+    #[test]
+    fn overlapping_assignment_covers_all_points() {
+        let x = blobs(5, 30, &[(0.0, 0.0), (6.0, 6.0)], 0.5);
+        let g = fit(&x, &GmmConfig::new(2));
+        let clusters = g.overlapping_assignment(1.1);
+        let mut covered = vec![false; 60];
+        for cl in &clusters {
+            for &i in cl {
+                covered[i] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let x = blobs(6, 20, &[(0.0, 0.0), (4.0, 4.0)], 0.5);
+        let a = fit(&x, &GmmConfig::new(2));
+        let b = fit(&x, &GmmConfig::new(2));
+        assert_eq!(a.responsibilities, b.responsibilities);
+    }
+}

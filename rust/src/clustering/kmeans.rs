@@ -1,0 +1,275 @@
+//! K-means clustering (Lloyd's algorithm with k-means++ seeding).
+//!
+//! The hard-clustering partitioner behind OWCK (paper §IV-A1, Eq. 7).
+//! Complexity O(nkd) per iteration as the paper states.
+
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+use crate::util::stats::sq_dist;
+
+/// Result of a k-means run.
+#[derive(Debug, Clone)]
+pub struct KMeans {
+    /// k×d centroid matrix.
+    pub centroids: Matrix,
+    /// Cluster label per input row.
+    pub labels: Vec<usize>,
+    /// Final within-cluster sum of squares (Eq. 7 objective).
+    pub inertia: f64,
+    /// Lloyd iterations executed.
+    pub iterations: usize,
+}
+
+/// Configuration for [`fit`].
+#[derive(Debug, Clone)]
+pub struct KMeansConfig {
+    pub k: usize,
+    pub max_iters: usize,
+    /// Relative inertia improvement below which iteration stops.
+    pub tol: f64,
+    /// Independent restarts; the run with the lowest inertia wins.
+    pub n_init: usize,
+    pub seed: u64,
+}
+
+impl KMeansConfig {
+    pub fn new(k: usize) -> Self {
+        Self { k, max_iters: 100, tol: 1e-7, n_init: 3, seed: 0xC1 }
+    }
+}
+
+/// Fit k-means on the rows of `x`.
+///
+/// Panics if `k == 0` or `k > n`.
+pub fn fit(x: &Matrix, cfg: &KMeansConfig) -> KMeans {
+    let n = x.rows();
+    assert!(cfg.k >= 1, "k must be >= 1");
+    assert!(cfg.k <= n, "k ({}) > n ({n})", cfg.k);
+    let mut rng = Rng::new(cfg.seed);
+    let mut best: Option<KMeans> = None;
+    for _ in 0..cfg.n_init.max(1) {
+        let run = lloyd(x, cfg, &mut rng);
+        if best.as_ref().map(|b| run.inertia < b.inertia).unwrap_or(true) {
+            best = Some(run);
+        }
+    }
+    best.unwrap()
+}
+
+fn lloyd(x: &Matrix, cfg: &KMeansConfig, rng: &mut Rng) -> KMeans {
+    let (n, d) = x.shape();
+    let k = cfg.k;
+    let mut centroids = plus_plus_init(x, k, rng);
+    let mut labels = vec![0usize; n];
+    let mut inertia = f64::INFINITY;
+    let mut iterations = 0;
+
+    for iter in 0..cfg.max_iters {
+        iterations = iter + 1;
+        // Assignment step.
+        let mut new_inertia = 0.0;
+        for i in 0..n {
+            let xi = x.row(i);
+            let mut best_c = 0;
+            let mut best_d = f64::INFINITY;
+            for c in 0..k {
+                let dist = sq_dist(xi, centroids.row(c));
+                if dist < best_d {
+                    best_d = dist;
+                    best_c = c;
+                }
+            }
+            labels[i] = best_c;
+            new_inertia += best_d;
+        }
+
+        // Update step.
+        let mut sums = Matrix::zeros(k, d);
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let c = labels[i];
+            counts[c] += 1;
+            let row = sums.row_mut(c);
+            let xi = x.row(i);
+            for j in 0..d {
+                row[j] += xi[j];
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Empty cluster: re-seed at the point farthest from its
+                // centroid (standard k-means repair).
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        let da = sq_dist(x.row(a), centroids.row(labels[a]));
+                        let db = sq_dist(x.row(b), centroids.row(labels[b]));
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                centroids.row_mut(c).copy_from_slice(x.row(far));
+                labels[far] = c;
+            } else {
+                let row = sums.row(c);
+                let cnt = counts[c] as f64;
+                for j in 0..d {
+                    centroids[(c, j)] = row[j] / cnt;
+                }
+            }
+        }
+
+        // Convergence on relative inertia improvement.
+        if inertia.is_finite() && (inertia - new_inertia) <= cfg.tol * inertia.max(1e-300) {
+            inertia = new_inertia;
+            break;
+        }
+        inertia = new_inertia;
+    }
+
+    KMeans { centroids, labels, inertia, iterations }
+}
+
+/// k-means++ seeding (Arthur & Vassilvitskii 2007): spread initial
+/// centroids proportional to squared distance from the chosen set.
+fn plus_plus_init(x: &Matrix, k: usize, rng: &mut Rng) -> Matrix {
+    let (n, d) = x.shape();
+    let mut centroids = Matrix::zeros(k, d);
+    let first = rng.below(n);
+    centroids.row_mut(0).copy_from_slice(x.row(first));
+    let mut min_d: Vec<f64> = (0..n).map(|i| sq_dist(x.row(i), centroids.row(0))).collect();
+    for c in 1..k {
+        let total: f64 = min_d.iter().sum();
+        let pick = if total > 0.0 {
+            rng.weighted_index(&min_d)
+        } else {
+            rng.below(n) // all points coincide with chosen centroids
+        };
+        centroids.row_mut(c).copy_from_slice(x.row(pick));
+        for i in 0..n {
+            let dist = sq_dist(x.row(i), centroids.row(c));
+            if dist < min_d[i] {
+                min_d[i] = dist;
+            }
+        }
+    }
+    centroids
+}
+
+/// Predict nearest-centroid labels for new points.
+pub fn assign(centroids: &Matrix, xt: &Matrix) -> Vec<usize> {
+    assert_eq!(centroids.cols(), xt.cols(), "assign: dim mismatch");
+    (0..xt.rows())
+        .map(|i| {
+            let row = xt.row(i);
+            let mut best = 0;
+            let mut best_d = f64::INFINITY;
+            for c in 0..centroids.rows() {
+                let dist = sq_dist(row, centroids.row(c));
+                if dist < best_d {
+                    best_d = dist;
+                    best = c;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check_default, gen_matrix, gen_size};
+
+    /// Two well-separated blobs → k=2 recovers them exactly.
+    #[test]
+    fn separates_two_blobs() {
+        let mut rng = Rng::new(1);
+        let mut rows = Vec::new();
+        for _ in 0..50 {
+            rows.push([rng.normal_with(0.0, 0.1), rng.normal_with(0.0, 0.1)]);
+        }
+        for _ in 0..50 {
+            rows.push([rng.normal_with(10.0, 0.1), rng.normal_with(10.0, 0.1)]);
+        }
+        let x = Matrix::from_vec(100, 2, rows.iter().flatten().copied().collect());
+        let km = fit(&x, &KMeansConfig::new(2));
+        let first = km.labels[0];
+        assert!(km.labels[..50].iter().all(|&l| l == first));
+        assert!(km.labels[50..].iter().all(|&l| l != first));
+        assert!(km.inertia < 10.0);
+    }
+
+    #[test]
+    fn k_equals_n_gives_zero_inertia() {
+        let mut rng = Rng::new(2);
+        let x = gen_matrix(&mut rng, 8, 2, -1.0, 1.0);
+        let km = fit(&x, &KMeansConfig::new(8));
+        assert!(km.inertia < 1e-12);
+        let mut ls = km.labels.clone();
+        ls.sort_unstable();
+        assert_eq!(ls, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn k_one_centroid_is_mean() {
+        let x = Matrix::from_rows(&[&[0.0, 0.0], &[2.0, 4.0]]);
+        let km = fit(&x, &KMeansConfig::new(1));
+        assert!((km.centroids[(0, 0)] - 1.0).abs() < 1e-12);
+        assert!((km.centroids[(0, 1)] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn labels_valid_and_clusters_nonempty_prop() {
+        check_default(|rng| {
+            let n = gen_size(rng, 10, 60);
+            let k = gen_size(rng, 1, 5.min(n));
+            let x = gen_matrix(rng, n, 3, -5.0, 5.0);
+            let km = fit(&x, &KMeansConfig { seed: rng.next_u64(), ..KMeansConfig::new(k) });
+            crate::prop_assert!(km.labels.len() == n);
+            crate::prop_assert!(km.labels.iter().all(|&l| l < k), "label out of range");
+            for c in 0..k {
+                crate::prop_assert!(
+                    km.labels.iter().any(|&l| l == c),
+                    "empty cluster {c} (n={n}, k={k})"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn inertia_not_worse_than_random_assignment_prop() {
+        check_default(|rng| {
+            let n = gen_size(rng, 12, 50);
+            let k = 3.min(n);
+            let x = gen_matrix(rng, n, 2, -3.0, 3.0);
+            let km = fit(&x, &KMeansConfig::new(k));
+            // Compare against centroid = global mean (k=1 upper bound).
+            let km1 = fit(&x, &KMeansConfig::new(1));
+            crate::prop_assert!(
+                km.inertia <= km1.inertia + 1e-9,
+                "k={k} inertia worse than k=1"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn assign_matches_training_labels() {
+        let mut rng = Rng::new(3);
+        let x = gen_matrix(&mut rng, 40, 2, -2.0, 2.0);
+        let km = fit(&x, &KMeansConfig::new(4));
+        let re = assign(&km.centroids, &x);
+        // After convergence, re-assignment must agree with stored labels.
+        assert_eq!(re, km.labels);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Rng::new(4);
+        let x = gen_matrix(&mut rng, 30, 2, -1.0, 1.0);
+        let a = fit(&x, &KMeansConfig::new(3));
+        let b = fit(&x, &KMeansConfig::new(3));
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.inertia, b.inertia);
+    }
+}

@@ -1,0 +1,13 @@
+//! Data-partitioning substrates for Cluster Kriging (paper §IV-A).
+//!
+//! Three families, matching the paper:
+//! * hard clustering — [`kmeans`] (OWCK);
+//! * soft clustering with overlap — [`fcm`] (OWFCK) and [`gmm`] (GMMCK);
+//! * objective-space partitioning — [`regression_tree`] (MTCK);
+//! plus the trivial [`random`] partitioner used as an ablation baseline.
+
+pub mod fcm;
+pub mod gmm;
+pub mod kmeans;
+pub mod random;
+pub mod regression_tree;

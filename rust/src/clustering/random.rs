@@ -1,0 +1,56 @@
+//! Random partitioner — the simplest clustering mentioned in §IV-A.
+//!
+//! Shuffles row indices and deals them into k nearly equal clusters. Used
+//! as an ablation baseline to quantify how much the *informed*
+//! partitioners (k-means/FCM/GMM/tree) actually contribute.
+
+use crate::util::rng::Rng;
+
+/// Split `0..n` into `k` random clusters of near-equal size
+/// (sizes differ by at most one).
+pub fn partition(n: usize, k: usize, seed: u64) -> Vec<Vec<usize>> {
+    assert!(k >= 1 && k <= n, "random partition: bad k={k} for n={n}");
+    let mut idx: Vec<usize> = (0..n).collect();
+    Rng::new(seed).shuffle(&mut idx);
+    let mut clusters: Vec<Vec<usize>> = vec![Vec::with_capacity(n / k + 1); k];
+    for (pos, i) in idx.into_iter().enumerate() {
+        clusters[pos % k].push(i);
+    }
+    for cl in &mut clusters {
+        cl.sort_unstable();
+    }
+    clusters
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check_default, gen_size};
+
+    #[test]
+    fn partition_complete_disjoint_balanced_prop() {
+        check_default(|rng| {
+            let n = gen_size(rng, 5, 200);
+            let k = gen_size(rng, 1, n.min(8));
+            let clusters = partition(n, k, rng.next_u64());
+            crate::prop_assert!(clusters.len() == k);
+            let mut seen = vec![0usize; n];
+            for cl in &clusters {
+                for &i in cl {
+                    seen[i] += 1;
+                }
+            }
+            crate::prop_assert!(seen.iter().all(|&s| s == 1), "not a partition");
+            let sizes: Vec<usize> = clusters.iter().map(|c| c.len()).collect();
+            let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            crate::prop_assert!(hi - lo <= 1, "unbalanced: {sizes:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        assert_eq!(partition(50, 4, 9), partition(50, 4, 9));
+        assert_ne!(partition(50, 4, 9), partition(50, 4, 10));
+    }
+}

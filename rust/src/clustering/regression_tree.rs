@@ -1,0 +1,370 @@
+//! Regression tree partitioner — paper §IV-A3 and the MTCK model tree.
+//!
+//! A CART-style tree grown with the *variance reduction* criterion on the
+//! target variable. Leaves define the partition: each leaf's training
+//! records become one Kriging cluster, and unseen points are routed down
+//! the tree to pick the single model used for prediction (§IV-C3).
+//!
+//! Cluster count control (paper §V): `min_leaf_size` bounds records per
+//! leaf; `max_leaves` optionally caps the number of leaves — splits are
+//! applied best-first by variance reduction so the cap keeps the most
+//! valuable splits.
+
+use crate::util::matrix::Matrix;
+
+/// Tree node: internal split or leaf with a cluster id.
+#[derive(Debug, Clone)]
+enum Node {
+    Split { feature: usize, threshold: f64, left: usize, right: usize },
+    Leaf { cluster: usize, mean: f64 },
+}
+
+#[derive(Debug, Clone)]
+pub struct TreeConfig {
+    /// Minimum records in a leaf (paper recommends 100–1000 for Kriging;
+    /// MTCK tolerates smaller because leaf variance is low).
+    pub min_leaf_size: usize,
+    /// Optional cap on the number of leaves (= clusters).
+    pub max_leaves: Option<usize>,
+    /// Minimum total-variance reduction for a split to be considered.
+    pub min_reduction: f64,
+}
+
+impl TreeConfig {
+    pub fn new(min_leaf_size: usize) -> Self {
+        Self { min_leaf_size: min_leaf_size.max(1), max_leaves: None, min_reduction: 0.0 }
+    }
+
+    /// Target approximately `leaves` leaves on an n-record set.
+    pub fn with_max_leaves(n: usize, leaves: usize) -> Self {
+        let leaves = leaves.max(1);
+        Self {
+            min_leaf_size: (n / (leaves * 2)).max(1),
+            max_leaves: Some(leaves),
+            min_reduction: 0.0,
+        }
+    }
+}
+
+/// A fitted regression-tree partition.
+#[derive(Debug, Clone)]
+pub struct RegressionTree {
+    nodes: Vec<Node>,
+    /// Training row indices per leaf cluster.
+    pub clusters: Vec<Vec<usize>>,
+}
+
+/// Candidate split found for a node.
+struct BestSplit {
+    feature: usize,
+    threshold: f64,
+    reduction: f64,
+    left: Vec<usize>,
+    right: Vec<usize>,
+}
+
+/// Grow the tree best-first on `(x, y)`.
+pub fn fit(x: &Matrix, y: &[f64], cfg: &TreeConfig) -> RegressionTree {
+    let n = x.rows();
+    assert_eq!(n, y.len(), "tree: x/y length mismatch");
+    assert!(n > 0, "tree: empty data");
+
+    // Frontier of expandable leaves: (node index, row indices, best split).
+    let mut nodes: Vec<Node> = vec![Node::Leaf { cluster: usize::MAX, mean: 0.0 }];
+    let mut frontier: Vec<(usize, Vec<usize>)> = vec![(0, (0..n).collect())];
+    let mut leaf_rows: Vec<(usize, Vec<usize>)> = Vec::new(); // finalized leaves
+    let mut n_leaves = 1usize;
+
+    // Best-first growth: repeatedly split the frontier leaf with the
+    // largest variance reduction until no split is admissible or the leaf
+    // cap is reached.
+    loop {
+        // Find the best admissible split across the frontier.
+        let mut best: Option<(usize, BestSplit)> = None; // (frontier idx, split)
+        for (fi, (_, rows)) in frontier.iter().enumerate() {
+            if let Some(split) = best_split(x, y, rows, cfg) {
+                let better = best
+                    .as_ref()
+                    .map(|(_, b)| split.reduction > b.reduction)
+                    .unwrap_or(true);
+                if better {
+                    best = Some((fi, split));
+                }
+            }
+        }
+        let at_cap = cfg.max_leaves.map(|cap| n_leaves >= cap).unwrap_or(false);
+        match best {
+            Some((fi, split)) if !at_cap => {
+                let (node_idx, _) = frontier.swap_remove(fi);
+                let left_idx = nodes.len();
+                nodes.push(Node::Leaf { cluster: usize::MAX, mean: 0.0 });
+                let right_idx = nodes.len();
+                nodes.push(Node::Leaf { cluster: usize::MAX, mean: 0.0 });
+                nodes[node_idx] = Node::Split {
+                    feature: split.feature,
+                    threshold: split.threshold,
+                    left: left_idx,
+                    right: right_idx,
+                };
+                frontier.push((left_idx, split.left));
+                frontier.push((right_idx, split.right));
+                n_leaves += 1;
+            }
+            _ => break,
+        }
+    }
+    leaf_rows.extend(frontier);
+
+    // Assign cluster ids to leaves in a stable order (node index).
+    leaf_rows.sort_by_key(|(idx, _)| *idx);
+    let mut clusters = Vec::with_capacity(leaf_rows.len());
+    for (cluster_id, (node_idx, rows)) in leaf_rows.into_iter().enumerate() {
+        let mean = rows.iter().map(|&i| y[i]).sum::<f64>() / rows.len() as f64;
+        nodes[node_idx] = Node::Leaf { cluster: cluster_id, mean };
+        clusters.push(rows);
+    }
+
+    RegressionTree { nodes, clusters }
+}
+
+/// Exhaustive best split of `rows` by variance reduction.
+fn best_split(x: &Matrix, y: &[f64], rows: &[usize], cfg: &TreeConfig) -> Option<BestSplit> {
+    let m = rows.len();
+    if m < 2 * cfg.min_leaf_size {
+        return None;
+    }
+    let total_sum: f64 = rows.iter().map(|&i| y[i]).sum();
+    let total_sq: f64 = rows.iter().map(|&i| y[i] * y[i]).sum();
+    let parent_sse = total_sq - total_sum * total_sum / m as f64;
+    if parent_sse <= 1e-12 {
+        return None; // already pure
+    }
+
+    let d = x.cols();
+    let mut best: Option<(usize, f64, f64, usize)> = None; // feature, thr, reduction, left count
+
+    // Sort row indices by each feature and scan split positions.
+    let mut order: Vec<usize> = rows.to_vec();
+    for feature in 0..d {
+        order.sort_by(|&a, &b| {
+            x[(a, feature)].partial_cmp(&x[(b, feature)]).unwrap()
+        });
+        let mut left_sum = 0.0;
+        let mut left_sq = 0.0;
+        for pos in 0..m - 1 {
+            let yi = y[order[pos]];
+            left_sum += yi;
+            left_sq += yi * yi;
+            let nl = pos + 1;
+            let nr = m - nl;
+            if nl < cfg.min_leaf_size || nr < cfg.min_leaf_size {
+                continue;
+            }
+            let xv = x[(order[pos], feature)];
+            let xn = x[(order[pos + 1], feature)];
+            if xn - xv <= 1e-15 {
+                continue; // can't split between identical values
+            }
+            let right_sum = total_sum - left_sum;
+            let right_sq = total_sq - left_sq;
+            let left_sse = left_sq - left_sum * left_sum / nl as f64;
+            let right_sse = right_sq - right_sum * right_sum / nr as f64;
+            let reduction = parent_sse - left_sse - right_sse;
+            if reduction > cfg.min_reduction
+                && best.map(|(_, _, r, _)| reduction > r).unwrap_or(true)
+            {
+                best = Some((feature, 0.5 * (xv + xn), reduction, nl));
+            }
+        }
+    }
+
+    best.map(|(feature, threshold, reduction, _)| {
+        let mut left = Vec::new();
+        let mut right = Vec::new();
+        for &i in rows {
+            if x[(i, feature)] <= threshold {
+                left.push(i);
+            } else {
+                right.push(i);
+            }
+        }
+        BestSplit { feature, threshold, reduction, left, right }
+    })
+}
+
+impl RegressionTree {
+    /// Number of leaf clusters.
+    pub fn n_leaves(&self) -> usize {
+        self.clusters.len()
+    }
+
+    /// Route a point to its leaf cluster id.
+    pub fn route(&self, x: &[f64]) -> usize {
+        let mut idx = 0;
+        loop {
+            match &self.nodes[idx] {
+                Node::Split { feature, threshold, left, right } => {
+                    idx = if x[*feature] <= *threshold { *left } else { *right };
+                }
+                Node::Leaf { cluster, .. } => return *cluster,
+            }
+        }
+    }
+
+    /// Plain regression-tree prediction (leaf mean) — the baseline CART
+    /// predictor; MTCK replaces this with the leaf's Kriging model.
+    pub fn predict_mean(&self, x: &[f64]) -> f64 {
+        let mut idx = 0;
+        loop {
+            match &self.nodes[idx] {
+                Node::Split { feature, threshold, left, right } => {
+                    idx = if x[*feature] <= *threshold { *left } else { *right };
+                }
+                Node::Leaf { mean, .. } => return *mean,
+            }
+        }
+    }
+
+    /// Tree depth (diagnostics).
+    pub fn depth(&self) -> usize {
+        fn rec(nodes: &[Node], idx: usize) -> usize {
+            match &nodes[idx] {
+                Node::Leaf { .. } => 1,
+                Node::Split { left, right, .. } => 1 + rec(nodes, *left).max(rec(nodes, *right)),
+            }
+        }
+        rec(&self.nodes, 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check_default, gen_matrix, gen_size, gen_vec};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn step_function_found_exactly() {
+        // y = 0 for x<0.5, 10 for x>=0.5 → one split at ~0.5.
+        let n = 100;
+        let mut data = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..n {
+            let v = i as f64 / n as f64;
+            data.push(v);
+            y.push(if v < 0.5 { 0.0 } else { 10.0 });
+        }
+        let x = Matrix::from_vec(n, 1, data);
+        let t = fit(&x, &y, &TreeConfig::new(5));
+        assert_eq!(t.n_leaves(), 2);
+        assert_eq!(t.predict_mean(&[0.2]), 0.0);
+        assert_eq!(t.predict_mean(&[0.8]), 10.0);
+        assert_ne!(t.route(&[0.2]), t.route(&[0.8]));
+    }
+
+    #[test]
+    fn partition_is_complete_and_disjoint_prop() {
+        check_default(|rng| {
+            let n = gen_size(rng, 20, 120);
+            let x = gen_matrix(rng, n, 3, -2.0, 2.0);
+            let y = gen_vec(rng, n, -5.0, 5.0);
+            let t = fit(&x, &y, &TreeConfig::new(gen_size(rng, 2, 10)));
+            let mut seen = vec![0usize; n];
+            for cl in &t.clusters {
+                for &i in cl {
+                    seen[i] += 1;
+                }
+            }
+            crate::prop_assert!(
+                seen.iter().all(|&s| s == 1),
+                "partition not exact: {seen:?}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn routing_consistent_with_training_partition_prop() {
+        check_default(|rng| {
+            let n = gen_size(rng, 20, 80);
+            let x = gen_matrix(rng, n, 2, -3.0, 3.0);
+            let y: Vec<f64> = (0..n).map(|i| x.row(i)[0] * 2.0 + x.row(i)[1]).collect();
+            let t = fit(&x, &y, &TreeConfig::new(4));
+            for (cid, cl) in t.clusters.iter().enumerate() {
+                for &i in cl {
+                    crate::prop_assert!(
+                        t.route(x.row(i)) == cid,
+                        "row {i} routed to {} but belongs to {cid}",
+                        t.route(x.row(i))
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn min_leaf_size_respected_prop() {
+        check_default(|rng| {
+            let n = gen_size(rng, 30, 100);
+            let min_leaf = gen_size(rng, 3, 12);
+            let x = gen_matrix(rng, n, 2, -1.0, 1.0);
+            let y = gen_vec(rng, n, 0.0, 1.0);
+            let t = fit(&x, &y, &TreeConfig::new(min_leaf));
+            for cl in &t.clusters {
+                crate::prop_assert!(
+                    cl.len() >= min_leaf,
+                    "leaf of {} < min {min_leaf}",
+                    cl.len()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn max_leaves_cap_respected() {
+        let mut rng = Rng::new(7);
+        let x = gen_matrix(&mut rng, 200, 2, -2.0, 2.0);
+        let y: Vec<f64> = (0..200).map(|i| x.row(i)[0].sin() * 5.0).collect();
+        for cap in [2, 4, 8] {
+            let t = fit(&x, &y, &TreeConfig::with_max_leaves(200, cap));
+            assert!(t.n_leaves() <= cap, "cap {cap}: got {}", t.n_leaves());
+            assert!(t.n_leaves() >= cap.min(2), "cap {cap}: degenerate tree");
+        }
+    }
+
+    #[test]
+    fn pure_target_yields_single_leaf() {
+        let mut rng = Rng::new(8);
+        let x = gen_matrix(&mut rng, 50, 2, -1.0, 1.0);
+        let y = vec![3.0; 50];
+        let t = fit(&x, &y, &TreeConfig::new(2));
+        assert_eq!(t.n_leaves(), 1);
+        assert_eq!(t.predict_mean(&[0.0, 0.0]), 3.0);
+    }
+
+    #[test]
+    fn splits_reduce_leaf_variance() {
+        // Leaf target variance must be below the parent variance.
+        let mut rng = Rng::new(9);
+        let x = gen_matrix(&mut rng, 150, 1, -3.0, 3.0);
+        let y: Vec<f64> = (0..150).map(|i| x.row(i)[0] * 4.0).collect();
+        let t = fit(&x, &y, &TreeConfig::with_max_leaves(150, 6));
+        let total_var = crate::util::stats::variance(&y);
+        for cl in &t.clusters {
+            let leaf_y: Vec<f64> = cl.iter().map(|&i| y[i]).collect();
+            assert!(crate::util::stats::variance(&leaf_y) < total_var);
+        }
+    }
+
+    #[test]
+    fn depth_reasonable() {
+        let mut rng = Rng::new(10);
+        let x = gen_matrix(&mut rng, 64, 1, 0.0, 1.0);
+        let y: Vec<f64> = (0..64).map(|i| x.row(i)[0]).collect();
+        let t = fit(&x, &y, &TreeConfig::new(8));
+        assert!(t.depth() >= 2);
+        assert!(t.depth() <= 8);
+    }
+}

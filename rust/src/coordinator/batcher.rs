@@ -1,0 +1,238 @@
+//! Dynamic micro-batching for the prediction service.
+//!
+//! Individual predict requests are cheap per point but the per-call
+//! overhead (cross-covariance assembly, PJRT dispatch on the AOT path)
+//! amortizes heavily over a batch — the same motivation as dynamic
+//! batching in model-serving systems (vLLM/Triton). Requests are queued;
+//! a worker flushes when `max_batch` is reached or the oldest request has
+//! waited `max_wait`, then runs one batched `Surrogate::predict`.
+
+use crate::kriging::Surrogate;
+use crate::util::matrix::Matrix;
+use crate::coordinator::metrics::ServerMetrics;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One queued request: a point and a reply channel.
+struct Pending {
+    point: Vec<f64>,
+    reply: Sender<anyhow::Result<(f64, f64)>>,
+    enqueued: Instant,
+}
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 64, max_wait: Duration::from_millis(2) }
+    }
+}
+
+struct Shared {
+    queue: Mutex<Vec<Pending>>,
+    available: Condvar,
+    shutdown: Mutex<bool>,
+}
+
+/// A running batcher: handle to enqueue requests + its worker thread.
+pub struct Batcher {
+    shared: Arc<Shared>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    dim: usize,
+}
+
+impl Batcher {
+    /// Spawn the batching worker over a fitted model.
+    pub fn start(
+        model: Arc<dyn Surrogate>,
+        dim: usize,
+        cfg: BatcherConfig,
+        metrics: Arc<ServerMetrics>,
+    ) -> Self {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Vec::new()),
+            available: Condvar::new(),
+            shutdown: Mutex::new(false),
+        });
+        let worker_shared = shared.clone();
+        let worker = std::thread::spawn(move || {
+            worker_loop(worker_shared, model, cfg, metrics);
+        });
+        Self { shared, worker: Some(worker), dim }
+    }
+
+    /// Enqueue one point; blocks until its prediction is ready.
+    pub fn predict_one(&self, point: &[f64]) -> anyhow::Result<(f64, f64)> {
+        anyhow::ensure!(point.len() == self.dim, "expected {} dims, got {}", self.dim, point.len());
+        let (tx, rx): (Sender<anyhow::Result<(f64, f64)>>, Receiver<_>) = channel();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push(Pending { point: point.to_vec(), reply: tx, enqueued: Instant::now() });
+        }
+        self.shared.available.notify_one();
+        rx.recv().map_err(|_| anyhow::anyhow!("batcher dropped request"))?
+    }
+
+    /// Current queue depth (diagnostics / backpressure decisions).
+    pub fn depth(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.available.notify_all();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    shared: Arc<Shared>,
+    model: Arc<dyn Surrogate>,
+    cfg: BatcherConfig,
+    metrics: Arc<ServerMetrics>,
+) {
+    loop {
+        // Collect a batch: wait for work, then linger up to max_wait for
+        // more requests (or until the batch is full).
+        let batch: Vec<Pending> = {
+            let mut q = shared.queue.lock().unwrap();
+            while q.is_empty() {
+                if *shared.shutdown.lock().unwrap() {
+                    return;
+                }
+                let (guard, _timeout) =
+                    shared.available.wait_timeout(q, Duration::from_millis(50)).unwrap();
+                q = guard;
+            }
+            let oldest = q[0].enqueued;
+            // Linger while under max_batch and under max_wait.
+            while q.len() < cfg.max_batch && oldest.elapsed() < cfg.max_wait {
+                let (guard, timeout) = shared
+                    .available
+                    .wait_timeout(q, cfg.max_wait.saturating_sub(oldest.elapsed()))
+                    .unwrap();
+                q = guard;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+            let take = q.len().min(cfg.max_batch);
+            q.drain(..take).collect()
+        };
+
+        if batch.is_empty() {
+            continue;
+        }
+
+        // Build the batch matrix and run one predict.
+        let d = batch[0].point.len();
+        let mut data = Vec::with_capacity(batch.len() * d);
+        for p in &batch {
+            data.extend_from_slice(&p.point);
+        }
+        let xt = Matrix::from_vec(batch.len(), d, data);
+        let t0 = Instant::now();
+        match model.predict(&xt) {
+            Ok(pred) => {
+                metrics.record_batch(batch.len(), t0.elapsed().as_secs_f64());
+                for (i, p) in batch.into_iter().enumerate() {
+                    let _ = p.reply.send(Ok((pred.mean[i], pred.variance[i])));
+                }
+            }
+            Err(e) => {
+                metrics.record_error();
+                for p in batch {
+                    let _ = p.reply.send(Err(anyhow::anyhow!("predict failed: {e:#}")));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kriging::Prediction;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Test double: records batch sizes, returns x[0] as mean.
+    struct Echo {
+        calls: AtomicUsize,
+        max_batch_seen: AtomicUsize,
+    }
+
+    impl Surrogate for Echo {
+        fn predict(&self, xt: &Matrix) -> anyhow::Result<Prediction> {
+            self.calls.fetch_add(1, Ordering::SeqCst);
+            self.max_batch_seen.fetch_max(xt.rows(), Ordering::SeqCst);
+            Ok(Prediction {
+                mean: (0..xt.rows()).map(|i| xt[(i, 0)]).collect(),
+                variance: vec![1.0; xt.rows()],
+            })
+        }
+
+        fn name(&self) -> &str {
+            "echo"
+        }
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let model = Arc::new(Echo { calls: AtomicUsize::new(0), max_batch_seen: AtomicUsize::new(0) });
+        let b = Batcher::start(model.clone(), 2, BatcherConfig::default(), Arc::new(ServerMetrics::new()));
+        let (mean, var) = b.predict_one(&[3.5, 1.0]).unwrap();
+        assert_eq!(mean, 3.5);
+        assert_eq!(var, 1.0);
+        drop(b);
+        assert_eq!(model.calls.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn dimension_mismatch_rejected() {
+        let model = Arc::new(Echo { calls: AtomicUsize::new(0), max_batch_seen: AtomicUsize::new(0) });
+        let b = Batcher::start(model, 3, BatcherConfig::default(), Arc::new(ServerMetrics::new()));
+        assert!(b.predict_one(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn concurrent_requests_get_batched() {
+        let model = Arc::new(Echo { calls: AtomicUsize::new(0), max_batch_seen: AtomicUsize::new(0) });
+        let cfg = BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(20) };
+        let metrics = Arc::new(ServerMetrics::new());
+        let b = Arc::new(Batcher::start(model.clone(), 1, cfg, metrics.clone()));
+        let mut handles = Vec::new();
+        for i in 0..40 {
+            let b = b.clone();
+            handles.push(std::thread::spawn(move || {
+                b.predict_one(&[i as f64]).unwrap()
+            }));
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            let (mean, _) = h.join().unwrap();
+            assert_eq!(mean, i as f64);
+        }
+        // 40 concurrent requests should need far fewer than 40 predict
+        // calls (batched), and at least one batch bigger than 1.
+        let calls = model.calls.load(Ordering::SeqCst);
+        assert!(calls < 40, "no batching happened ({calls} calls)");
+        assert!(model.max_batch_seen.load(Ordering::SeqCst) > 1);
+        assert!(metrics.predictions.load(Ordering::Relaxed) == 40);
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let model = Arc::new(Echo { calls: AtomicUsize::new(0), max_batch_seen: AtomicUsize::new(0) });
+        let b = Batcher::start(model, 1, BatcherConfig::default(), Arc::new(ServerMetrics::new()));
+        assert_eq!(b.depth(), 0);
+        drop(b); // must not hang
+    }
+}

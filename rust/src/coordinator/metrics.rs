@@ -1,0 +1,131 @@
+//! Serving metrics: counters and latency histograms for the coordinator.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Fixed logarithmic latency buckets (µs).
+const BUCKET_BOUNDS_US: [u64; 12] =
+    [10, 30, 100, 300, 1_000, 3_000, 10_000, 30_000, 100_000, 300_000, 1_000_000, 3_000_000];
+
+/// Lock-free counters + a mutex-guarded histogram.
+#[derive(Debug, Default)]
+pub struct ServerMetrics {
+    pub requests: AtomicU64,
+    pub predictions: AtomicU64,
+    pub batches: AtomicU64,
+    pub errors: AtomicU64,
+    latencies: Mutex<Histogram>,
+}
+
+#[derive(Debug, Default)]
+struct Histogram {
+    counts: [u64; BUCKET_BOUNDS_US.len() + 1],
+    total_us: u64,
+    n: u64,
+    max_us: u64,
+}
+
+impl ServerMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one served batch of `size` predictions taking `seconds`.
+    pub fn record_batch(&self, size: usize, seconds: f64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.predictions.fetch_add(size as u64, Ordering::Relaxed);
+        let us = (seconds * 1e6) as u64;
+        let mut h = self.latencies.lock().unwrap();
+        let idx = BUCKET_BOUNDS_US.iter().position(|&b| us <= b).unwrap_or(BUCKET_BOUNDS_US.len());
+        h.counts[idx] += 1;
+        h.total_us += us;
+        h.n += 1;
+        h.max_us = h.max_us.max(us);
+    }
+
+    /// Approximate latency percentile from the histogram (µs).
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        let h = self.latencies.lock().unwrap();
+        if h.n == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * h.n as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in h.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return if i < BUCKET_BOUNDS_US.len() { BUCKET_BOUNDS_US[i] } else { h.max_us };
+            }
+        }
+        h.max_us
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let h = self.latencies.lock().unwrap();
+        if h.n == 0 {
+            0.0
+        } else {
+            h.total_us as f64 / h.n as f64
+        }
+    }
+
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} predictions={} batches={} errors={} lat_mean={:.0}µs lat_p50={}µs lat_p99={}µs",
+            self.requests.load(Ordering::Relaxed),
+            self.predictions.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+            self.mean_latency_us(),
+            self.latency_percentile_us(50.0),
+            self.latency_percentile_us(99.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = ServerMetrics::new();
+        m.record_request();
+        m.record_request();
+        m.record_error();
+        m.record_batch(8, 0.001);
+        assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(m.errors.load(Ordering::Relaxed), 1);
+        assert_eq!(m.predictions.load(Ordering::Relaxed), 8);
+        assert_eq!(m.batches.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn percentiles_reflect_distribution() {
+        let m = ServerMetrics::new();
+        for _ in 0..99 {
+            m.record_batch(1, 50e-6); // 50µs → bucket 100
+        }
+        m.record_batch(1, 0.5); // 500ms → bucket 1s
+        assert_eq!(m.latency_percentile_us(50.0), 100);
+        assert!(m.latency_percentile_us(99.9) >= 300_000);
+        assert!(m.mean_latency_us() > 50.0);
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = ServerMetrics::new();
+        assert_eq!(m.latency_percentile_us(99.0), 0);
+        assert_eq!(m.mean_latency_us(), 0.0);
+        assert!(m.summary().contains("requests=0"));
+    }
+}

@@ -1,0 +1,12 @@
+//! The serving coordinator: dynamic micro-batching, a TCP line-protocol
+//! prediction server and serving metrics. The fitted Cluster Kriging
+//! model (native or PJRT backend) sits behind the [`Batcher`]; python is
+//! never on this path.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use metrics::ServerMetrics;
+pub use server::{Client, Server, ServerConfig};

@@ -1,0 +1,215 @@
+//! Dataset container, standardization, train/test splitting and k-fold
+//! cross-validation — the evaluation plumbing of paper §VI-B.
+
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// A supervised regression dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub x: Matrix,
+    pub y: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, x: Matrix, y: Vec<f64>) -> Self {
+        assert_eq!(x.rows(), y.len(), "dataset: x/y length mismatch");
+        Self { name: name.into(), x, y }
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Rows with the given indices as a new dataset.
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            name: self.name.clone(),
+            x: self.x.select_rows(idx),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+        }
+    }
+
+    /// Random `train_frac` / `1−train_frac` split.
+    pub fn split(&self, train_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        assert!((0.0..1.0).contains(&train_frac) && train_frac > 0.0);
+        let n = self.n();
+        let mut idx: Vec<usize> = (0..n).collect();
+        Rng::new(seed).shuffle(&mut idx);
+        let n_train = ((n as f64) * train_frac).round() as usize;
+        let n_train = n_train.clamp(1, n - 1);
+        (self.subset(&idx[..n_train]), self.subset(&idx[n_train..]))
+    }
+
+    /// k-fold cross-validation splits: `(train, test)` per fold.
+    pub fn k_folds(&self, k: usize, seed: u64) -> Vec<(Dataset, Dataset)> {
+        assert!(k >= 2, "need k >= 2 folds");
+        let n = self.n();
+        assert!(k <= n, "more folds than rows");
+        let mut idx: Vec<usize> = (0..n).collect();
+        Rng::new(seed).shuffle(&mut idx);
+        let mut folds = Vec::with_capacity(k);
+        for f in 0..k {
+            let test: Vec<usize> =
+                idx.iter().copied().skip(f).step_by(k).collect();
+            let test_set: std::collections::HashSet<usize> = test.iter().copied().collect();
+            let train: Vec<usize> =
+                (0..n).filter(|i| !test_set.contains(i)).collect();
+            folds.push((self.subset(&train), self.subset(&test)));
+        }
+        folds
+    }
+}
+
+/// Feature/target standardization fitted on training data and applied to
+/// both splits (Kriging hyper-parameter search behaves far better on
+/// standardized inputs).
+#[derive(Debug, Clone)]
+pub struct Standardizer {
+    pub x_mean: Vec<f64>,
+    pub x_std: Vec<f64>,
+    pub y_mean: f64,
+    pub y_std: f64,
+}
+
+impl Standardizer {
+    /// Fit on a training dataset.
+    pub fn fit(ds: &Dataset) -> Self {
+        let (n, d) = ds.x.shape();
+        let mut x_mean = vec![0.0; d];
+        for i in 0..n {
+            let r = ds.x.row(i);
+            for j in 0..d {
+                x_mean[j] += r[j];
+            }
+        }
+        for m in &mut x_mean {
+            *m /= n as f64;
+        }
+        let mut x_std = vec![0.0; d];
+        for i in 0..n {
+            let r = ds.x.row(i);
+            for j in 0..d {
+                let dv = r[j] - x_mean[j];
+                x_std[j] += dv * dv;
+            }
+        }
+        for s in &mut x_std {
+            *s = (*s / n as f64).sqrt();
+            if *s < 1e-12 {
+                *s = 1.0; // constant feature: leave unscaled
+            }
+        }
+        let y_mean = crate::util::stats::mean(&ds.y);
+        let mut y_std = crate::util::stats::std_dev(&ds.y);
+        if y_std < 1e-12 {
+            y_std = 1.0;
+        }
+        Self { x_mean, x_std, y_mean, y_std }
+    }
+
+    /// Standardize a dataset (z-score features and target).
+    pub fn transform(&self, ds: &Dataset) -> Dataset {
+        let (n, d) = ds.x.shape();
+        let mut x = Matrix::zeros(n, d);
+        for i in 0..n {
+            let r = ds.x.row(i);
+            let out = x.row_mut(i);
+            for j in 0..d {
+                out[j] = (r[j] - self.x_mean[j]) / self.x_std[j];
+            }
+        }
+        let y: Vec<f64> = ds.y.iter().map(|v| (v - self.y_mean) / self.y_std).collect();
+        Dataset { name: ds.name.clone(), x, y }
+    }
+
+    /// Map a standardized prediction back to the original target scale.
+    pub fn inverse_y(&self, y_std_scale: f64) -> f64 {
+        y_std_scale * self.y_std + self.y_mean
+    }
+
+    /// Map a standardized predictive variance back to the original scale.
+    pub fn inverse_var(&self, var_std_scale: f64) -> f64 {
+        var_std_scale * self.y_std * self.y_std
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check_default, gen_matrix, gen_size, gen_vec};
+
+    fn toy(n: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let x = gen_matrix(&mut rng, n, 3, -5.0, 5.0);
+        let y = gen_vec(&mut rng, n, 0.0, 10.0);
+        Dataset::new("toy", x, y)
+    }
+
+    #[test]
+    fn split_sizes_and_disjoint() {
+        let ds = toy(100, 1);
+        let (tr, te) = ds.split(0.8, 42);
+        assert_eq!(tr.n(), 80);
+        assert_eq!(te.n(), 20);
+    }
+
+    #[test]
+    fn k_folds_partition_everything_prop() {
+        check_default(|rng| {
+            let n = gen_size(rng, 10, 60);
+            let k = gen_size(rng, 2, 5.min(n));
+            let ds = toy(n, rng.next_u64());
+            let folds = ds.k_folds(k, rng.next_u64());
+            crate::prop_assert!(folds.len() == k);
+            let total_test: usize = folds.iter().map(|(_, te)| te.n()).sum();
+            crate::prop_assert!(total_test == n, "test folds don't cover: {total_test} != {n}");
+            for (tr, te) in &folds {
+                crate::prop_assert!(tr.n() + te.n() == n, "fold sizes wrong");
+                crate::prop_assert!(te.n() >= n / k, "degenerate test fold");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn standardizer_zero_mean_unit_var() {
+        let ds = toy(200, 3);
+        let s = Standardizer::fit(&ds);
+        let t = s.transform(&ds);
+        for j in 0..3 {
+            let col = t.x.col(j);
+            assert!(crate::util::stats::mean(&col).abs() < 1e-9);
+            assert!((crate::util::stats::std_dev(&col) - 1.0).abs() < 1e-9);
+        }
+        assert!(crate::util::stats::mean(&t.y).abs() < 1e-9);
+        assert!((crate::util::stats::std_dev(&t.y) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn standardizer_roundtrip() {
+        let ds = toy(50, 4);
+        let s = Standardizer::fit(&ds);
+        let t = s.transform(&ds);
+        for i in 0..ds.n() {
+            assert!((s.inverse_y(t.y[i]) - ds.y[i]).abs() < 1e-9);
+        }
+        // Variance scales quadratically.
+        assert!((s.inverse_var(1.0) - s.y_std * s.y_std).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_feature_unscaled() {
+        let x = Matrix::from_rows(&[&[1.0, 5.0], &[1.0, 7.0], &[1.0, 9.0]]);
+        let ds = Dataset::new("c", x, vec![1.0, 2.0, 3.0]);
+        let s = Standardizer::fit(&ds);
+        assert_eq!(s.x_std[0], 1.0);
+        let t = s.transform(&ds);
+        assert!(t.x.col(0).iter().all(|&v| v.abs() < 1e-12));
+    }
+}

@@ -1,0 +1,179 @@
+//! Synthetic benchmark functions (paper §VI: DEAP package functions).
+//!
+//! The eight functions used for the paper's synthetic datasets: Ackley,
+//! Schaffer, Schwefel, Rastrigin, H1, Rosenbrock, Himmelblau and Diffpow.
+//! Definitions follow the DEAP `benchmarks` module. H1, Schaffer and
+//! Himmelblau are intrinsically 2-d; the rest accept any dimension d ≥ 1
+//! (the paper samples 20-d inputs).
+
+use std::f64::consts::PI;
+
+/// A named benchmark function with its canonical sampling domain.
+#[derive(Clone, Copy)]
+pub struct Benchmark {
+    pub name: &'static str,
+    /// Input dimension: `None` = any d; `Some(d)` = fixed.
+    pub fixed_dim: Option<usize>,
+    /// Canonical per-dimension sampling box `[lo, hi]`.
+    pub domain: (f64, f64),
+    pub eval: fn(&[f64]) -> f64,
+}
+
+/// Ackley: multimodal with a single global basin at the origin.
+pub fn ackley(x: &[f64]) -> f64 {
+    let n = x.len() as f64;
+    let sum_sq: f64 = x.iter().map(|v| v * v).sum();
+    let sum_cos: f64 = x.iter().map(|v| (2.0 * PI * v).cos()).sum();
+    20.0 - 20.0 * (-0.2 * (sum_sq / n).sqrt()).exp() + std::f64::consts::E
+        - (sum_cos / n).exp()
+}
+
+/// Schaffer (DEAP, 2-d pairwise form generalized over consecutive pairs).
+pub fn schaffer(x: &[f64]) -> f64 {
+    let mut total = 0.0;
+    for w in x.windows(2) {
+        let s = w[0] * w[0] + w[1] * w[1];
+        let num = (s.sqrt().sin()).powi(2) - 0.5;
+        let den = (1.0 + 0.001 * s).powi(2);
+        total += 0.5 + num / den;
+    }
+    total
+}
+
+/// Schwefel: deceptive multimodal, optimum far from the center.
+pub fn schwefel(x: &[f64]) -> f64 {
+    let n = x.len() as f64;
+    418.9828872724339 * n - x.iter().map(|v| v * v.abs().sqrt().sin()).sum::<f64>()
+}
+
+/// Rastrigin: highly multimodal, regular structure.
+pub fn rastrigin(x: &[f64]) -> f64 {
+    10.0 * x.len() as f64
+        + x.iter().map(|v| v * v - 10.0 * (2.0 * PI * v).cos()).sum::<f64>()
+}
+
+/// H1 (DEAP): 2-d multimodal with a sharp global peak at (8.6998, 6.7665).
+pub fn h1(x: &[f64]) -> f64 {
+    let (x1, x2) = (x[0], x[1]);
+    let num = ((x1 - x2 / 8.0).sin()).powi(2) + ((x2 + x1 / 8.0).sin()).powi(2);
+    let den = ((x1 - 8.6998).powi(2) + (x2 - 6.7665).powi(2)).sqrt() + 1.0;
+    num / den
+}
+
+/// Rosenbrock: the banana valley.
+pub fn rosenbrock(x: &[f64]) -> f64 {
+    x.windows(2)
+        .map(|w| 100.0 * (w[1] - w[0] * w[0]).powi(2) + (1.0 - w[0]).powi(2))
+        .sum()
+}
+
+/// Himmelblau: 2-d, four identical local minima.
+pub fn himmelblau(x: &[f64]) -> f64 {
+    let (a, b) = (x[0], x[1]);
+    (a * a + b - 11.0).powi(2) + (a + b * b - 7.0).powi(2)
+}
+
+/// Sum of different powers: unimodal, ill-conditioned near the optimum.
+pub fn diffpow(x: &[f64]) -> f64 {
+    x.iter()
+        .enumerate()
+        .map(|(i, v)| v.abs().powf(2.0 + 4.0 * i as f64 / (x.len() - 1).max(1) as f64))
+        .sum()
+}
+
+/// The paper's eight synthetic benchmarks with canonical domains.
+pub const BENCHMARKS: [Benchmark; 8] = [
+    Benchmark { name: "ackley", fixed_dim: None, domain: (-15.0, 30.0), eval: ackley },
+    Benchmark { name: "schaffer", fixed_dim: Some(2), domain: (-100.0, 100.0), eval: schaffer },
+    Benchmark { name: "schwefel", fixed_dim: None, domain: (-500.0, 500.0), eval: schwefel },
+    Benchmark { name: "rast", fixed_dim: None, domain: (-5.12, 5.12), eval: rastrigin },
+    Benchmark { name: "h1", fixed_dim: Some(2), domain: (-100.0, 100.0), eval: h1 },
+    Benchmark { name: "rosenbrock", fixed_dim: None, domain: (-2.048, 2.048), eval: rosenbrock },
+    Benchmark { name: "himmelblau", fixed_dim: Some(2), domain: (-6.0, 6.0), eval: himmelblau },
+    Benchmark { name: "diffpow", fixed_dim: None, domain: (-1.0, 1.0), eval: diffpow },
+];
+
+/// Look up a benchmark by name.
+pub fn by_name(name: &str) -> Option<&'static Benchmark> {
+    BENCHMARKS.iter().find(|b| b.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ackley_zero_at_origin() {
+        assert!(ackley(&[0.0; 20]).abs() < 1e-9);
+        assert!(ackley(&[1.0; 20]) > 1.0);
+    }
+
+    #[test]
+    fn rastrigin_zero_at_origin_and_multimodal() {
+        assert!(rastrigin(&[0.0; 5]).abs() < 1e-12);
+        // Local minimum near integer coordinates.
+        assert!(rastrigin(&[1.0, 0.0]) < rastrigin(&[0.5, 0.0]));
+    }
+
+    #[test]
+    fn rosenbrock_minimum_at_ones() {
+        assert_eq!(rosenbrock(&[1.0; 8]), 0.0);
+        assert!(rosenbrock(&[0.0; 8]) > 0.0);
+    }
+
+    #[test]
+    fn himmelblau_known_minima() {
+        for m in [
+            [3.0, 2.0],
+            [-2.805118, 3.131312],
+            [-3.779310, -3.283186],
+            [3.584428, -1.848126],
+        ] {
+            assert!(himmelblau(&m) < 1e-3, "{m:?}: {}", himmelblau(&m));
+        }
+    }
+
+    #[test]
+    fn schwefel_minimum_near_420968() {
+        let x = [420.9687; 4];
+        assert!(schwefel(&x).abs() < 1e-3, "{}", schwefel(&x));
+    }
+
+    #[test]
+    fn diffpow_zero_at_origin_ill_conditioned() {
+        assert_eq!(diffpow(&[0.0; 10]), 0.0);
+        // Last dimension contributes much less near zero than the first.
+        let mut a = [0.0; 10];
+        a[0] = 0.5;
+        let mut b = [0.0; 10];
+        b[9] = 0.5;
+        assert!(diffpow(&a) > diffpow(&b));
+    }
+
+    #[test]
+    fn h1_peak_location() {
+        // Global maximum ~2 at (8.6998, 6.7665).
+        let peak = h1(&[8.6998, 6.7665]);
+        assert!(peak > 1.9, "{peak}");
+        assert!(h1(&[0.0, 0.0]) < peak);
+    }
+
+    #[test]
+    fn schaffer_nonnegative_and_zero_at_origin() {
+        assert!(schaffer(&[0.0, 0.0]).abs() < 1e-12);
+        assert!(schaffer(&[10.0, -3.0]) >= 0.0);
+    }
+
+    #[test]
+    fn registry_consistent() {
+        assert_eq!(BENCHMARKS.len(), 8);
+        for b in &BENCHMARKS {
+            assert!(by_name(b.name).is_some());
+            let d = b.fixed_dim.unwrap_or(4);
+            let x = vec![0.1; d];
+            let v = (b.eval)(&x);
+            assert!(v.is_finite(), "{}: non-finite at 0.1", b.name);
+        }
+        assert!(by_name("nope").is_none());
+    }
+}

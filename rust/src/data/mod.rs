@@ -1,0 +1,9 @@
+//! Datasets: benchmark functions, synthetic samplers, UCI-like
+//! generators and the dataset/CV plumbing (paper §VI).
+
+pub mod dataset;
+pub mod functions;
+pub mod synthetic;
+pub mod uci_like;
+
+pub use dataset::{Dataset, Standardizer};

@@ -1,0 +1,120 @@
+//! Synthetic dataset generation from benchmark functions (paper §VI:
+//! "8 synthetic datasets with each 10.000 records, 20 attributes").
+
+use crate::data::dataset::Dataset;
+use crate::data::functions::Benchmark;
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Sample `n` points uniformly in the benchmark's domain and evaluate it.
+/// `dim` is used for variable-dimension benchmarks (fixed-dim ones ignore
+/// it); `noise_sd` adds iid Gaussian observation noise.
+pub fn from_benchmark(
+    bench: &Benchmark,
+    n: usize,
+    dim: usize,
+    noise_sd: f64,
+    seed: u64,
+) -> Dataset {
+    let d = bench.fixed_dim.unwrap_or(dim).max(1);
+    let (lo, hi) = bench.domain;
+    let mut rng = Rng::new(seed);
+    let mut xdata = Vec::with_capacity(n * d);
+    let mut y = Vec::with_capacity(n);
+    let mut point = vec![0.0; d];
+    for _ in 0..n {
+        for p in point.iter_mut() {
+            *p = rng.uniform_in(lo, hi);
+        }
+        xdata.extend_from_slice(&point);
+        let mut v = (bench.eval)(&point);
+        if noise_sd > 0.0 {
+            v += rng.normal_with(0.0, noise_sd);
+        }
+        y.push(v);
+    }
+    Dataset::new(bench.name, Matrix::from_vec(n, d, xdata), y)
+}
+
+/// Latin hypercube sample in `[lo, hi]^d` (used by the surrogate-
+/// optimization example for space-filling designs).
+pub fn latin_hypercube(n: usize, d: usize, lo: f64, hi: f64, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let mut x = Matrix::zeros(n, d);
+    let width = (hi - lo) / n as f64;
+    for j in 0..d {
+        let mut strata: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut strata);
+        for i in 0..n {
+            x[(i, j)] = lo + (strata[i] as f64 + rng.uniform()) * width;
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::functions::{by_name, BENCHMARKS};
+
+    #[test]
+    fn dataset_shapes_and_domain() {
+        for b in &BENCHMARKS {
+            let ds = from_benchmark(b, 100, 20, 0.0, 1);
+            assert_eq!(ds.n(), 100);
+            let expect_d = b.fixed_dim.unwrap_or(20);
+            assert_eq!(ds.d(), expect_d, "{}", b.name);
+            let (lo, hi) = b.domain;
+            for i in 0..ds.n() {
+                assert!(ds.x.row(i).iter().all(|&v| (lo..hi).contains(&v)));
+            }
+            assert!(ds.y.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn noise_free_values_match_function() {
+        let b = by_name("rast").unwrap();
+        let ds = from_benchmark(b, 10, 5, 0.0, 2);
+        for i in 0..10 {
+            assert_eq!(ds.y[i], (b.eval)(ds.x.row(i)));
+        }
+    }
+
+    #[test]
+    fn noise_changes_values() {
+        let b = by_name("ackley").unwrap();
+        let clean = from_benchmark(b, 50, 5, 0.0, 3);
+        let noisy = from_benchmark(b, 50, 5, 0.5, 3);
+        let diffs = clean
+            .y
+            .iter()
+            .zip(&noisy.y)
+            .filter(|(a, b)| (*a - *b).abs() > 1e-12)
+            .count();
+        assert!(diffs > 40);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let b = by_name("schwefel").unwrap();
+        let a = from_benchmark(b, 20, 3, 0.1, 7);
+        let c = from_benchmark(b, 20, 3, 0.1, 7);
+        assert_eq!(a.y, c.y);
+    }
+
+    #[test]
+    fn lhs_stratification() {
+        // Each of the n strata contains exactly one sample per dimension.
+        let n = 20;
+        let x = latin_hypercube(n, 3, 0.0, 1.0, 5);
+        for j in 0..3 {
+            let mut strata = vec![0usize; n];
+            for i in 0..n {
+                let s = (x[(i, j)] * n as f64).floor() as usize;
+                strata[s.min(n - 1)] += 1;
+            }
+            assert!(strata.iter().all(|&c| c == 1), "dim {j}: {strata:?}");
+        }
+    }
+}

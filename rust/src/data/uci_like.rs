@@ -1,0 +1,229 @@
+//! Synthetic stand-ins for the paper's three real-world datasets.
+//!
+//! The UCI/gaussianprocess.org files are not redistributable inside this
+//! offline build, so each generator reproduces the *statistical regime*
+//! the paper's experiments exercise — matched record counts, input
+//! dimensionality, response smoothness and noise level (see DESIGN.md §3
+//! for the substitution rationale). If the real CSVs are available,
+//! [`load_or_generate`] prefers them.
+//!
+//! | paper dataset    | n      | d  | regime                               |
+//! |------------------|--------|----|--------------------------------------|
+//! | Concrete Strength| 1 030  | 8  | smooth nonlinear, moderate noise     |
+//! | CCPP             | 9 568  | 4  | near-linear, low noise               |
+//! | SARCOS           | 44 484 | 21 | smooth kinematic map, high-d         |
+
+use crate::data::dataset::Dataset;
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+use std::path::Path;
+
+/// Concrete-Strength-like: 1030×8, positive skewed response combining
+/// saturating mixture effects and an age log-term, ~8% noise — the
+/// compressive-strength phenomenology of Yeh (1998).
+pub fn concrete(seed: u64) -> Dataset {
+    concrete_sized(1030, seed)
+}
+
+pub fn concrete_sized(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let d = 8;
+    let mut x = Matrix::zeros(n, d);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        // Features loosely follow the real columns: cement, slag, flyash,
+        // water, superplasticizer, coarse agg., fine agg., age.
+        let cement = rng.uniform_in(100.0, 550.0);
+        let slag = rng.uniform_in(0.0, 360.0);
+        let flyash = rng.uniform_in(0.0, 200.0);
+        let water = rng.uniform_in(120.0, 250.0);
+        let plastic = rng.uniform_in(0.0, 32.0);
+        let coarse = rng.uniform_in(800.0, 1150.0);
+        let fine = rng.uniform_in(590.0, 995.0);
+        let age = rng.uniform_in(1.0, 365.0);
+        let row = x.row_mut(i);
+        row.copy_from_slice(&[cement, slag, flyash, water, plastic, coarse, fine, age]);
+        // Abrams-law-like water/cement ratio effect + pozzolanic terms +
+        // logarithmic strength gain with age.
+        let wc = water / (cement + 0.6 * slag + 0.4 * flyash);
+        let base = 95.0 * (-1.8 * wc).exp();
+        let age_gain = 0.28 * (1.0 + age).ln();
+        let plastic_gain = 0.35 * (plastic / (1.0 + 0.08 * plastic));
+        let agg_adj = -0.004 * ((coarse - 975.0).abs() + (fine - 790.0).abs());
+        let strength = (base * (0.55 + age_gain) + plastic_gain + agg_adj).max(2.0);
+        y.push(strength + rng.normal_with(0.0, 0.08 * strength));
+    }
+    Dataset::new("concrete", x, y)
+}
+
+/// CCPP-like: 9568×4, near-linear inverse dependence of power output on
+/// ambient temperature with mild humidity/pressure/vacuum nonlinearity and
+/// low noise — the regime where the paper reports R² ≈ 0.95 even for SoD.
+pub fn ccpp(seed: u64) -> Dataset {
+    ccpp_sized(9568, seed)
+}
+
+pub fn ccpp_sized(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let d = 4;
+    let mut x = Matrix::zeros(n, d);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let at = rng.uniform_in(1.8, 37.1); // ambient temperature °C
+        let v = rng.uniform_in(25.4, 81.6); // exhaust vacuum cmHg
+        let ap = rng.uniform_in(992.9, 1033.3); // ambient pressure mbar
+        let rh = rng.uniform_in(25.6, 100.2); // relative humidity %
+        x.row_mut(i).copy_from_slice(&[at, v, ap, rh]);
+        // Dominant linear terms (as in the real plant) + mild curvature.
+        let pe = 497.0 - 1.78 * at - 0.233 * v + 0.065 * (ap - 1013.0)
+            - 0.158 * (rh / 10.0)
+            + 0.008 * (at - 20.0) * (at - 20.0) / 10.0
+            - 0.0026 * at * v / 10.0;
+        y.push(pe + rng.normal_with(0.0, 3.2));
+    }
+    Dataset::new("ccpp", x, y)
+}
+
+/// SARCOS-like: a smooth high-dimensional kinematic map. Inputs are 21
+/// joint positions/velocities/accelerations (7 each); the target mimics a
+/// torque: gravity-like terms in the positions, viscous terms in the
+/// velocities and inertial terms in the accelerations, with cross-joint
+/// couplings. Returns `(train, test)` with the paper's 44 484 / 4 449
+/// split (scaled by `scale`).
+pub fn sarcos(seed: u64, scale: f64) -> (Dataset, Dataset) {
+    let n_train = ((44_484.0 * scale) as usize).max(100);
+    let n_test = ((4_449.0 * scale) as usize).max(50);
+    let mut rng = Rng::new(seed);
+    let gen = |n: usize, rng: &mut Rng| -> Dataset {
+        let d = 21;
+        let mut x = Matrix::zeros(n, d);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let row = x.row_mut(i);
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = match j {
+                    0..=6 => rng.uniform_in(-2.8, 2.8),   // positions (rad)
+                    7..=13 => rng.uniform_in(-4.0, 4.0),  // velocities
+                    _ => rng.uniform_in(-8.0, 8.0),       // accelerations
+                };
+            }
+            let q = &row[0..7];
+            let dq = &row[7..14];
+            let ddq = &row[14..21];
+            // Torque-like response for "joint 1".
+            let gravity: f64 = 35.0 * q[0].sin() + 12.0 * (q[0] + q[1]).sin()
+                + 4.0 * (q[1] + q[2]).cos();
+            let viscous: f64 = 2.2 * dq[0] + 0.7 * dq[1] * dq[1].abs();
+            let inertia: f64 = 5.5 * ddq[0] + 1.2 * ddq[1] * q[1].cos()
+                + 0.4 * ddq[2] * (q[1] + q[2]).cos();
+            let coupling: f64 = 0.8 * dq[0] * dq[1] * q[1].sin();
+            y.push(gravity + viscous + inertia + coupling + rng.normal_with(0.0, 0.5));
+        }
+        Dataset::new("sarcos", x, y)
+    };
+    (gen(n_train, &mut rng), gen(n_test, &mut rng))
+}
+
+/// Prefer a real CSV (last column = target) when present; otherwise use
+/// the generator. Lets users drop in the true UCI files.
+pub fn load_or_generate(
+    path: impl AsRef<Path>,
+    fallback: impl FnOnce() -> Dataset,
+) -> Dataset {
+    let path = path.as_ref();
+    if path.exists() {
+        if let Ok(csv) = crate::util::csv::read_file(path, true) {
+            let (n, cols) = csv.data.shape();
+            if n > 0 && cols >= 2 {
+                let d = cols - 1;
+                let mut x = Matrix::zeros(n, d);
+                let mut y = Vec::with_capacity(n);
+                for i in 0..n {
+                    let row = csv.data.row(i);
+                    x.row_mut(i).copy_from_slice(&row[..d]);
+                    y.push(row[d]);
+                }
+                let name = path.file_stem().unwrap_or_default().to_string_lossy().to_string();
+                return Dataset::new(name, x, y);
+            }
+        }
+    }
+    fallback()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn concrete_matches_paper_shape() {
+        let ds = concrete(1);
+        assert_eq!(ds.n(), 1030);
+        assert_eq!(ds.d(), 8);
+        // Positive strengths in a plausible MPa range.
+        assert!(ds.y.iter().all(|&v| v > 0.0 && v < 200.0));
+        // Real dataset has substantial spread.
+        assert!(stats::std_dev(&ds.y) > 5.0);
+    }
+
+    #[test]
+    fn ccpp_matches_paper_shape_and_linearity() {
+        let ds = ccpp(2);
+        assert_eq!(ds.n(), 9568);
+        assert_eq!(ds.d(), 4);
+        // Strong negative correlation between AT (col 0) and PE, as in the
+        // real plant data (ρ ≈ −0.95).
+        let at = ds.x.col(0);
+        let my = stats::mean(&ds.y);
+        let ma = stats::mean(&at);
+        let cov: f64 = at.iter().zip(&ds.y).map(|(a, b)| (a - ma) * (b - my)).sum();
+        let rho = cov / (ds.n() as f64 * stats::std_dev(&at) * stats::std_dev(&ds.y));
+        assert!(rho < -0.85, "AT/PE correlation {rho}");
+    }
+
+    #[test]
+    fn sarcos_split_sizes() {
+        let (tr, te) = sarcos(3, 0.02);
+        assert_eq!(tr.d(), 21);
+        assert_eq!(te.d(), 21);
+        assert!(tr.n() >= 100);
+        assert!(te.n() >= 50);
+        assert!(tr.n() > te.n());
+    }
+
+    #[test]
+    fn sarcos_is_predictable_from_inputs() {
+        // The response is a deterministic function + small noise: two
+        // points with identical inputs would give near-identical targets.
+        // Instead verify the signal-to-noise is high via neighbor checks:
+        // y variance far exceeds the injected noise variance.
+        let (tr, _) = sarcos(4, 0.01);
+        assert!(stats::variance(&tr.y) > 25.0); // noise var = 0.25
+    }
+
+    #[test]
+    fn load_or_generate_falls_back() {
+        let ds = load_or_generate("/nonexistent/file.csv", || concrete_sized(10, 1));
+        assert_eq!(ds.n(), 10);
+    }
+
+    #[test]
+    fn load_or_generate_reads_csv() {
+        let dir = std::env::temp_dir().join("ckrig_uci_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("mini.csv");
+        std::fs::write(&p, "a,b,target\n1,2,3\n4,5,6\n").unwrap();
+        let ds = load_or_generate(&p, || panic!("should not fall back"));
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.d(), 2);
+        assert_eq!(ds.y, vec![3.0, 6.0]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        assert_eq!(concrete_sized(50, 9).y, concrete_sized(50, 9).y);
+        assert_ne!(concrete_sized(50, 9).y, concrete_sized(50, 10).y);
+    }
+}

@@ -1,0 +1,261 @@
+//! Algorithm-agnostic evaluation harness (paper §VI).
+//!
+//! An [`AlgoSpec`] names one algorithm at one hyper-parameter setting
+//! (the complexity/accuracy knob of §VI-A). [`evaluate`] standardizes the
+//! data, fits, predicts, de-standardizes and scores — producing one row of
+//! the paper's tables / one point of Fig. 2.
+
+use crate::baselines::{Bcm, BcmConfig, BcmMode, Fitc, FitcConfig, SubsetOfData};
+use crate::cluster_kriging::{builder, ClusterKriging};
+use crate::data::{Dataset, Standardizer};
+use crate::kriging::{HyperOpt, Surrogate};
+use crate::metrics::{score, Scores};
+use crate::util::timer::time_it;
+use anyhow::Result;
+
+/// One algorithm at one hyper-parameter value.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AlgoSpec {
+    /// Subset of Data with `m` points.
+    Sod { m: usize },
+    /// FITC with `m` inducing points.
+    Fitc { m: usize },
+    /// BCM with `k` modules.
+    Bcm { k: usize, shared: bool },
+    /// A Cluster Kriging flavor ("OWCK"/"OWFCK"/"GMMCK"/"MTCK"/"RANDOM-CK")
+    /// with `k` clusters.
+    ClusterKriging { flavor: &'static str, k: usize },
+    /// Full (unapproximated) Ordinary Kriging — the reference the
+    /// approximations are trying to match.
+    FullKriging,
+}
+
+impl AlgoSpec {
+    /// Display name matching the paper's tables.
+    pub fn name(&self) -> String {
+        match self {
+            AlgoSpec::Sod { .. } => "SoD".into(),
+            AlgoSpec::Fitc { .. } => "FITC".into(),
+            AlgoSpec::Bcm { shared: true, .. } => "BCM sh.".into(),
+            AlgoSpec::Bcm { shared: false, .. } => "BCM".into(),
+            AlgoSpec::ClusterKriging { flavor, .. } => (*flavor).into(),
+            AlgoSpec::FullKriging => "Kriging".into(),
+        }
+    }
+
+    /// The hyper-parameter value (sample size / inducing points / cluster
+    /// count) — the x-axis knob of §VI-A.
+    pub fn knob(&self) -> usize {
+        match self {
+            AlgoSpec::Sod { m } | AlgoSpec::Fitc { m } => *m,
+            AlgoSpec::Bcm { k, .. } | AlgoSpec::ClusterKriging { k, .. } => *k,
+            AlgoSpec::FullKriging => 1,
+        }
+    }
+}
+
+/// One harness measurement: scores plus wall-clock timings.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub algo: String,
+    pub knob: usize,
+    pub scores: Scores,
+    pub fit_seconds: f64,
+    pub predict_seconds: f64,
+}
+
+/// Evaluation-wide settings.
+#[derive(Debug, Clone)]
+pub struct HarnessConfig {
+    pub hyperopt: HyperOpt,
+    pub seed: u64,
+}
+
+impl Default for HarnessConfig {
+    fn default() -> Self {
+        Self {
+            hyperopt: HyperOpt { restarts: 2, max_evals: 30, ..HyperOpt::default() },
+            seed: 0xE7A1,
+        }
+    }
+}
+
+impl HarnessConfig {
+    /// Budget preset for quick runs (CI / examples).
+    pub fn fast() -> Self {
+        Self {
+            hyperopt: HyperOpt {
+                restarts: 1,
+                max_evals: 15,
+                isotropic: true,
+                ..HyperOpt::default()
+            },
+            seed: 0xE7A1,
+        }
+    }
+}
+
+/// Fit `spec` on `train`, predict `test`, return scores + timings.
+///
+/// Inputs and targets are standardized on the training fold; predictions
+/// are mapped back before scoring, matching the paper's protocol.
+pub fn evaluate(
+    spec: &AlgoSpec,
+    train: &Dataset,
+    test: &Dataset,
+    cfg: &HarnessConfig,
+) -> Result<EvalResult> {
+    let std = Standardizer::fit(train);
+    let tr = std.transform(train);
+    let te_x = std.transform(test).x;
+
+    // Hyper-parameter search dimensionality guard: anisotropic search on
+    // high-d data explodes the simplex budget, so go isotropic for d > 8
+    // (standard practice; the paper's datasets up to d=21).
+    let mut opt = cfg.hyperopt.clone();
+    if tr.d() > 8 {
+        opt.isotropic = true;
+    }
+
+    let (model, fit_seconds): (Box<dyn Surrogate>, f64) = match spec {
+        AlgoSpec::Sod { m } => {
+            let (model, t) =
+                time_it(|| SubsetOfData::fit(&tr.x, &tr.y, *m, cfg.seed, &opt));
+            (Box::new(model?), t)
+        }
+        AlgoSpec::Fitc { m } => {
+            let fc = FitcConfig { seed: cfg.seed, ..FitcConfig::new(*m) };
+            let (model, t) = time_it(|| Fitc::fit(&tr.x, &tr.y, &fc));
+            (Box::new(model?), t)
+        }
+        AlgoSpec::Bcm { k, shared } => {
+            let mode = if *shared { BcmMode::Shared } else { BcmMode::Individual };
+            let bc = BcmConfig { hyperopt: opt.clone(), seed: cfg.seed, ..BcmConfig::new(*k, mode) };
+            let (model, t) = time_it(|| Bcm::fit(&tr.x, &tr.y, &bc));
+            (Box::new(model?), t)
+        }
+        AlgoSpec::ClusterKriging { flavor, k } => {
+            let ck_cfg = builder::flavor(flavor, *k, cfg.seed, opt.clone())?;
+            let (model, t) = time_it(|| ClusterKriging::fit(&tr.x, &tr.y, ck_cfg));
+            (Box::new(model?), t)
+        }
+        AlgoSpec::FullKriging => {
+            let (model, t) = time_it(|| opt.fit(tr.x.clone(), &tr.y));
+            (Box::new(model?), t)
+        }
+    };
+
+    let (pred, predict_seconds) = time_it(|| model.predict(&te_x));
+    let pred = pred?;
+
+    // De-standardize predictions to the original target scale.
+    let mean: Vec<f64> = pred.mean.iter().map(|&v| std.inverse_y(v)).collect();
+    let variance: Vec<f64> = pred.variance.iter().map(|&v| std.inverse_var(v)).collect();
+
+    let y_train_mean = crate::util::stats::mean(&train.y);
+    let y_train_var = crate::util::stats::variance(&train.y);
+    let scores = score(&test.y, &mean, &variance, y_train_mean, y_train_var);
+
+    Ok(EvalResult {
+        algo: spec.name(),
+        knob: spec.knob(),
+        scores,
+        fit_seconds,
+        predict_seconds,
+    })
+}
+
+/// Evaluate over k-fold CV; returns the per-fold results.
+pub fn evaluate_cv(
+    spec: &AlgoSpec,
+    ds: &Dataset,
+    folds: usize,
+    cfg: &HarnessConfig,
+) -> Result<Vec<EvalResult>> {
+    ds.k_folds(folds, cfg.seed)
+        .iter()
+        .map(|(tr, te)| evaluate(spec, tr, te, cfg))
+        .collect()
+}
+
+/// Average scores/timings across fold results.
+pub fn aggregate(results: &[EvalResult]) -> EvalResult {
+    assert!(!results.is_empty());
+    let n = results.len() as f64;
+    EvalResult {
+        algo: results[0].algo.clone(),
+        knob: results[0].knob,
+        scores: Scores {
+            r2: results.iter().map(|r| r.scores.r2).sum::<f64>() / n,
+            smse: results.iter().map(|r| r.scores.smse).sum::<f64>() / n,
+            msll: results.iter().map(|r| r.scores.msll).sum::<f64>() / n,
+        },
+        fit_seconds: results.iter().map(|r| r.fit_seconds).sum::<f64>() / n,
+        predict_seconds: results.iter().map(|r| r.predict_seconds).sum::<f64>() / n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::from_benchmark;
+
+    fn tiny_dataset() -> Dataset {
+        // 2-d Rosenbrock: smooth, easily modeled with a few hundred points.
+        let b = crate::data::functions::by_name("rosenbrock").unwrap();
+        from_benchmark(b, 240, 2, 0.0, 11)
+    }
+
+    #[test]
+    fn all_specs_evaluate() {
+        let ds = tiny_dataset();
+        let (tr, te) = ds.split(0.8, 1);
+        let cfg = HarnessConfig::fast();
+        for spec in [
+            AlgoSpec::Sod { m: 64 },
+            AlgoSpec::Fitc { m: 24 },
+            AlgoSpec::Bcm { k: 2, shared: true },
+            AlgoSpec::Bcm { k: 2, shared: false },
+            AlgoSpec::ClusterKriging { flavor: "OWCK", k: 2 },
+            AlgoSpec::ClusterKriging { flavor: "MTCK", k: 2 },
+        ] {
+            let r = evaluate(&spec, &tr, &te, &cfg).unwrap();
+            assert!(r.scores.r2.is_finite(), "{}: bad R²", r.algo);
+            assert!(r.fit_seconds > 0.0);
+            assert!(r.predict_seconds > 0.0);
+        }
+    }
+
+    #[test]
+    fn cluster_kriging_beats_trivial_on_smooth_data() {
+        let ds = tiny_dataset();
+        let (tr, te) = ds.split(0.8, 2);
+        let cfg = HarnessConfig::fast();
+        let r = evaluate(&AlgoSpec::ClusterKriging { flavor: "GMMCK", k: 2 }, &tr, &te, &cfg)
+            .unwrap();
+        assert!(r.scores.r2 > 0.5, "R² {}", r.scores.r2);
+        assert!(r.scores.smse < 0.5, "SMSE {}", r.scores.smse);
+    }
+
+    #[test]
+    fn cv_produces_fold_count_results() {
+        let ds = tiny_dataset();
+        let cfg = HarnessConfig::fast();
+        let rs = evaluate_cv(&AlgoSpec::Sod { m: 48 }, &ds, 3, &cfg).unwrap();
+        assert_eq!(rs.len(), 3);
+        let agg = aggregate(&rs);
+        assert_eq!(agg.algo, "SoD");
+        assert!(agg.scores.r2.is_finite());
+    }
+
+    #[test]
+    fn names_match_paper_labels() {
+        assert_eq!(AlgoSpec::Sod { m: 1 }.name(), "SoD");
+        assert_eq!(AlgoSpec::Bcm { k: 2, shared: true }.name(), "BCM sh.");
+        assert_eq!(AlgoSpec::Bcm { k: 2, shared: false }.name(), "BCM");
+        assert_eq!(
+            AlgoSpec::ClusterKriging { flavor: "MTCK", k: 4 }.name(),
+            "MTCK"
+        );
+    }
+}

@@ -1,0 +1,9 @@
+//! Evaluation: the paper's §VI testing framework — harness, experiment
+//! drivers for Tables I–III / Figure 2, and report rendering.
+
+pub mod experiments;
+pub mod harness;
+pub mod report;
+
+pub use harness::{evaluate, evaluate_cv, AlgoSpec, EvalResult, HarnessConfig};
+pub use experiments::{run_all, run_dataset, ExperimentConfig};

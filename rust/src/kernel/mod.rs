@@ -1,0 +1,292 @@
+//! Stationary covariance (kernel) functions — paper Eq. 1.
+//!
+//! The paper uses the anisotropic squared-exponential kernel
+//! `k(x,x') = σ² ∏ᵢ exp(−θᵢ (xᵢ−x'ᵢ)²)`; Matérn 5/2, 3/2 and the
+//! absolute-exponential family are provided as well (common alternatives
+//! in the Kriging literature and used by the ablation benches).
+//!
+//! Conventions: the *process variance* σ² is handled by the Kriging model
+//! (concentrated out of the likelihood), so kernels here compute the
+//! correlation part only, parameterized by per-dimension length-scale
+//! parameters θᵢ > 0.
+
+use crate::util::matrix::Matrix;
+use crate::util::threadpool::scoped_for_chunks;
+
+/// Kernel family selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Squared exponential / Gaussian (paper Eq. 1).
+    SquaredExponential,
+    /// Matérn ν=5/2.
+    Matern52,
+    /// Matérn ν=3/2.
+    Matern32,
+    /// Absolute exponential (Ornstein–Uhlenbeck).
+    AbsoluteExponential,
+}
+
+impl KernelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::SquaredExponential => "squared_exponential",
+            KernelKind::Matern52 => "matern52",
+            KernelKind::Matern32 => "matern32",
+            KernelKind::AbsoluteExponential => "absolute_exponential",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "squared_exponential" | "se" | "gaussian" => Some(KernelKind::SquaredExponential),
+            "matern52" => Some(KernelKind::Matern52),
+            "matern32" => Some(KernelKind::Matern32),
+            "absolute_exponential" | "ou" => Some(KernelKind::AbsoluteExponential),
+            _ => None,
+        }
+    }
+}
+
+/// A stationary anisotropic kernel: family + per-dimension θ.
+#[derive(Debug, Clone)]
+pub struct Kernel {
+    pub kind: KernelKind,
+    /// Per-dimension inverse-squared-length-scales θᵢ (Eq. 1). All > 0.
+    pub theta: Vec<f64>,
+}
+
+impl Kernel {
+    pub fn new(kind: KernelKind, theta: Vec<f64>) -> Self {
+        assert!(!theta.is_empty(), "kernel needs at least one θ");
+        assert!(theta.iter().all(|&t| t > 0.0 && t.is_finite()), "θ must be positive");
+        Self { kind, theta }
+    }
+
+    /// Squared-exponential kernel with a single isotropic θ broadcast to d
+    /// dimensions.
+    pub fn se_isotropic(d: usize, theta: f64) -> Self {
+        Self::new(KernelKind::SquaredExponential, vec![theta; d])
+    }
+
+    pub fn dim(&self) -> usize {
+        self.theta.len()
+    }
+
+    /// θ-weighted squared distance `Σᵢ θᵢ (aᵢ−bᵢ)²`.
+    #[inline]
+    fn wsq_dist(&self, a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), self.theta.len());
+        debug_assert_eq!(b.len(), self.theta.len());
+        let mut acc = 0.0;
+        for i in 0..a.len() {
+            let d = a[i] - b[i];
+            acc += self.theta[i] * d * d;
+        }
+        acc
+    }
+
+    /// θ-weighted L1 distance `Σᵢ θᵢ |aᵢ−bᵢ|` (absolute-exponential).
+    #[inline]
+    fn wabs_dist(&self, a: &[f64], b: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for i in 0..a.len() {
+            acc += self.theta[i] * (a[i] - b[i]).abs();
+        }
+        acc
+    }
+
+    /// Correlation between two points (1.0 at zero distance).
+    #[inline]
+    pub fn corr(&self, a: &[f64], b: &[f64]) -> f64 {
+        match self.kind {
+            KernelKind::SquaredExponential => (-self.wsq_dist(a, b)).exp(),
+            KernelKind::Matern52 => {
+                let r = (5.0 * self.wsq_dist(a, b)).sqrt();
+                (1.0 + r + r * r / 3.0) * (-r).exp()
+            }
+            KernelKind::Matern32 => {
+                let r = (3.0 * self.wsq_dist(a, b)).sqrt();
+                (1.0 + r) * (-r).exp()
+            }
+            KernelKind::AbsoluteExponential => (-self.wabs_dist(a, b)).exp(),
+        }
+    }
+
+    /// Full correlation matrix `R[i][j] = corr(X[i], X[j])` (symmetric,
+    /// unit diagonal). This is the `O(n² d)` hot spot — the Pallas L1
+    /// kernel computes the same quantity on the AOT path.
+    pub fn corr_matrix(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols(), self.dim(), "corr_matrix: dim mismatch");
+        let n = x.rows();
+        let mut r = Matrix::zeros(n, n);
+        for i in 0..n {
+            r[(i, i)] = 1.0;
+            let xi = x.row(i);
+            for j in 0..i {
+                let v = self.corr(xi, x.row(j));
+                r[(i, j)] = v;
+                r[(j, i)] = v;
+            }
+        }
+        r
+    }
+
+    /// Multi-threaded correlation matrix (row-block parallel).
+    pub fn corr_matrix_parallel(&self, x: &Matrix, workers: usize) -> Matrix {
+        let n = x.rows();
+        if workers <= 1 || n < 256 {
+            return self.corr_matrix(x);
+        }
+        let mut r = Matrix::zeros(n, n);
+        struct SendPtr(*mut f64);
+        unsafe impl Send for SendPtr {}
+        unsafe impl Sync for SendPtr {}
+        impl SendPtr {
+            fn get(&self) -> *mut f64 {
+                self.0
+            }
+        }
+        let ptr = SendPtr(r.as_mut_slice().as_mut_ptr());
+        scoped_for_chunks(n, workers, |rows| {
+            for i in rows {
+                let xi = x.row(i);
+                // SAFETY: each worker writes a disjoint set of rows i plus
+                // the mirrored (j,i) entries, which belong to rows j<i that
+                // may be owned by other workers — so write only row i here
+                // and mirror afterwards.
+                let row =
+                    unsafe { std::slice::from_raw_parts_mut(ptr.get().add(i * n), n) };
+                for j in 0..n {
+                    row[j] = if i == j { 1.0 } else { self.corr(xi, x.row(j)) };
+                }
+            }
+        });
+        r
+    }
+
+    /// Cross-correlation matrix between test rows `xt` (m×d) and training
+    /// rows `x` (n×d): output m×n.
+    pub fn cross_corr(&self, xt: &Matrix, x: &Matrix) -> Matrix {
+        assert_eq!(xt.cols(), self.dim());
+        assert_eq!(x.cols(), self.dim());
+        let (m, n) = (xt.rows(), x.rows());
+        let mut c = Matrix::zeros(m, n);
+        for i in 0..m {
+            let ti = xt.row(i);
+            let row = c.row_mut(i);
+            for j in 0..n {
+                row[j] = self.corr(ti, x.row(j));
+            }
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Cholesky;
+    use crate::util::proptest::{check_default, gen_matrix, gen_size};
+    use crate::util::rng::Rng;
+
+    fn all_kinds() -> [KernelKind; 4] {
+        [
+            KernelKind::SquaredExponential,
+            KernelKind::Matern52,
+            KernelKind::Matern32,
+            KernelKind::AbsoluteExponential,
+        ]
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for kind in all_kinds() {
+            assert_eq!(KernelKind::from_name(kind.name()), Some(kind));
+        }
+        assert_eq!(KernelKind::from_name("nope"), None);
+    }
+
+    #[test]
+    fn unit_self_correlation_and_symmetry() {
+        let mut rng = Rng::new(1);
+        for kind in all_kinds() {
+            let k = Kernel::new(kind, vec![0.7, 1.3, 0.2]);
+            let a = rng.uniform_vec(3, -2.0, 2.0);
+            let b = rng.uniform_vec(3, -2.0, 2.0);
+            assert!((k.corr(&a, &a) - 1.0).abs() < 1e-14, "{kind:?}");
+            assert!((k.corr(&a, &b) - k.corr(&b, &a)).abs() < 1e-14);
+            let c = k.corr(&a, &b);
+            assert!((0.0..=1.0).contains(&c));
+        }
+    }
+
+    #[test]
+    fn se_matches_paper_eq1() {
+        // k(x,x') = ∏ exp(−θᵢ(xᵢ−x'ᵢ)²) per Eq. 1 (σ²=1 handled upstream).
+        let k = Kernel::new(KernelKind::SquaredExponential, vec![2.0, 0.5]);
+        let a = [1.0, 3.0];
+        let b = [0.0, 1.0];
+        let expect = (-2.0 * 1.0f64).exp() * (-0.5 * 4.0f64).exp();
+        assert!((k.corr(&a, &b) - expect).abs() < 1e-14);
+    }
+
+    #[test]
+    fn decays_with_distance() {
+        for kind in all_kinds() {
+            let k = Kernel::new(kind, vec![1.0]);
+            let c1 = k.corr(&[0.0], &[0.5]);
+            let c2 = k.corr(&[0.0], &[1.5]);
+            let c3 = k.corr(&[0.0], &[3.0]);
+            assert!(c1 > c2 && c2 > c3, "{kind:?}: no monotone decay");
+        }
+    }
+
+    #[test]
+    fn corr_matrix_psd_prop() {
+        // Kernel matrices must be PSD: Cholesky with small jitter succeeds.
+        check_default(|rng| {
+            let n = gen_size(rng, 2, 24);
+            let d = gen_size(rng, 1, 4);
+            let x = gen_matrix(rng, n, d, -3.0, 3.0);
+            for kind in all_kinds() {
+                let theta = rng.uniform_vec(d, 0.05, 2.0);
+                let k = Kernel::new(kind, theta);
+                let mut r = k.corr_matrix(&x);
+                for i in 0..n {
+                    r[(i, i)] += 1e-8; // nugget
+                }
+                crate::prop_assert!(
+                    Cholesky::new_regularized(&r).is_ok(),
+                    "{kind:?}: kernel matrix not PSD (n={n}, d={d})"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parallel_matrix_matches_sequential() {
+        let mut rng = Rng::new(5);
+        let x = gen_matrix(&mut rng, 300, 3, -1.0, 1.0);
+        let k = Kernel::new(KernelKind::SquaredExponential, vec![0.5, 1.0, 2.0]);
+        let seq = k.corr_matrix(&x);
+        let par = k.corr_matrix_parallel(&x, 4);
+        assert!(seq.max_abs_diff(&par) < 1e-15);
+    }
+
+    #[test]
+    fn cross_corr_consistent_with_corr_matrix() {
+        let mut rng = Rng::new(8);
+        let x = gen_matrix(&mut rng, 10, 2, -1.0, 1.0);
+        let k = Kernel::new(KernelKind::Matern52, vec![1.0, 1.0]);
+        let full = k.corr_matrix(&x);
+        let cross = k.cross_corr(&x, &x);
+        assert!(full.max_abs_diff(&cross) < 1e-14);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_theta_rejected() {
+        Kernel::new(KernelKind::SquaredExponential, vec![-1.0]);
+    }
+}

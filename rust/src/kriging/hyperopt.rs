@@ -1,0 +1,301 @@
+//! Hyper-parameter estimation for Kriging models.
+//!
+//! The paper (§II) estimates θ (and optionally the nugget) by maximizing
+//! the concentrated log-likelihood. We search over `log10 θ` with a
+//! multi-start Nelder–Mead simplex — derivative-free, robust to the
+//! multimodal likelihood surfaces Kriging exhibits, and each evaluation is
+//! one `O(n³)` model fit, which is exactly the cost structure Cluster
+//! Kriging is designed to shrink.
+
+use crate::kernel::{Kernel, KernelKind};
+use crate::kriging::model::{KrigingError, OrdinaryKriging};
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Search-space and budget configuration.
+#[derive(Debug, Clone)]
+pub struct HyperOpt {
+    pub kind: KernelKind,
+    /// log10 θ bounds (inclusive). Paper-style default: θ ∈ [1e-2, 1e2].
+    pub log_theta_bounds: (f64, f64),
+    /// Relative nugget λ. `Fixed(v)` uses v; `Estimate` adds log10 λ as an
+    /// extra search dimension within the given bounds (paper §VII mentions
+    /// nugget optimization as future work — we implement it).
+    pub nugget: NuggetMode,
+    /// Nelder–Mead restarts (first start is the space's center).
+    pub restarts: usize,
+    /// Max objective evaluations per restart.
+    pub max_evals: usize,
+    /// Use one shared θ for all dimensions (isotropic) instead of
+    /// per-dimension anisotropic θ. Cuts the search dimension from d to 1.
+    pub isotropic: bool,
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NuggetMode {
+    Fixed(f64),
+    /// Estimate log10 λ within these bounds.
+    Estimate { log_bounds: (f64, f64) },
+}
+
+impl Default for HyperOpt {
+    fn default() -> Self {
+        Self {
+            kind: KernelKind::SquaredExponential,
+            log_theta_bounds: (-2.0, 2.0),
+            nugget: NuggetMode::Fixed(1e-8),
+            restarts: 3,
+            max_evals: 60,
+            isotropic: false,
+            seed: 0x5EED,
+        }
+    }
+}
+
+impl HyperOpt {
+    /// Budget preset for large clusters where each evaluation is costly.
+    pub fn fast() -> Self {
+        Self { restarts: 2, max_evals: 30, ..Self::default() }
+    }
+
+    /// Fit a model with ML-estimated hyper-parameters.
+    pub fn fit(&self, x: Matrix, y: &[f64]) -> Result<OrdinaryKriging, KrigingError> {
+        let d = x.cols().max(1);
+        let theta_dims = if self.isotropic { 1 } else { d };
+        let (lo, hi) = self.log_theta_bounds;
+
+        let mut rng = Rng::new(self.seed ^ (x.rows() as u64) << 16 ^ d as u64);
+        let mut best: Option<OrdinaryKriging> = None;
+
+        // Objective: NLL of the model at decoded parameters; returns the
+        // fitted model so the best one is kept without a refit.
+        let decode = |p: &[f64]| -> (Vec<f64>, f64) {
+            let theta: Vec<f64> = if self.isotropic {
+                vec![10f64.powf(p[0].clamp(lo, hi)); d]
+            } else {
+                (0..d).map(|i| 10f64.powf(p[i].clamp(lo, hi))).collect()
+            };
+            let nugget = match self.nugget {
+                NuggetMode::Fixed(v) => v,
+                NuggetMode::Estimate { log_bounds } => {
+                    10f64.powf(p[theta_dims].clamp(log_bounds.0, log_bounds.1))
+                }
+            };
+            (theta, nugget)
+        };
+
+        for restart in 0..self.restarts.max(1) {
+            // Start point: center for the first restart, uniform random after.
+            let start: Vec<f64> = if restart == 0 {
+                let mut s = vec![0.5 * (lo + hi); theta_dims];
+                if let NuggetMode::Estimate { log_bounds } = self.nugget {
+                    s.push(0.5 * (log_bounds.0 + log_bounds.1));
+                }
+                s
+            } else {
+                let mut s = rng.uniform_vec(theta_dims, lo, hi);
+                if let NuggetMode::Estimate { log_bounds } = self.nugget {
+                    s.push(rng.uniform_in(log_bounds.0, log_bounds.1));
+                }
+                s
+            };
+
+            let mut local_best: Option<OrdinaryKriging> = None;
+            let mut objective = |p: &[f64]| -> f64 {
+                let (theta, nugget) = decode(p);
+                match OrdinaryKriging::fit(x.clone(), y, Kernel::new(self.kind, theta), nugget)
+                {
+                    Ok(model) => {
+                        let nll = model.nll();
+                        let better = local_best
+                            .as_ref()
+                            .map(|b| nll < b.nll())
+                            .unwrap_or(true);
+                        if better {
+                            local_best = Some(model);
+                        }
+                        nll
+                    }
+                    Err(_) => f64::INFINITY,
+                }
+            };
+            nelder_mead(&start, 0.5, self.max_evals, &mut objective);
+
+            if let Some(candidate) = local_best {
+                let better =
+                    best.as_ref().map(|b| candidate.nll() < b.nll()).unwrap_or(true);
+                if better {
+                    best = Some(candidate);
+                }
+            }
+        }
+
+        best.ok_or(KrigingError::NonFinite("likelihood (all restarts failed)"))
+    }
+}
+
+/// Plain Nelder–Mead simplex minimization.
+///
+/// `step` is the initial simplex edge; terminates after `max_evals`
+/// objective calls or simplex collapse. Returns the best point found.
+pub fn nelder_mead(
+    start: &[f64],
+    step: f64,
+    max_evals: usize,
+    f: &mut dyn FnMut(&[f64]) -> f64,
+) -> (Vec<f64>, f64) {
+    let n = start.len();
+    assert!(n > 0);
+    let (alpha, gamma, rho, sigma) = (1.0, 2.0, 0.5, 0.5);
+
+    let mut evals = 0usize;
+    let mut eval = |p: &[f64], evals: &mut usize| -> f64 {
+        *evals += 1;
+        let v = f(p);
+        if v.is_nan() {
+            f64::INFINITY
+        } else {
+            v
+        }
+    };
+
+    // Initial simplex: start + per-axis offsets.
+    let mut simplex: Vec<(Vec<f64>, f64)> = Vec::with_capacity(n + 1);
+    let v0 = eval(start, &mut evals);
+    simplex.push((start.to_vec(), v0));
+    for i in 0..n {
+        let mut p = start.to_vec();
+        p[i] += step;
+        let v = eval(&p, &mut evals);
+        simplex.push((p, v));
+    }
+
+    while evals < max_evals {
+        simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        // Convergence: simplex value spread.
+        if (simplex[n].1 - simplex[0].1).abs() < 1e-10 {
+            break;
+        }
+        // Centroid of all but the worst.
+        let mut centroid = vec![0.0; n];
+        for (p, _) in &simplex[..n] {
+            for i in 0..n {
+                centroid[i] += p[i] / n as f64;
+            }
+        }
+        let worst = simplex[n].clone();
+
+        // Reflection.
+        let refl: Vec<f64> =
+            (0..n).map(|i| centroid[i] + alpha * (centroid[i] - worst.0[i])).collect();
+        let refl_v = eval(&refl, &mut evals);
+
+        if refl_v < simplex[0].1 {
+            // Expansion.
+            let exp: Vec<f64> =
+                (0..n).map(|i| centroid[i] + gamma * (refl[i] - centroid[i])).collect();
+            let exp_v = eval(&exp, &mut evals);
+            simplex[n] = if exp_v < refl_v { (exp, exp_v) } else { (refl, refl_v) };
+        } else if refl_v < simplex[n - 1].1 {
+            simplex[n] = (refl, refl_v);
+        } else {
+            // Contraction.
+            let con: Vec<f64> =
+                (0..n).map(|i| centroid[i] + rho * (worst.0[i] - centroid[i])).collect();
+            let con_v = eval(&con, &mut evals);
+            if con_v < worst.1 {
+                simplex[n] = (con, con_v);
+            } else {
+                // Shrink toward the best.
+                let best = simplex[0].0.clone();
+                for item in simplex.iter_mut().skip(1) {
+                    for i in 0..n {
+                        item.0[i] = best[i] + sigma * (item.0[i] - best[i]);
+                    }
+                    item.1 = eval(&item.0, &mut evals);
+                }
+            }
+        }
+    }
+
+    simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    simplex.swap_remove(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::gen_matrix;
+
+    #[test]
+    fn nelder_mead_minimizes_quadratic() {
+        let mut f = |p: &[f64]| (p[0] - 3.0).powi(2) + (p[1] + 1.0).powi(2);
+        let (p, v) = nelder_mead(&[0.0, 0.0], 1.0, 300, &mut f);
+        assert!(v < 1e-6, "value {v}");
+        assert!((p[0] - 3.0).abs() < 1e-3 && (p[1] + 1.0).abs() < 1e-3, "{p:?}");
+    }
+
+    #[test]
+    fn nelder_mead_handles_nan_objective() {
+        let mut f = |p: &[f64]| if p[0] < 0.0 { f64::NAN } else { p[0] * p[0] };
+        let (p, v) = nelder_mead(&[2.0], 0.5, 100, &mut f);
+        assert!(v < 1e-4);
+        assert!(p[0].abs() < 0.1);
+    }
+
+    #[test]
+    fn recovers_reasonable_length_scale() {
+        // Data from a smooth 1-d function; ML θ should beat extremes.
+        let mut rng = Rng::new(17);
+        let x = gen_matrix(&mut rng, 50, 1, -3.0, 3.0);
+        let y: Vec<f64> = (0..50).map(|i| (x.row(i)[0]).sin()).collect();
+        let opt = HyperOpt { restarts: 2, max_evals: 40, ..Default::default() };
+        let model = opt.fit(x.clone(), &y).unwrap();
+        let extreme = OrdinaryKriging::fit(
+            x.clone(),
+            &y,
+            Kernel::se_isotropic(1, 1e2),
+            1e-8,
+        )
+        .unwrap();
+        assert!(model.nll() <= extreme.nll() + 1e-9);
+        // The optimized model should interpolate well.
+        let pred = model.predict(&x).unwrap();
+        let max_err = pred
+            .mean
+            .iter()
+            .zip(&y)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        assert!(max_err < 1e-2, "max_err {max_err}");
+    }
+
+    #[test]
+    fn isotropic_mode_searches_one_dim() {
+        let mut rng = Rng::new(23);
+        let x = gen_matrix(&mut rng, 30, 3, -1.0, 1.0);
+        let y: Vec<f64> = (0..30).map(|i| x.row(i).iter().sum::<f64>()).collect();
+        let opt = HyperOpt { isotropic: true, restarts: 1, max_evals: 25, ..Default::default() };
+        let model = opt.fit(x, &y).unwrap();
+        let t = model.kernel().theta.clone();
+        assert!(t.windows(2).all(|w| (w[0] - w[1]).abs() < 1e-12), "not isotropic: {t:?}");
+    }
+
+    #[test]
+    fn nugget_estimation_recovers_noise_regime() {
+        // Noisy data: estimated nugget should exceed the tiny default.
+        let mut rng = Rng::new(31);
+        let x = gen_matrix(&mut rng, 60, 1, -3.0, 3.0);
+        let y: Vec<f64> =
+            (0..60).map(|i| x.row(i)[0].sin() + rng.normal_with(0.0, 0.5)).collect();
+        let opt = HyperOpt {
+            nugget: NuggetMode::Estimate { log_bounds: (-8.0, 1.0) },
+            restarts: 2,
+            max_evals: 60,
+            ..Default::default()
+        };
+        let model = opt.fit(x, &y).unwrap();
+        assert!(model.nugget() > 1e-4, "nugget {} too small for noisy data", model.nugget());
+    }
+}

@@ -1,0 +1,36 @@
+//! Ordinary Kriging (Gaussian process regression) — the per-cluster model.
+//!
+//! [`model::OrdinaryKriging`] implements paper Eq. 3–5 with concentrated
+//! trend/variance estimates; [`hyperopt::HyperOpt`] performs the ML
+//! hyper-parameter search. The [`Surrogate`] trait is the common predict
+//! interface shared by plain Kriging, the Cluster-Kriging flavors and all
+//! baselines, so the evaluation harness treats every algorithm uniformly.
+
+pub mod hyperopt;
+pub mod model;
+
+pub use hyperopt::{HyperOpt, NuggetMode};
+pub use model::{KrigingError, OrdinaryKriging, Prediction};
+
+use crate::util::matrix::Matrix;
+
+/// Anything that predicts a posterior mean + variance for a batch of
+/// points. Implemented by `OrdinaryKriging`, every Cluster-Kriging flavor
+/// and the baselines (SoD, FITC, BCM).
+pub trait Surrogate: Send + Sync {
+    /// Posterior mean and variance per row of `xt`.
+    fn predict(&self, xt: &Matrix) -> anyhow::Result<Prediction>;
+
+    /// Human-readable algorithm name (for reports).
+    fn name(&self) -> &str;
+}
+
+impl Surrogate for OrdinaryKriging {
+    fn predict(&self, xt: &Matrix) -> anyhow::Result<Prediction> {
+        Ok(OrdinaryKriging::predict(self, xt)?)
+    }
+
+    fn name(&self) -> &str {
+        "Kriging"
+    }
+}

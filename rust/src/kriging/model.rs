@@ -1,0 +1,383 @@
+//! Ordinary Kriging — paper §II, Eq. 3–5.
+//!
+//! Parameterization: the covariance is `σ²·(R + λI)` where `R` is the unit
+//! diagonal correlation matrix from [`Kernel`], `λ = σ_γ²/σ²` the *relative
+//! nugget* and `σ²` the process variance. `σ²` and the constant trend `μ`
+//! are concentrated out by their closed-form ML/MAP estimates, so the
+//! hyper-parameter search only runs over `θ` (and optionally `λ`).
+//!
+//! Posterior mean (Eq. 4):  m(x)  = μ̂ + r(x)ᵀ C⁻¹ (y − μ̂·1)
+//! Posterior var  (Eq. 5):  s²(x) = σ̂²·[λ + 1 − r(x)ᵀC⁻¹r(x)
+//!                                    + (1 − 1ᵀC⁻¹r(x))²/(1ᵀC⁻¹1)]
+//! with C = R + λI and r(x) the correlation vector to the training set.
+
+use crate::kernel::Kernel;
+use crate::linalg::{Cholesky, CholeskyError};
+use crate::util::matrix::Matrix;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum KrigingError {
+    #[error("training set is empty")]
+    EmptyTrainingSet,
+    #[error("dimension mismatch: x has {x_cols} cols, kernel expects {kernel_dim}")]
+    DimMismatch { x_cols: usize, kernel_dim: usize },
+    #[error("x has {x_rows} rows but y has {y_len} values")]
+    RowMismatch { x_rows: usize, y_len: usize },
+    #[error("correlation matrix factorization failed: {0}")]
+    Factorization(#[from] CholeskyError),
+    #[error("non-finite value encountered in {0}")]
+    NonFinite(&'static str),
+}
+
+/// Joint mean/variance prediction for a batch of points.
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    pub mean: Vec<f64>,
+    pub variance: Vec<f64>,
+}
+
+impl Prediction {
+    pub fn len(&self) -> usize {
+        self.mean.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mean.is_empty()
+    }
+}
+
+/// A fitted Ordinary Kriging model.
+#[derive(Debug, Clone)]
+pub struct OrdinaryKriging {
+    kernel: Kernel,
+    /// Relative nugget λ = σ_γ² / σ².
+    nugget: f64,
+    x: Matrix,
+    chol: Cholesky,
+    /// α = C⁻¹(y − μ̂·1): the prediction weights.
+    alpha: Vec<f64>,
+    /// 1ᵀC⁻¹1.
+    one_c_one: f64,
+    mu_hat: f64,
+    /// σ̂²: ML estimate of the process variance.
+    sigma2: f64,
+    /// Concentrated negative log-likelihood of (θ, λ) on this data.
+    nll: f64,
+}
+
+impl OrdinaryKriging {
+    /// Fit on inputs `x` (n×d) and outputs `y` (n) with the given kernel
+    /// and relative nugget λ ≥ 0.
+    pub fn fit(x: Matrix, y: &[f64], kernel: Kernel, nugget: f64) -> Result<Self, KrigingError> {
+        let n = x.rows();
+        if n == 0 {
+            return Err(KrigingError::EmptyTrainingSet);
+        }
+        if x.cols() != kernel.dim() {
+            return Err(KrigingError::DimMismatch { x_cols: x.cols(), kernel_dim: kernel.dim() });
+        }
+        if y.len() != n {
+            return Err(KrigingError::RowMismatch { x_rows: n, y_len: y.len() });
+        }
+        if y.iter().any(|v| !v.is_finite()) {
+            return Err(KrigingError::NonFinite("y"));
+        }
+
+        // C = R + λI.
+        let mut c = kernel.corr_matrix(&x);
+        for i in 0..n {
+            c[(i, i)] += nugget;
+        }
+        let chol = Cholesky::new_regularized(&c)?;
+
+        // μ̂ = (1ᵀC⁻¹y)/(1ᵀC⁻¹1)  (MAP trend, Eq. 4 right).
+        let ones = vec![1.0; n];
+        let c_inv_one = chol.solve(&ones);
+        let c_inv_y = chol.solve(y);
+        let one_c_one: f64 = c_inv_one.iter().sum();
+        let one_c_y: f64 = c_inv_y.iter().sum();
+        let mu_hat = one_c_y / one_c_one;
+
+        // α = C⁻¹(y − μ̂1) = C⁻¹y − μ̂·C⁻¹1.
+        let alpha: Vec<f64> =
+            c_inv_y.iter().zip(&c_inv_one).map(|(a, b)| a - mu_hat * b).collect();
+
+        // σ̂² = (y−μ̂1)ᵀC⁻¹(y−μ̂1)/n.
+        let resid_quad: f64 =
+            y.iter().zip(&alpha).map(|(yi, ai)| (yi - mu_hat) * ai).sum();
+        let sigma2 = (resid_quad / n as f64).max(1e-300);
+
+        // Concentrated NLL (up to an additive constant):
+        //   n·ln σ̂² + ln|C|, halved.
+        let nll = 0.5 * (n as f64 * sigma2.ln() + chol.log_det());
+        if !nll.is_finite() {
+            return Err(KrigingError::NonFinite("likelihood"));
+        }
+
+        Ok(Self { kernel, nugget, x, chol, alpha, one_c_one, mu_hat, sigma2, nll })
+    }
+
+    /// Posterior mean and Kriging variance at each row of `xt` (m×d).
+    ///
+    /// Batched: assembles the m×n cross-correlation block and runs the
+    /// triangular solves with all points as simultaneous right-hand
+    /// sides (`Cholesky::solve_matrix`), streaming the factor once per
+    /// chunk instead of once per point — the predict hot path (§Perf).
+    pub fn predict(&self, xt: &Matrix) -> Result<Prediction, KrigingError> {
+        if xt.cols() != self.kernel.dim() {
+            return Err(KrigingError::DimMismatch {
+                x_cols: xt.cols(),
+                kernel_dim: self.kernel.dim(),
+            });
+        }
+        let m = xt.rows();
+        let n = self.x.rows();
+        let mut mean = Vec::with_capacity(m);
+        let mut variance = Vec::with_capacity(m);
+        // Chunk to bound the n×chunk solve workspace.
+        const CHUNK: usize = 256;
+        for start in (0..m).step_by(CHUNK) {
+            let rows: Vec<usize> = (start..(start + CHUNK).min(m)).collect();
+            let xt_chunk = xt.select_rows(&rows);
+            let rt = self.kernel.cross_corr(&xt_chunk, &self.x); // c×n
+            let c_inv_r = self.chol.solve_matrix(&rt.transpose()); // n×c
+            for (ci, _) in rows.iter().enumerate() {
+                let r = rt.row(ci);
+                let mut mu = self.mu_hat;
+                let mut r_c_r = 0.0;
+                let mut one_c_r = 0.0;
+                for j in 0..n {
+                    mu += r[j] * self.alpha[j];
+                    let v = c_inv_r[(j, ci)];
+                    r_c_r += r[j] * v;
+                    one_c_r += v;
+                }
+                let t = 1.0 - one_c_r;
+                let var =
+                    self.sigma2 * (self.nugget + 1.0 - r_c_r + t * t / self.one_c_one);
+                mean.push(mu);
+                variance.push(var.max(0.0));
+            }
+        }
+        Ok(Prediction { mean, variance })
+    }
+
+    /// Single-point prediction (used by the router fast path).
+    pub fn predict_one(&self, xt: &[f64]) -> (f64, f64) {
+        let n = self.x.rows();
+        // r(x): correlations to the training points.
+        let mut r = Vec::with_capacity(n);
+        for j in 0..n {
+            r.push(self.kernel.corr(xt, self.x.row(j)));
+        }
+        // Mean: μ̂ + rᵀα.
+        let mut mu = self.mu_hat;
+        for j in 0..n {
+            mu += r[j] * self.alpha[j];
+        }
+        // Variance (Eq. 5): σ̂²(λ + 1 − rᵀC⁻¹r + (1 − 1ᵀC⁻¹r)²/1ᵀC⁻¹1).
+        let c_inv_r = self.chol.solve(&r);
+        let r_c_r: f64 = r.iter().zip(&c_inv_r).map(|(a, b)| a * b).sum();
+        let one_c_r: f64 = c_inv_r.iter().sum();
+        let trend_term = {
+            let t = 1.0 - one_c_r;
+            t * t / self.one_c_one
+        };
+        let var = self.sigma2 * (self.nugget + 1.0 - r_c_r + trend_term);
+        (mu, var.max(0.0))
+    }
+
+    /// Number of training points.
+    pub fn n_train(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn kernel(&self) -> &Kernel {
+        &self.kernel
+    }
+
+    pub fn nugget(&self) -> f64 {
+        self.nugget
+    }
+
+    /// Estimated constant trend μ̂.
+    pub fn mu_hat(&self) -> f64 {
+        self.mu_hat
+    }
+
+    /// Estimated process variance σ̂².
+    pub fn sigma2(&self) -> f64 {
+        self.sigma2
+    }
+
+    /// Concentrated negative log-likelihood at the fitted parameters
+    /// (lower is better; comparable across θ on the same data only).
+    pub fn nll(&self) -> f64 {
+        self.nll
+    }
+
+    /// Training inputs (used by the PJRT predict path and diagnostics).
+    pub fn x_train(&self) -> &Matrix {
+        &self.x
+    }
+
+    /// Prediction weights α = C⁻¹(y − μ̂1).
+    pub fn alpha(&self) -> &[f64] {
+        &self.alpha
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::KernelKind;
+    use crate::util::proptest::{check_default, gen_matrix, gen_size};
+    use crate::util::rng::Rng;
+
+    fn toy_model(n: usize, seed: u64, nugget: f64) -> (OrdinaryKriging, Matrix, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let x = gen_matrix(&mut rng, n, 2, -2.0, 2.0);
+        let y: Vec<f64> =
+            (0..n).map(|i| (x.row(i)[0]).sin() + 0.5 * x.row(i)[1]).collect();
+        let kernel = Kernel::new(KernelKind::SquaredExponential, vec![1.0, 1.0]);
+        let m = OrdinaryKriging::fit(x.clone(), &y, kernel, nugget).unwrap();
+        (m, x, y)
+    }
+
+    #[test]
+    fn interpolates_training_points_with_zero_nugget() {
+        let (m, x, y) = toy_model(30, 1, 0.0);
+        let pred = m.predict(&x).unwrap();
+        for i in 0..x.rows() {
+            assert!(
+                (pred.mean[i] - y[i]).abs() < 1e-5,
+                "no interpolation at {i}: {} vs {}",
+                pred.mean[i],
+                y[i]
+            );
+            // Kriging variance ~0 at training points.
+            assert!(pred.variance[i] < 1e-5, "variance {} at train point", pred.variance[i]);
+        }
+    }
+
+    #[test]
+    fn variance_grows_away_from_data() {
+        let (m, _, _) = toy_model(25, 2, 1e-8);
+        let near = m.predict_one(&[0.1, 0.1]).1;
+        let far = m.predict_one(&[50.0, 50.0]).1;
+        assert!(far > near, "far variance {far} <= near {near}");
+        // Far from data the posterior reverts to ~σ̂²(1+λ+1/1ᵀC⁻¹1) > σ̂².
+        assert!(far >= m.sigma2() * 0.9);
+    }
+
+    #[test]
+    fn far_prediction_reverts_to_trend() {
+        let (m, _, _) = toy_model(25, 3, 1e-8);
+        let (mu, _) = m.predict_one(&[100.0, -100.0]);
+        assert!((mu - m.mu_hat()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn constant_data_yields_constant_prediction() {
+        let x = Matrix::from_rows(&[&[0.0], &[1.0], &[2.0]]);
+        let y = [5.0, 5.0, 5.0];
+        let kernel = Kernel::se_isotropic(1, 1.0);
+        let m = OrdinaryKriging::fit(x, &y, kernel, 1e-6).unwrap();
+        assert!((m.mu_hat() - 5.0).abs() < 1e-9);
+        let (mu, _) = m.predict_one(&[0.5]);
+        assert!((mu - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prediction_equivariant_under_y_shift_prop() {
+        // Shifting y by a constant shifts predictions by the same constant
+        // and leaves variances unchanged (ordinary Kriging handles trend).
+        check_default(|rng| {
+            let n = gen_size(rng, 5, 25);
+            let x = gen_matrix(rng, n, 2, -1.0, 1.0);
+            let y: Vec<f64> = (0..n).map(|i| x.row(i)[0] * x.row(i)[1]).collect();
+            let shifted: Vec<f64> = y.iter().map(|v| v + 37.5).collect();
+            let kern = Kernel::se_isotropic(2, 0.8);
+            let m1 = OrdinaryKriging::fit(x.clone(), &y, kern.clone(), 1e-6)
+                .map_err(|e| e.to_string())?;
+            let m2 = OrdinaryKriging::fit(x.clone(), &shifted, kern, 1e-6)
+                .map_err(|e| e.to_string())?;
+            let xt = gen_matrix(rng, 5, 2, -1.5, 1.5);
+            let p1 = m1.predict(&xt).map_err(|e| e.to_string())?;
+            let p2 = m2.predict(&xt).map_err(|e| e.to_string())?;
+            for i in 0..5 {
+                crate::prop_assert!(
+                    (p2.mean[i] - p1.mean[i] - 37.5).abs() < 1e-6,
+                    "mean not equivariant at {i}"
+                );
+                crate::prop_assert!(
+                    (p2.variance[i] - p1.variance[i]).abs() < 1e-6,
+                    "variance changed under shift at {i}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn nugget_smooths_interpolation() {
+        // With a large nugget the model should NOT interpolate noisy data.
+        let mut rng = Rng::new(9);
+        let x = gen_matrix(&mut rng, 40, 1, -2.0, 2.0);
+        let y: Vec<f64> =
+            (0..40).map(|i| x.row(i)[0].sin() + rng.normal_with(0.0, 0.3)).collect();
+        let kern = Kernel::se_isotropic(1, 1.0);
+        let interp = OrdinaryKriging::fit(x.clone(), &y, kern.clone(), 1e-10).unwrap();
+        let smooth = OrdinaryKriging::fit(x.clone(), &y, kern, 0.5).unwrap();
+        let pi = interp.predict(&x).unwrap();
+        let ps = smooth.predict(&x).unwrap();
+        let err_i: f64 = pi.mean.iter().zip(&y).map(|(a, b)| (a - b).abs()).sum();
+        let err_s: f64 = ps.mean.iter().zip(&y).map(|(a, b)| (a - b).abs()).sum();
+        assert!(err_i < err_s, "nugget did not smooth: {err_i} vs {err_s}");
+    }
+
+    #[test]
+    fn error_cases() {
+        let kern = Kernel::se_isotropic(2, 1.0);
+        assert!(matches!(
+            OrdinaryKriging::fit(Matrix::zeros(0, 2), &[], kern.clone(), 0.0),
+            Err(KrigingError::EmptyTrainingSet)
+        ));
+        assert!(matches!(
+            OrdinaryKriging::fit(Matrix::zeros(2, 3), &[0.0, 0.0], kern.clone(), 0.0),
+            Err(KrigingError::DimMismatch { .. })
+        ));
+        assert!(matches!(
+            OrdinaryKriging::fit(Matrix::zeros(2, 2), &[0.0], kern.clone(), 0.0),
+            Err(KrigingError::RowMismatch { .. })
+        ));
+        assert!(matches!(
+            OrdinaryKriging::fit(Matrix::zeros(2, 2), &[f64::NAN, 0.0], kern, 0.0),
+            Err(KrigingError::NonFinite(_))
+        ));
+    }
+
+    #[test]
+    fn better_theta_has_lower_nll() {
+        // Data generated with a length scale ~1; θ=1 should beat θ=100.
+        let mut rng = Rng::new(4);
+        let x = gen_matrix(&mut rng, 60, 1, -3.0, 3.0);
+        let y: Vec<f64> = (0..60).map(|i| (1.5 * x.row(i)[0]).sin()).collect();
+        let good = OrdinaryKriging::fit(
+            x.clone(),
+            &y,
+            Kernel::se_isotropic(1, 1.0),
+            1e-8,
+        )
+        .unwrap();
+        let bad = OrdinaryKriging::fit(
+            x.clone(),
+            &y,
+            Kernel::se_isotropic(1, 1e4),
+            1e-8,
+        )
+        .unwrap();
+        assert!(good.nll() < bad.nll(), "{} vs {}", good.nll(), bad.nll());
+    }
+}

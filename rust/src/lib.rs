@@ -1,0 +1,31 @@
+//! # Cluster Kriging
+//!
+//! Production-quality reproduction of *"Cluster-based Kriging
+//! Approximation Algorithms for Complexity Reduction"* (van Stein, Wang,
+//! Kowalczyk, Emmerich, Bäck — 2017).
+//!
+//! Kriging / Gaussian-process regression is `O(n³)` in training time and
+//! `O(n²)` in memory. This crate implements the paper's Cluster Kriging
+//! framework — partition the data, fit independent Kriging models per
+//! cluster in parallel, and combine their predictions — plus the four
+//! concrete flavors (OWCK, OWFCK, GMMCK, MTCK), the baselines it is
+//! evaluated against (SoD, FITC, BCM), and the full evaluation harness
+//! reproducing the paper's tables and figures.
+//!
+//! Architecture: a three-layer Rust + JAX + Pallas stack. The Rust layer
+//! (this crate) owns coordination — clustering, parallel fit, routing,
+//! weighting, serving; the dense Kriging algebra can be executed either by
+//! the built-in native backend ([`linalg`]) or by AOT-compiled XLA
+//! artifacts authored in JAX/Pallas and loaded through PJRT ([`runtime`]).
+pub mod util;
+pub mod linalg;
+pub mod kernel;
+pub mod kriging;
+pub mod clustering;
+pub mod cluster_kriging;
+pub mod baselines;
+pub mod data;
+pub mod metrics;
+pub mod eval;
+pub mod runtime;
+pub mod coordinator;

@@ -1,0 +1,238 @@
+//! Dense micro-kernels: matmul, syrk, gemv.
+//!
+//! These are the native-backend hot spots (kernel-matrix assembly and the
+//! Cholesky inner loops call into them). Implemented with cache-blocked
+//! loops over the row-major [`Matrix`]; the L3 perf pass tunes the block
+//! sizes (see EXPERIMENTS.md §Perf).
+
+use crate::util::matrix::Matrix;
+use crate::util::threadpool::scoped_for_chunks;
+
+/// Cache block edge for the blocked matmul (elements, not bytes).
+/// 64×64 f64 tiles = 32 KiB per operand tile — fits L1d on current x86.
+const BLOCK: usize = 64;
+
+/// `C = A · B` (blocked, single-threaded).
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul: inner dim mismatch");
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// `C += A · B` accumulating into an existing buffer.
+pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    assert_eq!(k, b.rows());
+    assert_eq!((m, n), c.shape());
+    let (aa, bb) = (a.as_slice(), b.as_slice());
+    let cc = c.as_mut_slice();
+    for i0 in (0..m).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(m);
+        for p0 in (0..k).step_by(BLOCK) {
+            let p1 = (p0 + BLOCK).min(k);
+            for j0 in (0..n).step_by(BLOCK) {
+                let j1 = (j0 + BLOCK).min(n);
+                for i in i0..i1 {
+                    let arow = &aa[i * k..(i + 1) * k];
+                    let crow = &mut cc[i * n..(i + 1) * n];
+                    for p in p0..p1 {
+                        let aip = arow[p];
+                        if aip == 0.0 {
+                            continue;
+                        }
+                        let brow = &bb[p * n..(p + 1) * n];
+                        for j in j0..j1 {
+                            crow[j] += aip * brow[j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `C = A · B` with row-parallelism across `workers` threads.
+pub fn matmul_parallel(a: &Matrix, b: &Matrix, workers: usize) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul: inner dim mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Matrix::zeros(m, n);
+    // SAFETY-free parallelism: each worker owns a disjoint row range of C.
+    let aa = a.as_slice();
+    let bb = b.as_slice();
+    let c_ptr = SendPtr(c.as_mut_slice().as_mut_ptr());
+    scoped_for_chunks(m, workers, |rows| {
+        let cc = unsafe {
+            std::slice::from_raw_parts_mut(
+                c_ptr.get().add(rows.start * n),
+                (rows.end - rows.start) * n,
+            )
+        };
+        for (local_i, i) in rows.clone().enumerate() {
+            let arow = &aa[i * k..(i + 1) * k];
+            let crow = &mut cc[local_i * n..(local_i + 1) * n];
+            for p in 0..k {
+                let aip = arow[p];
+                if aip == 0.0 {
+                    continue;
+                }
+                let brow = &bb[p * n..(p + 1) * n];
+                for j in 0..n {
+                    crow[j] += aip * brow[j];
+                }
+            }
+        }
+    });
+    c
+}
+
+/// Wrapper making a raw pointer Send for disjoint-range writes. Accessed
+/// through `get()` so closures capture the (Sync) wrapper, not the field.
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+impl SendPtr {
+    fn get(&self) -> *mut f64 {
+        self.0
+    }
+}
+
+/// `C = A · Aᵀ` (symmetric rank-k update; only computes the lower triangle
+/// then mirrors). Used for Gram/covariance assembly.
+pub fn syrk(a: &Matrix) -> Matrix {
+    let (m, k) = (a.rows(), a.cols());
+    let mut c = Matrix::zeros(m, m);
+    for i in 0..m {
+        let ri = a.row(i);
+        for j in 0..=i {
+            let rj = a.row(j);
+            let mut acc = 0.0;
+            for p in 0..k {
+                acc += ri[p] * rj[p];
+            }
+            c[(i, j)] = acc;
+            c[(j, i)] = acc;
+        }
+    }
+    c
+}
+
+/// `y = A · x` (delegates to Matrix::matvec; kept for API symmetry).
+pub fn gemv(a: &Matrix, x: &[f64]) -> Vec<f64> {
+    a.matvec(x)
+}
+
+/// `AᵀA` for a tall matrix (k×k output from m×k input).
+pub fn gram(a: &Matrix) -> Matrix {
+    let (m, k) = (a.rows(), a.cols());
+    let mut c = Matrix::zeros(k, k);
+    // Accumulate row outer products — sequential over m, cache friendly.
+    for i in 0..m {
+        let r = a.row(i);
+        for p in 0..k {
+            let rp = r[p];
+            if rp == 0.0 {
+                continue;
+            }
+            for q in p..k {
+                c[(p, q)] += rp * r[q];
+            }
+        }
+    }
+    for p in 0..k {
+        for q in 0..p {
+            c[(p, q)] = c[(q, p)];
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check_default, gen_matrix, gen_size};
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        Matrix::from_fn(m, n, |i, j| (0..k).map(|p| a[(i, p)] * b[(p, j)]).sum())
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Matrix::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = matmul(&a, &b);
+        assert_eq!(c, Matrix::from_rows(&[&[19.0, 22.0], &[43.0, 50.0]]));
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        assert_eq!(matmul(&a, &Matrix::identity(3)), a);
+        assert_eq!(matmul(&Matrix::identity(2), &a), a);
+    }
+
+    #[test]
+    fn blocked_matches_naive_prop() {
+        check_default(|rng| {
+            let m = gen_size(rng, 1, 40);
+            let k = gen_size(rng, 1, 40);
+            let n = gen_size(rng, 1, 40);
+            let a = gen_matrix(rng, m, k, -2.0, 2.0);
+            let b = gen_matrix(rng, k, n, -2.0, 2.0);
+            let fast = matmul(&a, &b);
+            let slow = naive_matmul(&a, &b);
+            crate::prop_assert!(fast.max_abs_diff(&slow) < 1e-10, "blocked != naive");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parallel_matches_sequential_prop() {
+        check_default(|rng| {
+            let m = gen_size(rng, 1, 64);
+            let k = gen_size(rng, 1, 32);
+            let n = gen_size(rng, 1, 32);
+            let a = gen_matrix(rng, m, k, -1.0, 1.0);
+            let b = gen_matrix(rng, k, n, -1.0, 1.0);
+            let seq = matmul(&a, &b);
+            let par = matmul_parallel(&a, &b, 4);
+            crate::prop_assert!(seq.max_abs_diff(&par) < 1e-12, "parallel != sequential");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn syrk_matches_explicit() {
+        check_default(|rng| {
+            let m = gen_size(rng, 1, 20);
+            let k = gen_size(rng, 1, 20);
+            let a = gen_matrix(rng, m, k, -1.0, 1.0);
+            let explicit = naive_matmul(&a, &a.transpose());
+            crate::prop_assert!(syrk(&a).max_abs_diff(&explicit) < 1e-10);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gram_matches_explicit() {
+        check_default(|rng| {
+            let m = gen_size(rng, 1, 20);
+            let k = gen_size(rng, 1, 10);
+            let a = gen_matrix(rng, m, k, -1.0, 1.0);
+            let explicit = naive_matmul(&a.transpose(), &a);
+            crate::prop_assert!(gram(&a).max_abs_diff(&explicit) < 1e-10);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matmul_into_accumulates() {
+        let a = Matrix::identity(2);
+        let b = Matrix::from_rows(&[&[1.0, 0.0], &[0.0, 1.0]]);
+        let mut c = Matrix::filled(2, 2, 1.0);
+        matmul_into(&a, &b, &mut c);
+        assert_eq!(c[(0, 0)], 2.0);
+        assert_eq!(c[(0, 1)], 1.0);
+    }
+}

@@ -1,0 +1,188 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi method.
+//!
+//! Used by the full-covariance GMM (log-density needs `log|Σ|` and `Σ⁻¹`
+//! with guaranteed symmetry handling) and by diagnostics that check kernel
+//! matrices for near-singularity. Jacobi is `O(n³)` per sweep but the
+//! matrices involved here are small (d×d covariances, d ≤ ~32).
+
+use crate::util::matrix::Matrix;
+
+/// Eigen pairs of a symmetric matrix, eigenvalues ascending.
+#[derive(Debug, Clone)]
+pub struct SymEig {
+    pub values: Vec<f64>,
+    /// Column `j` of `vectors` is the eigenvector for `values[j]`.
+    pub vectors: Matrix,
+}
+
+/// Decompose a symmetric matrix with the cyclic Jacobi rotation method.
+/// Panics on non-square input; asymmetry is symmetrized first.
+pub fn sym_eig(a: &Matrix) -> SymEig {
+    assert_eq!(a.rows(), a.cols(), "sym_eig: not square");
+    let n = a.rows();
+    // Work on the symmetrized copy (guards tiny float asymmetries).
+    let mut m = Matrix::from_fn(n, n, |i, j| 0.5 * (a[(i, j)] + a[(j, i)]));
+    let mut v = Matrix::identity(n);
+
+    let max_sweeps = 64;
+    for _ in 0..max_sweeps {
+        // Off-diagonal Frobenius norm.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-14 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = 0.5 * (aqq - app) / apq;
+                // Stable tangent of the rotation angle.
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Apply the rotation J(p,q,θ)ᵀ M J(p,q,θ).
+                for i in 0..n {
+                    let mip = m[(i, p)];
+                    let miq = m[(i, q)];
+                    m[(i, p)] = c * mip - s * miq;
+                    m[(i, q)] = s * mip + c * miq;
+                }
+                for j in 0..n {
+                    let mpj = m[(p, j)];
+                    let mqj = m[(q, j)];
+                    m[(p, j)] = c * mpj - s * mqj;
+                    m[(q, j)] = s * mpj + c * mqj;
+                }
+                for i in 0..n {
+                    let vip = v[(i, p)];
+                    let viq = v[(i, q)];
+                    v[(i, p)] = c * vip - s * viq;
+                    v[(i, q)] = s * vip + c * viq;
+                }
+            }
+        }
+    }
+
+    // Extract and sort ascending.
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[(i, i)], i)).collect();
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let values: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+    let mut vectors = Matrix::zeros(n, n);
+    for (new_j, &(_, old_j)) in pairs.iter().enumerate() {
+        for i in 0..n {
+            vectors[(i, new_j)] = v[(i, old_j)];
+        }
+    }
+    SymEig { values, vectors }
+}
+
+impl SymEig {
+    /// Smallest eigenvalue.
+    pub fn min_eigenvalue(&self) -> f64 {
+        self.values.first().copied().unwrap_or(f64::NAN)
+    }
+
+    /// log-determinant; NaN if any eigenvalue ≤ 0.
+    pub fn log_det(&self) -> f64 {
+        self.values.iter().map(|&l| l.ln()).sum()
+    }
+
+    /// Condition number |λmax| / |λmin|.
+    pub fn condition_number(&self) -> f64 {
+        let lmin = self.values.first().copied().unwrap_or(f64::NAN).abs();
+        let lmax = self.values.last().copied().unwrap_or(f64::NAN).abs();
+        lmax / lmin
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check_default, gen_size, gen_spd};
+
+    #[test]
+    fn diagonal_matrix_eigs_are_diagonal() {
+        let a = Matrix::from_rows(&[&[3.0, 0.0], &[0.0, 1.0]]);
+        let e = sym_eig(&a);
+        assert!((e.values[0] - 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3.
+        let a = Matrix::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]);
+        let e = sym_eig(&a);
+        assert!((e.values[0] - 1.0).abs() < 1e-10);
+        assert!((e.values[1] - 3.0).abs() < 1e-10);
+        assert!((e.condition_number() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reconstruction_prop() {
+        check_default(|rng| {
+            let n = gen_size(rng, 1, 10);
+            let a = gen_spd(rng, n);
+            let e = sym_eig(&a);
+            // Rebuild A = V Λ Vᵀ.
+            let mut rebuilt = Matrix::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    let mut acc = 0.0;
+                    for p in 0..n {
+                        acc += e.vectors[(i, p)] * e.values[p] * e.vectors[(j, p)];
+                    }
+                    rebuilt[(i, j)] = acc;
+                }
+            }
+            crate::prop_assert!(rebuilt.max_abs_diff(&a) < 1e-8, "VΛVᵀ != A");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn vectors_orthonormal_prop() {
+        check_default(|rng| {
+            let n = gen_size(rng, 1, 10);
+            let a = gen_spd(rng, n);
+            let e = sym_eig(&a);
+            for p in 0..n {
+                for q in 0..n {
+                    let dot: f64 = (0..n).map(|i| e.vectors[(i, p)] * e.vectors[(i, q)]).sum();
+                    let expect = if p == q { 1.0 } else { 0.0 };
+                    crate::prop_assert!(
+                        (dot - expect).abs() < 1e-9,
+                        "V not orthonormal at ({p},{q}): {dot}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn spd_eigenvalues_positive_and_logdet() {
+        check_default(|rng| {
+            let n = gen_size(rng, 1, 8);
+            let a = gen_spd(rng, n);
+            let e = sym_eig(&a);
+            crate::prop_assert!(e.min_eigenvalue() > 0.0, "SPD with non-positive eig");
+            // Cross-check log|A| against Cholesky.
+            let chol = crate::linalg::cholesky::Cholesky::new(&a).map_err(|e| e.to_string())?;
+            crate::prop_assert!(
+                (e.log_det() - chol.log_det()).abs() < 1e-7,
+                "logdet mismatch"
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,13 @@
+//! Dense linear algebra: blocked BLAS-like kernels, Cholesky
+//! factorization/solves and a symmetric Jacobi eigensolver.
+//!
+//! This is the numeric substrate of the native Kriging backend; the PJRT
+//! backend replaces these paths with the AOT-compiled XLA executables but
+//! the semantics are checked against this implementation in integration
+//! tests.
+
+pub mod blas;
+pub mod cholesky;
+pub mod eig;
+
+pub use cholesky::{Cholesky, CholeskyError};

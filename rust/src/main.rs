@@ -1,0 +1,291 @@
+//! `ckrig` — the Cluster Kriging coordinator CLI.
+//!
+//! Subcommands:
+//!   experiment  regenerate the paper's tables/figure data
+//!   fit         fit one flavor on a dataset and score a holdout
+//!   serve       start the TCP prediction server on a fitted model
+//!   info        show PJRT platform + discovered artifacts
+
+use anyhow::{bail, Context, Result};
+use cluster_kriging::cluster_kriging::{builder, ClusterKriging};
+use cluster_kriging::coordinator::{BatcherConfig, Server, ServerConfig};
+use cluster_kriging::data::functions;
+use cluster_kriging::data::synthetic::from_benchmark;
+use cluster_kriging::data::{uci_like, Dataset};
+use cluster_kriging::eval::experiments::{run_all, ExperimentConfig};
+use cluster_kriging::eval::report::{self, PaperTable};
+use cluster_kriging::eval::HarnessConfig;
+use cluster_kriging::kriging::{HyperOpt, Surrogate};
+use cluster_kriging::metrics;
+use cluster_kriging::util::cli::Args;
+use std::sync::Arc;
+
+fn main() {
+    env_logger_lite();
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("experiment") => cmd_experiment(&args),
+        Some("fit") => cmd_fit(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "ckrig — Cluster Kriging (van Stein et al., 2017)\n\
+         \n\
+         USAGE: ckrig <experiment|fit|serve|info> [options]\n\
+         \n\
+         experiment --table 1|2|3 | --figure 2 [--paper-scale] [--folds N]\n\
+         \u{20}          [--datasets a,b] [--algos SoD,MTCK] [--out results/]\n\
+         fit        --dataset <name> --flavor OWCK|OWFCK|GMMCK|MTCK --k K [--seed S]\n\
+         serve      --dataset <name> --flavor F --k K [--addr host:port]\n\
+         info       [--artifacts DIR]\n\
+         \n\
+         datasets: concrete ccpp sarcos ackley schaffer schwefel rast h1\n\
+         \u{20}         rosenbrock himmelblau diffpow"
+    );
+}
+
+/// Resolve a dataset name to generated data (paper regimes).
+fn load_dataset(name: &str, seed: u64, n_override: Option<usize>) -> Result<Dataset> {
+    let ds = match name {
+        "concrete" => uci_like::concrete_sized(n_override.unwrap_or(1030), seed),
+        "ccpp" => uci_like::ccpp_sized(n_override.unwrap_or(9568), seed),
+        "sarcos" => uci_like::sarcos(seed, 0.09).0,
+        other => {
+            let b = functions::by_name(other)
+                .with_context(|| format!("unknown dataset {other:?}"))?;
+            from_benchmark(b, n_override.unwrap_or(2000), 20, 0.0, seed)
+        }
+    };
+    Ok(ds)
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let table: Option<usize> = args.get_parsed_or("table", 0).ok().filter(|&t| t > 0);
+    let figure: Option<usize> = args.get_parsed_or("figure", 0).ok().filter(|&f| f > 0);
+    if table.is_none() && figure.is_none() {
+        bail!("pass --table 1|2|3 or --figure 2 (or both)");
+    }
+    let cfg = ExperimentConfig {
+        paper_scale: args.has_flag("paper-scale"),
+        folds: args.get_parsed_or("folds", 3)?,
+        harness: if args.has_flag("full-hyperopt") {
+            HarnessConfig::default()
+        } else {
+            HarnessConfig::fast()
+        },
+        seed: args.get_parsed_or("seed", 0xE8u64)?,
+        only_datasets: args.get_list::<String>("datasets")?.unwrap_or_default(),
+        only_algos: args.get_list::<String>("algos")?.unwrap_or_default(),
+    };
+    eprintln!(
+        "running experiment grid (paper_scale={}, folds={})…",
+        cfg.paper_scale, cfg.folds
+    );
+    let grids = run_all(&cfg)?;
+
+    let out_dir = args.get_or("out", "results");
+    std::fs::create_dir_all(out_dir).ok();
+
+    if let Some(t) = table {
+        // Tables II/III are free projections of the same grid — always
+        // persist all three; print the requested one.
+        let requested = match t {
+            1 => PaperTable::R2,
+            2 => PaperTable::Msll,
+            3 => PaperTable::Smse,
+            _ => bail!("--table must be 1, 2 or 3"),
+        };
+        for (idx, pt) in
+            [(1, PaperTable::R2), (2, PaperTable::Msll), (3, PaperTable::Smse)]
+        {
+            let md = report::render_table(&grids, pt);
+            if pt == requested {
+                println!("{md}");
+            }
+            let path = format!("{out_dir}/table{idx}.md");
+            std::fs::write(&path, &md)?;
+            eprintln!("wrote {path}");
+        }
+    }
+    if let Some(f) = figure {
+        if f != 2 {
+            bail!("--figure must be 2");
+        }
+        let csv = report::fig2_csv(&grids);
+        let path = format!("{out_dir}/fig2.csv");
+        std::fs::write(&path, &csv)?;
+        eprintln!("wrote {path} ({} rows)", csv.lines().count() - 1);
+    }
+    Ok(())
+}
+
+fn fit_flavor(
+    ds: &Dataset,
+    flavor: &str,
+    k: usize,
+    seed: u64,
+) -> Result<(StandardizedModel, Dataset)> {
+    let (train, test) = ds.split(0.8, seed);
+    // Standardize on the training fold (as the evaluation harness does) —
+    // the θ search bounds assume unit-scale inputs.
+    let std = cluster_kriging::data::Standardizer::fit(&train);
+    let tr = std.transform(&train);
+    let opt = HyperOpt {
+        restarts: 1,
+        max_evals: 20,
+        isotropic: tr.d() > 8,
+        ..HyperOpt::default()
+    };
+    let flavor_static = builder::FLAVORS
+        .iter()
+        .find(|f| **f == flavor)
+        .with_context(|| format!("unknown flavor {flavor:?} (expected {:?})", builder::FLAVORS))?;
+    let cfg = builder::flavor(flavor_static, k, seed, opt)?;
+    let model = ClusterKriging::fit(&tr.x, &tr.y, cfg)?;
+    Ok((StandardizedModel { inner: model, std }, test))
+}
+
+/// A fitted model plus the train-fold standardizer; predictions are
+/// mapped back to the original target scale.
+struct StandardizedModel {
+    inner: ClusterKriging,
+    std: cluster_kriging::data::Standardizer,
+}
+
+impl StandardizedModel {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn cluster_sizes(&self) -> &[usize] {
+        &self.inner.cluster_sizes
+    }
+}
+
+impl Surrogate for StandardizedModel {
+    fn predict(&self, xt: &cluster_kriging::util::Matrix) -> Result<cluster_kriging::kriging::Prediction> {
+        // Standardize features, predict, de-standardize outputs.
+        let ds = Dataset::new("query", xt.clone(), vec![0.0; xt.rows()]);
+        let t = self.std.transform(&ds);
+        let pred = self.inner.predict(&t.x)?;
+        Ok(cluster_kriging::kriging::Prediction {
+            mean: pred.mean.iter().map(|&v| self.std.inverse_y(v)).collect(),
+            variance: pred.variance.iter().map(|&v| self.std.inverse_var(v)).collect(),
+        })
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+}
+
+fn cmd_fit(args: &Args) -> Result<()> {
+    let dataset: String = args.require("dataset")?;
+    let flavor: String = args.require("flavor")?;
+    let k: usize = args.get_parsed_or("k", 4)?;
+    let seed: u64 = args.get_parsed_or("seed", 1)?;
+    let n: Option<usize> = args.get_parsed_or("n", 0).ok().filter(|&n| n > 0);
+
+    let ds = load_dataset(&dataset, seed, n)?;
+    eprintln!("dataset {} ({}×{}), flavor {flavor}, k={k}", ds.name, ds.n(), ds.d());
+    let t0 = std::time::Instant::now();
+    let (model, test) = fit_flavor(&ds, &flavor, k, seed)?;
+    let fit_s = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let pred = model.predict(&test.x)?;
+    let pred_s = t1.elapsed().as_secs_f64();
+
+    println!("flavor      : {}", model.name());
+    println!("clusters    : {:?}", model.cluster_sizes());
+    println!("fit_seconds : {fit_s:.3}");
+    println!("pred_seconds: {pred_s:.3}");
+    println!("R2          : {:.4}", metrics::r2(&test.y, &pred.mean));
+    println!("SMSE        : {:.4}", metrics::smse(&test.y, &pred.mean));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dataset: String = args.require("dataset")?;
+    let flavor: String = args.get_or("flavor", "MTCK").to_string();
+    let k: usize = args.get_parsed_or("k", 4)?;
+    let seed: u64 = args.get_parsed_or("seed", 1)?;
+    let addr = args.get_or("addr", "127.0.0.1:7471").to_string();
+    let n: Option<usize> = args.get_parsed_or("n", 0).ok().filter(|&n| n > 0);
+
+    let ds = load_dataset(&dataset, seed, n)?;
+    let dim = ds.d();
+    eprintln!("fitting {flavor} (k={k}) on {} ({}×{dim})…", ds.name, ds.n());
+    let (model, _) = fit_flavor(&ds, &flavor, k, seed)?;
+    let model: Arc<dyn Surrogate> = Arc::new(model);
+    let server =
+        Server::start(model, ServerConfig { addr, batcher: BatcherConfig::default(), dim })?;
+    println!(
+        "serving on {} — protocol: `predict x1,...,x{dim}` | `stats` | `ping`",
+        server.local_addr
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(5));
+        eprintln!("{}", server.metrics.summary());
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    match cluster_kriging::runtime::PjrtRuntime::load(dir) {
+        Ok(rt) => {
+            println!("PJRT platform : {}", rt.platform());
+            println!("artifact dir  : {dir}");
+            println!("complete buckets (n, d):");
+            for (n, d) in rt.registry().complete_buckets() {
+                println!("  n={n:<6} d={d}");
+            }
+        }
+        Err(e) => {
+            println!("PJRT runtime unavailable: {e:#}");
+            println!("(native backend remains fully functional)");
+        }
+    }
+    Ok(())
+}
+
+/// Tiny env_logger substitute: honors RUST_LOG=debug|info|warn.
+fn env_logger_lite() {
+    struct L(log::LevelFilter);
+    impl log::Log for L {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= self.0
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    let level = match std::env::var("RUST_LOG").as_deref() {
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("info") => log::LevelFilter::Info,
+        Ok("warn") => log::LevelFilter::Warn,
+        _ => log::LevelFilter::Error,
+    };
+    let _ = log::set_boxed_logger(Box::new(L(level)));
+    log::set_max_level(level);
+}

@@ -1,0 +1,171 @@
+//! Quality measurements from the paper's testing framework (§VI-B,
+//! following Chalupka, Williams & Murray 2013): R², SMSE and MSLL.
+//!
+//! All three take the *test* targets plus predicted means (and, for MSLL,
+//! predicted variances) and the *training* targets for the trivial
+//! (mean/variance) reference predictor.
+
+/// Coefficient of determination R²: 1 − SSE/SST. 1.0 is a perfect fit;
+/// can be arbitrarily negative for models worse than the mean predictor
+/// (the paper's BCM rows show exactly that).
+pub fn r2(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    assert!(!y_true.is_empty());
+    let mean = crate::util::stats::mean(y_true);
+    let sst: f64 = y_true.iter().map(|v| (v - mean) * (v - mean)).sum();
+    let sse: f64 = y_true.iter().zip(y_pred).map(|(t, p)| (t - p) * (t - p)).sum();
+    if sst <= 1e-300 {
+        return if sse <= 1e-300 { 1.0 } else { f64::NEG_INFINITY };
+    }
+    1.0 - sse / sst
+}
+
+/// Standardized Mean Squared Error: MSE divided by the variance of the
+/// test targets (equivalently the MSE of the trivial mean predictor).
+/// Lower is better; the trivial predictor scores ~1.
+pub fn smse(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    let mse: f64 = y_true
+        .iter()
+        .zip(y_pred)
+        .map(|(t, p)| (t - p) * (t - p))
+        .sum::<f64>()
+        / y_true.len() as f64;
+    let var = crate::util::stats::variance(y_true).max(1e-300);
+    mse / var
+}
+
+/// Mean Standardized Log Loss (Rasmussen & Williams §2.5 / paper §VI-B).
+///
+/// Negative log predictive density of each test point under the model's
+/// Gaussian posterior, minus the log loss of the trivial predictor
+/// N(ȳ_train, σ²_train), averaged. Lower (more negative) is better; a
+/// model no better than trivial scores ~0. Confidently-wrong predictions
+/// (small σ², large error) are punished hardest — the calibration failure
+/// mode the paper uses MSLL to expose in BCM.
+pub fn msll(
+    y_true: &[f64],
+    y_pred: &[f64],
+    var_pred: &[f64],
+    y_train_mean: f64,
+    y_train_var: f64,
+) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    assert_eq!(y_true.len(), var_pred.len());
+    let n = y_true.len() as f64;
+    let train_var = y_train_var.max(1e-12);
+    let mut total = 0.0;
+    for i in 0..y_true.len() {
+        let var = var_pred[i].max(1e-12);
+        let err = y_true[i] - y_pred[i];
+        let model_loss = 0.5 * ((2.0 * std::f64::consts::PI * var).ln() + err * err / var);
+        let terr = y_true[i] - y_train_mean;
+        let trivial_loss =
+            0.5 * ((2.0 * std::f64::consts::PI * train_var).ln() + terr * terr / train_var);
+        total += model_loss - trivial_loss;
+    }
+    total / n
+}
+
+/// Bundle of the three paper metrics for one evaluation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Scores {
+    pub r2: f64,
+    pub smse: f64,
+    pub msll: f64,
+}
+
+/// Compute all three scores at once.
+pub fn score(
+    y_true: &[f64],
+    y_pred: &[f64],
+    var_pred: &[f64],
+    y_train_mean: f64,
+    y_train_var: f64,
+) -> Scores {
+    Scores {
+        r2: r2(y_true, y_pred),
+        smse: smse(y_true, y_pred),
+        msll: msll(y_true, y_pred, var_pred, y_train_mean, y_train_var),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check_default, gen_size, gen_vec};
+
+    #[test]
+    fn perfect_prediction_scores() {
+        let y = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(r2(&y, &y), 1.0);
+        assert_eq!(smse(&y, &y), 0.0);
+        // Perfect mean with tiny variance → MSLL very negative.
+        let v = [1e-6; 4];
+        let m = msll(&y, &y, &v, 2.5, crate::util::stats::variance(&y));
+        assert!(m < -3.0, "msll {m}");
+    }
+
+    #[test]
+    fn trivial_predictor_reference_points() {
+        // Predicting the train mean with the train variance ⇒ SMSE ≈ 1,
+        // R² ≈ 0, MSLL ≈ 0.
+        let y: Vec<f64> = (0..100).map(|i| (i as f64 * 0.37).sin() * 3.0).collect();
+        let mean = crate::util::stats::mean(&y);
+        let var = crate::util::stats::variance(&y);
+        let pred = vec![mean; y.len()];
+        let vars = vec![var; y.len()];
+        assert!(r2(&y, &pred).abs() < 1e-9);
+        assert!((smse(&y, &pred) - 1.0).abs() < 1e-9);
+        assert!(msll(&y, &pred, &vars, mean, var).abs() < 1e-9);
+    }
+
+    #[test]
+    fn r2_negative_for_bad_models() {
+        let y = [0.0, 1.0, 2.0];
+        let bad = [10.0, -10.0, 10.0];
+        assert!(r2(&y, &bad) < -1.0);
+    }
+
+    #[test]
+    fn msll_punishes_overconfidence() {
+        let y = [0.0];
+        let pred = [1.0]; // wrong by 1
+        let confident = msll(&y, &pred, &[0.01], 0.0, 1.0);
+        let humble = msll(&y, &pred, &[1.0], 0.0, 1.0);
+        assert!(confident > humble, "{confident} <= {humble}");
+    }
+
+    #[test]
+    fn smse_r2_relation_prop() {
+        // On the same data: R² = 1 − SMSE·(n/(n)) since both normalize by
+        // variance ⇒ R² ≈ 1 − SMSE.
+        check_default(|rng| {
+            let n = gen_size(rng, 3, 50);
+            let y = gen_vec(rng, n, -2.0, 2.0);
+            let p = gen_vec(rng, n, -2.0, 2.0);
+            let lhs = r2(&y, &p);
+            let rhs = 1.0 - smse(&y, &p);
+            crate::prop_assert!((lhs - rhs).abs() < 1e-9, "R² vs SMSE mismatch");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scores_bundle_consistent() {
+        let y = [1.0, 2.0, 3.0];
+        let p = [1.1, 2.1, 2.9];
+        let v = [0.1, 0.1, 0.1];
+        let s = score(&y, &p, &v, 2.0, 1.0);
+        assert_eq!(s.r2, r2(&y, &p));
+        assert_eq!(s.smse, smse(&y, &p));
+        assert_eq!(s.msll, msll(&y, &p, &v, 2.0, 1.0));
+    }
+
+    #[test]
+    fn constant_targets_edge_case() {
+        let y = [5.0, 5.0, 5.0];
+        assert_eq!(r2(&y, &y), 1.0);
+        assert_eq!(r2(&y, &[4.0, 5.0, 5.0]), f64::NEG_INFINITY);
+    }
+}

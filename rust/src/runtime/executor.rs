@@ -1,0 +1,292 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them on the
+//! CPU PJRT client and runs Kriging fit/predict from the rust hot path.
+//!
+//! This is the L3↔L2 bridge. Executables are compiled once per shape
+//! bucket and cached; clusters are padded to the bucket size with a
+//! validity mask (masked rows are exact no-ops — see python/compile/
+//! model.py). All device I/O is f32, matching the artifacts.
+
+use crate::kriging::Prediction;
+use crate::runtime::registry::{GraphKind, Registry};
+use crate::util::matrix::Matrix;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// PJRT runtime: client + compiled-executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    registry: Registry,
+    cache: Mutex<HashMap<(GraphKind, usize, usize), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// Predict artifacts are lowered for this fixed batch size.
+    predict_batch: usize,
+}
+
+// The xla handles are opaque C++ objects behind pointers; the PJRT CPU
+// client is thread-safe for compile/execute.
+unsafe impl Send for PjrtRuntime {}
+unsafe impl Sync for PjrtRuntime {}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client over an artifact directory.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let registry = Registry::scan(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(Self {
+            client,
+            registry,
+            cache: Mutex::new(HashMap::new()),
+            predict_batch: 64,
+        })
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) executable for a graph.
+    fn executable(
+        &self,
+        kind: GraphKind,
+        n: usize,
+        d: usize,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(&(kind, n, d)) {
+            return Ok(e.clone());
+        }
+        let path = self
+            .registry
+            .path(kind, n, d)
+            .with_context(|| format!("no artifact {kind:?} n={n} d={d}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert((kind, n, d), exe.clone());
+        Ok(exe)
+    }
+
+    /// Fit a Kriging model through the AOT fit graph. Pads `(x, y)` to the
+    /// smallest available bucket.
+    pub fn fit(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        theta: &[f64],
+        nugget: f64,
+    ) -> Result<PjrtKrigingModel> {
+        let (n, d) = x.shape();
+        if n == 0 || n != y.len() || d != theta.len() {
+            bail!("bad fit inputs: n={n}, y={}, d={d}, theta={}", y.len(), theta.len());
+        }
+        let (bn, bd) = self
+            .registry
+            .bucket_for(n, d)
+            .with_context(|| format!("no artifact bucket for n={n}, d={d}"))?;
+        let exe = self.executable(GraphKind::Fit, bn, bd)?;
+
+        // Padded f32 inputs.
+        let mut xp = vec![0f32; bn * bd];
+        for i in 0..n {
+            for j in 0..d {
+                xp[i * bd + j] = x[(i, j)] as f32;
+            }
+        }
+        let mut yp = vec![0f32; bn];
+        let mut mask = vec![0f32; bn];
+        for i in 0..n {
+            yp[i] = y[i] as f32;
+            mask[i] = 1.0;
+        }
+        let theta32: Vec<f32> = theta.iter().map(|&t| t as f32).collect();
+
+        let x_lit = xla::Literal::vec1(&xp)
+            .reshape(&[bn as i64, bd as i64])
+            .map_err(|e| anyhow!("reshape x: {e:?}"))?;
+        let y_lit = xla::Literal::vec1(&yp);
+        let theta_lit = xla::Literal::vec1(&theta32);
+        let nugget_lit = xla::Literal::scalar(nugget as f32);
+        let mask_lit = xla::Literal::vec1(&mask);
+
+        let result = exe
+            .execute::<xla::Literal>(&[x_lit, y_lit, theta_lit, nugget_lit, mask_lit])
+            .map_err(|e| anyhow!("execute fit: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch fit result: {e:?}"))?;
+        let parts = out.to_tuple().map_err(|e| anyhow!("untuple fit: {e:?}"))?;
+        if parts.len() != 6 {
+            bail!("fit graph returned {} outputs, expected 6", parts.len());
+        }
+        let l: Vec<f32> = parts[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let alpha: Vec<f32> = parts[1].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let c_inv_m: Vec<f32> = parts[2].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+        let mu: f32 = parts[3].to_vec().map_err(|e| anyhow!("{e:?}"))?[0];
+        let sigma2: f32 = parts[4].to_vec().map_err(|e| anyhow!("{e:?}"))?[0];
+        let nll: f32 = parts[5].to_vec().map_err(|e| anyhow!("{e:?}"))?[0];
+
+        if !nll.is_finite() {
+            bail!("fit produced non-finite likelihood (nll={nll})");
+        }
+
+        Ok(PjrtKrigingModel {
+            bucket_n: bn,
+            d: bd,
+            n_valid: n,
+            x_padded: xp,
+            mask,
+            theta: theta32,
+            nugget: nugget as f32,
+            l,
+            alpha,
+            c_inv_m,
+            mu,
+            sigma2,
+            nll,
+        })
+    }
+
+    /// Evaluate only the concentrated NLL for a candidate θ (the
+    /// hyper-parameter search objective) without hauling fit outputs.
+    pub fn nll(&self, x: &Matrix, y: &[f64], theta: &[f64], nugget: f64) -> Result<f64> {
+        let (n, d) = x.shape();
+        let (bn, bd) = self
+            .registry
+            .bucket_for(n, d)
+            .with_context(|| format!("no artifact bucket for n={n}, d={d}"))?;
+        let exe = self.executable(GraphKind::Nll, bn, bd)?;
+        let mut xp = vec![0f32; bn * bd];
+        for i in 0..n {
+            for j in 0..d {
+                xp[i * bd + j] = x[(i, j)] as f32;
+            }
+        }
+        let mut yp = vec![0f32; bn];
+        let mut mask = vec![0f32; bn];
+        for i in 0..n {
+            yp[i] = y[i] as f32;
+            mask[i] = 1.0;
+        }
+        let theta32: Vec<f32> = theta.iter().map(|&t| t as f32).collect();
+        let x_lit = xla::Literal::vec1(&xp)
+            .reshape(&[bn as i64, bd as i64])
+            .map_err(|e| anyhow!("reshape x: {e:?}"))?;
+        let result = exe
+            .execute::<xla::Literal>(&[
+                x_lit,
+                xla::Literal::vec1(&yp),
+                xla::Literal::vec1(&theta32),
+                xla::Literal::scalar(nugget as f32),
+                xla::Literal::vec1(&mask),
+            ])
+            .map_err(|e| anyhow!("execute nll: {e:?}"))?;
+        let out = result[0][0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
+        let nll: f32 = out
+            .to_tuple1()
+            .map_err(|e| anyhow!("{e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("{e:?}"))?[0];
+        Ok(nll as f64)
+    }
+
+    /// Predict through the AOT predict graph; handles batch chunking.
+    pub fn predict(&self, model: &PjrtKrigingModel, xt: &Matrix) -> Result<Prediction> {
+        if xt.cols() != model.d {
+            bail!("predict dim mismatch: {} vs {}", xt.cols(), model.d);
+        }
+        let exe = self.executable(GraphKind::Predict, model.bucket_n, model.d)?;
+        let m = xt.rows();
+        let bs = self.predict_batch;
+        let mut mean = Vec::with_capacity(m);
+        let mut variance = Vec::with_capacity(m);
+
+        let x_lit = xla::Literal::vec1(&model.x_padded)
+            .reshape(&[model.bucket_n as i64, model.d as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let l_lit = xla::Literal::vec1(&model.l)
+            .reshape(&[model.bucket_n as i64, model.bucket_n as i64])
+            .map_err(|e| anyhow!("{e:?}"))?;
+
+        for chunk_start in (0..m).step_by(bs) {
+            let chunk = chunk_start..(chunk_start + bs).min(m);
+            let len = chunk.len();
+            // Pad the test chunk to the fixed batch size by repeating the
+            // last row (cheap; surplus outputs are discarded).
+            let mut xtp = vec![0f32; bs * model.d];
+            for (bi, i) in chunk.clone().enumerate() {
+                for j in 0..model.d {
+                    xtp[bi * model.d + j] = xt[(i, j)] as f32;
+                }
+            }
+            for bi in len..bs {
+                for j in 0..model.d {
+                    xtp[bi * model.d + j] = xtp[(len.max(1) - 1) * model.d + j];
+                }
+            }
+            let xt_lit = xla::Literal::vec1(&xtp)
+                .reshape(&[bs as i64, model.d as i64])
+                .map_err(|e| anyhow!("{e:?}"))?;
+
+            let result = exe
+                .execute::<xla::Literal>(&[
+                    xt_lit,
+                    x_lit.clone(),
+                    xla::Literal::vec1(&model.theta),
+                    xla::Literal::scalar(model.nugget),
+                    xla::Literal::vec1(&model.mask),
+                    l_lit.clone(),
+                    xla::Literal::vec1(&model.alpha),
+                    xla::Literal::vec1(&model.c_inv_m),
+                    xla::Literal::scalar(model.mu),
+                    xla::Literal::scalar(model.sigma2),
+                ])
+                .map_err(|e| anyhow!("execute predict: {e:?}"))?;
+            let out = result[0][0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
+            let (mean_lit, var_lit) =
+                out.to_tuple2().map_err(|e| anyhow!("untuple predict: {e:?}"))?;
+            let mean_chunk: Vec<f32> = mean_lit.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            let var_chunk: Vec<f32> = var_lit.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            mean.extend(mean_chunk[..len].iter().map(|&v| v as f64));
+            variance.extend(var_chunk[..len].iter().map(|&v| v as f64));
+        }
+
+        Ok(Prediction { mean, variance })
+    }
+}
+
+/// Fit-graph outputs for one cluster (device results pulled host-side so
+/// the model is freely Send/Sync/cloneable across the coordinator).
+#[derive(Debug, Clone)]
+pub struct PjrtKrigingModel {
+    pub bucket_n: usize,
+    pub d: usize,
+    pub n_valid: usize,
+    x_padded: Vec<f32>,
+    mask: Vec<f32>,
+    theta: Vec<f32>,
+    nugget: f32,
+    l: Vec<f32>,
+    alpha: Vec<f32>,
+    c_inv_m: Vec<f32>,
+    mu: f32,
+    sigma2: f32,
+    pub nll: f32,
+}
+
+impl PjrtKrigingModel {
+    pub fn mu(&self) -> f64 {
+        self.mu as f64
+    }
+
+    pub fn sigma2(&self) -> f64 {
+        self.sigma2 as f64
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT-compiled XLA artifacts (HLO text authored
+//! by python/compile) and executes Kriging fit/predict from rust.
+//!
+//! Interchange format is HLO *text*, not serialized protos — jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns them (see /opt/xla-example/README.md).
+
+pub mod executor;
+pub mod registry;
+
+pub use executor::{PjrtKrigingModel, PjrtRuntime};
+pub use registry::{ArtifactEntry, GraphKind, Registry};

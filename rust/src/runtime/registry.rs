@@ -1,0 +1,180 @@
+//! Artifact registry: discovers AOT-compiled HLO artifacts and resolves
+//! shape buckets.
+//!
+//! `python/compile/aot.py` emits `{fit,predict,nll}_n{N}_d{D}.hlo.txt`
+//! per shape bucket plus `manifest.json`. The registry scans the artifact
+//! directory by filename (no JSON dependency), exposes the available
+//! buckets and picks the smallest bucket that fits a cluster.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+/// Kind of compiled graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum GraphKind {
+    Fit,
+    Predict,
+    Nll,
+}
+
+impl GraphKind {
+    pub fn prefix(self) -> &'static str {
+        match self {
+            GraphKind::Fit => "fit",
+            GraphKind::Predict => "predict",
+            GraphKind::Nll => "nll",
+        }
+    }
+}
+
+/// One discovered artifact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    pub kind: GraphKind,
+    pub n: usize,
+    pub d: usize,
+    pub path: PathBuf,
+}
+
+/// The artifact registry for one directory.
+#[derive(Debug, Clone)]
+pub struct Registry {
+    pub dir: PathBuf,
+    entries: Vec<ArtifactEntry>,
+}
+
+/// Parse `fit_n128_d8.hlo.txt` → (Fit, 128, 8).
+fn parse_name(name: &str) -> Option<(GraphKind, usize, usize)> {
+    let stem = name.strip_suffix(".hlo.txt")?;
+    let mut parts = stem.split('_');
+    let kind = match parts.next()? {
+        "fit" => GraphKind::Fit,
+        "predict" => GraphKind::Predict,
+        "nll" => GraphKind::Nll,
+        _ => return None,
+    };
+    let n = parts.next()?.strip_prefix('n')?.parse().ok()?;
+    let d = parts.next()?.strip_prefix('d')?.parse().ok()?;
+    if parts.next().is_some() {
+        return None;
+    }
+    Some((kind, n, d))
+}
+
+impl Registry {
+    /// Scan a directory for artifacts.
+    pub fn scan(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let mut entries = Vec::new();
+        let rd = std::fs::read_dir(&dir)
+            .with_context(|| format!("reading artifact dir {}", dir.display()))?;
+        for item in rd {
+            let item = item?;
+            let name = item.file_name();
+            let name = name.to_string_lossy();
+            if let Some((kind, n, d)) = parse_name(&name) {
+                entries.push(ArtifactEntry { kind, n, d, path: item.path() });
+            }
+        }
+        if entries.is_empty() {
+            bail!(
+                "no HLO artifacts in {} — run `make artifacts` first",
+                dir.display()
+            );
+        }
+        entries.sort_by_key(|e| (e.kind, e.d, e.n));
+        Ok(Self { dir, entries })
+    }
+
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    /// Distinct (n, d) buckets that have ALL three graphs.
+    pub fn complete_buckets(&self) -> Vec<(usize, usize)> {
+        let mut by_bucket: std::collections::HashMap<(usize, usize), BTreeSet<GraphKind>> =
+            Default::default();
+        for e in &self.entries {
+            by_bucket.entry((e.n, e.d)).or_default().insert(e.kind);
+        }
+        let mut out: Vec<(usize, usize)> = by_bucket
+            .into_iter()
+            .filter(|(_, kinds)| kinds.len() == 3)
+            .map(|(b, _)| b)
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Smallest bucket with dimension `d` and capacity ≥ `n`.
+    pub fn bucket_for(&self, n: usize, d: usize) -> Option<(usize, usize)> {
+        self.complete_buckets()
+            .into_iter()
+            .filter(|&(bn, bd)| bd == d && bn >= n)
+            .min_by_key(|&(bn, _)| bn)
+    }
+
+    /// Path of a specific artifact.
+    pub fn path(&self, kind: GraphKind, n: usize, d: usize) -> Option<&Path> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.n == n && e.d == d)
+            .map(|e| e.path.as_path())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn touch(dir: &Path, name: &str) {
+        std::fs::write(dir.join(name), "dummy").unwrap();
+    }
+
+    fn test_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("ckrig_registry_{tag}"));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(parse_name("fit_n128_d8.hlo.txt"), Some((GraphKind::Fit, 128, 8)));
+        assert_eq!(parse_name("predict_n64_d21.hlo.txt"), Some((GraphKind::Predict, 64, 21)));
+        assert_eq!(parse_name("nll_n32_d2.hlo.txt"), Some((GraphKind::Nll, 32, 2)));
+        assert_eq!(parse_name("manifest.json"), None);
+        assert_eq!(parse_name("fit_nX_d8.hlo.txt"), None);
+        assert_eq!(parse_name("fit_n1_d2_extra.hlo.txt"), None);
+    }
+
+    #[test]
+    fn scan_and_bucket_selection() {
+        let dir = test_dir("scan");
+        for n in [64, 128, 256] {
+            for kind in ["fit", "predict", "nll"] {
+                touch(&dir, &format!("{kind}_n{n}_d4.hlo.txt"));
+            }
+        }
+        // Incomplete bucket: fit only.
+        touch(&dir, "fit_n512_d4.hlo.txt");
+        touch(&dir, "manifest.json");
+        let reg = Registry::scan(&dir).unwrap();
+        assert_eq!(reg.complete_buckets(), vec![(64, 4), (128, 4), (256, 4)]);
+        assert_eq!(reg.bucket_for(60, 4), Some((64, 4)));
+        assert_eq!(reg.bucket_for(64, 4), Some((64, 4)));
+        assert_eq!(reg.bucket_for(65, 4), Some((128, 4)));
+        assert_eq!(reg.bucket_for(300, 4), None, "512 bucket incomplete");
+        assert_eq!(reg.bucket_for(10, 8), None, "no d=8 artifacts");
+        assert!(reg.path(GraphKind::Fit, 64, 4).is_some());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn empty_dir_errors() {
+        let dir = test_dir("empty");
+        assert!(Registry::scan(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

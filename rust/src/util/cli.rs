@@ -1,0 +1,178 @@
+//! Hand-rolled command-line argument parser (clap is unavailable offline).
+//!
+//! Supports the patterns the `ckrig` binary and the examples need:
+//! `prog SUBCOMMAND --flag --key value --key=value positional`.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, `--key value` options, bare `--flag`s
+/// and positional arguments, in original order.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(iter: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        // First bare token (not starting with '-') is the subcommand.
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = Some(it.next().unwrap());
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: rest is positional.
+                    args.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.options.insert(body.to_string(), v);
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else if tok.starts_with('-') && tok.len() > 1 {
+                bail!("short options not supported: {tok}");
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process's own command line.
+    pub fn from_env() -> Result<Args> {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed option with default; errors on parse failure.
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("--{name}={v}: {e}")),
+        }
+    }
+
+    /// Required typed option.
+    pub fn require<T: std::str::FromStr>(&self, name: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => bail!("missing required option --{name}"),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("--{name}={v}: {e}")),
+        }
+    }
+
+    /// Comma-separated list option, e.g. `--ks 2,4,8`.
+    pub fn get_list<T: std::str::FromStr>(&self, name: &str) -> Result<Option<Vec<T>>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => {
+                let parsed: Result<Vec<T>> = v
+                    .split(',')
+                    .map(|p| {
+                        p.trim()
+                            .parse::<T>()
+                            .map_err(|e| anyhow::anyhow!("--{name}: bad element {p:?}: {e}"))
+                    })
+                    .collect();
+                Ok(Some(parsed?))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse_from(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["experiment", "--table", "1", "--seed=42", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("experiment"));
+        assert_eq!(a.get("table"), Some("1"));
+        assert_eq!(a.get("seed"), Some("42"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(&["fit", "--k", "8", "--nugget", "0.01"]);
+        assert_eq!(a.get_parsed_or("k", 2usize).unwrap(), 8);
+        assert_eq!(a.get_parsed_or("missing", 3usize).unwrap(), 3);
+        assert_eq!(a.require::<f64>("nugget").unwrap(), 0.01);
+        assert!(a.require::<f64>("absent").is_err());
+    }
+
+    #[test]
+    fn lists_and_positional() {
+        let a = parse(&["bench", "--ks", "2,4,8", "input.csv"]);
+        assert_eq!(a.get_list::<usize>("ks").unwrap().unwrap(), vec![2, 4, 8]);
+        assert_eq!(a.positional, vec!["input.csv"]);
+        assert!(a.get_list::<usize>("none").unwrap().is_none());
+    }
+
+    #[test]
+    fn flag_before_value_option_disambiguation() {
+        // `--flag --k 3`: flag has no value because next token starts with --.
+        let a = parse(&["run", "--dry-run", "--k", "3"]);
+        assert!(a.has_flag("dry-run"));
+        assert_eq!(a.get("k"), Some("3"));
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse(&["run", "--", "--not-an-option"]);
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn bad_element_in_list() {
+        let a = parse(&["x", "--ks", "1,two"]);
+        assert!(a.get_list::<usize>("ks").is_err());
+    }
+
+    #[test]
+    fn short_options_rejected() {
+        assert!(Args::parse_from(vec!["-k".to_string()]).is_err());
+    }
+}

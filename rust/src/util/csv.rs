@@ -1,0 +1,142 @@
+//! Tiny CSV reader/writer for numeric tables.
+//!
+//! Handles the subset of CSV the project needs: comma-separated numeric
+//! fields, optional header row, comments starting with `#`. No quoting —
+//! datasets and experiment reports here are purely numeric/identifier
+//! tables.
+
+use crate::util::matrix::Matrix;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// A parsed numeric CSV: optional header + dense body.
+#[derive(Debug, Clone)]
+pub struct NumericCsv {
+    pub header: Option<Vec<String>>,
+    pub data: Matrix,
+}
+
+/// Parse numeric CSV text. `has_header` controls whether the first
+/// non-comment line is treated as column names.
+pub fn parse(text: &str, has_header: bool) -> Result<NumericCsv> {
+    let mut header = None;
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut width = None;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if has_header && header.is_none() && rows.is_empty() {
+            header = Some(line.split(',').map(|s| s.trim().to_string()).collect());
+            continue;
+        }
+        let row: Vec<f64> = line
+            .split(',')
+            .map(|f| {
+                f.trim()
+                    .parse::<f64>()
+                    .with_context(|| format!("line {}: bad number {f:?}", lineno + 1))
+            })
+            .collect::<Result<_>>()?;
+        if let Some(w) = width {
+            if row.len() != w {
+                bail!("line {}: expected {} fields, got {}", lineno + 1, w, row.len());
+            }
+        } else {
+            width = Some(row.len());
+        }
+        rows.push(row);
+    }
+    let cols = width.unwrap_or(0);
+    let mut data = Vec::with_capacity(rows.len() * cols);
+    let nrows = rows.len();
+    for r in rows {
+        data.extend(r);
+    }
+    Ok(NumericCsv { header, data: Matrix::from_vec(nrows, cols, data) })
+}
+
+/// Read and parse a CSV file.
+pub fn read_file(path: impl AsRef<Path>, has_header: bool) -> Result<NumericCsv> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse(&text, has_header)
+}
+
+/// Serialize a matrix (and optional header) as CSV text.
+pub fn to_string(header: Option<&[&str]>, data: &Matrix) -> String {
+    let mut out = String::new();
+    if let Some(h) = header {
+        out.push_str(&h.join(","));
+        out.push('\n');
+    }
+    for i in 0..data.rows() {
+        let row: Vec<String> = data.row(i).iter().map(|v| format!("{v}")).collect();
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// Write a matrix as a CSV file.
+pub fn write_file(path: impl AsRef<Path>, header: Option<&[&str]>, data: &Matrix) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    std::fs::write(path, to_string(header, data))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_with_header_and_comments() {
+        let text = "# comment\n a , b \n1,2\n3,4\n\n";
+        let csv = parse(text, true).unwrap();
+        assert_eq!(csv.header, Some(vec!["a".into(), "b".into()]));
+        assert_eq!(csv.data.shape(), (2, 2));
+        assert_eq!(csv.data[(1, 0)], 3.0);
+    }
+
+    #[test]
+    fn parse_without_header() {
+        let csv = parse("1.5,2.5\n-3,4e2\n", false).unwrap();
+        assert_eq!(csv.header, None);
+        assert_eq!(csv.data[(1, 1)], 400.0);
+    }
+
+    #[test]
+    fn ragged_rows_rejected() {
+        assert!(parse("1,2\n3\n", false).is_err());
+    }
+
+    #[test]
+    fn bad_number_rejected() {
+        assert!(parse("1,x\n", false).is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let text = to_string(Some(&["x", "y"]), &m);
+        let back = parse(&text, true).unwrap();
+        assert_eq!(back.data, m);
+        assert_eq!(back.header.unwrap(), vec!["x", "y"]);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("ckrig_csv_test");
+        let path = dir.join("t.csv");
+        let m = Matrix::from_rows(&[&[9.0]]);
+        write_file(&path, None, &m).unwrap();
+        let back = read_file(&path, false).unwrap();
+        assert_eq!(back.data, m);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

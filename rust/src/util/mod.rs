@@ -1,0 +1,18 @@
+//! Foundation substrates: PRNG, dense matrix, thread pool, CSV, CLI
+//! parsing, statistics, timing and a property-testing mini-framework.
+//!
+//! These exist because the build is fully offline — the usual crates
+//! (rand, rayon, clap, csv, proptest, criterion) are unavailable, so the
+//! project carries its own minimal, well-tested equivalents.
+
+pub mod cli;
+pub mod csv;
+pub mod matrix;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;
+
+pub use matrix::Matrix;
+pub use rng::Rng;

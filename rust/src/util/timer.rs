@@ -1,0 +1,106 @@
+//! Wall-clock timing helpers used by the evaluation harness and benches.
+
+use std::time::{Duration, Instant};
+
+/// Measure the wall-clock duration of `f`, returning `(result, seconds)`.
+pub fn time_it<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Simple accumulating stopwatch for hot-loop instrumentation.
+#[derive(Debug, Default, Clone)]
+pub struct Stopwatch {
+    total: Duration,
+    started: Option<Instant>,
+    laps: usize,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.total += t0.elapsed();
+            self.laps += 1;
+        }
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.total.as_secs_f64()
+    }
+
+    pub fn laps(&self) -> usize {
+        self.laps
+    }
+
+    /// Mean seconds per recorded lap (NaN when no laps).
+    pub fn mean_seconds(&self) -> f64 {
+        if self.laps == 0 {
+            f64::NAN
+        } else {
+            self.seconds() / self.laps as f64
+        }
+    }
+}
+
+/// Format seconds human-readably (µs/ms/s).
+pub fn fmt_seconds(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_result_and_positive_time() {
+        let (v, secs) = time_it(|| {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(secs >= 0.004);
+    }
+
+    #[test]
+    fn stopwatch_accumulates_laps() {
+        let mut sw = Stopwatch::new();
+        for _ in 0..3 {
+            sw.start();
+            std::thread::sleep(Duration::from_millis(2));
+            sw.stop();
+        }
+        assert_eq!(sw.laps(), 3);
+        assert!(sw.seconds() >= 0.005);
+        assert!(sw.mean_seconds() > 0.0);
+    }
+
+    #[test]
+    fn stop_without_start_is_noop() {
+        let mut sw = Stopwatch::new();
+        sw.stop();
+        assert_eq!(sw.laps(), 0);
+        assert!(sw.mean_seconds().is_nan());
+    }
+
+    #[test]
+    fn formatting() {
+        assert!(fmt_seconds(2e-6).ends_with("µs"));
+        assert!(fmt_seconds(2e-3).ends_with("ms"));
+        assert!(fmt_seconds(2.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,116 @@
+//! End-to-end integration: full Cluster Kriging flavors + baselines on a
+//! realistic (small) workload through the public API, exercising
+//! partition → parallel fit → combine → metrics exactly as the
+//! experiment drivers do.
+
+use cluster_kriging::cluster_kriging::{builder, ClusterKriging};
+use cluster_kriging::data::functions::by_name;
+use cluster_kriging::data::synthetic::from_benchmark;
+use cluster_kriging::eval::{evaluate, AlgoSpec, HarnessConfig};
+use cluster_kriging::kriging::{HyperOpt, Surrogate};
+use cluster_kriging::metrics;
+
+fn fast_opt() -> HyperOpt {
+    HyperOpt { restarts: 1, max_evals: 15, isotropic: true, ..HyperOpt::default() }
+}
+
+#[test]
+fn flavors_beat_trivial_predictor_on_smooth_benchmark() {
+    let b = by_name("rosenbrock").unwrap();
+    let ds = from_benchmark(b, 400, 2, 0.0, 42);
+    let (train, test) = ds.split(0.8, 1);
+
+    for flavor in ["OWCK", "OWFCK", "GMMCK", "MTCK"] {
+        let cfg = builder::flavor(flavor, 4, 9, fast_opt()).unwrap();
+        let model = ClusterKriging::fit(&train.x, &train.y, cfg).unwrap();
+        let pred = model.predict(&test.x).unwrap();
+        let r2 = metrics::r2(&test.y, &pred.mean);
+        assert!(r2 > 0.7, "{flavor}: R² {r2}");
+    }
+}
+
+#[test]
+fn mtck_dominates_on_multimodal_target() {
+    // The paper's headline: MTCK wins on hard synthetic functions because
+    // the tree partitions the *objective* space. Verify MTCK ≥ RANDOM-CK
+    // (the ablation) on a multimodal benchmark.
+    let b = by_name("rast").unwrap();
+    let ds = from_benchmark(b, 500, 2, 0.0, 7);
+    let (train, test) = ds.split(0.8, 2);
+
+    let fit_score = |flavor: &'static str| -> f64 {
+        let cfg = builder::flavor(flavor, 4, 13, fast_opt()).unwrap();
+        let model = ClusterKriging::fit(&train.x, &train.y, cfg).unwrap();
+        let pred = model.predict(&test.x).unwrap();
+        metrics::r2(&test.y, &pred.mean)
+    };
+
+    let mtck = fit_score("MTCK");
+    let random = fit_score("RANDOM-CK");
+    assert!(
+        mtck > random - 0.05,
+        "MTCK ({mtck}) should not lose clearly to random partitioning ({random})"
+    );
+}
+
+#[test]
+fn harness_end_to_end_all_algorithms() {
+    let b = by_name("himmelblau").unwrap();
+    let ds = from_benchmark(b, 300, 2, 0.0, 3);
+    let (train, test) = ds.split(0.8, 3);
+    let cfg = HarnessConfig::fast();
+
+    let mut results = Vec::new();
+    for spec in [
+        AlgoSpec::Sod { m: 80 },
+        AlgoSpec::Fitc { m: 32 },
+        AlgoSpec::Bcm { k: 2, shared: false },
+        AlgoSpec::Bcm { k: 2, shared: true },
+        AlgoSpec::ClusterKriging { flavor: "OWCK", k: 3 },
+        AlgoSpec::ClusterKriging { flavor: "OWFCK", k: 3 },
+        AlgoSpec::ClusterKriging { flavor: "GMMCK", k: 3 },
+        AlgoSpec::ClusterKriging { flavor: "MTCK", k: 3 },
+    ] {
+        let r = evaluate(&spec, &train, &test, &cfg).unwrap();
+        assert!(r.scores.r2.is_finite(), "{}: non-finite R²", r.algo);
+        assert!(r.scores.smse.is_finite());
+        assert!(r.scores.msll.is_finite());
+        results.push(r);
+    }
+    // At least one Cluster Kriging flavor must be competitive.
+    let best_ck = results[4..]
+        .iter()
+        .map(|r| r.scores.r2)
+        .fold(f64::NEG_INFINITY, f64::max);
+    assert!(best_ck > 0.5, "best CK flavor R² {best_ck}");
+}
+
+#[test]
+fn variance_calibration_sane() {
+    // Kriging variance should correlate with actual error magnitude:
+    // check the mean error inside the top-variance decile exceeds the
+    // bottom decile's.
+    let b = by_name("ackley").unwrap();
+    let ds = from_benchmark(b, 400, 2, 0.0, 5);
+    let (train, test) = ds.split(0.8, 4);
+    let cfg = builder::flavor("GMMCK", 3, 21, fast_opt()).unwrap();
+    let model = ClusterKriging::fit(&train.x, &train.y, cfg).unwrap();
+    let pred = model.predict(&test.x).unwrap();
+
+    let mut pairs: Vec<(f64, f64)> = pred
+        .variance
+        .iter()
+        .zip(pred.mean.iter().zip(&test.y))
+        .map(|(&v, (&m, &t))| (v, (m - t).abs()))
+        .collect();
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let dec = pairs.len() / 10;
+    let low_var_err: f64 =
+        pairs[..dec].iter().map(|p| p.1).sum::<f64>() / dec as f64;
+    let high_var_err: f64 =
+        pairs[pairs.len() - dec..].iter().map(|p| p.1).sum::<f64>() / dec as f64;
+    assert!(
+        high_var_err > low_var_err * 0.8,
+        "variance anti-correlates with error: {low_var_err} vs {high_var_err}"
+    );
+}

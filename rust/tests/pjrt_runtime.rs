@@ -1,0 +1,161 @@
+//! Integration: the PJRT path (AOT artifacts from python/compile) must
+//! agree with the native rust Kriging backend on the same problems —
+//! closing the pallas == jnp == rust consistency triangle from the rust
+//! side.
+//!
+//! Requires `make artifacts` (skips gracefully when absent, e.g. in a
+//! rust-only checkout).
+
+use cluster_kriging::kernel::Kernel;
+use cluster_kriging::kriging::OrdinaryKriging;
+use cluster_kriging::runtime::PjrtRuntime;
+use cluster_kriging::util::matrix::Matrix;
+use cluster_kriging::util::rng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    // Need at least one complete d=2 bucket for these tests.
+    if dir.join("fit_n32_d2.hlo.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping PJRT integration tests: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+fn problem(n: usize, seed: u64) -> (Matrix, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let data: Vec<f64> = (0..n * 2).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+    let x = Matrix::from_vec(n, 2, data);
+    let y: Vec<f64> = (0..n).map(|i| x.row(i)[0].sin() + 0.5 * x.row(i)[1]).collect();
+    (x, y)
+}
+
+#[test]
+fn pjrt_fit_matches_native_backend() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::load(dir).unwrap();
+    let (x, y) = problem(24, 1);
+    let theta = [0.7, 1.2];
+    let nugget = 1e-4;
+
+    let pjrt = rt.fit(&x, &y, &theta, nugget).unwrap();
+    let native =
+        OrdinaryKriging::fit(x.clone(), &y, Kernel::new(
+            cluster_kriging::kernel::KernelKind::SquaredExponential,
+            theta.to_vec(),
+        ), nugget)
+        .unwrap();
+
+    // Scalar fit outputs agree (f32 artifacts vs f64 native).
+    assert!((pjrt.mu() - native.mu_hat()).abs() < 1e-3, "{} vs {}", pjrt.mu(), native.mu_hat());
+    assert!(
+        (pjrt.sigma2() - native.sigma2()).abs() / native.sigma2() < 1e-2,
+        "{} vs {}",
+        pjrt.sigma2(),
+        native.sigma2()
+    );
+}
+
+#[test]
+fn pjrt_predictions_match_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::load(dir).unwrap();
+    let (x, y) = problem(30, 2);
+    let theta = [0.5, 0.5];
+    let nugget = 1e-4;
+
+    let pjrt = rt.fit(&x, &y, &theta, nugget).unwrap();
+    let native = OrdinaryKriging::fit(
+        x.clone(),
+        &y,
+        Kernel::new(cluster_kriging::kernel::KernelKind::SquaredExponential, theta.to_vec()),
+        nugget,
+    )
+    .unwrap();
+
+    let mut rng = Rng::new(3);
+    let xt_data: Vec<f64> = (0..20).map(|_| rng.uniform_in(-2.5, 2.5)).collect();
+    let xt = Matrix::from_vec(10, 2, xt_data);
+
+    let pp = rt.predict(&pjrt, &xt).unwrap();
+    let np = native.predict(&xt).unwrap();
+    for i in 0..10 {
+        assert!(
+            (pp.mean[i] - np.mean[i]).abs() < 5e-3,
+            "mean[{i}]: pjrt {} vs native {}",
+            pp.mean[i],
+            np.mean[i]
+        );
+        assert!(
+            (pp.variance[i] - np.variance[i]).abs() < 5e-3,
+            "var[{i}]: pjrt {} vs native {}",
+            pp.variance[i],
+            np.variance[i]
+        );
+    }
+}
+
+#[test]
+fn pjrt_nll_matches_native_ordering() {
+    // The PJRT nll graph must rank hyper-parameters like the native nll
+    // (that's all the hyper-parameter search needs).
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::load(dir).unwrap();
+    let (x, y) = problem(30, 4);
+    let good = rt.nll(&x, &y, &[1.0, 1.0], 1e-4).unwrap();
+    let bad = rt.nll(&x, &y, &[800.0, 800.0], 1e-4).unwrap();
+    assert!(good < bad, "nll ordering wrong: {good} vs {bad}");
+}
+
+#[test]
+fn pjrt_bucket_padding_transparent() {
+    // n=20 pads to the 32-bucket; n=40 pads to 64. Results at shared
+    // points must be consistent with the respective native fits.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::load(dir).unwrap();
+    for n in [20usize, 40] {
+        let (x, y) = problem(n, 5);
+        let model = rt.fit(&x, &y, &[0.8, 0.8], 1e-4).unwrap();
+        assert_eq!(model.n_valid, n);
+        assert!(model.bucket_n >= n);
+        let native = OrdinaryKriging::fit(
+            x.clone(),
+            &y,
+            Kernel::new(
+                cluster_kriging::kernel::KernelKind::SquaredExponential,
+                vec![0.8, 0.8],
+            ),
+            1e-4,
+        )
+        .unwrap();
+        assert!(
+            (model.mu() - native.mu_hat()).abs() < 2e-3,
+            "n={n}: mu {} vs {}",
+            model.mu(),
+            native.mu_hat()
+        );
+    }
+}
+
+#[test]
+fn pjrt_predict_batch_chunking() {
+    // Predict more points than the fixed batch size (64) to exercise the
+    // chunking + tail-padding path.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::load(dir).unwrap();
+    let (x, y) = problem(24, 6);
+    let model = rt.fit(&x, &y, &[0.6, 0.9], 1e-4).unwrap();
+    let mut rng = Rng::new(7);
+    let m = 150; // 2 full chunks + ragged tail
+    let xt = Matrix::from_vec(m, 2, (0..m * 2).map(|_| rng.uniform_in(-2.0, 2.0)).collect());
+    let p = rt.predict(&model, &xt).unwrap();
+    assert_eq!(p.mean.len(), m);
+    assert_eq!(p.variance.len(), m);
+    assert!(p.mean.iter().all(|v| v.is_finite()));
+    assert!(p.variance.iter().all(|v| v.is_finite() && *v >= 0.0));
+    // Chunk-order independence: predicting one point alone matches its
+    // value inside the large batch.
+    let solo = rt.predict(&model, &xt.select_rows(&[100])).unwrap();
+    assert!((solo.mean[0] - p.mean[100]).abs() < 1e-6);
+}
