@@ -1,24 +1,40 @@
-//! Bench: the paper's §IV complexity claim (experiment C1 in DESIGN.md).
+//! Bench: the fit/hyperopt/predict hot path (experiment C1 in DESIGN.md
+//! plus the §Perf trajectory bench, see EXPERIMENTS.md).
 //!
 //!   single Kriging fit:            O(n³)
 //!   Cluster Kriging, sequential:   k · (n/k)³ = n³/k²
 //!   Cluster Kriging, parallel:     (n/k)³
 //!
-//! Measures wall-clock fit time at fixed n over a k sweep, sequential vs
-//! parallel workers, plus the PJRT-vs-native fit/predict comparison when
-//! artifacts are present.
+//! Sections:
+//!   P1  fixed-θ fit micro-benches at n (default 2000), d=4 — scalar vs
+//!       cached vs GEMM kernel assembly, unblocked vs blocked Cholesky,
+//!       seed-equivalent fit core vs the current fit.
+//!   P2  hyperopt-loop micro-bench (default 3 restarts × 60 evals at a
+//!       smaller n) — per-evaluation clone+scalar-assembly+unblocked-
+//!       factor (the seed behavior) vs cache-reuse `fit_with_cache`.
+//!   C1  fit-time vs k sweep, sequential vs parallel workers.
+//!   Latency: all-model weighting vs single-model routing, plus the
+//!       PJRT-vs-native comparison when artifacts are present.
+//!
+//! Results are also written to `BENCH_hotpath.json` (override with
+//! `CKRIG_BENCH_JSON`) so CI can track the perf trajectory.
 //!
 //! ```bash
-//! cargo bench --bench bench_hotpath
+//! CKRIG_N=2000 cargo bench --bench bench_hotpath
 //! ```
 
 use cluster_kriging::cluster_kriging::{
     ClusterKriging, ClusterKrigingConfig, Combiner, KMeansPartitioner,
 };
+use cluster_kriging::kernel::cache::DistanceCache;
 use cluster_kriging::kernel::{Kernel, KernelKind};
 use cluster_kriging::kriging::{HyperOpt, NuggetMode, OrdinaryKriging};
+use cluster_kriging::linalg::Cholesky;
 use cluster_kriging::util::matrix::Matrix;
 use cluster_kriging::util::rng::Rng;
+use cluster_kriging::util::threadpool::default_workers;
+use std::sync::Arc;
+use std::time::Instant;
 
 /// One fixed-θ fit so timings measure the linear algebra, not the search.
 fn fixed_theta_opt() -> HyperOpt {
@@ -31,17 +47,130 @@ fn fixed_theta_opt() -> HyperOpt {
     }
 }
 
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn time<T>(f: impl FnOnce() -> T) -> (f64, T) {
+    let t0 = Instant::now();
+    let out = f();
+    (t0.elapsed().as_secs_f64(), out)
+}
+
 fn main() {
     let mut rng = Rng::new(3);
-    let n = std::env::var("CKRIG_N")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(2000usize);
+    let n = env_usize("CKRIG_N", 2000);
     let d = 4;
+    let workers = default_workers();
     let x = Matrix::from_vec(n, d, rng.uniform_vec(n * d, -3.0, 3.0));
     let y: Vec<f64> = (0..n).map(|i| x.row(i)[0].sin() + x.row(i)[2]).collect();
 
-    println!("== C1: fit-time vs k at n={n} (paper §IV: n³/k² sequential, (n/k)³ parallel) ==");
+    // == P1: fixed-θ fit hot path ==
+    println!("== P1: fixed-θ fit hot path at n={n}, d={d} ({workers} workers) ==");
+    let kernel = Kernel::new(KernelKind::SquaredExponential, vec![0.5; d]);
+
+    let (t_asm_scalar, c_scalar) = time(|| kernel.corr_matrix(&x));
+    let (t_cache_build, cache) =
+        time(|| DistanceCache::new(&x, KernelKind::SquaredExponential, workers));
+    let (t_asm_cached, c_cached) = time(|| cache.corr_matrix(&kernel, workers));
+    let (t_asm_gemm, c_gemm) = time(|| kernel.corr_matrix_gemm(&x, workers));
+    assert!(c_scalar.max_abs_diff(&c_cached) == 0.0, "cached assembly diverged");
+    assert!(c_scalar.max_abs_diff(&c_gemm) < 1e-11, "gemm assembly diverged");
+    println!("  assembly: scalar {:8.1} ms | cached {:8.1} ms ({:.1}x) | gemm {:8.1} ms ({:.1}x) | cache build {:.1} ms",
+        t_asm_scalar * 1e3, t_asm_cached * 1e3, t_asm_scalar / t_asm_cached,
+        t_asm_gemm * 1e3, t_asm_scalar / t_asm_gemm, t_cache_build * 1e3);
+
+    let mut c = c_scalar;
+    for i in 0..n {
+        c[(i, i)] += 1e-6;
+    }
+    let (t_chol_unblocked, lu) = time(|| Cholesky::new_unblocked(&c).unwrap());
+    let (t_chol_blocked, lb) = time(|| Cholesky::new(&c).unwrap());
+    assert!(lu.l().max_abs_diff(lb.l()) < 1e-8, "blocked factor diverged");
+    println!(
+        "  cholesky: unblocked {:8.1} ms | blocked {:8.1} ms ({:.1}x)",
+        t_chol_unblocked * 1e3,
+        t_chol_blocked * 1e3,
+        t_chol_unblocked / t_chol_blocked
+    );
+
+    // Seed-equivalent fit core (per-fit clone + scalar assembly +
+    // unblocked factor + the two α solves) vs today's fit.
+    let ones = vec![1.0; n];
+    let (t_fit_seed, _) = time(|| {
+        let xc = x.clone();
+        let cc = {
+            let mut cc = kernel.corr_matrix(&xc);
+            for i in 0..n {
+                cc[(i, i)] += 1e-6;
+            }
+            cc
+        };
+        let ch = Cholesky::new_unblocked(&cc).unwrap();
+        std::hint::black_box((ch.solve(&y), ch.solve(&ones)));
+    });
+    let (t_fit_now, _) = time(|| {
+        std::hint::black_box(
+            OrdinaryKriging::fit(x.clone(), &y, kernel.clone(), 1e-6).unwrap(),
+        );
+    });
+    let fit_speedup = t_fit_seed / t_fit_now;
+    println!(
+        "  end-to-end fit: seed-equivalent {:8.1} ms | current {:8.1} ms ({fit_speedup:.1}x)",
+        t_fit_seed * 1e3,
+        t_fit_now * 1e3
+    );
+
+    // == P2: hyperopt loop — cache amortization across θ evaluations ==
+    let hn = env_usize("CKRIG_HYPEROPT_N", 600);
+    let evals = 3 * 60; // default HyperOpt budget: 3 restarts × 60 evals
+    println!("\n== P2: hyperopt loop at n={hn}, d={d}, {evals} θ evaluations ==");
+    let hx = Matrix::from_vec(hn, d, rng.uniform_vec(hn * d, -3.0, 3.0));
+    let hy: Vec<f64> = (0..hn).map(|i| hx.row(i)[0].sin() + hx.row(i)[3]).collect();
+    let thetas: Vec<Vec<f64>> =
+        (0..evals).map(|_| rng.uniform_vec(d, 0.05, 5.0)).collect();
+    let hones = vec![1.0; hn];
+
+    let (t_loop_seed, _) = time(|| {
+        for th in &thetas {
+            // What the seed did per objective evaluation: clone x, scalar
+            // O(n²d) assembly, unblocked O(n³) factor, α solves.
+            let xc = hx.clone();
+            let k = Kernel::new(KernelKind::SquaredExponential, th.clone());
+            let mut cc = k.corr_matrix(&xc);
+            for i in 0..hn {
+                cc[(i, i)] += 1e-6;
+            }
+            let ch = Cholesky::new_unblocked(&cc).unwrap();
+            std::hint::black_box((ch.solve(&hy), ch.solve(&hones)));
+        }
+    });
+    let hx_shared = Arc::new(hx.clone());
+    let (t_loop_cached, _) = time(|| {
+        let cache = DistanceCache::new(&hx_shared, KernelKind::SquaredExponential, workers);
+        for th in &thetas {
+            let k = Kernel::new(KernelKind::SquaredExponential, th.clone());
+            std::hint::black_box(
+                OrdinaryKriging::fit_with_cache(
+                    Arc::clone(&hx_shared),
+                    &hy,
+                    k,
+                    1e-6,
+                    &cache,
+                    workers,
+                )
+                .unwrap(),
+            );
+        }
+    });
+    let hyperopt_speedup = t_loop_seed / t_loop_cached;
+    println!(
+        "  seed-equivalent loop {:8.2} s | cached loop {:8.2} s ({hyperopt_speedup:.1}x)",
+        t_loop_seed, t_loop_cached
+    );
+
+    // == C1: paper §IV complexity claim ==
+    println!("\n== C1: fit-time vs k at n={n} (paper §IV: n³/k² sequential, (n/k)³ parallel) ==");
     println!(
         "{:>4} {:>14} {:>14} {:>10} {:>12}",
         "k", "sequential(s)", "parallel(s)", "seq_speedup", "par_speedup"
@@ -57,7 +186,7 @@ fn main() {
                 workers: Some(workers),
                 flavor: "OWCK".into(),
             };
-            let t0 = std::time::Instant::now();
+            let t0 = Instant::now();
             let model = ClusterKriging::fit(&x, &y, cfg).unwrap();
             std::hint::black_box(model);
             t0.elapsed().as_secs_f64()
@@ -86,7 +215,7 @@ fn main() {
         };
         let model = ClusterKriging::fit(&x, &y, cfg).unwrap();
         let probe = vec![0.1; d];
-        let t0 = std::time::Instant::now();
+        let t0 = Instant::now();
         let reps = 200;
         for _ in 0..reps {
             std::hint::black_box(model.predict_one(&probe));
@@ -108,14 +237,14 @@ fn main() {
         let yy: Vec<f64> = (0..nn).map(|i| xx.row(i)[0].sin()).collect();
         let theta = [0.7, 0.7];
 
-        let t0 = std::time::Instant::now();
+        let t0 = Instant::now();
         let reps = 20;
         for _ in 0..reps {
             std::hint::black_box(rt.fit(&xx, &yy, &theta, 1e-6).unwrap());
         }
         let pjrt_fit = t0.elapsed().as_secs_f64() / reps as f64;
 
-        let t0 = std::time::Instant::now();
+        let t0 = Instant::now();
         for _ in 0..reps {
             std::hint::black_box(
                 OrdinaryKriging::fit(
@@ -135,12 +264,12 @@ fn main() {
             OrdinaryKriging::fit(xx.clone(), &yy, Kernel::new(KernelKind::SquaredExponential, theta.to_vec()), 1e-6)
                 .unwrap();
         let xt = Matrix::from_vec(64, 2, rng.uniform_vec(128, -2.0, 2.0));
-        let t0 = std::time::Instant::now();
+        let t0 = Instant::now();
         for _ in 0..reps {
             std::hint::black_box(rt.predict(&model, &xt).unwrap());
         }
         let pjrt_pred = t0.elapsed().as_secs_f64() / reps as f64;
-        let t0 = std::time::Instant::now();
+        let t0 = Instant::now();
         for _ in 0..reps {
             std::hint::black_box(native.predict(&xt).unwrap());
         }
@@ -152,5 +281,59 @@ fn main() {
         );
     } else {
         println!("\n(skipping PJRT comparison: run `make artifacts` first)");
+    }
+
+    // == machine-readable record for the CI perf trajectory ==
+    let json_path =
+        std::env::var("CKRIG_BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".into());
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"n\": {n},\n",
+            "  \"d\": {d},\n",
+            "  \"workers\": {workers},\n",
+            "  \"assembly_scalar_s\": {asm_scalar:.6},\n",
+            "  \"assembly_cached_s\": {asm_cached:.6},\n",
+            "  \"assembly_gemm_s\": {asm_gemm:.6},\n",
+            "  \"cache_build_s\": {cache_build:.6},\n",
+            "  \"assembly_speedup\": {asm_speedup:.2},\n",
+            "  \"cholesky_unblocked_s\": {chol_u:.6},\n",
+            "  \"cholesky_blocked_s\": {chol_b:.6},\n",
+            "  \"cholesky_speedup\": {chol_speedup:.2},\n",
+            "  \"fit_seed_equivalent_s\": {fit_seed:.6},\n",
+            "  \"fit_s\": {fit_now:.6},\n",
+            "  \"fit_speedup\": {fit_speedup:.2},\n",
+            "  \"hyperopt\": {{\n",
+            "    \"n\": {hn},\n",
+            "    \"evals\": {evals},\n",
+            "    \"seed_equivalent_s\": {loop_seed:.6},\n",
+            "    \"cached_s\": {loop_cached:.6},\n",
+            "    \"speedup\": {hyperopt_speedup:.2}\n",
+            "  }}\n",
+            "}}\n"
+        ),
+        n = n,
+        d = d,
+        workers = workers,
+        asm_scalar = t_asm_scalar,
+        asm_cached = t_asm_cached,
+        asm_gemm = t_asm_gemm,
+        cache_build = t_cache_build,
+        asm_speedup = t_asm_scalar / t_asm_cached,
+        chol_u = t_chol_unblocked,
+        chol_b = t_chol_blocked,
+        chol_speedup = t_chol_unblocked / t_chol_blocked,
+        fit_seed = t_fit_seed,
+        fit_now = t_fit_now,
+        fit_speedup = fit_speedup,
+        hn = hn,
+        evals = evals,
+        loop_seed = t_loop_seed,
+        loop_cached = t_loop_cached,
+        hyperopt_speedup = hyperopt_speedup,
+    );
+    match std::fs::write(&json_path, &json) {
+        Ok(()) => println!("\nwrote {json_path}"),
+        Err(e) => eprintln!("\nfailed to write {json_path}: {e}"),
     }
 }

@@ -69,9 +69,9 @@ impl Bcm {
             BcmMode::Shared => {
                 let m = cfg.shared_fit_size.min(n);
                 let idx = Rng::new(cfg.seed ^ 0x5A5A).sample_indices(n, m);
-                let xs = x.select_rows(&idx);
+                let xs = std::sync::Arc::new(x.select_rows(&idx));
                 let ys: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
-                let fit = cfg.hyperopt.fit(xs, &ys)?;
+                let fit = cfg.hyperopt.fit_shared(xs, &ys)?;
                 Some((fit.kernel().clone(), fit.nugget()))
             }
             BcmMode::Individual => None,
@@ -79,16 +79,30 @@ impl Bcm {
 
         let fits: Vec<Result<OrdinaryKriging>> =
             scoped_map(&clusters, default_workers(), |ci, rows| {
-                let xs = x.select_rows(rows);
+                let xs = std::sync::Arc::new(x.select_rows(rows));
                 let ys: Vec<f64> = rows.iter().map(|&i| y[i]).collect();
                 match &shared_kernel {
                     Some((kernel, nugget)) => {
-                        Ok(OrdinaryKriging::fit(xs, &ys, kernel.clone(), *nugget)?)
+                        // workers=1: this closure already runs on the
+                        // per-module worker pool.
+                        Ok(OrdinaryKriging::fit_shared_with_workers(
+                            xs,
+                            &ys,
+                            kernel.clone(),
+                            *nugget,
+                            1,
+                        )?)
                     }
                     None => {
                         let mut opt = cfg.hyperopt.clone();
                         opt.seed = cfg.hyperopt.seed.wrapping_add(ci as u64);
-                        Ok(opt.fit(xs, &ys)?)
+                        // Budget split: modules already fit in parallel.
+                        if opt.assembly_workers.is_none() {
+                            opt.assembly_workers = Some(
+                                (default_workers() / clusters.len().max(1)).max(1),
+                            );
+                        }
+                        Ok(opt.fit_shared(xs, &ys)?)
                     }
                 }
             });

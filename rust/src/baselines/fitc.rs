@@ -9,6 +9,7 @@
 //! (isotropic log θ, log signal variance, log noise variance) are
 //! estimated by Nelder–Mead on the exact FITC marginal likelihood.
 
+use crate::kernel::cache::{CrossDistanceCache, DistanceCache};
 use crate::kernel::{Kernel, KernelKind};
 use crate::kriging::hyperopt::nelder_mead;
 use crate::kriging::{Prediction, Surrogate};
@@ -73,6 +74,15 @@ impl Fitc {
         let yc: Vec<f64> = y.iter().map(|v| v - y_mean).collect();
         let y_var = crate::util::stats::variance(y).max(1e-12);
 
+        // The inducing set is fixed for the whole ML search, so the m×m
+        // and n×m correlation blocks only change through θ: precompute
+        // their distances once and re-assemble per evaluation. FITC's θ
+        // is isotropic, so the summed-plane cache suffices — memory is
+        // one extra Kmm + Knm-sized buffer, independent of d.
+        let kmm_cache = DistanceCache::new_isotropic(&xu, KernelKind::SquaredExponential, 1);
+        let knm_cache =
+            CrossDistanceCache::new_isotropic(x, &xu, KernelKind::SquaredExponential, 1);
+
         // ML search over [log10 θ_iso, log10 σf² (relative), log10 σn²
         // (relative)]; variances relative to the target variance.
         let mut best: Option<(Fitc, f64)> = None;
@@ -80,7 +90,18 @@ impl Fitc {
             let theta = 10f64.powf(p[0].clamp(-3.0, 3.0));
             let sigma_f2 = y_var * 10f64.powf(p[1].clamp(-3.0, 2.0));
             let sigma_n2 = y_var * 10f64.powf(p[2].clamp(-8.0, 0.5));
-            match Self::build(x, &yc, y_mean, &xu, d, theta, sigma_f2, sigma_n2) {
+            match Self::build(
+                n,
+                &yc,
+                y_mean,
+                &xu,
+                d,
+                theta,
+                sigma_f2,
+                sigma_n2,
+                &kmm_cache,
+                &knm_cache,
+            ) {
                 Ok(model) => {
                     let nll = model.nll;
                     if best.as_ref().map(|(_, b)| nll < *b).unwrap_or(true) {
@@ -97,7 +118,7 @@ impl Fitc {
 
     #[allow(clippy::too_many_arguments)]
     fn build(
-        x: &Matrix,
+        n: usize,
         yc: &[f64],
         y_mean: f64,
         xu: &Matrix,
@@ -105,19 +126,24 @@ impl Fitc {
         theta: f64,
         sigma_f2: f64,
         sigma_n2: f64,
+        kmm_cache: &DistanceCache,
+        knm_cache: &CrossDistanceCache,
     ) -> Result<Self> {
-        let n = x.rows();
         let m = xu.rows();
         let kernel = Kernel::new(KernelKind::SquaredExponential, vec![theta; d]);
+        // 1-d view of the isotropic θ for the summed-plane caches; the
+        // model keeps the full d-dimensional kernel for predict-time corr.
+        let iso = Kernel::new(KernelKind::SquaredExponential, vec![theta]);
 
-        // Kmm (with tiny jitter) and Knm, scaled by σf².
-        let mut kmm = kernel.corr_matrix(xu);
+        // Kmm (with tiny jitter) and Knm, scaled by σf² — assembled from
+        // the θ-independent distance caches built once per fit.
+        let mut kmm = kmm_cache.corr_matrix(&iso, 1);
         kmm.scale(sigma_f2);
         for i in 0..m {
             kmm[(i, i)] += sigma_f2 * 1e-8;
         }
         let kmm_chol = Cholesky::new_regularized(&kmm)?;
-        let mut knm = kernel.cross_corr(x, xu);
+        let mut knm = knm_cache.corr_matrix(&iso, 1);
         knm.scale(sigma_f2);
 
         // Λ_ii = σf² − q_ii + σn²,  q_ii = knm_i Kmm⁻¹ knm_iᵀ.

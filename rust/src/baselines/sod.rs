@@ -33,9 +33,10 @@ impl SubsetOfData {
         let n = x.rows();
         let m = m.min(n).max(1);
         let idx = Rng::new(seed).sample_indices(n, m);
-        let xs = x.select_rows(&idx);
+        // Shared subset + one distance cache across the whole ML search.
+        let xs = std::sync::Arc::new(x.select_rows(&idx));
         let ys: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
-        let model = hyperopt.fit(xs, &ys)?;
+        let model = hyperopt.fit_shared(xs, &ys)?;
         Ok(Self { model, subset_size: m })
     }
 

@@ -9,6 +9,14 @@
 //!
 //! Plus `RANDOM-CK` (random partition + optimal weights) as the ablation
 //! flavor quantifying the value of informed partitioning.
+//!
+//! Every flavor's per-cluster hyperopt runs against one θ-independent
+//! [`crate::kernel::cache::DistanceCache`] per cluster (built inside
+//! `HyperOpt::fit_shared`), so the ~restarts×evals objective evaluations
+//! reassemble the correlation matrix from cached distance planes instead
+//! of recomputing it from raw points. `HyperOpt::assembly_workers` can be
+//! left at `None` here: `ClusterKriging::fit` splits the worker budget
+//! across the k concurrent cluster fits automatically.
 
 use crate::cluster_kriging::combiner::Combiner;
 use crate::cluster_kriging::model::ClusterKrigingConfig;

@@ -52,16 +52,27 @@ impl ClusterKriging {
         }
 
         let workers = cfg.workers.unwrap_or_else(default_workers);
-        // Fit each cluster independently — the paper's parallel step.
+        // Split the worker budget across the k concurrent cluster fits
+        // instead of letting each nest a full pool (results are
+        // worker-count independent, this is pure scheduling).
+        let per_cluster_workers = (workers / partition.clusters.len().max(1)).max(1);
+        // Fit each cluster independently — the paper's parallel step. Each
+        // cluster builds one θ-independent distance cache (inside
+        // `fit_shared`) that all of its hyperopt objective evaluations
+        // reuse, and shares its training slice via Arc instead of cloning
+        // it per evaluation.
         let fits: Vec<Result<OrdinaryKriging>> =
             scoped_map(&partition.clusters, workers, |ci, rows| {
-                let xs = x.select_rows(rows);
+                let xs = std::sync::Arc::new(x.select_rows(rows));
                 let ys: Vec<f64> = rows.iter().map(|&i| y[i]).collect();
                 // Derive a per-cluster seed so restarts differ across
                 // clusters but runs stay reproducible.
                 let mut opt = cfg.hyperopt.clone();
                 opt.seed = cfg.hyperopt.seed.wrapping_add(ci as u64);
-                opt.fit(xs, &ys).with_context(|| format!("cluster {ci} fit failed"))
+                if opt.assembly_workers.is_none() {
+                    opt.assembly_workers = Some(per_cluster_workers);
+                }
+                opt.fit_shared(xs, &ys).with_context(|| format!("cluster {ci} fit failed"))
             });
 
         let mut models = Vec::with_capacity(fits.len());
@@ -159,7 +170,9 @@ impl ClusterKriging {
                         return None;
                     }
                     let sub = xt.select_rows(rows);
-                    Some(self.models[ci].predict(&sub).expect("dims checked"))
+                    // One assembly worker per model: the map above already
+                    // parallelizes across routed groups.
+                    Some(self.models[ci].predict_with_workers(&sub, 1).expect("dims checked"))
                 });
                 for (ci, out) in outs.into_iter().enumerate() {
                     if let Some(pred) = out {
@@ -176,7 +189,9 @@ impl ClusterKriging {
                 // models), then combine per point.
                 let models: Vec<usize> = (0..self.k()).collect();
                 let per_model = scoped_map(&models, default_workers(), |_, &ci| {
-                    self.models[ci].predict(xt).expect("dims checked")
+                    // One assembly worker per model: the map above already
+                    // parallelizes across the k models.
+                    self.models[ci].predict_with_workers(xt, 1).expect("dims checked")
                 });
                 let mut mean = Vec::with_capacity(m);
                 let mut variance = Vec::with_capacity(m);

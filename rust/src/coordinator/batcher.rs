@@ -6,6 +6,11 @@
 //! batching in model-serving systems (vLLM/Triton). Requests are queued;
 //! a worker flushes when `max_batch` is reached or the oldest request has
 //! waited `max_wait`, then runs one batched `Surrogate::predict`.
+//!
+//! The batched matrix lands in `OrdinaryKriging::predict`, whose chunks
+//! assemble cross-correlations through `Kernel::cross_corr_fast` — the
+//! GEMM-trick path for the SE kernel, row-parallel scalar otherwise — so
+//! batching here compounds with the vectorized assembly downstream.
 
 use crate::kriging::Surrogate;
 use crate::util::matrix::Matrix;

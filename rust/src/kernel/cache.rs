@@ -1,0 +1,434 @@
+//! θ-independent distance caches — the hyperopt-loop amortization.
+//!
+//! Every Nelder–Mead objective evaluation needs the correlation matrix of
+//! the *same* training points under a *different* θ. The raw distances
+//! `(xᵢₖ−xⱼₖ)²` (or `|xᵢₖ−xⱼₖ|` for the absolute-exponential family) do
+//! not depend on θ, so [`DistanceCache`] precomputes them once per
+//! cluster as d packed lower-triangle planes; any later θ evaluation is
+//! then `R = g(Σₖ θₖ Dₖ)` — a fused, row-parallel axpy + transform over
+//! flat slices instead of n²d/2 scalar `corr()` calls. With ~180
+//! objective evaluations per cluster (default 3 restarts × 60 evals) the
+//! assembly cost drops by roughly that factor (EXPERIMENTS.md §Perf).
+//!
+//! Bit-compatibility: the planes store exactly the per-dimension terms
+//! the scalar path folds (`d·d` before the θ product) and the assembly
+//! accumulates dimensions in the same ascending order, so the cached
+//! matrix is **bit-identical** to [`Kernel::corr_matrix`] — fits through
+//! either path produce the same likelihood to the last ulp. (The SE
+//! GEMM-trick assembly, [`Kernel::corr_matrix_gemm`], trades that
+//! exactness for one blocked matmul; it agrees to ~1e-14.)
+//!
+//! [`CrossDistanceCache`] is the rectangular analogue for inducing-point
+//! methods (FITC's `Knm` is rebuilt per objective evaluation too).
+
+use crate::kernel::{Kernel, KernelKind};
+use crate::util::matrix::Matrix;
+use crate::util::sendptr::{mirror_lower_to_upper, SendPtr};
+use crate::util::threadpool::scoped_for;
+
+/// Cap on cached f64 entries (d · n(n−1)/2). Above this (~1.5 GiB) the
+/// hyperopt loop falls back to per-evaluation scalar assembly rather than
+/// risk an allocation failure on a serving box.
+pub const MAX_CACHE_ENTRIES: usize = 192 * 1024 * 1024;
+
+/// Packed strict-lower-triangle index of `(i, j)`, `j < i`.
+/// Row `i`'s entries live contiguously at `[i(i−1)/2, i(i−1)/2 + i)`.
+#[inline]
+fn tri_base(i: usize) -> usize {
+    (i * i - i) / 2
+}
+
+/// Per-dimension pairwise distances of one point set, independent of θ.
+#[derive(Debug, Clone)]
+pub struct DistanceCache {
+    n: usize,
+    d: usize,
+    squared: bool,
+    /// `d` planes of packed strict-lower-triangle distances; plane `k`
+    /// occupies `[k·tri, (k+1)·tri)` with `tri = n(n−1)/2`.
+    planes: Vec<f64>,
+}
+
+impl DistanceCache {
+    /// Precompute the distance planes for `x` under the metric `kind`
+    /// consumes (squared for SE/Matérn, L1 for absolute-exponential).
+    pub fn new(x: &Matrix, kind: KernelKind, workers: usize) -> Self {
+        let (n, d) = x.shape();
+        assert!(d > 0, "DistanceCache: x must have at least one column");
+        let squared = kind.uses_squared_distance();
+        let tri = tri_base(n);
+        let mut planes = vec![0.0; d * tri];
+        let ptr = SendPtr::new(planes.as_mut_ptr());
+        // Row-parallel build: worker owning row i writes the packed range
+        // [tri_base(i), tri_base(i)+i) of every plane — disjoint across
+        // rows. Dynamic stealing because row i costs i·d.
+        scoped_for(n, workers, |i| {
+            let base = tri_base(i);
+            let xi = x.row(i);
+            for j in 0..i {
+                let xj = x.row(j);
+                for k in 0..d {
+                    let diff = xi[k] - xj[k];
+                    let v = if squared { diff * diff } else { diff.abs() };
+                    // SAFETY: (k·tri + base + j) is owned by row i's worker.
+                    unsafe { *ptr.get().add(k * tri + base + j) = v };
+                }
+            }
+        });
+        Self { n, d, squared, planes }
+    }
+
+    /// Summed-plane variant for **isotropic** kernels: stores the single
+    /// plane `Σₖ dₖ` instead of d per-dimension planes, so memory and
+    /// per-θ assembly cost are 1/d of [`Self::new`]. The result acts as a
+    /// 1-dimensional cache — assemble with a 1-dimensional kernel of the
+    /// same family, e.g. `Kernel::new(kind, vec![theta])`. (Applying θ
+    /// outside the sum re-associates the reduction, so this path agrees
+    /// with the scalar assembly to ~1e-14 rather than bit-exactly.)
+    pub fn new_isotropic(x: &Matrix, kind: KernelKind, workers: usize) -> Self {
+        let (n, d) = x.shape();
+        assert!(d > 0, "DistanceCache: x must have at least one column");
+        let squared = kind.uses_squared_distance();
+        let tri = tri_base(n);
+        let mut planes = vec![0.0; tri];
+        let ptr = SendPtr::new(planes.as_mut_ptr());
+        scoped_for(n, workers, |i| {
+            let base = tri_base(i);
+            let xi = x.row(i);
+            for j in 0..i {
+                let xj = x.row(j);
+                let mut acc = 0.0;
+                for k in 0..d {
+                    let diff = xi[k] - xj[k];
+                    acc += if squared { diff * diff } else { diff.abs() };
+                }
+                // SAFETY: (base + j) is owned by row i's worker.
+                unsafe { *ptr.get().add(base + j) = acc };
+            }
+        });
+        Self { n, d: 1, squared, planes }
+    }
+
+    /// Like [`Self::new`] but refuses to build a cache larger than
+    /// [`MAX_CACHE_ENTRIES`] — callers fall back to scalar assembly.
+    pub fn try_new(x: &Matrix, kind: KernelKind, workers: usize) -> Option<Self> {
+        let (n, d) = x.shape();
+        if d == 0 || d.saturating_mul(tri_base(n)) > MAX_CACHE_ENTRIES {
+            return None;
+        }
+        Some(Self::new(x, kind, workers))
+    }
+
+    /// Number of cached points.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Input dimensionality the cache was built for.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Whether the planes hold squared (vs. absolute) distances.
+    pub fn squared(&self) -> bool {
+        self.squared
+    }
+
+    /// Assemble the correlation matrix for `kernel`'s θ from the cached
+    /// planes: per packed element, `t = Σₖ θₖ Dₖ` (ascending k, matching
+    /// the scalar accumulation order), then `corr_from_dist(t)`, then a
+    /// mirror pass. Row-parallel with dynamic stealing.
+    pub fn corr_matrix(&self, kernel: &Kernel, workers: usize) -> Matrix {
+        assert_eq!(kernel.dim(), self.d, "DistanceCache: θ dimension mismatch");
+        assert_eq!(
+            kernel.kind.uses_squared_distance(),
+            self.squared,
+            "DistanceCache: built for a {} metric but kernel {:?} needs the other",
+            if self.squared { "squared" } else { "L1" },
+            kernel.kind,
+        );
+        let n = self.n;
+        let tri = tri_base(n);
+        let theta = &kernel.theta;
+        let kind = kernel.kind;
+        let mut r = Matrix::zeros(n, n);
+        let ptr = SendPtr::new(r.as_mut_slice().as_mut_ptr());
+        // Pass 1: fused axpy + transform into the lower triangle.
+        scoped_for(n, workers, |i| {
+            let base = tri_base(i);
+            // SAFETY: row i's prefix is written by exactly one worker.
+            let row = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(i * n), i + 1) };
+            let p0 = &self.planes[base..base + i];
+            let t0 = theta[0];
+            for (v, dist) in row[..i].iter_mut().zip(p0) {
+                *v = t0 * dist;
+            }
+            for k in 1..self.d {
+                let pk = &self.planes[k * tri + base..k * tri + base + i];
+                let tk = theta[k];
+                for (v, dist) in row[..i].iter_mut().zip(pk) {
+                    *v += tk * dist;
+                }
+            }
+            for v in row[..i].iter_mut() {
+                *v = kind.corr_from_dist(*v);
+            }
+            row[i] = 1.0;
+        });
+        // Pass 2: mirror the lower triangle published by the pass-1 join.
+        // SAFETY: r's lower triangle is fully written; no other refs live.
+        unsafe { mirror_lower_to_upper(&ptr, n, workers) };
+        r
+    }
+}
+
+/// Per-dimension distances between two fixed point sets (a: m×d, b: n×d)
+/// — the θ-independent part of `cross_corr(a, b)`. Used by FITC, whose
+/// `Knm`/`Kmm` blocks are rebuilt on every marginal-likelihood evaluation.
+#[derive(Debug, Clone)]
+pub struct CrossDistanceCache {
+    m: usize,
+    n: usize,
+    d: usize,
+    squared: bool,
+    /// `d` planes of m×n row-major distances; plane `k` at `k·m·n`.
+    planes: Vec<f64>,
+}
+
+impl CrossDistanceCache {
+    pub fn new(a: &Matrix, b: &Matrix, kind: KernelKind, workers: usize) -> Self {
+        assert_eq!(a.cols(), b.cols(), "CrossDistanceCache: dim mismatch");
+        let (m, d) = a.shape();
+        let n = b.rows();
+        assert!(d > 0, "CrossDistanceCache: inputs must have at least one column");
+        let squared = kind.uses_squared_distance();
+        let plane = m * n;
+        let mut planes = vec![0.0; d * plane];
+        let ptr = SendPtr::new(planes.as_mut_ptr());
+        scoped_for(m, workers, |i| {
+            let ai = a.row(i);
+            for j in 0..n {
+                let bj = b.row(j);
+                for k in 0..d {
+                    let diff = ai[k] - bj[k];
+                    let v = if squared { diff * diff } else { diff.abs() };
+                    // SAFETY: (k·plane + i·n + j) is owned by row i's worker.
+                    unsafe { *ptr.get().add(k * plane + i * n + j) = v };
+                }
+            }
+        });
+        Self { m, n, d, squared, planes }
+    }
+
+    /// Summed-plane variant for **isotropic** kernels (see
+    /// [`DistanceCache::new_isotropic`]): one m×n plane of `Σₖ dₖ`,
+    /// assembled with a 1-dimensional kernel. 1/d the memory of
+    /// [`Self::new`] — for FITC's n×m `Knm` block this is the difference
+    /// between one extra `Knm`-sized buffer and d of them.
+    pub fn new_isotropic(a: &Matrix, b: &Matrix, kind: KernelKind, workers: usize) -> Self {
+        assert_eq!(a.cols(), b.cols(), "CrossDistanceCache: dim mismatch");
+        let (m, d) = a.shape();
+        let n = b.rows();
+        assert!(d > 0, "CrossDistanceCache: inputs must have at least one column");
+        let squared = kind.uses_squared_distance();
+        let mut planes = vec![0.0; m * n];
+        let ptr = SendPtr::new(planes.as_mut_ptr());
+        scoped_for(m, workers, |i| {
+            let ai = a.row(i);
+            for j in 0..n {
+                let bj = b.row(j);
+                let mut acc = 0.0;
+                for k in 0..d {
+                    let diff = ai[k] - bj[k];
+                    acc += if squared { diff * diff } else { diff.abs() };
+                }
+                // SAFETY: (i·n + j) is owned by row i's worker.
+                unsafe { *ptr.get().add(i * n + j) = acc };
+            }
+        });
+        Self { m, n, d: 1, squared, planes }
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.m, self.n)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Assemble the m×n cross-correlation matrix for `kernel`'s θ.
+    pub fn corr_matrix(&self, kernel: &Kernel, workers: usize) -> Matrix {
+        assert_eq!(kernel.dim(), self.d, "CrossDistanceCache: θ dimension mismatch");
+        assert_eq!(
+            kernel.kind.uses_squared_distance(),
+            self.squared,
+            "CrossDistanceCache: metric mismatch for kernel {:?}",
+            kernel.kind,
+        );
+        let (m, n) = (self.m, self.n);
+        let plane = m * n;
+        let theta = &kernel.theta;
+        let kind = kernel.kind;
+        let mut c = Matrix::zeros(m, n);
+        let ptr = SendPtr::new(c.as_mut_slice().as_mut_ptr());
+        scoped_for(m, workers, |i| {
+            // SAFETY: disjoint whole rows per worker.
+            let row = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(i * n), n) };
+            let p0 = &self.planes[i * n..i * n + n];
+            let t0 = theta[0];
+            for (v, dist) in row.iter_mut().zip(p0) {
+                *v = t0 * dist;
+            }
+            for k in 1..self.d {
+                let pk = &self.planes[k * plane + i * n..k * plane + i * n + n];
+                let tk = theta[k];
+                for (v, dist) in row.iter_mut().zip(pk) {
+                    *v += tk * dist;
+                }
+            }
+            for v in row.iter_mut() {
+                *v = kind.corr_from_dist(*v);
+            }
+        });
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check_default, gen_matrix, gen_size};
+    use crate::util::rng::Rng;
+
+    fn all_kinds() -> [KernelKind; 4] {
+        [
+            KernelKind::SquaredExponential,
+            KernelKind::Matern52,
+            KernelKind::Matern32,
+            KernelKind::AbsoluteExponential,
+        ]
+    }
+
+    #[test]
+    fn cached_assembly_matches_scalar_prop() {
+        // The ISSUE's equivalence gate: cache-assembled R vs scalar corr
+        // for all four kernel kinds, across sizes/θ, serial and parallel.
+        check_default(|rng| {
+            let n = gen_size(rng, 2, 40);
+            let d = gen_size(rng, 1, 4);
+            let x = gen_matrix(rng, n, d, -3.0, 3.0);
+            for kind in all_kinds() {
+                let theta = rng.uniform_vec(d, 0.05, 5.0);
+                let kernel = Kernel::new(kind, theta);
+                let cache = DistanceCache::new(&x, kind, 1);
+                let scalar = kernel.corr_matrix(&x);
+                for workers in [1usize, 3] {
+                    let cached = cache.corr_matrix(&kernel, workers);
+                    crate::prop_assert!(
+                        scalar.max_abs_diff(&cached) < 1e-12,
+                        "{kind:?}: cached != scalar (n={n}, d={d}, workers={workers})"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cached_assembly_is_bit_identical() {
+        // Stronger than the 1e-12 gate: the cached path is engineered to
+        // reproduce the scalar accumulation order exactly, which is what
+        // makes fit_with_cache() bit-identical to fit().
+        let mut rng = Rng::new(11);
+        let x = gen_matrix(&mut rng, 60, 3, -2.0, 2.0);
+        for kind in all_kinds() {
+            let kernel = Kernel::new(kind, vec![0.37, 1.9, 0.004]);
+            let cache = DistanceCache::new(&x, kind, 4);
+            let scalar = kernel.corr_matrix(&x);
+            let cached = cache.corr_matrix(&kernel, 4);
+            for (a, b) in scalar.as_slice().iter().zip(cached.as_slice()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{kind:?}: bits differ");
+            }
+        }
+    }
+
+    #[test]
+    fn cross_cache_matches_cross_corr() {
+        let mut rng = Rng::new(13);
+        let a = gen_matrix(&mut rng, 23, 3, -2.0, 2.0);
+        let b = gen_matrix(&mut rng, 41, 3, -2.0, 2.0);
+        for kind in all_kinds() {
+            let kernel = Kernel::new(kind, vec![1.4, 0.2, 0.9]);
+            let cache = CrossDistanceCache::new(&a, &b, kind, 3);
+            assert_eq!(cache.shape(), (23, 41));
+            let scalar = kernel.cross_corr(&a, &b);
+            let cached = cache.corr_matrix(&kernel, 3);
+            assert!(scalar.max_abs_diff(&cached) < 1e-12, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn cache_reuse_across_theta() {
+        // One cache, many θ — the hyperopt usage pattern.
+        let mut rng = Rng::new(17);
+        let x = gen_matrix(&mut rng, 30, 2, -1.0, 1.0);
+        let cache = DistanceCache::new(&x, KernelKind::SquaredExponential, 2);
+        for _ in 0..5 {
+            let theta = rng.uniform_vec(2, 0.01, 10.0);
+            let kernel = Kernel::new(KernelKind::SquaredExponential, theta);
+            let cached = cache.corr_matrix(&kernel, 2);
+            assert!(kernel.corr_matrix(&x).max_abs_diff(&cached) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn isotropic_summed_caches_match_scalar() {
+        // FITC's usage: isotropic θ, 1-d assembly kernel over the summed
+        // plane. Re-associating θ outside the sum costs ~1e-14, not more.
+        let mut rng = Rng::new(23);
+        let x = gen_matrix(&mut rng, 30, 4, -2.0, 2.0);
+        let b = gen_matrix(&mut rng, 12, 4, -2.0, 2.0);
+        for kind in all_kinds() {
+            let theta = 0.7;
+            let full = Kernel::new(kind, vec![theta; 4]);
+            let iso = Kernel::new(kind, vec![theta]);
+            let cache = DistanceCache::new_isotropic(&x, kind, 2);
+            assert!(
+                full.corr_matrix(&x).max_abs_diff(&cache.corr_matrix(&iso, 2)) < 1e-12,
+                "{kind:?}: summed self-cache"
+            );
+            let cross = CrossDistanceCache::new_isotropic(&x, &b, kind, 2);
+            assert!(
+                full.cross_corr(&x, &b).max_abs_diff(&cross.corr_matrix(&iso, 2)) < 1e-12,
+                "{kind:?}: summed cross-cache"
+            );
+        }
+    }
+
+    #[test]
+    fn metric_mismatch_panics() {
+        let x = Matrix::from_rows(&[&[0.0], &[1.0]]);
+        let cache = DistanceCache::new(&x, KernelKind::SquaredExponential, 1);
+        let kernel = Kernel::new(KernelKind::AbsoluteExponential, vec![1.0]);
+        let r = std::panic::catch_unwind(|| cache.corr_matrix(&kernel, 1));
+        assert!(r.is_err(), "metric mismatch accepted");
+    }
+
+    #[test]
+    fn try_new_respects_size_cap() {
+        let mut rng = Rng::new(19);
+        let x = gen_matrix(&mut rng, 16, 2, -1.0, 1.0);
+        assert!(DistanceCache::try_new(&x, KernelKind::Matern52, 1).is_some());
+        // n=1: degenerate but valid (empty triangle).
+        let one = gen_matrix(&mut rng, 1, 2, -1.0, 1.0);
+        let c = DistanceCache::try_new(&one, KernelKind::Matern52, 1).unwrap();
+        let kernel = Kernel::new(KernelKind::Matern52, vec![1.0, 1.0]);
+        let r = c.corr_matrix(&kernel, 1);
+        assert_eq!(r[(0, 0)], 1.0);
+    }
+}

@@ -9,9 +9,19 @@
 //! (concentrated out of the likelihood), so kernels here compute the
 //! correlation part only, parameterized by per-dimension length-scale
 //! parameters θᵢ > 0.
+//!
+//! Every family is a scalar map of one θ-weighted distance (squared for
+//! SE/Matérn, L1 for absolute-exponential). That split — distance
+//! accumulation vs. [`KernelKind::corr_from_dist`] — is what lets
+//! [`cache::DistanceCache`] precompute the per-dimension distance planes
+//! once and re-assemble the correlation matrix for any θ with a fused
+//! axpy + transform pass (the hyperopt hot path, see EXPERIMENTS.md §Perf).
+
+pub mod cache;
 
 use crate::util::matrix::Matrix;
-use crate::util::threadpool::scoped_for_chunks;
+use crate::util::sendptr::{mirror_lower_to_upper, SendPtr};
+use crate::util::threadpool::{scoped_for, scoped_for_chunks};
 
 /// Kernel family selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -45,6 +55,34 @@ impl KernelKind {
             _ => None,
         }
     }
+
+    /// Whether this family consumes the θ-weighted *squared* distance
+    /// (`Σᵢ θᵢ(aᵢ−bᵢ)²`); the absolute-exponential family consumes the
+    /// θ-weighted L1 distance instead.
+    #[inline]
+    pub fn uses_squared_distance(self) -> bool {
+        !matches!(self, KernelKind::AbsoluteExponential)
+    }
+
+    /// Correlation as a function of the θ-weighted distance `t` (squared
+    /// or L1 per [`Self::uses_squared_distance`]). The single source of
+    /// truth for the kernel math: [`Kernel::corr`] and the cached
+    /// assembly path both route through here, so they are bit-identical.
+    #[inline]
+    pub fn corr_from_dist(self, t: f64) -> f64 {
+        match self {
+            KernelKind::SquaredExponential => (-t).exp(),
+            KernelKind::Matern52 => {
+                let r = (5.0 * t).sqrt();
+                (1.0 + r + r * r / 3.0) * (-r).exp()
+            }
+            KernelKind::Matern32 => {
+                let r = (3.0 * t).sqrt();
+                (1.0 + r) * (-r).exp()
+            }
+            KernelKind::AbsoluteExponential => (-t).exp(),
+        }
+    }
 }
 
 /// A stationary anisotropic kernel: family + per-dimension θ.
@@ -54,6 +92,11 @@ pub struct Kernel {
     /// Per-dimension inverse-squared-length-scales θᵢ (Eq. 1). All > 0.
     pub theta: Vec<f64>,
 }
+
+/// Size (m·n·d) below which the vectorized cross-correlation paths fall
+/// back to the plain scalar loop — the allocations and thread spawns
+/// would dominate.
+const CROSS_FAST_MIN: usize = 1 << 15;
 
 impl Kernel {
     pub fn new(kind: KernelKind, theta: Vec<f64>) -> Self {
@@ -73,6 +116,10 @@ impl Kernel {
     }
 
     /// θ-weighted squared distance `Σᵢ θᵢ (aᵢ−bᵢ)²`.
+    ///
+    /// The per-dimension square is formed before the θ product so the
+    /// result is bit-identical to the cached-distance assembly, which
+    /// stores `(aᵢ−bᵢ)²` and multiplies by θᵢ at assembly time.
     #[inline]
     fn wsq_dist(&self, a: &[f64], b: &[f64]) -> f64 {
         debug_assert_eq!(a.len(), self.theta.len());
@@ -80,7 +127,7 @@ impl Kernel {
         let mut acc = 0.0;
         for i in 0..a.len() {
             let d = a[i] - b[i];
-            acc += self.theta[i] * d * d;
+            acc += self.theta[i] * (d * d);
         }
         acc
     }
@@ -98,23 +145,19 @@ impl Kernel {
     /// Correlation between two points (1.0 at zero distance).
     #[inline]
     pub fn corr(&self, a: &[f64], b: &[f64]) -> f64 {
-        match self.kind {
-            KernelKind::SquaredExponential => (-self.wsq_dist(a, b)).exp(),
-            KernelKind::Matern52 => {
-                let r = (5.0 * self.wsq_dist(a, b)).sqrt();
-                (1.0 + r + r * r / 3.0) * (-r).exp()
-            }
-            KernelKind::Matern32 => {
-                let r = (3.0 * self.wsq_dist(a, b)).sqrt();
-                (1.0 + r) * (-r).exp()
-            }
-            KernelKind::AbsoluteExponential => (-self.wabs_dist(a, b)).exp(),
-        }
+        let t = if self.kind.uses_squared_distance() {
+            self.wsq_dist(a, b)
+        } else {
+            self.wabs_dist(a, b)
+        };
+        self.kind.corr_from_dist(t)
     }
 
     /// Full correlation matrix `R[i][j] = corr(X[i], X[j])` (symmetric,
     /// unit diagonal). This is the `O(n² d)` hot spot — the Pallas L1
-    /// kernel computes the same quantity on the AOT path.
+    /// kernel computes the same quantity on the AOT path, and
+    /// [`cache::DistanceCache`] amortizes it across repeated θ
+    /// evaluations.
     pub fn corr_matrix(&self, x: &Matrix) -> Matrix {
         assert_eq!(x.cols(), self.dim(), "corr_matrix: dim mismatch");
         let n = x.rows();
@@ -131,37 +174,88 @@ impl Kernel {
         r
     }
 
-    /// Multi-threaded correlation matrix (row-block parallel).
+    /// Multi-threaded correlation matrix.
+    ///
+    /// Workers compute only the strict lower triangle (dynamic per-row
+    /// stealing, since row `i` costs `i` dot products) and the upper
+    /// triangle is mirrored in a second row-parallel pass — half the
+    /// arithmetic of the former implementation, which had every worker
+    /// recompute the full row.
     pub fn corr_matrix_parallel(&self, x: &Matrix, workers: usize) -> Matrix {
         let n = x.rows();
         if workers <= 1 || n < 256 {
             return self.corr_matrix(x);
         }
         let mut r = Matrix::zeros(n, n);
-        struct SendPtr(*mut f64);
-        unsafe impl Send for SendPtr {}
-        unsafe impl Sync for SendPtr {}
-        impl SendPtr {
-            fn get(&self) -> *mut f64 {
-                self.0
+        let ptr = SendPtr::new(r.as_mut_slice().as_mut_ptr());
+        // Pass 1: strict lower triangle + unit diagonal. Each worker owns
+        // whole rows, so writes are disjoint.
+        scoped_for(n, workers, |i| {
+            let xi = x.row(i);
+            // SAFETY: row i's prefix [i*n, i*n+i] is written by exactly
+            // one worker; nothing reads it until the scope joins.
+            let row = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(i * n), i + 1) };
+            for (j, v) in row[..i].iter_mut().enumerate() {
+                *v = self.corr(xi, x.row(j));
             }
+            row[i] = 1.0;
+        });
+        // Pass 2: mirror the lower triangle published by the pass-1 join.
+        // SAFETY: r's lower triangle is fully written; no other refs live.
+        unsafe { mirror_lower_to_upper(&ptr, n, workers) };
+        r
+    }
+
+    /// Correlation matrix for the SE kernel via the GEMM trick:
+    /// `Σθᵢ(aᵢ−bᵢ)² = ‖ã‖² + ‖b̃‖² − 2·ã·b̃` with `ã = √θ ⊙ a`, so the
+    /// whole distance matrix is one blocked symmetric matmul instead of
+    /// n²d/2 scalar passes. Falls back to [`Self::corr_matrix_parallel`]
+    /// for the other families (their distances are needed per-dimension).
+    ///
+    /// Accuracy: agrees with the scalar path to ~1e-14 (the √θ scaling
+    /// and the re-associated dot products round differently), so use the
+    /// scalar or cached paths where bit-stability matters.
+    pub fn corr_matrix_gemm(&self, x: &Matrix, workers: usize) -> Matrix {
+        if self.kind != KernelKind::SquaredExponential {
+            return self.corr_matrix_parallel(x, workers);
         }
-        let ptr = SendPtr(r.as_mut_slice().as_mut_ptr());
-        scoped_for_chunks(n, workers, |rows| {
+        assert_eq!(x.cols(), self.dim(), "corr_matrix_gemm: dim mismatch");
+        let mut g = self.se_gemm(x, x, workers);
+        // Exact unit diagonal (‖ã‖ᵢ + ‖ã‖ᵢ − 2ãᵢ·ãᵢ rounds to ~1e-16, not 0).
+        for i in 0..x.rows() {
+            g[(i, i)] = 1.0;
+        }
+        g
+    }
+
+    /// Shared SE GEMM-trick core: m×n correlations between `a` and `b`
+    /// via one blocked parallel matmul. The full product (rather than a
+    /// symmetric rank-k update) is used even for `a == b` — the blocked
+    /// parallel matmul beats the scalar `syrk` despite doing 2× the FLOPs.
+    fn se_gemm(&self, a: &Matrix, b: &Matrix, workers: usize) -> Matrix {
+        debug_assert_eq!(self.kind, KernelKind::SquaredExponential);
+        let (m, n) = (a.rows(), b.rows());
+        let at = self.scale_by_sqrt_theta(a);
+        let bt = self.scale_by_sqrt_theta(b);
+        let sqnorms = |mat: &Matrix| -> Vec<f64> {
+            (0..mat.rows()).map(|i| mat.row(i).iter().map(|v| v * v).sum()).collect()
+        };
+        let na = sqnorms(&at);
+        let nb = sqnorms(&bt);
+        let mut g = crate::linalg::blas::matmul_parallel(&at, &bt.transpose(), workers);
+        let ptr = SendPtr::new(g.as_mut_slice().as_mut_ptr());
+        scoped_for_chunks(m, workers, |rows| {
             for i in rows {
-                let xi = x.row(i);
-                // SAFETY: each worker writes a disjoint set of rows i plus
-                // the mirrored (j,i) entries, which belong to rows j<i that
-                // may be owned by other workers — so write only row i here
-                // and mirror afterwards.
-                let row =
-                    unsafe { std::slice::from_raw_parts_mut(ptr.get().add(i * n), n) };
-                for j in 0..n {
-                    row[j] = if i == j { 1.0 } else { self.corr(xi, x.row(j)) };
+                // SAFETY: disjoint whole rows per worker.
+                let row = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(i * n), n) };
+                let nai = na[i];
+                for (j, v) in row.iter_mut().enumerate() {
+                    let t = (nai + nb[j] - 2.0 * *v).max(0.0);
+                    *v = (-t).exp();
                 }
             }
         });
-        r
+        g
     }
 
     /// Cross-correlation matrix between test rows `xt` (m×d) and training
@@ -179,6 +273,48 @@ impl Kernel {
             }
         }
         c
+    }
+
+    /// Vectorized cross-correlation — the batched-predict assembly path.
+    ///
+    /// SE kernel: the GEMM trick (`‖ã‖² + ‖b̃‖² − 2ã·b̃` via the blocked
+    /// parallel matmul). Other families: row-block-parallel scalar
+    /// assembly. Small problems fall back to [`Self::cross_corr`].
+    pub fn cross_corr_fast(&self, xt: &Matrix, x: &Matrix, workers: usize) -> Matrix {
+        assert_eq!(xt.cols(), self.dim());
+        assert_eq!(x.cols(), self.dim());
+        let (m, n) = (xt.rows(), x.rows());
+        if m * n * self.dim() < CROSS_FAST_MIN {
+            return self.cross_corr(xt, x);
+        }
+        if self.kind == KernelKind::SquaredExponential {
+            return self.se_gemm(xt, x, workers);
+        }
+        let mut c = Matrix::zeros(m, n);
+        let ptr = SendPtr::new(c.as_mut_slice().as_mut_ptr());
+        scoped_for_chunks(m, workers, |rows| {
+            for i in rows {
+                let ti = xt.row(i);
+                // SAFETY: disjoint whole rows per worker.
+                let row = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(i * n), n) };
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v = self.corr(ti, x.row(j));
+                }
+            }
+        });
+        c
+    }
+
+    /// Copy of `x` with every column scaled by √θᵢ (SE GEMM trick).
+    fn scale_by_sqrt_theta(&self, x: &Matrix) -> Matrix {
+        let sq: Vec<f64> = self.theta.iter().map(|t| t.sqrt()).collect();
+        let mut out = x.clone();
+        for i in 0..out.rows() {
+            for (v, s) in out.row_mut(i).iter_mut().zip(&sq) {
+                *v *= s;
+            }
+        }
+        out
     }
 }
 
@@ -268,10 +404,25 @@ mod tests {
     fn parallel_matrix_matches_sequential() {
         let mut rng = Rng::new(5);
         let x = gen_matrix(&mut rng, 300, 3, -1.0, 1.0);
-        let k = Kernel::new(KernelKind::SquaredExponential, vec![0.5, 1.0, 2.0]);
+        for kind in all_kinds() {
+            let k = Kernel::new(kind, vec![0.5, 1.0, 2.0]);
+            let seq = k.corr_matrix(&x);
+            let par = k.corr_matrix_parallel(&x, 4);
+            assert!(seq.max_abs_diff(&par) < 1e-15, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn gemm_matrix_matches_sequential() {
+        let mut rng = Rng::new(6);
+        let x = gen_matrix(&mut rng, 150, 3, -2.0, 2.0);
+        let k = Kernel::new(KernelKind::SquaredExponential, vec![0.4, 1.1, 2.3]);
         let seq = k.corr_matrix(&x);
-        let par = k.corr_matrix_parallel(&x, 4);
-        assert!(seq.max_abs_diff(&par) < 1e-15);
+        let gemm = k.corr_matrix_gemm(&x, 4);
+        assert!(seq.max_abs_diff(&gemm) < 1e-12);
+        // Non-SE kinds route to the scalar-parallel path.
+        let km = Kernel::new(KernelKind::Matern32, vec![0.4, 1.1, 2.3]);
+        assert!(km.corr_matrix(&x).max_abs_diff(&km.corr_matrix_gemm(&x, 4)) < 1e-15);
     }
 
     #[test]
@@ -282,6 +433,20 @@ mod tests {
         let full = k.corr_matrix(&x);
         let cross = k.cross_corr(&x, &x);
         assert!(full.max_abs_diff(&cross) < 1e-14);
+    }
+
+    #[test]
+    fn cross_corr_fast_matches_scalar_all_kinds() {
+        // Sizes above CROSS_FAST_MIN so the vectorized paths engage.
+        let mut rng = Rng::new(9);
+        let x = gen_matrix(&mut rng, 130, 4, -2.0, 2.0);
+        let xt = gen_matrix(&mut rng, 70, 4, -2.5, 2.5);
+        for kind in all_kinds() {
+            let k = Kernel::new(kind, vec![0.3, 0.9, 1.7, 0.05]);
+            let slow = k.cross_corr(&xt, &x);
+            let fast = k.cross_corr_fast(&xt, &x, 4);
+            assert!(slow.max_abs_diff(&fast) < 1e-12, "{kind:?}");
+        }
     }
 
     #[test]

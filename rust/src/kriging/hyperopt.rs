@@ -7,10 +7,12 @@
 //! one `O(n³)` model fit, which is exactly the cost structure Cluster
 //! Kriging is designed to shrink.
 
+use crate::kernel::cache::DistanceCache;
 use crate::kernel::{Kernel, KernelKind};
 use crate::kriging::model::{KrigingError, OrdinaryKriging};
 use crate::util::matrix::Matrix;
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 /// Search-space and budget configuration.
 #[derive(Debug, Clone)]
@@ -29,6 +31,14 @@ pub struct HyperOpt {
     /// Use one shared θ for all dimensions (isotropic) instead of
     /// per-dimension anisotropic θ. Cuts the search dimension from d to 1.
     pub isotropic: bool,
+    /// Worker threads for assembly + factorization inside the objective.
+    /// `None` → the machine default, so top-level single-model searches
+    /// (SoD, BCM's shared pre-fit, a plain `HyperOpt::fit`) use all
+    /// cores. Contexts that already run fits on a worker pool override
+    /// this — `ClusterKriging::fit` splits the budget across clusters —
+    /// since nesting full pools oversubscribes the machine. The fitted
+    /// model is identical for any worker count.
+    pub assembly_workers: Option<usize>,
     pub seed: u64,
 }
 
@@ -48,6 +58,7 @@ impl Default for HyperOpt {
             restarts: 3,
             max_evals: 60,
             isotropic: false,
+            assembly_workers: None,
             seed: 0x5EED,
         }
     }
@@ -61,9 +72,27 @@ impl HyperOpt {
 
     /// Fit a model with ML-estimated hyper-parameters.
     pub fn fit(&self, x: Matrix, y: &[f64]) -> Result<OrdinaryKriging, KrigingError> {
+        self.fit_shared(Arc::new(x), y)
+    }
+
+    /// [`Self::fit`] over a shared training matrix.
+    ///
+    /// The whole multi-start search runs against **one** θ-independent
+    /// [`DistanceCache`] built up front, so each of the ~restarts×evals
+    /// objective evaluations assembles `R = g(Σθᵢ Dᵢ)` from flat cached
+    /// planes instead of a fresh O(n²d) scalar pass — and shares `x` by
+    /// reference instead of cloning it per evaluation. Oversized caches
+    /// (see [`crate::kernel::cache::MAX_CACHE_ENTRIES`]) fall back to the
+    /// scalar per-evaluation path transparently.
+    pub fn fit_shared(&self, x: Arc<Matrix>, y: &[f64]) -> Result<OrdinaryKriging, KrigingError> {
         let d = x.cols().max(1);
         let theta_dims = if self.isotropic { 1 } else { d };
         let (lo, hi) = self.log_theta_bounds;
+        let workers = self
+            .assembly_workers
+            .unwrap_or_else(crate::util::threadpool::default_workers)
+            .max(1);
+        let cache = DistanceCache::try_new(&x, self.kind, workers);
 
         let mut rng = Rng::new(self.seed ^ (x.rows() as u64) << 16 ^ d as u64);
         let mut best: Option<OrdinaryKriging> = None;
@@ -104,8 +133,25 @@ impl HyperOpt {
             let mut local_best: Option<OrdinaryKriging> = None;
             let mut objective = |p: &[f64]| -> f64 {
                 let (theta, nugget) = decode(p);
-                match OrdinaryKriging::fit(x.clone(), y, Kernel::new(self.kind, theta), nugget)
-                {
+                let kernel = Kernel::new(self.kind, theta);
+                let fitted = match cache.as_ref() {
+                    Some(c) => OrdinaryKriging::fit_with_cache(
+                        Arc::clone(&x),
+                        y,
+                        kernel,
+                        nugget,
+                        c,
+                        workers,
+                    ),
+                    None => OrdinaryKriging::fit_shared_with_workers(
+                        Arc::clone(&x),
+                        y,
+                        kernel,
+                        nugget,
+                        workers,
+                    ),
+                };
+                match fitted {
                     Ok(model) => {
                         let nll = model.nll();
                         let better = local_best
@@ -280,6 +326,33 @@ mod tests {
         let model = opt.fit(x, &y).unwrap();
         let t = model.kernel().theta.clone();
         assert!(t.windows(2).all(|w| (w[0] - w[1]).abs() < 1e-12), "not isotropic: {t:?}");
+    }
+
+    #[test]
+    fn cached_search_deterministic_across_workers() {
+        // The cached objective is engineered to be worker-count
+        // independent: same data + seed → bit-identical model.
+        let mut rng = Rng::new(41);
+        let x = gen_matrix(&mut rng, 40, 2, -2.0, 2.0);
+        let y: Vec<f64> = (0..40).map(|i| (1.3 * x.row(i)[0]).sin()).collect();
+        let base = HyperOpt { restarts: 2, max_evals: 25, ..Default::default() };
+        let serial = base.fit(x.clone(), &y).unwrap();
+        let parallel = HyperOpt { assembly_workers: Some(4), ..base }
+            .fit(x.clone(), &y)
+            .unwrap();
+        assert_eq!(serial.nll().to_bits(), parallel.nll().to_bits());
+        assert_eq!(serial.kernel().theta, parallel.kernel().theta);
+    }
+
+    #[test]
+    fn fit_shared_takes_no_copy() {
+        // The Arc handed to fit_shared is the buffer the model keeps.
+        let mut rng = Rng::new(43);
+        let x = std::sync::Arc::new(gen_matrix(&mut rng, 25, 1, -2.0, 2.0));
+        let y: Vec<f64> = (0..25).map(|i| x.row(i)[0]).collect();
+        let opt = HyperOpt { restarts: 1, max_evals: 10, ..Default::default() };
+        let model = opt.fit_shared(std::sync::Arc::clone(&x), &y).unwrap();
+        assert!(std::ptr::eq(model.x_train(), x.as_ref()));
     }
 
     #[test]

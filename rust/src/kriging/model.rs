@@ -11,9 +11,12 @@
 //!                                    + (1 − 1ᵀC⁻¹r(x))²/(1ᵀC⁻¹1)]
 //! with C = R + λI and r(x) the correlation vector to the training set.
 
+use crate::kernel::cache::DistanceCache;
 use crate::kernel::Kernel;
 use crate::linalg::{Cholesky, CholeskyError};
 use crate::util::matrix::Matrix;
+use crate::util::threadpool::default_workers;
+use std::sync::Arc;
 use thiserror::Error;
 
 #[derive(Debug, Error)]
@@ -24,6 +27,8 @@ pub enum KrigingError {
     DimMismatch { x_cols: usize, kernel_dim: usize },
     #[error("x has {x_rows} rows but y has {y_len} values")]
     RowMismatch { x_rows: usize, y_len: usize },
+    #[error("distance cache incompatible with fit inputs: {reason}")]
+    CacheMismatch { reason: &'static str },
     #[error("correlation matrix factorization failed: {0}")]
     Factorization(#[from] CholeskyError),
     #[error("non-finite value encountered in {0}")]
@@ -53,7 +58,10 @@ pub struct OrdinaryKriging {
     kernel: Kernel,
     /// Relative nugget λ = σ_γ² / σ².
     nugget: f64,
-    x: Matrix,
+    /// Training inputs, shared (`Arc`) so the hyperopt loop's ~180 fits
+    /// per cluster reference one buffer instead of cloning n×d doubles
+    /// per objective evaluation.
+    x: Arc<Matrix>,
     chol: Cholesky,
     /// α = C⁻¹(y − μ̂·1): the prediction weights.
     alpha: Vec<f64>,
@@ -70,6 +78,81 @@ impl OrdinaryKriging {
     /// Fit on inputs `x` (n×d) and outputs `y` (n) with the given kernel
     /// and relative nugget λ ≥ 0.
     pub fn fit(x: Matrix, y: &[f64], kernel: Kernel, nugget: f64) -> Result<Self, KrigingError> {
+        Self::fit_shared(Arc::new(x), y, kernel, nugget)
+    }
+
+    /// [`Self::fit`] over a shared training matrix — no copy is taken;
+    /// the model keeps a reference-counted handle.
+    pub fn fit_shared(
+        x: Arc<Matrix>,
+        y: &[f64],
+        kernel: Kernel,
+        nugget: f64,
+    ) -> Result<Self, KrigingError> {
+        Self::fit_shared_with_workers(x, y, kernel, nugget, default_workers())
+    }
+
+    /// [`Self::fit_shared`] with an explicit worker budget for the
+    /// factorization. Pass 1 from already-parallel contexts (per-cluster
+    /// or per-module fits) so nested factorizations don't oversubscribe
+    /// the machine; the fitted model is identical for any worker count.
+    pub fn fit_shared_with_workers(
+        x: Arc<Matrix>,
+        y: &[f64],
+        kernel: Kernel,
+        nugget: f64,
+        workers: usize,
+    ) -> Result<Self, KrigingError> {
+        Self::validate(&x, y, &kernel)?;
+        let workers = workers.max(1);
+        // C = R + λI. corr_matrix_parallel computes the same scalar corr
+        // per element, so the matrix is bit-identical for any worker count.
+        let mut c = kernel.corr_matrix_parallel(&x, workers);
+        for i in 0..x.rows() {
+            c[(i, i)] += nugget;
+        }
+        Self::fit_core(x, y, kernel, nugget, c, workers)
+    }
+
+    /// Fit with the correlation matrix assembled from a precomputed
+    /// [`DistanceCache`] instead of a scalar O(n²d) pass — the hyperopt
+    /// hot path, where only θ changes between calls. Produces bit-
+    /// identical results to [`Self::fit`] (the cache reproduces the
+    /// scalar accumulation order exactly).
+    pub fn fit_with_cache(
+        x: Arc<Matrix>,
+        y: &[f64],
+        kernel: Kernel,
+        nugget: f64,
+        cache: &DistanceCache,
+        workers: usize,
+    ) -> Result<Self, KrigingError> {
+        Self::validate(&x, y, &kernel)?;
+        // Pre-check every cache precondition here so API misuse is a
+        // recoverable error, not a panic from the cache's own asserts.
+        if cache.len() != x.rows() {
+            return Err(KrigingError::CacheMismatch {
+                reason: "cache built for a different number of points",
+            });
+        }
+        if cache.dim() != kernel.dim() {
+            return Err(KrigingError::CacheMismatch {
+                reason: "cache built for a different input dimension",
+            });
+        }
+        if cache.squared() != kernel.kind.uses_squared_distance() {
+            return Err(KrigingError::CacheMismatch {
+                reason: "cache metric (squared vs L1) does not match the kernel family",
+            });
+        }
+        let mut c = cache.corr_matrix(&kernel, workers.max(1));
+        for i in 0..x.rows() {
+            c[(i, i)] += nugget;
+        }
+        Self::fit_core(x, y, kernel, nugget, c, workers.max(1))
+    }
+
+    fn validate(x: &Matrix, y: &[f64], kernel: &Kernel) -> Result<(), KrigingError> {
         let n = x.rows();
         if n == 0 {
             return Err(KrigingError::EmptyTrainingSet);
@@ -83,13 +166,20 @@ impl OrdinaryKriging {
         if y.iter().any(|v| !v.is_finite()) {
             return Err(KrigingError::NonFinite("y"));
         }
+        Ok(())
+    }
 
-        // C = R + λI.
-        let mut c = kernel.corr_matrix(&x);
-        for i in 0..n {
-            c[(i, i)] += nugget;
-        }
-        let chol = Cholesky::new_regularized(&c)?;
+    /// Shared fit tail: factor `C = R + λI` and concentrate out μ̂/σ̂².
+    fn fit_core(
+        x: Arc<Matrix>,
+        y: &[f64],
+        kernel: Kernel,
+        nugget: f64,
+        c: Matrix,
+        workers: usize,
+    ) -> Result<Self, KrigingError> {
+        let n = x.rows();
+        let chol = Cholesky::new_regularized_with_workers(&c, workers)?;
 
         // μ̂ = (1ᵀC⁻¹y)/(1ᵀC⁻¹1)  (MAP trend, Eq. 4 right).
         let ones = vec![1.0; n];
@@ -125,6 +215,18 @@ impl OrdinaryKriging {
     /// sides (`Cholesky::solve_matrix`), streaming the factor once per
     /// chunk instead of once per point — the predict hot path (§Perf).
     pub fn predict(&self, xt: &Matrix) -> Result<Prediction, KrigingError> {
+        self.predict_with_workers(xt, default_workers())
+    }
+
+    /// [`Self::predict`] with an explicit worker budget for the
+    /// cross-correlation assembly. Pass 1 from already-parallel contexts
+    /// (e.g. Cluster Kriging's per-model batch predict) so the assembly
+    /// doesn't spawn `workers²` threads.
+    pub fn predict_with_workers(
+        &self,
+        xt: &Matrix,
+        workers: usize,
+    ) -> Result<Prediction, KrigingError> {
         if xt.cols() != self.kernel.dim() {
             return Err(KrigingError::DimMismatch {
                 x_cols: xt.cols(),
@@ -137,10 +239,13 @@ impl OrdinaryKriging {
         let mut variance = Vec::with_capacity(m);
         // Chunk to bound the n×chunk solve workspace.
         const CHUNK: usize = 256;
+        let workers = workers.max(1);
         for start in (0..m).step_by(CHUNK) {
             let rows: Vec<usize> = (start..(start + CHUNK).min(m)).collect();
             let xt_chunk = xt.select_rows(&rows);
-            let rt = self.kernel.cross_corr(&xt_chunk, &self.x); // c×n
+            // Vectorized assembly: GEMM trick for SE, row-parallel scalar
+            // otherwise (falls back to the plain loop for tiny chunks).
+            let rt = self.kernel.cross_corr_fast(&xt_chunk, &self.x, workers); // c×n
             let c_inv_r = self.chol.solve_matrix(&rt.transpose()); // n×c
             for (ci, _) in rows.iter().enumerate() {
                 let r = rt.row(ci);
@@ -355,6 +460,78 @@ mod tests {
         assert!(matches!(
             OrdinaryKriging::fit(Matrix::zeros(2, 2), &[f64::NAN, 0.0], kern, 0.0),
             Err(KrigingError::NonFinite(_))
+        ));
+    }
+
+    #[test]
+    fn fit_with_cache_bit_identical_to_fit() {
+        // The cached assembly reproduces the scalar accumulation order, so
+        // NLL and predictions must match to the last bit for every family.
+        let mut rng = Rng::new(21);
+        let x = gen_matrix(&mut rng, 50, 3, -2.0, 2.0);
+        let y: Vec<f64> = (0..50).map(|i| x.row(i)[0].sin() + 0.2 * x.row(i)[2]).collect();
+        let xt = gen_matrix(&mut rng, 17, 3, -2.5, 2.5);
+        for kind in [
+            KernelKind::SquaredExponential,
+            KernelKind::Matern52,
+            KernelKind::Matern32,
+            KernelKind::AbsoluteExponential,
+        ] {
+            let kernel = Kernel::new(kind, vec![0.8, 1.7, 0.09]);
+            let plain = OrdinaryKriging::fit(x.clone(), &y, kernel.clone(), 1e-8).unwrap();
+            let cache = crate::kernel::cache::DistanceCache::new(&x, kind, 4);
+            let cached = OrdinaryKriging::fit_with_cache(
+                std::sync::Arc::new(x.clone()),
+                &y,
+                kernel,
+                1e-8,
+                &cache,
+                4,
+            )
+            .unwrap();
+            assert_eq!(plain.nll().to_bits(), cached.nll().to_bits(), "{kind:?}: NLL bits");
+            assert_eq!(plain.mu_hat().to_bits(), cached.mu_hat().to_bits(), "{kind:?}: μ̂ bits");
+            let pp = plain.predict(&xt).unwrap();
+            let pc = cached.predict(&xt).unwrap();
+            for i in 0..xt.rows() {
+                assert_eq!(pp.mean[i].to_bits(), pc.mean[i].to_bits(), "{kind:?}: mean {i}");
+                assert_eq!(
+                    pp.variance[i].to_bits(),
+                    pc.variance[i].to_bits(),
+                    "{kind:?}: variance {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fit_with_cache_rejects_mismatched_cache() {
+        let mut rng = Rng::new(22);
+        let x = gen_matrix(&mut rng, 20, 2, -1.0, 1.0);
+        let other = gen_matrix(&mut rng, 12, 2, -1.0, 1.0);
+        let y = vec![0.0; 20];
+        let cache =
+            crate::kernel::cache::DistanceCache::new(&other, KernelKind::SquaredExponential, 1);
+        let kern = Kernel::se_isotropic(2, 1.0);
+        let x = std::sync::Arc::new(x);
+        assert!(matches!(
+            OrdinaryKriging::fit_with_cache(
+                std::sync::Arc::clone(&x),
+                &y,
+                kern,
+                1e-8,
+                &cache,
+                1
+            ),
+            Err(KrigingError::CacheMismatch { .. })
+        ));
+        // Metric mismatch is a recoverable error too, not a panic.
+        let sq_cache =
+            crate::kernel::cache::DistanceCache::new(&x, KernelKind::SquaredExponential, 1);
+        let abs_kern = Kernel::new(KernelKind::AbsoluteExponential, vec![1.0, 1.0]);
+        assert!(matches!(
+            OrdinaryKriging::fit_with_cache(x, &y, abs_kern, 1e-8, &sq_cache, 1),
+            Err(KrigingError::CacheMismatch { .. })
         ));
     }
 

@@ -6,6 +6,7 @@
 //! sizes (see EXPERIMENTS.md §Perf).
 
 use crate::util::matrix::Matrix;
+use crate::util::sendptr::SendPtr;
 use crate::util::threadpool::scoped_for_chunks;
 
 /// Cache block edge for the blocked matmul (elements, not bytes).
@@ -52,15 +53,18 @@ pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     }
 }
 
-/// `C = A · B` with row-parallelism across `workers` threads.
+/// `C = A · B` with row-parallelism across `workers` threads. Each worker
+/// runs the same [`BLOCK`]-tiled loop nest as [`matmul_into`] over its row
+/// range (the previous implementation fell back to the naive unblocked
+/// triple loop per chunk and lost the cache blocking entirely).
 pub fn matmul_parallel(a: &Matrix, b: &Matrix, workers: usize) -> Matrix {
     assert_eq!(a.cols(), b.rows(), "matmul: inner dim mismatch");
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
     let mut c = Matrix::zeros(m, n);
-    // SAFETY-free parallelism: each worker owns a disjoint row range of C.
+    // Each worker owns a disjoint row range of C.
     let aa = a.as_slice();
     let bb = b.as_slice();
-    let c_ptr = SendPtr(c.as_mut_slice().as_mut_ptr());
+    let c_ptr = SendPtr::new(c.as_mut_slice().as_mut_ptr());
     scoped_for_chunks(m, workers, |rows| {
         let cc = unsafe {
             std::slice::from_raw_parts_mut(
@@ -68,33 +72,32 @@ pub fn matmul_parallel(a: &Matrix, b: &Matrix, workers: usize) -> Matrix {
                 (rows.end - rows.start) * n,
             )
         };
-        for (local_i, i) in rows.clone().enumerate() {
-            let arow = &aa[i * k..(i + 1) * k];
-            let crow = &mut cc[local_i * n..(local_i + 1) * n];
-            for p in 0..k {
-                let aip = arow[p];
-                if aip == 0.0 {
-                    continue;
-                }
-                let brow = &bb[p * n..(p + 1) * n];
-                for j in 0..n {
-                    crow[j] += aip * brow[j];
+        let base = rows.start;
+        for i0 in (rows.start..rows.end).step_by(BLOCK) {
+            let i1 = (i0 + BLOCK).min(rows.end);
+            for p0 in (0..k).step_by(BLOCK) {
+                let p1 = (p0 + BLOCK).min(k);
+                for j0 in (0..n).step_by(BLOCK) {
+                    let j1 = (j0 + BLOCK).min(n);
+                    for i in i0..i1 {
+                        let arow = &aa[i * k..(i + 1) * k];
+                        let crow = &mut cc[(i - base) * n..(i - base + 1) * n];
+                        for p in p0..p1 {
+                            let aip = arow[p];
+                            if aip == 0.0 {
+                                continue;
+                            }
+                            let brow = &bb[p * n..(p + 1) * n];
+                            for j in j0..j1 {
+                                crow[j] += aip * brow[j];
+                            }
+                        }
+                    }
                 }
             }
         }
     });
     c
-}
-
-/// Wrapper making a raw pointer Send for disjoint-range writes. Accessed
-/// through `get()` so closures capture the (Sync) wrapper, not the field.
-struct SendPtr(*mut f64);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
-impl SendPtr {
-    fn get(&self) -> *mut f64 {
-        self.0
-    }
 }
 
 /// `C = A · Aᵀ` (symmetric rank-k update; only computes the lower triangle

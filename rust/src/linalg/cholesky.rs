@@ -6,7 +6,41 @@
 //! forward/back substitution; the matrix inverse is never formed.
 
 use crate::util::matrix::Matrix;
+use crate::util::sendptr::SendPtr;
+use crate::util::threadpool::{default_workers, scoped_for_chunks};
 use thiserror::Error;
+
+/// Panel width of the blocked right-looking factorization. 64 columns of
+/// f64 = 512 B per row strip: the trailing update streams row pairs whose
+/// strips both stay cache-resident (EXPERIMENTS.md §Perf).
+const PANEL: usize = 64;
+
+/// Below this order the unblocked factorization wins — panel bookkeeping
+/// and thread spawns would dominate the O(n³) work.
+const BLOCKED_MIN: usize = 128;
+
+/// Four-accumulator dot product (breaks the FMA dependency chain, same
+/// trick as the unblocked inner loop).
+#[inline]
+fn dot4(a: &[f64], b: &[f64]) -> f64 {
+    let len = a.len().min(b.len());
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    let chunks = len / 4 * 4;
+    let mut p = 0;
+    while p < chunks {
+        s0 += a[p] * b[p];
+        s1 += a[p + 1] * b[p + 1];
+        s2 += a[p + 2] * b[p + 2];
+        s3 += a[p + 3] * b[p + 3];
+        p += 4;
+    }
+    let mut tail = 0.0;
+    while p < len {
+        tail += a[p] * b[p];
+        p += 1;
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
 
 #[derive(Debug, Error)]
 pub enum CholeskyError {
@@ -36,12 +70,24 @@ impl Cholesky {
     /// This mirrors the "nugget regularization" fallback every practical GP
     /// implementation ships.
     pub fn new_regularized(a: &Matrix) -> Result<Self, CholeskyError> {
+        Self::new_regularized_with_workers(a, default_workers())
+    }
+
+    /// [`Self::new_regularized`] with an explicit worker budget for the
+    /// blocked factorization. Pass 1 from contexts that already run on a
+    /// worker pool (e.g. the k-way parallel cluster fit) so factorizations
+    /// don't oversubscribe the machine; the factor itself is identical for
+    /// any worker count.
+    pub fn new_regularized_with_workers(
+        a: &Matrix,
+        workers: usize,
+    ) -> Result<Self, CholeskyError> {
         let n = a.rows().max(1);
         let scale = (0..a.rows()).map(|i| a[(i, i)]).sum::<f64>().abs() / n as f64;
         let scale = if scale > 0.0 { scale } else { 1.0 };
         let mut jitter = 0.0;
         loop {
-            match Self::with_jitter(a, jitter) {
+            match Self::with_jitter_w(a, jitter, workers) {
                 Ok(c) => return Ok(c),
                 Err(e) => {
                     jitter = if jitter == 0.0 { scale * 1e-10 } else { jitter * 10.0 };
@@ -53,7 +99,134 @@ impl Cholesky {
         }
     }
 
+    /// Reference (unblocked) factorization — also the small-n fast path.
+    /// Kept public so equivalence tests and the perf benches can compare
+    /// the blocked factorization against it.
+    pub fn new_unblocked(a: &Matrix) -> Result<Self, CholeskyError> {
+        Self::with_jitter_unblocked(a, 0.0)
+    }
+
     fn with_jitter(a: &Matrix, jitter: f64) -> Result<Self, CholeskyError> {
+        Self::with_jitter_w(a, jitter, default_workers())
+    }
+
+    fn with_jitter_w(a: &Matrix, jitter: f64, workers: usize) -> Result<Self, CholeskyError> {
+        if a.rows() != a.cols() {
+            return Err(CholeskyError::NotSquare { rows: a.rows(), cols: a.cols() });
+        }
+        if a.rows() < BLOCKED_MIN {
+            Self::with_jitter_unblocked(a, jitter)
+        } else {
+            // workers == 1 still takes the blocked path (cache tiling wins
+            // even single-threaded); scoped_for_chunks runs inline then.
+            Self::with_jitter_blocked(a, jitter, workers.max(1))
+        }
+    }
+
+    /// Blocked right-looking factorization: per panel of [`PANEL`]
+    /// columns, (1) factor the diagonal block unblocked, (2) triangular-
+    /// solve the panel rows below it, (3) apply the symmetric rank-PANEL
+    /// trailing update — steps 2 and 3 run row-block-parallel on the
+    /// scoped pool. Deterministic: every output element is computed by
+    /// exactly one worker with a fixed accumulation order, so the factor
+    /// does not depend on the worker count.
+    fn with_jitter_blocked(a: &Matrix, jitter: f64, workers: usize) -> Result<Self, CholeskyError> {
+        let n = a.rows();
+        let mut l = Matrix::zeros(n, n);
+        {
+            // Seed L with A's lower triangle (+ jitter on the diagonal);
+            // the factorization then runs fully in place.
+            let ld = l.as_mut_slice();
+            let ad = a.as_slice();
+            for i in 0..n {
+                ld[i * n..i * n + i + 1].copy_from_slice(&ad[i * n..i * n + i + 1]);
+                ld[i * n + i] += jitter;
+            }
+        }
+        for k0 in (0..n).step_by(PANEL) {
+            let k1 = (k0 + PANEL).min(n);
+            let nb = k1 - k0;
+            // (1) Factor the nb×nb diagonal block. Columns < k0 were
+            // already folded in by earlier trailing updates, so only the
+            // in-panel prefix contributes.
+            {
+                let ld = l.as_mut_slice();
+                for i in k0..k1 {
+                    for j in k0..=i {
+                        let acc = ld[i * n + j]
+                            - dot4(&ld[i * n + k0..i * n + j], &ld[j * n + k0..j * n + j]);
+                        if i == j {
+                            if acc <= 0.0 || !acc.is_finite() {
+                                return Err(CholeskyError::NotPositiveDefinite {
+                                    index: i,
+                                    pivot: acc,
+                                    jitter,
+                                });
+                            }
+                            ld[i * n + i] = acc.sqrt();
+                        } else {
+                            ld[i * n + j] = acc / ld[j * n + j];
+                        }
+                    }
+                }
+            }
+            if k1 == n {
+                break;
+            }
+            let below = n - k1;
+            // Run the last few (small) panels inline — spawning threads
+            // for a tail shorter than a few panels costs more than it wins.
+            let w = if below >= 4 * PANEL { workers } else { 1 };
+            let ptr = SendPtr::new(l.as_mut_slice().as_mut_ptr());
+            // (2) Panel: rows k1..n, columns k0..k1 — forward-substitute
+            // each row against the finished diagonal block.
+            scoped_for_chunks(below, w, |range| {
+                for r in range {
+                    let i = k1 + r;
+                    // SAFETY: each worker owns its rows' [k0, k1) strips;
+                    // reads hit the diagonal block finalized in (1).
+                    let row = unsafe {
+                        std::slice::from_raw_parts_mut(ptr.get().add(i * n + k0), nb)
+                    };
+                    for j in 0..nb {
+                        let dj = unsafe {
+                            std::slice::from_raw_parts(ptr.get().add((k0 + j) * n + k0), j)
+                        };
+                        let acc = row[j] - dot4(&row[..j], dj);
+                        let diag = unsafe { *ptr.get().add((k0 + j) * n + k0 + j) };
+                        row[j] = acc / diag;
+                    }
+                }
+            });
+            // (3) Trailing update: L22 −= L21·L21ᵀ (lower triangle only).
+            // Row strips are 512 B, so the streamed rj strips for one i
+            // stay L2-resident — the cache win over the unblocked loop.
+            scoped_for_chunks(below, w, |range| {
+                for r in range {
+                    let i = k1 + r;
+                    // SAFETY: writes cover row i's [k1, i] range (disjoint
+                    // per worker); reads cover [k0, k1) strips that step
+                    // (3) never writes.
+                    let ri = unsafe {
+                        std::slice::from_raw_parts(ptr.get().add(i * n + k0), nb)
+                    };
+                    let out = unsafe {
+                        std::slice::from_raw_parts_mut(ptr.get().add(i * n + k1), i - k1 + 1)
+                    };
+                    for (c, v) in out.iter_mut().enumerate() {
+                        let j = k1 + c;
+                        let rj = unsafe {
+                            std::slice::from_raw_parts(ptr.get().add(j * n + k0), nb)
+                        };
+                        *v -= dot4(ri, rj);
+                    }
+                }
+            });
+        }
+        Ok(Self { l, jitter })
+    }
+
+    fn with_jitter_unblocked(a: &Matrix, jitter: f64) -> Result<Self, CholeskyError> {
         let n = a.rows();
         if a.rows() != a.cols() {
             return Err(CholeskyError::NotSquare { rows: a.rows(), cols: a.cols() });
@@ -63,27 +236,14 @@ impl Cholesky {
         let ad = a.as_slice();
         for i in 0..n {
             for j in 0..=i {
-                // acc = A[i][j] − Σ_{p<j} L[i][p]·L[j][p].
-                // Four independent accumulators break the dependency chain
-                // so the FMA units stay busy (§Perf: ~2.5× on this loop).
-                let (ri, rj) = (&ld[i * n..i * n + j], &ld[j * n..j * n + j]);
-                let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-                let chunks = j / 4 * 4;
-                let mut p = 0;
-                while p < chunks {
-                    s0 += ri[p] * rj[p];
-                    s1 += ri[p + 1] * rj[p + 1];
-                    s2 += ri[p + 2] * rj[p + 2];
-                    s3 += ri[p + 3] * rj[p + 3];
-                    p += 4;
-                }
-                let mut tail = 0.0;
-                while p < j {
-                    tail += ri[p] * rj[p];
-                    p += 1;
-                }
+                // acc = A[i][j] − Σ_{p<j} L[i][p]·L[j][p], via the shared
+                // four-accumulator dot (breaks the dependency chain so the
+                // FMA units stay busy; §Perf: ~2.5× on this loop). Same
+                // reduction scheme as the blocked path, which is what the
+                // blocked-vs-unblocked equivalence tests rely on.
+                let dot = dot4(&ld[i * n..i * n + j], &ld[j * n..j * n + j]);
                 let mut acc = ad[i * n + j] + if i == j { jitter } else { 0.0 };
-                acc -= (s0 + s1) + (s2 + s3) + tail;
+                acc -= dot;
                 if i == j {
                     if acc <= 0.0 || !acc.is_finite() {
                         return Err(CholeskyError::NotPositiveDefinite {
@@ -327,6 +487,51 @@ mod tests {
             );
             Ok(())
         });
+    }
+
+    #[test]
+    fn blocked_matches_unblocked() {
+        // Sizes straddling the panel boundaries so every code path runs
+        // (exact multiple, ragged last panel, single extra column).
+        let mut rng = crate::util::rng::Rng::new(42);
+        for n in [128usize, 150, 193, 256] {
+            let a = crate::util::proptest::gen_spd(&mut rng, n);
+            let blocked = Cholesky::new(&a).unwrap();
+            let unblocked = Cholesky::new_unblocked(&a).unwrap();
+            let diff = blocked.l().max_abs_diff(unblocked.l());
+            assert!(diff < 1e-9, "blocked factor differs by {diff} (n={n})");
+            assert!(blocked.reconstruct().max_abs_diff(&a) < 1e-9, "LLᵀ != A (n={n})");
+            // Deterministic across worker counts.
+            let two = Cholesky::with_jitter_blocked(&a, 0.0, 2).unwrap();
+            let eight = Cholesky::with_jitter_blocked(&a, 0.0, 8).unwrap();
+            assert_eq!(two.l().as_slice(), eight.l().as_slice(), "worker-count dependent (n={n})");
+        }
+    }
+
+    #[test]
+    fn blocked_rejects_non_pd() {
+        // Indefinite matrix large enough for the blocked path: the error
+        // must carry the failing pivot like the unblocked one does.
+        let n = 140;
+        let mut a = Matrix::identity(n);
+        a[(70, 70)] = -3.0;
+        match Cholesky::new(&a) {
+            Err(CholeskyError::NotPositiveDefinite { index, .. }) => assert_eq!(index, 70),
+            other => panic!("expected NotPositiveDefinite, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn blocked_solve_roundtrip() {
+        let mut rng = crate::util::rng::Rng::new(77);
+        let n = 160;
+        let a = crate::util::proptest::gen_spd(&mut rng, n);
+        let x_true = crate::util::proptest::gen_vec(&mut rng, n, -1.0, 1.0);
+        let b = a.matvec(&x_true);
+        let c = Cholesky::new(&a).unwrap();
+        let x = c.solve(&b);
+        let err = x.iter().zip(&x_true).map(|(p, q)| (p - q).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-7, "solve error {err}");
     }
 
     #[test]

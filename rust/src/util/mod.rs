@@ -10,6 +10,7 @@ pub mod csv;
 pub mod matrix;
 pub mod proptest;
 pub mod rng;
+pub(crate) mod sendptr;
 pub mod stats;
 pub mod threadpool;
 pub mod timer;

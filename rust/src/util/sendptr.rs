@@ -1,0 +1,54 @@
+//! Shared `Send`/`Sync` raw-pointer wrapper for disjoint-range parallel
+//! writes.
+//!
+//! The scoped thread pool hands each worker a contiguous, non-overlapping
+//! slice of an output buffer; Rust's borrow checker cannot see that the
+//! ranges are disjoint, so the workers reconstruct their slices from a raw
+//! pointer. This wrapper used to be redeclared privately in every parallel
+//! kernel (`linalg::blas`, `kernel`); it now lives here once.
+//!
+//! Safety contract for users: every mutable slice materialized from the
+//! pointer must cover a range no other thread reads or writes while the
+//! slice is alive; shared (read-only) slices may overlap each other but
+//! never a live mutable range.
+
+/// Raw `*mut f64` that can cross thread boundaries. Access goes through
+/// [`SendPtr::get`] so closures capture the (Sync) wrapper, not the field.
+pub(crate) struct SendPtr(*mut f64);
+
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+impl SendPtr {
+    pub(crate) fn new(ptr: *mut f64) -> Self {
+        Self(ptr)
+    }
+
+    #[inline]
+    pub(crate) fn get(&self) -> *mut f64 {
+        self.0
+    }
+}
+
+/// Mirror the strict lower triangle of an n×n row-major buffer into the
+/// upper triangle, row-parallel. Shared by the symmetric-matrix assembly
+/// paths (`Kernel::corr_matrix_parallel`, `DistanceCache::corr_matrix`).
+///
+/// # Safety
+/// `ptr` must point to an n×n buffer whose lower triangle is fully
+/// written and published (the callers join a scope first), with no other
+/// live references to the buffer.
+pub(crate) unsafe fn mirror_lower_to_upper(ptr: &SendPtr, n: usize, workers: usize) {
+    crate::util::threadpool::scoped_for(n, workers, |i| {
+        // SAFETY (per the function contract): writes cover row i's strict
+        // upper part only — disjoint per worker; reads cover other rows'
+        // lower parts, which no worker writes.
+        let upper = unsafe {
+            std::slice::from_raw_parts_mut(ptr.get().add(i * n + i + 1), n - i - 1)
+        };
+        for (c, v) in upper.iter_mut().enumerate() {
+            let j = i + 1 + c;
+            *v = unsafe { *ptr.get().add(j * n + i) };
+        }
+    });
+}
