@@ -45,10 +45,10 @@ fn main() -> anyhow::Result<()> {
             AlgoSpec::Fitc { m: 128 },
             AlgoSpec::Bcm { k, shared: false },
             AlgoSpec::Bcm { k, shared: true },
-            AlgoSpec::ClusterKriging { flavor: "OWCK", k },
-            AlgoSpec::ClusterKriging { flavor: "OWFCK", k },
-            AlgoSpec::ClusterKriging { flavor: "GMMCK", k },
-            AlgoSpec::ClusterKriging { flavor: "MTCK", k },
+            AlgoSpec::ClusterKriging { flavor: "OWCK".into(), k },
+            AlgoSpec::ClusterKriging { flavor: "OWFCK".into(), k },
+            AlgoSpec::ClusterKriging { flavor: "GMMCK".into(), k },
+            AlgoSpec::ClusterKriging { flavor: "MTCK".into(), k },
         ];
 
         let mut rows = Vec::new();

@@ -1,48 +1,59 @@
-//! Serving: fit MTCK on the CCPP-like plant data, start the TCP
-//! prediction server, and drive it with concurrent clients — reporting
-//! throughput and latency percentiles from the coordinator's metrics.
+//! Serving: fit MTCK on the CCPP-like plant data, persist it as a binary
+//! artifact, boot the TCP prediction server *from the artifact* (the
+//! production path — milliseconds, no refit), and drive it with
+//! concurrent clients over the v2 protocol (`predictb` batches), then
+//! hot-swap in a second model under live traffic.
 //!
 //! ```bash
 //! cargo run --release --example serving
 //! ```
 
-use cluster_kriging::cluster_kriging::{builder, ClusterKriging};
-use cluster_kriging::coordinator::{BatcherConfig, Client, Server, ServerConfig};
+use cluster_kriging::coordinator::{BatcherConfig, Client, ModelRegistry, Server, ServerConfig};
 use cluster_kriging::data::uci_like;
-use cluster_kriging::kriging::{HyperOpt, Surrogate};
+use cluster_kriging::kriging::HyperOpt;
+use cluster_kriging::surrogate::{self, FitOptions, SurrogateSpec};
 use cluster_kriging::util::rng::Rng;
 use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Fit the model (offline phase).
+    // 1. Fit the model (offline phase) through the one spec factory.
     let data = uci_like::ccpp_sized(3000, 21);
     let (train, _) = data.split(0.9, 1);
     let dim = train.d();
-    println!("fitting MTCK on {} ({} × {dim})…", train.name, train.n());
-    let cfg = builder::flavor(
-        "MTCK",
-        8,
-        1,
-        HyperOpt { restarts: 1, max_evals: 20, ..HyperOpt::default() },
-    )?;
-    let model = ClusterKriging::fit(&train.x, &train.y, cfg)?;
-    let model: Arc<dyn Surrogate> = Arc::new(model);
+    let spec = SurrogateSpec::parse("mtck:8")?;
+    println!("fitting {spec} on {} ({} × {dim})…", train.name, train.n());
+    let opts = FitOptions {
+        hyperopt: HyperOpt { restarts: 1, max_evals: 20, ..HyperOpt::default() },
+        ..FitOptions::default()
+    };
+    let model = spec.fit(&train, &opts)?;
 
-    // 2. Start the coordinator (online phase — pure rust, no python).
+    // 2. Persist → reload: the artifact is what production boots from.
+    let dir = std::env::temp_dir().join("ckrig_serving_example");
+    let path = dir.join("mtck8.ck");
+    let bytes = surrogate::save_to_path(model.as_ref(), &path)?;
+    let t0 = std::time::Instant::now();
+    let loaded = SurrogateSpec::load_path(&path)?;
+    println!(
+        "artifact {} ({bytes} bytes) reloaded in {:.1} ms",
+        path.display(),
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    // 3. Start the coordinator on the loaded model (online phase — pure
+    //    rust, no python, no refit).
+    let registry = Arc::new(ModelRegistry::new("mtck8", Arc::from(loaded)));
     let server = Server::start(
-        model,
-        ServerConfig {
-            addr: "127.0.0.1:0".into(),
-            batcher: BatcherConfig::default(),
-            dim,
-        },
+        registry.clone(),
+        ServerConfig { addr: "127.0.0.1:0".into(), batcher: BatcherConfig::default() },
     )?;
     let addr = server.local_addr.to_string();
     println!("server on {addr}");
 
-    // 3. Drive it: 8 concurrent clients, 250 requests each.
+    // 4. Drive it: 8 concurrent clients, mixing single predicts with
+    //    predictb batches of 10.
     let clients = 8;
-    let per_client = 250;
+    let per_client = 25; // batches per client, 10 points each
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
     for c in 0..clients {
@@ -52,15 +63,20 @@ fn main() -> anyhow::Result<()> {
             let mut client = Client::connect(&addr)?;
             let mut checksum = 0.0;
             for _ in 0..per_client {
-                let point = vec![
-                    rng.uniform_in(2.0, 37.0),
-                    rng.uniform_in(26.0, 81.0),
-                    rng.uniform_in(993.0, 1033.0),
-                    rng.uniform_in(26.0, 100.0),
-                ];
-                let (mean, var) = client.predict(&point)?;
-                anyhow::ensure!(mean.is_finite() && var >= 0.0);
-                checksum += mean;
+                let points: Vec<Vec<f64>> = (0..10)
+                    .map(|_| {
+                        vec![
+                            rng.uniform_in(2.0, 37.0),
+                            rng.uniform_in(26.0, 81.0),
+                            rng.uniform_in(993.0, 1033.0),
+                            rng.uniform_in(26.0, 100.0),
+                        ]
+                    })
+                    .collect();
+                for (mean, var) in client.predict_batch(None, &points)? {
+                    anyhow::ensure!(mean.is_finite() && var >= 0.0);
+                    checksum += mean;
+                }
             }
             Ok(checksum)
         }));
@@ -70,8 +86,18 @@ fn main() -> anyhow::Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
 
-    // 4. Report.
-    let total = clients * per_client;
+    // 5. Hot swap: fit a cheaper model and switch the default slot while
+    //    the server keeps accepting traffic.
+    let sod = SurrogateSpec::parse("sod:256")?.fit(&train, &FitOptions::fast())?;
+    registry.insert("sod256", Arc::from(sod));
+    let mut ops = Client::connect(&addr)?;
+    ops.swap("sod256")?;
+    println!("models after swap: {}", ops.models()?);
+    let (mean, _) = ops.predict(&vec![20.0, 50.0, 1010.0, 60.0])?;
+    println!("post-swap predict (now served by SoD): {mean:.2}");
+
+    // 6. Report.
+    let total = clients * per_client * 10;
     println!("\n{total} predictions in {wall:.2}s = {:.0} pred/s", total as f64 / wall);
     println!("metrics: {}", server.metrics.summary());
     println!(

@@ -15,9 +15,12 @@
 //!   C1  fit-time vs k sweep, sequential vs parallel workers.
 //!   Latency: all-model weighting vs single-model routing, plus the
 //!       PJRT-vs-native comparison when artifacts are present.
+//!   S1  serve path — allocating `predict` vs buffer-reusing
+//!       `predict_into`, and the full registry+Batcher pipeline.
 //!
-//! Results are also written to `BENCH_hotpath.json` (override with
-//! `CKRIG_BENCH_JSON`) so CI can track the perf trajectory.
+//! Results are also written to `BENCH_hotpath.json` and
+//! `BENCH_serving.json` (override with `CKRIG_BENCH_JSON` /
+//! `CKRIG_BENCH_SERVING_JSON`) so CI can track the perf trajectory.
 //!
 //! ```bash
 //! CKRIG_N=2000 cargo bench --bench bench_hotpath
@@ -26,7 +29,9 @@
 use cluster_kriging::cluster_kriging::{
     ClusterKriging, ClusterKrigingConfig, Combiner, KMeansPartitioner,
 };
+use cluster_kriging::coordinator::{Batcher, BatcherConfig, ModelRegistry, ServerMetrics};
 use cluster_kriging::kernel::cache::DistanceCache;
+use cluster_kriging::kriging::Surrogate;
 use cluster_kriging::kernel::{Kernel, KernelKind};
 use cluster_kriging::kriging::{HyperOpt, NuggetMode, OrdinaryKriging};
 use cluster_kriging::linalg::Cholesky;
@@ -281,6 +286,85 @@ fn main() {
         );
     } else {
         println!("\n(skipping PJRT comparison: run `make artifacts` first)");
+    }
+
+    // == S1: serve path — predict vs predict_into through the Batcher ==
+    println!("\n== S1: serve path at n={n}, batch=64 (predict vs predict_into) ==");
+    let serve_model =
+        OrdinaryKriging::fit(x.clone(), &y, kernel.clone(), 1e-6).unwrap();
+    let batch_rows = 64usize;
+    let xt = Matrix::from_vec(batch_rows, d, rng.uniform_vec(batch_rows * d, -3.0, 3.0));
+    let reps = 50;
+    // Allocating trait-default path: one Prediction (two Vecs) per call.
+    let (t_pred_alloc, _) = time(|| {
+        for _ in 0..reps {
+            std::hint::black_box(Surrogate::predict(&serve_model, &xt).unwrap());
+        }
+    });
+    // Buffer-reusing hot path: the Batcher's steady state.
+    let mut mean_buf = vec![0.0; batch_rows];
+    let mut var_buf = vec![0.0; batch_rows];
+    let (t_pred_into, _) = time(|| {
+        for _ in 0..reps {
+            serve_model.predict_into(&xt, &mut mean_buf, &mut var_buf).unwrap();
+            std::hint::black_box((&mean_buf, &var_buf));
+        }
+    });
+    println!(
+        "  model.predict (alloc) {:8.2} ms/batch | predict_into (reused) {:8.2} ms/batch ({:.2}x)",
+        t_pred_alloc / reps as f64 * 1e3,
+        t_pred_into / reps as f64 * 1e3,
+        t_pred_alloc / t_pred_into
+    );
+    // Full coordinator path: registry + batcher + reply plumbing.
+    let registry = Arc::new(ModelRegistry::new("bench", Arc::new(serve_model)));
+    let batcher = Batcher::start(
+        registry,
+        BatcherConfig::default(),
+        Arc::new(ServerMetrics::new()),
+    );
+    let (t_batcher, _) = time(|| {
+        for _ in 0..reps {
+            std::hint::black_box(
+                batcher.predict_rows(None, xt.as_slice().to_vec(), batch_rows).unwrap(),
+            );
+        }
+    });
+    drop(batcher);
+    println!(
+        "  batcher.predict_rows  {:8.2} ms/batch ({:.0} pred/s end-to-end)",
+        t_batcher / reps as f64 * 1e3,
+        (reps * batch_rows) as f64 / t_batcher
+    );
+    let serving_json_path =
+        std::env::var("CKRIG_BENCH_SERVING_JSON").unwrap_or_else(|_| "BENCH_serving.json".into());
+    let serving_json = format!(
+        concat!(
+            "{{\n",
+            "  \"n\": {n},\n",
+            "  \"d\": {d},\n",
+            "  \"batch\": {batch},\n",
+            "  \"reps\": {reps},\n",
+            "  \"predict_alloc_s_per_batch\": {alloc:.6},\n",
+            "  \"predict_into_s_per_batch\": {into_:.6},\n",
+            "  \"predict_into_speedup\": {speedup:.3},\n",
+            "  \"batcher_s_per_batch\": {batcher:.6},\n",
+            "  \"batcher_pred_per_s\": {throughput:.0}\n",
+            "}}\n"
+        ),
+        n = n,
+        d = d,
+        batch = batch_rows,
+        reps = reps,
+        alloc = t_pred_alloc / reps as f64,
+        into_ = t_pred_into / reps as f64,
+        speedup = t_pred_alloc / t_pred_into,
+        batcher = t_batcher / reps as f64,
+        throughput = (reps * batch_rows) as f64 / t_batcher,
+    );
+    match std::fs::write(&serving_json_path, &serving_json) {
+        Ok(()) => println!("  wrote {serving_json_path}"),
+        Err(e) => eprintln!("  failed to write {serving_json_path}: {e}"),
     }
 
     // == machine-readable record for the CI perf trajectory ==

@@ -156,6 +156,40 @@ impl Bcm {
     }
 }
 
+impl Bcm {
+    pub(crate) fn write_artifact(&self, w: &mut crate::util::binio::BinWriter) {
+        w.put_u8(match self.mode {
+            BcmMode::Shared => 0,
+            BcmMode::Individual => 1,
+        });
+        w.put_usize(self.modules.len());
+        for m in &self.modules {
+            m.write_artifact(w);
+        }
+    }
+
+    pub(crate) fn read_artifact(
+        r: &mut crate::util::binio::BinReader<'_>,
+    ) -> anyhow::Result<Self> {
+        let mode = match r.get_u8()? {
+            0 => BcmMode::Shared,
+            1 => BcmMode::Individual,
+            other => anyhow::bail!("unknown BCM mode tag {other}"),
+        };
+        let k = r.get_usize()?;
+        anyhow::ensure!(k >= 1, "BCM artifact has no modules");
+        let mut modules = Vec::with_capacity(k);
+        for _ in 0..k {
+            modules.push(OrdinaryKriging::read_artifact(r)?);
+        }
+        let name = match mode {
+            BcmMode::Shared => "BCM sh.".to_string(),
+            BcmMode::Individual => "BCM".to_string(),
+        };
+        Ok(Self { modules, mode, name })
+    }
+}
+
 impl Surrogate for Bcm {
     fn predict(&self, xt: &Matrix) -> Result<Prediction> {
         let rows: Vec<usize> = (0..xt.rows()).collect();
@@ -168,6 +202,20 @@ impl Surrogate for Bcm {
 
     fn name(&self) -> &str {
         &self.name
+    }
+
+    fn dim(&self) -> usize {
+        self.modules[0].kernel().dim()
+    }
+
+    fn save(&self, w: &mut dyn std::io::Write) -> Result<()> {
+        let mut payload = crate::util::binio::BinWriter::new();
+        self.write_artifact(&mut payload);
+        crate::surrogate::artifact::write_model(
+            w,
+            crate::surrogate::artifact::TAG_BCM,
+            &payload.into_bytes(),
+        )
     }
 }
 

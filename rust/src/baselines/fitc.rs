@@ -221,6 +221,60 @@ impl Fitc {
     pub fn n_inducing(&self) -> usize {
         self.xu.rows()
     }
+
+    pub(crate) fn write_artifact(&self, w: &mut crate::util::binio::BinWriter) {
+        w.put_str(self.kernel.kind.name());
+        w.put_f64_slice(&self.kernel.theta);
+        w.put_f64(self.sigma_f2);
+        w.put_f64(self.sigma_n2);
+        w.put_matrix(&self.xu);
+        w.put_matrix(self.kmm_chol.l());
+        w.put_f64(self.kmm_chol.jitter());
+        w.put_matrix(self.b_chol.l());
+        w.put_f64(self.b_chol.jitter());
+        w.put_f64_slice(&self.alpha);
+        w.put_f64(self.y_mean);
+        w.put_f64(self.nll);
+    }
+
+    pub(crate) fn read_artifact(
+        r: &mut crate::util::binio::BinReader<'_>,
+    ) -> anyhow::Result<Self> {
+        use anyhow::{ensure, Context as _};
+        let kind_name = r.get_str()?;
+        let kind = KernelKind::from_name(&kind_name)
+            .with_context(|| format!("unknown kernel family {kind_name:?}"))?;
+        let theta = r.get_f64_vec()?;
+        ensure!(
+            !theta.is_empty() && theta.iter().all(|&t| t > 0.0 && t.is_finite()),
+            "invalid kernel θ in FITC artifact"
+        );
+        let sigma_f2 = r.get_f64()?;
+        let sigma_n2 = r.get_f64()?;
+        let xu = r.get_matrix()?;
+        let kmm_l = r.get_matrix()?;
+        let kmm_jitter = r.get_f64()?;
+        let b_l = r.get_matrix()?;
+        let b_jitter = r.get_f64()?;
+        let alpha = r.get_f64_vec()?;
+        let y_mean = r.get_f64()?;
+        let nll = r.get_f64()?;
+        let m = xu.rows();
+        ensure!(m > 0 && xu.cols() == theta.len(), "inducing set shape mismatch");
+        ensure!(kmm_l.rows() == m && b_l.rows() == m, "FITC factor shape mismatch");
+        ensure!(alpha.len() == m, "FITC α length mismatch");
+        Ok(Self {
+            kernel: Kernel::new(kind, theta),
+            sigma_f2,
+            sigma_n2,
+            xu,
+            kmm_chol: Cholesky::from_parts(kmm_l, kmm_jitter)?,
+            b_chol: Cholesky::from_parts(b_l, b_jitter)?,
+            alpha,
+            y_mean,
+            nll,
+        })
+    }
 }
 
 impl Surrogate for Fitc {
@@ -237,6 +291,20 @@ impl Surrogate for Fitc {
 
     fn name(&self) -> &str {
         "FITC"
+    }
+
+    fn dim(&self) -> usize {
+        self.xu.cols()
+    }
+
+    fn save(&self, w: &mut dyn std::io::Write) -> Result<()> {
+        let mut payload = crate::util::binio::BinWriter::new();
+        self.write_artifact(&mut payload);
+        crate::surrogate::artifact::write_model(
+            w,
+            crate::surrogate::artifact::TAG_FITC,
+            &payload.into_bytes(),
+        )
     }
 }
 

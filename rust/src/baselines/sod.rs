@@ -43,6 +43,19 @@ impl SubsetOfData {
     pub fn inner(&self) -> &OrdinaryKriging {
         &self.model
     }
+
+    pub(crate) fn write_artifact(&self, w: &mut crate::util::binio::BinWriter) {
+        w.put_usize(self.subset_size);
+        self.model.write_artifact(w);
+    }
+
+    pub(crate) fn read_artifact(
+        r: &mut crate::util::binio::BinReader<'_>,
+    ) -> anyhow::Result<Self> {
+        let subset_size = r.get_usize()?;
+        let model = OrdinaryKriging::read_artifact(r)?;
+        Ok(Self { model, subset_size })
+    }
 }
 
 impl Surrogate for SubsetOfData {
@@ -52,6 +65,24 @@ impl Surrogate for SubsetOfData {
 
     fn name(&self) -> &str {
         "SoD"
+    }
+
+    fn dim(&self) -> usize {
+        self.model.kernel().dim()
+    }
+
+    fn predict_into(&self, xt: &Matrix, mean: &mut [f64], variance: &mut [f64]) -> Result<()> {
+        Surrogate::predict_into(&self.model, xt, mean, variance)
+    }
+
+    fn save(&self, w: &mut dyn std::io::Write) -> Result<()> {
+        let mut payload = crate::util::binio::BinWriter::new();
+        self.write_artifact(&mut payload);
+        crate::surrogate::artifact::write_model(
+            w,
+            crate::surrogate::artifact::TAG_SOD,
+            &payload.into_bytes(),
+        )
     }
 }
 

@@ -30,6 +30,7 @@ pub struct ClusterKriging {
     membership: Membership,
     combiner: Combiner,
     flavor: String,
+    dim: usize,
     /// Cluster sizes (diagnostics / reports).
     pub cluster_sizes: Vec<usize>,
 }
@@ -105,6 +106,7 @@ impl ClusterKriging {
             membership,
             combiner: cfg.combiner,
             flavor: cfg.flavor,
+            dim: x.cols(),
             cluster_sizes,
         })
     }
@@ -156,6 +158,19 @@ impl ClusterKriging {
     /// the naive loop would pay (§Perf).
     pub fn predict_batch(&self, xt: &Matrix) -> Prediction {
         let m = xt.rows();
+        let mut mean = vec![0.0; m];
+        let mut variance = vec![0.0; m];
+        self.predict_batch_into(xt, &mut mean, &mut variance);
+        Prediction { mean, variance }
+    }
+
+    /// [`Self::predict_batch`] into caller-provided buffers (the serving
+    /// hot path — see [`Surrogate::predict_into`]). `mean` and `variance`
+    /// must each hold exactly `xt.rows()` elements.
+    pub fn predict_batch_into(&self, xt: &Matrix, mean: &mut [f64], variance: &mut [f64]) {
+        let m = xt.rows();
+        assert_eq!(mean.len(), m, "predict_batch_into: mean buffer size");
+        assert_eq!(variance.len(), m, "predict_batch_into: variance buffer size");
         match self.combiner {
             Combiner::SingleModel => {
                 // Group rows by routed cluster, batch-predict per group.
@@ -163,8 +178,6 @@ impl ClusterKriging {
                 for i in 0..m {
                     groups[self.membership.route(xt.row(i)).min(self.k() - 1)].push(i);
                 }
-                let mut mean = vec![0.0; m];
-                let mut variance = vec![0.0; m];
                 let outs = scoped_map(&groups, default_workers(), |ci, rows| {
                     if rows.is_empty() {
                         return None;
@@ -182,7 +195,6 @@ impl ClusterKriging {
                         }
                     }
                 }
-                Prediction { mean, variance }
             }
             _ => {
                 // Every model predicts the full batch (in parallel across
@@ -193,8 +205,6 @@ impl ClusterKriging {
                     // parallelizes across the k models.
                     self.models[ci].predict_with_workers(xt, 1).expect("dims checked")
                 });
-                let mut mean = Vec::with_capacity(m);
-                let mut variance = Vec::with_capacity(m);
                 let mut preds = Vec::with_capacity(self.k());
                 for i in 0..m {
                     preds.clear();
@@ -206,12 +216,58 @@ impl ClusterKriging {
                     }
                     let weights = self.membership.weights(xt.row(i), self.k());
                     let out = self.combiner.combine(&preds, &weights, 0);
-                    mean.push(out.mean);
-                    variance.push(out.variance);
+                    mean[i] = out.mean;
+                    variance[i] = out.variance;
                 }
-                Prediction { mean, variance }
             }
         }
+    }
+
+    /// Serialize the whole fitted ensemble: per-cluster models (with
+    /// their factors), the routing oracle and the combiner.
+    pub(crate) fn write_artifact(&self, w: &mut crate::util::binio::BinWriter) {
+        w.put_str(&self.flavor);
+        w.put_u8(match self.combiner {
+            Combiner::OptimalWeights => 0,
+            Combiner::MembershipMixture => 1,
+            Combiner::SingleModel => 2,
+        });
+        w.put_usize(self.dim);
+        w.put_usize_slice(&self.cluster_sizes);
+        w.put_usize(self.models.len());
+        for m in &self.models {
+            m.write_artifact(w);
+        }
+        self.membership.write_artifact(w);
+    }
+
+    /// Inverse of [`Self::write_artifact`].
+    pub(crate) fn read_artifact(
+        r: &mut crate::util::binio::BinReader<'_>,
+    ) -> anyhow::Result<Self> {
+        use anyhow::ensure;
+        let flavor = r.get_str()?;
+        let combiner = match r.get_u8()? {
+            0 => Combiner::OptimalWeights,
+            1 => Combiner::MembershipMixture,
+            2 => Combiner::SingleModel,
+            other => anyhow::bail!("unknown combiner tag {other}"),
+        };
+        let dim = r.get_usize()?;
+        let cluster_sizes = r.get_usize_vec()?;
+        let k = r.get_usize()?;
+        ensure!(k >= 1, "Cluster Kriging artifact has no models");
+        let mut models = Vec::with_capacity(k);
+        for _ in 0..k {
+            let m = OrdinaryKriging::read_artifact(r)?;
+            ensure!(
+                crate::kriging::Surrogate::dim(&m) == dim,
+                "per-cluster model dimension disagrees with ensemble"
+            );
+            models.push(m);
+        }
+        let membership = Membership::read_artifact(r)?;
+        Ok(Self { models, membership, combiner, flavor, dim, cluster_sizes })
     }
 }
 
@@ -223,39 +279,33 @@ impl Surrogate for ClusterKriging {
     fn name(&self) -> &str {
         &self.flavor
     }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn predict_into(&self, xt: &Matrix, mean: &mut [f64], variance: &mut [f64]) -> Result<()> {
+        self.predict_batch_into(xt, mean, variance);
+        Ok(())
+    }
+
+    fn save(&self, w: &mut dyn std::io::Write) -> Result<()> {
+        let mut payload = crate::util::binio::BinWriter::new();
+        self.write_artifact(&mut payload);
+        crate::surrogate::artifact::write_model(
+            w,
+            crate::surrogate::artifact::TAG_CLUSTER_KRIGING,
+            &payload.into_bytes(),
+        )
+    }
 }
 
-/// Remap a membership oracle after dropping clusters: weights of dropped
-/// clusters are discarded and the rest renormalized; hard routes to a
-/// dropped cluster fall back to the first kept one.
+/// Remap a membership oracle after dropping clusters (see
+/// [`Membership::Remapped`]): weights of dropped clusters are discarded
+/// and the rest renormalized; hard routes to a dropped cluster fall back
+/// to the first kept one.
 fn remap_membership(membership: Membership, kept: Vec<usize>, original_k: usize) -> Membership {
-    match membership {
-        Membership::Hard(f) => {
-            let lookup: Vec<Option<usize>> = (0..original_k)
-                .map(|orig| kept.iter().position(|&kc| kc == orig))
-                .collect();
-            Membership::Hard(Box::new(move |x| lookup[f(x)].unwrap_or(0)))
-        }
-        Membership::Soft(f) => {
-            let kept = kept.clone();
-            Membership::Soft(Box::new(move |x| {
-                let full = f(x);
-                let mut w: Vec<f64> = kept.iter().map(|&c| full[c]).collect();
-                let s: f64 = w.iter().sum();
-                if s > 1e-12 {
-                    for v in &mut w {
-                        *v /= s;
-                    }
-                } else {
-                    let u = 1.0 / w.len() as f64;
-                    for v in &mut w {
-                        *v = u;
-                    }
-                }
-                w
-            }))
-        }
-    }
+    Membership::Remapped { inner: Box::new(membership), kept, original_k }
 }
 
 #[cfg(test)]

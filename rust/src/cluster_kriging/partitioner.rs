@@ -5,35 +5,142 @@
 //! time to weight or route among the per-cluster models.
 
 use crate::clustering::{fcm, gmm, kmeans, random, regression_tree};
+use crate::util::binio::{BinReader, BinWriter};
 use crate::util::matrix::Matrix;
 
 /// How a fitted partition assigns an *unseen* point to clusters.
+///
+/// Each variant carries the concrete fitted routing state (centroids,
+/// mixture components, tree nodes) rather than a closure, so a fitted
+/// Cluster Kriging model can be serialized to an artifact and reloaded
+/// with bit-identical routing — the closure representation this replaced
+/// could predict but never persist.
 pub enum Membership {
-    /// Hard assignment: exactly one cluster per point (k-means, tree).
-    Hard(Box<dyn Fn(&[f64]) -> usize + Send + Sync>),
-    /// Soft assignment: a probability/weight vector over clusters.
-    Soft(Box<dyn Fn(&[f64]) -> Vec<f64> + Send + Sync>),
+    /// Hard nearest-centroid assignment (k-means and random partitioners).
+    Centroids(Matrix),
+    /// Fuzzy C-means soft membership: Eq. 9 at the fitted centroids.
+    Fcm { centroids: Matrix, fuzzifier: f64 },
+    /// GMM posterior responsibilities (Eq. 13 weights).
+    Gmm(gmm::Gmm),
+    /// Regression-tree hard routing (MTCK).
+    Tree(regression_tree::RegressionTree),
+    /// Post-fit remap after degenerate clusters were dropped: weights of
+    /// dropped clusters are discarded and renormalized; hard routes to a
+    /// dropped cluster fall back to the first kept one. `kept` holds the
+    /// surviving original cluster indices, `original_k` the pre-drop
+    /// cluster count the inner oracle still answers for.
+    Remapped { inner: Box<Membership>, kept: Vec<usize>, original_k: usize },
 }
 
 impl Membership {
+    /// Whether the oracle produces graded weights (vs one-hot routing).
+    pub fn is_soft(&self) -> bool {
+        match self {
+            Membership::Centroids(_) | Membership::Tree(_) => false,
+            Membership::Fcm { .. } | Membership::Gmm(_) => true,
+            Membership::Remapped { inner, .. } => inner.is_soft(),
+        }
+    }
+
     /// Weight vector for a point (hard assignments become one-hot).
     pub fn weights(&self, x: &[f64], k: usize) -> Vec<f64> {
         match self {
-            Membership::Hard(f) => {
-                let mut w = vec![0.0; k];
-                w[f(x).min(k - 1)] = 1.0;
+            Membership::Fcm { centroids, fuzzifier } => {
+                fcm::membership_for(centroids, *fuzzifier, x)
+            }
+            Membership::Gmm(g) => g.membership_of(x),
+            Membership::Remapped { inner, kept, original_k } if inner.is_soft() => {
+                let full = inner.weights(x, *original_k);
+                let mut w: Vec<f64> = kept.iter().map(|&c| full[c]).collect();
+                let s: f64 = w.iter().sum();
+                if s > 1e-12 {
+                    for v in &mut w {
+                        *v /= s;
+                    }
+                } else {
+                    let u = 1.0 / w.len() as f64;
+                    for v in &mut w {
+                        *v = u;
+                    }
+                }
                 w
             }
-            Membership::Soft(f) => f(x),
+            hard => {
+                let mut w = vec![0.0; k];
+                w[hard.route(x).min(k - 1)] = 1.0;
+                w
+            }
         }
     }
 
     /// Single cluster choice (soft assignments take the argmax).
     pub fn route(&self, x: &[f64]) -> usize {
         match self {
-            Membership::Hard(f) => f(x),
-            Membership::Soft(f) => crate::util::stats::argmax(&f(x)),
+            Membership::Centroids(centers) => {
+                kmeans::assign(centers, &Matrix::from_vec(1, x.len(), x.to_vec()))[0]
+            }
+            Membership::Tree(tree) => tree.route(x),
+            Membership::Remapped { inner, kept, .. } => {
+                if inner.is_soft() {
+                    crate::util::stats::argmax(&self.weights(x, kept.len()))
+                } else {
+                    let original = inner.route(x);
+                    kept.iter().position(|&c| c == original).unwrap_or(0)
+                }
+            }
+            soft => crate::util::stats::argmax(&soft.weights(x, 0)),
         }
+    }
+
+    /// Serialize the routing oracle into a model artifact payload.
+    pub(crate) fn write_artifact(&self, w: &mut BinWriter) {
+        match self {
+            Membership::Centroids(centers) => {
+                w.put_u8(0);
+                w.put_matrix(centers);
+            }
+            Membership::Fcm { centroids, fuzzifier } => {
+                w.put_u8(1);
+                w.put_matrix(centroids);
+                w.put_f64(*fuzzifier);
+            }
+            Membership::Gmm(g) => {
+                w.put_u8(2);
+                g.write_artifact(w);
+            }
+            Membership::Tree(tree) => {
+                w.put_u8(3);
+                tree.write_artifact(w);
+            }
+            Membership::Remapped { inner, kept, original_k } => {
+                w.put_u8(4);
+                inner.write_artifact(w);
+                w.put_usize_slice(kept);
+                w.put_usize(*original_k);
+            }
+        }
+    }
+
+    /// Inverse of [`Self::write_artifact`].
+    pub(crate) fn read_artifact(r: &mut BinReader<'_>) -> anyhow::Result<Self> {
+        use anyhow::{bail, ensure};
+        Ok(match r.get_u8()? {
+            0 => Membership::Centroids(r.get_matrix()?),
+            1 => Membership::Fcm { centroids: r.get_matrix()?, fuzzifier: r.get_f64()? },
+            2 => Membership::Gmm(gmm::Gmm::read_artifact(r)?),
+            3 => Membership::Tree(regression_tree::RegressionTree::read_artifact(r)?),
+            4 => {
+                let inner = Box::new(Membership::read_artifact(r)?);
+                let kept = r.get_usize_vec()?;
+                let original_k = r.get_usize()?;
+                ensure!(
+                    !kept.is_empty() && kept.iter().all(|&c| c < original_k),
+                    "remapped membership artifact inconsistent"
+                );
+                Membership::Remapped { inner, kept, original_k }
+            }
+            other => bail!("unknown membership tag {other}"),
+        })
     }
 }
 
@@ -91,13 +198,7 @@ impl Partitioner for KMeansPartitioner {
         for (i, &l) in km.labels.iter().enumerate() {
             clusters[l].push(i);
         }
-        let centroids = km.centroids;
-        Partition {
-            clusters,
-            membership: Membership::Hard(Box::new(move |p| {
-                kmeans::assign(&centroids, &Matrix::from_vec(1, p.len(), p.to_vec()))[0]
-            })),
-        }
+        Partition { clusters, membership: Membership::Centroids(km.centroids) }
     }
 
     fn name(&self) -> &'static str {
@@ -123,7 +224,7 @@ impl Partitioner for FcmPartitioner {
         let clusters = f.overlapping_assignment(self.overlap);
         Partition {
             clusters,
-            membership: Membership::Soft(Box::new(move |p| f.membership_of(p))),
+            membership: Membership::Fcm { centroids: f.centroids, fuzzifier: f.fuzzifier },
         }
     }
 
@@ -160,7 +261,9 @@ impl Partitioner for GmmPartitioner {
         let clusters = g.overlapping_assignment(self.overlap);
         Partition {
             clusters,
-            membership: Membership::Soft(Box::new(move |p| g.membership_of(p))),
+            // The responsibilities matrix is fit-time state; the routing
+            // oracle only needs the mixture components.
+            membership: Membership::Gmm(g.without_responsibilities()),
         }
     }
 
@@ -189,10 +292,7 @@ impl Partitioner for TreePartitioner {
         };
         let tree = regression_tree::fit(x, y, &cfg);
         let clusters = tree.clusters.clone();
-        Partition {
-            clusters,
-            membership: Membership::Hard(Box::new(move |p| tree.route(p))),
-        }
+        Partition { clusters, membership: Membership::Tree(tree) }
     }
 
     fn name(&self) -> &'static str {
@@ -223,12 +323,7 @@ impl Partitioner for RandomPartitioner {
                 }
             }
         }
-        Partition {
-            clusters,
-            membership: Membership::Hard(Box::new(move |p| {
-                kmeans::assign(&means, &Matrix::from_vec(1, p.len(), p.to_vec()))[0]
-            })),
-        }
+        Partition { clusters, membership: Membership::Centroids(means) }
     }
 
     fn name(&self) -> &'static str {

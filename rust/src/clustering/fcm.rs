@@ -157,25 +157,31 @@ pub fn fit(x: &Matrix, cfg: &FcmConfig) -> FuzzyCMeans {
     FuzzyCMeans { centroids, memberships: w, fuzzifier: m, objective, iterations }
 }
 
+/// Eq. 9 membership row for an unseen point against fitted centroids —
+/// the routing state is just `(centroids, fuzzifier)`, so this free
+/// function is what [`crate::cluster_kriging::Membership`] stores and
+/// what model artifacts persist.
+pub fn membership_for(centroids: &Matrix, fuzzifier: f64, xt: &[f64]) -> Vec<f64> {
+    let k = centroids.rows();
+    let exponent = 2.0 / (fuzzifier - 1.0);
+    let dists: Vec<f64> = (0..k).map(|c| sq_dist(xt, centroids.row(c)).sqrt()).collect();
+    if let Some(zero) = dists.iter().position(|&d| d < 1e-12) {
+        let mut out = vec![0.0; k];
+        out[zero] = 1.0;
+        return out;
+    }
+    (0..k)
+        .map(|c| {
+            let denom: f64 = (0..k).map(|cc| (dists[c] / dists[cc]).powf(exponent)).sum();
+            1.0 / denom
+        })
+        .collect()
+}
+
 impl FuzzyCMeans {
     /// Membership row for an unseen point (Eq. 9 with fitted centroids).
     pub fn membership_of(&self, xt: &[f64]) -> Vec<f64> {
-        let k = self.centroids.rows();
-        let exponent = 2.0 / (self.fuzzifier - 1.0);
-        let dists: Vec<f64> =
-            (0..k).map(|c| sq_dist(xt, self.centroids.row(c)).sqrt()).collect();
-        if let Some(zero) = dists.iter().position(|&d| d < 1e-12) {
-            let mut out = vec![0.0; k];
-            out[zero] = 1.0;
-            return out;
-        }
-        (0..k)
-            .map(|c| {
-                let denom: f64 =
-                    (0..k).map(|cc| (dists[c] / dists[cc]).powf(exponent)).sum();
-                1.0 / denom
-            })
-            .collect()
+        membership_for(&self.centroids, self.fuzzifier, xt)
     }
 
     /// Overlapping cluster assignment (paper §IV-A2): cluster `c` receives

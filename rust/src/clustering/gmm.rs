@@ -301,6 +301,92 @@ impl Gmm {
         crate::util::stats::argmax(&self.membership_of(x))
     }
 
+    /// Drop the n×k training responsibilities, keeping only what
+    /// [`Self::membership_of`] needs (components + covariance type).
+    /// Used when a fitted GMM becomes a long-lived routing oracle inside
+    /// a Cluster Kriging model, where the training-set-sized matrix
+    /// would otherwise be carried (and serialized) for nothing.
+    pub fn without_responsibilities(mut self) -> Self {
+        let k = self.k();
+        self.responsibilities = Matrix::zeros(0, k);
+        self
+    }
+
+    /// Serialize the mixture's routing state. Per-component Cholesky
+    /// factors (full covariance only) are persisted too, so a reloaded
+    /// mixture scores membership bit-identically.
+    pub(crate) fn write_artifact(&self, w: &mut crate::util::binio::BinWriter) {
+        w.put_u8(match self.covariance {
+            CovarianceType::Diagonal => 0,
+            CovarianceType::Full => 1,
+        });
+        w.put_usize(self.dim);
+        w.put_f64(self.log_likelihood);
+        w.put_usize(self.iterations);
+        w.put_usize(self.components.len());
+        for c in &self.components {
+            w.put_f64(c.weight);
+            w.put_f64_slice(&c.mean);
+            w.put_f64_slice(&c.cov);
+            w.put_bool(c.chol.is_some());
+            if let Some(chol) = &c.chol {
+                w.put_matrix(chol.l());
+                w.put_f64(chol.jitter());
+            }
+        }
+    }
+
+    /// Inverse of [`Self::write_artifact`]. The reloaded mixture has no
+    /// training responsibilities (it is a routing oracle, not a refit).
+    pub(crate) fn read_artifact(
+        r: &mut crate::util::binio::BinReader<'_>,
+    ) -> anyhow::Result<Self> {
+        use anyhow::{bail, ensure};
+        let covariance = match r.get_u8()? {
+            0 => CovarianceType::Diagonal,
+            1 => CovarianceType::Full,
+            other => bail!("unknown GMM covariance tag {other}"),
+        };
+        let dim = r.get_usize()?;
+        let log_likelihood = r.get_f64()?;
+        let iterations = r.get_usize()?;
+        let k = r.get_usize()?;
+        ensure!(k >= 1, "GMM artifact has no components");
+        let cov_len = match covariance {
+            CovarianceType::Diagonal => dim,
+            CovarianceType::Full => dim * dim,
+        };
+        let mut components = Vec::with_capacity(k);
+        for _ in 0..k {
+            let weight = r.get_f64()?;
+            let mean = r.get_f64_vec()?;
+            let cov = r.get_f64_vec()?;
+            ensure!(mean.len() == dim, "GMM component mean/dim mismatch");
+            ensure!(cov.len() == cov_len, "GMM component covariance shape mismatch");
+            let chol = if r.get_bool()? {
+                let l = r.get_matrix()?;
+                ensure!(l.rows() == dim && l.cols() == dim, "GMM Cholesky shape mismatch");
+                let jitter = r.get_f64()?;
+                Some(Cholesky::from_parts(l, jitter)?)
+            } else {
+                None
+            };
+            ensure!(
+                chol.is_some() == (covariance == CovarianceType::Full),
+                "GMM Cholesky presence inconsistent with covariance type"
+            );
+            components.push(Component { weight, mean, cov, chol });
+        }
+        Ok(Gmm {
+            components,
+            covariance,
+            dim,
+            log_likelihood,
+            iterations,
+            responsibilities: Matrix::zeros(0, k),
+        })
+    }
+
     /// Overlapping assignment mirroring the FCM rule (paper §IV-A2): each
     /// cluster takes its top `⌈n·o/k⌉` points by responsibility, plus
     /// argmax coverage.

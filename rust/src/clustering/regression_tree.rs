@@ -198,6 +198,55 @@ impl RegressionTree {
         self.clusters.len()
     }
 
+    /// Serialize the routing structure (split nodes + leaves). Training
+    /// row assignments (`clusters`) are fit-time state and are not
+    /// persisted.
+    pub(crate) fn write_artifact(&self, w: &mut crate::util::binio::BinWriter) {
+        w.put_usize(self.nodes.len());
+        for node in &self.nodes {
+            match node {
+                Node::Split { feature, threshold, left, right } => {
+                    w.put_u8(0);
+                    w.put_usize(*feature);
+                    w.put_f64(*threshold);
+                    w.put_usize(*left);
+                    w.put_usize(*right);
+                }
+                Node::Leaf { cluster, mean } => {
+                    w.put_u8(1);
+                    w.put_usize(*cluster);
+                    w.put_f64(*mean);
+                }
+            }
+        }
+    }
+
+    /// Inverse of [`Self::write_artifact`]; child indices are validated
+    /// so a corrupted artifact cannot send [`Self::route`] out of bounds.
+    pub(crate) fn read_artifact(
+        r: &mut crate::util::binio::BinReader<'_>,
+    ) -> anyhow::Result<Self> {
+        use anyhow::{bail, ensure};
+        let n = r.get_usize()?;
+        ensure!(n >= 1, "tree artifact has no nodes");
+        let mut nodes = Vec::with_capacity(n);
+        for _ in 0..n {
+            nodes.push(match r.get_u8()? {
+                0 => {
+                    let feature = r.get_usize()?;
+                    let threshold = r.get_f64()?;
+                    let left = r.get_usize()?;
+                    let right = r.get_usize()?;
+                    ensure!(left < n && right < n, "tree artifact child index out of range");
+                    Node::Split { feature, threshold, left, right }
+                }
+                1 => Node::Leaf { cluster: r.get_usize()?, mean: r.get_f64()? },
+                other => bail!("unknown tree node tag {other}"),
+            });
+        }
+        Ok(Self { nodes, clusters: Vec::new() })
+    }
+
     /// Route a point to its leaf cluster id.
     pub fn route(&self, x: &[f64]) -> usize {
         let mut idx = 0;

@@ -4,30 +4,40 @@
 //! overhead (cross-covariance assembly, PJRT dispatch on the AOT path)
 //! amortizes heavily over a batch — the same motivation as dynamic
 //! batching in model-serving systems (vLLM/Triton). Requests are queued;
-//! a worker flushes when `max_batch` is reached or the oldest request has
-//! waited `max_wait`, then runs one batched `Surrogate::predict`.
+//! a worker flushes when `max_batch` *points* have accumulated or the
+//! oldest request has waited `max_wait`, groups the flush by target
+//! model (requests name a [`crate::coordinator::ModelRegistry`] slot, or
+//! ride the current default), and runs one batched
+//! [`Surrogate::predict_into`] per group into worker-owned buffers —
+//! allocation-free on the steady-state hot path.
 //!
-//! The batched matrix lands in `OrdinaryKriging::predict`, whose chunks
-//! assemble cross-correlations through `Kernel::cross_corr_fast` — the
-//! GEMM-trick path for the SE kernel, row-parallel scalar otherwise — so
-//! batching here compounds with the vectorized assembly downstream.
+//! Requests may carry several points (`predictb`), which join the same
+//! flush: a 40-point client batch and 24 single-point requests form one
+//! 64-row matrix if they target the same model.
 
+use crate::coordinator::metrics::ServerMetrics;
+use crate::coordinator::registry::ModelRegistry;
 use crate::kriging::Surrogate;
 use crate::util::matrix::Matrix;
-use crate::coordinator::metrics::ServerMetrics;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// One queued request: a point and a reply channel.
+/// One queued request: one or more points for one model slot.
 struct Pending {
-    point: Vec<f64>,
-    reply: Sender<anyhow::Result<(f64, f64)>>,
+    /// Row-major points, `rows × dim` values.
+    data: Vec<f64>,
+    rows: usize,
+    dim: usize,
+    /// Target slot; `None` rides the default at flush time.
+    model: Option<String>,
+    reply: Sender<anyhow::Result<Vec<(f64, f64)>>>,
     enqueued: Instant,
 }
 
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
+    /// Flush threshold in *points* (not requests).
     pub max_batch: usize,
     pub max_wait: Duration,
 }
@@ -48,14 +58,13 @@ struct Shared {
 pub struct Batcher {
     shared: Arc<Shared>,
     worker: Option<std::thread::JoinHandle<()>>,
-    dim: usize,
+    registry: Arc<ModelRegistry>,
 }
 
 impl Batcher {
-    /// Spawn the batching worker over a fitted model.
+    /// Spawn the batching worker over a model registry.
     pub fn start(
-        model: Arc<dyn Surrogate>,
-        dim: usize,
+        registry: Arc<ModelRegistry>,
         cfg: BatcherConfig,
         metrics: Arc<ServerMetrics>,
     ) -> Self {
@@ -65,27 +74,73 @@ impl Batcher {
             shutdown: Mutex::new(false),
         });
         let worker_shared = shared.clone();
+        let worker_registry = registry.clone();
         let worker = std::thread::spawn(move || {
-            worker_loop(worker_shared, model, cfg, metrics);
+            worker_loop(worker_shared, worker_registry, cfg, metrics);
         });
-        Self { shared, worker: Some(worker), dim }
+        Self { shared, worker: Some(worker), registry }
     }
 
-    /// Enqueue one point; blocks until its prediction is ready.
+    /// The registry this batcher resolves models from.
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    /// Enqueue one point for the default model; blocks until predicted.
     pub fn predict_one(&self, point: &[f64]) -> anyhow::Result<(f64, f64)> {
-        anyhow::ensure!(point.len() == self.dim, "expected {} dims, got {}", self.dim, point.len());
-        let (tx, rx): (Sender<anyhow::Result<(f64, f64)>>, Receiver<_>) = channel();
+        self.predict_one_for(None, point)
+    }
+
+    /// Enqueue one point for a named model slot.
+    pub fn predict_one_for(
+        &self,
+        model: Option<&str>,
+        point: &[f64],
+    ) -> anyhow::Result<(f64, f64)> {
+        let out = self.predict_rows(model, point.to_vec(), 1)?;
+        Ok(out[0])
+    }
+
+    /// Enqueue `rows` points (row-major `data`, `rows × dim` values) for
+    /// one model slot; blocks until the whole request is predicted.
+    /// Dimensions are validated against the target model at enqueue time.
+    pub fn predict_rows(
+        &self,
+        model: Option<&str>,
+        data: Vec<f64>,
+        rows: usize,
+    ) -> anyhow::Result<Vec<(f64, f64)>> {
+        let target = self
+            .registry
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("no model slot named {:?}", model.unwrap_or("")))?;
+        let dim = target.dim();
+        anyhow::ensure!(rows >= 1, "request has no points");
+        anyhow::ensure!(
+            data.len() == rows * dim,
+            "expected {rows}×{dim} values for model {:?}, got {}",
+            model.unwrap_or("default"),
+            data.len()
+        );
+        let (tx, rx): (Sender<anyhow::Result<Vec<(f64, f64)>>>, Receiver<_>) = channel();
         {
             let mut q = self.shared.queue.lock().unwrap();
-            q.push(Pending { point: point.to_vec(), reply: tx, enqueued: Instant::now() });
+            q.push(Pending {
+                data,
+                rows,
+                dim,
+                model: model.map(str::to_string),
+                reply: tx,
+                enqueued: Instant::now(),
+            });
         }
         self.shared.available.notify_one();
         rx.recv().map_err(|_| anyhow::anyhow!("batcher dropped request"))?
     }
 
-    /// Current queue depth (diagnostics / backpressure decisions).
+    /// Current queue depth in points (diagnostics / backpressure).
     pub fn depth(&self) -> usize {
-        self.shared.queue.lock().unwrap().len()
+        self.shared.queue.lock().unwrap().iter().map(|p| p.rows).sum()
     }
 }
 
@@ -101,10 +156,16 @@ impl Drop for Batcher {
 
 fn worker_loop(
     shared: Arc<Shared>,
-    model: Arc<dyn Surrogate>,
+    registry: Arc<ModelRegistry>,
     cfg: BatcherConfig,
     metrics: Arc<ServerMetrics>,
 ) {
+    // Worker-owned buffers, reused across flushes: the batch matrix plus
+    // the predict_into output pair. Steady state allocates nothing.
+    let mut xt_data: Vec<f64> = Vec::new();
+    let mut mean_buf: Vec<f64> = Vec::new();
+    let mut var_buf: Vec<f64> = Vec::new();
+
     loop {
         // Collect a batch: wait for work, then linger up to max_wait for
         // more requests (or until the batch is full).
@@ -119,8 +180,9 @@ fn worker_loop(
                 q = guard;
             }
             let oldest = q[0].enqueued;
-            // Linger while under max_batch and under max_wait.
-            while q.len() < cfg.max_batch && oldest.elapsed() < cfg.max_wait {
+            let points = |q: &Vec<Pending>| q.iter().map(|p| p.rows).sum::<usize>();
+            // Linger while under max_batch points and under max_wait.
+            while points(&*q) < cfg.max_batch && oldest.elapsed() < cfg.max_wait {
                 let (guard, timeout) = shared
                     .available
                     .wait_timeout(q, cfg.max_wait.saturating_sub(oldest.elapsed()))
@@ -130,7 +192,13 @@ fn worker_loop(
                     break;
                 }
             }
-            let take = q.len().min(cfg.max_batch);
+            // Drain whole requests until the point budget is covered.
+            let mut take = 0;
+            let mut taken_points = 0;
+            while take < q.len() && taken_points < cfg.max_batch {
+                taken_points += q[take].rows;
+                take += 1;
+            }
             q.drain(..take).collect()
         };
 
@@ -138,26 +206,111 @@ fn worker_loop(
             continue;
         }
 
-        // Build the batch matrix and run one predict.
-        let d = batch[0].point.len();
-        let mut data = Vec::with_capacity(batch.len() * d);
-        for p in &batch {
-            data.extend_from_slice(&p.point);
+        // Resolve the default name ONCE per flush, not per request.
+        let default_key = registry.default_name();
+        let key_of =
+            |p: &Pending| -> &str { p.model.as_deref().unwrap_or(default_key.as_str()) };
+
+        // Steady-state fast path: every request targets the same slot
+        // (the overwhelmingly common single-model case) — no grouping
+        // map, no per-request key clones.
+        let first_key = key_of(&batch[0]).to_string();
+        if batch[1..].iter().all(|p| key_of(p) == first_key) {
+            flush_group(
+                &first_key, batch, &registry, &metrics, &mut xt_data, &mut mean_buf,
+                &mut var_buf,
+            );
+            continue;
         }
-        let xt = Matrix::from_vec(batch.len(), d, data);
-        let t0 = Instant::now();
-        match model.predict(&xt) {
-            Ok(pred) => {
-                metrics.record_batch(batch.len(), t0.elapsed().as_secs_f64());
-                for (i, p) in batch.into_iter().enumerate() {
-                    let _ = p.reply.send(Ok((pred.mean[i], pred.variance[i])));
-                }
+
+        // Mixed flush: group by resolved slot name, preserving arrival
+        // order within each group.
+        let mut order: Vec<String> = Vec::new();
+        let mut groups: std::collections::HashMap<String, Vec<Pending>> = Default::default();
+        for p in batch {
+            let key = p.model.clone().unwrap_or_else(|| default_key.clone());
+            if !groups.contains_key(&key) {
+                order.push(key.clone());
             }
-            Err(e) => {
-                metrics.record_error();
-                for p in batch {
-                    let _ = p.reply.send(Err(anyhow::anyhow!("predict failed: {e:#}")));
-                }
+            groups.entry(key).or_default().push(p);
+        }
+        for key in order {
+            let group = groups.remove(&key).unwrap();
+            flush_group(
+                &key, group, &registry, &metrics, &mut xt_data, &mut mean_buf,
+                &mut var_buf,
+            );
+        }
+    }
+}
+
+/// Predict one same-slot group of requests as a single batched
+/// `predict_into` call into the worker's reusable buffers, then fan the
+/// results back out to the per-request reply channels.
+fn flush_group(
+    key: &str,
+    group: Vec<Pending>,
+    registry: &ModelRegistry,
+    metrics: &ServerMetrics,
+    xt_data: &mut Vec<f64>,
+    mean_buf: &mut Vec<f64>,
+    var_buf: &mut Vec<f64>,
+) {
+    let model = match registry.get(Some(key)) {
+        Some(m) => m,
+        None => {
+            // Slot removed between enqueue and flush.
+            for p in group {
+                let _ = p.reply.send(Err(anyhow::anyhow!("model slot {key:?} disappeared")));
+            }
+            metrics.record_error();
+            return;
+        }
+    };
+    let dim = model.dim();
+    // A hot swap may have replaced the slot with a different-dimensional
+    // model after enqueue validation: fail those requests individually,
+    // keep the rest.
+    let (group, stale): (Vec<Pending>, Vec<Pending>) =
+        group.into_iter().partition(|p| p.dim == dim);
+    for p in stale {
+        metrics.record_error();
+        let _ = p
+            .reply
+            .send(Err(anyhow::anyhow!("model slot {key:?} now expects {dim} dims")));
+    }
+    if group.is_empty() {
+        return;
+    }
+
+    let rows: usize = group.iter().map(|p| p.rows).sum();
+    xt_data.clear();
+    for p in &group {
+        xt_data.extend_from_slice(&p.data);
+    }
+    let xt = Matrix::from_vec(rows, dim, std::mem::take(xt_data));
+    mean_buf.resize(rows, 0.0);
+    var_buf.resize(rows, 0.0);
+    let t0 = Instant::now();
+    let result = model.predict_into(&xt, &mut mean_buf[..rows], &mut var_buf[..rows]);
+    // Reclaim the matrix buffer for the next flush.
+    *xt_data = xt.into_vec();
+
+    match result {
+        Ok(()) => {
+            metrics.record_batch(rows, t0.elapsed().as_secs_f64());
+            let mut at = 0;
+            for p in group {
+                let out: Vec<(f64, f64)> =
+                    (at..at + p.rows).map(|i| (mean_buf[i], var_buf[i])).collect();
+                at += p.rows;
+                let _ = p.reply.send(Ok(out));
+            }
+        }
+        Err(e) => {
+            metrics.record_error();
+            for p in group {
+                let _ = p.reply.send(Err(anyhow::anyhow!("predict failed: {e:#}")));
             }
         }
     }
@@ -171,8 +324,15 @@ mod tests {
 
     /// Test double: records batch sizes, returns x[0] as mean.
     struct Echo {
+        dim: usize,
         calls: AtomicUsize,
         max_batch_seen: AtomicUsize,
+    }
+
+    impl Echo {
+        fn new(dim: usize) -> Self {
+            Self { dim, calls: AtomicUsize::new(0), max_batch_seen: AtomicUsize::new(0) }
+        }
     }
 
     impl Surrogate for Echo {
@@ -188,12 +348,24 @@ mod tests {
         fn name(&self) -> &str {
             "echo"
         }
+
+        fn dim(&self) -> usize {
+            self.dim
+        }
+    }
+
+    fn registry_of(model: Arc<dyn Surrogate>) -> Arc<ModelRegistry> {
+        Arc::new(ModelRegistry::new("default", model))
     }
 
     #[test]
     fn single_request_roundtrip() {
-        let model = Arc::new(Echo { calls: AtomicUsize::new(0), max_batch_seen: AtomicUsize::new(0) });
-        let b = Batcher::start(model.clone(), 2, BatcherConfig::default(), Arc::new(ServerMetrics::new()));
+        let model = Arc::new(Echo::new(2));
+        let b = Batcher::start(
+            registry_of(model.clone()),
+            BatcherConfig::default(),
+            Arc::new(ServerMetrics::new()),
+        );
         let (mean, var) = b.predict_one(&[3.5, 1.0]).unwrap();
         assert_eq!(mean, 3.5);
         assert_eq!(var, 1.0);
@@ -203,23 +375,46 @@ mod tests {
 
     #[test]
     fn dimension_mismatch_rejected() {
-        let model = Arc::new(Echo { calls: AtomicUsize::new(0), max_batch_seen: AtomicUsize::new(0) });
-        let b = Batcher::start(model, 3, BatcherConfig::default(), Arc::new(ServerMetrics::new()));
+        let b = Batcher::start(
+            registry_of(Arc::new(Echo::new(3))),
+            BatcherConfig::default(),
+            Arc::new(ServerMetrics::new()),
+        );
         assert!(b.predict_one(&[1.0]).is_err());
+        assert!(b.predict_rows(None, vec![1.0; 7], 2).is_err(), "7 values ≠ 2×3");
+    }
+
+    #[test]
+    fn unknown_slot_rejected_at_enqueue() {
+        let b = Batcher::start(
+            registry_of(Arc::new(Echo::new(1))),
+            BatcherConfig::default(),
+            Arc::new(ServerMetrics::new()),
+        );
+        assert!(b.predict_one_for(Some("nope"), &[1.0]).is_err());
+    }
+
+    #[test]
+    fn multi_point_request_roundtrip() {
+        let b = Batcher::start(
+            registry_of(Arc::new(Echo::new(2))),
+            BatcherConfig::default(),
+            Arc::new(ServerMetrics::new()),
+        );
+        let out = b.predict_rows(None, vec![1.0, 0.0, 2.0, 0.0, 3.0, 0.0], 3).unwrap();
+        assert_eq!(out.iter().map(|p| p.0).collect::<Vec<_>>(), vec![1.0, 2.0, 3.0]);
     }
 
     #[test]
     fn concurrent_requests_get_batched() {
-        let model = Arc::new(Echo { calls: AtomicUsize::new(0), max_batch_seen: AtomicUsize::new(0) });
+        let model = Arc::new(Echo::new(1));
         let cfg = BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(20) };
         let metrics = Arc::new(ServerMetrics::new());
-        let b = Arc::new(Batcher::start(model.clone(), 1, cfg, metrics.clone()));
+        let b = Arc::new(Batcher::start(registry_of(model.clone()), cfg, metrics.clone()));
         let mut handles = Vec::new();
         for i in 0..40 {
             let b = b.clone();
-            handles.push(std::thread::spawn(move || {
-                b.predict_one(&[i as f64]).unwrap()
-            }));
+            handles.push(std::thread::spawn(move || b.predict_one(&[i as f64]).unwrap()));
         }
         for (i, h) in handles.into_iter().enumerate() {
             let (mean, _) = h.join().unwrap();
@@ -234,9 +429,36 @@ mod tests {
     }
 
     #[test]
+    fn named_slots_route_to_their_model() {
+        let reg = registry_of(Arc::new(Echo::new(1)));
+        struct Negate;
+        impl Surrogate for Negate {
+            fn predict(&self, xt: &Matrix) -> anyhow::Result<Prediction> {
+                Ok(Prediction {
+                    mean: (0..xt.rows()).map(|i| -xt[(i, 0)]).collect(),
+                    variance: vec![0.0; xt.rows()],
+                })
+            }
+            fn name(&self) -> &str {
+                "negate"
+            }
+            fn dim(&self) -> usize {
+                1
+            }
+        }
+        reg.insert("neg", Arc::new(Negate));
+        let b = Batcher::start(reg, BatcherConfig::default(), Arc::new(ServerMetrics::new()));
+        assert_eq!(b.predict_one(&[2.0]).unwrap().0, 2.0);
+        assert_eq!(b.predict_one_for(Some("neg"), &[2.0]).unwrap().0, -2.0);
+    }
+
+    #[test]
     fn shutdown_joins_cleanly() {
-        let model = Arc::new(Echo { calls: AtomicUsize::new(0), max_batch_seen: AtomicUsize::new(0) });
-        let b = Batcher::start(model, 1, BatcherConfig::default(), Arc::new(ServerMetrics::new()));
+        let b = Batcher::start(
+            registry_of(Arc::new(Echo::new(1))),
+            BatcherConfig::default(),
+            Arc::new(ServerMetrics::new()),
+        );
         assert_eq!(b.depth(), 0);
         drop(b); // must not hang
     }

@@ -1,12 +1,16 @@
 //! The serving coordinator: dynamic micro-batching, a TCP line-protocol
-//! prediction server and serving metrics. The fitted Cluster Kriging
-//! model (native or PJRT backend) sits behind the [`Batcher`]; python is
-//! never on this path.
+//! prediction server with hot-swappable model slots, and serving metrics.
+//! Fitted models (native or PJRT backend) live in a [`ModelRegistry`] and
+//! sit behind the [`Batcher`]; python is never on this path. Artifacts
+//! written by [`crate::kriging::Surrogate::save`] boot the server through
+//! the protocol's `load`/`swap` ops without a refit or restart.
 
 pub mod batcher;
 pub mod metrics;
+pub mod registry;
 pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::ServerMetrics;
+pub use registry::{ModelInfo, ModelRegistry};
 pub use server::{Client, Server, ServerConfig};

@@ -1,18 +1,33 @@
 //! TCP prediction server — the leader process of the coordinator.
 //!
-//! Line protocol (one request per line, CSV):
-//!   `predict <x1>,<x2>,...`   → `ok <mean>,<variance>`
-//!   `stats`                   → `ok <metrics summary>`
-//!   `ping`                    → `ok pong`
-//!   anything else             → `err <message>`
+//! Line protocol (one request per line; [model] is an optional registry
+//! slot name, defaulting to the current default slot):
+//!
+//!   v1 (kept verbatim):
+//!   `predict <x1>,<x2>,...`          → `ok <mean>,<variance>`
+//!   `stats`                          → `ok <metrics summary>`
+//!   `ping`                           → `ok pong`
+//!
+//!   v2 (model lifecycle):
+//!   `predict <model> <csv>`          → `ok <mean>,<variance>`
+//!   `predictb [model] <n> <p1;p2;…>` → `ok <m1>,<v1>;<m2>,<v2>;…`
+//!     (each `pi` is a CSV point; `n` must match the point count)
+//!   `models`                         → `ok default=<name> <name>:<algo>:d<dim> …`
+//!   `load <path> [name]`             → `ok loaded <name> <algo> d=<dim>`
+//!     (server-side artifact path; slot name defaults to the file stem)
+//!   `swap <name>`                    → `ok swapped <name>`
+//!   anything else                    → `err <message>`
 //!
 //! Requests funnel through the [`Batcher`], so concurrent clients are
-//! served in dynamically-formed micro-batches. The fitted model is
-//! immutable after startup — no locks on the hot path besides the queue.
+//! served in dynamically-formed micro-batches. Models live in a
+//! [`ModelRegistry`] of atomically swappable slots — `load` + `swap`
+//! replace the serving model under live traffic without a restart.
 
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::metrics::ServerMetrics;
+use crate::coordinator::registry::ModelRegistry;
 use crate::kriging::Surrogate;
+use crate::surrogate::SurrogateSpec;
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -22,8 +37,6 @@ use std::sync::Arc;
 pub struct ServerConfig {
     pub addr: String,
     pub batcher: BatcherConfig,
-    /// Input dimension the model expects.
-    pub dim: usize,
 }
 
 /// A running prediction server.
@@ -32,14 +45,16 @@ pub struct Server {
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
     pub metrics: Arc<ServerMetrics>,
+    registry: Arc<ModelRegistry>,
 }
 
 impl Server {
-    /// Bind and serve in background threads (one per connection).
-    pub fn start(model: Arc<dyn Surrogate>, cfg: ServerConfig) -> Result<Self> {
+    /// Bind and serve a model registry in background threads (one per
+    /// connection).
+    pub fn start(registry: Arc<ModelRegistry>, cfg: ServerConfig) -> Result<Self> {
         let metrics = Arc::new(ServerMetrics::new());
         let batcher =
-            Arc::new(Batcher::start(model, cfg.dim, cfg.batcher.clone(), metrics.clone()));
+            Arc::new(Batcher::start(registry.clone(), cfg.batcher.clone(), metrics.clone()));
         let listener =
             TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
         let local_addr = listener.local_addr()?;
@@ -48,6 +63,7 @@ impl Server {
 
         let accept_stop = stop.clone();
         let accept_metrics = metrics.clone();
+        let accept_registry = registry.clone();
         let accept_thread = std::thread::spawn(move || {
             let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
             while !accept_stop.load(Ordering::Relaxed) {
@@ -55,9 +71,10 @@ impl Server {
                     Ok((stream, _)) => {
                         let b = batcher.clone();
                         let m = accept_metrics.clone();
+                        let r = accept_registry.clone();
                         let s = accept_stop.clone();
                         conns.push(std::thread::spawn(move || {
-                            let _ = handle_connection(stream, b, m, s);
+                            let _ = handle_connection(stream, b, r, m, s);
                         }));
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -65,13 +82,42 @@ impl Server {
                     }
                     Err(_) => break,
                 }
+                // Reap finished connection threads as we go — a
+                // long-running server otherwise accumulates one dead
+                // JoinHandle per client that ever connected.
+                let mut i = 0;
+                while i < conns.len() {
+                    if conns[i].is_finished() {
+                        let _ = conns.swap_remove(i).join();
+                    } else {
+                        i += 1;
+                    }
+                }
             }
             for c in conns {
                 let _ = c.join();
             }
         });
 
-        Ok(Self { local_addr, stop, accept_thread: Some(accept_thread), metrics })
+        Ok(Self {
+            local_addr,
+            stop,
+            accept_thread: Some(accept_thread),
+            metrics,
+            registry,
+        })
+    }
+
+    /// Convenience: serve a single model in a one-slot registry named
+    /// `"default"`.
+    pub fn start_with_model(model: Arc<dyn Surrogate>, cfg: ServerConfig) -> Result<Self> {
+        Self::start(Arc::new(ModelRegistry::new("default", model)), cfg)
+    }
+
+    /// The registry this server resolves models from (for out-of-band
+    /// loads/swaps by the embedding process).
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
     }
 
     pub fn shutdown(&mut self) {
@@ -91,6 +137,7 @@ impl Drop for Server {
 fn handle_connection(
     stream: TcpStream,
     batcher: Arc<Batcher>,
+    registry: Arc<ModelRegistry>,
     metrics: Arc<ServerMetrics>,
     stop: Arc<AtomicBool>,
 ) -> Result<()> {
@@ -109,7 +156,7 @@ fn handle_connection(
         match reader.read_line(&mut line) {
             Ok(0) => return Ok(()), // client closed
             Ok(_) => {
-                let reply = dispatch(line.trim(), &batcher, &metrics);
+                let reply = dispatch(line.trim(), &batcher, &registry, &metrics);
                 writer.write_all(reply.as_bytes())?;
                 writer.write_all(b"\n")?;
             }
@@ -124,34 +171,136 @@ fn handle_connection(
     }
 }
 
+fn parse_csv_point(s: &str) -> Result<Vec<f64>> {
+    s.split(',')
+        .map(|f| f.trim().parse::<f64>().with_context(|| format!("bad number {f:?}")))
+        .collect()
+}
+
+fn fmt_pair((mean, var): (f64, f64)) -> String {
+    format!("{mean},{var}")
+}
+
 /// Parse and execute one protocol line.
-fn dispatch(line: &str, batcher: &Batcher, metrics: &ServerMetrics) -> String {
+fn dispatch(
+    line: &str,
+    batcher: &Batcher,
+    registry: &ModelRegistry,
+    metrics: &ServerMetrics,
+) -> String {
     metrics.record_request();
+    let err = |msg: String| {
+        metrics.record_error();
+        format!("err {msg}")
+    };
     if line == "ping" {
         return "ok pong".into();
     }
     if line == "stats" {
         return format!("ok {}", metrics.summary());
     }
-    if let Some(rest) = line.strip_prefix("predict ") {
-        let parsed: Result<Vec<f64>, _> =
-            rest.split(',').map(|f| f.trim().parse::<f64>()).collect();
-        return match parsed {
-            Ok(point) => match batcher.predict_one(&point) {
-                Ok((mean, var)) => format!("ok {mean},{var}"),
-                Err(e) => {
-                    metrics.record_error();
-                    format!("err {e:#}")
-                }
-            },
-            Err(e) => {
-                metrics.record_error();
-                format!("err bad number: {e}")
-            }
+    if line == "models" {
+        let rows: Vec<String> = registry
+            .list()
+            .into_iter()
+            .map(|m| format!("{}:{}:d{}", m.name, m.algo, m.dim))
+            .collect();
+        return format!("ok default={} {}", registry.default_name(), rows.join(" "));
+    }
+    if let Some(rest) = line.strip_prefix("swap ") {
+        let name = rest.trim();
+        return match registry.set_default(name) {
+            Ok(()) => format!("ok swapped {name}"),
+            Err(e) => err(format!("{e:#}")),
         };
     }
-    metrics.record_error();
-    format!("err unknown command {line:?}")
+    if let Some(rest) = line.strip_prefix("load ") {
+        let mut parts = rest.split_whitespace();
+        let path = match parts.next() {
+            Some(p) => p,
+            None => return err("load needs a path".into()),
+        };
+        let name = parts.next().map(str::to_string).unwrap_or_else(|| {
+            std::path::Path::new(path)
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "default".into())
+        });
+        return match SurrogateSpec::load_path(path) {
+            Ok(model) => {
+                let model: Arc<dyn Surrogate> = Arc::from(model);
+                let (algo, dim) = (model.name().to_string(), model.dim());
+                registry.insert(name.clone(), model);
+                format!("ok loaded {name} {algo} d={dim}")
+            }
+            Err(e) => err(format!("{e:#}")),
+        };
+    }
+    if let Some(rest) = line.strip_prefix("predict ") {
+        // `predict <csv>` (v1) or `predict <model> <csv>` (v2). The first
+        // token is a slot name when it names an existing slot (so numeric
+        // slot names like "2024" stay addressable), or otherwise when it
+        // can't be CSV data — which keeps v1 lines with spaces after
+        // commas ("predict 1, 2") valid.
+        let (model, csv) = match rest.trim().split_once(' ') {
+            Some((m, c))
+                if registry.contains(m.trim())
+                    || (!m.contains(',') && m.parse::<f64>().is_err()) =>
+            {
+                (Some(m.trim()), c.trim())
+            }
+            _ => (None, rest.trim()),
+        };
+        return match parse_csv_point(csv) {
+            Ok(point) => match batcher.predict_one_for(model, &point) {
+                Ok(pair) => format!("ok {}", fmt_pair(pair)),
+                Err(e) => err(format!("{e:#}")),
+            },
+            Err(e) => err(format!("{e:#}")),
+        };
+    }
+    if let Some(rest) = line.strip_prefix("predictb ") {
+        // `predictb [model] <n> <p1;p2;…>`.
+        let tokens: Vec<&str> = rest.split_whitespace().collect();
+        let (model, n_str, body) = match tokens.as_slice() {
+            [n, body] => (None, *n, *body),
+            [model, n, body] => (Some(*model), *n, *body),
+            _ => return err("usage: predictb [model] <n> <p1;p2;...>".into()),
+        };
+        let n: usize = match n_str.parse() {
+            Ok(v) => v,
+            Err(_) => return err(format!("bad point count {n_str:?}")),
+        };
+        let mut data = Vec::new();
+        let mut rows = 0;
+        let mut dim = None;
+        for part in body.split(';') {
+            let point = match parse_csv_point(part) {
+                Ok(p) => p,
+                Err(e) => return err(format!("point {}: {e:#}", rows + 1)),
+            };
+            if let Some(d) = dim {
+                if point.len() != d {
+                    return err(format!("point {} has {} dims, expected {d}", rows + 1, point.len()));
+                }
+            } else {
+                dim = Some(point.len());
+            }
+            data.extend_from_slice(&point);
+            rows += 1;
+        }
+        if rows != n {
+            return err(format!("declared {n} points but got {rows}"));
+        }
+        return match batcher.predict_rows(model, data, rows) {
+            Ok(pairs) => {
+                let body: Vec<String> = pairs.into_iter().map(fmt_pair).collect();
+                format!("ok {}", body.join(";"))
+            }
+            Err(e) => err(format!("{e:#}")),
+        };
+    }
+    err(format!("unknown command {line:?}"))
 }
 
 /// Minimal blocking client for tests/examples.
@@ -176,14 +325,76 @@ impl Client {
         Ok(reply.trim().to_string())
     }
 
+    fn expect_ok<'a>(reply: &'a str) -> Result<&'a str> {
+        reply.strip_prefix("ok ").with_context(|| format!("server error: {reply}"))
+    }
+
+    /// Predict a batch of points through the `predictb` protocol path;
+    /// `model` picks a registry slot (`None` = server default).
+    pub fn predict_batch<P: AsRef<[f64]>>(
+        &mut self,
+        model: Option<&str>,
+        points: &[P],
+    ) -> Result<Vec<(f64, f64)>> {
+        anyhow::ensure!(!points.is_empty(), "predict_batch needs at least one point");
+        let body: Vec<String> = points
+            .iter()
+            .map(|p| {
+                p.as_ref().iter().map(f64::to_string).collect::<Vec<_>>().join(",")
+            })
+            .collect();
+        let prefix = match model {
+            Some(m) => format!("predictb {m} "),
+            None => "predictb ".to_string(),
+        };
+        let reply =
+            self.request(&format!("{prefix}{} {}", points.len(), body.join(";")))?;
+        let rest = Self::expect_ok(&reply)?;
+        let mut out = Vec::with_capacity(points.len());
+        for pair in rest.split(';') {
+            let (m, v) = pair.split_once(',').context("malformed reply pair")?;
+            out.push((m.parse()?, v.parse()?));
+        }
+        anyhow::ensure!(
+            out.len() == points.len(),
+            "server returned {} predictions for {} points",
+            out.len(),
+            points.len()
+        );
+        Ok(out)
+    }
+
+    /// Predict one point (rides the batch path, so every client predict
+    /// exercises the v2 protocol).
     pub fn predict(&mut self, point: &[f64]) -> Result<(f64, f64)> {
-        let body: Vec<String> = point.iter().map(|v| v.to_string()).collect();
-        let reply = self.request(&format!("predict {}", body.join(",")))?;
-        let rest = reply
-            .strip_prefix("ok ")
-            .with_context(|| format!("server error: {reply}"))?;
-        let (m, v) = rest.split_once(',').context("malformed reply")?;
-        Ok((m.parse()?, v.parse()?))
+        Ok(self.predict_batch(None, &[point])?[0])
+    }
+
+    /// Load a server-side artifact into a registry slot; returns the slot
+    /// name the server chose.
+    pub fn load_model(&mut self, path: &str, name: Option<&str>) -> Result<String> {
+        let line = match name {
+            Some(n) => format!("load {path} {n}"),
+            None => format!("load {path}"),
+        };
+        let reply = self.request(&line)?;
+        let rest = Self::expect_ok(&reply)?;
+        let mut parts = rest.split_whitespace();
+        anyhow::ensure!(parts.next() == Some("loaded"), "unexpected reply: {reply}");
+        parts.next().map(str::to_string).context("reply missing slot name")
+    }
+
+    /// Retarget the server's default model slot.
+    pub fn swap(&mut self, name: &str) -> Result<()> {
+        let reply = self.request(&format!("swap {name}"))?;
+        Self::expect_ok(&reply)?;
+        Ok(())
+    }
+
+    /// Raw `models` listing.
+    pub fn models(&mut self) -> Result<String> {
+        let reply = self.request("models")?;
+        Ok(Self::expect_ok(&reply)?.to_string())
     }
 }
 
@@ -204,16 +415,31 @@ mod tests {
         fn name(&self) -> &str {
             "sum"
         }
+        fn dim(&self) -> usize {
+            2
+        }
+    }
+
+    struct Product;
+    impl Surrogate for Product {
+        fn predict(&self, xt: &Matrix) -> Result<Prediction> {
+            Ok(Prediction {
+                mean: (0..xt.rows()).map(|i| xt.row(i).iter().product()).collect(),
+                variance: vec![0.25; xt.rows()],
+            })
+        }
+        fn name(&self) -> &str {
+            "product"
+        }
+        fn dim(&self) -> usize {
+            2
+        }
     }
 
     fn start_server() -> Server {
-        Server::start(
+        Server::start_with_model(
             Arc::new(Sum),
-            ServerConfig {
-                addr: "127.0.0.1:0".into(),
-                batcher: BatcherConfig::default(),
-                dim: 2,
-            },
+            ServerConfig { addr: "127.0.0.1:0".into(), batcher: BatcherConfig::default() },
         )
         .unwrap()
     }
@@ -233,6 +459,48 @@ mod tests {
         let (mean, var) = c.predict(&[1.5, 2.5]).unwrap();
         assert_eq!(mean, 4.0);
         assert_eq!(var, 0.5);
+        // v1 form still served.
+        assert_eq!(c.request("predict 1.5,2.5").unwrap(), "ok 4,0.5");
+    }
+
+    #[test]
+    fn predictb_roundtrip() {
+        let server = start_server();
+        let mut c = Client::connect(&server.local_addr.to_string()).unwrap();
+        let out = c
+            .predict_batch(None, &[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 5.0]])
+            .unwrap();
+        assert_eq!(out, vec![(3.0, 0.5), (7.0, 0.5), (10.0, 0.5)]);
+        // Count mismatch is a protocol error.
+        assert!(c.request("predictb 2 1,2").unwrap().starts_with("err"));
+        assert!(c.request("predictb 2 1,2;3").unwrap().starts_with("err"));
+    }
+
+    #[test]
+    fn models_and_named_predict() {
+        let server = start_server();
+        server.registry().insert("prod", Arc::new(Product));
+        let mut c = Client::connect(&server.local_addr.to_string()).unwrap();
+        let listing = c.models().unwrap();
+        assert!(listing.starts_with("default=default"), "{listing}");
+        assert!(listing.contains("default:sum:d2"), "{listing}");
+        assert!(listing.contains("prod:product:d2"), "{listing}");
+        // Named predict hits the named slot, default stays.
+        assert_eq!(c.request("predict prod 3,4").unwrap(), "ok 12,0.25");
+        assert_eq!(c.request("predict 3,4").unwrap(), "ok 7,0.5");
+        let out = c.predict_batch(Some("prod"), &[vec![2.0, 3.0]]).unwrap();
+        assert_eq!(out, vec![(6.0, 0.25)]);
+    }
+
+    #[test]
+    fn swap_switches_default_under_live_connection() {
+        let server = start_server();
+        server.registry().insert("v2", Arc::new(Product));
+        let mut c = Client::connect(&server.local_addr.to_string()).unwrap();
+        assert_eq!(c.predict(&[2.0, 5.0]).unwrap().0, 7.0); // sum
+        c.swap("v2").unwrap();
+        assert_eq!(c.predict(&[2.0, 5.0]).unwrap().0, 10.0); // product
+        assert!(c.swap("missing").is_err());
     }
 
     #[test]
@@ -243,7 +511,11 @@ mod tests {
         assert!(c.request("bogus").unwrap().starts_with("err"));
         // Wrong dimensionality → batcher rejects.
         assert!(c.request("predict 1").unwrap().starts_with("err"));
-        assert!(server.metrics.errors.load(std::sync::atomic::Ordering::Relaxed) >= 3);
+        // Unknown model slot.
+        assert!(c.request("predict nope 1,2").unwrap().starts_with("err"));
+        // Load of a nonexistent artifact.
+        assert!(c.request("load /no/such/artifact.ck").unwrap().starts_with("err"));
+        assert!(server.metrics.errors.load(std::sync::atomic::Ordering::Relaxed) >= 5);
     }
 
     #[test]

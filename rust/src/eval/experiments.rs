@@ -159,7 +159,7 @@ pub fn algo_sweep(ds: &ExperimentDataset) -> Vec<AlgoSpec> {
         specs.push(AlgoSpec::Bcm { k, shared: false });
         specs.push(AlgoSpec::Bcm { k, shared: true });
         for flavor in ["OWCK", "OWFCK", "GMMCK", "MTCK"] {
-            specs.push(AlgoSpec::ClusterKriging { flavor, k });
+            specs.push(AlgoSpec::ClusterKriging { flavor: flavor.into(), k });
         }
     }
     specs

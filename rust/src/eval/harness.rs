@@ -1,58 +1,22 @@
 //! Algorithm-agnostic evaluation harness (paper §VI).
 //!
-//! An [`AlgoSpec`] names one algorithm at one hyper-parameter setting
-//! (the complexity/accuracy knob of §VI-A). [`evaluate`] standardizes the
-//! data, fits, predicts, de-standardizes and scores — producing one row of
+//! An [`AlgoSpec`] (the evaluation-facing name of
+//! [`crate::surrogate::SurrogateSpec`]) names one algorithm at one
+//! hyper-parameter setting (the complexity/accuracy knob of §VI-A).
+//! [`evaluate`] standardizes the data, fits through the one shared
+//! [`SurrogateSpec::fit`] factory — no per-algorithm dispatch lives here
+//! anymore — predicts, de-standardizes and scores, producing one row of
 //! the paper's tables / one point of Fig. 2.
 
-use crate::baselines::{Bcm, BcmConfig, BcmMode, Fitc, FitcConfig, SubsetOfData};
-use crate::cluster_kriging::{builder, ClusterKriging};
 use crate::data::{Dataset, Standardizer};
-use crate::kriging::{HyperOpt, Surrogate};
+use crate::kriging::HyperOpt;
 use crate::metrics::{score, Scores};
+use crate::surrogate::{FitOptions, SurrogateSpec};
 use crate::util::timer::time_it;
 use anyhow::Result;
 
-/// One algorithm at one hyper-parameter value.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub enum AlgoSpec {
-    /// Subset of Data with `m` points.
-    Sod { m: usize },
-    /// FITC with `m` inducing points.
-    Fitc { m: usize },
-    /// BCM with `k` modules.
-    Bcm { k: usize, shared: bool },
-    /// A Cluster Kriging flavor ("OWCK"/"OWFCK"/"GMMCK"/"MTCK"/"RANDOM-CK")
-    /// with `k` clusters.
-    ClusterKriging { flavor: &'static str, k: usize },
-    /// Full (unapproximated) Ordinary Kriging — the reference the
-    /// approximations are trying to match.
-    FullKriging,
-}
-
-impl AlgoSpec {
-    /// Display name matching the paper's tables.
-    pub fn name(&self) -> String {
-        match self {
-            AlgoSpec::Sod { .. } => "SoD".into(),
-            AlgoSpec::Fitc { .. } => "FITC".into(),
-            AlgoSpec::Bcm { shared: true, .. } => "BCM sh.".into(),
-            AlgoSpec::Bcm { shared: false, .. } => "BCM".into(),
-            AlgoSpec::ClusterKriging { flavor, .. } => (*flavor).into(),
-            AlgoSpec::FullKriging => "Kriging".into(),
-        }
-    }
-
-    /// The hyper-parameter value (sample size / inducing points / cluster
-    /// count) — the x-axis knob of §VI-A.
-    pub fn knob(&self) -> usize {
-        match self {
-            AlgoSpec::Sod { m } | AlgoSpec::Fitc { m } => *m,
-            AlgoSpec::Bcm { k, .. } | AlgoSpec::ClusterKriging { k, .. } => *k,
-            AlgoSpec::FullKriging => 1,
-        }
-    }
-}
+/// One algorithm at one hyper-parameter value (re-exported spec).
+pub use crate::surrogate::SurrogateSpec as AlgoSpec;
 
 /// One harness measurement: scores plus wall-clock timings.
 #[derive(Debug, Clone)]
@@ -117,33 +81,10 @@ pub fn evaluate(
         opt.isotropic = true;
     }
 
-    let (model, fit_seconds): (Box<dyn Surrogate>, f64) = match spec {
-        AlgoSpec::Sod { m } => {
-            let (model, t) =
-                time_it(|| SubsetOfData::fit(&tr.x, &tr.y, *m, cfg.seed, &opt));
-            (Box::new(model?), t)
-        }
-        AlgoSpec::Fitc { m } => {
-            let fc = FitcConfig { seed: cfg.seed, ..FitcConfig::new(*m) };
-            let (model, t) = time_it(|| Fitc::fit(&tr.x, &tr.y, &fc));
-            (Box::new(model?), t)
-        }
-        AlgoSpec::Bcm { k, shared } => {
-            let mode = if *shared { BcmMode::Shared } else { BcmMode::Individual };
-            let bc = BcmConfig { hyperopt: opt.clone(), seed: cfg.seed, ..BcmConfig::new(*k, mode) };
-            let (model, t) = time_it(|| Bcm::fit(&tr.x, &tr.y, &bc));
-            (Box::new(model?), t)
-        }
-        AlgoSpec::ClusterKriging { flavor, k } => {
-            let ck_cfg = builder::flavor(flavor, *k, cfg.seed, opt.clone())?;
-            let (model, t) = time_it(|| ClusterKriging::fit(&tr.x, &tr.y, ck_cfg));
-            (Box::new(model?), t)
-        }
-        AlgoSpec::FullKriging => {
-            let (model, t) = time_it(|| opt.fit(tr.x.clone(), &tr.y));
-            (Box::new(model?), t)
-        }
-    };
+    // One code path fits every algorithm.
+    let opts = FitOptions { hyperopt: opt, seed: cfg.seed };
+    let (model, fit_seconds) = time_it(|| SurrogateSpec::fit(spec, &tr, &opts));
+    let model = model?;
 
     let (pred, predict_seconds) = time_it(|| model.predict(&te_x));
     let pred = pred?;
@@ -216,8 +157,8 @@ mod tests {
             AlgoSpec::Fitc { m: 24 },
             AlgoSpec::Bcm { k: 2, shared: true },
             AlgoSpec::Bcm { k: 2, shared: false },
-            AlgoSpec::ClusterKriging { flavor: "OWCK", k: 2 },
-            AlgoSpec::ClusterKriging { flavor: "MTCK", k: 2 },
+            AlgoSpec::ClusterKriging { flavor: "OWCK".into(), k: 2 },
+            AlgoSpec::ClusterKriging { flavor: "MTCK".into(), k: 2 },
         ] {
             let r = evaluate(&spec, &tr, &te, &cfg).unwrap();
             assert!(r.scores.r2.is_finite(), "{}: bad R²", r.algo);
@@ -231,8 +172,8 @@ mod tests {
         let ds = tiny_dataset();
         let (tr, te) = ds.split(0.8, 2);
         let cfg = HarnessConfig::fast();
-        let r = evaluate(&AlgoSpec::ClusterKriging { flavor: "GMMCK", k: 2 }, &tr, &te, &cfg)
-            .unwrap();
+        let spec = AlgoSpec::ClusterKriging { flavor: "GMMCK".into(), k: 2 };
+        let r = evaluate(&spec, &tr, &te, &cfg).unwrap();
         assert!(r.scores.r2 > 0.5, "R² {}", r.scores.r2);
         assert!(r.scores.smse < 0.5, "SMSE {}", r.scores.smse);
     }
@@ -246,16 +187,5 @@ mod tests {
         let agg = aggregate(&rs);
         assert_eq!(agg.algo, "SoD");
         assert!(agg.scores.r2.is_finite());
-    }
-
-    #[test]
-    fn names_match_paper_labels() {
-        assert_eq!(AlgoSpec::Sod { m: 1 }.name(), "SoD");
-        assert_eq!(AlgoSpec::Bcm { k: 2, shared: true }.name(), "BCM sh.");
-        assert_eq!(AlgoSpec::Bcm { k: 2, shared: false }.name(), "BCM");
-        assert_eq!(
-            AlgoSpec::ClusterKriging { flavor: "MTCK", k: 4 }.name(),
-            "MTCK"
-        );
     }
 }

@@ -2,9 +2,12 @@
 //!
 //! [`model::OrdinaryKriging`] implements paper Eq. 3–5 with concentrated
 //! trend/variance estimates; [`hyperopt::HyperOpt`] performs the ML
-//! hyper-parameter search. The [`Surrogate`] trait is the common predict
-//! interface shared by plain Kriging, the Cluster-Kriging flavors and all
-//! baselines, so the evaluation harness treats every algorithm uniformly.
+//! hyper-parameter search. The [`Surrogate`] trait is the common model
+//! lifecycle interface shared by plain Kriging, the Cluster-Kriging
+//! flavors and all baselines: batch prediction (allocating and
+//! buffer-reusing forms), input dimensionality, and artifact
+//! serialization — so the evaluation harness, the serving coordinator and
+//! the CLI treat every algorithm uniformly.
 
 pub mod hyperopt;
 pub mod model;
@@ -23,6 +26,39 @@ pub trait Surrogate: Send + Sync {
 
     /// Human-readable algorithm name (for reports).
     fn name(&self) -> &str;
+
+    /// Input dimensionality the model expects (columns of `xt`).
+    fn dim(&self) -> usize;
+
+    /// [`Self::predict`] into caller-provided buffers — the serving hot
+    /// path, where the [`crate::coordinator::Batcher`] reuses one pair of
+    /// buffers across flushes instead of allocating per batch. `mean` and
+    /// `variance` must each hold exactly `xt.rows()` elements.
+    ///
+    /// The default implementation routes through [`Self::predict`] (one
+    /// allocation per call); the hot-path models override it.
+    fn predict_into(
+        &self,
+        xt: &Matrix,
+        mean: &mut [f64],
+        variance: &mut [f64],
+    ) -> anyhow::Result<()> {
+        assert_eq!(mean.len(), xt.rows(), "predict_into: mean buffer size");
+        assert_eq!(variance.len(), xt.rows(), "predict_into: variance buffer size");
+        let pred = self.predict(xt)?;
+        mean.copy_from_slice(&pred.mean);
+        variance.copy_from_slice(&pred.variance);
+        Ok(())
+    }
+
+    /// Serialize the fitted model as a versioned binary artifact (see
+    /// [`crate::surrogate::artifact`]). Load it back with
+    /// [`crate::surrogate::SurrogateSpec::load`]. Models that cannot be
+    /// persisted (test doubles, experimental wrappers) keep the default,
+    /// which is a recoverable error.
+    fn save(&self, _w: &mut dyn std::io::Write) -> anyhow::Result<()> {
+        anyhow::bail!("{} does not support artifact serialization", self.name())
+    }
 }
 
 impl Surrogate for OrdinaryKriging {
@@ -32,5 +68,35 @@ impl Surrogate for OrdinaryKriging {
 
     fn name(&self) -> &str {
         "Kriging"
+    }
+
+    fn dim(&self) -> usize {
+        self.kernel().dim()
+    }
+
+    fn predict_into(
+        &self,
+        xt: &Matrix,
+        mean: &mut [f64],
+        variance: &mut [f64],
+    ) -> anyhow::Result<()> {
+        OrdinaryKriging::predict_into_with_workers(
+            self,
+            xt,
+            crate::util::threadpool::default_workers(),
+            mean,
+            variance,
+        )?;
+        Ok(())
+    }
+
+    fn save(&self, w: &mut dyn std::io::Write) -> anyhow::Result<()> {
+        let mut payload = crate::util::binio::BinWriter::new();
+        self.write_artifact(&mut payload);
+        crate::surrogate::artifact::write_model(
+            w,
+            crate::surrogate::artifact::TAG_KRIGING,
+            &payload.into_bytes(),
+        )
     }
 }

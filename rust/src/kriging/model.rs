@@ -227,6 +227,23 @@ impl OrdinaryKriging {
         xt: &Matrix,
         workers: usize,
     ) -> Result<Prediction, KrigingError> {
+        let m = xt.rows();
+        let mut mean = vec![0.0; m];
+        let mut variance = vec![0.0; m];
+        self.predict_into_with_workers(xt, workers, &mut mean, &mut variance)?;
+        Ok(Prediction { mean, variance })
+    }
+
+    /// [`Self::predict_with_workers`] into caller-provided buffers — the
+    /// serving hot path. `mean` and `variance` must each hold exactly
+    /// `xt.rows()` elements; values are identical to the allocating form.
+    pub fn predict_into_with_workers(
+        &self,
+        xt: &Matrix,
+        workers: usize,
+        mean: &mut [f64],
+        variance: &mut [f64],
+    ) -> Result<(), KrigingError> {
         if xt.cols() != self.kernel.dim() {
             return Err(KrigingError::DimMismatch {
                 x_cols: xt.cols(),
@@ -235,8 +252,8 @@ impl OrdinaryKriging {
         }
         let m = xt.rows();
         let n = self.x.rows();
-        let mut mean = Vec::with_capacity(m);
-        let mut variance = Vec::with_capacity(m);
+        assert_eq!(mean.len(), m, "predict_into: mean buffer size");
+        assert_eq!(variance.len(), m, "predict_into: variance buffer size");
         // Chunk to bound the n×chunk solve workspace.
         const CHUNK: usize = 256;
         let workers = workers.max(1);
@@ -247,7 +264,7 @@ impl OrdinaryKriging {
             // otherwise (falls back to the plain loop for tiny chunks).
             let rt = self.kernel.cross_corr_fast(&xt_chunk, &self.x, workers); // c×n
             let c_inv_r = self.chol.solve_matrix(&rt.transpose()); // n×c
-            for (ci, _) in rows.iter().enumerate() {
+            for (ci, &row) in rows.iter().enumerate() {
                 let r = rt.row(ci);
                 let mut mu = self.mu_hat;
                 let mut r_c_r = 0.0;
@@ -261,11 +278,11 @@ impl OrdinaryKriging {
                 let t = 1.0 - one_c_r;
                 let var =
                     self.sigma2 * (self.nugget + 1.0 - r_c_r + t * t / self.one_c_one);
-                mean.push(mu);
-                variance.push(var.max(0.0));
+                mean[row] = mu;
+                variance[row] = var.max(0.0);
             }
         }
-        Ok(Prediction { mean, variance })
+        Ok(())
     }
 
     /// Single-point prediction (used by the router fast path).
@@ -330,6 +347,64 @@ impl OrdinaryKriging {
     /// Prediction weights α = C⁻¹(y − μ̂1).
     pub fn alpha(&self) -> &[f64] {
         &self.alpha
+    }
+
+    /// Serialize every fitted quantity — including the Cholesky factor,
+    /// so loading is O(n²) I/O with no refactorization and the loaded
+    /// model predicts bit-identically to this one.
+    pub(crate) fn write_artifact(&self, w: &mut crate::util::binio::BinWriter) {
+        w.put_str(self.kernel.kind.name());
+        w.put_f64_slice(&self.kernel.theta);
+        w.put_f64(self.nugget);
+        w.put_matrix(&self.x);
+        w.put_matrix(self.chol.l());
+        w.put_f64(self.chol.jitter());
+        w.put_f64_slice(&self.alpha);
+        w.put_f64(self.one_c_one);
+        w.put_f64(self.mu_hat);
+        w.put_f64(self.sigma2);
+        w.put_f64(self.nll);
+    }
+
+    /// Inverse of [`Self::write_artifact`]; validates cross-field shape
+    /// consistency so a corrupted payload is a recoverable error.
+    pub(crate) fn read_artifact(
+        r: &mut crate::util::binio::BinReader<'_>,
+    ) -> anyhow::Result<Self> {
+        use anyhow::{ensure, Context};
+        let kind_name = r.get_str()?;
+        let kind = crate::kernel::KernelKind::from_name(&kind_name)
+            .with_context(|| format!("unknown kernel family {kind_name:?}"))?;
+        let theta = r.get_f64_vec()?;
+        ensure!(
+            !theta.is_empty() && theta.iter().all(|&t| t > 0.0 && t.is_finite()),
+            "invalid kernel θ in artifact"
+        );
+        let nugget = r.get_f64()?;
+        let x = r.get_matrix()?;
+        let l = r.get_matrix()?;
+        let jitter = r.get_f64()?;
+        let alpha = r.get_f64_vec()?;
+        let one_c_one = r.get_f64()?;
+        let mu_hat = r.get_f64()?;
+        let sigma2 = r.get_f64()?;
+        let nll = r.get_f64()?;
+        let n = x.rows();
+        ensure!(n > 0, "artifact has an empty training set");
+        ensure!(x.cols() == theta.len(), "x/θ dimension mismatch in artifact");
+        ensure!(l.rows() == n && l.cols() == n, "factor/x shape mismatch in artifact");
+        ensure!(alpha.len() == n, "α/x length mismatch in artifact");
+        Ok(Self {
+            kernel: Kernel::new(kind, theta),
+            nugget,
+            x: Arc::new(x),
+            chol: Cholesky::from_parts(l, jitter)?,
+            alpha,
+            one_c_one,
+            mu_hat,
+            sigma2,
+            nll,
+        })
     }
 }
 

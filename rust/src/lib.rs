@@ -12,6 +12,30 @@
 //! evaluated against (SoD, FITC, BCM), and the full evaluation harness
 //! reproducing the paper's tables and figures.
 //!
+//! ## Model lifecycle: spec → fit → artifact → serve
+//!
+//! Every algorithm is an interchangeable answer to the same `O(n³)`
+//! bottleneck, and the API treats it that way end to end:
+//!
+//! 1. **Spec** — a [`surrogate::SurrogateSpec`] names any algorithm at
+//!    one hyper-parameter setting (`MTCK:8`, `sod:512`, …) and is the
+//!    single fitting entry point: `spec.fit(&dataset, &opts)` returns a
+//!    `Box<dyn Surrogate>` for every variant.
+//! 2. **Fit** — the [`kriging::Surrogate`] trait is the common model
+//!    interface: batch `predict`, buffer-reusing `predict_into` (the
+//!    serving hot path), `dim`, and artifact `save`.
+//! 3. **Artifact** — `save` writes a versioned, checksummed binary
+//!    artifact ([`surrogate::artifact`]) containing *all* fitted state,
+//!    Cholesky factors included; [`surrogate::SurrogateSpec::load`]
+//!    restores it with bit-identical predictions in milliseconds of I/O
+//!    instead of a refit. [`surrogate::Standardized`] bundles the
+//!    training-fold standardizer so artifacts serve raw-unit queries.
+//! 4. **Serve** — the [`coordinator`] keeps named models in a
+//!    [`coordinator::ModelRegistry`] of atomically swappable slots behind
+//!    a micro-batching TCP server: `fit` writes an artifact, `serve`
+//!    boots from it, and protocol v2 (`predict`, `predictb`, `models`,
+//!    `load`, `swap`) hot-swaps models under live traffic.
+//!
 //! Architecture: a three-layer Rust + JAX + Pallas stack. The Rust layer
 //! (this crate) owns coordination — clustering, parallel fit, routing,
 //! weighting, serving; the dense Kriging algebra can be executed either by
@@ -24,6 +48,7 @@ pub mod kriging;
 pub mod clustering;
 pub mod cluster_kriging;
 pub mod baselines;
+pub mod surrogate;
 pub mod data;
 pub mod metrics;
 pub mod eval;

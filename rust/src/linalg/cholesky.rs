@@ -266,6 +266,18 @@ impl Cholesky {
         &self.l
     }
 
+    /// Reassemble a factor from its parts (artifact deserialization).
+    /// `l` must be the lower-triangular factor previously obtained from
+    /// [`Self::l`]; no refactorization is performed, so loading a model
+    /// is O(n²) I/O instead of O(n³) compute and the reconstructed solves
+    /// are bit-identical to the original's.
+    pub fn from_parts(l: Matrix, jitter: f64) -> Result<Self, CholeskyError> {
+        if l.rows() != l.cols() {
+            return Err(CholeskyError::NotSquare { rows: l.rows(), cols: l.cols() });
+        }
+        Ok(Self { l, jitter })
+    }
+
     pub fn jitter(&self) -> f64 {
         self.jitter
     }

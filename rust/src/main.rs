@@ -7,16 +7,16 @@
 //!   info        show PJRT platform + discovered artifacts
 
 use anyhow::{bail, Context, Result};
-use cluster_kriging::cluster_kriging::{builder, ClusterKriging};
-use cluster_kriging::coordinator::{BatcherConfig, Server, ServerConfig};
+use cluster_kriging::coordinator::{BatcherConfig, ModelRegistry, Server, ServerConfig};
 use cluster_kriging::data::functions;
 use cluster_kriging::data::synthetic::from_benchmark;
-use cluster_kriging::data::{uci_like, Dataset};
+use cluster_kriging::data::{uci_like, Dataset, Standardizer};
 use cluster_kriging::eval::experiments::{run_all, ExperimentConfig};
 use cluster_kriging::eval::report::{self, PaperTable};
 use cluster_kriging::eval::HarnessConfig;
 use cluster_kriging::kriging::{HyperOpt, Surrogate};
 use cluster_kriging::metrics;
+use cluster_kriging::surrogate::{self, FitOptions, Standardized, SurrogateSpec};
 use cluster_kriging::util::cli::Args;
 use std::sync::Arc;
 
@@ -53,9 +53,16 @@ fn print_usage() {
          \n\
          experiment --table 1|2|3 | --figure 2 [--paper-scale] [--folds N]\n\
          \u{20}          [--datasets a,b] [--algos SoD,MTCK] [--out results/]\n\
-         fit        --dataset <name> --flavor OWCK|OWFCK|GMMCK|MTCK --k K [--seed S]\n\
-         serve      --dataset <name> --flavor F --k K [--addr host:port]\n\
+         fit        --dataset <name> --algo SPEC [--seed S] [--n N] [--out model.ck]\n\
+         \u{20}          (or legacy --flavor OWCK|OWFCK|GMMCK|MTCK --k K)\n\
+         serve      --artifact model.ck [--name SLOT] [--addr host:port]\n\
+         \u{20}          (or fit-then-serve: --dataset <name> --algo SPEC)\n\
          info       [--artifacts DIR]\n\
+         \n\
+         SPEC names any algorithm: mtck:8 owck:4 sod:512 fitc:64 bcm:8\n\
+         \u{20}    bcm-sh:8 kriging — `fit --out` writes a binary artifact that\n\
+         \u{20}    `serve --artifact` boots in milliseconds (no refit); the live\n\
+         \u{20}    server hot-swaps models via `load <path> [name]` + `swap <name>`.\n\
          \n\
          datasets: concrete ccpp sarcos ackley schaffer schwefel rast h1\n\
          \u{20}         rosenbrock himmelblau diffpow"
@@ -137,108 +144,113 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn fit_flavor(
-    ds: &Dataset,
-    flavor: &str,
-    k: usize,
-    seed: u64,
-) -> Result<(StandardizedModel, Dataset)> {
+/// Resolve the algorithm spec from `--algo SPEC` (preferred) or the
+/// legacy `--flavor F --k K` pair.
+fn resolve_spec(args: &Args, default_spec: &str) -> Result<SurrogateSpec> {
+    if let Some(spec) = args.get("algo") {
+        return SurrogateSpec::parse(spec);
+    }
+    if let Some(flavor) = args.get("flavor") {
+        let k: usize = args.get_parsed_or("k", 4)?;
+        return SurrogateSpec::parse(&format!("{flavor}:{k}"));
+    }
+    SurrogateSpec::parse(default_spec)
+}
+
+/// Fit a spec on a dataset's 80% training fold through the one shared
+/// `SurrogateSpec::fit` path, wrapped with the fold's standardizer so the
+/// model (and its artifact) serves raw-unit queries. Returns the holdout
+/// fold alongside.
+fn fit_spec(ds: &Dataset, spec: &SurrogateSpec, seed: u64) -> Result<(Standardized, Dataset)> {
     let (train, test) = ds.split(0.8, seed);
     // Standardize on the training fold (as the evaluation harness does) —
     // the θ search bounds assume unit-scale inputs.
-    let std = cluster_kriging::data::Standardizer::fit(&train);
+    let std = Standardizer::fit(&train);
     let tr = std.transform(&train);
-    let opt = HyperOpt {
-        restarts: 1,
-        max_evals: 20,
-        isotropic: tr.d() > 8,
-        ..HyperOpt::default()
+    let opts = FitOptions {
+        hyperopt: HyperOpt {
+            restarts: 1,
+            max_evals: 20,
+            isotropic: tr.d() > 8,
+            ..HyperOpt::default()
+        },
+        seed,
     };
-    let flavor_static = builder::FLAVORS
-        .iter()
-        .find(|f| **f == flavor)
-        .with_context(|| format!("unknown flavor {flavor:?} (expected {:?})", builder::FLAVORS))?;
-    let cfg = builder::flavor(flavor_static, k, seed, opt)?;
-    let model = ClusterKriging::fit(&tr.x, &tr.y, cfg)?;
-    Ok((StandardizedModel { inner: model, std }, test))
-}
-
-/// A fitted model plus the train-fold standardizer; predictions are
-/// mapped back to the original target scale.
-struct StandardizedModel {
-    inner: ClusterKriging,
-    std: cluster_kriging::data::Standardizer,
-}
-
-impl StandardizedModel {
-    fn name(&self) -> &str {
-        self.inner.name()
-    }
-
-    fn cluster_sizes(&self) -> &[usize] {
-        &self.inner.cluster_sizes
-    }
-}
-
-impl Surrogate for StandardizedModel {
-    fn predict(&self, xt: &cluster_kriging::util::Matrix) -> Result<cluster_kriging::kriging::Prediction> {
-        // Standardize features, predict, de-standardize outputs.
-        let ds = Dataset::new("query", xt.clone(), vec![0.0; xt.rows()]);
-        let t = self.std.transform(&ds);
-        let pred = self.inner.predict(&t.x)?;
-        Ok(cluster_kriging::kriging::Prediction {
-            mean: pred.mean.iter().map(|&v| self.std.inverse_y(v)).collect(),
-            variance: pred.variance.iter().map(|&v| self.std.inverse_var(v)).collect(),
-        })
-    }
-
-    fn name(&self) -> &str {
-        self.inner.name()
-    }
+    let model = spec.fit(&tr, &opts)?;
+    Ok((Standardized::new(model, std), test))
 }
 
 fn cmd_fit(args: &Args) -> Result<()> {
     let dataset: String = args.require("dataset")?;
-    let flavor: String = args.require("flavor")?;
-    let k: usize = args.get_parsed_or("k", 4)?;
     let seed: u64 = args.get_parsed_or("seed", 1)?;
     let n: Option<usize> = args.get_parsed_or("n", 0).ok().filter(|&n| n > 0);
+    let spec = resolve_spec(args, "mtck:4")?;
 
     let ds = load_dataset(&dataset, seed, n)?;
-    eprintln!("dataset {} ({}×{}), flavor {flavor}, k={k}", ds.name, ds.n(), ds.d());
+    eprintln!("dataset {} ({}×{}), algo {spec}", ds.name, ds.n(), ds.d());
     let t0 = std::time::Instant::now();
-    let (model, test) = fit_flavor(&ds, &flavor, k, seed)?;
+    let (model, test) = fit_spec(&ds, &spec, seed)?;
     let fit_s = t0.elapsed().as_secs_f64();
     let t1 = std::time::Instant::now();
     let pred = model.predict(&test.x)?;
     let pred_s = t1.elapsed().as_secs_f64();
 
-    println!("flavor      : {}", model.name());
-    println!("clusters    : {:?}", model.cluster_sizes());
+    println!("algo        : {} ({spec})", model.name());
     println!("fit_seconds : {fit_s:.3}");
     println!("pred_seconds: {pred_s:.3}");
     println!("R2          : {:.4}", metrics::r2(&test.y, &pred.mean));
     println!("SMSE        : {:.4}", metrics::smse(&test.y, &pred.mean));
+
+    if let Some(out) = args.get("out") {
+        let t2 = std::time::Instant::now();
+        let bytes = surrogate::save_to_path(&model, out)?;
+        println!(
+            "artifact    : {out} ({bytes} bytes, written in {:.3}s)",
+            t2.elapsed().as_secs_f64()
+        );
+        println!("serve it    : ckrig serve --artifact {out}");
+    }
     Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let dataset: String = args.require("dataset")?;
-    let flavor: String = args.get_or("flavor", "MTCK").to_string();
-    let k: usize = args.get_parsed_or("k", 4)?;
-    let seed: u64 = args.get_parsed_or("seed", 1)?;
     let addr = args.get_or("addr", "127.0.0.1:7471").to_string();
-    let n: Option<usize> = args.get_parsed_or("n", 0).ok().filter(|&n| n > 0);
+    let name = args.get_or("name", "default").to_string();
 
-    let ds = load_dataset(&dataset, seed, n)?;
-    let dim = ds.d();
-    eprintln!("fitting {flavor} (k={k}) on {} ({}×{dim})…", ds.name, ds.n());
-    let (model, _) = fit_flavor(&ds, &flavor, k, seed)?;
-    let model: Arc<dyn Surrogate> = Arc::new(model);
-    let server =
-        Server::start(model, ServerConfig { addr, batcher: BatcherConfig::default(), dim })?;
+    let model: Arc<dyn Surrogate> = if let Some(artifact) = args.get("artifact") {
+        // Millisecond cold boot: load the fitted model, no refit.
+        let t0 = std::time::Instant::now();
+        let model = SurrogateSpec::load_path(artifact)?;
+        eprintln!(
+            "loaded {} ({} dims) from {artifact} in {:.1} ms",
+            model.name(),
+            model.dim(),
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+        Arc::from(model)
+    } else {
+        let dataset: String = args.require("dataset").context(
+            "serve needs --artifact model.ck (preferred) or --dataset to fit-then-serve",
+        )?;
+        let seed: u64 = args.get_parsed_or("seed", 1)?;
+        let n: Option<usize> = args.get_parsed_or("n", 0).ok().filter(|&v| v > 0);
+        let spec = resolve_spec(args, "mtck:4")?;
+        let ds = load_dataset(&dataset, seed, n)?;
+        eprintln!("fitting {spec} on {} ({}×{})…", ds.name, ds.n(), ds.d());
+        let (model, _) = fit_spec(&ds, &spec, seed)?;
+        Arc::new(model)
+    };
+
+    let dim = model.dim();
+    let registry = Arc::new(ModelRegistry::new(name, model));
+    let server = Server::start(
+        registry,
+        ServerConfig { addr, batcher: BatcherConfig::default() },
+    )?;
     println!(
-        "serving on {} — protocol: `predict x1,...,x{dim}` | `stats` | `ping`",
+        "serving on {} — protocol: `predict [model] x1,...,x{dim}` | \
+         `predictb [model] <n> <p1;p2;...>` | `models` | `load <path> [name]` | \
+         `swap <name>` | `stats` | `ping`",
         server.local_addr
     );
     loop {

@@ -1,0 +1,160 @@
+//! Versioned binary artifact container for fitted surrogate models.
+//!
+//! Layout (all little-endian):
+//!
+//! ```text
+//! magic   4 B   b"CKRG"
+//! version 4 B   u32 (currently 1)
+//! tag     1 B   model type (TAG_* constants)
+//! length  8 B   payload byte count
+//! check   8 B   FNV-1a 64 of the payload
+//! payload …     model-specific (see each model's write_artifact)
+//! ```
+//!
+//! The checksum + the bounds-checked [`crate::util::binio::BinReader`]
+//! turn truncation and bit corruption into recoverable errors, never
+//! panics or garbage models. The payload encoding is owned by each model
+//! type; this module only owns the container, so new model types cost one
+//! tag constant and one dispatch arm in
+//! [`crate::surrogate::SurrogateSpec::load`].
+
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+
+pub const MAGIC: [u8; 4] = *b"CKRG";
+pub const VERSION: u32 = 1;
+
+/// Model-type tags (one per `Surrogate` implementation that persists).
+pub const TAG_KRIGING: u8 = 1;
+pub const TAG_SOD: u8 = 2;
+pub const TAG_FITC: u8 = 3;
+pub const TAG_BCM: u8 = 4;
+pub const TAG_CLUSTER_KRIGING: u8 = 5;
+pub const TAG_STANDARDIZED: u8 = 6;
+
+/// Human-readable artifact kind for a tag (diagnostics, `models` replies).
+pub fn tag_name(tag: u8) -> &'static str {
+    match tag {
+        TAG_KRIGING => "Kriging",
+        TAG_SOD => "SoD",
+        TAG_FITC => "FITC",
+        TAG_BCM => "BCM",
+        TAG_CLUSTER_KRIGING => "ClusterKriging",
+        TAG_STANDARDIZED => "Standardized",
+        _ => "unknown",
+    }
+}
+
+/// 64-bit FNV-1a — tiny, dependency-free corruption detector. Not a
+/// cryptographic integrity guarantee; it catches the truncations and bit
+/// flips that matter for on-disk model artifacts.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut hash: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(0x100_0000_01b3);
+    }
+    hash
+}
+
+/// Frame a model payload with the versioned, checksummed header.
+pub fn write_model(w: &mut dyn Write, tag: u8, payload: &[u8]) -> Result<()> {
+    w.write_all(&MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&[tag])?;
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(&fnv1a(payload).to_le_bytes())?;
+    w.write_all(payload)?;
+    Ok(())
+}
+
+/// Read one framed model: returns `(tag, payload)` after validating the
+/// magic, version, length and checksum.
+pub fn read_model(r: &mut dyn Read) -> Result<(u8, Vec<u8>)> {
+    let mut head = [0u8; 25];
+    r.read_exact(&mut head).context("artifact truncated: incomplete header")?;
+    ensure!(head[..4] == MAGIC, "not a surrogate artifact (bad magic)");
+    let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
+    ensure!(
+        version == VERSION,
+        "unsupported artifact version {version} (this build reads {VERSION})"
+    );
+    let tag = head[8];
+    let len = u64::from_le_bytes(head[9..17].try_into().unwrap());
+    let checksum = u64::from_le_bytes(head[17..25].try_into().unwrap());
+    let len = usize::try_from(len).context("artifact payload length overflows usize")?;
+    // Incremental read so a corrupted length fails with "truncated"
+    // instead of a giant up-front allocation.
+    let mut payload = Vec::new();
+    let copied = r
+        .take(len as u64)
+        .read_to_end(&mut payload)
+        .context("artifact unreadable: payload")?;
+    if copied < len {
+        bail!("artifact truncated: payload has {copied} of {len} bytes");
+    }
+    ensure!(
+        fnv1a(&payload) == checksum,
+        "artifact corrupted: payload checksum mismatch"
+    );
+    Ok((tag, payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let payload = b"model bytes".to_vec();
+        let mut buf = Vec::new();
+        write_model(&mut buf, TAG_SOD, &payload).unwrap();
+        let (tag, back) = read_model(&mut buf.as_slice()).unwrap();
+        assert_eq!(tag, TAG_SOD);
+        assert_eq!(back, payload);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut buf = Vec::new();
+        write_model(&mut buf, TAG_KRIGING, b"x").unwrap();
+        buf[0] = b'X';
+        let err = read_model(&mut buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let mut buf = Vec::new();
+        write_model(&mut buf, TAG_KRIGING, &[7u8; 64]).unwrap();
+        for cut in [3, 12, 24, buf.len() - 1] {
+            let err = read_model(&mut &buf[..cut]).unwrap_err();
+            assert!(err.to_string().contains("truncated"), "cut {cut}: {err}");
+        }
+    }
+
+    #[test]
+    fn bit_flip_rejected() {
+        let mut buf = Vec::new();
+        write_model(&mut buf, TAG_BCM, &[0u8; 32]).unwrap();
+        let last = buf.len() - 1;
+        buf[last] ^= 0x40;
+        let err = read_model(&mut buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn future_version_rejected() {
+        let mut buf = Vec::new();
+        write_model(&mut buf, TAG_FITC, b"p").unwrap();
+        buf[4..8].copy_from_slice(&99u32.to_le_bytes());
+        assert!(read_model(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn fnv_vectors() {
+        // Known FNV-1a 64 test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

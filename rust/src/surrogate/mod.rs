@@ -1,0 +1,26 @@
+//! Unified surrogate model lifecycle: **spec → fit → artifact → serve**.
+//!
+//! [`SurrogateSpec`] names any algorithm in the crate (the paper's four
+//! Cluster Kriging flavors, the SoD/FITC/BCM baselines, full Kriging) at
+//! one hyper-parameter setting, and is the *single* fitting entry point:
+//! [`SurrogateSpec::fit`] returns a `Box<dyn Surrogate>` for every
+//! variant, replacing the per-algorithm `fit` signatures that used to be
+//! hand-dispatched by the evaluation harness, the CLI and the examples.
+//!
+//! A fitted model persists itself with [`crate::kriging::Surrogate::save`]
+//! into the versioned binary [`artifact`] format (hand-rolled — the crate
+//! is deliberately serde-free) and comes back with
+//! [`SurrogateSpec::load`]: all fitted state including Cholesky factors
+//! is stored, so loading is I/O-bound and the loaded model predicts
+//! bit-identically to the fitted one. [`Standardized`] wraps any model
+//! with its training-fold [`crate::data::Standardizer`] so artifacts are
+//! self-contained in original feature/target units — which is what the
+//! serving coordinator ([`crate::coordinator::ModelRegistry`]) loads and
+//! hot-swaps.
+
+pub mod artifact;
+pub mod spec;
+pub mod standardized;
+
+pub use spec::{save_to_path, FitOptions, SurrogateSpec};
+pub use standardized::Standardized;

@@ -1,0 +1,280 @@
+//! [`SurrogateSpec`]: one name for every algorithm × hyper-parameter
+//! setting, with the single `fit` factory and the artifact `load` entry
+//! point. This is the promoted, first-class form of what used to be
+//! `eval::AlgoSpec` — the evaluation harness now re-exports this type and
+//! calls [`SurrogateSpec::fit`] instead of hand-dispatching five
+//! incompatible per-algorithm `fit` signatures.
+
+use crate::baselines::{Bcm, BcmConfig, BcmMode, Fitc, FitcConfig, SubsetOfData};
+use crate::cluster_kriging::{builder, ClusterKriging};
+use crate::data::Dataset;
+use crate::kriging::{HyperOpt, Surrogate};
+use crate::surrogate::artifact;
+use crate::surrogate::standardized::Standardized;
+use crate::util::binio::BinReader;
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+/// One algorithm at one hyper-parameter value.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SurrogateSpec {
+    /// Subset of Data with `m` points.
+    Sod { m: usize },
+    /// FITC with `m` inducing points.
+    Fitc { m: usize },
+    /// BCM with `k` modules.
+    Bcm { k: usize, shared: bool },
+    /// A Cluster Kriging flavor ("OWCK"/"OWFCK"/"GMMCK"/"MTCK"/"RANDOM-CK")
+    /// with `k` clusters.
+    ClusterKriging { flavor: String, k: usize },
+    /// Full (unapproximated) Ordinary Kriging — the reference the
+    /// approximations are trying to match.
+    FullKriging,
+}
+
+/// Fit-wide settings shared by every [`SurrogateSpec`] variant.
+#[derive(Debug, Clone)]
+pub struct FitOptions {
+    /// Hyper-parameter search settings (per cluster/module where the
+    /// algorithm has several).
+    pub hyperopt: HyperOpt,
+    pub seed: u64,
+}
+
+impl Default for FitOptions {
+    fn default() -> Self {
+        Self { hyperopt: HyperOpt::default(), seed: 0xE7A1 }
+    }
+}
+
+impl FitOptions {
+    /// Budget preset for quick runs (CI / examples / CLI defaults).
+    pub fn fast() -> Self {
+        Self {
+            hyperopt: HyperOpt {
+                restarts: 1,
+                max_evals: 15,
+                isotropic: true,
+                ..HyperOpt::default()
+            },
+            ..Self::default()
+        }
+    }
+}
+
+impl SurrogateSpec {
+    /// Display name matching the paper's tables.
+    pub fn name(&self) -> String {
+        match self {
+            SurrogateSpec::Sod { .. } => "SoD".into(),
+            SurrogateSpec::Fitc { .. } => "FITC".into(),
+            SurrogateSpec::Bcm { shared: true, .. } => "BCM sh.".into(),
+            SurrogateSpec::Bcm { shared: false, .. } => "BCM".into(),
+            SurrogateSpec::ClusterKriging { flavor, .. } => flavor.clone(),
+            SurrogateSpec::FullKriging => "Kriging".into(),
+        }
+    }
+
+    /// The hyper-parameter value (sample size / inducing points / cluster
+    /// count) — the x-axis knob of paper §VI-A.
+    pub fn knob(&self) -> usize {
+        match self {
+            SurrogateSpec::Sod { m } | SurrogateSpec::Fitc { m } => *m,
+            SurrogateSpec::Bcm { k, .. } | SurrogateSpec::ClusterKriging { k, .. } => *k,
+            SurrogateSpec::FullKriging => 1,
+        }
+    }
+
+    /// Parse the CLI/text form produced by [`std::fmt::Display`]:
+    /// `sod:64`, `fitc:24`, `bcm:8`, `bcm-sh:8`, `owck:4` (any flavor
+    /// name, case-insensitive), or `kriging`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let (head, knob) = match s.split_once(':') {
+            Some((h, k)) => {
+                let knob: usize = k
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("bad knob value {k:?} in spec {s:?}"))?;
+                (h.trim(), Some(knob))
+            }
+            None => (s.trim(), None),
+        };
+        let need = |what: &str| {
+            knob.with_context(|| format!("spec {s:?} needs a {what}, e.g. {head}:8"))
+        };
+        let lower = head.to_ascii_lowercase();
+        Ok(match lower.as_str() {
+            "sod" => SurrogateSpec::Sod { m: need("subset size")? },
+            "fitc" => SurrogateSpec::Fitc { m: need("inducing point count")? },
+            "bcm" => SurrogateSpec::Bcm { k: need("module count")?, shared: false },
+            "bcm-sh" | "bcm-shared" => {
+                SurrogateSpec::Bcm { k: need("module count")?, shared: true }
+            }
+            "kriging" | "gp" => SurrogateSpec::FullKriging,
+            _ => {
+                let upper = head.to_ascii_uppercase();
+                let flavor = builder::FLAVORS
+                    .iter()
+                    .find(|f| **f == upper)
+                    .with_context(|| {
+                        format!(
+                            "unknown algorithm {head:?} (expected sod/fitc/bcm/bcm-sh/\
+                             kriging or a flavor in {:?})",
+                            builder::FLAVORS
+                        )
+                    })?;
+                SurrogateSpec::ClusterKriging {
+                    flavor: (*flavor).to_string(),
+                    k: need("cluster count")?,
+                }
+            }
+        })
+    }
+
+    /// Fit this spec on a dataset — the one code path every algorithm
+    /// shares. Inputs are used as-is; standardize first (and wrap with
+    /// [`Standardized`]) when the model must serve raw-unit queries.
+    pub fn fit(&self, ds: &Dataset, opts: &FitOptions) -> Result<Box<dyn Surrogate>> {
+        Ok(match self {
+            SurrogateSpec::Sod { m } => Box::new(SubsetOfData::fit(
+                &ds.x,
+                &ds.y,
+                *m,
+                opts.seed,
+                &opts.hyperopt,
+            )?),
+            SurrogateSpec::Fitc { m } => {
+                let fc = FitcConfig { seed: opts.seed, ..FitcConfig::new(*m) };
+                Box::new(Fitc::fit(&ds.x, &ds.y, &fc)?)
+            }
+            SurrogateSpec::Bcm { k, shared } => {
+                let mode = if *shared { BcmMode::Shared } else { BcmMode::Individual };
+                let bc = BcmConfig {
+                    hyperopt: opts.hyperopt.clone(),
+                    seed: opts.seed,
+                    ..BcmConfig::new(*k, mode)
+                };
+                Box::new(Bcm::fit(&ds.x, &ds.y, &bc)?)
+            }
+            SurrogateSpec::ClusterKriging { flavor, k } => {
+                let cfg = builder::flavor(flavor, *k, opts.seed, opts.hyperopt.clone())?;
+                Box::new(ClusterKriging::fit(&ds.x, &ds.y, cfg)?)
+            }
+            SurrogateSpec::FullKriging => {
+                Box::new(opts.hyperopt.fit(ds.x.clone(), &ds.y)?)
+            }
+        })
+    }
+
+    /// Load any fitted model back from its artifact (see
+    /// [`crate::surrogate::artifact`] for the container format). The
+    /// concrete type is recovered from the artifact tag; the returned
+    /// model predicts bit-identically to the one that was saved.
+    pub fn load(mut r: impl Read) -> Result<Box<dyn Surrogate>> {
+        let (tag, payload) = artifact::read_model(&mut r)?;
+        read_boxed(tag, &mut BinReader::new(&payload))
+    }
+
+    /// [`Self::load`] from a file path.
+    pub fn load_path(path: impl AsRef<Path>) -> Result<Box<dyn Surrogate>> {
+        let path = path.as_ref();
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("opening artifact {}", path.display()))?;
+        Self::load(std::io::BufReader::new(file))
+            .with_context(|| format!("loading artifact {}", path.display()))
+    }
+}
+
+impl std::fmt::Display for SurrogateSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SurrogateSpec::Sod { m } => write!(f, "sod:{m}"),
+            SurrogateSpec::Fitc { m } => write!(f, "fitc:{m}"),
+            SurrogateSpec::Bcm { k, shared: true } => write!(f, "bcm-sh:{k}"),
+            SurrogateSpec::Bcm { k, shared: false } => write!(f, "bcm:{k}"),
+            SurrogateSpec::ClusterKriging { flavor, k } => {
+                write!(f, "{}:{k}", flavor.to_ascii_lowercase())
+            }
+            SurrogateSpec::FullKriging => write!(f, "kriging"),
+        }
+    }
+}
+
+/// Tag-dispatched payload decoding shared by top-level artifacts and the
+/// [`Standardized`] wrapper's nested model.
+pub(crate) fn read_boxed(tag: u8, r: &mut BinReader<'_>) -> Result<Box<dyn Surrogate>> {
+    Ok(match tag {
+        artifact::TAG_KRIGING => Box::new(crate::kriging::OrdinaryKriging::read_artifact(r)?),
+        artifact::TAG_SOD => Box::new(SubsetOfData::read_artifact(r)?),
+        artifact::TAG_FITC => Box::new(Fitc::read_artifact(r)?),
+        artifact::TAG_BCM => Box::new(Bcm::read_artifact(r)?),
+        artifact::TAG_CLUSTER_KRIGING => Box::new(ClusterKriging::read_artifact(r)?),
+        artifact::TAG_STANDARDIZED => Box::new(Standardized::read_artifact(r)?),
+        other => bail!("unknown artifact model tag {other}"),
+    })
+}
+
+/// Save any surrogate to a file, returning the artifact size in bytes.
+pub fn save_to_path(model: &dyn Surrogate, path: impl AsRef<Path>) -> Result<u64> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating artifact {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(file);
+    model
+        .save(&mut w)
+        .with_context(|| format!("serializing {} to {}", model.name(), path.display()))?;
+    use std::io::Write as _;
+    w.flush()?;
+    Ok(std::fs::metadata(path)?.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_display_roundtrip() {
+        for spec in [
+            SurrogateSpec::Sod { m: 64 },
+            SurrogateSpec::Fitc { m: 24 },
+            SurrogateSpec::Bcm { k: 4, shared: false },
+            SurrogateSpec::Bcm { k: 4, shared: true },
+            SurrogateSpec::ClusterKriging { flavor: "OWCK".into(), k: 8 },
+            SurrogateSpec::ClusterKriging { flavor: "RANDOM-CK".into(), k: 2 },
+            SurrogateSpec::FullKriging,
+        ] {
+            let text = spec.to_string();
+            assert_eq!(SurrogateSpec::parse(&text).unwrap(), spec, "via {text:?}");
+        }
+    }
+
+    #[test]
+    fn parse_is_case_insensitive_and_validates() {
+        assert_eq!(
+            SurrogateSpec::parse("MTCK:4").unwrap(),
+            SurrogateSpec::ClusterKriging { flavor: "MTCK".into(), k: 4 }
+        );
+        assert_eq!(SurrogateSpec::parse("Kriging").unwrap(), SurrogateSpec::FullKriging);
+        assert!(SurrogateSpec::parse("sod").is_err(), "missing knob");
+        assert!(SurrogateSpec::parse("sod:abc").is_err());
+        assert!(SurrogateSpec::parse("bogus:3").is_err());
+    }
+
+    #[test]
+    fn names_match_paper_labels() {
+        assert_eq!(SurrogateSpec::Sod { m: 1 }.name(), "SoD");
+        assert_eq!(SurrogateSpec::Bcm { k: 2, shared: true }.name(), "BCM sh.");
+        assert_eq!(SurrogateSpec::Bcm { k: 2, shared: false }.name(), "BCM");
+        assert_eq!(
+            SurrogateSpec::ClusterKriging { flavor: "MTCK".into(), k: 4 }.name(),
+            "MTCK"
+        );
+    }
+}

@@ -1,0 +1,118 @@
+//! [`Standardized`]: a surrogate plus its training-fold standardizer.
+//!
+//! Every fitting path in this crate standardizes features and targets on
+//! the training fold (the θ search bounds assume unit-scale inputs), so a
+//! bare fitted model answers queries in *standardized* units. Wrapping it
+//! here makes the model — and, crucially, its on-disk artifact —
+//! self-contained: the server loads one file and serves raw-unit queries
+//! with raw-unit posteriors, no side-channel scaling state.
+
+use crate::data::Standardizer;
+use crate::kriging::{Prediction, Surrogate};
+use crate::surrogate::artifact;
+use crate::util::binio::{BinReader, BinWriter};
+use crate::util::matrix::Matrix;
+use anyhow::Result;
+
+/// A fitted model plus the standardizer it was trained under; predictions
+/// are mapped back to the original target scale.
+pub struct Standardized {
+    inner: Box<dyn Surrogate>,
+    std: Standardizer,
+}
+
+impl Standardized {
+    pub fn new(inner: Box<dyn Surrogate>, std: Standardizer) -> Self {
+        Self { inner, std }
+    }
+
+    /// The wrapped model.
+    pub fn inner(&self) -> &dyn Surrogate {
+        self.inner.as_ref()
+    }
+
+    pub fn standardizer(&self) -> &Standardizer {
+        &self.std
+    }
+
+    /// Standardize query features only — one output matrix, no Dataset /
+    /// target-vector detour (this sits on the serving hot path).
+    fn transform_x(&self, xt: &Matrix) -> Matrix {
+        let (n, d) = xt.shape();
+        let mut out = Matrix::zeros(n, d);
+        for i in 0..n {
+            let src = xt.row(i);
+            let dst = out.row_mut(i);
+            for j in 0..d {
+                dst[j] = (src[j] - self.std.x_mean[j]) / self.std.x_std[j];
+            }
+        }
+        out
+    }
+
+    pub(crate) fn write_artifact(&self, w: &mut BinWriter) -> Result<()> {
+        w.put_f64_slice(&self.std.x_mean);
+        w.put_f64_slice(&self.std.x_std);
+        w.put_f64(self.std.y_mean);
+        w.put_f64(self.std.y_std);
+        // The inner model nests as a complete framed artifact, so its own
+        // checksum and version travel with it.
+        let mut nested = Vec::new();
+        self.inner.save(&mut nested)?;
+        w.put_bytes(&nested);
+        Ok(())
+    }
+
+    pub(crate) fn read_artifact(r: &mut BinReader<'_>) -> Result<Self> {
+        let x_mean = r.get_f64_vec()?;
+        let x_std = r.get_f64_vec()?;
+        let y_mean = r.get_f64()?;
+        let y_std = r.get_f64()?;
+        anyhow::ensure!(
+            x_mean.len() == x_std.len() && !x_mean.is_empty(),
+            "standardizer shape mismatch in artifact"
+        );
+        let nested = r.get_bytes()?;
+        let inner = crate::surrogate::SurrogateSpec::load(nested)?;
+        anyhow::ensure!(
+            inner.dim() == x_mean.len(),
+            "standardizer/model dimension mismatch in artifact"
+        );
+        Ok(Self { inner, std: Standardizer { x_mean, x_std, y_mean, y_std } })
+    }
+}
+
+impl Surrogate for Standardized {
+    fn predict(&self, xt: &Matrix) -> Result<Prediction> {
+        let pred = self.inner.predict(&self.transform_x(xt))?;
+        Ok(Prediction {
+            mean: pred.mean.iter().map(|&v| self.std.inverse_y(v)).collect(),
+            variance: pred.variance.iter().map(|&v| self.std.inverse_var(v)).collect(),
+        })
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn predict_into(&self, xt: &Matrix, mean: &mut [f64], variance: &mut [f64]) -> Result<()> {
+        self.inner.predict_into(&self.transform_x(xt), mean, variance)?;
+        for v in mean.iter_mut() {
+            *v = self.std.inverse_y(*v);
+        }
+        for v in variance.iter_mut() {
+            *v = self.std.inverse_var(*v);
+        }
+        Ok(())
+    }
+
+    fn save(&self, w: &mut dyn std::io::Write) -> Result<()> {
+        let mut payload = BinWriter::new();
+        self.write_artifact(&mut payload)?;
+        artifact::write_model(w, artifact::TAG_STANDARDIZED, &payload.into_bytes())
+    }
+}

@@ -1,0 +1,278 @@
+//! Little-endian binary encode/decode primitives for model artifacts.
+//!
+//! The crate is deliberately serde-free (fully offline build), so the
+//! artifact format (see [`crate::surrogate::artifact`]) is hand-rolled on
+//! top of these two types: [`BinWriter`] appends length-prefixed scalars,
+//! strings, slices and matrices to an in-memory buffer; [`BinReader`]
+//! replays them with bounds checking, so a truncated or corrupted payload
+//! surfaces as a recoverable error instead of a panic or a wild
+//! allocation.
+
+use crate::util::matrix::Matrix;
+use anyhow::{bail, ensure, Context, Result};
+
+/// Append-only little-endian encoder over a growable buffer.
+#[derive(Debug, Default)]
+pub struct BinWriter {
+    buf: Vec<u8>,
+}
+
+impl BinWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Length-prefixed raw bytes.
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.put_usize(b.len());
+        self.buf.extend_from_slice(b);
+    }
+
+    /// Length-prefixed f64 slice.
+    pub fn put_f64_slice(&mut self, s: &[f64]) {
+        self.put_usize(s.len());
+        for &v in s {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed usize slice (stored as u64).
+    pub fn put_usize_slice(&mut self, s: &[usize]) {
+        self.put_usize(s.len());
+        for &v in s {
+            self.put_u64(v as u64);
+        }
+    }
+
+    /// Shape-prefixed dense matrix (rows, cols, row-major data).
+    pub fn put_matrix(&mut self, m: &Matrix) {
+        self.put_usize(m.rows());
+        self.put_usize(m.cols());
+        for &v in m.as_slice() {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Bounds-checked little-endian decoder over a byte slice.
+#[derive(Debug)]
+pub struct BinReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BinReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            n <= self.remaining(),
+            "artifact truncated: wanted {n} bytes, {} left",
+            self.remaining()
+        );
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_bool(&mut self) -> Result<bool> {
+        match self.get_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => bail!("artifact corrupted: bool byte {other}"),
+        }
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_usize(&mut self) -> Result<usize> {
+        let v = self.get_u64()?;
+        usize::try_from(v).with_context(|| format!("length {v} overflows usize"))
+    }
+
+    /// A length that must still fit in the remaining payload when each
+    /// element occupies `elem_size` bytes — rejects corrupted lengths
+    /// before they turn into multi-gigabyte allocations.
+    fn get_len(&mut self, elem_size: usize) -> Result<usize> {
+        let n = self.get_usize()?;
+        ensure!(
+            n.checked_mul(elem_size).is_some_and(|b| b <= self.remaining()),
+            "artifact corrupted: length {n} exceeds remaining {} bytes",
+            self.remaining()
+        );
+        Ok(n)
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_str(&mut self) -> Result<String> {
+        let n = self.get_len(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).context("artifact corrupted: non-UTF-8 string")
+    }
+
+    pub fn get_bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.get_len(1)?;
+        self.take(n)
+    }
+
+    pub fn get_f64_vec(&mut self) -> Result<Vec<f64>> {
+        let n = self.get_len(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_f64()?);
+        }
+        Ok(out)
+    }
+
+    pub fn get_usize_vec(&mut self) -> Result<Vec<usize>> {
+        let n = self.get_len(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_usize()?);
+        }
+        Ok(out)
+    }
+
+    pub fn get_matrix(&mut self) -> Result<Matrix> {
+        let rows = self.get_usize()?;
+        let cols = self.get_usize()?;
+        let total = rows
+            .checked_mul(cols)
+            .filter(|t| t.checked_mul(8).is_some_and(|b| b <= self.remaining()))
+            .with_context(|| {
+                format!("artifact corrupted: matrix {rows}x{cols} exceeds payload")
+            })?;
+        let mut data = Vec::with_capacity(total);
+        for _ in 0..total {
+            data.push(self.get_f64()?);
+        }
+        Ok(Matrix::from_vec(rows, cols, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut w = BinWriter::new();
+        w.put_u8(7);
+        w.put_bool(true);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 3);
+        w.put_f64(-1.25e-300);
+        w.put_str("θ kernel");
+        let bytes = w.into_bytes();
+        let mut r = BinReader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert!(r.get_bool().unwrap());
+        assert_eq!(r.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.get_f64().unwrap().to_bits(), (-1.25e-300f64).to_bits());
+        assert_eq!(r.get_str().unwrap(), "θ kernel");
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn slice_and_matrix_roundtrip() {
+        let m = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, f64::MIN_POSITIVE]]);
+        let mut w = BinWriter::new();
+        w.put_f64_slice(&[0.5, -0.5]);
+        w.put_usize_slice(&[3, 1, 4]);
+        w.put_matrix(&m);
+        w.put_bytes(b"tail");
+        let bytes = w.into_bytes();
+        let mut r = BinReader::new(&bytes);
+        assert_eq!(r.get_f64_vec().unwrap(), vec![0.5, -0.5]);
+        assert_eq!(r.get_usize_vec().unwrap(), vec![3, 1, 4]);
+        let back = r.get_matrix().unwrap();
+        assert_eq!(back.shape(), (2, 2));
+        assert_eq!(back.as_slice(), m.as_slice());
+        assert_eq!(r.get_bytes().unwrap(), b"tail");
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut w = BinWriter::new();
+        w.put_f64_slice(&[1.0, 2.0, 3.0]);
+        let bytes = w.into_bytes();
+        // Chop the buffer mid-slice: the declared length no longer fits.
+        let mut r = BinReader::new(&bytes[..bytes.len() - 9]);
+        assert!(r.get_f64_vec().is_err());
+    }
+
+    #[test]
+    fn absurd_length_rejected_before_allocation() {
+        let mut w = BinWriter::new();
+        w.put_u64(u64::MAX / 2); // claims ~9e18 elements
+        let bytes = w.into_bytes();
+        assert!(BinReader::new(&bytes).get_f64_vec().is_err());
+        assert!(BinReader::new(&bytes).get_str().is_err());
+    }
+}

@@ -5,6 +5,7 @@
 //! (rand, rayon, clap, csv, proptest, criterion) are unavailable, so the
 //! project carries its own minimal, well-tested equivalents.
 
+pub mod binio;
 pub mod cli;
 pub mod csv;
 pub mod matrix;

@@ -1,0 +1,200 @@
+//! Artifact lifecycle integration: every `SurrogateSpec` variant must
+//! survive save → load with bit-identical predictions, corrupted and
+//! truncated artifacts must be rejected as recoverable errors, and the
+//! serving registry must hot-swap loaded artifacts under a live server.
+
+use cluster_kriging::coordinator::{BatcherConfig, Client, ModelRegistry, Server, ServerConfig};
+use cluster_kriging::data::{Dataset, Standardizer};
+use cluster_kriging::kriging::{HyperOpt, NuggetMode, Surrogate};
+use cluster_kriging::surrogate::{self, FitOptions, Standardized, SurrogateSpec};
+use cluster_kriging::util::matrix::Matrix;
+use cluster_kriging::util::proptest::gen_matrix;
+use cluster_kriging::util::rng::Rng;
+use std::sync::Arc;
+
+fn smooth_dataset(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let x = gen_matrix(&mut rng, n, 2, -3.0, 3.0);
+    let y: Vec<f64> = (0..n)
+        .map(|i| {
+            let r = x.row(i);
+            r[0].sin() + 0.3 * r[1] * r[1]
+        })
+        .collect();
+    Dataset::new("smooth", x, y)
+}
+
+fn fast_opts() -> FitOptions {
+    FitOptions {
+        hyperopt: HyperOpt {
+            restarts: 1,
+            max_evals: 10,
+            isotropic: true,
+            nugget: NuggetMode::Fixed(1e-8),
+            ..HyperOpt::default()
+        },
+        seed: 17,
+    }
+}
+
+fn all_specs() -> Vec<SurrogateSpec> {
+    let mut specs = vec![
+        SurrogateSpec::Sod { m: 48 },
+        SurrogateSpec::Fitc { m: 16 },
+        SurrogateSpec::Bcm { k: 2, shared: true },
+        SurrogateSpec::Bcm { k: 2, shared: false },
+        SurrogateSpec::FullKriging,
+    ];
+    for flavor in cluster_kriging::cluster_kriging::builder::FLAVORS {
+        specs.push(SurrogateSpec::ClusterKriging { flavor: flavor.into(), k: 3 });
+    }
+    specs
+}
+
+fn assert_bit_identical(a: &dyn Surrogate, b: &dyn Surrogate, probe: &Matrix, label: &str) {
+    let pa = a.predict(probe).unwrap();
+    let pb = b.predict(probe).unwrap();
+    for i in 0..probe.rows() {
+        assert_eq!(
+            pa.mean[i].to_bits(),
+            pb.mean[i].to_bits(),
+            "{label}: mean differs at point {i}: {} vs {}",
+            pa.mean[i],
+            pb.mean[i]
+        );
+        assert_eq!(
+            pa.variance[i].to_bits(),
+            pb.variance[i].to_bits(),
+            "{label}: variance differs at point {i}"
+        );
+    }
+}
+
+#[test]
+fn every_spec_roundtrips_bit_identically() {
+    let ds = smooth_dataset(160, 3);
+    let opts = fast_opts();
+    let mut rng = Rng::new(99);
+    let probe = gen_matrix(&mut rng, 23, 2, -3.5, 3.5);
+    for spec in all_specs() {
+        let model = spec.fit(&ds, &opts).unwrap();
+        let mut buf = Vec::new();
+        model.save(&mut buf).unwrap();
+        let loaded = SurrogateSpec::load(buf.as_slice())
+            .unwrap_or_else(|e| panic!("{spec}: load failed: {e:#}"));
+        assert_eq!(loaded.name(), model.name(), "{spec}: name changed");
+        assert_eq!(loaded.dim(), model.dim(), "{spec}: dim changed");
+        assert_bit_identical(model.as_ref(), loaded.as_ref(), &probe, &spec.to_string());
+
+        // predict_into on the loaded model agrees with predict.
+        let mut mean = vec![0.0; probe.rows()];
+        let mut var = vec![0.0; probe.rows()];
+        loaded.predict_into(&probe, &mut mean, &mut var).unwrap();
+        let direct = loaded.predict(&probe).unwrap();
+        for i in 0..probe.rows() {
+            assert_eq!(mean[i].to_bits(), direct.mean[i].to_bits(), "{spec}: predict_into");
+            assert_eq!(var[i].to_bits(), direct.variance[i].to_bits(), "{spec}: predict_into");
+        }
+    }
+}
+
+#[test]
+fn standardized_wrapper_roundtrips() {
+    let ds = smooth_dataset(120, 5);
+    let (train, _) = ds.split(0.8, 1);
+    let std = Standardizer::fit(&train);
+    let tr = std.transform(&train);
+    let inner = SurrogateSpec::ClusterKriging { flavor: "OWCK".into(), k: 2 }
+        .fit(&tr, &fast_opts())
+        .unwrap();
+    let model = Standardized::new(inner, std);
+    let mut buf = Vec::new();
+    model.save(&mut buf).unwrap();
+    let loaded = SurrogateSpec::load(buf.as_slice()).unwrap();
+    let mut rng = Rng::new(7);
+    let probe = gen_matrix(&mut rng, 11, 2, -2.0, 2.0);
+    assert_bit_identical(&model, loaded.as_ref(), &probe, "standardized");
+    assert_eq!(loaded.dim(), 2);
+}
+
+#[test]
+fn corrupted_and_truncated_artifacts_rejected() {
+    let ds = smooth_dataset(90, 11);
+    let model = SurrogateSpec::Sod { m: 32 }.fit(&ds, &fast_opts()).unwrap();
+    let mut buf = Vec::new();
+    model.save(&mut buf).unwrap();
+
+    // Sanity: the pristine buffer loads.
+    assert!(SurrogateSpec::load(buf.as_slice()).is_ok());
+
+    // Truncation at several depths: header, payload head, payload tail.
+    for cut in [0, 3, 10, 24, buf.len() / 2, buf.len() - 1] {
+        let err = SurrogateSpec::load(&buf[..cut]).expect_err("truncated artifact accepted");
+        assert!(err.to_string().contains("truncated"), "cut {cut}: {err:#}");
+    }
+
+    // Single-bit corruption anywhere in the payload trips the checksum.
+    for at in [26, buf.len() / 2, buf.len() - 2] {
+        let mut bad = buf.clone();
+        bad[at] ^= 0x10;
+        assert!(
+            SurrogateSpec::load(bad.as_slice()).is_err(),
+            "bit flip at {at} accepted"
+        );
+    }
+
+    // Unknown model tag.
+    let mut bad = buf.clone();
+    bad[8] = 200;
+    assert!(SurrogateSpec::load(bad.as_slice()).is_err());
+
+    // Not an artifact at all.
+    assert!(SurrogateSpec::load(&b"hello world, definitely not a model"[..]).is_err());
+}
+
+#[test]
+fn live_server_hot_swaps_loaded_artifacts() {
+    // Two distinguishable models fitted on shifted targets.
+    let ds_a = smooth_dataset(100, 21);
+    let mut ds_b = smooth_dataset(100, 21);
+    for y in &mut ds_b.y {
+        *y += 1000.0;
+    }
+    let opts = fast_opts();
+    let spec = SurrogateSpec::FullKriging;
+    let model_a = spec.fit(&ds_a, &opts).unwrap();
+    let model_b = spec.fit(&ds_b, &opts).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("ckrig_swap_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path_b = dir.join("model_b.ck");
+    surrogate::save_to_path(model_b.as_ref(), &path_b).unwrap();
+
+    let server = Server::start(
+        Arc::new(ModelRegistry::new("v1", Arc::from(model_a))),
+        ServerConfig { addr: "127.0.0.1:0".into(), batcher: BatcherConfig::default() },
+    )
+    .unwrap();
+    let mut client = Client::connect(&server.local_addr.to_string()).unwrap();
+
+    let probe = [0.25, -0.75];
+    let (before, _) = client.predict(&probe).unwrap();
+    assert!(before.abs() < 100.0, "model A prediction unexpectedly large: {before}");
+
+    // Load B into a new slot: the default keeps serving A until the swap.
+    let slot = client.load_model(path_b.to_str().unwrap(), Some("v2")).unwrap();
+    assert_eq!(slot, "v2");
+    let (still_a, _) = client.predict(&probe).unwrap();
+    assert_eq!(still_a.to_bits(), before.to_bits(), "default changed before swap");
+    // The new slot is addressable by name though.
+    let (named_b, _) = client.predict_batch(Some("v2"), &[&probe[..]]).unwrap()[0];
+    assert!(named_b > 900.0, "model B should predict near +1000: {named_b}");
+
+    // Swap: the same connection now gets B by default.
+    client.swap("v2").unwrap();
+    let (after, _) = client.predict(&probe).unwrap();
+    assert_eq!(after.to_bits(), named_b.to_bits(), "post-swap default ≠ loaded model");
+    assert!(client.models().unwrap().starts_with("default=v2"));
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -66,10 +66,10 @@ fn harness_end_to_end_all_algorithms() {
         AlgoSpec::Fitc { m: 32 },
         AlgoSpec::Bcm { k: 2, shared: false },
         AlgoSpec::Bcm { k: 2, shared: true },
-        AlgoSpec::ClusterKriging { flavor: "OWCK", k: 3 },
-        AlgoSpec::ClusterKriging { flavor: "OWFCK", k: 3 },
-        AlgoSpec::ClusterKriging { flavor: "GMMCK", k: 3 },
-        AlgoSpec::ClusterKriging { flavor: "MTCK", k: 3 },
+        AlgoSpec::ClusterKriging { flavor: "OWCK".into(), k: 3 },
+        AlgoSpec::ClusterKriging { flavor: "OWFCK".into(), k: 3 },
+        AlgoSpec::ClusterKriging { flavor: "GMMCK".into(), k: 3 },
+        AlgoSpec::ClusterKriging { flavor: "MTCK".into(), k: 3 },
     ] {
         let r = evaluate(&spec, &train, &test, &cfg).unwrap();
         assert!(r.scores.r2.is_finite(), "{}: non-finite R²", r.algo);

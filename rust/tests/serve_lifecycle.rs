@@ -1,0 +1,120 @@
+//! End-to-end CLI lifecycle: `ckrig fit --out` writes an artifact,
+//! `ckrig serve --artifact` boots from it without a refit, and the live
+//! server answers `predict`/`predictb`, lists `models`, and hot-swaps a
+//! second artifact via `load` + `swap` — all through the real binary and
+//! a real TCP connection.
+
+use cluster_kriging::coordinator::Client;
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+
+struct KillOnDrop(Child);
+
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn ckrig() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_ckrig"))
+}
+
+#[test]
+fn fit_artifact_serve_predict_swap() {
+    let dir = std::env::temp_dir().join(format!("ckrig_lifecycle_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let artifact_a = dir.join("owck2.ck");
+    let artifact_b = dir.join("sod64.ck");
+
+    // 1. Fit two models to artifacts through the CLI.
+    for (algo, path) in [("owck:2", &artifact_a), ("sod:64", &artifact_b)] {
+        let out = ckrig()
+            .args([
+                "fit",
+                "--dataset",
+                "rosenbrock",
+                "--n",
+                "240",
+                "--algo",
+                algo,
+                "--seed",
+                "5",
+                "--out",
+                path.to_str().unwrap(),
+            ])
+            .output()
+            .expect("running ckrig fit");
+        assert!(
+            out.status.success(),
+            "fit {algo} failed:\nstdout: {}\nstderr: {}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        assert!(path.exists(), "artifact {} not written", path.display());
+    }
+
+    // 2. Serve from artifact A on an ephemeral port.
+    let mut child = KillOnDrop(
+        ckrig()
+            .args([
+                "serve",
+                "--artifact",
+                artifact_a.to_str().unwrap(),
+                "--name",
+                "owck2",
+                "--addr",
+                "127.0.0.1:0",
+            ])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawning ckrig serve"),
+    );
+
+    // The server announces its bound address on stdout.
+    let stdout = child.0.stdout.take().unwrap();
+    let mut lines = BufReader::new(stdout).lines();
+    let addr = loop {
+        let line = lines
+            .next()
+            .expect("serve exited before announcing its address")
+            .unwrap();
+        if let Some(rest) = line.strip_prefix("serving on ") {
+            break rest.split_whitespace().next().unwrap().to_string();
+        }
+    };
+
+    let mut client = Client::connect(&addr).unwrap();
+
+    // 3. v1 + v2 predicts against the booted artifact (d=20 benchmark).
+    let point = vec![0.1; 20];
+    let (mean, var) = client.predict(&point).unwrap();
+    assert!(mean.is_finite() && var >= 0.0);
+    let batch: Vec<Vec<f64>> = (0..5).map(|i| vec![0.05 * i as f64; 20]).collect();
+    let out = client.predict_batch(None, &batch).unwrap();
+    assert_eq!(out.len(), 5);
+    assert!(out.iter().all(|(m, v)| m.is_finite() && *v >= 0.0));
+
+    // 4. Registry listing shows the named slot as default.
+    let models = client.models().unwrap();
+    assert!(models.starts_with("default=owck2"), "{models}");
+    assert!(models.contains("owck2:OWCK:d20"), "{models}");
+
+    // 5. Hot swap to artifact B over the wire; traffic keeps flowing.
+    let slot = client.load_model(artifact_b.to_str().unwrap(), Some("sod64")).unwrap();
+    assert_eq!(slot, "sod64");
+    client.swap("sod64").unwrap();
+    let models = client.models().unwrap();
+    assert!(models.starts_with("default=sod64"), "{models}");
+    assert!(models.contains("sod64:SoD:d20"), "{models}");
+    let (mean_b, var_b) = client.predict(&point).unwrap();
+    assert!(mean_b.is_finite() && var_b >= 0.0);
+    // The old slot remains addressable.
+    let named = client.predict_batch(Some("owck2"), &[&point[..]]).unwrap();
+    assert_eq!(named[0].0.to_bits(), mean.to_bits(), "owck2 slot changed by swap");
+
+    drop(child);
+    std::fs::remove_dir_all(&dir).ok();
+}
