@@ -17,10 +17,14 @@
 //!       PJRT-vs-native comparison when artifacts are present.
 //!   S1  serve path — allocating `predict` vs buffer-reusing
 //!       `predict_into`, and the full registry+Batcher pipeline.
+//!   O1  online learning — per-point cluster-local `observe` (O(n_c²)
+//!       incremental Cholesky) vs a full ClusterKriging refit at
+//!       n ∈ {1024, 4096}, k=8 (override sizes with `CKRIG_ONLINE_NS`).
 //!
-//! Results are also written to `BENCH_hotpath.json` and
-//! `BENCH_serving.json` (override with `CKRIG_BENCH_JSON` /
-//! `CKRIG_BENCH_SERVING_JSON`) so CI can track the perf trajectory.
+//! Results are also written to `BENCH_hotpath.json`, `BENCH_serving.json`
+//! and `BENCH_online.json` (override with `CKRIG_BENCH_JSON` /
+//! `CKRIG_BENCH_SERVING_JSON` / `CKRIG_BENCH_ONLINE_JSON`) so CI can
+//! track the perf trajectory.
 //!
 //! ```bash
 //! CKRIG_N=2000 cargo bench --bench bench_hotpath
@@ -81,9 +85,16 @@ fn main() {
     let (t_asm_gemm, c_gemm) = time(|| kernel.corr_matrix_gemm(&x, workers));
     assert!(c_scalar.max_abs_diff(&c_cached) == 0.0, "cached assembly diverged");
     assert!(c_scalar.max_abs_diff(&c_gemm) < 1e-11, "gemm assembly diverged");
-    println!("  assembly: scalar {:8.1} ms | cached {:8.1} ms ({:.1}x) | gemm {:8.1} ms ({:.1}x) | cache build {:.1} ms",
-        t_asm_scalar * 1e3, t_asm_cached * 1e3, t_asm_scalar / t_asm_cached,
-        t_asm_gemm * 1e3, t_asm_scalar / t_asm_gemm, t_cache_build * 1e3);
+    println!(
+        "  assembly: scalar {:8.1} ms | cached {:8.1} ms ({:.1}x) | gemm {:8.1} ms \
+         ({:.1}x) | cache build {:.1} ms",
+        t_asm_scalar * 1e3,
+        t_asm_cached * 1e3,
+        t_asm_scalar / t_asm_cached,
+        t_asm_gemm * 1e3,
+        t_asm_scalar / t_asm_gemm,
+        t_cache_build * 1e3
+    );
 
     let mut c = c_scalar;
     for i in 0..n {
@@ -262,12 +273,20 @@ fn main() {
             );
         }
         let native_fit = t0.elapsed().as_secs_f64() / reps as f64;
-        println!("  fit n={nn} (pad→64): pjrt {:.2}ms vs native {:.2}ms", pjrt_fit * 1e3, native_fit * 1e3);
+        println!(
+            "  fit n={nn} (pad→64): pjrt {:.2}ms vs native {:.2}ms",
+            pjrt_fit * 1e3,
+            native_fit * 1e3
+        );
 
         let model = rt.fit(&xx, &yy, &theta, 1e-6).unwrap();
-        let native =
-            OrdinaryKriging::fit(xx.clone(), &yy, Kernel::new(KernelKind::SquaredExponential, theta.to_vec()), 1e-6)
-                .unwrap();
+        let native = OrdinaryKriging::fit(
+            xx.clone(),
+            &yy,
+            Kernel::new(KernelKind::SquaredExponential, theta.to_vec()),
+            1e-6,
+        )
+        .unwrap();
         let xt = Matrix::from_vec(64, 2, rng.uniform_vec(128, -2.0, 2.0));
         let t0 = Instant::now();
         for _ in 0..reps {
@@ -365,6 +384,80 @@ fn main() {
     match std::fs::write(&serving_json_path, &serving_json) {
         Ok(()) => println!("  wrote {serving_json_path}"),
         Err(e) => eprintln!("  failed to write {serving_json_path}: {e}"),
+    }
+
+    // == O1: online observe vs full refit — the partition structure's
+    // second dividend: one streamed point costs O(n_c²) in its routed
+    // cluster instead of refitting all k clusters. ==
+    println!("\n== O1: cluster-local observe vs full ClusterKriging refit (k=8, d={d}) ==");
+    let online_ns: Vec<usize> = std::env::var("CKRIG_ONLINE_NS")
+        .ok()
+        .map(|v| v.split(',').filter_map(|t| t.trim().parse().ok()).collect())
+        .filter(|v: &Vec<usize>| !v.is_empty())
+        .unwrap_or_else(|| vec![1024, 4096]);
+    let mut online_records: Vec<String> = Vec::new();
+    for &on in &online_ns {
+        let ok = 8usize;
+        let ox = Matrix::from_vec(on, d, rng.uniform_vec(on * d, -3.0, 3.0));
+        let oy: Vec<f64> = (0..on).map(|i| ox.row(i)[0].sin() + ox.row(i)[2]).collect();
+        let make_cfg = || ClusterKrigingConfig {
+            partitioner: Box::new(KMeansPartitioner { k: ok, seed: 5 }),
+            combiner: Combiner::OptimalWeights,
+            hyperopt: fixed_theta_opt(),
+            workers: None,
+            flavor: "OWCK".into(),
+        };
+        let mut model = ClusterKriging::fit(&ox, &oy, make_cfg()).unwrap();
+        let stream = 64usize;
+        let pts = Matrix::from_vec(stream, d, rng.uniform_vec(stream * d, -3.0, 3.0));
+        let pys: Vec<f64> = (0..stream).map(|i| pts.row(i)[0].sin() + pts.row(i)[2]).collect();
+        let t0 = Instant::now();
+        for i in 0..stream {
+            model.observe_point(pts.row(i), pys[i]).unwrap();
+        }
+        let observe_s = t0.elapsed().as_secs_f64() / stream as f64;
+        std::hint::black_box(&model);
+        // The alternative a static model pays: refit everything on the
+        // grown training set.
+        let gx = ox.vstack(&pts);
+        let mut gy = oy.clone();
+        gy.extend_from_slice(&pys);
+        let t0 = Instant::now();
+        std::hint::black_box(ClusterKriging::fit(&gx, &gy, make_cfg()).unwrap());
+        let refit_s = t0.elapsed().as_secs_f64();
+        let speedup = refit_s / observe_s;
+        println!(
+            "  n={on:<6} observe {:9.1} µs/pt | full refit {:8.3} s | {speedup:8.0}x per point",
+            observe_s * 1e6,
+            refit_s
+        );
+        online_records.push(format!(
+            concat!(
+                "  {{\n",
+                "    \"n\": {n},\n",
+                "    \"k\": {k},\n",
+                "    \"d\": {d},\n",
+                "    \"streamed\": {stream},\n",
+                "    \"observe_s_per_point\": {observe:.9},\n",
+                "    \"full_refit_s\": {refit:.6},\n",
+                "    \"speedup_per_point\": {speedup:.1}\n",
+                "  }}"
+            ),
+            n = on,
+            k = ok,
+            d = d,
+            stream = stream,
+            observe = observe_s,
+            refit = refit_s,
+            speedup = speedup,
+        ));
+    }
+    let online_json_path = std::env::var("CKRIG_BENCH_ONLINE_JSON")
+        .unwrap_or_else(|_| "BENCH_online.json".into());
+    let online_json = format!("[\n{}\n]\n", online_records.join(",\n"));
+    match std::fs::write(&online_json_path, &online_json) {
+        Ok(()) => println!("  wrote {online_json_path}"),
+        Err(e) => eprintln!("  failed to write {online_json_path}: {e}"),
     }
 
     // == machine-readable record for the CI perf trajectory ==

@@ -39,7 +39,11 @@ fn main() -> anyhow::Result<()> {
 
     eprintln!(
         "bench_tables: paper_scale={paper_scale}, datasets={:?}",
-        if cfg.only_datasets.is_empty() { vec!["<all 11>".to_string()] } else { cfg.only_datasets.clone() }
+        if cfg.only_datasets.is_empty() {
+            vec!["<all 11>".to_string()]
+        } else {
+            cfg.only_datasets.clone()
+        }
     );
     let t0 = std::time::Instant::now();
     let grids = run_all(&cfg)?;

@@ -170,6 +170,7 @@ impl Bcm {
 
     pub(crate) fn read_artifact(
         r: &mut crate::util::binio::BinReader<'_>,
+        version: u32,
     ) -> anyhow::Result<Self> {
         let mode = match r.get_u8()? {
             0 => BcmMode::Shared,
@@ -180,7 +181,7 @@ impl Bcm {
         anyhow::ensure!(k >= 1, "BCM artifact has no modules");
         let mut modules = Vec::with_capacity(k);
         for _ in 0..k {
-            modules.push(OrdinaryKriging::read_artifact(r)?);
+            modules.push(OrdinaryKriging::read_artifact(r, version)?);
         }
         let name = match mode {
             BcmMode::Shared => "BCM sh.".to_string(),

@@ -13,6 +13,15 @@ use anyhow::{bail, Result};
 pub struct SubsetOfData {
     model: OrdinaryKriging,
     pub subset_size: usize,
+    /// Total points ever offered to the reservoir: the fit-time
+    /// population plus every streamed observation. Drives the classic
+    /// reservoir acceptance probability `m / seen`, which keeps the
+    /// inducing set a uniform sample over the whole stream.
+    seen: u64,
+    /// Base seed of the reservoir's RNG stream (persisted so reloaded
+    /// models keep sampling deterministically).
+    reservoir_seed: u64,
+    rng: Rng,
 }
 
 impl SubsetOfData {
@@ -37,24 +46,90 @@ impl SubsetOfData {
         let xs = std::sync::Arc::new(x.select_rows(&idx));
         let ys: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
         let model = hyperopt.fit_shared(xs, &ys)?;
-        Ok(Self { model, subset_size: m })
+        Ok(Self::with_reservoir(model, m, n as u64, seed))
+    }
+
+    /// Assemble the reservoir state around a fitted subset model (`seen`
+    /// is the population the subset was drawn from).
+    fn with_reservoir(model: OrdinaryKriging, m: usize, seen: u64, seed: u64) -> Self {
+        let reservoir_seed = seed ^ 0x5E5E_4401_D0_E5;
+        Self {
+            model,
+            subset_size: m,
+            seen,
+            reservoir_seed,
+            rng: Rng::new(reservoir_seed.wrapping_add(seen)),
+        }
     }
 
     pub fn inner(&self) -> &OrdinaryKriging {
         &self.model
     }
 
+    /// Points offered to the reservoir so far (fit population + stream).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Offer one streamed observation to the reservoir: accepted with
+    /// probability `m / seen`, in which case it replaces a uniformly
+    /// random inducing point via the O(m²) incremental factor update
+    /// ([`OrdinaryKriging::replace_point`]). Rejected points cost O(1) —
+    /// which is what lets SoD absorb unbounded streams at bounded size.
+    pub fn offer(&mut self, x: &[f64], y: f64) -> Result<()> {
+        // Validate before any state moves: a bad observation must fail
+        // deterministically, not only when the reservoir coin accepts it.
+        if x.len() != self.model.kernel().dim() {
+            bail!(
+                "observe: point has {} dims, model expects {}",
+                x.len(),
+                self.model.kernel().dim()
+            );
+        }
+        if !y.is_finite() || x.iter().any(|v| !v.is_finite()) {
+            bail!("observe: non-finite observation");
+        }
+        self.seen += 1;
+        let m = self.model.n_train() as u64;
+        if self.rng.next_u64() % self.seen < m {
+            let slot = self.rng.below(m as usize);
+            if let Err(e) = self.model.replace_point(slot, x, y) {
+                // The point was never absorbed: keep `seen` consistent
+                // with the accepted-with-probability-m/seen invariant.
+                self.seen -= 1;
+                return Err(e.into());
+            }
+        }
+        Ok(())
+    }
+
     pub(crate) fn write_artifact(&self, w: &mut crate::util::binio::BinWriter) {
         w.put_usize(self.subset_size);
+        // v2: reservoir counters (online state).
+        w.put_u64(self.seen);
+        w.put_u64(self.reservoir_seed);
         self.model.write_artifact(w);
     }
 
     pub(crate) fn read_artifact(
         r: &mut crate::util::binio::BinReader<'_>,
+        version: u32,
     ) -> anyhow::Result<Self> {
         let subset_size = r.get_usize()?;
-        let model = OrdinaryKriging::read_artifact(r)?;
-        Ok(Self { model, subset_size })
+        let (seen, reservoir_seed) = if version >= 2 {
+            (r.get_u64()?, r.get_u64()?)
+        } else {
+            (0, 0) // placeholders; fixed up below once the model is known
+        };
+        let model = OrdinaryKriging::read_artifact(r, version)?;
+        let seen = if version >= 2 { seen } else { model.n_train() as u64 };
+        Ok(Self {
+            rng: Rng::new(reservoir_seed.wrapping_add(seen)),
+            model,
+            subset_size,
+            seen,
+            reservoir_seed,
+        })
     }
 }
 
@@ -83,6 +158,24 @@ impl Surrogate for SubsetOfData {
             crate::surrogate::artifact::TAG_SOD,
             &payload.into_bytes(),
         )
+    }
+
+    fn as_online(&self) -> Option<&dyn crate::online::OnlineSurrogate> {
+        Some(self)
+    }
+
+    fn as_online_mut(&mut self) -> Option<&mut dyn crate::online::OnlineSurrogate> {
+        Some(self)
+    }
+}
+
+impl crate::online::OnlineSurrogate for SubsetOfData {
+    fn observe(&mut self, x: &[f64], y: f64) -> Result<()> {
+        self.offer(x, y)
+    }
+
+    fn training_snapshot(&self) -> (Matrix, Vec<f64>) {
+        (self.model.x_train().clone(), self.model.y_train().to_vec())
     }
 }
 
@@ -126,5 +219,30 @@ mod tests {
     fn rejects_empty() {
         let opt = HyperOpt::default();
         assert!(SubsetOfData::fit(&Matrix::zeros(0, 1), &[], 5, 1, &opt).is_err());
+    }
+
+    #[test]
+    fn reservoir_keeps_size_and_accepts_at_expected_rate() {
+        let mut rng = Rng::new(4);
+        let x = gen_matrix(&mut rng, 80, 2, -2.0, 2.0);
+        let y: Vec<f64> = (0..80).map(|i| x.row(i)[0] + x.row(i)[1]).collect();
+        let opt = HyperOpt { restarts: 1, max_evals: 10, isotropic: true, ..HyperOpt::default() };
+        let mut sod = SubsetOfData::fit(&x, &y, 20, 3, &opt).unwrap();
+        assert_eq!(sod.seen(), 80);
+        let streamed = 200;
+        for s in 0..streamed {
+            let p = [rng.uniform_in(-2.0, 2.0), rng.uniform_in(-2.0, 2.0)];
+            sod.offer(&p, p[0] + p[1]).unwrap();
+            assert_eq!(sod.inner().n_train(), 20, "reservoir grew at step {s}");
+        }
+        assert_eq!(sod.seen(), 280);
+        // The model remains a sensible regressor after heavy turnover.
+        let pred = sod.predict(&x).unwrap();
+        let sse: f64 = pred.mean.iter().zip(&y).map(|(a, b)| (a - b) * (a - b)).sum::<f64>()
+            / y.len() as f64;
+        assert!(sse / crate::util::stats::variance(&y) < 0.1);
+        // Dimension mismatch is a recoverable error and leaves state intact.
+        assert!(sod.offer(&[1.0], 0.0).is_err());
+        assert_eq!(sod.seen(), 280);
     }
 }

@@ -244,6 +244,7 @@ impl ClusterKriging {
     /// Inverse of [`Self::write_artifact`].
     pub(crate) fn read_artifact(
         r: &mut crate::util::binio::BinReader<'_>,
+        version: u32,
     ) -> anyhow::Result<Self> {
         use anyhow::ensure;
         let flavor = r.get_str()?;
@@ -259,7 +260,7 @@ impl ClusterKriging {
         ensure!(k >= 1, "Cluster Kriging artifact has no models");
         let mut models = Vec::with_capacity(k);
         for _ in 0..k {
-            let m = OrdinaryKriging::read_artifact(r)?;
+            let m = OrdinaryKriging::read_artifact(r, version)?;
             ensure!(
                 crate::kriging::Surrogate::dim(&m) == dim,
                 "per-cluster model dimension disagrees with ensemble"
@@ -271,9 +272,67 @@ impl ClusterKriging {
     }
 }
 
+impl ClusterKriging {
+    /// Absorb one observation into the routed cluster only — the paper's
+    /// partition structure applied to online learning: O(n_c²) for the
+    /// cluster of size n_c instead of an O(n³) global refit, and the
+    /// other k−1 cluster models are untouched. Routing reuses the fitted
+    /// [`Membership::route`] oracle, so a point lands in the same cluster
+    /// that would serve its single-model prediction.
+    pub fn observe_point(&mut self, x: &[f64], y: f64) -> Result<()> {
+        if x.len() != self.dim {
+            bail!("observe: point has {} dims, model expects {}", x.len(), self.dim);
+        }
+        let routed = self.membership.route(x).min(self.k() - 1);
+        self.models[routed]
+            .observe_point(x, y)
+            .with_context(|| format!("cluster {routed} observe failed"))?;
+        self.cluster_sizes[routed] += 1;
+        Ok(())
+    }
+}
+
+impl crate::online::OnlineSurrogate for ClusterKriging {
+    fn observe(&mut self, x: &[f64], y: f64) -> Result<()> {
+        self.observe_point(x, y)
+    }
+
+    fn training_snapshot(&self) -> (Matrix, Vec<f64>) {
+        // Overlapping partitioners (OWFCK/GMMCK) store boundary points in
+        // several clusters; return each distinct observation once so a
+        // refit does not see artificial duplicates. The key covers (x, y)
+        // bits: a genuine overlap duplicate shares both, while repeated
+        // measurements at one design point (same x, different y) are real
+        // data and must all survive into the refit history.
+        let mut seen = std::collections::HashSet::new();
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for m in &self.models {
+            let (xs, ys) = (m.x_train(), m.y_train());
+            for i in 0..xs.rows() {
+                let mut key: Vec<u64> = xs.row(i).iter().map(|v| v.to_bits()).collect();
+                key.push(ys[i].to_bits());
+                if seen.insert(key) {
+                    x.extend_from_slice(xs.row(i));
+                    y.push(ys[i]);
+                }
+            }
+        }
+        (Matrix::from_vec(y.len(), self.dim, x), y)
+    }
+}
+
 impl Surrogate for ClusterKriging {
     fn predict(&self, xt: &Matrix) -> Result<Prediction> {
         Ok(self.predict_batch(xt))
+    }
+
+    fn as_online(&self) -> Option<&dyn crate::online::OnlineSurrogate> {
+        Some(self)
+    }
+
+    fn as_online_mut(&mut self) -> Option<&mut dyn crate::online::OnlineSurrogate> {
+        Some(self)
     }
 
     fn name(&self) -> &str {
@@ -424,6 +483,40 @@ mod tests {
             (mu - out.mean).abs() < 1e-12 && (var - out.variance).abs() < 1e-12
         });
         assert!(any_match, "MTCK output doesn't match any single model");
+    }
+
+    #[test]
+    fn observe_updates_only_routed_cluster() {
+        let (x, y) = smooth_dataset(120, 11);
+        let cfg = builder::flavor("OWCK", 3, 5, fast_hyperopt()).unwrap();
+        let mut model = ClusterKriging::fit(&x, &y, cfg).unwrap();
+        let before: Vec<usize> = model.models().iter().map(|m| m.n_train()).collect();
+        let probe = [1.2, -0.8];
+        model.observe_point(&probe, 0.77).unwrap();
+        let after: Vec<usize> = model.models().iter().map(|m| m.n_train()).collect();
+        let grown: Vec<usize> =
+            (0..before.len()).filter(|&i| after[i] != before[i]).collect();
+        assert_eq!(grown.len(), 1, "exactly one cluster must grow: {before:?} -> {after:?}");
+        assert_eq!(after[grown[0]], before[grown[0]] + 1);
+        assert_eq!(model.cluster_sizes[grown[0]], after[grown[0]]);
+        // A second observation at the same point lands in the same cluster.
+        model.observe_point(&probe, 0.78).unwrap();
+        assert_eq!(model.models()[grown[0]].n_train(), before[grown[0]] + 2);
+        // Dimension mismatch is a recoverable error.
+        assert!(model.observe_point(&[1.0], 0.0).is_err());
+    }
+
+    #[test]
+    fn training_snapshot_dedups_overlapping_clusters() {
+        use crate::online::OnlineSurrogate as _;
+        let (x, y) = smooth_dataset(90, 13);
+        let cfg = builder::flavor("OWFCK", 3, 7, fast_hyperopt()).unwrap();
+        let model = ClusterKriging::fit(&x, &y, cfg).unwrap();
+        let stored: usize = model.models().iter().map(|m| m.n_train()).sum();
+        let (sx, sy) = model.training_snapshot();
+        assert_eq!(sx.rows(), sy.len());
+        assert_eq!(sx.rows(), 90, "snapshot must contain each point once");
+        assert!(stored >= 90, "overlap partitioner should duplicate boundary points");
     }
 
     #[test]

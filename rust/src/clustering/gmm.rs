@@ -465,7 +465,8 @@ mod tests {
             data.push(t + noise); // strongly correlated dims
         }
         let x = Matrix::from_vec(200, 2, data);
-        let diag = fit(&x, &GmmConfig { covariance: CovarianceType::Diagonal, ..GmmConfig::new(1) });
+        let diag =
+            fit(&x, &GmmConfig { covariance: CovarianceType::Diagonal, ..GmmConfig::new(1) });
         let full = fit(&x, &GmmConfig { covariance: CovarianceType::Full, ..GmmConfig::new(1) });
         assert!(
             full.log_likelihood > diag.log_likelihood + 0.3,

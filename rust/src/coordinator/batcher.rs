@@ -23,11 +23,25 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+/// What a queued request asks the flush to do with its rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ReqKind {
+    /// Predict the rows; reply carries one `(mean, variance)` per row.
+    Predict,
+    /// Absorb the rows as observations (each row is `dim` features
+    /// followed by the target); reply is empty on success.
+    Observe,
+}
+
 /// One queued request: one or more points for one model slot.
 struct Pending {
-    /// Row-major points, `rows × dim` values.
+    kind: ReqKind,
+    /// Row-major values: `rows × dim` for predicts, `rows × (dim + 1)`
+    /// for observes (features then target per row).
     data: Vec<f64>,
     rows: usize,
+    /// The target model's input dimensionality at enqueue time (row
+    /// width follows from `kind`).
     dim: usize,
     /// Target slot; `None` rides the default at flush time.
     model: Option<String>,
@@ -110,22 +124,59 @@ impl Batcher {
         data: Vec<f64>,
         rows: usize,
     ) -> anyhow::Result<Vec<(f64, f64)>> {
+        self.enqueue(ReqKind::Predict, model, data, rows)
+    }
+
+    /// Enqueue `rows` observations for one model slot; each row is the
+    /// point's `dim` features followed by its target value (`rows ×
+    /// (dim+1)` values total). Blocks until the whole request is
+    /// absorbed. Joins the same flush queue as predictions, so observes
+    /// and predicts from concurrent clients serialize through one worker
+    /// with no extra locking on the model hot path.
+    pub fn observe_rows(
+        &self,
+        model: Option<&str>,
+        data: Vec<f64>,
+        rows: usize,
+    ) -> anyhow::Result<()> {
+        self.enqueue(ReqKind::Observe, model, data, rows).map(|_| ())
+    }
+
+    fn enqueue(
+        &self,
+        kind: ReqKind,
+        model: Option<&str>,
+        data: Vec<f64>,
+        rows: usize,
+    ) -> anyhow::Result<Vec<(f64, f64)>> {
         let target = self
             .registry
             .get(model)
             .ok_or_else(|| anyhow::anyhow!("no model slot named {:?}", model.unwrap_or("")))?;
         let dim = target.dim();
+        let width = match kind {
+            ReqKind::Predict => dim,
+            ReqKind::Observe => dim + 1,
+        };
         anyhow::ensure!(rows >= 1, "request has no points");
         anyhow::ensure!(
-            data.len() == rows * dim,
-            "expected {rows}×{dim} values for model {:?}, got {}",
+            data.len() == rows * width,
+            "expected {rows}×{width} values for model {:?}, got {}",
             model.unwrap_or("default"),
             data.len()
         );
+        if kind == ReqKind::Observe {
+            anyhow::ensure!(
+                target.observer().is_some(),
+                "model slot {:?} is not online-capable",
+                model.unwrap_or("default")
+            );
+        }
         let (tx, rx): (Sender<anyhow::Result<Vec<(f64, f64)>>>, Receiver<_>) = channel();
         {
             let mut q = self.shared.queue.lock().unwrap();
             q.push(Pending {
+                kind,
                 data,
                 rows,
                 dim,
@@ -244,9 +295,11 @@ fn worker_loop(
     }
 }
 
-/// Predict one same-slot group of requests as a single batched
-/// `predict_into` call into the worker's reusable buffers, then fan the
-/// results back out to the per-request reply channels.
+/// Flush one same-slot group of requests: observations are absorbed
+/// first (one batched `observe_batch` through the slot's
+/// [`crate::online::OnlineObserver`]), then predictions run as a single
+/// batched `predict_into` call into the worker's reusable buffers, and
+/// the results fan back out to the per-request reply channels.
 fn flush_group(
     key: &str,
     group: Vec<Pending>,
@@ -278,6 +331,14 @@ fn flush_group(
         let _ = p
             .reply
             .send(Err(anyhow::anyhow!("model slot {key:?} now expects {dim} dims")));
+    }
+    // Observations apply before this flush's predictions, so a client
+    // that saw its observe acknowledged predicts against the updated
+    // posterior from the next flush onward.
+    let (observes, group): (Vec<Pending>, Vec<Pending>) =
+        group.into_iter().partition(|p| p.kind == ReqKind::Observe);
+    if !observes.is_empty() {
+        flush_observes(key, model.as_ref(), observes, metrics, dim);
     }
     if group.is_empty() {
         return;
@@ -311,6 +372,56 @@ fn flush_group(
             metrics.record_error();
             for p in group {
                 let _ = p.reply.send(Err(anyhow::anyhow!("predict failed: {e:#}")));
+            }
+        }
+    }
+}
+
+/// Absorb one same-slot group of observe requests, one `observe_batch`
+/// call **per request** (each pending row is `dim` features followed by
+/// the target). Per-request application costs nothing — the underlying
+/// incremental updates are per-point anyway — and keeps the failure
+/// blast radius honest: one client's bad batch cannot fail another
+/// client's observations, and the observes counter only credits requests
+/// whose absorption fully succeeded.
+fn flush_observes(
+    key: &str,
+    model: &dyn Surrogate,
+    group: Vec<Pending>,
+    metrics: &ServerMetrics,
+    dim: usize,
+) {
+    let observer = match model.observer() {
+        Some(o) => o,
+        None => {
+            // A hot swap may have replaced an online slot with a
+            // fit-once model after enqueue validation.
+            for p in group {
+                metrics.record_error();
+                let _ = p.reply.send(Err(anyhow::anyhow!(
+                    "model slot {key:?} is no longer online-capable"
+                )));
+            }
+            return;
+        }
+    };
+    for p in group {
+        let mut xs = Vec::with_capacity(p.rows * dim);
+        let mut ys = Vec::with_capacity(p.rows);
+        for r in 0..p.rows {
+            let row = &p.data[r * (dim + 1)..(r + 1) * (dim + 1)];
+            xs.extend_from_slice(&row[..dim]);
+            ys.push(row[dim]);
+        }
+        let xs = Matrix::from_vec(p.rows, dim, xs);
+        match observer.observe_batch(&xs, &ys) {
+            Ok(()) => {
+                metrics.record_observes(p.rows);
+                let _ = p.reply.send(Ok(Vec::new()));
+            }
+            Err(e) => {
+                metrics.record_error();
+                let _ = p.reply.send(Err(anyhow::anyhow!("observe failed: {e:#}")));
             }
         }
     }
@@ -450,6 +561,117 @@ mod tests {
         let b = Batcher::start(reg, BatcherConfig::default(), Arc::new(ServerMetrics::new()));
         assert_eq!(b.predict_one(&[2.0]).unwrap().0, 2.0);
         assert_eq!(b.predict_one_for(Some("neg"), &[2.0]).unwrap().0, -2.0);
+    }
+
+    /// Online-capable test double: tracks absorbed observations behind a
+    /// mutex, predicts the running mean of the absorbed targets.
+    struct ObservableEcho {
+        dim: usize,
+        absorbed: std::sync::Mutex<Vec<f64>>,
+    }
+
+    impl ObservableEcho {
+        fn new(dim: usize) -> Self {
+            Self { dim, absorbed: std::sync::Mutex::new(Vec::new()) }
+        }
+    }
+
+    impl Surrogate for ObservableEcho {
+        fn predict(&self, xt: &Matrix) -> anyhow::Result<Prediction> {
+            let ys = self.absorbed.lock().unwrap();
+            let mean = if ys.is_empty() { 0.0 } else { ys.iter().sum::<f64>() / ys.len() as f64 };
+            Ok(Prediction { mean: vec![mean; xt.rows()], variance: vec![1.0; xt.rows()] })
+        }
+        fn name(&self) -> &str {
+            "observable"
+        }
+        fn dim(&self) -> usize {
+            self.dim
+        }
+        fn observer(&self) -> Option<&dyn crate::online::OnlineObserver> {
+            Some(self)
+        }
+    }
+
+    impl crate::online::OnlineObserver for ObservableEcho {
+        fn observe_batch(&self, xs: &Matrix, ys: &[f64]) -> anyhow::Result<()> {
+            anyhow::ensure!(xs.cols() == self.dim, "dim mismatch in double");
+            self.absorbed.lock().unwrap().extend_from_slice(ys);
+            Ok(())
+        }
+        fn online_stats(&self) -> crate::online::OnlineStats {
+            crate::online::OnlineStats {
+                observed: self.absorbed.lock().unwrap().len() as u64,
+                ..Default::default()
+            }
+        }
+    }
+
+    #[test]
+    fn observe_rows_roundtrip_and_metrics() {
+        let model = Arc::new(ObservableEcho::new(2));
+        let metrics = Arc::new(ServerMetrics::new());
+        let b = Batcher::start(
+            registry_of(model.clone()),
+            BatcherConfig::default(),
+            metrics.clone(),
+        );
+        // Two observations: rows are (x1, x2, y).
+        b.observe_rows(None, vec![1.0, 2.0, 10.0, 3.0, 4.0, 20.0], 2).unwrap();
+        assert_eq!(model.absorbed.lock().unwrap().as_slice(), &[10.0, 20.0]);
+        assert_eq!(metrics.observes.load(Ordering::Relaxed), 2);
+        // Predictions now reflect the absorbed targets.
+        let (mean, _) = b.predict_one(&[0.0, 0.0]).unwrap();
+        assert_eq!(mean, 15.0);
+        assert_eq!(metrics.predictions.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn observe_rows_validates_shape_and_capability() {
+        let b = Batcher::start(
+            registry_of(Arc::new(ObservableEcho::new(2))),
+            BatcherConfig::default(),
+            Arc::new(ServerMetrics::new()),
+        );
+        // Width must be dim+1 per row.
+        assert!(b.observe_rows(None, vec![1.0, 2.0], 1).is_err());
+        assert!(b.observe_rows(None, vec![1.0, 2.0, 3.0, 4.0], 1).is_err());
+        // Unknown slot.
+        assert!(b.observe_rows(Some("nope"), vec![1.0, 2.0, 3.0], 1).is_err());
+        // Fit-once models reject observations at enqueue time.
+        let plain = Batcher::start(
+            registry_of(Arc::new(Echo::new(2))),
+            BatcherConfig::default(),
+            Arc::new(ServerMetrics::new()),
+        );
+        let err = plain.observe_rows(None, vec![1.0, 2.0, 3.0], 1).unwrap_err();
+        assert!(err.to_string().contains("not online-capable"), "{err}");
+    }
+
+    #[test]
+    fn mixed_observe_and_predict_flush() {
+        let model = Arc::new(ObservableEcho::new(1));
+        let cfg = BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(20) };
+        let b = Arc::new(Batcher::start(
+            registry_of(model.clone()),
+            cfg,
+            Arc::new(ServerMetrics::new()),
+        ));
+        let mut handles = Vec::new();
+        for i in 0..10 {
+            let b = b.clone();
+            handles.push(std::thread::spawn(move || {
+                if i % 2 == 0 {
+                    b.observe_rows(None, vec![i as f64, i as f64], 1).unwrap();
+                } else {
+                    b.predict_one(&[i as f64]).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(model.absorbed.lock().unwrap().len(), 5);
     }
 
     #[test]

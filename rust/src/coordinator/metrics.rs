@@ -12,6 +12,9 @@ const BUCKET_BOUNDS_US: [u64; 12] =
 pub struct ServerMetrics {
     pub requests: AtomicU64,
     pub predictions: AtomicU64,
+    /// Observations absorbed through the `observe`/`observeb` protocol
+    /// ops (protocol v3 — the online-learning path).
+    pub observes: AtomicU64,
     pub batches: AtomicU64,
     pub errors: AtomicU64,
     latencies: Mutex<Histogram>,
@@ -36,6 +39,11 @@ impl ServerMetrics {
 
     pub fn record_error(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `count` observations absorbed by a served model.
+    pub fn record_observes(&self, count: usize) {
+        self.observes.fetch_add(count as u64, Ordering::Relaxed);
     }
 
     /// Record one served batch of `size` predictions taking `seconds`.
@@ -80,9 +88,11 @@ impl ServerMetrics {
     /// One-line human-readable summary.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} predictions={} batches={} errors={} lat_mean={:.0}µs lat_p50={}µs lat_p99={}µs",
+            "requests={} predictions={} observes={} batches={} errors={} \
+             lat_mean={:.0}µs lat_p50={}µs lat_p99={}µs",
             self.requests.load(Ordering::Relaxed),
             self.predictions.load(Ordering::Relaxed),
+            self.observes.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
             self.mean_latency_us(),
@@ -127,5 +137,64 @@ mod tests {
         assert_eq!(m.latency_percentile_us(99.0), 0);
         assert_eq!(m.mean_latency_us(), 0.0);
         assert!(m.summary().contains("requests=0"));
+        assert!(m.summary().contains("observes=0"));
+    }
+
+    #[test]
+    fn observes_counter_accumulates() {
+        let m = ServerMetrics::new();
+        m.record_observes(3);
+        m.record_observes(1);
+        assert_eq!(m.observes.load(Ordering::Relaxed), 4);
+        assert!(m.summary().contains("observes=4"));
+        // Observations are not predictions.
+        assert_eq!(m.predictions.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries_are_inclusive_upper() {
+        // A latency exactly on a bucket bound must land IN that bucket
+        // (`us <= bound`), not the next one: recording exactly `bound` µs
+        // and asking for p100 must report that bound back.
+        for &bound in &BUCKET_BOUNDS_US {
+            let m = ServerMetrics::new();
+            m.record_batch(1, bound as f64 * 1e-6);
+            assert_eq!(
+                m.latency_percentile_us(100.0),
+                bound,
+                "latency of exactly {bound}µs fell outside its bucket"
+            );
+        }
+        // Past a bound the count spills into the next bucket (2·bound is
+        // always within the next bucket for this 1–3–10 spacing, and far
+        // enough from both edges to survive the f64 µs round-trip).
+        for w in BUCKET_BOUNDS_US.windows(2) {
+            let m = ServerMetrics::new();
+            m.record_batch(1, (w[0] * 2) as f64 * 1e-6);
+            assert_eq!(
+                m.latency_percentile_us(100.0),
+                w[1],
+                "latency of {}µs did not spill into the {}µs bucket",
+                w[0] * 2,
+                w[1]
+            );
+        }
+    }
+
+    #[test]
+    fn overflow_bucket_reports_observed_max() {
+        // Beyond the last bound the histogram is unbounded; percentiles
+        // falling there report the true observed maximum.
+        let m = ServerMetrics::new();
+        let last = *BUCKET_BOUNDS_US.last().unwrap();
+        m.record_batch(1, (last + 500_000) as f64 * 1e-6);
+        assert_eq!(m.latency_percentile_us(100.0), last + 500_000);
+    }
+
+    #[test]
+    fn zero_latency_lands_in_first_bucket() {
+        let m = ServerMetrics::new();
+        m.record_batch(1, 0.0);
+        assert_eq!(m.latency_percentile_us(100.0), BUCKET_BOUNDS_US[0]);
     }
 }

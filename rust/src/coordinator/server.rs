@@ -18,10 +18,22 @@
 //!   `swap <name>`                    → `ok swapped <name>`
 //!   anything else                    → `err <message>`
 //!
+//!   v3 (online learning):
+//!   `observe [model] <csv>`          → `ok observed 1`
+//!     (CSV carries d+1 values: the point's features, then the target)
+//!   `observeb [model] <n> <o1;o2;…>` → `ok observed <n>`
+//!     (each `oi` is a d+1-value CSV observation)
+//!   `stats`                          → `ok <metrics> slots=<a,b,…> default=<name>`
+//!     (v3 extends the v1 reply with the observes counter inside the
+//!     metrics summary plus the registered model-slot names)
+//!
 //! Requests funnel through the [`Batcher`], so concurrent clients are
-//! served in dynamically-formed micro-batches. Models live in a
-//! [`ModelRegistry`] of atomically swappable slots — `load` + `swap`
-//! replace the serving model under live traffic without a restart.
+//! served in dynamically-formed micro-batches; observations join the
+//! same flush queue and apply before that flush's predictions. Models
+//! live in a [`ModelRegistry`] of atomically swappable slots — `load` +
+//! `swap` replace the serving model under live traffic without a
+//! restart, and online slots (see [`crate::online::OnlineModel`]) absorb
+//! `observe` traffic in place between swaps.
 
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::metrics::ServerMetrics;
@@ -197,7 +209,14 @@ fn dispatch(
         return "ok pong".into();
     }
     if line == "stats" {
-        return format!("ok {}", metrics.summary());
+        let slots: Vec<String> =
+            registry.list().into_iter().map(|m| m.name).collect();
+        return format!(
+            "ok {} slots={} default={}",
+            metrics.summary(),
+            slots.join(","),
+            registry.default_name()
+        );
     }
     if line == "models" {
         let rows: Vec<String> = registry
@@ -228,7 +247,16 @@ fn dispatch(
         });
         return match SurrogateSpec::load_path(path) {
             Ok(model) => {
-                let model: Arc<dyn Surrogate> = Arc::from(model);
+                // Online-capable artifacts go behind the serving adapter
+                // so the new slot accepts observe/observeb right away
+                // (incremental only — runtime loads carry no refit spec).
+                let model: Arc<dyn Surrogate> = match crate::online::OnlineModel::try_new(
+                    model,
+                    crate::online::OnlinePolicy::default(),
+                ) {
+                    Ok(adapter) => Arc::new(adapter),
+                    Err(inner) => Arc::from(inner),
+                };
                 let (algo, dim) = (model.name().to_string(), model.dim());
                 registry.insert(name.clone(), model);
                 format!("ok loaded {name} {algo} d={dim}")
@@ -281,7 +309,11 @@ fn dispatch(
             };
             if let Some(d) = dim {
                 if point.len() != d {
-                    return err(format!("point {} has {} dims, expected {d}", rows + 1, point.len()));
+                    return err(format!(
+                        "point {} has {} dims, expected {d}",
+                        rows + 1,
+                        point.len()
+                    ));
                 }
             } else {
                 dim = Some(point.len());
@@ -297,6 +329,73 @@ fn dispatch(
                 let body: Vec<String> = pairs.into_iter().map(fmt_pair).collect();
                 format!("ok {}", body.join(";"))
             }
+            Err(e) => err(format!("{e:#}")),
+        };
+    }
+    if let Some(rest) = line.strip_prefix("observe ") {
+        // `observe [model] <csv>` where the CSV carries the point's
+        // features followed by the target value. Model-name detection
+        // mirrors `predict`.
+        let (model, csv) = match rest.trim().split_once(' ') {
+            Some((m, c))
+                if registry.contains(m.trim())
+                    || (!m.contains(',') && m.parse::<f64>().is_err()) =>
+            {
+                (Some(m.trim()), c.trim())
+            }
+            _ => (None, rest.trim()),
+        };
+        return match parse_csv_point(csv) {
+            Ok(row) if row.len() >= 2 => match batcher.observe_rows(model, row, 1) {
+                Ok(()) => "ok observed 1".into(),
+                Err(e) => err(format!("{e:#}")),
+            },
+            Ok(_) => err("observe needs at least one feature and a target".into()),
+            Err(e) => err(format!("{e:#}")),
+        };
+    }
+    if let Some(rest) = line.strip_prefix("observeb ") {
+        // `observeb [model] <n> <o1;o2;…>`, each `oi` a d+1-value CSV.
+        let tokens: Vec<&str> = rest.split_whitespace().collect();
+        let (model, n_str, body) = match tokens.as_slice() {
+            [n, body] => (None, *n, *body),
+            [model, n, body] => (Some(*model), *n, *body),
+            _ => return err("usage: observeb [model] <n> <o1;o2;...>".into()),
+        };
+        let n: usize = match n_str.parse() {
+            Ok(v) => v,
+            Err(_) => return err(format!("bad observation count {n_str:?}")),
+        };
+        let mut data = Vec::new();
+        let mut rows = 0;
+        let mut width = None;
+        for part in body.split(';') {
+            let row = match parse_csv_point(part) {
+                Ok(p) => p,
+                Err(e) => return err(format!("observation {}: {e:#}", rows + 1)),
+            };
+            if let Some(w) = width {
+                if row.len() != w {
+                    return err(format!(
+                        "observation {} has {} values, expected {w}",
+                        rows + 1,
+                        row.len()
+                    ));
+                }
+            } else {
+                if row.len() < 2 {
+                    return err("each observation needs features and a target".into());
+                }
+                width = Some(row.len());
+            }
+            data.extend_from_slice(&row);
+            rows += 1;
+        }
+        if rows != n {
+            return err(format!("declared {n} observations but got {rows}"));
+        }
+        return match batcher.observe_rows(model, data, rows) {
+            Ok(()) => format!("ok observed {rows}"),
             Err(e) => err(format!("{e:#}")),
         };
     }
@@ -396,6 +495,56 @@ impl Client {
         let reply = self.request("models")?;
         Ok(Self::expect_ok(&reply)?.to_string())
     }
+
+    /// Raw `stats` reply (metrics summary + slot names).
+    pub fn stats(&mut self) -> Result<String> {
+        let reply = self.request("stats")?;
+        Ok(Self::expect_ok(&reply)?.to_string())
+    }
+
+    /// Stream a batch of observations through the `observeb` protocol
+    /// path; `model` picks a registry slot (`None` = server default).
+    /// Returns the number of observations the server absorbed.
+    pub fn observe_batch<P: AsRef<[f64]>>(
+        &mut self,
+        model: Option<&str>,
+        points: &[P],
+        ys: &[f64],
+    ) -> Result<usize> {
+        anyhow::ensure!(!points.is_empty(), "observe_batch needs at least one observation");
+        anyhow::ensure!(
+            points.len() == ys.len(),
+            "observe_batch: {} points but {} targets",
+            points.len(),
+            ys.len()
+        );
+        let body: Vec<String> = points
+            .iter()
+            .zip(ys)
+            .map(|(p, y)| {
+                let mut row: Vec<String> =
+                    p.as_ref().iter().map(f64::to_string).collect();
+                row.push(y.to_string());
+                row.join(",")
+            })
+            .collect();
+        let prefix = match model {
+            Some(m) => format!("observeb {m} "),
+            None => "observeb ".to_string(),
+        };
+        let reply =
+            self.request(&format!("{prefix}{} {}", points.len(), body.join(";")))?;
+        let rest = Self::expect_ok(&reply)?;
+        let count = rest
+            .strip_prefix("observed ")
+            .with_context(|| format!("unexpected reply: {reply}"))?;
+        Ok(count.trim().parse()?)
+    }
+
+    /// Stream one observation (rides the batch path).
+    pub fn observe(&mut self, point: &[f64], y: f64) -> Result<()> {
+        self.observe_batch(None, &[point], &[y]).map(|_| ())
+    }
 }
 
 #[cfg(test)]
@@ -444,12 +593,112 @@ mod tests {
         .unwrap()
     }
 
+    /// Online-capable double: predicts the mean of absorbed targets.
+    struct Running {
+        dim: usize,
+        ys: std::sync::Mutex<Vec<f64>>,
+    }
+
+    impl Running {
+        fn new(dim: usize) -> Self {
+            Self { dim, ys: std::sync::Mutex::new(Vec::new()) }
+        }
+    }
+
+    impl Surrogate for Running {
+        fn predict(&self, xt: &Matrix) -> Result<crate::kriging::Prediction> {
+            let ys = self.ys.lock().unwrap();
+            let mean =
+                if ys.is_empty() { 0.0 } else { ys.iter().sum::<f64>() / ys.len() as f64 };
+            Ok(crate::kriging::Prediction {
+                mean: vec![mean; xt.rows()],
+                variance: vec![1.0; xt.rows()],
+            })
+        }
+        fn name(&self) -> &str {
+            "running"
+        }
+        fn dim(&self) -> usize {
+            self.dim
+        }
+        fn observer(&self) -> Option<&dyn crate::online::OnlineObserver> {
+            Some(self)
+        }
+    }
+
+    impl crate::online::OnlineObserver for Running {
+        fn observe_batch(&self, xs: &Matrix, ys: &[f64]) -> Result<()> {
+            anyhow::ensure!(xs.cols() == self.dim);
+            self.ys.lock().unwrap().extend_from_slice(ys);
+            Ok(())
+        }
+        fn online_stats(&self) -> crate::online::OnlineStats {
+            crate::online::OnlineStats {
+                observed: self.ys.lock().unwrap().len() as u64,
+                ..Default::default()
+            }
+        }
+    }
+
     #[test]
     fn ping_and_stats() {
         let server = start_server();
         let mut c = Client::connect(&server.local_addr.to_string()).unwrap();
         assert_eq!(c.request("ping").unwrap(), "ok pong");
-        assert!(c.request("stats").unwrap().starts_with("ok requests="));
+        let stats = c.request("stats").unwrap();
+        assert!(stats.starts_with("ok requests="), "{stats}");
+        // v3: slot names ride the stats reply.
+        assert!(stats.contains("observes=0"), "{stats}");
+        assert!(stats.contains("slots=default"), "{stats}");
+        assert!(stats.contains("default=default"), "{stats}");
+    }
+
+    #[test]
+    fn observe_roundtrip_updates_served_model() {
+        let server = Server::start_with_model(
+            Arc::new(Running::new(2)),
+            ServerConfig { addr: "127.0.0.1:0".into(), batcher: BatcherConfig::default() },
+        )
+        .unwrap();
+        let mut c = Client::connect(&server.local_addr.to_string()).unwrap();
+        // observe <x1>,<x2>,<y>
+        assert_eq!(c.request("observe 1.0,2.0,10").unwrap(), "ok observed 1");
+        assert_eq!(c.observe_batch(None, &[vec![0.0, 0.0]], &[20.0]).unwrap(), 1);
+        c.observe(&[5.0, 5.0], 30.0).unwrap();
+        // The served posterior reflects all three observations.
+        let (mean, _) = c.predict(&[9.0, 9.0]).unwrap();
+        assert_eq!(mean, 20.0);
+        let stats = c.stats().unwrap();
+        assert!(stats.contains("observes=3"), "{stats}");
+        assert_eq!(
+            server.metrics.observes.load(std::sync::atomic::Ordering::Relaxed),
+            3
+        );
+    }
+
+    #[test]
+    fn observe_protocol_errors() {
+        let server = start_server(); // Sum double: not online-capable
+        let mut c = Client::connect(&server.local_addr.to_string()).unwrap();
+        let reply = c.request("observe 1.0,2.0,3.0").unwrap();
+        assert!(reply.starts_with("err"), "{reply}");
+        assert!(reply.contains("not online-capable"), "{reply}");
+
+        let server = Server::start_with_model(
+            Arc::new(Running::new(2)),
+            ServerConfig { addr: "127.0.0.1:0".into(), batcher: BatcherConfig::default() },
+        )
+        .unwrap();
+        let mut c = Client::connect(&server.local_addr.to_string()).unwrap();
+        // A bare target with no features is malformed.
+        assert!(c.request("observe 1.0").unwrap().starts_with("err"));
+        // Count mismatch and ragged rows are protocol errors.
+        assert!(c.request("observeb 2 1,2,3").unwrap().starts_with("err"));
+        assert!(c.request("observeb 2 1,2,3;4,5").unwrap().starts_with("err"));
+        // Unknown slot.
+        assert!(c.request("observe nope 1,2,3").unwrap().starts_with("err"));
+        // Wrong dimensionality (model expects 2 features + target).
+        assert!(c.request("observe 1,2,3,4").unwrap().starts_with("err"));
     }
 
     #[test]

@@ -59,6 +59,32 @@ pub trait Surrogate: Send + Sync {
     fn save(&self, _w: &mut dyn std::io::Write) -> anyhow::Result<()> {
         anyhow::bail!("{} does not support artifact serialization", self.name())
     }
+
+    /// Shared online-learning view, for models that can absorb new
+    /// observations at serve time ([`crate::online::OnlineSurrogate`]):
+    /// Ordinary Kriging, the Cluster Kriging flavors, SoD, and
+    /// [`crate::surrogate::Standardized`] around any of them. The default
+    /// (`None`) marks the model fit-once (FITC, BCM, test doubles).
+    /// Implementations must answer consistently with
+    /// [`Self::as_online_mut`].
+    fn as_online(&self) -> Option<&dyn crate::online::OnlineSurrogate> {
+        None
+    }
+
+    /// Mutable counterpart of [`Self::as_online`] — the handle
+    /// `observe`/`observe_batch` mutate through.
+    fn as_online_mut(&mut self) -> Option<&mut dyn crate::online::OnlineSurrogate> {
+        None
+    }
+
+    /// Shared (interior-mutability) observation endpoint, implemented by
+    /// the serving adapter [`crate::online::OnlineModel`] so the
+    /// coordinator can stream observations into an `Arc<dyn Surrogate>`
+    /// registry slot. Plain fitted models keep the default `None`; mutate
+    /// those through [`Self::as_online_mut`] instead.
+    fn observer(&self) -> Option<&dyn crate::online::OnlineObserver> {
+        None
+    }
 }
 
 impl Surrogate for OrdinaryKriging {
@@ -98,5 +124,23 @@ impl Surrogate for OrdinaryKriging {
             crate::surrogate::artifact::TAG_KRIGING,
             &payload.into_bytes(),
         )
+    }
+
+    fn as_online(&self) -> Option<&dyn crate::online::OnlineSurrogate> {
+        Some(self)
+    }
+
+    fn as_online_mut(&mut self) -> Option<&mut dyn crate::online::OnlineSurrogate> {
+        Some(self)
+    }
+}
+
+impl crate::online::OnlineSurrogate for OrdinaryKriging {
+    fn observe(&mut self, x: &[f64], y: f64) -> anyhow::Result<()> {
+        Ok(self.observe_point(x, y)?)
+    }
+
+    fn training_snapshot(&self) -> (Matrix, Vec<f64>) {
+        (self.x_train().clone(), self.y_train().to_vec())
     }
 }

@@ -62,6 +62,10 @@ pub struct OrdinaryKriging {
     /// per cluster reference one buffer instead of cloning n×d doubles
     /// per objective evaluation.
     x: Arc<Matrix>,
+    /// Training targets — kept so online updates ([`Self::observe_point`])
+    /// can re-concentrate μ̂/σ̂²/α after the factor grows, and so refits
+    /// can snapshot the effective training set.
+    y: Vec<f64>,
     chol: Cholesky,
     /// α = C⁻¹(y − μ̂·1): the prediction weights.
     alpha: Vec<f64>,
@@ -178,34 +182,118 @@ impl OrdinaryKriging {
         c: Matrix,
         workers: usize,
     ) -> Result<Self, KrigingError> {
-        let n = x.rows();
         let chol = Cholesky::new_regularized_with_workers(&c, workers)?;
+        let (alpha, one_c_one, mu_hat, sigma2, nll) = concentrate(&chol, y)?;
+        Ok(Self {
+            kernel,
+            nugget,
+            x,
+            y: y.to_vec(),
+            chol,
+            alpha,
+            one_c_one,
+            mu_hat,
+            sigma2,
+            nll,
+        })
+    }
 
-        // μ̂ = (1ᵀC⁻¹y)/(1ᵀC⁻¹1)  (MAP trend, Eq. 4 right).
-        let ones = vec![1.0; n];
-        let c_inv_one = chol.solve(&ones);
-        let c_inv_y = chol.solve(y);
-        let one_c_one: f64 = c_inv_one.iter().sum();
-        let one_c_y: f64 = c_inv_y.iter().sum();
-        let mu_hat = one_c_y / one_c_one;
-
-        // α = C⁻¹(y − μ̂1) = C⁻¹y − μ̂·C⁻¹1.
-        let alpha: Vec<f64> =
-            c_inv_y.iter().zip(&c_inv_one).map(|(a, b)| a - mu_hat * b).collect();
-
-        // σ̂² = (y−μ̂1)ᵀC⁻¹(y−μ̂1)/n.
-        let resid_quad: f64 =
-            y.iter().zip(&alpha).map(|(yi, ai)| (yi - mu_hat) * ai).sum();
-        let sigma2 = (resid_quad / n as f64).max(1e-300);
-
-        // Concentrated NLL (up to an additive constant):
-        //   n·ln σ̂² + ln|C|, halved.
-        let nll = 0.5 * (n as f64 * sigma2.ln() + chol.log_det());
-        if !nll.is_finite() {
-            return Err(KrigingError::NonFinite("likelihood"));
+    /// Absorb one observation under **fixed hyper-parameters**: extend the
+    /// Cholesky factor by one row ([`Cholesky::append`], O(n²)) and
+    /// re-concentrate μ̂/σ̂²/α with two triangular solves — instead of the
+    /// O(n³) refit a fresh point would otherwise cost. Predictions after
+    /// `observe_point` match a from-scratch fit on the extended training
+    /// set (same θ/λ) to rounding error.
+    ///
+    /// If the incremental append hits a non-PD pivot (the new point
+    /// coincides with an existing one and the nugget can't separate them),
+    /// the update falls back to a full jitter-escalating refactorization,
+    /// mirroring [`Cholesky::new_regularized`] at fit time.
+    ///
+    /// The update is atomic: every fallible step runs on candidate state,
+    /// and `self` is only committed on success — an `Err` leaves the
+    /// model exactly as it was, still serving consistent predictions.
+    pub fn observe_point(&mut self, x_new: &[f64], y_new: f64) -> Result<(), KrigingError> {
+        self.validate_observation(x_new, y_new)?;
+        let n = self.x.rows();
+        let mut r = Vec::with_capacity(n);
+        for j in 0..n {
+            r.push(self.kernel.corr(x_new, self.x.row(j)));
         }
+        let x_aug = append_row(&self.x, x_new);
+        let mut y_aug = self.y.clone();
+        y_aug.push(y_new);
+        let chol = match self.chol.appended(&r, 1.0 + self.nugget) {
+            Ok(c) => c,
+            Err(_) => factor_full(&self.kernel, &x_aug, self.nugget)?,
+        };
+        self.commit(x_aug, y_aug, chol)
+    }
 
-        Ok(Self { kernel, nugget, x, chol, alpha, one_c_one, mu_hat, sigma2, nll })
+    /// Replace training point `i` with a new observation — the reservoir-
+    /// sampling / sliding-window eviction op: O(n²) via
+    /// [`Cholesky::removed_row`] + [`Cholesky::appended`], with the same
+    /// full-refactorization fallback and commit-on-success atomicity as
+    /// [`Self::observe_point`].
+    pub fn replace_point(
+        &mut self,
+        i: usize,
+        x_new: &[f64],
+        y_new: f64,
+    ) -> Result<(), KrigingError> {
+        let n = self.x.rows();
+        assert!(i < n, "replace_point: index {i} out of range for {n} training points");
+        self.validate_observation(x_new, y_new)?;
+        if n == 1 {
+            // Cannot empty the factor; rebuild the 1-point model directly.
+            let x_aug = Matrix::from_vec(1, x_new.len(), x_new.to_vec());
+            let chol = factor_full(&self.kernel, &x_aug, self.nugget)?;
+            return self.commit(x_aug, vec![y_new], chol);
+        }
+        let keep: Vec<usize> = (0..n).filter(|&j| j != i).collect();
+        let x_kept = self.x.select_rows(&keep);
+        let mut y_aug: Vec<f64> = keep.iter().map(|&j| self.y[j]).collect();
+        y_aug.push(y_new);
+        let m = x_kept.rows();
+        let mut r = Vec::with_capacity(m);
+        for j in 0..m {
+            r.push(self.kernel.corr(x_new, x_kept.row(j)));
+        }
+        let x_aug = append_row(&x_kept, x_new);
+        let shrunk = self.chol.removed_row(i);
+        let chol = match shrunk.appended(&r, 1.0 + self.nugget) {
+            Ok(c) => c,
+            Err(_) => factor_full(&self.kernel, &x_aug, self.nugget)?,
+        };
+        self.commit(x_aug, y_aug, chol)
+    }
+
+    fn validate_observation(&self, x_new: &[f64], y_new: f64) -> Result<(), KrigingError> {
+        if x_new.len() != self.kernel.dim() {
+            return Err(KrigingError::DimMismatch {
+                x_cols: x_new.len(),
+                kernel_dim: self.kernel.dim(),
+            });
+        }
+        if !y_new.is_finite() || x_new.iter().any(|v| !v.is_finite()) {
+            return Err(KrigingError::NonFinite("observation"));
+        }
+        Ok(())
+    }
+
+    /// Re-concentrate on the candidate state and, only if that succeeds,
+    /// swap everything in — the single commit point of the online ops.
+    fn commit(&mut self, x: Matrix, y: Vec<f64>, chol: Cholesky) -> Result<(), KrigingError> {
+        let (alpha, one_c_one, mu_hat, sigma2, nll) = concentrate(&chol, &y)?;
+        self.x = Arc::new(x);
+        self.y = y;
+        self.chol = chol;
+        self.alpha = alpha;
+        self.one_c_one = one_c_one;
+        self.mu_hat = mu_hat;
+        self.sigma2 = sigma2;
+        self.nll = nll;
+        Ok(())
     }
 
     /// Posterior mean and Kriging variance at each row of `xt` (m×d).
@@ -344,6 +432,11 @@ impl OrdinaryKriging {
         &self.x
     }
 
+    /// Training targets (kept for online updates and refit snapshots).
+    pub fn y_train(&self) -> &[f64] {
+        &self.y
+    }
+
     /// Prediction weights α = C⁻¹(y − μ̂1).
     pub fn alpha(&self) -> &[f64] {
         &self.alpha
@@ -364,12 +457,20 @@ impl OrdinaryKriging {
         w.put_f64(self.mu_hat);
         w.put_f64(self.sigma2);
         w.put_f64(self.nll);
+        // v2: training targets (online state). Appended last so the v1
+        // field order above is a strict prefix.
+        w.put_f64_slice(&self.y);
     }
 
     /// Inverse of [`Self::write_artifact`]; validates cross-field shape
     /// consistency so a corrupted payload is a recoverable error.
+    /// `version` is the enclosing artifact's container version: v2
+    /// payloads carry the training targets; for v1 payloads `y` is
+    /// reconstructed from the stored factor via `y = L·Lᵀ·α + μ̂·1` (O(n²)),
+    /// so pre-online artifacts stay fully observable.
     pub(crate) fn read_artifact(
         r: &mut crate::util::binio::BinReader<'_>,
+        version: u32,
     ) -> anyhow::Result<Self> {
         use anyhow::{ensure, Context};
         let kind_name = r.get_str()?;
@@ -394,10 +495,23 @@ impl OrdinaryKriging {
         ensure!(x.cols() == theta.len(), "x/θ dimension mismatch in artifact");
         ensure!(l.rows() == n && l.cols() == n, "factor/x shape mismatch in artifact");
         ensure!(alpha.len() == n, "α/x length mismatch in artifact");
+        let y = if version >= 2 {
+            let y = r.get_f64_vec()?;
+            ensure!(y.len() == n, "y/x length mismatch in artifact");
+            y
+        } else {
+            // The fit solved α through the (possibly jittered) factor
+            // itself — α = (L·Lᵀ)⁻¹(y − μ̂·1) — so inverting it is exactly
+            // y = L·(Lᵀα) + μ̂·1, with no jitter correction.
+            let t = l.matvec_t(&alpha);
+            let lt = l.matvec(&t);
+            (0..n).map(|i| lt[i] + mu_hat).collect()
+        };
         Ok(Self {
             kernel: Kernel::new(kind, theta),
             nugget,
             x: Arc::new(x),
+            y,
             chol: Cholesky::from_parts(l, jitter)?,
             alpha,
             one_c_one,
@@ -406,6 +520,62 @@ impl OrdinaryKriging {
             nll,
         })
     }
+}
+
+/// New matrix with `row` appended (O(n·d) copy — the O(n²) solves
+/// dominate every caller).
+fn append_row(x: &Matrix, row: &[f64]) -> Matrix {
+    let (n, d) = x.shape();
+    let mut data = Vec::with_capacity((n + 1) * d);
+    data.extend_from_slice(x.as_slice());
+    data.extend_from_slice(row);
+    Matrix::from_vec(n + 1, d, data)
+}
+
+/// Factor `R(x) + nugget·I` from scratch with jitter escalation — the
+/// rare fallback when an incremental factor update hits a non-PD pivot.
+/// Uses the machine's worker budget: online updates run on a serving
+/// thread (not nested inside a fit pool), and at large n this O(n³) path
+/// executes under the adapter's write lock, so wall-clock matters.
+fn factor_full(kernel: &Kernel, x: &Matrix, nugget: f64) -> Result<Cholesky, KrigingError> {
+    let workers = default_workers();
+    let mut c = kernel.corr_matrix_parallel(x, workers);
+    for i in 0..x.rows() {
+        c[(i, i)] += nugget;
+    }
+    Ok(Cholesky::new_regularized_with_workers(&c, workers)?)
+}
+
+/// Concentrated estimates given a factored `C = R + λI` and targets `y`:
+/// returns `(α, 1ᵀC⁻¹1, μ̂, σ̂², NLL)`. Shared by the fit tail and the
+/// online re-solve after an incremental factor update.
+fn concentrate(
+    chol: &Cholesky,
+    y: &[f64],
+) -> Result<(Vec<f64>, f64, f64, f64, f64), KrigingError> {
+    let n = y.len();
+    debug_assert_eq!(chol.dim(), n, "concentrate: factor/target size mismatch");
+    // μ̂ = (1ᵀC⁻¹y)/(1ᵀC⁻¹1)  (MAP trend, Eq. 4 right).
+    let ones = vec![1.0; n];
+    let c_inv_one = chol.solve(&ones);
+    let c_inv_y = chol.solve(y);
+    let one_c_one: f64 = c_inv_one.iter().sum();
+    let one_c_y: f64 = c_inv_y.iter().sum();
+    let mu_hat = one_c_y / one_c_one;
+
+    // α = C⁻¹(y − μ̂1) = C⁻¹y − μ̂·C⁻¹1.
+    let alpha: Vec<f64> = c_inv_y.iter().zip(&c_inv_one).map(|(a, b)| a - mu_hat * b).collect();
+
+    // σ̂² = (y−μ̂1)ᵀC⁻¹(y−μ̂1)/n.
+    let resid_quad: f64 = y.iter().zip(&alpha).map(|(yi, ai)| (yi - mu_hat) * ai).sum();
+    let sigma2 = (resid_quad / n as f64).max(1e-300);
+
+    // Concentrated NLL (up to an additive constant): n·ln σ̂² + ln|C|, halved.
+    let nll = 0.5 * (n as f64 * sigma2.ln() + chol.log_det());
+    if !nll.is_finite() {
+        return Err(KrigingError::NonFinite("likelihood"));
+    }
+    Ok((alpha, one_c_one, mu_hat, sigma2, nll))
 }
 
 #[cfg(test)]
@@ -608,6 +778,90 @@ mod tests {
             OrdinaryKriging::fit_with_cache(x, &y, abs_kern, 1e-8, &sq_cache, 1),
             Err(KrigingError::CacheMismatch { .. })
         ));
+    }
+
+    #[test]
+    fn observe_point_matches_fit_from_scratch() {
+        let (mut m, x, y) = toy_model(30, 8, 1e-6);
+        let mut rng = Rng::new(99);
+        let xs = gen_matrix(&mut rng, 5, 2, -2.0, 2.0);
+        let mut x_all = x.clone();
+        let mut y_all = y.clone();
+        for i in 0..5 {
+            let yi = xs.row(i)[0].sin() + 0.5 * xs.row(i)[1];
+            m.observe_point(xs.row(i), yi).unwrap();
+            x_all = x_all.vstack(&Matrix::from_vec(1, 2, xs.row(i).to_vec()));
+            y_all.push(yi);
+        }
+        let fresh = OrdinaryKriging::fit(x_all, &y_all, m.kernel().clone(), 1e-6).unwrap();
+        assert!((m.mu_hat() - fresh.mu_hat()).abs() < 1e-9);
+        assert!((m.sigma2() - fresh.sigma2()).abs() / fresh.sigma2() < 1e-8);
+        let probe = gen_matrix(&mut rng, 10, 2, -2.5, 2.5);
+        let po = m.predict(&probe).unwrap();
+        let pf = fresh.predict(&probe).unwrap();
+        for i in 0..10 {
+            let scale = pf.mean[i].abs().max(1.0);
+            assert!(
+                (po.mean[i] - pf.mean[i]).abs() / scale < 1e-8,
+                "mean diverged at {i}: {} vs {}",
+                po.mean[i],
+                pf.mean[i]
+            );
+            let vscale = pf.variance[i].max(1e-12);
+            assert!(
+                (po.variance[i] - pf.variance[i]).abs() / vscale < 1e-6,
+                "variance diverged at {i}: {} vs {}",
+                po.variance[i],
+                pf.variance[i]
+            );
+        }
+    }
+
+    #[test]
+    fn replace_point_matches_fit_from_scratch() {
+        let (mut m, x, y) = toy_model(25, 12, 1e-6);
+        let new_x = [0.33, -0.7];
+        let new_y = 0.9;
+        m.replace_point(7, &new_x, new_y).unwrap();
+        let keep: Vec<usize> = (0..25).filter(|&j| j != 7).collect();
+        let x_ref =
+            x.select_rows(&keep).vstack(&Matrix::from_vec(1, 2, new_x.to_vec()));
+        let mut y_ref: Vec<f64> = keep.iter().map(|&j| y[j]).collect();
+        y_ref.push(new_y);
+        let fresh = OrdinaryKriging::fit(x_ref, &y_ref, m.kernel().clone(), 1e-6).unwrap();
+        let (mo, vo) = m.predict_one(&[0.2, 0.4]);
+        let (mf, vf) = fresh.predict_one(&[0.2, 0.4]);
+        assert!((mo - mf).abs() < 1e-8, "{mo} vs {mf}");
+        assert!((vo - vf).abs() < 1e-8, "{vo} vs {vf}");
+        assert_eq!(m.n_train(), 25);
+        assert_eq!(m.y_train().len(), 25);
+    }
+
+    #[test]
+    fn observe_duplicate_point_falls_back_to_refactor() {
+        // With a negligible nugget, appending an exact duplicate of a
+        // training point makes C singular; the incremental append fails
+        // and the jitter-escalating refactorization must rescue it.
+        let (mut m, x, _) = toy_model(15, 14, 1e-12);
+        let dup = x.row(3).to_vec();
+        m.observe_point(&dup, 1.25).unwrap();
+        assert_eq!(m.n_train(), 16);
+        let pred = m.predict(&x).unwrap();
+        assert!(pred.mean.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn observe_rejects_bad_input() {
+        let (mut m, _, _) = toy_model(10, 15, 1e-8);
+        assert!(matches!(
+            m.observe_point(&[1.0], 0.0),
+            Err(KrigingError::DimMismatch { .. })
+        ));
+        assert!(matches!(
+            m.observe_point(&[1.0, 2.0], f64::NAN),
+            Err(KrigingError::NonFinite(_))
+        ));
+        assert_eq!(m.n_train(), 10, "rejected observation mutated the model");
     }
 
     #[test]

@@ -35,6 +35,12 @@
 //!    a micro-batching TCP server: `fit` writes an artifact, `serve`
 //!    boots from it, and protocol v2 (`predict`, `predictb`, `models`,
 //!    `load`, `swap`) hot-swaps models under live traffic.
+//! 5. **Observe** — served models absorb new observations in place
+//!    ([`online`]): protocol v3 adds `observe`/`observeb`, which stream
+//!    through the [`coordinator::Batcher`] into an O(n²) incremental
+//!    Cholesky update of the routed cluster — and a refit policy engine
+//!    (staleness budgets + drift monitoring) runs full background refits
+//!    that hot-swap through the registry when incremental stops sufficing.
 //!
 //! Architecture: a three-layer Rust + JAX + Pallas stack. The Rust layer
 //! (this crate) owns coordination — clustering, parallel fit, routing,
@@ -54,3 +60,4 @@ pub mod metrics;
 pub mod eval;
 pub mod runtime;
 pub mod coordinator;
+pub mod online;

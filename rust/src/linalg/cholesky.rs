@@ -390,6 +390,92 @@ impl Cholesky {
         z.iter().map(|v| v * v).sum()
     }
 
+    /// Grow the factor by one row: after `append`, `L·Lᵀ = A' (+ jitter·I)`
+    /// where `A'` is `A` extended by the symmetric row/column `row` with
+    /// diagonal entry `diag`. Cost is one forward solve plus an O(n²)
+    /// copy — the online-learning alternative to an O(n³) refactorization.
+    ///
+    /// The new row of `L` is exactly what the unblocked factorization
+    /// would compute for the last row (`L[n][j] = (a[j] − Σ L[n][p]L[j][p])
+    /// / L[j][j]` *is* forward substitution), so appending points one by
+    /// one tracks a from-scratch factor to rounding error.
+    ///
+    /// Fails with [`CholeskyError::NotPositiveDefinite`] when the extended
+    /// matrix is not PD (e.g. the new point duplicates an existing one and
+    /// no nugget separates them); the factor is left unchanged in that
+    /// case.
+    pub fn append(&mut self, row: &[f64], diag: f64) -> Result<(), CholeskyError> {
+        *self = self.appended(row, diag)?;
+        Ok(())
+    }
+
+    /// Non-mutating form of [`Self::append`]: returns the grown factor,
+    /// leaving `self` untouched — the building block for callers that
+    /// must commit several dependent updates atomically (the online
+    /// observe path). Costs the same O(n²) copy `append` pays.
+    pub fn appended(&self, row: &[f64], diag: f64) -> Result<Self, CholeskyError> {
+        let n = self.dim();
+        assert_eq!(row.len(), n, "append: row length must match the current order");
+        // z = L⁻¹·row — the new off-diagonal row of the factor.
+        let z = self.forward(row);
+        let pivot = diag + self.jitter - z.iter().map(|v| v * v).sum::<f64>();
+        if pivot <= 0.0 || !pivot.is_finite() {
+            return Err(CholeskyError::NotPositiveDefinite {
+                index: n,
+                pivot,
+                jitter: self.jitter,
+            });
+        }
+        let mut l = Matrix::zeros(n + 1, n + 1);
+        {
+            let src = self.l.as_slice();
+            let dst = l.as_mut_slice();
+            for i in 0..n {
+                dst[i * (n + 1)..i * (n + 1) + i + 1].copy_from_slice(&src[i * n..i * n + i + 1]);
+            }
+            dst[n * (n + 1)..n * (n + 1) + n].copy_from_slice(&z);
+            dst[n * (n + 1) + n] = pivot.sqrt();
+        }
+        Ok(Self { l, jitter: self.jitter })
+    }
+
+    /// Shrink the factor by deleting row/column `r` of the underlying
+    /// matrix — the sliding-window eviction op. Rows above `r` are
+    /// untouched; rows below shift up with column `r` dropped, and the
+    /// trailing block absorbs the deleted column as a rank-1 update
+    /// ([`rank_one_update`]), since for `A = L·Lᵀ` deleting index `r`
+    /// leaves `A₃₃ = L₃₃·L₃₃ᵀ + l₃₂·l₃₂ᵀ`. Cost O((n−r)²); cannot fail.
+    pub fn remove_row(&mut self, r: usize) {
+        *self = self.removed_row(r);
+    }
+
+    /// Non-mutating form of [`Self::remove_row`] (see [`Self::appended`]
+    /// for why both forms exist).
+    pub fn removed_row(&self, r: usize) -> Self {
+        let n = self.dim();
+        assert!(r < n, "remove_row: index {r} out of range for order {n}");
+        assert!(n > 1, "remove_row: cannot empty the factor");
+        let m = n - 1;
+        let mut l = Matrix::zeros(m, m);
+        let mut v = Vec::with_capacity(n - r - 1);
+        {
+            let src = self.l.as_slice();
+            let dst = l.as_mut_slice();
+            for i in 0..r {
+                dst[i * m..i * m + i + 1].copy_from_slice(&src[i * n..i * n + i + 1]);
+            }
+            for i in (r + 1)..n {
+                let srow = &src[i * n..i * n + i + 1];
+                let drow = &mut dst[(i - 1) * m..(i - 1) * m + i];
+                drow[..r].copy_from_slice(&srow[..r]);
+                drow[r..i].copy_from_slice(&srow[r + 1..i + 1]);
+                v.push(srow[r]);
+            }
+        }
+        rank_one_update(&mut l, r, &mut v);
+        Self { l, jitter: self.jitter }
+    }
+
     /// Reconstruct `L·Lᵀ` (testing / diagnostics).
     pub fn reconstruct(&self) -> Matrix {
         let n = self.dim();
@@ -406,6 +492,31 @@ impl Cholesky {
             }
         }
         a
+    }
+}
+
+/// Rank-1 *update* of the trailing block of a lower-triangular factor:
+/// rewrites rows/columns `start..` of `l` so that the block satisfies
+/// `L'·L'ᵀ = L·Lᵀ + v·vᵀ` (the classic `cholupdate` sweep of Givens-like
+/// plane rotations). `v.len()` must equal `l.rows() − start`; `v` is
+/// consumed as workspace. Adding `v·vᵀ` keeps the matrix PD, so unlike a
+/// true downdate this cannot fail.
+pub fn rank_one_update(l: &mut Matrix, start: usize, v: &mut [f64]) {
+    let m = l.rows();
+    debug_assert_eq!(l.cols(), m, "rank_one_update: factor must be square");
+    assert_eq!(start + v.len(), m, "rank_one_update: vector/block size mismatch");
+    for k in 0..v.len() {
+        let row = start + k;
+        let lkk = l[(row, row)];
+        let r = (lkk * lkk + v[k] * v[k]).sqrt();
+        let c = r / lkk;
+        let s = v[k] / lkk;
+        l[(row, row)] = r;
+        for i in (k + 1)..v.len() {
+            let updated = (l[(start + i, row)] + s * v[i]) / c;
+            l[(start + i, row)] = updated;
+            v[i] = c * v[i] - s * updated;
+        }
     }
 }
 
@@ -544,6 +655,105 @@ mod tests {
         let x = c.solve(&b);
         let err = x.iter().zip(&x_true).map(|(p, q)| (p - q).abs()).fold(0.0, f64::max);
         assert!(err < 1e-7, "solve error {err}");
+    }
+
+    #[test]
+    fn append_matches_refactorization_prop() {
+        // Factor the leading n×n block, append the last row, compare to a
+        // from-scratch factor of the full (n+1)×(n+1) matrix.
+        check_default(|rng| {
+            let n = gen_size(rng, 1, 24);
+            let full = gen_spd(rng, n + 1);
+            let rows: Vec<usize> = (0..n).collect();
+            let mut c = Cholesky::new(&full.select_rows(&rows).transpose().select_rows(&rows))
+                .map_err(|e| e.to_string())?;
+            let last: Vec<f64> = (0..n).map(|j| full[(n, j)]).collect();
+            c.append(&last, full[(n, n)]).map_err(|e| e.to_string())?;
+            let fresh = Cholesky::new(&full).map_err(|e| e.to_string())?;
+            let diff = c.l().max_abs_diff(fresh.l());
+            crate::prop_assert!(diff < 1e-8, "appended factor differs by {diff} (n={n})");
+            crate::prop_assert!(
+                c.reconstruct().max_abs_diff(&full) < 1e-8,
+                "appended LLᵀ != A (n={n})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn append_rejects_duplicate_row_without_nugget() {
+        // Appending an exact copy of an existing point (correlation 1 to
+        // itself) makes the matrix singular: pivot ≤ 0, factor unchanged.
+        let a = Matrix::from_rows(&[&[1.0, 0.3], &[0.3, 1.0]]);
+        let mut c = Cholesky::new(&a).unwrap();
+        let before = c.l().clone();
+        let err = c.append(&[1.0, 0.3], 1.0);
+        assert!(matches!(err, Err(CholeskyError::NotPositiveDefinite { index: 2, .. })));
+        assert_eq!(c.l().as_slice(), before.as_slice(), "failed append mutated the factor");
+    }
+
+    #[test]
+    fn remove_row_matches_refactorization_prop() {
+        check_default(|rng| {
+            let n = gen_size(rng, 2, 24);
+            let a = gen_spd(rng, n);
+            let r = gen_size(rng, 0, n - 1);
+            let mut c = Cholesky::new(&a).map_err(|e| e.to_string())?;
+            c.remove_row(r);
+            let keep: Vec<usize> = (0..n).filter(|&i| i != r).collect();
+            let sub = a.select_rows(&keep).transpose().select_rows(&keep);
+            let fresh = Cholesky::new(&sub).map_err(|e| e.to_string())?;
+            let diff = c.l().max_abs_diff(fresh.l());
+            crate::prop_assert!(diff < 1e-8, "downdated factor differs by {diff} (n={n}, r={r})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sliding_window_cycle_stays_consistent_prop() {
+        // Evict-oldest + append-newest over several steps (the sliding
+        // window pattern) must keep tracking the window's true factor.
+        check_default(|rng| {
+            let window = gen_size(rng, 3, 10);
+            let steps = gen_size(rng, 1, 6);
+            let total = window + steps;
+            let full = gen_spd(rng, total);
+            let sub = |lo: usize| {
+                let idx: Vec<usize> = (lo..lo + window).collect();
+                full.select_rows(&idx).transpose().select_rows(&idx)
+            };
+            let mut c = Cholesky::new(&sub(0)).map_err(|e| e.to_string())?;
+            for s in 0..steps {
+                c.remove_row(0);
+                let new = window + s;
+                let row: Vec<f64> = (s + 1..new).map(|j| full[(new, j)]).collect();
+                c.append(&row, full[(new, new)]).map_err(|e| e.to_string())?;
+                let diff = c.reconstruct().max_abs_diff(&sub(s + 1));
+                crate::prop_assert!(diff < 1e-7, "window drifted by {diff} at step {s}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rank_one_update_matches_direct_factorization() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        for n in [1usize, 3, 8, 17] {
+            let a = crate::util::proptest::gen_spd(&mut rng, n);
+            let v = crate::util::proptest::gen_vec(&mut rng, n, -1.0, 1.0);
+            let mut updated = a.clone();
+            for i in 0..n {
+                for j in 0..n {
+                    updated[(i, j)] += v[i] * v[j];
+                }
+            }
+            let mut l = Cholesky::new(&a).unwrap().l().clone();
+            let mut work = v.clone();
+            rank_one_update(&mut l, 0, &mut work);
+            let fresh = Cholesky::new(&updated).unwrap();
+            let diff = l.max_abs_diff(fresh.l());
+            assert!(diff < 1e-9, "rank-1 update differs by {diff} (n={n})");
+        }
     }
 
     #[test]

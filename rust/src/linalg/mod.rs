@@ -10,4 +10,4 @@ pub mod blas;
 pub mod cholesky;
 pub mod eig;
 
-pub use cholesky::{Cholesky, CholeskyError};
+pub use cholesky::{rank_one_update, Cholesky, CholeskyError};

@@ -4,10 +4,11 @@
 //!   experiment  regenerate the paper's tables/figure data
 //!   fit         fit one flavor on a dataset and score a holdout
 //!   serve       start the TCP prediction server on a fitted model
+//!   stream      stream observations into a running server (protocol v3)
 //!   info        show PJRT platform + discovered artifacts
 
 use anyhow::{bail, Context, Result};
-use cluster_kriging::coordinator::{BatcherConfig, ModelRegistry, Server, ServerConfig};
+use cluster_kriging::coordinator::{BatcherConfig, Client, ModelRegistry, Server, ServerConfig};
 use cluster_kriging::data::functions;
 use cluster_kriging::data::synthetic::from_benchmark;
 use cluster_kriging::data::{uci_like, Dataset, Standardizer};
@@ -16,6 +17,7 @@ use cluster_kriging::eval::report::{self, PaperTable};
 use cluster_kriging::eval::HarnessConfig;
 use cluster_kriging::kriging::{HyperOpt, Surrogate};
 use cluster_kriging::metrics;
+use cluster_kriging::online::{OnlineModel, OnlinePolicy, RefitConfig};
 use cluster_kriging::surrogate::{self, FitOptions, Standardized, SurrogateSpec};
 use cluster_kriging::util::cli::Args;
 use std::sync::Arc;
@@ -33,6 +35,7 @@ fn main() {
         Some("experiment") => cmd_experiment(&args),
         Some("fit") => cmd_fit(&args),
         Some("serve") => cmd_serve(&args),
+        Some("stream") => cmd_stream(&args),
         Some("info") => cmd_info(&args),
         _ => {
             print_usage();
@@ -57,12 +60,18 @@ fn print_usage() {
          \u{20}          (or legacy --flavor OWCK|OWFCK|GMMCK|MTCK --k K)\n\
          serve      --artifact model.ck [--name SLOT] [--addr host:port]\n\
          \u{20}          (or fit-then-serve: --dataset <name> --algo SPEC)\n\
+         \u{20}          [--staleness N] [--drift-z Z] [--drift-window W]\n\
+         stream     --addr host:port --dataset <name> [--n N] [--batch B]\n\
+         \u{20}          [--model SLOT] [--seed S] [--drift D]\n\
          info       [--artifacts DIR]\n\
          \n\
          SPEC names any algorithm: mtck:8 owck:4 sod:512 fitc:64 bcm:8\n\
          \u{20}    bcm-sh:8 kriging — `fit --out` writes a binary artifact that\n\
          \u{20}    `serve --artifact` boots in milliseconds (no refit); the live\n\
-         \u{20}    server hot-swaps models via `load <path> [name]` + `swap <name>`.\n\
+         \u{20}    server hot-swaps models via `load <path> [name]` + `swap <name>`,\n\
+         \u{20}    absorbs `observe`/`observeb` traffic in place (O(n_c²) cluster-\n\
+         \u{20}    local updates), and background-refits when the staleness budget\n\
+         \u{20}    or the drift monitor says the stream outgrew the fit.\n\
          \n\
          datasets: concrete ccpp sarcos ackley schaffer schwefel rast h1\n\
          \u{20}         rosenbrock himmelblau diffpow"
@@ -216,47 +225,141 @@ fn cmd_fit(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7471").to_string();
     let name = args.get_or("name", "default").to_string();
-
-    let model: Arc<dyn Surrogate> = if let Some(artifact) = args.get("artifact") {
-        // Millisecond cold boot: load the fitted model, no refit.
-        let t0 = std::time::Instant::now();
-        let model = SurrogateSpec::load_path(artifact)?;
-        eprintln!(
-            "loaded {} ({} dims) from {artifact} in {:.1} ms",
-            model.name(),
-            model.dim(),
-            t0.elapsed().as_secs_f64() * 1e3
-        );
-        Arc::from(model)
-    } else {
-        let dataset: String = args.require("dataset").context(
-            "serve needs --artifact model.ck (preferred) or --dataset to fit-then-serve",
-        )?;
-        let seed: u64 = args.get_parsed_or("seed", 1)?;
-        let n: Option<usize> = args.get_parsed_or("n", 0).ok().filter(|&v| v > 0);
-        let spec = resolve_spec(args, "mtck:4")?;
-        let ds = load_dataset(&dataset, seed, n)?;
-        eprintln!("fitting {spec} on {} ({}×{})…", ds.name, ds.n(), ds.d());
-        let (model, _) = fit_spec(&ds, &spec, seed)?;
-        Arc::new(model)
+    let policy = OnlinePolicy {
+        staleness_budget: args.get_parsed_or("staleness", 512)?,
+        drift_window: args.get_parsed_or("drift-window", 64)?,
+        drift_zscore: args.get_parsed_or("drift-z", 3.0)?,
+        ..OnlinePolicy::default()
     };
 
+    // `refit` carries the spec when we fitted it ourselves (fit-then-
+    // serve); artifact boots don't know their spec, so they observe
+    // incrementally without policy-triggered refits.
+    let (model, refit): (Box<dyn Surrogate>, Option<RefitConfig>) =
+        if let Some(artifact) = args.get("artifact") {
+            // Millisecond cold boot: load the fitted model, no refit.
+            let t0 = std::time::Instant::now();
+            let model = SurrogateSpec::load_path(artifact)?;
+            eprintln!(
+                "loaded {} ({} dims) from {artifact} in {:.1} ms",
+                model.name(),
+                model.dim(),
+                t0.elapsed().as_secs_f64() * 1e3
+            );
+            (model, None)
+        } else {
+            let dataset: String = args.require("dataset").context(
+                "serve needs --artifact model.ck (preferred) or --dataset to fit-then-serve",
+            )?;
+            let seed: u64 = args.get_parsed_or("seed", 1)?;
+            let n: Option<usize> = args.get_parsed_or("n", 0).ok().filter(|&v| v > 0);
+            let spec = resolve_spec(args, "mtck:4")?;
+            let ds = load_dataset(&dataset, seed, n)?;
+            eprintln!("fitting {spec} on {} ({}×{})…", ds.name, ds.n(), ds.d());
+            let (model, _) = fit_spec(&ds, &spec, seed)?;
+            let refit = RefitConfig { spec, opts: FitOptions::fast() };
+            (Box::new(model), Some(refit))
+        };
+
     let dim = model.dim();
-    let registry = Arc::new(ModelRegistry::new(name, model));
+    // Online-capable models serve behind the OnlineModel adapter so the
+    // protocol's observe/observeb ops work; fit-once models serve as-is.
+    let (model, online): (Arc<dyn Surrogate>, Option<Arc<OnlineModel>>) =
+        match OnlineModel::try_new(model, policy) {
+            Ok(adapter) => {
+                let adapter = match refit {
+                    Some(cfg) => adapter.with_refit(cfg),
+                    None => adapter,
+                };
+                let adapter = Arc::new(adapter);
+                (Arc::clone(&adapter) as Arc<dyn Surrogate>, Some(adapter))
+            }
+            Err(inner) => {
+                eprintln!(
+                    "note: {} is fit-once; observe/observeb will be rejected",
+                    inner.name()
+                );
+                (Arc::from(inner), None)
+            }
+        };
+    let registry = Arc::new(ModelRegistry::new(name.clone(), model));
+    if let Some(adapter) = &online {
+        adapter.bind(&registry, &name);
+    }
     let server = Server::start(
         registry,
         ServerConfig { addr, batcher: BatcherConfig::default() },
     )?;
     println!(
         "serving on {} — protocol: `predict [model] x1,...,x{dim}` | \
-         `predictb [model] <n> <p1;p2;...>` | `models` | `load <path> [name]` | \
+         `predictb [model] <n> <p1;p2;...>` | `observe [model] x1,...,x{dim},y` | \
+         `observeb [model] <n> <o1;o2;...>` | `models` | `load <path> [name]` | \
          `swap <name>` | `stats` | `ping`",
         server.local_addr
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(5));
-        eprintln!("{}", server.metrics.summary());
+        // Resolve the slot each tick: background refits hot-swap fresh
+        // adapter generations in, and their counters are per-generation.
+        let live = server
+            .registry()
+            .get(Some(name.as_str()))
+            .and_then(|m| m.observer().map(|o| o.online_stats()));
+        match live {
+            Some(s) => eprintln!(
+                "{} | online: observed={} since_refit={} refits={} drift={:.2}",
+                server.metrics.summary(),
+                s.observed,
+                s.since_refit,
+                s.refits,
+                s.drift
+            ),
+            None => eprintln!("{}", server.metrics.summary()),
+        }
     }
+}
+
+/// Stream a dataset's rows into a running server as observations — the
+/// client side of protocol v3. `--drift D` adds a constant offset to
+/// every streamed target, handy for demonstrating the server's drift
+/// monitor and background refit.
+fn cmd_stream(args: &Args) -> Result<()> {
+    let addr: String = args.require("addr")?;
+    let dataset: String = args.require("dataset")?;
+    let seed: u64 = args.get_parsed_or("seed", 7)?;
+    let n: usize = args.get_parsed_or("n", 512)?;
+    let batch: usize = args.get_parsed_or("batch", 16)?.max(1);
+    let drift: f64 = args.get_parsed_or("drift", 0.0)?;
+    let model = args.get("model").map(str::to_string);
+
+    let ds = load_dataset(&dataset, seed, Some(n))?;
+    let mut client = Client::connect(&addr)
+        .with_context(|| format!("connecting to server at {addr}"))?;
+    eprintln!(
+        "streaming {} observations from {} ({} dims) to {addr} in batches of {batch}…",
+        ds.n(),
+        ds.name,
+        ds.d()
+    );
+    let t0 = std::time::Instant::now();
+    let mut sent = 0;
+    while sent < ds.n() {
+        let hi = (sent + batch).min(ds.n());
+        let points: Vec<&[f64]> = (sent..hi).map(|i| ds.x.row(i)).collect();
+        let ys: Vec<f64> = (sent..hi).map(|i| ds.y[i] + drift).collect();
+        client.observe_batch(model.as_deref(), &points, &ys)?;
+        sent = hi;
+        if sent % (batch * 8) == 0 || sent == ds.n() {
+            eprintln!("  {sent}/{} | server: {}", ds.n(), client.stats()?);
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "streamed {sent} observations in {secs:.2}s ({:.0} obs/s)",
+        sent as f64 / secs
+    );
+    println!("final server stats: {}", client.stats()?);
+    Ok(())
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

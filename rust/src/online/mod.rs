@@ -1,0 +1,99 @@
+//! Online learning: stream observations into *live* models.
+//!
+//! Kriging is O(n³) to fit, and the paper's partitioning makes that
+//! tractable — the same structure makes **online updates** tractable:
+//! appending one observation to a cluster of size `n_c` costs O(n_c²)
+//! (one [`crate::linalg::Cholesky::append`] plus an α re-solve) instead
+//! of an O(n³) global refit. This module is the capability layer on top
+//! of that arithmetic:
+//!
+//! * [`OnlineSurrogate`] — the `observe`/`observe_batch` mutation
+//!   interface, implemented by [`crate::kriging::OrdinaryKriging`]
+//!   (incremental factor append under fixed hyper-parameters),
+//!   [`crate::cluster_kriging::ClusterKriging`] (route the point via
+//!   [`crate::cluster_kriging::Membership::route`] and update *only* that
+//!   cluster — the headline win), [`crate::baselines::SubsetOfData`]
+//!   (reservoir sampling over the inducing set) and
+//!   [`crate::surrogate::Standardized`] (transform, then forward).
+//! * [`policy`] — when incremental updates are no longer enough: per-slot
+//!   staleness budgets and a rolling prediction-error drift monitor
+//!   decide when a full background refit is worth its O(n³/k²).
+//! * [`serve`] — [`OnlineModel`], the serving adapter that puts an online
+//!   surrogate behind interior mutability, exposes the shared
+//!   [`OnlineObserver`] endpoint the coordinator streams into, and runs
+//!   policy-triggered background refits that hot-swap the fresh model
+//!   through the [`crate::coordinator::ModelRegistry`] without dropping
+//!   in-flight traffic.
+//!
+//! Online state survives `save`/`load`: model artifacts are written at
+//! container version 2, which persists the training targets (and the
+//! SoD reservoir counters); version-1 artifacts still load, with targets
+//! reconstructed from the stored factor.
+
+pub mod policy;
+pub mod serve;
+
+pub use policy::{DriftMonitor, OnlinePolicy, RefitReason};
+pub use serve::{OnlineModel, RefitConfig};
+
+use crate::kriging::Surrogate;
+use crate::util::matrix::Matrix;
+
+/// A fitted surrogate that can absorb new observations in place, under
+/// its **fixed** (fit-time) hyper-parameters. Re-estimating θ is the
+/// refit policy's job ([`policy`]), not the per-observation hot path.
+pub trait OnlineSurrogate: Surrogate {
+    /// Absorb one observation `(x, y)`.
+    fn observe(&mut self, x: &[f64], y: f64) -> anyhow::Result<()>;
+
+    /// Absorb a batch (rows of `xs` paired with `ys`). The default loops
+    /// [`Self::observe`]; implementations may batch smarter.
+    fn observe_batch(&mut self, xs: &Matrix, ys: &[f64]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            xs.rows() == ys.len(),
+            "observe_batch: {} points but {} targets",
+            xs.rows(),
+            ys.len()
+        );
+        for i in 0..xs.rows() {
+            self.observe(xs.row(i), ys[i])?;
+        }
+        Ok(())
+    }
+
+    /// The current effective training set, in this model's input units —
+    /// the refit engine's data source. For subset models (SoD) this is
+    /// the inducing set; for overlapping Cluster Kriging partitions,
+    /// duplicated rows are returned once.
+    fn training_snapshot(&self) -> (Matrix, Vec<f64>);
+}
+
+/// Counters a serving adapter exposes for `stats` replies and tests.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OnlineStats {
+    /// Observations absorbed over this adapter's lifetime.
+    pub observed: u64,
+    /// Observations absorbed since the model was last (re)fitted.
+    pub since_refit: u64,
+    /// Completed background refits swapped in via this adapter's hook.
+    pub refits: u64,
+    /// Current mean standardized residual over the drift window
+    /// (0.0 until the window has filled).
+    pub drift: f64,
+}
+
+/// Shared observation endpoint for `Arc<dyn Surrogate>` registry slots:
+/// the interior-mutability counterpart of [`OnlineSurrogate`], reached
+/// through [`Surrogate::observer`]. Implemented by [`OnlineModel`].
+pub trait OnlineObserver: Send + Sync {
+    /// Absorb a batch of observations (rows of `xs` with targets `ys`).
+    fn observe_batch(&self, xs: &Matrix, ys: &[f64]) -> anyhow::Result<()>;
+
+    /// Absorb one observation.
+    fn observe(&self, x: &[f64], y: f64) -> anyhow::Result<()> {
+        self.observe_batch(&Matrix::from_vec(1, x.len(), x.to_vec()), &[y])
+    }
+
+    /// Current counters.
+    fn online_stats(&self) -> OnlineStats;
+}

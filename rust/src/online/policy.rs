@@ -1,0 +1,195 @@
+//! Refit policy engine: decide *when* incremental updates stop being
+//! enough and a full background refit pays for itself.
+//!
+//! Two triggers, both cheap enough to evaluate per observation:
+//!
+//! * **Staleness budget** — incremental updates keep the posterior exact
+//!   under *fixed* hyper-parameters, but θ itself goes stale as the data
+//!   distribution moves. After `staleness_budget` absorbed observations a
+//!   refit (with a fresh hyper-parameter search) is forced.
+//! * **Drift monitor** — a rolling window of standardized residuals
+//!   `|y − μ(x)| / σ(x)` computed *before* each observation is absorbed.
+//!   Under a well-calibrated posterior these hover around 1; a sustained
+//!   window mean above `drift_zscore` means the underlying function moved
+//!   and the model is confidently wrong — refit now, don't wait for the
+//!   budget.
+
+/// When to trigger a background refit for an online-serving model slot.
+#[derive(Debug, Clone, Copy)]
+pub struct OnlinePolicy {
+    /// Observations absorbed since the last (re)fit before a refit is
+    /// forced. 0 disables the staleness trigger.
+    pub staleness_budget: usize,
+    /// Rolling window length of the drift monitor.
+    pub drift_window: usize,
+    /// Mean standardized residual over a full window above which the
+    /// drift trigger fires. Non-finite or absurd means are clamped out.
+    pub drift_zscore: f64,
+    /// Upper bound on the refit history, in observations. The history
+    /// backs background refits; on an unbounded stream it would otherwise
+    /// grow (and each refit slow down) forever. When the bound is hit the
+    /// oldest quarter is evicted — a sliding window over the stream,
+    /// which is exactly what a drifting workload wants refits to see.
+    /// 0 disables the bound.
+    pub history_cap: usize,
+}
+
+impl Default for OnlinePolicy {
+    fn default() -> Self {
+        Self { staleness_budget: 512, drift_window: 64, drift_zscore: 3.0, history_cap: 65_536 }
+    }
+}
+
+/// Why a refit was triggered (logging / diagnostics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RefitReason {
+    /// The per-slot staleness budget was exhausted.
+    Staleness,
+    /// The rolling prediction-error monitor detected drift.
+    Drift,
+}
+
+impl OnlinePolicy {
+    /// Evaluate the triggers given the observations absorbed since the
+    /// last refit and the drift monitor's current state.
+    pub fn should_refit(&self, since_refit: usize, drift: &DriftMonitor) -> Option<RefitReason> {
+        if drift.is_full() && drift.mean() > self.drift_zscore {
+            return Some(RefitReason::Drift);
+        }
+        if self.staleness_budget > 0 && since_refit >= self.staleness_budget {
+            return Some(RefitReason::Staleness);
+        }
+        None
+    }
+}
+
+/// Rolling mean of standardized prediction residuals over a fixed window.
+/// Ring-buffered; O(1) push with a periodically recomputed sum so long
+/// streams don't accumulate floating-point error.
+#[derive(Debug, Clone)]
+pub struct DriftMonitor {
+    window: Vec<f64>,
+    cap: usize,
+    at: usize,
+    sum: f64,
+}
+
+impl DriftMonitor {
+    pub fn new(cap: usize) -> Self {
+        Self { window: Vec::with_capacity(cap.max(1)), cap: cap.max(1), at: 0, sum: 0.0 }
+    }
+
+    /// Record one standardized residual. Non-finite values (e.g. a zero
+    /// predictive variance at an exact training point) are clamped to the
+    /// window cap's worth of signal rather than poisoning the mean.
+    pub fn push(&mut self, residual: f64) {
+        let r = if residual.is_finite() { residual.abs() } else { 1e6 };
+        if self.window.len() < self.cap {
+            self.window.push(r);
+            self.sum += r;
+        } else {
+            self.sum += r - self.window[self.at];
+            self.window[self.at] = r;
+            self.at += 1;
+            if self.at == self.cap {
+                self.at = 0;
+                // Resynchronize the incremental sum once per wrap.
+                self.sum = self.window.iter().sum();
+            }
+        }
+    }
+
+    /// Whether a full window of residuals has been seen.
+    pub fn is_full(&self) -> bool {
+        self.window.len() == self.cap
+    }
+
+    /// Mean residual over the current window (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.window.is_empty() {
+            0.0
+        } else {
+            self.sum / self.window.len() as f64
+        }
+    }
+
+    /// Forget everything (called after a refit is triggered so the next
+    /// window is judged against the fresh model).
+    pub fn reset(&mut self) {
+        self.window.clear();
+        self.at = 0;
+        self.sum = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn staleness_budget_triggers() {
+        let p = OnlinePolicy {
+            staleness_budget: 10,
+            drift_window: 4,
+            drift_zscore: 3.0,
+            ..OnlinePolicy::default()
+        };
+        let quiet = DriftMonitor::new(4);
+        assert_eq!(p.should_refit(9, &quiet), None);
+        assert_eq!(p.should_refit(10, &quiet), Some(RefitReason::Staleness));
+        let disabled = OnlinePolicy { staleness_budget: 0, ..p };
+        assert_eq!(disabled.should_refit(10_000, &quiet), None);
+    }
+
+    #[test]
+    fn drift_fires_only_on_full_window() {
+        let p = OnlinePolicy {
+            staleness_budget: 0,
+            drift_window: 4,
+            drift_zscore: 2.0,
+            ..OnlinePolicy::default()
+        };
+        let mut d = DriftMonitor::new(4);
+        d.push(10.0);
+        d.push(10.0);
+        d.push(10.0);
+        assert_eq!(p.should_refit(0, &d), None, "partial window must not fire");
+        d.push(10.0);
+        assert_eq!(p.should_refit(0, &d), Some(RefitReason::Drift));
+        d.reset();
+        assert_eq!(p.should_refit(0, &d), None);
+    }
+
+    #[test]
+    fn rolling_mean_tracks_recent_values() {
+        let mut d = DriftMonitor::new(3);
+        for v in [1.0, 2.0, 3.0] {
+            d.push(v);
+        }
+        assert!((d.mean() - 2.0).abs() < 1e-12);
+        // Pushing 6.0 evicts 1.0 → window {2, 3, 6}.
+        d.push(6.0);
+        assert!((d.mean() - 11.0 / 3.0).abs() < 1e-12);
+        assert!(d.is_full());
+    }
+
+    #[test]
+    fn non_finite_residuals_are_clamped() {
+        let mut d = DriftMonitor::new(2);
+        d.push(f64::NAN);
+        d.push(f64::INFINITY);
+        assert!(d.mean().is_finite());
+        assert!(d.mean() > 1e5);
+    }
+
+    #[test]
+    fn calibrated_residuals_do_not_fire() {
+        let p = OnlinePolicy::default();
+        let mut d = DriftMonitor::new(p.drift_window);
+        for i in 0..p.drift_window {
+            d.push(0.8 + 0.4 * ((i % 5) as f64) / 5.0);
+        }
+        assert!(d.is_full());
+        assert_eq!(p.should_refit(0, &d), None);
+    }
+}

@@ -1,0 +1,452 @@
+//! [`OnlineModel`]: the serving adapter that makes a fitted online
+//! surrogate observable under live traffic.
+//!
+//! Registry slots hold `Arc<dyn Surrogate>` — shared, immutable. An
+//! `OnlineModel` wraps the fitted model behind a `RwLock` so predictions
+//! stay concurrent (read lock) while observations mutate in place (write
+//! lock), and exposes the shared [`OnlineObserver`] endpoint through
+//! [`Surrogate::observer`] for the coordinator's `observe`/`observeb`
+//! protocol ops.
+//!
+//! When constructed [`OnlineModel::with_refit`], the adapter also keeps a
+//! growing history of the raw-unit training data and evaluates the
+//! [`OnlinePolicy`] after every absorbed batch. A triggered refit runs on
+//! a background thread — standardize, refit the spec (fresh
+//! hyper-parameter search), wrap, re-adapt — and atomically swaps the
+//! result into its [`ModelRegistry`] slot: in-flight batches finish on
+//! the old model, the next flush resolves the new one, and no request is
+//! ever dropped. Observations that arrive *while* a refit is running keep
+//! updating the old model incrementally and stay in the shared history,
+//! so the next refit includes them even though the freshly fitted model
+//! does not.
+
+use crate::coordinator::ModelRegistry;
+use crate::data::{Dataset, Standardizer};
+use crate::kriging::{Prediction, Surrogate};
+use crate::online::policy::{DriftMonitor, OnlinePolicy};
+use crate::online::{OnlineObserver, OnlineStats};
+use crate::surrogate::{FitOptions, Standardized, SurrogateSpec};
+use crate::util::matrix::Matrix;
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock, Weak};
+
+/// What a background refit refits: the spec is re-fitted from scratch on
+/// the accumulated history with a fresh hyper-parameter search.
+#[derive(Debug, Clone)]
+pub struct RefitConfig {
+    pub spec: SurrogateSpec,
+    pub opts: FitOptions,
+}
+
+/// Raw-unit training history shared across a slot's model generations:
+/// refits snapshot it, and every generation appends to the same store so
+/// nothing is lost across swaps.
+struct History {
+    dim: usize,
+    x: Vec<f64>,
+    y: Vec<f64>,
+}
+
+/// State shared by every model generation serving one registry slot: the
+/// swap target, the refit recipe, and the single-flight guard.
+struct RefitShared {
+    registry: Mutex<Weak<ModelRegistry>>,
+    slot: Mutex<String>,
+    cfg: RefitConfig,
+    in_flight: AtomicBool,
+    refits: AtomicU64,
+}
+
+/// A fitted online surrogate adapted for serving: concurrent predictions,
+/// shared `observe`, policy-triggered background refit + hot swap.
+pub struct OnlineModel {
+    inner: RwLock<Box<dyn Surrogate>>,
+    algo: String,
+    dim: usize,
+    policy: OnlinePolicy,
+    observed: AtomicU64,
+    since_refit: AtomicU64,
+    drift: Mutex<DriftMonitor>,
+    history: Option<Arc<Mutex<History>>>,
+    refit: Option<Arc<RefitShared>>,
+}
+
+impl OnlineModel {
+    /// Adapt a fitted model for online serving. Returns the model back as
+    /// `Err` when it is not online-capable
+    /// ([`Surrogate::as_online`] is `None` — FITC, BCM, doubles).
+    pub fn try_new(
+        inner: Box<dyn Surrogate>,
+        policy: OnlinePolicy,
+    ) -> std::result::Result<Self, Box<dyn Surrogate>> {
+        if inner.as_online().is_none() {
+            return Err(inner);
+        }
+        let algo = inner.name().to_string();
+        let dim = inner.dim();
+        let drift = Mutex::new(DriftMonitor::new(policy.drift_window));
+        Ok(Self {
+            inner: RwLock::new(inner),
+            algo,
+            dim,
+            policy,
+            observed: AtomicU64::new(0),
+            since_refit: AtomicU64::new(0),
+            drift,
+            history: None,
+            refit: None,
+        })
+    }
+
+    /// Enable policy-triggered background refits: snapshots the model's
+    /// current training data (raw units) as the refit history and records
+    /// the recipe. Wire the swap target with [`Self::bind`] once the
+    /// registry exists.
+    pub fn with_refit(mut self, cfg: RefitConfig) -> Self {
+        let (x, y) = {
+            let guard = self.inner.read().unwrap();
+            guard.as_online().expect("validated at construction").training_snapshot()
+        };
+        self.history =
+            Some(Arc::new(Mutex::new(History { dim: self.dim, x: x.into_vec(), y })));
+        self.refit = Some(Arc::new(RefitShared {
+            registry: Mutex::new(Weak::new()),
+            slot: Mutex::new(String::new()),
+            cfg,
+            in_flight: AtomicBool::new(false),
+            refits: AtomicU64::new(0),
+        }));
+        self
+    }
+
+    /// Point background refits at the registry slot they should swap.
+    /// No-op unless [`Self::with_refit`] configured a recipe.
+    pub fn bind(&self, registry: &Arc<ModelRegistry>, slot: &str) {
+        if let Some(shared) = &self.refit {
+            *shared.registry.lock().unwrap() = Arc::downgrade(registry);
+            *shared.slot.lock().unwrap() = slot.to_string();
+        }
+    }
+
+    /// Current counters (also reachable through
+    /// [`Surrogate::observer`] / [`OnlineObserver::online_stats`]).
+    pub fn stats(&self) -> OnlineStats {
+        OnlineStats {
+            observed: self.observed.load(Ordering::Relaxed),
+            since_refit: self.since_refit.load(Ordering::Relaxed),
+            refits: self.refit.as_ref().map_or(0, |s| s.refits.load(Ordering::Relaxed)),
+            drift: self.drift.lock().unwrap().mean(),
+        }
+    }
+
+    /// Spawn the background refit unless one is already in flight for
+    /// this slot. The worker snapshots the shared history, refits the
+    /// spec behind a fresh standardizer, re-adapts the result and swaps
+    /// it into the bound registry slot.
+    fn spawn_refit(&self, reason: crate::online::RefitReason) {
+        let (Some(shared), Some(history)) = (&self.refit, &self.history) else {
+            return;
+        };
+        if shared.in_flight.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Judge the next window against the post-refit model, and stop
+        // this generation's triggers from re-firing while the refit runs.
+        self.drift.lock().unwrap().reset();
+        self.since_refit.store(0, Ordering::Relaxed);
+        log::info!("online refit triggered ({reason:?}) for {}", self.algo);
+        let policy = self.policy;
+        let shared = Arc::clone(shared);
+        let history = Arc::clone(history);
+        std::thread::spawn(move || {
+            let ds = {
+                let h = history.lock().unwrap();
+                Dataset::new(
+                    "online-refit",
+                    Matrix::from_vec(h.y.len(), h.dim, h.x.clone()),
+                    h.y.clone(),
+                )
+            };
+            let fitted = (|| -> Result<Box<dyn Surrogate>> {
+                let std = Standardizer::fit(&ds);
+                let tr = std.transform(&ds);
+                let model = shared.cfg.spec.fit(&tr, &shared.cfg.opts)?;
+                Ok(Box::new(Standardized::new(model, std)))
+            })();
+            match fitted.and_then(|model| {
+                OnlineModel::try_new(model, policy)
+                    .map_err(|_| anyhow::anyhow!("refit produced a non-online model"))
+            }) {
+                Ok(mut fresh) => {
+                    fresh.history = Some(history);
+                    fresh.refit = Some(Arc::clone(&shared));
+                    if let Some(registry) = shared.registry.lock().unwrap().upgrade() {
+                        let slot = shared.slot.lock().unwrap().clone();
+                        registry.insert(slot.clone(), Arc::new(fresh));
+                        shared.refits.fetch_add(1, Ordering::SeqCst);
+                        log::info!("online refit swapped into slot {slot:?}");
+                    } else {
+                        log::warn!("online refit finished but the registry is gone");
+                    }
+                }
+                Err(e) => log::warn!("online background refit failed: {e:#}"),
+            }
+            shared.in_flight.store(false, Ordering::SeqCst);
+        });
+    }
+}
+
+impl Surrogate for OnlineModel {
+    fn predict(&self, xt: &Matrix) -> Result<Prediction> {
+        self.inner.read().unwrap().predict(xt)
+    }
+
+    fn name(&self) -> &str {
+        &self.algo
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn predict_into(&self, xt: &Matrix, mean: &mut [f64], variance: &mut [f64]) -> Result<()> {
+        self.inner.read().unwrap().predict_into(xt, mean, variance)
+    }
+
+    fn save(&self, w: &mut dyn std::io::Write) -> Result<()> {
+        self.inner.read().unwrap().save(w)
+    }
+
+    fn observer(&self) -> Option<&dyn OnlineObserver> {
+        Some(self)
+    }
+}
+
+impl OnlineObserver for OnlineModel {
+    fn observe_batch(&self, xs: &Matrix, ys: &[f64]) -> Result<()> {
+        anyhow::ensure!(
+            xs.cols() == self.dim,
+            "observe: points have {} dims, model expects {}",
+            xs.cols(),
+            self.dim
+        );
+        anyhow::ensure!(
+            xs.rows() == ys.len(),
+            "observe: {} points but {} targets",
+            xs.rows(),
+            ys.len()
+        );
+        // Reject malformed batches before anything mutates — the realistic
+        // mid-batch failure (a NaN row) must not partially apply.
+        anyhow::ensure!(
+            ys.iter().all(|v| v.is_finite()) && !xs.has_non_finite(),
+            "observe: batch contains non-finite values"
+        );
+        let m = xs.rows();
+        // 1. Drift signal: standardized residuals of the *pre-update*
+        // posterior at the incoming points. Computed now (against the
+        // posterior that had not seen them), recorded in step 3 for the
+        // absorbed prefix only — the monitor must reflect observations
+        // the model actually incorporated.
+        let mut mean = vec![0.0; m];
+        let mut var = vec![0.0; m];
+        self.inner.read().unwrap().predict_into(xs, &mut mean, &mut var)?;
+        let residuals: Vec<f64> = (0..m)
+            .map(|i| (ys[i] - mean[i]) / (var[i].max(0.0) + 1e-12).sqrt())
+            .collect();
+        // 2. Absorb incrementally under fixed hyper-parameters, point by
+        // point. The per-model updates are atomic (commit-on-success), so
+        // on a mid-batch failure the model holds exactly the absorbed
+        // prefix — and steps 3–4 record exactly that prefix, keeping the
+        // refit history consistent with the model no matter what.
+        let mut absorbed = 0;
+        let failure = {
+            let mut guard = self.inner.write().unwrap();
+            let online = guard.as_online_mut().expect("validated at construction");
+            let mut failure = None;
+            for i in 0..m {
+                match online.observe(xs.row(i), ys[i]) {
+                    Ok(()) => absorbed += 1,
+                    Err(e) => {
+                        failure = Some(e);
+                        break;
+                    }
+                }
+            }
+            failure
+        };
+        // 3. Bookkeeping shared with future generations, bounded by the
+        // policy's history cap (evict-oldest: refits see a sliding window
+        // over the stream).
+        if absorbed > 0 {
+            {
+                let mut drift = self.drift.lock().unwrap();
+                for &r in &residuals[..absorbed] {
+                    drift.push(r);
+                }
+            }
+            if let Some(history) = &self.history {
+                let mut h = history.lock().unwrap();
+                h.x.extend_from_slice(&xs.as_slice()[..absorbed * self.dim]);
+                h.y.extend_from_slice(&ys[..absorbed]);
+                let cap = self.policy.history_cap;
+                if cap > 0 && h.y.len() > cap {
+                    let drop = h.y.len() - cap * 3 / 4;
+                    h.x.drain(..drop * h.dim);
+                    h.y.drain(..drop);
+                }
+            }
+            self.observed.fetch_add(absorbed as u64, Ordering::Relaxed);
+            let since =
+                self.since_refit.fetch_add(absorbed as u64, Ordering::Relaxed) + absorbed as u64;
+            // 4. Policy check.
+            let reason = {
+                let drift = self.drift.lock().unwrap();
+                self.policy.should_refit(since as usize, &drift)
+            };
+            if let Some(reason) = reason {
+                self.spawn_refit(reason);
+            }
+        }
+        match failure {
+            None => Ok(()),
+            Some(e) => Err(e.context(format!("absorbed {absorbed} of {m} observations"))),
+        }
+    }
+
+    fn online_stats(&self) -> OnlineStats {
+        self.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kriging::{HyperOpt, NuggetMode};
+    use crate::util::proptest::gen_matrix;
+    use crate::util::rng::Rng;
+
+    /// `try_new` hands the model back on failure, and `Box<dyn
+    /// Surrogate>` has no `Debug` — so tests adapt through this helper
+    /// instead of `unwrap`.
+    fn adapt(inner: Box<dyn Surrogate>, policy: OnlinePolicy) -> OnlineModel {
+        OnlineModel::try_new(inner, policy)
+            .unwrap_or_else(|m| panic!("{} should be online-capable", m.name()))
+    }
+
+    fn fitted_ok(n: usize, seed: u64) -> Box<dyn Surrogate> {
+        let mut rng = Rng::new(seed);
+        let x = gen_matrix(&mut rng, n, 2, -2.0, 2.0);
+        let y: Vec<f64> = (0..n).map(|i| x.row(i)[0].sin() + 0.5 * x.row(i)[1]).collect();
+        let opt = HyperOpt {
+            restarts: 1,
+            max_evals: 10,
+            isotropic: true,
+            nugget: NuggetMode::Fixed(1e-6),
+            ..HyperOpt::default()
+        };
+        Box::new(opt.fit(x, &y).unwrap())
+    }
+
+    #[test]
+    fn adapts_online_models_and_rejects_doubles() {
+        struct Dumb;
+        impl Surrogate for Dumb {
+            fn predict(&self, xt: &Matrix) -> Result<Prediction> {
+                Ok(Prediction {
+                    mean: vec![0.0; xt.rows()],
+                    variance: vec![1.0; xt.rows()],
+                })
+            }
+            fn name(&self) -> &str {
+                "dumb"
+            }
+            fn dim(&self) -> usize {
+                2
+            }
+        }
+        assert!(OnlineModel::try_new(Box::new(Dumb), OnlinePolicy::default()).is_err());
+        let online = adapt(fitted_ok(20, 1), OnlinePolicy::default());
+        assert_eq!(online.dim(), 2);
+        assert!(online.observer().is_some());
+    }
+
+    #[test]
+    fn observe_updates_predictions_and_counters() {
+        let online = adapt(fitted_ok(25, 2), OnlinePolicy::default());
+        let probe = Matrix::from_vec(1, 2, vec![0.4, -0.2]);
+        let before = online.predict(&probe).unwrap().mean[0];
+        let xs = Matrix::from_vec(2, 2, vec![0.4, -0.2, 0.5, -0.1]);
+        online.observer().unwrap().observe_batch(&xs, &[3.0, 3.1]).unwrap();
+        let after = online.predict(&probe).unwrap().mean[0];
+        assert!(
+            (after - before).abs() > 1e-6,
+            "observations did not move the posterior ({before} vs {after})"
+        );
+        let stats = online.stats();
+        assert_eq!(stats.observed, 2);
+        assert_eq!(stats.since_refit, 2);
+        assert_eq!(stats.refits, 0);
+    }
+
+    #[test]
+    fn observe_validates_shapes() {
+        let online = adapt(fitted_ok(15, 3), OnlinePolicy::default());
+        let obs = online.observer().unwrap();
+        assert!(obs.observe_batch(&Matrix::zeros(1, 3), &[1.0]).is_err());
+        assert!(obs.observe_batch(&Matrix::zeros(2, 2), &[1.0]).is_err());
+        assert_eq!(online.stats().observed, 0);
+    }
+
+    #[test]
+    fn staleness_triggers_refit_and_hot_swaps_slot() {
+        let policy = OnlinePolicy {
+            staleness_budget: 8,
+            drift_window: 1024,
+            drift_zscore: 1e9,
+            ..OnlinePolicy::default()
+        };
+        let online = adapt(fitted_ok(30, 4), policy).with_refit(
+            RefitConfig {
+                spec: SurrogateSpec::FullKriging,
+                opts: FitOptions::fast(),
+            },
+        );
+        let online = Arc::new(online);
+        let registry = Arc::new(ModelRegistry::new(
+            "live",
+            Arc::clone(&online) as Arc<dyn Surrogate>,
+        ));
+        online.bind(&registry, "live");
+        let initial = registry.default_model();
+
+        let mut rng = Rng::new(9);
+        let mut absorbed = 0;
+        while absorbed < 8 {
+            let xs = gen_matrix(&mut rng, 2, 2, -2.0, 2.0);
+            let ys: Vec<f64> =
+                (0..2).map(|i| xs.row(i)[0].sin() + 0.5 * xs.row(i)[1]).collect();
+            registry
+                .default_model()
+                .observer()
+                .expect("slot stays online across swaps")
+                .observe_batch(&xs, &ys)
+                .unwrap();
+            absorbed += 2;
+        }
+        // The refit runs on a background thread; wait for the swap.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        loop {
+            let current = registry.default_model();
+            if !Arc::ptr_eq(&current, &initial) {
+                // The fresh generation is online too and keeps counters.
+                assert!(current.observer().is_some());
+                assert_eq!(current.observer().unwrap().online_stats().refits, 1);
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "refit never swapped in");
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+    }
+}

@@ -4,7 +4,7 @@
 //!
 //! ```text
 //! magic   4 B   b"CKRG"
-//! version 4 B   u32 (currently 1)
+//! version 4 B   u32 (currently 2)
 //! tag     1 B   model type (TAG_* constants)
 //! length  8 B   payload byte count
 //! check   8 B   FNV-1a 64 of the payload
@@ -17,12 +17,23 @@
 //! type; this module only owns the container, so new model types cost one
 //! tag constant and one dispatch arm in
 //! [`crate::surrogate::SurrogateSpec::load`].
+//!
+//! Version history — writers always emit the current version; readers
+//! accept every version in `[MIN_VERSION, VERSION]` and hand the decoded
+//! version to the per-model payload readers:
+//!
+//! * **v1** — fitted state only (kernels, factors, α, routing oracles).
+//! * **v2** — adds online-learning state: training targets `y` per
+//!   Kriging model (appended after the v1 fields) and the SoD reservoir
+//!   counters. v1 payloads still load — targets are reconstructed from
+//!   the stored factor via `y = L·Lᵀ·α + μ̂·1`.
 
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{Read, Write};
 
 pub const MAGIC: [u8; 4] = *b"CKRG";
-pub const VERSION: u32 = 1;
+pub const VERSION: u32 = 2;
+pub const MIN_VERSION: u32 = 1;
 
 /// Model-type tags (one per `Surrogate` implementation that persists).
 pub const TAG_KRIGING: u8 = 1;
@@ -57,10 +68,23 @@ pub fn fnv1a(bytes: &[u8]) -> u64 {
     hash
 }
 
-/// Frame a model payload with the versioned, checksummed header.
+/// Frame a model payload with the versioned, checksummed header (always
+/// at the current [`VERSION`]).
 pub fn write_model(w: &mut dyn Write, tag: u8, payload: &[u8]) -> Result<()> {
+    write_model_versioned(w, tag, payload, VERSION)
+}
+
+/// [`write_model`] at an explicit container version — for compatibility
+/// tests that need to produce old-format artifacts; production writers
+/// go through [`write_model`].
+pub fn write_model_versioned(
+    w: &mut dyn Write,
+    tag: u8,
+    payload: &[u8],
+    version: u32,
+) -> Result<()> {
     w.write_all(&MAGIC)?;
-    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&version.to_le_bytes())?;
     w.write_all(&[tag])?;
     w.write_all(&(payload.len() as u64).to_le_bytes())?;
     w.write_all(&fnv1a(payload).to_le_bytes())?;
@@ -68,16 +92,18 @@ pub fn write_model(w: &mut dyn Write, tag: u8, payload: &[u8]) -> Result<()> {
     Ok(())
 }
 
-/// Read one framed model: returns `(tag, payload)` after validating the
-/// magic, version, length and checksum.
-pub fn read_model(r: &mut dyn Read) -> Result<(u8, Vec<u8>)> {
+/// Read one framed model: returns `(version, tag, payload)` after
+/// validating the magic, version range, length and checksum. The version
+/// must be threaded into the per-model payload readers so old layouts
+/// decode correctly.
+pub fn read_model(r: &mut dyn Read) -> Result<(u32, u8, Vec<u8>)> {
     let mut head = [0u8; 25];
     r.read_exact(&mut head).context("artifact truncated: incomplete header")?;
     ensure!(head[..4] == MAGIC, "not a surrogate artifact (bad magic)");
     let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
     ensure!(
-        version == VERSION,
-        "unsupported artifact version {version} (this build reads {VERSION})"
+        (MIN_VERSION..=VERSION).contains(&version),
+        "unsupported artifact version {version} (this build reads {MIN_VERSION}..={VERSION})"
     );
     let tag = head[8];
     let len = u64::from_le_bytes(head[9..17].try_into().unwrap());
@@ -97,7 +123,7 @@ pub fn read_model(r: &mut dyn Read) -> Result<(u8, Vec<u8>)> {
         fnv1a(&payload) == checksum,
         "artifact corrupted: payload checksum mismatch"
     );
-    Ok((tag, payload))
+    Ok((version, tag, payload))
 }
 
 #[cfg(test)]
@@ -109,9 +135,20 @@ mod tests {
         let payload = b"model bytes".to_vec();
         let mut buf = Vec::new();
         write_model(&mut buf, TAG_SOD, &payload).unwrap();
-        let (tag, back) = read_model(&mut buf.as_slice()).unwrap();
+        let (version, tag, back) = read_model(&mut buf.as_slice()).unwrap();
+        assert_eq!(version, VERSION);
         assert_eq!(tag, TAG_SOD);
         assert_eq!(back, payload);
+    }
+
+    #[test]
+    fn v1_frames_still_read() {
+        let mut buf = Vec::new();
+        write_model_versioned(&mut buf, TAG_KRIGING, b"old payload", 1).unwrap();
+        let (version, tag, back) = read_model(&mut buf.as_slice()).unwrap();
+        assert_eq!(version, 1);
+        assert_eq!(tag, TAG_KRIGING);
+        assert_eq!(back, b"old payload");
     }
 
     #[test]

@@ -172,8 +172,8 @@ impl SurrogateSpec {
     /// concrete type is recovered from the artifact tag; the returned
     /// model predicts bit-identically to the one that was saved.
     pub fn load(mut r: impl Read) -> Result<Box<dyn Surrogate>> {
-        let (tag, payload) = artifact::read_model(&mut r)?;
-        read_boxed(tag, &mut BinReader::new(&payload))
+        let (version, tag, payload) = artifact::read_model(&mut r)?;
+        read_boxed(tag, &mut BinReader::new(&payload), version)
     }
 
     /// [`Self::load`] from a file path.
@@ -202,14 +202,23 @@ impl std::fmt::Display for SurrogateSpec {
 }
 
 /// Tag-dispatched payload decoding shared by top-level artifacts and the
-/// [`Standardized`] wrapper's nested model.
-pub(crate) fn read_boxed(tag: u8, r: &mut BinReader<'_>) -> Result<Box<dyn Surrogate>> {
+/// [`Standardized`] wrapper's nested model. `version` is the enclosing
+/// container's version, threaded into every payload reader whose layout
+/// changed across versions (the Kriging-family models; see
+/// [`artifact`]'s version history).
+pub(crate) fn read_boxed(
+    tag: u8,
+    r: &mut BinReader<'_>,
+    version: u32,
+) -> Result<Box<dyn Surrogate>> {
     Ok(match tag {
-        artifact::TAG_KRIGING => Box::new(crate::kriging::OrdinaryKriging::read_artifact(r)?),
-        artifact::TAG_SOD => Box::new(SubsetOfData::read_artifact(r)?),
+        artifact::TAG_KRIGING => {
+            Box::new(crate::kriging::OrdinaryKriging::read_artifact(r, version)?)
+        }
+        artifact::TAG_SOD => Box::new(SubsetOfData::read_artifact(r, version)?),
         artifact::TAG_FITC => Box::new(Fitc::read_artifact(r)?),
-        artifact::TAG_BCM => Box::new(Bcm::read_artifact(r)?),
-        artifact::TAG_CLUSTER_KRIGING => Box::new(ClusterKriging::read_artifact(r)?),
+        artifact::TAG_BCM => Box::new(Bcm::read_artifact(r, version)?),
+        artifact::TAG_CLUSTER_KRIGING => Box::new(ClusterKriging::read_artifact(r, version)?),
         artifact::TAG_STANDARDIZED => Box::new(Standardized::read_artifact(r)?),
         other => bail!("unknown artifact model tag {other}"),
     })

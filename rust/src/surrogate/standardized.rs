@@ -115,4 +115,154 @@ impl Surrogate for Standardized {
         self.write_artifact(&mut payload)?;
         artifact::write_model(w, artifact::TAG_STANDARDIZED, &payload.into_bytes())
     }
+
+    fn as_online(&self) -> Option<&dyn crate::online::OnlineSurrogate> {
+        // Online-capable exactly when the wrapped model is: the wrapper
+        // only translates units.
+        if self.inner.as_online().is_some() {
+            Some(self)
+        } else {
+            None
+        }
+    }
+
+    fn as_online_mut(&mut self) -> Option<&mut dyn crate::online::OnlineSurrogate> {
+        if self.inner.as_online().is_some() {
+            Some(self)
+        } else {
+            None
+        }
+    }
+}
+
+impl crate::online::OnlineSurrogate for Standardized {
+    fn observe(&mut self, x: &[f64], y: f64) -> Result<()> {
+        anyhow::ensure!(
+            x.len() == self.std.x_mean.len(),
+            "observe: point has {} dims, model expects {}",
+            x.len(),
+            self.std.x_mean.len()
+        );
+        let xs: Vec<f64> = x
+            .iter()
+            .zip(self.std.x_mean.iter().zip(&self.std.x_std))
+            .map(|(v, (m, s))| (v - m) / s)
+            .collect();
+        let ys = (y - self.std.y_mean) / self.std.y_std;
+        // Recoverable (not a panic): the impl is reachable on a concrete
+        // `Standardized` without going through `as_online_mut`'s
+        // capability check. (Name is taken first — the error closure must
+        // not borrow `inner` while the mutable online view is live.)
+        let inner_name = self.inner.name().to_string();
+        self.inner
+            .as_online_mut()
+            .ok_or_else(|| anyhow::anyhow!("wrapped {inner_name} model is not online-capable"))?
+            .observe(&xs, ys)
+    }
+
+    fn training_snapshot(&self) -> (Matrix, Vec<f64>) {
+        // Inner state is in standardized units; report raw units so refit
+        // engines can re-standardize on the grown history.
+        let (xs, ys) = self
+            .inner
+            .as_online()
+            .expect("checked by as_online")
+            .training_snapshot();
+        let (n, d) = xs.shape();
+        let mut x = Matrix::zeros(n, d);
+        for i in 0..n {
+            let src = xs.row(i);
+            let dst = x.row_mut(i);
+            for j in 0..d {
+                dst[j] = src[j] * self.std.x_std[j] + self.std.x_mean[j];
+            }
+        }
+        let y: Vec<f64> = ys.iter().map(|&v| self.std.inverse_y(v)).collect();
+        (x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::kriging::{HyperOpt, NuggetMode};
+    use crate::online::OnlineSurrogate;
+
+    /// Raw-unit dataset far from zero mean / unit scale, so unit mix-ups
+    /// would be loud: x ∈ [50, 60], y ≈ 500 + 20·sin(x−55).
+    fn make() -> (Standardized, Dataset) {
+        let n = 40;
+        let x: Vec<f64> = (0..n).map(|i| 50.0 + 10.0 * i as f64 / n as f64).collect();
+        let y: Vec<f64> = x.iter().map(|&v| 500.0 + 20.0 * (v - 55.0).sin()).collect();
+        let ds = Dataset::new("raw", Matrix::from_vec(n, 1, x), y);
+        let std = Standardizer::fit(&ds);
+        let tr = std.transform(&ds);
+        let opt = HyperOpt {
+            restarts: 1,
+            max_evals: 15,
+            isotropic: true,
+            nugget: NuggetMode::Fixed(1e-8),
+            ..HyperOpt::default()
+        };
+        let model = opt.fit(tr.x.clone(), &tr.y).unwrap();
+        (Standardized::new(Box::new(model), std), ds)
+    }
+
+    #[test]
+    fn snapshot_reports_raw_units() {
+        let (m, ds) = make();
+        let (sx, sy) = m.training_snapshot();
+        assert_eq!(sx.shape(), ds.x.shape());
+        assert!(sx.max_abs_diff(&ds.x) < 1e-9, "snapshot x not in raw units");
+        let max_dy = sy
+            .iter()
+            .zip(&ds.y)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        assert!(max_dy < 1e-9, "snapshot y not in raw units (max diff {max_dy})");
+    }
+
+    #[test]
+    fn observe_accepts_raw_units() {
+        let (mut m, _) = make();
+        let x_new = [57.3];
+        let y_new = 500.0 + 20.0 * (x_new[0] - 55.0).sin() + 5.0;
+        let probe = Matrix::from_vec(1, 1, x_new.to_vec());
+        let before = m.predict(&probe).unwrap().mean[0];
+        m.observe(&x_new, y_new).unwrap();
+        let after = m.predict(&probe).unwrap().mean[0];
+        assert!(
+            (after - y_new).abs() < (before - y_new).abs(),
+            "posterior did not move toward the raw-unit observation: \
+             {before} -> {after} (target {y_new})"
+        );
+        // Snapshot now includes the streamed point, still in raw units.
+        let (sx, sy) = m.training_snapshot();
+        let last = sx.rows() - 1;
+        assert!((sx.row(last)[0] - x_new[0]).abs() < 1e-9);
+        assert!((sy[last] - y_new).abs() < 1e-9);
+        // Dimension mismatch is recoverable.
+        assert!(m.observe(&[1.0, 2.0], 0.0).is_err());
+    }
+
+    #[test]
+    fn non_online_inner_stays_non_online() {
+        struct Opaque;
+        impl Surrogate for Opaque {
+            fn predict(&self, xt: &Matrix) -> Result<Prediction> {
+                Ok(Prediction { mean: vec![0.0; xt.rows()], variance: vec![0.0; xt.rows()] })
+            }
+            fn name(&self) -> &str {
+                "opaque"
+            }
+            fn dim(&self) -> usize {
+                1
+            }
+        }
+        let std = Standardizer { x_mean: vec![0.0], x_std: vec![1.0], y_mean: 0.0, y_std: 1.0 };
+        let mut wrapped = Standardized::new(Box::new(Opaque), std);
+        assert!(wrapped.as_online().is_none());
+        assert!(wrapped.as_online_mut().is_none());
+    }
 }

@@ -1,0 +1,266 @@
+//! Online-learning equivalence and persistence:
+//!
+//! * observe-then-predict must match fit-from-scratch (fixed
+//!   hyper-parameters) to ≤1e-8 relative error for Ordinary Kriging and,
+//!   cluster by cluster, for Cluster Kriging;
+//! * SoD's reservoir keeps its size under unbounded streams;
+//! * observed models survive `save`/`load` (artifact v2) bit-identically
+//!   and keep observing afterwards;
+//! * v1 artifacts (pre-online layout) still load and are observable.
+
+use cluster_kriging::cluster_kriging::{
+    ClusterKriging, ClusterKrigingConfig, Combiner, KMeansPartitioner,
+};
+use cluster_kriging::kernel::{Kernel, KernelKind};
+use cluster_kriging::kriging::{HyperOpt, NuggetMode, OrdinaryKriging, Surrogate};
+use cluster_kriging::online::OnlineSurrogate;
+use cluster_kriging::surrogate::{artifact, SurrogateSpec};
+use cluster_kriging::util::matrix::Matrix;
+use cluster_kriging::util::proptest::gen_matrix;
+use cluster_kriging::util::rng::Rng;
+
+fn target(row: &[f64]) -> f64 {
+    row[0].sin() + 0.4 * row[1] * row[1]
+}
+
+fn base_data(n: usize, seed: u64) -> (Matrix, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let x = gen_matrix(&mut rng, n, 2, -3.0, 3.0);
+    let y: Vec<f64> = (0..n).map(|i| target(x.row(i))).collect();
+    (x, y)
+}
+
+fn rel_close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * a.abs().max(b.abs()).max(1.0)
+}
+
+#[test]
+fn ok_observe_then_predict_equals_fit_from_scratch() {
+    for kind in [KernelKind::SquaredExponential, KernelKind::Matern52] {
+        let (x, y) = base_data(60, 21);
+        let kernel = Kernel::new(kind, vec![0.9, 1.3]);
+        let nugget = 1e-6;
+        let mut online = OrdinaryKriging::fit(x.clone(), &y, kernel.clone(), nugget).unwrap();
+
+        let mut rng = Rng::new(33);
+        let stream = gen_matrix(&mut rng, 20, 2, -3.0, 3.0);
+        let mut x_all = x;
+        let mut y_all = y;
+        for i in 0..stream.rows() {
+            let yi = target(stream.row(i));
+            online.observe(stream.row(i), yi).unwrap();
+            x_all = x_all.vstack(&Matrix::from_vec(1, 2, stream.row(i).to_vec()));
+            y_all.push(yi);
+        }
+        let scratch = OrdinaryKriging::fit(x_all, &y_all, kernel, nugget).unwrap();
+
+        let probe = gen_matrix(&mut rng, 25, 2, -3.5, 3.5);
+        let po = online.predict(&probe).unwrap();
+        let ps = scratch.predict(&probe).unwrap();
+        for i in 0..probe.rows() {
+            assert!(
+                rel_close(po.mean[i], ps.mean[i], 1e-8),
+                "{kind:?}: mean {i}: {} vs {}",
+                po.mean[i],
+                ps.mean[i]
+            );
+            assert!(
+                rel_close(po.variance[i], ps.variance[i], 1e-6),
+                "{kind:?}: variance {i}: {} vs {}",
+                po.variance[i],
+                ps.variance[i]
+            );
+        }
+        assert!(rel_close(online.nll(), scratch.nll(), 1e-8), "{kind:?}: NLL drifted");
+    }
+}
+
+#[test]
+fn ck_observe_then_predict_equals_per_cluster_fit_from_scratch() {
+    let (x, y) = base_data(150, 5);
+    let cfg = ClusterKrigingConfig {
+        partitioner: Box::new(KMeansPartitioner { k: 3, seed: 2 }),
+        combiner: Combiner::OptimalWeights,
+        // One evaluation at the search-space center: θ is fixed and
+        // identical for the online model and the scratch comparators.
+        hyperopt: HyperOpt {
+            restarts: 1,
+            max_evals: 1,
+            isotropic: true,
+            nugget: NuggetMode::Fixed(1e-6),
+            ..HyperOpt::default()
+        },
+        workers: Some(2),
+        flavor: "OWCK".into(),
+    };
+    let mut online = ClusterKriging::fit(&x, &y, cfg).unwrap();
+
+    let mut rng = Rng::new(77);
+    let stream = gen_matrix(&mut rng, 30, 2, -3.0, 3.0);
+    for i in 0..stream.rows() {
+        online.observe(stream.row(i), target(stream.row(i))).unwrap();
+    }
+    assert_eq!(
+        online.models().iter().map(|m| m.n_train()).sum::<usize>(),
+        180,
+        "streamed points must all land in some cluster"
+    );
+
+    // Scratch comparator per cluster: refit on that cluster's grown data
+    // under its own (fixed) fitted kernel. With identical memberships and
+    // combiners, per-cluster equivalence implies ensemble equivalence.
+    let probe = gen_matrix(&mut rng, 20, 2, -3.0, 3.0);
+    for (ci, m) in online.models().iter().enumerate() {
+        let scratch = OrdinaryKriging::fit(
+            m.x_train().clone(),
+            m.y_train(),
+            m.kernel().clone(),
+            m.nugget(),
+        )
+        .unwrap();
+        for i in 0..probe.rows() {
+            let (mo, vo) = m.predict_one(probe.row(i));
+            let (ms, vs) = scratch.predict_one(probe.row(i));
+            assert!(
+                rel_close(mo, ms, 1e-8),
+                "cluster {ci}: mean at probe {i}: {mo} vs {ms}"
+            );
+            assert!(
+                rel_close(vo, vs, 1e-6),
+                "cluster {ci}: variance at probe {i}: {vo} vs {vs}"
+            );
+        }
+    }
+}
+
+#[test]
+fn observed_model_roundtrips_through_artifact_v2() {
+    let (x, y) = base_data(40, 9);
+    let kernel = Kernel::new(KernelKind::SquaredExponential, vec![1.1, 0.7]);
+    let mut model = OrdinaryKriging::fit(x, &y, kernel, 1e-6).unwrap();
+    let mut rng = Rng::new(13);
+    let stream = gen_matrix(&mut rng, 10, 2, -3.0, 3.0);
+    for i in 0..stream.rows() {
+        model.observe(stream.row(i), target(stream.row(i))).unwrap();
+    }
+
+    let mut bytes = Vec::new();
+    model.save(&mut bytes).unwrap();
+    let mut loaded = SurrogateSpec::load(bytes.as_slice()).unwrap();
+
+    // Bit-identical predictions after the roundtrip.
+    let probe = gen_matrix(&mut rng, 12, 2, -3.0, 3.0);
+    let a = model.predict(&probe).unwrap();
+    let b = Surrogate::predict(loaded.as_ref(), &probe).unwrap();
+    for i in 0..probe.rows() {
+        assert_eq!(a.mean[i].to_bits(), b.mean[i].to_bits(), "mean {i}");
+        assert_eq!(a.variance[i].to_bits(), b.variance[i].to_bits(), "variance {i}");
+    }
+
+    // The loaded model keeps absorbing observations.
+    let online = loaded.as_online_mut().expect("loaded model must stay online-capable");
+    online.observe(&[0.5, -0.5], 1.0).unwrap();
+    let (sx, sy) = online.training_snapshot();
+    assert_eq!(sx.rows(), 51);
+    assert_eq!(sy.len(), 51);
+}
+
+#[test]
+fn v1_artifact_loads_and_stays_observable() {
+    // Craft a v1 artifact from a v2 one: the v1 payload is the v2 payload
+    // minus the trailing y slice (8-byte length prefix + n × 8 bytes),
+    // reframed at container version 1.
+    let (x, y) = base_data(30, 17);
+    let kernel = Kernel::new(KernelKind::SquaredExponential, vec![0.8, 0.8]);
+    let model = OrdinaryKriging::fit(x, &y, kernel, 1e-6).unwrap();
+    let mut v2_bytes = Vec::new();
+    model.save(&mut v2_bytes).unwrap();
+    let (version, tag, payload) = artifact::read_model(&mut v2_bytes.as_slice()).unwrap();
+    assert_eq!(version, artifact::VERSION);
+    assert_eq!(tag, artifact::TAG_KRIGING);
+    let v1_payload = &payload[..payload.len() - (8 + 8 * model.n_train())];
+    let mut v1_bytes = Vec::new();
+    artifact::write_model_versioned(&mut v1_bytes, tag, v1_payload, 1).unwrap();
+
+    let mut loaded = SurrogateSpec::load(v1_bytes.as_slice()).unwrap();
+    // Predictions must be bit-identical (the prediction state is all v1).
+    let mut rng = Rng::new(19);
+    let probe = gen_matrix(&mut rng, 10, 2, -3.0, 3.0);
+    let a = model.predict(&probe).unwrap();
+    let b = Surrogate::predict(loaded.as_ref(), &probe).unwrap();
+    for i in 0..probe.rows() {
+        assert_eq!(a.mean[i].to_bits(), b.mean[i].to_bits(), "mean {i}");
+    }
+    // The v1 model reconstructed its targets from the factor: observing
+    // still works and the snapshot matches the original y to rounding.
+    let online = loaded.as_online_mut().expect("v1 artifact must come back observable");
+    let (_, sy) = online.training_snapshot();
+    let max_dy = sy
+        .iter()
+        .zip(model.y_train())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max);
+    assert!(max_dy < 1e-8, "reconstructed y off by {max_dy}");
+    online.observe(&[0.1, 0.2], 0.5).unwrap();
+    assert_eq!(online.training_snapshot().1.len(), 31);
+}
+
+#[test]
+fn v1_reconstruction_is_exact_for_jittered_factors() {
+    // A duplicated training point with a zero nugget forces the fit
+    // through the jitter-escalation path, so the stored factor is of
+    // C + jitter·I, not C. α was solved through that same factor, so the
+    // reconstruction y = L·Lᵀ·α + μ̂·1 must stay exact — a jitter
+    // "correction" here would corrupt every reloaded v1 target.
+    let mut rng = Rng::new(31);
+    let mut x = gen_matrix(&mut rng, 24, 2, -2.0, 2.0);
+    let dup = x.row(3).to_vec();
+    x.row_mut(17).copy_from_slice(&dup);
+    let y: Vec<f64> = (0..24).map(|i| target(x.row(i))).collect();
+    let kernel = Kernel::new(KernelKind::SquaredExponential, vec![1.0, 1.0]);
+    let model = OrdinaryKriging::fit(x, &y, kernel, 0.0).unwrap();
+
+    let mut v2_bytes = Vec::new();
+    model.save(&mut v2_bytes).unwrap();
+    let (_, tag, payload) = artifact::read_model(&mut v2_bytes.as_slice()).unwrap();
+    let v1_payload = &payload[..payload.len() - (8 + 8 * model.n_train())];
+    let mut v1_bytes = Vec::new();
+    artifact::write_model_versioned(&mut v1_bytes, tag, v1_payload, 1).unwrap();
+
+    let mut loaded = SurrogateSpec::load(v1_bytes.as_slice()).unwrap();
+    let (_, sy) = loaded.as_online_mut().unwrap().training_snapshot();
+    let max_dy = sy
+        .iter()
+        .zip(model.y_train())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max);
+    assert!(max_dy < 1e-8, "jittered v1 reconstruction off by {max_dy}");
+}
+
+#[test]
+fn sod_reservoir_streams_at_bounded_size() {
+    let (x, y) = base_data(100, 23);
+    let opt = HyperOpt {
+        restarts: 1,
+        max_evals: 10,
+        isotropic: true,
+        nugget: NuggetMode::Fixed(1e-6),
+        ..HyperOpt::default()
+    };
+    let mut sod =
+        cluster_kriging::baselines::SubsetOfData::fit(&x, &y, 30, 3, &opt).unwrap();
+    let mut rng = Rng::new(29);
+    let stream = gen_matrix(&mut rng, 300, 2, -3.0, 3.0);
+    for i in 0..stream.rows() {
+        sod.observe(stream.row(i), target(stream.row(i))).unwrap();
+    }
+    assert_eq!(sod.inner().n_train(), 30, "reservoir must stay at its size bound");
+    assert_eq!(sod.seen(), 400);
+    // Roundtrip keeps the reservoir counters (artifact v2).
+    let mut bytes = Vec::new();
+    sod.save(&mut bytes).unwrap();
+    let mut loaded = SurrogateSpec::load(bytes.as_slice()).unwrap();
+    let online = loaded.as_online_mut().expect("SoD must stay online-capable");
+    online.observe(&[0.0, 0.0], 0.0).unwrap();
+    assert_eq!(online.training_snapshot().1.len(), 30);
+}

@@ -1,12 +1,25 @@
-//! End-to-end CLI lifecycle: `ckrig fit --out` writes an artifact,
+//! End-to-end serving lifecycle: `ckrig fit --out` writes an artifact,
 //! `ckrig serve --artifact` boots from it without a refit, and the live
 //! server answers `predict`/`predictb`, lists `models`, and hot-swaps a
 //! second artifact via `load` + `swap` — all through the real binary and
-//! a real TCP connection.
+//! a real TCP connection. A second test drives the online path: a served
+//! model absorbs `observe` traffic while concurrent `predictb` clients
+//! hammer it, and a policy-triggered background refit hot-swaps in
+//! without a single dropped request.
 
-use cluster_kriging::coordinator::Client;
+use cluster_kriging::cluster_kriging::{
+    ClusterKriging, ClusterKrigingConfig, Combiner, KMeansPartitioner,
+};
+use cluster_kriging::coordinator::{BatcherConfig, Client, ModelRegistry, Server, ServerConfig};
+use cluster_kriging::kriging::{HyperOpt, NuggetMode, Surrogate};
+use cluster_kriging::online::{OnlineModel, OnlinePolicy, RefitConfig};
+use cluster_kriging::surrogate::{FitOptions, SurrogateSpec};
+use cluster_kriging::util::proptest::gen_matrix;
+use cluster_kriging::util::rng::Rng;
 use std::io::{BufRead, BufReader};
 use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 
 struct KillOnDrop(Child);
 
@@ -117,4 +130,124 @@ fn fit_artifact_serve_predict_swap() {
 
     drop(child);
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn observe_and_background_refit_under_live_traffic() {
+    // 1. Fit a Cluster Kriging model and serve it behind the online
+    // adapter with a tiny staleness budget so the refit fires fast.
+    let mut rng = Rng::new(41);
+    let n = 160;
+    let x = gen_matrix(&mut rng, n, 2, -3.0, 3.0);
+    let y: Vec<f64> = (0..n).map(|i| x.row(i)[0].sin() + 0.3 * x.row(i)[1]).collect();
+    let cfg = ClusterKrigingConfig {
+        partitioner: Box::new(KMeansPartitioner { k: 4, seed: 3 }),
+        combiner: Combiner::OptimalWeights,
+        hyperopt: HyperOpt {
+            restarts: 1,
+            max_evals: 10,
+            isotropic: true,
+            nugget: NuggetMode::Fixed(1e-6),
+            ..HyperOpt::default()
+        },
+        workers: Some(2),
+        flavor: "OWCK".into(),
+    };
+    let model = ClusterKriging::fit(&x, &y, cfg).unwrap();
+    let policy = OnlinePolicy {
+        staleness_budget: 24,
+        drift_window: 512,
+        drift_zscore: 1e9,
+        ..OnlinePolicy::default()
+    };
+    let adapter = OnlineModel::try_new(Box::new(model), policy)
+        .unwrap_or_else(|_| panic!("ClusterKriging must be online-capable"))
+        .with_refit(RefitConfig {
+            spec: SurrogateSpec::ClusterKriging { flavor: "OWCK".into(), k: 4 },
+            opts: FitOptions::fast(),
+        });
+    let adapter = Arc::new(adapter);
+    let registry = Arc::new(ModelRegistry::new(
+        "live",
+        Arc::clone(&adapter) as Arc<dyn Surrogate>,
+    ));
+    adapter.bind(&registry, "live");
+    let initial = registry.default_model();
+    let server = Server::start(
+        Arc::clone(&registry),
+        ServerConfig { addr: "127.0.0.1:0".into(), batcher: BatcherConfig::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr.to_string();
+
+    // 2. Concurrent predictb traffic that must never see an error.
+    let stop = Arc::new(AtomicBool::new(false));
+    let served = Arc::new(AtomicU64::new(0));
+    let mut traffic = Vec::new();
+    for t in 0..3 {
+        let addr = addr.clone();
+        let stop = Arc::clone(&stop);
+        let served = Arc::clone(&served);
+        traffic.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            let mut i = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let p = vec![
+                    ((t * 100 + i) % 60) as f64 / 10.0 - 3.0,
+                    (i % 60) as f64 / 10.0 - 3.0,
+                ];
+                let out = c
+                    .predict_batch(None, &[&p[..], &p[..]])
+                    .expect("predictb failed during refit hot-swap");
+                assert!(out.iter().all(|(m, v)| m.is_finite() && *v >= 0.0));
+                served.fetch_add(out.len() as u64, Ordering::Relaxed);
+                i += 1;
+            }
+        }));
+    }
+
+    // 3. Stream observations over the wire until the staleness budget
+    // forces a background refit that swaps the slot.
+    let mut obs_client = Client::connect(&addr).unwrap();
+    let mut streamed = 0usize;
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    let swapped = loop {
+        let points: Vec<Vec<f64>> = (0..4)
+            .map(|_| vec![rng.uniform_in(-3.0, 3.0), rng.uniform_in(-3.0, 3.0)])
+            .collect();
+        let ys: Vec<f64> = points.iter().map(|p| p[0].sin() + 0.3 * p[1]).collect();
+        let absorbed = obs_client
+            .observe_batch(None, &points, &ys)
+            .expect("observe failed under live traffic");
+        assert_eq!(absorbed, points.len());
+        streamed += absorbed;
+        if !Arc::ptr_eq(&registry.default_model(), &initial) {
+            break true;
+        }
+        if std::time::Instant::now() > deadline {
+            break false;
+        }
+    };
+    assert!(swapped, "background refit never hot-swapped the slot ({streamed} streamed)");
+
+    // 4. The swapped-in model keeps serving observes and predicts.
+    let stats = obs_client.stats().unwrap();
+    assert!(stats.contains("slots=live"), "{stats}");
+    obs_client.observe(&[0.0, 0.0], 0.0).unwrap();
+    let (m, v) = obs_client.predict(&[0.5, 0.5]).unwrap();
+    assert!(m.is_finite() && v >= 0.0);
+
+    // 5. Wind down traffic; every request must have succeeded.
+    stop.store(true, Ordering::Relaxed);
+    for t in traffic {
+        t.join().expect("traffic thread panicked (a request was dropped)");
+    }
+    assert!(served.load(Ordering::Relaxed) > 0, "no predictions served during the test");
+    assert_eq!(
+        server.metrics.errors.load(Ordering::Relaxed),
+        0,
+        "server recorded errors during observe/refit/swap"
+    );
+    let observed_total = server.metrics.observes.load(Ordering::Relaxed);
+    assert!(observed_total as usize >= streamed, "observes counter lost updates");
 }
