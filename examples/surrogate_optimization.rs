@@ -2,47 +2,23 @@
 //! paper's introduction motivates (Kriging as a surrogate in expensive
 //! black-box optimization; the Kriging *variance* drives exploration).
 //!
-//! Classic EGO loop (Jones et al. 1998) with Cluster Kriging as the
-//! surrogate: fit on evaluated points, maximize Expected Improvement over
-//! a candidate pool, evaluate the true function there, repeat. Compares
-//! EI-driven search against random search on the Himmelblau function.
+//! Built on the first-class `optimize/` subsystem: an ask/tell
+//! [`Optimizer`] runs the classic EGO loop (Jones et al. 1998) with a
+//! Cluster Kriging surrogate — space-filling initial design, Expected
+//! Improvement over LHS + incumbent-perturbation candidate pools, tells
+//! absorbed as O(n_c²) cluster-local incremental observes, full refits
+//! scheduled by the staleness/drift policy engine. A three-point
+//! constant-liar batch round shows `ask(q)`; random search at the same
+//! budget is the baseline.
 //!
 //! ```bash
 //! cargo run --release --example surrogate_optimization
 //! ```
 
-use cluster_kriging::cluster_kriging::{builder, ClusterKriging};
 use cluster_kriging::data::functions::by_name;
-use cluster_kriging::data::synthetic::latin_hypercube;
-use cluster_kriging::kriging::HyperOpt;
-use cluster_kriging::util::matrix::Matrix;
+use cluster_kriging::optimize::{Acquisition, Bounds, Optimizer, OptimizerConfig};
+use cluster_kriging::surrogate::SurrogateSpec;
 use cluster_kriging::util::rng::Rng;
-
-/// Standard-normal PDF / CDF for Expected Improvement.
-fn phi(z: f64) -> f64 {
-    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
-}
-
-fn big_phi(z: f64) -> f64 {
-    // Abramowitz–Stegun erf approximation (max err ~1.5e-7).
-    let t = 1.0 / (1.0 + 0.2316419 * z.abs());
-    let poly = t
-        * (0.319381530
-            + t * (-0.356563782 + t * (1.781477937 + t * (-1.821255978 + t * 1.330274429))));
-    let tail = phi(z.abs()) * poly;
-    if z >= 0.0 {
-        1.0 - tail
-    } else {
-        tail
-    }
-}
-
-/// Expected improvement of a minimization at mean/variance vs best-so-far.
-fn expected_improvement(mean: f64, variance: f64, best: f64) -> f64 {
-    let sd = variance.sqrt().max(1e-12);
-    let z = (best - mean) / sd;
-    (best - mean) * big_phi(z) + sd * phi(z)
-}
 
 fn main() -> anyhow::Result<()> {
     let bench = by_name("himmelblau").unwrap();
@@ -51,57 +27,32 @@ fn main() -> anyhow::Result<()> {
     let budget = 60; // total true-function evaluations
     let init = 15;
 
-    // --- EI-driven loop with a Cluster Kriging surrogate.
-    let mut x_data = latin_hypercube(init, d, lo, hi, 5);
-    let mut y_data: Vec<f64> = (0..init).map(|i| (bench.eval)(x_data.row(i))).collect();
-    let mut rng = Rng::new(99);
-
-    for round in init..budget {
-        let k = (y_data.len() / 20).clamp(1, 4);
-        let cfg = builder::flavor(
-            "GMMCK",
-            k,
-            round as u64,
-            HyperOpt { restarts: 1, max_evals: 20, ..HyperOpt::default() },
-        )?;
-        let model = ClusterKriging::fit(&x_data, &y_data, cfg)?;
-        let best = y_data.iter().copied().fold(f64::INFINITY, f64::min);
-
-        // Candidate pool: fresh LHS + local perturbations of the incumbent.
-        let pool = 512;
-        let mut cands = latin_hypercube(pool, d, lo, hi, 1000 + round as u64);
-        let inc = cluster_kriging::util::stats::argmin(&y_data);
-        for i in 0..32.min(pool) {
-            for j in 0..d {
-                cands[(i, j)] =
-                    (x_data[(inc, j)] + rng.normal_with(0.0, 0.3)).clamp(lo, hi);
-            }
+    // --- EI-driven ask/tell loop with a Cluster Kriging surrogate.
+    let cfg = OptimizerConfig {
+        acquisition: Acquisition::ei(),
+        init,
+        seed: 99,
+        ..OptimizerConfig::new(SurrogateSpec::parse("gmmck:4")?)
+    };
+    let mut opt = Optimizer::new(Bounds::cube(d, lo, hi)?, cfg)?;
+    let mut evals = 0;
+    while evals < budget {
+        // One batch round mid-run demonstrates constant-liar proposals:
+        // three points asked at once, spread by the fantasized lies.
+        let q = if evals == 30 { 3.min(budget - evals) } else { 1 };
+        let xs = opt.ask(q)?;
+        for i in 0..xs.rows() {
+            let x = xs.row(i).to_vec();
+            opt.tell(&x, (bench.eval)(&x))?;
+            evals += 1;
         }
-
-        let pred = model.predict_batch(&cands);
-        let mut best_ei = f64::NEG_INFINITY;
-        let mut pick = 0;
-        for i in 0..pool {
-            let ei = expected_improvement(pred.mean[i], pred.variance[i], best);
-            if ei > best_ei {
-                best_ei = ei;
-                pick = i;
-            }
-        }
-
-        let chosen: Vec<f64> = cands.row(pick).to_vec();
-        let value = (bench.eval)(&chosen);
-        x_data = x_data.vstack(&Matrix::from_vec(1, d, chosen));
-        y_data.push(value);
-        if (round + 1) % 10 == 0 {
-            println!(
-                "eval {:>3}: best so far {:.5}",
-                round + 1,
-                y_data.iter().copied().fold(f64::INFINITY, f64::min)
-            );
+        if evals % 10 == 0 {
+            let (_, best) = opt.best().unwrap();
+            println!("eval {evals:>3}: best so far {best:.5}");
         }
     }
-    let ei_best = y_data.iter().copied().fold(f64::INFINITY, f64::min);
+    let (ei_x, ei_best) = opt.best().unwrap();
+    let (ei_x, stats) = (ei_x.to_vec(), opt.stats());
 
     // --- Random-search baseline with the same budget.
     let mut rng = Rng::new(123);
@@ -112,8 +63,12 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!("\nHimmelblau minimization, {budget} evaluations:");
-    println!("  EGO + Cluster Kriging : {ei_best:.5}");
+    println!("  EGO + Cluster Kriging : {ei_best:.5} at {ei_x:?}");
     println!("  random search         : {rand_best:.5}");
-    println!("  (global optimum 0.0; surrogate should be much closer)");
+    println!(
+        "  ({} surrogate fits, {} incremental tells — global optimum 0.0; \
+         the surrogate should be much closer)",
+        stats.fits, stats.incremental
+    );
     Ok(())
 }

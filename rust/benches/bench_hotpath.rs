@@ -20,10 +20,15 @@
 //!   O1  online learning — per-point cluster-local `observe` (O(n_c²)
 //!       incremental Cholesky) vs a full ClusterKriging refit at
 //!       n ∈ {1024, 4096}, k=8 (override sizes with `CKRIG_ONLINE_NS`).
+//!   A1  optimization — EI/PI/LCB acquisition throughput over a
+//!       10k-candidate pool (override with `CKRIG_ACQ_POOL`), split into
+//!       posterior+score and score-only; plus single-proposal `suggest`
+//!       latency for CK vs full Kriging vs SoD surrogates.
 //!
-//! Results are also written to `BENCH_hotpath.json`, `BENCH_serving.json`
-//! and `BENCH_online.json` (override with `CKRIG_BENCH_JSON` /
-//! `CKRIG_BENCH_SERVING_JSON` / `CKRIG_BENCH_ONLINE_JSON`) so CI can
+//! Results are also written to `BENCH_hotpath.json`,
+//! `BENCH_serving.json`, `BENCH_online.json` and `BENCH_optimize.json`
+//! (override with `CKRIG_BENCH_JSON` / `CKRIG_BENCH_SERVING_JSON` /
+//! `CKRIG_BENCH_ONLINE_JSON` / `CKRIG_BENCH_OPTIMIZE_JSON`) so CI can
 //! track the perf trajectory.
 //!
 //! ```bash
@@ -34,7 +39,10 @@ use cluster_kriging::cluster_kriging::{
     ClusterKriging, ClusterKrigingConfig, Combiner, KMeansPartitioner,
 };
 use cluster_kriging::coordinator::{Batcher, BatcherConfig, ModelRegistry, ServerMetrics};
+use cluster_kriging::data::Dataset;
 use cluster_kriging::kernel::cache::DistanceCache;
+use cluster_kriging::optimize::{latin_hypercube_in, propose, Acquisition, Bounds};
+use cluster_kriging::surrogate::{FitOptions, SurrogateSpec};
 use cluster_kriging::kriging::Surrogate;
 use cluster_kriging::kernel::{Kernel, KernelKind};
 use cluster_kriging::kriging::{HyperOpt, NuggetMode, OrdinaryKriging};
@@ -458,6 +466,119 @@ fn main() {
     match std::fs::write(&online_json_path, &online_json) {
         Ok(()) => println!("  wrote {online_json_path}"),
         Err(e) => eprintln!("  failed to write {online_json_path}: {e}"),
+    }
+
+    // == A1: optimization — acquisition throughput + suggest latency ==
+    // The EGO inner problem is a batched posterior over a candidate pool
+    // (the serve path's predict_into), then a scalar score per row; this
+    // section separates the two costs and times an end-to-end single
+    // proposal per surrogate family.
+    let acq_pool = env_usize("CKRIG_ACQ_POOL", 10_000);
+    println!("\n== A1: acquisition over {acq_pool}-candidate pools, model n={n}, d={d} ==");
+    let a_model = OrdinaryKriging::fit(x.clone(), &y, kernel.clone(), 1e-6).unwrap();
+    let bounds = Bounds::cube(d, -3.0, 3.0).unwrap();
+    let mut arng = Rng::new(17);
+    let cands = latin_hypercube_in(&bounds, acq_pool, &mut arng);
+    let best = y.iter().copied().fold(f64::INFINITY, f64::min);
+    let (mut mbuf, mut vbuf, mut sbuf) = (Vec::new(), Vec::new(), Vec::new());
+    let mut acq_records: Vec<String> = Vec::new();
+    for acq in [Acquisition::ei(), Acquisition::poi(), Acquisition::lcb()] {
+        // Full path: posterior + score.
+        let (t_full, _) = time(|| {
+            acq.score_batch_into(&a_model, &cands, best, &mut mbuf, &mut vbuf, &mut sbuf)
+                .unwrap();
+            std::hint::black_box(&sbuf);
+        });
+        // Score-only path over the cached posterior.
+        let (t_score, _) = time(|| {
+            for i in 0..acq_pool {
+                sbuf[i] = acq.score(mbuf[i], vbuf[i], best);
+            }
+            std::hint::black_box(&sbuf);
+        });
+        println!(
+            "  {:<4} posterior+score {:8.1} ms ({:>9.0} cand/s) | score-only {:6.2} ms \
+             ({:>11.0} cand/s)",
+            acq.name(),
+            t_full * 1e3,
+            acq_pool as f64 / t_full,
+            t_score * 1e3,
+            acq_pool as f64 / t_score
+        );
+        acq_records.push(format!(
+            concat!(
+                "    {{\n",
+                "      \"acquisition\": \"{name}\",\n",
+                "      \"posterior_and_score_s\": {full:.6},\n",
+                "      \"score_only_s\": {score:.9}\n",
+                "    }}"
+            ),
+            name = acq.name(),
+            full = t_full,
+            score = t_score,
+        ));
+    }
+
+    // Single-proposal suggest latency per surrogate family (fixed θ so
+    // the numbers isolate the proposal path, not the hyperopt).
+    let a_ds = Dataset::new("bench-a1", x.clone(), y.clone());
+    let a_opts = FitOptions { hyperopt: fixed_theta_opt(), seed: 5 };
+    let mut sug_records: Vec<String> = Vec::new();
+    for spec_text in ["mtck:8", "kriging", "sod:256"] {
+        let spec = SurrogateSpec::parse(spec_text).unwrap();
+        let model = spec.fit(&a_ds, &a_opts).unwrap();
+        let reps = 10;
+        let (t_sug, _) = time(|| {
+            for _ in 0..reps {
+                std::hint::black_box(
+                    propose(
+                        model.as_ref(),
+                        &bounds,
+                        best,
+                        None,
+                        1,
+                        Acquisition::ei(),
+                        512,
+                        &mut arng,
+                    )
+                    .unwrap(),
+                );
+            }
+        });
+        let per = t_sug / reps as f64;
+        println!("  suggest {spec_text:<8} {:8.2} ms/proposal (512-candidate pool)", per * 1e3);
+        sug_records.push(format!(
+            concat!(
+                "    {{\n",
+                "      \"algo\": \"{algo}\",\n",
+                "      \"suggest_s\": {per:.6}\n",
+                "    }}"
+            ),
+            algo = spec_text,
+            per = per,
+        ));
+    }
+    let optimize_json_path = std::env::var("CKRIG_BENCH_OPTIMIZE_JSON")
+        .unwrap_or_else(|_| "BENCH_optimize.json".into());
+    let optimize_json = format!(
+        concat!(
+            "{{\n",
+            "  \"n\": {n},\n",
+            "  \"d\": {d},\n",
+            "  \"pool\": {pool},\n",
+            "  \"acquisition\": [\n{acq}\n  ],\n",
+            "  \"suggest\": [\n{sug}\n  ]\n",
+            "}}\n"
+        ),
+        n = n,
+        d = d,
+        pool = acq_pool,
+        acq = acq_records.join(",\n"),
+        sug = sug_records.join(",\n"),
+    );
+    match std::fs::write(&optimize_json_path, &optimize_json) {
+        Ok(()) => println!("  wrote {optimize_json_path}"),
+        Err(e) => eprintln!("  failed to write {optimize_json_path}: {e}"),
     }
 
     // == machine-readable record for the CI perf trajectory ==

@@ -57,23 +57,34 @@ impl Combiner {
 
 /// Optimal (minimum-variance) weighting, Eq. 12:
 /// wₗ* = (1/σₗ²) / Σᵢ (1/σᵢ²);  mean = Σ wₗ mₗ;  var = Σ wₗ² σₗ².
+///
+/// Kriging variances can numerically underflow to zero — or dip slightly
+/// *negative* — at (near-)interpolated test points, and a raw 1/σₗ²
+/// would then produce ±∞/NaN weights. Guarded two ways: a model whose
+/// variance is at or below the [`VAR_FLOOR`] is treated as *certain* and
+/// dominates (degenerate branch), and the general branch clamps every
+/// variance to the floor before inverting so the weights stay finite.
+const VAR_FLOOR: f64 = 1e-12;
+
 fn combine_optimal(preds: &[ClusterPrediction]) -> ClusterPrediction {
-    // Zero-variance guard: a model that is *certain* dominates. If any σ²
-    // underflows, fall back to averaging only the certain models.
-    const EPS: f64 = 1e-300;
+    // Degenerate branch: any certain (σ² ≤ floor, including negative-
+    // underflow) model dominates; average the certain ones.
     let certain: Vec<&ClusterPrediction> =
-        preds.iter().filter(|p| p.variance <= EPS).collect();
+        preds.iter().filter(|p| p.variance <= VAR_FLOOR).collect();
     if !certain.is_empty() {
         let mean = certain.iter().map(|p| p.mean).sum::<f64>() / certain.len() as f64;
         return ClusterPrediction { mean, variance: 0.0 };
     }
-    let inv_sum: f64 = preds.iter().map(|p| 1.0 / p.variance).sum();
+    // General branch: every σ² > floor, but clamp anyway so the invariant
+    // is local to this line rather than to the filter above.
+    let inv_sum: f64 = preds.iter().map(|p| 1.0 / p.variance.max(VAR_FLOOR)).sum();
     let mut mean = 0.0;
     let mut variance = 0.0;
     for p in preds {
-        let w = (1.0 / p.variance) / inv_sum;
+        let v = p.variance.max(VAR_FLOOR);
+        let w = (1.0 / v) / inv_sum;
         mean += w * p.mean;
-        variance += w * w * p.variance;
+        variance += w * w * v;
     }
     ClusterPrediction { mean, variance }
 }
@@ -157,6 +168,30 @@ mod tests {
             crate::prop_assert!(out.variance <= uniform_var + 1e-12);
             Ok(())
         });
+    }
+
+    #[test]
+    fn optimal_weights_survive_degenerate_variances() {
+        // Subnormal, exactly-zero and negative-underflow variances must
+        // never produce NaN/∞ — the certain models dominate and their
+        // means average.
+        for bad in [0.0, 1e-320, -1e-15, 1e-13] {
+            let preds = [p(2.0, bad), p(100.0, 1.0)];
+            let out = Combiner::OptimalWeights.combine(&preds, &[], 0);
+            assert!(out.mean.is_finite() && out.variance.is_finite(), "σ²={bad}");
+            assert_eq!(out.mean, 2.0, "certain model must dominate at σ²={bad}");
+            assert_eq!(out.variance, 0.0);
+        }
+        // Two degenerate models average; the healthy one is ignored.
+        let preds = [p(1.0, 0.0), p(3.0, -1e-300), p(50.0, 2.0)];
+        let out = Combiner::OptimalWeights.combine(&preds, &[], 0);
+        assert_eq!(out.mean, 2.0);
+        // Just above the floor stays on the general inverse-variance
+        // branch and must still be finite with near-total weight.
+        let preds = [p(7.0, 1e-9), p(0.0, 1.0)];
+        let out = Combiner::OptimalWeights.combine(&preds, &[], 0);
+        assert!(out.mean.is_finite() && out.variance.is_finite());
+        assert!((out.mean - 7.0).abs() < 1e-6, "{}", out.mean);
     }
 
     #[test]

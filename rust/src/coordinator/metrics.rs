@@ -12,9 +12,12 @@ const BUCKET_BOUNDS_US: [u64; 12] =
 pub struct ServerMetrics {
     pub requests: AtomicU64,
     pub predictions: AtomicU64,
-    /// Observations absorbed through the `observe`/`observeb` protocol
-    /// ops (protocol v3 — the online-learning path).
+    /// Observations absorbed through the `observe`/`observeb`/`tell`
+    /// protocol ops (protocol v3/v4 — the online-learning path).
     pub observes: AtomicU64,
+    /// Candidate points proposed through the `suggest` protocol op
+    /// (protocol v4 — the optimization-as-a-service path).
+    pub suggests: AtomicU64,
     pub batches: AtomicU64,
     pub errors: AtomicU64,
     latencies: Mutex<Histogram>,
@@ -44,6 +47,11 @@ impl ServerMetrics {
     /// Record `count` observations absorbed by a served model.
     pub fn record_observes(&self, count: usize) {
         self.observes.fetch_add(count as u64, Ordering::Relaxed);
+    }
+
+    /// Record `count` candidate points proposed by a `suggest` op.
+    pub fn record_suggests(&self, count: usize) {
+        self.suggests.fetch_add(count as u64, Ordering::Relaxed);
     }
 
     /// Record one served batch of `size` predictions taking `seconds`.
@@ -88,11 +96,12 @@ impl ServerMetrics {
     /// One-line human-readable summary.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} predictions={} observes={} batches={} errors={} \
+            "requests={} predictions={} observes={} suggests={} batches={} errors={} \
              lat_mean={:.0}µs lat_p50={}µs lat_p99={}µs",
             self.requests.load(Ordering::Relaxed),
             self.predictions.load(Ordering::Relaxed),
             self.observes.load(Ordering::Relaxed),
+            self.suggests.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
             self.mean_latency_us(),
@@ -149,6 +158,19 @@ mod tests {
         assert!(m.summary().contains("observes=4"));
         // Observations are not predictions.
         assert_eq!(m.predictions.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn suggests_counter_accumulates() {
+        let m = ServerMetrics::new();
+        m.record_suggests(4);
+        m.record_suggests(1);
+        assert_eq!(m.suggests.load(Ordering::Relaxed), 5);
+        assert!(m.summary().contains("suggests=5"));
+        // Proposals are neither predictions nor observations.
+        assert_eq!(m.predictions.load(Ordering::Relaxed), 0);
+        assert_eq!(m.observes.load(Ordering::Relaxed), 0);
+        assert!(ServerMetrics::new().summary().contains("suggests=0"));
     }
 
     #[test]

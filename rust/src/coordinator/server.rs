@@ -27,6 +27,18 @@
 //!     (v3 extends the v1 reply with the observes counter inside the
 //!     metrics summary plus the registered model-slot names)
 //!
+//!   v4 (optimization as a service):
+//!   `suggest [model] <q> [bounds]`   → `ok <p1;p2;…;pq>`
+//!     (propose q points to evaluate next, maximizing Expected
+//!     Improvement over the slot's posterior; `bounds` is an optional
+//!     `lo1,hi1;lo2,hi2;…` box, defaulting to the slot's training
+//!     snapshot expanded 5% per side — the slot must be online-capable
+//!     so the incumbent is known)
+//!   `tell [model] <csv>`             → `ok told 1`
+//!     (report an evaluated suggestion: d features then the objective
+//!     value; rides the observe flush queue, so the posterior the next
+//!     flush serves has absorbed it)
+//!
 //! Requests funnel through the [`Batcher`], so concurrent clients are
 //! served in dynamically-formed micro-batches; observations join the
 //! same flush queue and apply before that flush's predictions. Models
@@ -332,6 +344,55 @@ fn dispatch(
             Err(e) => err(format!("{e:#}")),
         };
     }
+    if let Some(rest) = line.strip_prefix("suggest ") {
+        // `suggest [model] <q> [bounds]`. First token is a slot name when
+        // it names an existing slot or cannot be a point count.
+        let tokens: Vec<&str> = rest.split_whitespace().collect();
+        let (model, q_str, bounds_str) = match tokens.as_slice() {
+            [q] => (None, *q, None),
+            [a, b] => {
+                if registry.contains(a) || a.parse::<usize>().is_err() {
+                    (Some(*a), *b, None)
+                } else {
+                    (None, *a, Some(*b))
+                }
+            }
+            [m, q, b] => (Some(*m), *q, Some(*b)),
+            _ => return err("usage: suggest [model] <q> [lo1,hi1;lo2,hi2;...]".into()),
+        };
+        let q: usize = match q_str.parse() {
+            Ok(v) if v >= 1 => v,
+            _ => return err(format!("bad proposal count {q_str:?}")),
+        };
+        return match suggest_for(model, q, bounds_str, registry, metrics) {
+            Ok(points) => format!("ok {points}"),
+            Err(e) => err(format!("{e:#}")),
+        };
+    }
+    if let Some(rest) = line.strip_prefix("tell ") {
+        // `tell [model] <csv>` — an evaluated suggestion coming back:
+        // the point's features followed by the objective value. Identical
+        // shape to `observe` and rides the same flush queue, so the next
+        // flush's predictions (and suggestions) see the updated
+        // posterior.
+        let (model, csv) = match rest.trim().split_once(' ') {
+            Some((m, c))
+                if registry.contains(m.trim())
+                    || (!m.contains(',') && m.parse::<f64>().is_err()) =>
+            {
+                (Some(m.trim()), c.trim())
+            }
+            _ => (None, rest.trim()),
+        };
+        return match parse_csv_point(csv) {
+            Ok(row) if row.len() >= 2 => match batcher.observe_rows(model, row, 1) {
+                Ok(()) => "ok told 1".into(),
+                Err(e) => err(format!("{e:#}")),
+            },
+            Ok(_) => err("tell needs at least one feature and the objective value".into()),
+            Err(e) => err(format!("{e:#}")),
+        };
+    }
     if let Some(rest) = line.strip_prefix("observe ") {
         // `observe [model] <csv>` where the CSV carries the point's
         // features followed by the target value. Model-name detection
@@ -400,6 +461,63 @@ fn dispatch(
         };
     }
     err(format!("unknown command {line:?}"))
+}
+
+/// Execute one `suggest` op: propose `q` points that maximize Expected
+/// Improvement over the slot's posterior. The incumbent (and, when the
+/// request carries no explicit box, the search bounds) come from the
+/// slot's training snapshot, so the slot must be online-capable — which
+/// every `serve`/`load` path wraps automatically when the model supports
+/// it. The shared slot model is never mutated: batch spreading uses the
+/// non-fantasizing greedy selection of [`crate::optimize::propose`].
+fn suggest_for(
+    model: Option<&str>,
+    q: usize,
+    bounds_str: Option<&str>,
+    registry: &ModelRegistry,
+    metrics: &ServerMetrics,
+) -> Result<String> {
+    let target = registry
+        .get(model)
+        .ok_or_else(|| anyhow::anyhow!("no model slot named {:?}", model.unwrap_or("")))?;
+    let (xs, ys) = target
+        .observer()
+        .and_then(|o| o.training_snapshot())
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "model slot {:?} has no training snapshot (not online-capable); \
+                 suggest needs the incumbent",
+                model.unwrap_or("default")
+            )
+        })?;
+    anyhow::ensure!(!ys.is_empty(), "slot has an empty training history");
+    let bounds = match bounds_str {
+        Some(s) => crate::optimize::Bounds::parse(s).context("parsing suggest bounds")?,
+        None => crate::optimize::Bounds::from_data(&xs, 0.05)?,
+    };
+    let inc = crate::util::stats::argmin(&ys);
+    let best = ys[inc];
+    // Deterministic per-request stream: seeded off the running suggests
+    // counter, so repeated identical requests still explore fresh pools
+    // while a replayed session reproduces exactly.
+    let seed =
+        0x5EED_C0DE_u64 ^ metrics.suggests.load(std::sync::atomic::Ordering::Relaxed);
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let points = crate::optimize::propose(
+        target.as_ref(),
+        &bounds,
+        best,
+        Some(xs.row(inc)),
+        q,
+        crate::optimize::Acquisition::ei(),
+        512,
+        &mut rng,
+    )?;
+    metrics.record_suggests(q);
+    let body: Vec<String> = (0..points.rows())
+        .map(|i| points.row(i).iter().map(f64::to_string).collect::<Vec<_>>().join(","))
+        .collect();
+    Ok(body.join(";"))
 }
 
 /// Minimal blocking client for tests/examples.
@@ -545,6 +663,55 @@ impl Client {
     pub fn observe(&mut self, point: &[f64], y: f64) -> Result<()> {
         self.observe_batch(None, &[point], &[y]).map(|_| ())
     }
+
+    /// Ask a served model for `q` points to evaluate next (protocol v4
+    /// `suggest`); `bounds` optionally overrides the snapshot-derived
+    /// search box with an explicit `lo,hi` pair per dimension.
+    pub fn suggest(
+        &mut self,
+        model: Option<&str>,
+        q: usize,
+        bounds: Option<&crate::optimize::Bounds>,
+    ) -> Result<Vec<Vec<f64>>> {
+        anyhow::ensure!(q >= 1, "suggest needs q ≥ 1");
+        let mut line = String::from("suggest ");
+        if let Some(m) = model {
+            line.push_str(m);
+            line.push(' ');
+        }
+        line.push_str(&q.to_string());
+        if let Some(b) = bounds {
+            line.push(' ');
+            line.push_str(&b.to_string());
+        }
+        let reply = self.request(&line)?;
+        let rest = Self::expect_ok(&reply)?;
+        let mut out = Vec::with_capacity(q);
+        for part in rest.split(';') {
+            out.push(parse_csv_point(part).context("malformed suggest reply")?);
+        }
+        anyhow::ensure!(
+            out.len() == q,
+            "server proposed {} points for q={q}",
+            out.len()
+        );
+        Ok(out)
+    }
+
+    /// Report an evaluated suggestion back to the server (protocol v4
+    /// `tell` — flows through the observe queue into the live model).
+    pub fn tell(&mut self, model: Option<&str>, point: &[f64], y: f64) -> Result<()> {
+        let mut row: Vec<String> = point.iter().map(f64::to_string).collect();
+        row.push(y.to_string());
+        let line = match model {
+            Some(m) => format!("tell {m} {}", row.join(",")),
+            None => format!("tell {}", row.join(",")),
+        };
+        let reply = self.request(&line)?;
+        let rest = Self::expect_ok(&reply)?;
+        anyhow::ensure!(rest.starts_with("told"), "unexpected reply: {reply}");
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -593,15 +760,21 @@ mod tests {
         .unwrap()
     }
 
-    /// Online-capable double: predicts the mean of absorbed targets.
+    /// Online-capable double: predicts the mean of absorbed targets and
+    /// keeps the absorbed points as its training snapshot.
     struct Running {
         dim: usize,
+        xs: std::sync::Mutex<Vec<f64>>,
         ys: std::sync::Mutex<Vec<f64>>,
     }
 
     impl Running {
         fn new(dim: usize) -> Self {
-            Self { dim, ys: std::sync::Mutex::new(Vec::new()) }
+            Self {
+                dim,
+                xs: std::sync::Mutex::new(Vec::new()),
+                ys: std::sync::Mutex::new(Vec::new()),
+            }
         }
     }
 
@@ -629,6 +802,7 @@ mod tests {
     impl crate::online::OnlineObserver for Running {
         fn observe_batch(&self, xs: &Matrix, ys: &[f64]) -> Result<()> {
             anyhow::ensure!(xs.cols() == self.dim);
+            self.xs.lock().unwrap().extend_from_slice(xs.as_slice());
             self.ys.lock().unwrap().extend_from_slice(ys);
             Ok(())
         }
@@ -637,6 +811,11 @@ mod tests {
                 observed: self.ys.lock().unwrap().len() as u64,
                 ..Default::default()
             }
+        }
+        fn training_snapshot(&self) -> Option<(Matrix, Vec<f64>)> {
+            let ys = self.ys.lock().unwrap().clone();
+            let xs = self.xs.lock().unwrap().clone();
+            Some((Matrix::from_vec(ys.len(), self.dim, xs), ys))
         }
     }
 
@@ -699,6 +878,92 @@ mod tests {
         assert!(c.request("observe nope 1,2,3").unwrap().starts_with("err"));
         // Wrong dimensionality (model expects 2 features + target).
         assert!(c.request("observe 1,2,3,4").unwrap().starts_with("err"));
+    }
+
+    #[test]
+    fn suggest_proposes_points_inside_bounds() {
+        let server = Server::start_with_model(
+            Arc::new(Running::new(2)),
+            ServerConfig { addr: "127.0.0.1:0".into(), batcher: BatcherConfig::default() },
+        )
+        .unwrap();
+        let mut c = Client::connect(&server.local_addr.to_string()).unwrap();
+        // Build a history first; suggest derives bounds from it.
+        c.observe(&[0.0, 0.0], 10.0).unwrap();
+        c.observe(&[2.0, 2.0], 5.0).unwrap();
+        c.observe(&[1.0, 1.0], 20.0).unwrap();
+        let points = c.suggest(None, 3, None).unwrap();
+        assert_eq!(points.len(), 3);
+        // Snapshot bounds: [0, 2] per dim expanded 5% per side.
+        for p in &points {
+            assert_eq!(p.len(), 2);
+            assert!(
+                p.iter().all(|&v| (-0.1..=2.1).contains(&v)),
+                "proposal escaped snapshot bounds: {p:?}"
+            );
+        }
+        // Explicit bounds override the snapshot box.
+        let tight =
+            crate::optimize::Bounds::new(vec![0.5, 0.5], vec![0.6, 0.6]).unwrap();
+        let points = c.suggest(None, 2, Some(&tight)).unwrap();
+        for p in &points {
+            assert!(tight.contains(p), "proposal escaped explicit bounds: {p:?}");
+        }
+        assert_eq!(server.metrics.suggests.load(std::sync::atomic::Ordering::Relaxed), 5);
+        let stats = c.stats().unwrap();
+        assert!(stats.contains("suggests=5"), "{stats}");
+    }
+
+    #[test]
+    fn suggest_protocol_errors() {
+        // Fit-once slots have no snapshot → suggest is rejected.
+        let server = start_server();
+        let mut c = Client::connect(&server.local_addr.to_string()).unwrap();
+        let reply = c.request("suggest 2").unwrap();
+        assert!(reply.starts_with("err"), "{reply}");
+        assert!(reply.contains("not online-capable"), "{reply}");
+
+        let server = Server::start_with_model(
+            Arc::new(Running::new(2)),
+            ServerConfig { addr: "127.0.0.1:0".into(), batcher: BatcherConfig::default() },
+        )
+        .unwrap();
+        let mut c = Client::connect(&server.local_addr.to_string()).unwrap();
+        // Empty history: no incumbent to improve on yet.
+        assert!(c.request("suggest 1").unwrap().starts_with("err"));
+        c.observe(&[0.0, 0.0], 1.0).unwrap();
+        // Malformed counts / bounds / slots.
+        assert!(c.request("suggest 0").unwrap().starts_with("err"));
+        assert!(c.request("suggest abc xyz").unwrap().starts_with("err"));
+        assert!(c.request("suggest 1 2,1;0,1").unwrap().starts_with("err"), "inverted");
+        assert!(c.request("suggest nope 1").unwrap().starts_with("err"));
+        // Bounds with the wrong dimensionality.
+        assert!(c.request("suggest 1 0,1").unwrap().starts_with("err"));
+    }
+
+    #[test]
+    fn tell_rides_the_observe_path() {
+        let server = Server::start_with_model(
+            Arc::new(Running::new(2)),
+            ServerConfig { addr: "127.0.0.1:0".into(), batcher: BatcherConfig::default() },
+        )
+        .unwrap();
+        let mut c = Client::connect(&server.local_addr.to_string()).unwrap();
+        assert_eq!(c.request("tell 1.0,2.0,10").unwrap(), "ok told 1");
+        c.tell(None, &[3.0, 4.0], 30.0).unwrap();
+        // Both tells reached the model through the observe queue.
+        let (mean, _) = c.predict(&[0.0, 0.0]).unwrap();
+        assert_eq!(mean, 20.0);
+        assert_eq!(
+            server.metrics.observes.load(std::sync::atomic::Ordering::Relaxed),
+            2
+        );
+        // Shape and capability errors mirror observe's.
+        assert!(c.request("tell 1.0").unwrap().starts_with("err"));
+        assert!(c.request("tell nope 1,2,3").unwrap().starts_with("err"));
+        let plain = start_server();
+        let mut c = Client::connect(&plain.local_addr.to_string()).unwrap();
+        assert!(c.request("tell 1,2,3").unwrap().starts_with("err"));
     }
 
     #[test]

@@ -41,6 +41,12 @@
 //!    Cholesky update of the routed cluster — and a refit policy engine
 //!    (staleness budgets + drift monitoring) runs full background refits
 //!    that hot-swap through the registry when incremental stops sufficing.
+//! 6. **Optimize** — the Kriging variance drives expensive black-box
+//!    minimization ([`optimize`]): an ask/tell [`optimize::Optimizer`]
+//!    maximizes EI/PI/LCB acquisitions over candidate pools, fantasizes
+//!    batches with the constant liar, and absorbs evaluations through the
+//!    same `observe` arithmetic; protocol v4 adds `suggest`/`tell` so any
+//!    served model doubles as an optimization service.
 //!
 //! Architecture: a three-layer Rust + JAX + Pallas stack. The Rust layer
 //! (this crate) owns coordination — clustering, parallel fit, routing,
@@ -61,3 +67,4 @@ pub mod eval;
 pub mod runtime;
 pub mod coordinator;
 pub mod online;
+pub mod optimize;

@@ -5,6 +5,7 @@
 //!   fit         fit one flavor on a dataset and score a holdout
 //!   serve       start the TCP prediction server on a fitted model
 //!   stream      stream observations into a running server (protocol v3)
+//!   optimize    run a budgeted ask/tell EGO loop on a benchmark function
 //!   info        show PJRT platform + discovered artifacts
 
 use anyhow::{bail, Context, Result};
@@ -18,6 +19,7 @@ use cluster_kriging::eval::HarnessConfig;
 use cluster_kriging::kriging::{HyperOpt, Surrogate};
 use cluster_kriging::metrics;
 use cluster_kriging::online::{OnlineModel, OnlinePolicy, RefitConfig};
+use cluster_kriging::optimize::{Acquisition, Bounds, Optimizer, OptimizerConfig};
 use cluster_kriging::surrogate::{self, FitOptions, Standardized, SurrogateSpec};
 use cluster_kriging::util::cli::Args;
 use std::sync::Arc;
@@ -36,6 +38,7 @@ fn main() {
         Some("fit") => cmd_fit(&args),
         Some("serve") => cmd_serve(&args),
         Some("stream") => cmd_stream(&args),
+        Some("optimize") => cmd_optimize(&args),
         Some("info") => cmd_info(&args),
         _ => {
             print_usage();
@@ -63,6 +66,8 @@ fn print_usage() {
          \u{20}          [--staleness N] [--drift-z Z] [--drift-window W]\n\
          stream     --addr host:port --dataset <name> [--n N] [--batch B]\n\
          \u{20}          [--model SLOT] [--seed S] [--drift D]\n\
+         optimize   --algo SPEC --fn <benchmark> --budget N [--init N] [--q B]\n\
+         \u{20}          [--acq ei|poi|lcb[:v]] [--pool P] [--dim D] [--seed S]\n\
          info       [--artifacts DIR]\n\
          \n\
          SPEC names any algorithm: mtck:8 owck:4 sod:512 fitc:64 bcm:8\n\
@@ -293,7 +298,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!(
         "serving on {} — protocol: `predict [model] x1,...,x{dim}` | \
          `predictb [model] <n> <p1;p2;...>` | `observe [model] x1,...,x{dim},y` | \
-         `observeb [model] <n> <o1;o2;...>` | `models` | `load <path> [name]` | \
+         `observeb [model] <n> <o1;o2;...>` | `suggest [model] <q> [bounds]` | \
+         `tell [model] x1,...,x{dim},y` | `models` | `load <path> [name]` | \
          `swap <name>` | `stats` | `ping`",
         server.local_addr
     );
@@ -359,6 +365,88 @@ fn cmd_stream(args: &Args) -> Result<()> {
         sent as f64 / secs
     );
     println!("final server stats: {}", client.stats()?);
+    Ok(())
+}
+
+/// Run a budgeted ask/tell EGO loop (minimization) against one of the
+/// named benchmark functions — the `optimize/` subsystem driven end to
+/// end from the command line, with a seeded random-search baseline at the
+/// same evaluation budget for reference.
+fn cmd_optimize(args: &Args) -> Result<()> {
+    let fn_name: String = args.require("fn")?;
+    let budget: usize = args.require("budget")?;
+    let q: usize = args.get_parsed_or("q", 1)?.max(1);
+    let seed: u64 = args.get_parsed_or("seed", 17)?;
+    let spec = resolve_spec(args, "mtck:4")?;
+    let acq = Acquisition::parse(args.get_or("acq", "ei"))?;
+
+    let bench = functions::by_name(&fn_name)
+        .with_context(|| format!("unknown benchmark function {fn_name:?}"))?;
+    let d = bench.fixed_dim.unwrap_or(args.get_parsed_or("dim", 2)?).max(1);
+    let (lo, hi) = bench.domain;
+    let bounds = Bounds::cube(d, lo, hi)?;
+    let init: usize = match args.get("init") {
+        Some(_) => args.get_parsed_or("init", 0)?,
+        // Default: a quarter of the budget, floored at ~2 points per
+        // dimension and capped so most of the budget is model-guided.
+        // The floor wins over the cap in high dimension (d ≥ 10, where
+        // 2d+2 > 20) — clamp(lo, hi) requires lo ≤ hi.
+        None => {
+            let floor = 2 * d + 2;
+            (budget / 4).clamp(floor, floor.max(20))
+        }
+    };
+    anyhow::ensure!(budget > init, "--budget {budget} must exceed the initial design {init}");
+
+    let cfg = OptimizerConfig {
+        acquisition: acq,
+        pool: args.get_parsed_or("pool", 512)?,
+        init,
+        seed,
+        ..OptimizerConfig::new(spec.clone())
+    };
+    eprintln!(
+        "minimizing {fn_name} (d={d}, domain [{lo}, {hi}]) with {spec}: \
+         budget {budget}, init {init}, q={q}, acquisition {acq}"
+    );
+    let mut opt = Optimizer::new(bounds, cfg)?;
+    let t0 = std::time::Instant::now();
+    let mut evals = 0;
+    while evals < budget {
+        let ask_q = q.min(budget - evals);
+        let xs = opt.ask(ask_q)?;
+        for i in 0..xs.rows() {
+            let x = xs.row(i).to_vec();
+            let y = (bench.eval)(&x);
+            opt.tell(&x, y)?;
+            evals += 1;
+        }
+        if evals % 10 < ask_q || evals == budget {
+            let (_, best) = opt.best().expect("told at least one evaluation");
+            eprintln!("  eval {evals:>4}/{budget}: best {best:.6}");
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let (best_x, best_y) = opt.best().expect("budget > 0");
+    let stats = opt.stats();
+
+    // Random-search baseline at the same budget, same seed stream.
+    let mut rng = cluster_kriging::util::rng::Rng::new(seed);
+    let mut rand_best = f64::INFINITY;
+    for _ in 0..budget {
+        let p: Vec<f64> = (0..d).map(|_| rng.uniform_in(lo, hi)).collect();
+        rand_best = rand_best.min((bench.eval)(&p));
+    }
+
+    println!("function      : {fn_name} (d={d})");
+    println!("algo          : {spec} | acquisition {acq}");
+    println!("evaluations   : {budget} ({init} initial design, q={q})");
+    println!("best found    : {best_y:.6} at {best_x:?}");
+    println!("random search : {rand_best:.6} (same budget)");
+    println!(
+        "driver        : {} fits, {} incremental tells, {:.2}s wall",
+        stats.fits, stats.incremental, secs
+    );
     Ok(())
 }
 

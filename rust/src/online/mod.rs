@@ -96,4 +96,13 @@ pub trait OnlineObserver: Send + Sync {
 
     /// Current counters.
     fn online_stats(&self) -> OnlineStats;
+
+    /// The wrapped model's current effective training set in raw units
+    /// (see [`OnlineSurrogate::training_snapshot`]) — the coordinator's
+    /// `suggest` op reads the incumbent and default search bounds off it.
+    /// Adapters over a real model implement this; the default `None`
+    /// marks endpoints with no recoverable history (test doubles).
+    fn training_snapshot(&self) -> Option<(Matrix, Vec<f64>)> {
+        None
+    }
 }

@@ -318,6 +318,11 @@ impl OnlineObserver for OnlineModel {
     fn online_stats(&self) -> OnlineStats {
         self.stats()
     }
+
+    fn training_snapshot(&self) -> Option<(Matrix, Vec<f64>)> {
+        let guard = self.inner.read().unwrap();
+        guard.as_online().map(|o| o.training_snapshot())
+    }
 }
 
 #[cfg(test)]

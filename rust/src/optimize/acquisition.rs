@@ -1,0 +1,266 @@
+//! Acquisition functions: turn a surrogate posterior into a "how useful
+//! is evaluating here" score (minimization convention throughout).
+//!
+//! The three classics of the EGO lineage (Jones et al. 1998):
+//!
+//! * **Expected Improvement** — `EI = γ·Φ(γ/σ) + σ·φ(γ/σ)` with
+//!   `γ = best − μ − ξ`; the workhorse default, balancing the posterior
+//!   mean against the Kriging variance the paper's introduction motivates
+//!   as the exploration signal.
+//! * **Probability of Improvement** — `PI = Φ(γ/σ)`; greedier, ignores
+//!   the improvement's magnitude.
+//! * **Lower Confidence Bound** — `−(μ − κσ)`; a tunable
+//!   exploration/exploitation dial with no incumbent dependence.
+//!
+//! All scores are *maximized* by the proposal loop (LCB is negated so one
+//! argmax serves all three), and all use the shared erf-based normal CDF
+//! from [`crate::util::stats`] (Abramowitz–Stegun 7.1.26, ~1.5e-7 max
+//! error, odd by construction) instead of each caller hand-rolling its
+//! own tail approximation.
+
+use crate::kriging::Surrogate;
+use crate::util::matrix::Matrix;
+use crate::util::stats::{norm_cdf, norm_pdf};
+use anyhow::{Context, Result};
+
+/// A posterior standard deviation below this is treated as zero (the
+/// model is certain): the acquisition degenerates to its deterministic
+/// limit instead of dividing by a vanishing σ.
+const SD_FLOOR: f64 = 1e-12;
+
+/// An acquisition function under the **minimization** convention: larger
+/// score ⇒ more attractive candidate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Acquisition {
+    /// Expected Improvement over the incumbent, with exploration margin
+    /// `xi` (ξ ≥ 0 shifts the improvement threshold below the incumbent).
+    ExpectedImprovement { xi: f64 },
+    /// Probability of improving on the incumbent by at least `xi`.
+    ProbabilityOfImprovement { xi: f64 },
+    /// Negated lower confidence bound `−(μ − κσ)`; `kappa` ≥ 0 scales the
+    /// exploration bonus.
+    LowerConfidenceBound { kappa: f64 },
+}
+
+impl Acquisition {
+    /// Expected Improvement with the conventional ξ = 0.
+    pub fn ei() -> Self {
+        Acquisition::ExpectedImprovement { xi: 0.0 }
+    }
+
+    /// Probability of Improvement with a small ξ (pure PI with ξ = 0
+    /// collapses onto the incumbent; 0.01 is the usual nudge).
+    pub fn poi() -> Self {
+        Acquisition::ProbabilityOfImprovement { xi: 0.01 }
+    }
+
+    /// Lower Confidence Bound with the conventional κ = 2.
+    pub fn lcb() -> Self {
+        Acquisition::LowerConfidenceBound { kappa: 2.0 }
+    }
+
+    /// Short name for reports and the CLI.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Acquisition::ExpectedImprovement { .. } => "ei",
+            Acquisition::ProbabilityOfImprovement { .. } => "poi",
+            Acquisition::LowerConfidenceBound { .. } => "lcb",
+        }
+    }
+
+    /// Parse the CLI form: `ei`, `ei:0.05`, `poi`, `poi:0.1`, `lcb`,
+    /// `lcb:2.5` (the optional number is ξ for EI/PI, κ for LCB).
+    pub fn parse(s: &str) -> Result<Self> {
+        let (head, param) = match s.split_once(':') {
+            Some((h, p)) => {
+                let v: f64 = p
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("bad parameter {p:?} in acquisition {s:?}"))?;
+                anyhow::ensure!(
+                    v.is_finite() && v >= 0.0,
+                    "acquisition parameter must be finite and ≥ 0, got {v}"
+                );
+                (h.trim(), Some(v))
+            }
+            None => (s.trim(), None),
+        };
+        Ok(match head.to_ascii_lowercase().as_str() {
+            "ei" => Acquisition::ExpectedImprovement { xi: param.unwrap_or(0.0) },
+            "poi" | "pi" => Acquisition::ProbabilityOfImprovement { xi: param.unwrap_or(0.01) },
+            "lcb" | "ucb" => Acquisition::LowerConfidenceBound { kappa: param.unwrap_or(2.0) },
+            other => anyhow::bail!("unknown acquisition {other:?} (expected ei/poi/lcb)"),
+        })
+    }
+
+    /// Score one posterior `(mean, variance)` against the incumbent
+    /// `best` (the smallest observed value). Deterministic (σ → 0)
+    /// posteriors degenerate gracefully: EI → max(improvement, 0),
+    /// PI → {0, 1}, LCB → −μ.
+    pub fn score(self, mean: f64, variance: f64, best: f64) -> f64 {
+        let sd = variance.max(0.0).sqrt();
+        match self {
+            Acquisition::ExpectedImprovement { xi } => {
+                let gamma = best - mean - xi;
+                if sd < SD_FLOOR {
+                    return gamma.max(0.0);
+                }
+                let z = gamma / sd;
+                gamma * norm_cdf(z) + sd * norm_pdf(z)
+            }
+            Acquisition::ProbabilityOfImprovement { xi } => {
+                let gamma = best - mean - xi;
+                if sd < SD_FLOOR {
+                    return if gamma > 0.0 { 1.0 } else { 0.0 };
+                }
+                norm_cdf(gamma / sd)
+            }
+            Acquisition::LowerConfidenceBound { kappa } => -(mean - kappa * sd),
+        }
+    }
+
+    /// Score every row of `cands` through one batched
+    /// [`Surrogate::predict_into`] call — the hot path the 10k-candidate
+    /// pools ride. `mean`/`var`/`out` are caller-owned scratch buffers,
+    /// resized here and reusable across calls (allocation-free steady
+    /// state, same discipline as the serving Batcher).
+    pub fn score_batch_into(
+        &self,
+        model: &dyn Surrogate,
+        cands: &Matrix,
+        best: f64,
+        mean: &mut Vec<f64>,
+        var: &mut Vec<f64>,
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        let n = cands.rows();
+        mean.resize(n, 0.0);
+        var.resize(n, 0.0);
+        out.resize(n, 0.0);
+        model
+            .predict_into(cands, &mut mean[..n], &mut var[..n])
+            .context("acquisition: posterior evaluation failed")?;
+        for i in 0..n {
+            out[i] = self.score(mean[i], var[i], best);
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for Acquisition {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Acquisition::ExpectedImprovement { xi } => write!(f, "ei:{xi}"),
+            Acquisition::ProbabilityOfImprovement { xi } => write!(f, "poi:{xi}"),
+            Acquisition::LowerConfidenceBound { kappa } => write!(f, "lcb:{kappa}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kriging::Prediction;
+
+    #[test]
+    fn ei_closed_form_and_limits() {
+        let ei = Acquisition::ei();
+        // γ = 1, σ = 1: EI = Φ(1) + φ(1) ≈ 0.8413 + 0.2420 = 1.0833.
+        let v = ei.score(0.0, 1.0, 1.0);
+        assert!((v - 1.083_31).abs() < 1e-4, "{v}");
+        // Far above the incumbent with tiny σ → essentially zero.
+        assert!(ei.score(10.0, 0.01, 0.0) < 1e-12);
+        // Deterministic posterior degenerates to max(improvement, 0).
+        assert_eq!(ei.score(2.0, 0.0, 5.0), 3.0);
+        assert_eq!(ei.score(7.0, 0.0, 5.0), 0.0);
+        // EI is non-negative everywhere.
+        for (m, s2, b) in [(3.0, 0.5, 1.0), (-2.0, 2.0, -3.0), (0.0, 1e-8, -1.0)] {
+            assert!(ei.score(m, s2, b) >= 0.0, "EI({m},{s2},{b})");
+        }
+    }
+
+    #[test]
+    fn ei_prefers_uncertainty_at_equal_mean() {
+        let ei = Acquisition::ei();
+        let low = ei.score(1.0, 0.1, 0.5);
+        let high = ei.score(1.0, 2.0, 0.5);
+        assert!(high > low, "{high} vs {low}");
+    }
+
+    #[test]
+    fn poi_is_a_probability() {
+        let poi = Acquisition::ProbabilityOfImprovement { xi: 0.0 };
+        for (m, s2, b) in [(0.0, 1.0, 1.0), (5.0, 0.2, 1.0), (-3.0, 4.0, 0.0)] {
+            let v = poi.score(m, s2, b);
+            assert!((0.0..=1.0).contains(&v), "PI({m},{s2},{b}) = {v}");
+        }
+        // Mean exactly at the incumbent: 50/50.
+        assert!((poi.score(1.0, 1.0, 1.0) - 0.5).abs() < 1e-9);
+        // Deterministic limits.
+        assert_eq!(poi.score(0.0, 0.0, 1.0), 1.0);
+        assert_eq!(poi.score(2.0, 0.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn lcb_trades_mean_against_uncertainty() {
+        let lcb = Acquisition::LowerConfidenceBound { kappa: 2.0 };
+        // Lower mean wins at equal σ; higher σ wins at equal mean.
+        assert!(lcb.score(1.0, 1.0, 0.0) > lcb.score(2.0, 1.0, 0.0));
+        assert!(lcb.score(1.0, 4.0, 0.0) > lcb.score(1.0, 1.0, 0.0));
+        // κ = 0 is pure exploitation: score is −μ, σ ignored.
+        let greedy = Acquisition::LowerConfidenceBound { kappa: 0.0 };
+        assert_eq!(greedy.score(3.0, 100.0, 0.0), -3.0);
+    }
+
+    #[test]
+    fn parse_display_roundtrip() {
+        for acq in [
+            Acquisition::ExpectedImprovement { xi: 0.0 },
+            Acquisition::ExpectedImprovement { xi: 0.05 },
+            Acquisition::ProbabilityOfImprovement { xi: 0.01 },
+            Acquisition::LowerConfidenceBound { kappa: 2.5 },
+        ] {
+            let text = acq.to_string();
+            assert_eq!(Acquisition::parse(&text).unwrap(), acq, "via {text:?}");
+        }
+        assert_eq!(Acquisition::parse("EI").unwrap(), Acquisition::ei());
+        assert_eq!(Acquisition::parse("lcb").unwrap(), Acquisition::lcb());
+        assert!(Acquisition::parse("bogus").is_err());
+        assert!(Acquisition::parse("ei:abc").is_err());
+        assert!(Acquisition::parse("ei:-1").is_err());
+    }
+
+    /// Fixed-posterior double for the batch path.
+    struct Flat {
+        mean: f64,
+        var: f64,
+    }
+    impl Surrogate for Flat {
+        fn predict(&self, xt: &Matrix) -> Result<Prediction> {
+            Ok(Prediction {
+                mean: (0..xt.rows()).map(|i| self.mean + xt[(i, 0)]).collect(),
+                variance: vec![self.var; xt.rows()],
+            })
+        }
+        fn name(&self) -> &str {
+            "flat"
+        }
+        fn dim(&self) -> usize {
+            1
+        }
+    }
+
+    #[test]
+    fn batch_scores_match_scalar_scores() {
+        let model = Flat { mean: 0.5, var: 0.7 };
+        let cands = Matrix::from_vec(4, 1, vec![-1.0, 0.0, 0.5, 2.0]);
+        let (mut m, mut v, mut s) = (Vec::new(), Vec::new(), Vec::new());
+        for acq in [Acquisition::ei(), Acquisition::poi(), Acquisition::lcb()] {
+            acq.score_batch_into(&model, &cands, 0.3, &mut m, &mut v, &mut s).unwrap();
+            for i in 0..4 {
+                let expect = acq.score(0.5 + cands[(i, 0)], 0.7, 0.3);
+                assert_eq!(s[i], expect, "{acq} row {i}");
+            }
+        }
+    }
+}

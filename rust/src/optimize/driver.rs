@@ -1,0 +1,598 @@
+//! The ask/tell optimization driver: sequential model-based (EGO-style)
+//! minimization over any [`SurrogateSpec`]-fittable surrogate.
+//!
+//! [`Optimizer`] owns the raw-unit evaluation history and the surrogate's
+//! lifecycle; the caller owns the expensive black box:
+//!
+//! ```text
+//! let xs = opt.ask(q)?;            // q proposals (constant-liar batch)
+//! for each row x: y = f(x);
+//! opt.tell(&x, y)?;                // absorb — O(n_c²) when online
+//! ```
+//!
+//! `tell` composes with the online subsystem end to end: when the fitted
+//! model is online-capable (Ordinary Kriging, every Cluster Kriging
+//! flavor, SoD — through the [`Standardized`] wrapper), each told point
+//! is an incremental [`OnlineSurrogate::observe`] under fixed
+//! hyper-parameters instead of a refit; fit-once models (FITC, BCM) fall
+//! back to a lazy refit before the next proposal. *When* the fixed-θ
+//! incremental path stops being enough is judged by the same
+//! [`OnlinePolicy`] engine serving uses: the staleness budget and the
+//! rolling drift monitor (standardized pre-update residuals) schedule a
+//! full refit with a fresh hyper-parameter search.
+//!
+//! Batch proposals (`ask(q)` with q > 1) use **constant-liar
+//! fantasization** (Ginsbourger et al. 2010): after each pick the model
+//! absorbs the *lie* `y = best-so-far` at the picked point, so the next
+//! pick's acquisition sees deflated variance there and spreads the batch;
+//! the fantasies mark the model dirty, and the first subsequent `tell` or
+//! `ask` replaces it with a truth-only fit.
+//!
+//! [`OnlineSurrogate::observe`]: crate::online::OnlineSurrogate::observe
+//! [`Standardized`]: crate::surrogate::Standardized
+
+use crate::data::{Dataset, Standardizer};
+use crate::kriging::Surrogate;
+use crate::online::policy::{DriftMonitor, OnlinePolicy};
+use crate::optimize::acquisition::Acquisition;
+use crate::optimize::candidates::{candidate_pool, latin_hypercube_in, Bounds};
+use crate::surrogate::{FitOptions, Standardized, SurrogateSpec};
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+use crate::util::stats::argmax;
+use anyhow::{Context, Result};
+
+/// Everything an [`Optimizer`] needs besides the search box.
+#[derive(Debug, Clone)]
+pub struct OptimizerConfig {
+    /// Which surrogate to fit over the evaluation history.
+    pub spec: SurrogateSpec,
+    /// Budget for every (re)fit's hyper-parameter search.
+    pub fit: FitOptions,
+    /// Acquisition function maximized by each proposal.
+    pub acquisition: Acquisition,
+    /// Candidate pool size per proposal (one batched posterior call).
+    pub pool: usize,
+    /// How many pool rows are Gaussian perturbations of the incumbent.
+    pub local: usize,
+    /// Perturbation σ as a fraction of each dimension's range.
+    pub local_sigma: f64,
+    /// Space-filling design size before model-based proposals start.
+    pub init: usize,
+    /// When to replace the incremental fixed-θ path with a full refit
+    /// (fresh hyper-parameter search) — the serving stack's policy
+    /// engine, reused verbatim.
+    pub policy: OnlinePolicy,
+    /// Seed for the proposal RNG (candidate pools, initial design).
+    pub seed: u64,
+}
+
+impl OptimizerConfig {
+    /// Defaults tuned for expensive objectives: 512-candidate pools with
+    /// a 32-point incumbent cloud, EI, a 2-point-per-dimension-ish
+    /// initial design floor of 8, and a 16-observation staleness budget —
+    /// a θ re-search every 16 evaluations is noise next to a black-box
+    /// evaluation, and fresh length-scales matter as the search narrows.
+    pub fn new(spec: SurrogateSpec) -> Self {
+        Self {
+            spec,
+            fit: FitOptions::fast(),
+            acquisition: Acquisition::ei(),
+            pool: 512,
+            local: 32,
+            local_sigma: 0.05,
+            init: 8,
+            policy: OnlinePolicy { staleness_budget: 16, ..OnlinePolicy::default() },
+            seed: 0x0B97,
+        }
+    }
+}
+
+/// Driver counters (diagnostics / tests).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OptimizerStats {
+    /// Proposals handed out by [`Optimizer::ask`].
+    pub proposed: u64,
+    /// Evaluations absorbed by [`Optimizer::tell`].
+    pub told: u64,
+    /// Tells absorbed through the incremental `observe` path.
+    pub incremental: u64,
+    /// Full surrogate (re)fits, the initial fit included.
+    pub fits: u64,
+}
+
+/// Ask/tell sequential model-based optimizer (minimization).
+pub struct Optimizer {
+    bounds: Bounds,
+    cfg: OptimizerConfig,
+    rng: Rng,
+    /// Row-major raw-unit evaluation history.
+    x: Vec<f64>,
+    y: Vec<f64>,
+    /// The current surrogate ([`Standardized`] over the spec's model, so
+    /// it speaks raw units); `None` until first fitted or when marked
+    /// stale for a lazy refit.
+    model: Option<Box<dyn Surrogate>>,
+    /// Queue of not-yet-proposed initial-design rows (row-major). The
+    /// whole remaining design phase is generated as *one* stratified LHS
+    /// block and handed out row by row, so sequential `ask(1)` calls
+    /// still walk a space-filling design rather than i.i.d. uniforms.
+    design: Vec<f64>,
+    /// Constant-liar lies currently absorbed into `model` (> 0 ⇒ the
+    /// model is fantasy-laden and must be refitted before reuse).
+    fantasies: usize,
+    /// Raw-unit lies of the in-flight batch. Online surrogates carry them
+    /// inside the model; the refit fallback re-derives each fantasy fit
+    /// from history ∪ these, so earlier lies of the same batch survive.
+    fantasy_x: Vec<f64>,
+    fantasy_y: Vec<f64>,
+    since_refit: usize,
+    drift: DriftMonitor,
+    stats: OptimizerStats,
+    // Scratch for the batched acquisition evaluation.
+    mean_buf: Vec<f64>,
+    var_buf: Vec<f64>,
+    score_buf: Vec<f64>,
+}
+
+impl Optimizer {
+    pub fn new(bounds: Bounds, cfg: OptimizerConfig) -> Result<Self> {
+        anyhow::ensure!(cfg.pool >= 1, "candidate pool must be ≥ 1");
+        anyhow::ensure!(cfg.init >= 2, "initial design needs ≥ 2 points");
+        anyhow::ensure!(
+            cfg.local_sigma.is_finite() && cfg.local_sigma > 0.0,
+            "local_sigma must be positive"
+        );
+        let drift = DriftMonitor::new(cfg.policy.drift_window);
+        let rng = Rng::new(cfg.seed);
+        Ok(Self {
+            bounds,
+            cfg,
+            rng,
+            x: Vec::new(),
+            y: Vec::new(),
+            model: None,
+            design: Vec::new(),
+            fantasies: 0,
+            fantasy_x: Vec::new(),
+            fantasy_y: Vec::new(),
+            since_refit: 0,
+            drift,
+            stats: OptimizerStats::default(),
+            mean_buf: Vec::new(),
+            var_buf: Vec::new(),
+            score_buf: Vec::new(),
+        })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.bounds.dim()
+    }
+
+    pub fn bounds(&self) -> &Bounds {
+        &self.bounds
+    }
+
+    /// Evaluations told so far.
+    pub fn n_observed(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn stats(&self) -> OptimizerStats {
+        self.stats
+    }
+
+    /// The incumbent: best (lowest) observed evaluation, if any.
+    pub fn best(&self) -> Option<(&[f64], f64)> {
+        if self.y.is_empty() {
+            return None;
+        }
+        let i = crate::util::stats::argmin(&self.y);
+        let d = self.dim();
+        Some((&self.x[i * d..(i + 1) * d], self.y[i]))
+    }
+
+    /// Absorb one evaluated point. Online-capable surrogates take it as
+    /// an O(n_c²) incremental observe; otherwise (or after a policy
+    /// trigger / a fantasy-laden batch) the model is dropped and lazily
+    /// refitted at the next [`Self::ask`].
+    pub fn tell(&mut self, x: &[f64], y: f64) -> Result<()> {
+        anyhow::ensure!(
+            x.len() == self.dim(),
+            "tell: point has {} dims, optimizer expects {}",
+            x.len(),
+            self.dim()
+        );
+        anyhow::ensure!(
+            y.is_finite() && x.iter().all(|v| v.is_finite()),
+            "tell: non-finite evaluation"
+        );
+        if self.fantasies > 0 {
+            // The model carries constant-liar lies from a batch ask; the
+            // truth arriving now supersedes them.
+            self.model = None;
+            self.fantasies = 0;
+            self.fantasy_x.clear();
+            self.fantasy_y.clear();
+        }
+        let mut drop_model = false;
+        if let Some(model) = &mut self.model {
+            // Drift signal: standardized residual of the pre-update
+            // posterior at the incoming point (same definition as the
+            // serving adapter's monitor).
+            let xt = Matrix::from_vec(1, x.len(), x.to_vec());
+            let (mut m, mut v) = ([0.0], [0.0]);
+            model.predict_into(&xt, &mut m, &mut v)?;
+            self.drift.push((y - m[0]) / (v[0].max(0.0) + 1e-12).sqrt());
+            match model.as_online_mut() {
+                Some(online) => {
+                    online.observe(x, y).context("incremental tell failed")?;
+                    self.stats.incremental += 1;
+                }
+                // Fit-once surrogate: lazy refit before the next ask.
+                None => drop_model = true,
+            }
+        }
+        if drop_model {
+            self.model = None;
+        }
+        self.x.extend_from_slice(x);
+        self.y.push(y);
+        self.stats.told += 1;
+        self.since_refit += 1;
+        if self.model.is_some() {
+            if let Some(reason) = self.cfg.policy.should_refit(self.since_refit, &self.drift) {
+                log::debug!("optimizer refit scheduled ({reason:?})");
+                self.model = None;
+            }
+        }
+        Ok(())
+    }
+
+    /// Propose `q ≥ 1` points to evaluate next. During the initial design
+    /// phase (fewer than `cfg.init` tells) proposals are space-filling
+    /// LHS rows; afterwards each is the acquisition argmax over a fresh
+    /// candidate pool, with constant-liar fantasization between the picks
+    /// of one batch. Every proposal lies inside the bounds.
+    pub fn ask(&mut self, q: usize) -> Result<Matrix> {
+        anyhow::ensure!(q >= 1, "ask: q must be ≥ 1");
+        let d = self.dim();
+        if self.y.len() < self.cfg.init {
+            let mut out = Vec::with_capacity(q * d);
+            let mut taken = 0;
+            while taken < q {
+                if self.design.len() < d {
+                    // One stratified block covers the whole remaining
+                    // design phase (at least the rest of this ask).
+                    let block_n = (self.cfg.init - self.y.len()).max(q - taken);
+                    self.design =
+                        latin_hypercube_in(&self.bounds, block_n, &mut self.rng).into_vec();
+                }
+                out.extend(self.design.drain(..d));
+                taken += 1;
+            }
+            self.stats.proposed += q as u64;
+            return Ok(Matrix::from_vec(q, d, out));
+        }
+        if self.model.is_none() || self.fantasies > 0 {
+            self.refit()?;
+        }
+        let best = self.y.iter().copied().fold(f64::INFINITY, f64::min);
+        let inc = {
+            let i = crate::util::stats::argmin(&self.y);
+            self.x[i * d..(i + 1) * d].to_vec()
+        };
+        let mut out = Vec::with_capacity(q * d);
+        for j in 0..q {
+            let pool = candidate_pool(
+                &self.bounds,
+                Some(&inc),
+                self.cfg.pool,
+                self.cfg.local,
+                self.cfg.local_sigma,
+                &mut self.rng,
+            );
+            let model = self.model.as_ref().expect("fitted above");
+            self.cfg.acquisition.score_batch_into(
+                model.as_ref(),
+                &pool,
+                best,
+                &mut self.mean_buf,
+                &mut self.var_buf,
+                &mut self.score_buf,
+            )?;
+            let pick = argmax(&self.score_buf);
+            let chosen = pool.row(pick).to_vec();
+            if j + 1 < q {
+                self.fantasize(&chosen, best)?;
+            }
+            out.extend_from_slice(&chosen);
+        }
+        self.stats.proposed += q as u64;
+        Ok(Matrix::from_vec(q, d, out))
+    }
+
+    /// Absorb the constant lie `y = best` at a just-picked point so the
+    /// next pick of this batch avoids it. Online models take the lie
+    /// incrementally; fit-once models refit on history ∪ lies (the
+    /// documented fallback — one O(n³/k²) fit per extra batch point).
+    fn fantasize(&mut self, x: &[f64], lie: f64) -> Result<()> {
+        // Record the lie and mark the model dirty *first*, so even a
+        // failed absorption leaves the state flagged for a truth refit.
+        self.fantasy_x.extend_from_slice(x);
+        self.fantasy_y.push(lie);
+        self.fantasies += 1;
+        let took_lie = match self.model.as_mut().and_then(|m| m.as_online_mut()) {
+            Some(online) => {
+                online.observe(x, lie).context("constant-liar fantasy failed")?;
+                true
+            }
+            None => false,
+        };
+        if !took_lie {
+            let mut fx = self.x.clone();
+            fx.extend_from_slice(&self.fantasy_x);
+            let mut fy = self.y.clone();
+            fy.extend_from_slice(&self.fantasy_y);
+            self.fit_on(fx, fy)?;
+        }
+        Ok(())
+    }
+
+    /// Full truth-only refit (fresh hyper-parameter search).
+    fn refit(&mut self) -> Result<()> {
+        let (x, y) = (self.x.clone(), self.y.clone());
+        self.fit_on(x, y)?;
+        self.fantasies = 0;
+        self.fantasy_x.clear();
+        self.fantasy_y.clear();
+        self.since_refit = 0;
+        self.drift.reset();
+        Ok(())
+    }
+
+    /// Fit the spec on the given raw-unit data behind a fresh
+    /// standardizer (the same recipe as `ckrig fit` and the serving
+    /// refit engine), and install the wrapped model.
+    fn fit_on(&mut self, x: Vec<f64>, y: Vec<f64>) -> Result<()> {
+        let d = self.dim();
+        let ds = Dataset::new("optimize", Matrix::from_vec(y.len(), d, x), y);
+        let std = Standardizer::fit(&ds);
+        let tr = std.transform(&ds);
+        let inner = self
+            .cfg
+            .spec
+            .fit(&tr, &self.cfg.fit)
+            .with_context(|| format!("fitting {} on {} points", self.cfg.spec, ds.n()))?;
+        self.model = Some(Box::new(Standardized::new(inner, std)));
+        self.stats.fits += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::functions::by_name;
+
+    fn himmelblau_cfg(spec: &str, seed: u64) -> OptimizerConfig {
+        OptimizerConfig {
+            init: 12,
+            pool: 256,
+            seed,
+            ..OptimizerConfig::new(SurrogateSpec::parse(spec).unwrap())
+        }
+    }
+
+    /// Drive a full seeded EGO loop on a benchmark; returns best value.
+    fn run_ego(spec: &str, budget: usize, seed: u64) -> (Optimizer, f64) {
+        let bench = by_name("himmelblau").unwrap();
+        let (lo, hi) = bench.domain;
+        let bounds = Bounds::cube(2, lo, hi).unwrap();
+        let mut opt = Optimizer::new(bounds, himmelblau_cfg(spec, seed)).unwrap();
+        for _ in 0..budget {
+            let xs = opt.ask(1).unwrap();
+            let x = xs.row(0).to_vec();
+            opt.tell(&x, (bench.eval)(&x)).unwrap();
+        }
+        let best = opt.best().unwrap().1;
+        (opt, best)
+    }
+
+    #[test]
+    fn design_phase_then_model_phase() {
+        let bounds = Bounds::cube(2, -1.0, 1.0).unwrap();
+        let mut opt = Optimizer::new(
+            bounds,
+            OptimizerConfig {
+                init: 4,
+                pool: 64,
+                ..OptimizerConfig::new(SurrogateSpec::FullKriging)
+            },
+        )
+        .unwrap();
+        assert!(opt.best().is_none());
+        // First asks are pure design — no model gets fitted.
+        for i in 0..4 {
+            let xs = opt.ask(1).unwrap();
+            assert!(opt.bounds().contains(xs.row(0)));
+            opt.tell(xs.row(0), i as f64).unwrap();
+        }
+        assert_eq!(opt.stats().fits, 0);
+        // The next ask crosses into model-based proposals.
+        let xs = opt.ask(1).unwrap();
+        assert!(opt.bounds().contains(xs.row(0)));
+        assert_eq!(opt.stats().fits, 1);
+        assert_eq!(opt.n_observed(), 4);
+        assert_eq!(opt.stats().proposed, 5);
+    }
+
+    #[test]
+    fn tell_validates_input() {
+        let bounds = Bounds::cube(2, -1.0, 1.0).unwrap();
+        let mut opt =
+            Optimizer::new(bounds, OptimizerConfig::new(SurrogateSpec::FullKriging)).unwrap();
+        assert!(opt.tell(&[0.0], 1.0).is_err(), "wrong dimension");
+        assert!(opt.tell(&[0.0, 0.0], f64::NAN).is_err());
+        assert!(opt.tell(&[f64::INFINITY, 0.0], 1.0).is_err());
+        assert_eq!(opt.n_observed(), 0);
+        assert!(opt.ask(0).is_err(), "q = 0");
+    }
+
+    #[test]
+    fn seeded_ask_tell_is_deterministic() {
+        // Two optimizers with identical seeds and identical tells must
+        // propose bit-identical points at every step — including across
+        // the design→model transition and a q=3 constant-liar batch.
+        let bench = by_name("himmelblau").unwrap();
+        let (lo, hi) = bench.domain;
+        let mk = || {
+            Optimizer::new(
+                Bounds::cube(2, lo, hi).unwrap(),
+                himmelblau_cfg("gmmck:2", 41),
+            )
+            .unwrap()
+        };
+        let (mut a, mut b) = (mk(), mk());
+        for round in 0..6 {
+            let q = if round == 4 { 3 } else { 1 };
+            let xa = a.ask(q).unwrap();
+            let xb = b.ask(q).unwrap();
+            assert_eq!(xa.max_abs_diff(&xb), 0.0, "round {round} diverged");
+            for i in 0..xa.rows() {
+                let x = xa.row(i).to_vec();
+                let y = (bench.eval)(&x);
+                a.tell(&x, y).unwrap();
+                b.tell(&x, y).unwrap();
+            }
+        }
+        assert_eq!(a.stats(), b.stats());
+    }
+
+    #[test]
+    fn proposals_stay_in_bounds_prop() {
+        use crate::util::proptest::{check, gen_size, Config};
+        // Full fits are expensive; a handful of randomized cases covers
+        // the design phase, the model phase and batch fantasization.
+        check(&Config { cases: 6, seed: 0x0497 }, |rng| {
+            let d = gen_size(rng, 1, 3);
+            let lo: Vec<f64> = (0..d).map(|_| rng.uniform_in(-5.0, 0.0)).collect();
+            let hi: Vec<f64> = lo.iter().map(|&l| l + rng.uniform_in(0.5, 10.0)).collect();
+            let bounds = Bounds::new(lo, hi).map_err(|e| e.to_string())?;
+            let mut opt = Optimizer::new(
+                bounds,
+                OptimizerConfig {
+                    init: 6,
+                    pool: 64,
+                    local: 8,
+                    seed: rng.next_u64(),
+                    ..OptimizerConfig::new(SurrogateSpec::FullKriging)
+                },
+            )
+            .map_err(|e| e.to_string())?;
+            for round in 0..5 {
+                let q = 1 + (round % 3);
+                let xs = opt.ask(q).map_err(|e| e.to_string())?;
+                crate::prop_assert!(xs.rows() == q);
+                for i in 0..q {
+                    let row = xs.row(i);
+                    crate::prop_assert!(
+                        opt.bounds().contains(row),
+                        "round {round} proposal {i} escaped: {row:?}"
+                    );
+                    let y: f64 = row.iter().map(|v| v * v).sum();
+                    opt.tell(&row.to_vec(), y).map_err(|e| e.to_string())?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batch_ask_spreads_points_and_recovers() {
+        let bench = by_name("himmelblau").unwrap();
+        let (lo, hi) = bench.domain;
+        let mut opt = Optimizer::new(
+            Bounds::cube(2, lo, hi).unwrap(),
+            himmelblau_cfg("kriging", 7),
+        )
+        .unwrap();
+        for _ in 0..12 {
+            let xs = opt.ask(1).unwrap();
+            let x = xs.row(0).to_vec();
+            opt.tell(&x, (bench.eval)(&x)).unwrap();
+        }
+        let fits_before = opt.stats().fits;
+        let batch = opt.ask(4).unwrap();
+        assert_eq!(batch.rows(), 4);
+        // Constant liar must spread the batch: no two picks (nearly)
+        // coincide.
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                let dist = crate::util::stats::dist(batch.row(i), batch.row(j));
+                assert!(dist > 1e-6, "batch points {i} and {j} coincide");
+            }
+        }
+        // The lies polluted the model; the next tell + ask refits once.
+        let x = batch.row(0).to_vec();
+        opt.tell(&x, (bench.eval)(&x)).unwrap();
+        let _ = opt.ask(1).unwrap();
+        assert!(opt.stats().fits > fits_before, "fantasies were never flushed");
+    }
+
+    #[test]
+    fn incremental_tell_feeds_online_surrogates() {
+        let (opt, _) = run_ego("gmmck:2", 20, 13);
+        let s = opt.stats();
+        // After the design phase the model absorbs tells incrementally
+        // (GMMCK routes each point to one cluster) rather than refitting
+        // per evaluation.
+        assert!(s.incremental > 0, "no incremental observes: {s:?}");
+        assert!(
+            s.fits < s.told,
+            "every tell refitted — the online path never engaged: {s:?}"
+        );
+    }
+
+    #[test]
+    fn staleness_policy_schedules_refits() {
+        let bench = by_name("himmelblau").unwrap();
+        let (lo, hi) = bench.domain;
+        let mut cfg = himmelblau_cfg("kriging", 3);
+        cfg.policy = OnlinePolicy {
+            staleness_budget: 4,
+            drift_zscore: 1e9,
+            ..OnlinePolicy::default()
+        };
+        let mut opt = Optimizer::new(Bounds::cube(2, lo, hi).unwrap(), cfg).unwrap();
+        for _ in 0..24 {
+            let xs = opt.ask(1).unwrap();
+            let x = xs.row(0).to_vec();
+            opt.tell(&x, (bench.eval)(&x)).unwrap();
+        }
+        // 12 post-design evaluations with a budget of 4 → at least three
+        // full θ-refreshing fits beyond the initial one.
+        assert!(opt.stats().fits >= 3, "{:?}", opt.stats());
+    }
+
+    #[test]
+    fn ego_with_cluster_kriging_beats_random_on_himmelblau() {
+        let budget = 60;
+        let (_, ego_best) = run_ego("mtck:4", budget, 17);
+        // Random search with the same evaluation budget and domain.
+        let bench = by_name("himmelblau").unwrap();
+        let (lo, hi) = bench.domain;
+        let mut rng = Rng::new(17);
+        let mut rand_best = f64::INFINITY;
+        for _ in 0..budget {
+            let p = [rng.uniform_in(lo, hi), rng.uniform_in(lo, hi)];
+            rand_best = rand_best.min((bench.eval)(&p));
+        }
+        assert!(
+            ego_best < rand_best,
+            "EGO ({ego_best:.4}) did not beat random search ({rand_best:.4})"
+        );
+        // And it should get genuinely close to one of the four optima.
+        assert!(ego_best < 1.0, "EGO best {ego_best:.4} nowhere near an optimum");
+    }
+}

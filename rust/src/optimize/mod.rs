@@ -1,0 +1,207 @@
+//! Bayesian optimization engine: the **optimize** stage of the model
+//! lifecycle (spec → fit → serve → observe → optimize).
+//!
+//! The paper's introduction motivates Cluster Kriging as a surrogate in
+//! *expensive black-box optimization* — the Kriging variance is the
+//! exploration signal. This module makes that workload first-class over
+//! any `Box<dyn Surrogate>`:
+//!
+//! * [`acquisition`] — Expected Improvement, Probability of Improvement
+//!   and the Lower Confidence Bound, vectorized over candidate batches
+//!   through `predict_into` with the shared erf-based normal CDF
+//!   ([`crate::util::stats::norm_cdf`], A&S 7.1.26, ~1.5e-7);
+//!   minimization convention.
+//! * [`candidates`] — box [`Bounds`], per-dimension Latin-hypercube
+//!   pools, and bounds-clipped Gaussian perturbation clouds around the
+//!   incumbent.
+//! * [`driver`] — the [`Optimizer`] `ask(q)`/`tell` loop: constant-liar
+//!   fantasization for batch proposals, O(n_c²) incremental absorption of
+//!   tells through [`crate::online::OnlineSurrogate::observe`] when the
+//!   surrogate supports it, refit fallback otherwise, and full
+//!   θ-refreshing refits scheduled by the serving stack's
+//!   [`crate::online::OnlinePolicy`] engine.
+//!
+//! The serving coordinator exposes the same capability over the wire as
+//! protocol v4: `suggest [model] q [bounds]` proposes candidates from a
+//! live slot's posterior and `tell` streams evaluations back through the
+//! observe flush queue (see [`crate::coordinator`]), turning any served
+//! model into optimization-as-a-service.
+
+pub mod acquisition;
+pub mod candidates;
+pub mod driver;
+
+pub use acquisition::Acquisition;
+pub use candidates::{candidate_pool, latin_hypercube_in, Bounds};
+pub use driver::{Optimizer, OptimizerConfig, OptimizerStats};
+
+use crate::kriging::Surrogate;
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// One-shot, non-mutating batch proposal from a *shared* fitted model —
+/// the serving coordinator's `suggest` path, where the slot's model is
+/// behind an `Arc` and must not absorb constant-liar lies. Greedy
+/// selection with an exclusion radius stands in for fantasization: after
+/// each pick, candidates within `min_dist` (a fraction of the box
+/// diagonal) are suppressed so the batch still spreads.
+///
+/// `best` is the incumbent value (smallest observed target) and
+/// `incumbent` its location, both typically read off the slot's training
+/// snapshot. Every returned row lies inside `bounds`.
+pub fn propose(
+    model: &dyn Surrogate,
+    bounds: &Bounds,
+    best: f64,
+    incumbent: Option<&[f64]>,
+    q: usize,
+    acquisition: Acquisition,
+    pool: usize,
+    rng: &mut Rng,
+) -> Result<Matrix> {
+    anyhow::ensure!(q >= 1, "propose: q must be ≥ 1");
+    anyhow::ensure!(
+        model.dim() == bounds.dim(),
+        "propose: model expects {} dims but bounds have {}",
+        model.dim(),
+        bounds.dim()
+    );
+    let d = bounds.dim();
+    // One pool, one batched posterior call, shared by all q picks.
+    let pool_n = pool.max(q);
+    let cands = candidate_pool(bounds, incumbent, pool_n, pool_n / 16, 0.05, rng);
+    let mut mean = Vec::new();
+    let mut var = Vec::new();
+    let mut scores = Vec::new();
+    acquisition.score_batch_into(model, &cands, best, &mut mean, &mut var, &mut scores)?;
+    // Exclusion radius: 5% of the box diagonal.
+    let diag: f64 = (0..d)
+        .map(|j| {
+            let r = bounds.hi()[j] - bounds.lo()[j];
+            r * r
+        })
+        .sum::<f64>()
+        .sqrt();
+    let min_dist = 0.05 * diag;
+    let mut out = Vec::with_capacity(q * d);
+    let mut taken = 0;
+    while taken < q {
+        let pick = crate::util::stats::argmax(&scores);
+        if scores[pick] == f64::NEG_INFINITY {
+            // Pool exhausted by exclusion (tiny pools / large q): relax
+            // the radius by re-scoring what's left.
+            acquisition
+                .score_batch_into(model, &cands, best, &mut mean, &mut var, &mut scores)?;
+            for t in 0..taken {
+                let row = &out[t * d..(t + 1) * d];
+                for i in 0..cands.rows() {
+                    if crate::util::stats::dist(cands.row(i), row) < 1e-12 {
+                        scores[i] = f64::NEG_INFINITY;
+                    }
+                }
+            }
+            let pick = crate::util::stats::argmax(&scores);
+            out.extend_from_slice(cands.row(pick));
+            scores[pick] = f64::NEG_INFINITY;
+            taken += 1;
+            continue;
+        }
+        out.extend_from_slice(cands.row(pick));
+        taken += 1;
+        // Suppress the picked candidate and its neighborhood.
+        for i in 0..cands.rows() {
+            if scores[i] != f64::NEG_INFINITY
+                && crate::util::stats::dist(cands.row(i), cands.row(pick)) < min_dist
+            {
+                scores[i] = f64::NEG_INFINITY;
+            }
+        }
+    }
+    Ok(Matrix::from_vec(q, d, out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kriging::Prediction;
+
+    /// Quadratic-bowl posterior double: mean = ‖x‖², constant variance.
+    struct Bowl {
+        d: usize,
+    }
+    impl Surrogate for Bowl {
+        fn predict(&self, xt: &Matrix) -> Result<Prediction> {
+            Ok(Prediction {
+                mean: (0..xt.rows())
+                    .map(|i| xt.row(i).iter().map(|v| v * v).sum())
+                    .collect(),
+                variance: vec![0.5; xt.rows()],
+            })
+        }
+        fn name(&self) -> &str {
+            "bowl"
+        }
+        fn dim(&self) -> usize {
+            self.d
+        }
+    }
+
+    #[test]
+    fn propose_returns_q_distinct_in_bounds_points() {
+        let bounds = Bounds::cube(2, -2.0, 2.0).unwrap();
+        let model = Bowl { d: 2 };
+        let mut rng = Rng::new(5);
+        let got = propose(
+            &model,
+            &bounds,
+            4.0,
+            Some(&[0.1, 0.1]),
+            4,
+            Acquisition::ei(),
+            256,
+            &mut rng,
+        )
+        .unwrap();
+        assert_eq!(got.shape(), (4, 2));
+        for i in 0..4 {
+            assert!(bounds.contains(got.row(i)), "row {i} out of bounds");
+            for j in (i + 1)..4 {
+                assert!(
+                    crate::util::stats::dist(got.row(i), got.row(j)) > 1e-9,
+                    "rows {i} and {j} coincide"
+                );
+            }
+        }
+        // The bowl's minimum is at the origin; the best proposal should
+        // sit well inside the low-mean region.
+        let best_row = (0..4)
+            .min_by(|&a, &b| {
+                let na: f64 = got.row(a).iter().map(|v| v * v).sum();
+                let nb: f64 = got.row(b).iter().map(|v| v * v).sum();
+                na.partial_cmp(&nb).unwrap()
+            })
+            .unwrap();
+        let norm: f64 = got.row(best_row).iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!(norm < 1.0, "no proposal near the bowl minimum (‖x‖ = {norm})");
+    }
+
+    #[test]
+    fn propose_validates_and_exhausts_gracefully() {
+        let bounds = Bounds::cube(2, 0.0, 1.0).unwrap();
+        let model = Bowl { d: 2 };
+        let mut rng = Rng::new(9);
+        assert!(propose(&model, &bounds, 0.0, None, 0, Acquisition::ei(), 64, &mut rng)
+            .is_err());
+        let wrong = Bowl { d: 3 };
+        assert!(propose(&wrong, &bounds, 0.0, None, 1, Acquisition::ei(), 64, &mut rng)
+            .is_err());
+        // q close to the pool size forces the exclusion-relax path.
+        let got =
+            propose(&model, &bounds, 1.0, None, 6, Acquisition::lcb(), 6, &mut rng).unwrap();
+        assert_eq!(got.rows(), 6);
+        for i in 0..6 {
+            assert!(bounds.contains(got.row(i)));
+        }
+    }
+}

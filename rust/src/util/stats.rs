@@ -83,6 +83,38 @@ pub fn log_sum_exp(xs: &[f64]) -> f64 {
     m + xs.iter().map(|x| (x - m).exp()).sum::<f64>().ln()
 }
 
+/// Error function, via the Abramowitz–Stegun 7.1.26 rational
+/// approximation (max absolute error ≈ 1.5·10⁻⁷), extended to negative
+/// arguments by oddness. Shared by the acquisition functions in
+/// [`crate::optimize`]; odd by construction and saturating at ±1.
+pub fn erf(x: f64) -> f64 {
+    const P: f64 = 0.3275911;
+    const A1: f64 = 0.254829592;
+    const A2: f64 = -0.284496736;
+    const A3: f64 = 1.421413741;
+    const A4: f64 = -1.453152027;
+    const A5: f64 = 1.061405429;
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + P * x);
+    let poly = t * (A1 + t * (A2 + t * (A3 + t * (A4 + t * A5))));
+    sign * (1.0 - poly * (-x * x).exp())
+}
+
+/// Standard-normal probability density φ(z).
+#[inline]
+pub fn norm_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Standard-normal cumulative distribution Φ(z) = ½(1 + erf(z/√2)).
+/// Symmetric by construction: `norm_cdf(-z) == 1 − norm_cdf(z)` exactly
+/// (the [`erf`] approximation is odd).
+#[inline]
+pub fn norm_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z * std::f64::consts::FRAC_1_SQRT_2))
+}
+
 /// Squared Euclidean distance between two equal-length slices.
 #[inline]
 pub fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
@@ -181,6 +213,52 @@ mod tests {
         let xs = [3.0, 1.0, 2.0, 1.0];
         assert_eq!(argmin(&xs), 1);
         assert_eq!(argmax(&xs), 0);
+    }
+
+    #[test]
+    fn erf_known_values() {
+        // The 7.1.26 coefficients sum to 1 − 1e-9, so erf(0) is ~1e-9,
+        // not exactly 0 — well inside the approximation's error budget.
+        assert!(erf(0.0).abs() < 1e-8, "{}", erf(0.0));
+        // erf(1) = 0.8427007929…, erf(2) = 0.9953222650… (A&S table 7.1;
+        // the 7.1.26 approximation is good to ~1.5e-7).
+        assert!((erf(1.0) - 0.842_700_792_9).abs() < 1e-6, "{}", erf(1.0));
+        assert!((erf(2.0) - 0.995_322_265_0).abs() < 1e-6, "{}", erf(2.0));
+        // Odd and saturating.
+        assert_eq!(erf(-1.5), -erf(1.5));
+        assert!((erf(6.0) - 1.0).abs() < 1e-12);
+        assert!((erf(-6.0) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn norm_cdf_known_quantiles() {
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-9, "{}", norm_cdf(0.0));
+        // Φ(1.96) ≈ 0.9750021, Φ(1) ≈ 0.8413447, Φ(2.5758) ≈ 0.995.
+        assert!((norm_cdf(1.96) - 0.975_002_1).abs() < 1e-6, "{}", norm_cdf(1.96));
+        assert!((norm_cdf(1.0) - 0.841_344_75).abs() < 1e-6, "{}", norm_cdf(1.0));
+        assert!((norm_cdf(2.5758) - 0.995).abs() < 1e-5, "{}", norm_cdf(2.5758));
+        // Symmetry: erf is odd, so Φ(−z) = 1 − Φ(z) up to final rounding.
+        for z in [0.1, 0.5, 1.0, 1.96, 3.3] {
+            assert!(
+                (norm_cdf(-z) - (1.0 - norm_cdf(z))).abs() < 1e-15,
+                "symmetry at {z}"
+            );
+        }
+        // Monotone over a coarse grid.
+        let mut prev = norm_cdf(-8.0);
+        for i in -79..=80 {
+            let cur = norm_cdf(i as f64 * 0.1);
+            assert!(cur >= prev, "norm_cdf not monotone at z={}", i as f64 * 0.1);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn norm_pdf_shape() {
+        // Peak 1/√(2π) at 0, symmetric, thin tails.
+        assert!((norm_pdf(0.0) - 0.398_942_280_4).abs() < 1e-10);
+        assert_eq!(norm_pdf(1.3), norm_pdf(-1.3));
+        assert!(norm_pdf(5.0) < 1e-5);
     }
 
     #[test]
