@@ -24,12 +24,18 @@
 //!       10k-candidate pool (override with `CKRIG_ACQ_POOL`), split into
 //!       posterior+score and score-only; plus single-proposal `suggest`
 //!       latency for CK vs full Kriging vs SoD surrogates.
+//!   D1  distributed serving — a k=8 ensemble split across 1/2/4/8
+//!       loopback shard workers (real TCP + protocol v5 `spredict`):
+//!       scatter-gather p50/p99 batch latency and merge overhead vs the
+//!       in-process predict (override n with `CKRIG_DIST_N`, reps with
+//!       `CKRIG_DIST_REPS`).
 //!
 //! Results are also written to `BENCH_hotpath.json`,
-//! `BENCH_serving.json`, `BENCH_online.json` and `BENCH_optimize.json`
-//! (override with `CKRIG_BENCH_JSON` / `CKRIG_BENCH_SERVING_JSON` /
-//! `CKRIG_BENCH_ONLINE_JSON` / `CKRIG_BENCH_OPTIMIZE_JSON`) so CI can
-//! track the perf trajectory.
+//! `BENCH_serving.json`, `BENCH_online.json`, `BENCH_optimize.json` and
+//! `BENCH_distributed.json` (override with `CKRIG_BENCH_JSON` /
+//! `CKRIG_BENCH_SERVING_JSON` / `CKRIG_BENCH_ONLINE_JSON` /
+//! `CKRIG_BENCH_OPTIMIZE_JSON` / `CKRIG_BENCH_DISTRIBUTED_JSON`) so CI
+//! can track the perf trajectory.
 //!
 //! ```bash
 //! CKRIG_N=2000 cargo bench --bench bench_hotpath
@@ -579,6 +585,144 @@ fn main() {
     match std::fs::write(&optimize_json_path, &optimize_json) {
         Ok(()) => println!("  wrote {optimize_json_path}"),
         Err(e) => eprintln!("  failed to write {optimize_json_path}: {e}"),
+    }
+
+    // == D1: distributed scatter-gather — shard-count scaling on loopback ==
+    // One fitted k=8 ensemble, split into 1/2/4/8 shard workers, each a
+    // real TCP server on loopback; the coordinator fans `predictb`-sized
+    // batches out over the persistent pool and merges. Reported against
+    // the in-process predict of the same model, so the delta IS the
+    // coordination cost (wire + text codec + fan-out + partial merge).
+    {
+        use cluster_kriging::coordinator::{Server, ServerConfig, ShardPool, ShardPoolConfig};
+        use cluster_kriging::distributed::{split_artifact, ShardManifest, ShardedClusterKriging};
+
+        let dist_n = env_usize("CKRIG_DIST_N", n.min(2000));
+        let dist_k = 8usize;
+        let dist_batch = 64usize;
+        let dist_reps = env_usize("CKRIG_DIST_REPS", 30);
+        println!(
+            "\n== D1: distributed serving, n={dist_n}, k={dist_k}, d={d}, \
+             batch={dist_batch}, {dist_reps} reps =="
+        );
+        let dx = Matrix::from_vec(dist_n, d, rng.uniform_vec(dist_n * d, -3.0, 3.0));
+        let dy: Vec<f64> = (0..dist_n).map(|i| dx.row(i)[0].sin() + dx.row(i)[2]).collect();
+        let dist_model = ClusterKriging::fit(
+            &dx,
+            &dy,
+            ClusterKrigingConfig {
+                partitioner: Box::new(KMeansPartitioner { k: dist_k, seed: 7 }),
+                combiner: Combiner::OptimalWeights,
+                hyperopt: fixed_theta_opt(),
+                workers: None,
+                flavor: "OWCK".into(),
+            },
+        )
+        .unwrap();
+        let bx = Matrix::from_vec(dist_batch, d, rng.uniform_vec(dist_batch * d, -3.0, 3.0));
+        let percentile = |sorted: &[f64], p: f64| -> f64 {
+            let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+            sorted[idx.min(sorted.len() - 1)]
+        };
+        // In-process baseline.
+        let mut mbuf = vec![0.0; dist_batch];
+        let mut vbuf = vec![0.0; dist_batch];
+        let mut base_lat = Vec::with_capacity(dist_reps);
+        for _ in 0..dist_reps {
+            let t0 = Instant::now();
+            dist_model.predict_batch_into(&bx, &mut mbuf, &mut vbuf);
+            base_lat.push(t0.elapsed().as_secs_f64());
+            std::hint::black_box((&mbuf, &vbuf));
+        }
+        base_lat.sort_by(f64::total_cmp);
+        let (base_p50, base_p99) = (percentile(&base_lat, 50.0), percentile(&base_lat, 99.0));
+        println!(
+            "  in-process baseline      p50 {:8.2} ms | p99 {:8.2} ms",
+            base_p50 * 1e3,
+            base_p99 * 1e3
+        );
+
+        let tmp = std::env::temp_dir().join(format!("ckrig_bench_dist_{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        let artifact_path = tmp.join("model.ck");
+        cluster_kriging::surrogate::save_to_path(&dist_model, &artifact_path).unwrap();
+        let mut dist_records: Vec<String> = Vec::new();
+        for shard_count in [1usize, 2, 4, 8] {
+            if shard_count > dist_k {
+                continue;
+            }
+            let out =
+                split_artifact(&artifact_path, shard_count, tmp.join(format!("s{shard_count}")))
+                    .unwrap();
+            let manifest = ShardManifest::load_path(&out.manifest_path).unwrap();
+            let mut workers = Vec::new();
+            let mut addrs = Vec::new();
+            for path in &out.shard_paths {
+                let model: Arc<dyn Surrogate> =
+                    Arc::from(SurrogateSpec::load_path(path).unwrap());
+                let server = Server::start_with_model(
+                    model,
+                    ServerConfig {
+                        addr: "127.0.0.1:0".into(),
+                        batcher: BatcherConfig::default(),
+                    },
+                )
+                .unwrap();
+                addrs.push(server.local_addr.to_string());
+                workers.push(server);
+            }
+            let pool = ShardPool::connect(&addrs, &manifest, ShardPoolConfig::default()).unwrap();
+            let sharded = ShardedClusterKriging::new(manifest, Arc::clone(&pool)).unwrap();
+            // Warm the connections, then measure.
+            for _ in 0..3 {
+                sharded.predict_into(&bx, &mut mbuf, &mut vbuf).unwrap();
+            }
+            let mut lat = Vec::with_capacity(dist_reps);
+            for _ in 0..dist_reps {
+                let t0 = Instant::now();
+                sharded.predict_into(&bx, &mut mbuf, &mut vbuf).unwrap();
+                lat.push(t0.elapsed().as_secs_f64());
+                std::hint::black_box((&mbuf, &vbuf));
+            }
+            lat.sort_by(f64::total_cmp);
+            let (p50, p99) = (percentile(&lat, 50.0), percentile(&lat, 99.0));
+            println!(
+                "  {shard_count} shard worker(s)       p50 {:8.2} ms | p99 {:8.2} ms | \
+                 merge overhead {:+7.2} ms vs in-process",
+                p50 * 1e3,
+                p99 * 1e3,
+                (p50 - base_p50) * 1e3
+            );
+            dist_records.push(format!(
+                concat!(
+                    "  {{\n",
+                    "    \"shards\": {shards},\n",
+                    "    \"spredict_p50_s\": {p50:.6},\n",
+                    "    \"spredict_p99_s\": {p99:.6},\n",
+                    "    \"inprocess_p50_s\": {base50:.6},\n",
+                    "    \"inprocess_p99_s\": {base99:.6},\n",
+                    "    \"merge_overhead_p50_s\": {overhead:.6}\n",
+                    "  }}"
+                ),
+                shards = shard_count,
+                p50 = p50,
+                p99 = p99,
+                base50 = base_p50,
+                base99 = base_p99,
+                overhead = p50 - base_p50,
+            ));
+            drop(sharded);
+            drop(pool);
+            drop(workers);
+        }
+        let dist_json_path = std::env::var("CKRIG_BENCH_DISTRIBUTED_JSON")
+            .unwrap_or_else(|_| "BENCH_distributed.json".into());
+        let dist_json = format!("[\n{}\n]\n", dist_records.join(",\n"));
+        match std::fs::write(&dist_json_path, &dist_json) {
+            Ok(()) => println!("  wrote {dist_json_path}"),
+            Err(e) => eprintln!("  failed to write {dist_json_path}: {e}"),
+        }
+        std::fs::remove_dir_all(&tmp).ok();
     }
 
     // == machine-readable record for the CI perf trajectory ==

@@ -53,6 +53,55 @@ impl Combiner {
             Combiner::SingleModel => preds[routed.min(preds.len() - 1)],
         }
     }
+
+    /// Merge a **partial** set of per-cluster posteriors — the distributed
+    /// scatter-gather path, where a timed-out or dead shard contributes
+    /// nothing and the survivors' weights renormalize.
+    ///
+    /// `preds[i]` is the posterior of global cluster `cluster_ids[i]`;
+    /// `weights` is the FULL k-length membership weight vector (only read
+    /// by `MembershipMixture`); `routed` is the globally routed cluster
+    /// (only read by `SingleModel`). Every branch funnels into the same
+    /// private kernels as [`Self::combine`], so the weight math — the
+    /// inverse-variance form, the mixture renormalization and the
+    /// [`VAR_FLOOR`] guard — lives in exactly one place:
+    ///
+    /// * `OptimalWeights` — Eq. 12 over the present subset; the weights
+    ///   renormalize by construction (1/σ² over whoever answered).
+    /// * `MembershipMixture` — membership weights of the present clusters
+    ///   are gathered and renormalized by [`combine_mixture`].
+    /// * `SingleModel` — the routed cluster's posterior when its shard
+    ///   answered; otherwise degrade to the optimal-weights merge of the
+    ///   survivors (an answer with honest variance beats no answer).
+    ///
+    /// With every cluster present (`cluster_ids == 0..k`, in order) the
+    /// result is identical to [`Self::combine`].
+    pub fn merge_partial(
+        self,
+        preds: &[ClusterPrediction],
+        cluster_ids: &[usize],
+        weights: &[f64],
+        routed: usize,
+    ) -> ClusterPrediction {
+        assert!(!preds.is_empty(), "merge_partial: no predictions");
+        assert_eq!(
+            preds.len(),
+            cluster_ids.len(),
+            "merge_partial: prediction/cluster-id mismatch"
+        );
+        match self {
+            Combiner::OptimalWeights => combine_optimal(preds),
+            Combiner::MembershipMixture => {
+                let w: Vec<f64> =
+                    cluster_ids.iter().map(|&c| weights.get(c).copied().unwrap_or(0.0)).collect();
+                combine_mixture(preds, &w)
+            }
+            Combiner::SingleModel => match cluster_ids.iter().position(|&c| c == routed) {
+                Some(pos) => preds[pos],
+                None => combine_optimal(preds),
+            },
+        }
+    }
 }
 
 /// Optimal (minimum-variance) weighting, Eq. 12:
@@ -239,6 +288,76 @@ mod tests {
         // Out-of-range routing clamps instead of panicking.
         let clamped = Combiner::SingleModel.combine(&preds, &[], 99);
         assert_eq!(clamped.mean, 3.0);
+    }
+
+    #[test]
+    fn merge_partial_full_presence_matches_combine_prop() {
+        // With every cluster present and in order, merge_partial IS
+        // combine — bit-identical, all three schemes.
+        check_default(|rng| {
+            let k = gen_size(rng, 1, 8);
+            let preds: Vec<ClusterPrediction> = (0..k)
+                .map(|_| p(rng.uniform_in(-5.0, 5.0), rng.uniform_in(0.0, 4.0)))
+                .collect();
+            let mut weights: Vec<f64> = (0..k).map(|_| rng.uniform_in(0.0, 1.0)).collect();
+            let s: f64 = weights.iter().sum();
+            if s > 0.0 {
+                for w in &mut weights {
+                    *w /= s;
+                }
+            }
+            let ids: Vec<usize> = (0..k).collect();
+            let routed = gen_size(rng, 0, k - 1);
+            for c in
+                [Combiner::OptimalWeights, Combiner::MembershipMixture, Combiner::SingleModel]
+            {
+                let full = c.combine(&preds, &weights, routed);
+                let partial = c.merge_partial(&preds, &ids, &weights, routed);
+                crate::prop_assert!(
+                    full.mean.to_bits() == partial.mean.to_bits()
+                        && full.variance.to_bits() == partial.variance.to_bits(),
+                    "{}: partial merge diverged from combine",
+                    c.name()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_partial_renormalizes_surviving_weights() {
+        // Cluster 1 of 3 is missing (dead shard). Mixture weights of the
+        // survivors renormalize: [0.2, 0.3] → [0.4, 0.6].
+        let preds = [p(1.0, 0.5), p(3.0, 1.0)];
+        let out = Combiner::MembershipMixture.merge_partial(
+            &preds,
+            &[0, 2],
+            &[0.2, 0.5, 0.3],
+            0,
+        );
+        let mean = 0.4 * 1.0 + 0.6 * 3.0;
+        let second = 0.4 * (0.5 + 1.0) + 0.6 * (1.0 + 9.0);
+        assert!((out.mean - mean).abs() < 1e-12);
+        assert!((out.variance - (second - mean * mean)).abs() < 1e-12);
+        // Optimal weights over the survivors: σ² = [0.5, 1.0] → w = [2/3, 1/3].
+        let out = Combiner::OptimalWeights.merge_partial(&preds, &[0, 2], &[], 0);
+        let w0 = (1.0 / 0.5) / (1.0 / 0.5 + 1.0);
+        assert!((out.mean - (w0 * 1.0 + (1.0 - w0) * 3.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_partial_single_model_degrades_when_routed_missing() {
+        let preds = [p(1.0, 0.5), p(3.0, 1.0)];
+        // Routed cluster present: its posterior verbatim.
+        let out = Combiner::SingleModel.merge_partial(&preds, &[0, 2], &[], 2);
+        assert_eq!(out.mean, 3.0);
+        assert_eq!(out.variance, 1.0);
+        // Routed cluster's shard is dead: optimal-weights fallback over
+        // whoever answered — finite, never a panic or a hole.
+        let out = Combiner::SingleModel.merge_partial(&preds, &[0, 2], &[], 1);
+        let expect = Combiner::OptimalWeights.combine(&preds, &[], 0);
+        assert_eq!(out.mean, expect.mean);
+        assert_eq!(out.variance, expect.variance);
     }
 
     #[test]

@@ -123,6 +123,27 @@ impl ClusterKriging {
         &self.models
     }
 
+    /// The fitted routing oracle (weights + hard routes for unseen
+    /// points) — the coordinator side of distributed serving routes with
+    /// a copy of exactly this.
+    pub fn membership(&self) -> &Membership {
+        &self.membership
+    }
+
+    /// The flavor label ("OWCK", "MTCK", …).
+    pub fn flavor(&self) -> &str {
+        &self.flavor
+    }
+
+    /// Decompose the fitted ensemble into its parts — the sharding
+    /// splitter's entry point ([`crate::distributed::ClusterShard::split`]):
+    /// `(models, membership, combiner, flavor, dim, cluster_sizes)`.
+    pub(crate) fn into_parts(
+        self,
+    ) -> (Vec<OrdinaryKriging>, Membership, Combiner, String, usize, Vec<usize>) {
+        (self.models, self.membership, self.combiner, self.flavor, self.dim, self.cluster_sizes)
+    }
+
     /// Predict one point: gather per-cluster posteriors and combine.
     ///
     /// `SingleModel` only evaluates the routed model (the MTCK prediction
@@ -298,28 +319,34 @@ impl crate::online::OnlineSurrogate for ClusterKriging {
     }
 
     fn training_snapshot(&self) -> (Matrix, Vec<f64>) {
-        // Overlapping partitioners (OWFCK/GMMCK) store boundary points in
-        // several clusters; return each distinct observation once so a
-        // refit does not see artificial duplicates. The key covers (x, y)
-        // bits: a genuine overlap duplicate shares both, while repeated
-        // measurements at one design point (same x, different y) are real
-        // data and must all survive into the refit history.
-        let mut seen = std::collections::HashSet::new();
-        let mut x = Vec::new();
-        let mut y = Vec::new();
-        for m in &self.models {
-            let (xs, ys) = (m.x_train(), m.y_train());
-            for i in 0..xs.rows() {
-                let mut key: Vec<u64> = xs.row(i).iter().map(|v| v.to_bits()).collect();
-                key.push(ys[i].to_bits());
-                if seen.insert(key) {
-                    x.extend_from_slice(xs.row(i));
-                    y.push(ys[i]);
-                }
+        dedup_snapshot(&self.models, self.dim)
+    }
+}
+
+/// Distinct training observations across a set of per-cluster models.
+/// Overlapping partitioners (OWFCK/GMMCK) store boundary points in
+/// several clusters; return each distinct observation once so a refit
+/// does not see artificial duplicates. The key covers (x, y) bits: a
+/// genuine overlap duplicate shares both, while repeated measurements at
+/// one design point (same x, different y) are real data and must all
+/// survive into the refit history. Shared by [`ClusterKriging`] and the
+/// split-off [`crate::distributed::ClusterShard`].
+pub(crate) fn dedup_snapshot(models: &[OrdinaryKriging], dim: usize) -> (Matrix, Vec<f64>) {
+    let mut seen = std::collections::HashSet::new();
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for m in models {
+        let (xs, ys) = (m.x_train(), m.y_train());
+        for i in 0..xs.rows() {
+            let mut key: Vec<u64> = xs.row(i).iter().map(|v| v.to_bits()).collect();
+            key.push(ys[i].to_bits());
+            if seen.insert(key) {
+                x.extend_from_slice(xs.row(i));
+                y.push(ys[i]);
             }
         }
-        (Matrix::from_vec(y.len(), self.dim, x), y)
     }
+    (Matrix::from_vec(y.len(), dim, x), y)
 }
 
 impl Surrogate for ClusterKriging {
@@ -346,6 +373,13 @@ impl Surrogate for ClusterKriging {
     fn predict_into(&self, xt: &Matrix, mean: &mut [f64], variance: &mut [f64]) -> Result<()> {
         self.predict_batch_into(xt, mean, variance);
         Ok(())
+    }
+
+    fn shard_predictor(&self) -> Option<&dyn crate::distributed::ShardPredictor> {
+        // A monolithic ensemble serves `spredict` for ALL its clusters —
+        // a one-shard topology, and the reference a sharded deployment is
+        // checked against.
+        Some(self)
     }
 
     fn save(&self, w: &mut dyn std::io::Write) -> Result<()> {

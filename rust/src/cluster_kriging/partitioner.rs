@@ -92,6 +92,20 @@ impl Membership {
         }
     }
 
+    /// Deep copy via the artifact encoding — the oracle variants carry
+    /// fitted state (mixture components, tree nodes) that deliberately
+    /// doesn't implement `Clone`, but every one of them round-trips
+    /// bit-identically through [`Self::write_artifact`], so the encoding
+    /// doubles as the one clone path (sharding hands each shard its own
+    /// copy of the routing oracle).
+    pub fn deep_clone(&self) -> Membership {
+        let mut w = BinWriter::new();
+        self.write_artifact(&mut w);
+        let bytes = w.into_bytes();
+        Membership::read_artifact(&mut BinReader::new(&bytes))
+            .expect("membership artifact roundtrip cannot fail on a valid oracle")
+    }
+
     /// Serialize the routing oracle into a model artifact payload.
     pub(crate) fn write_artifact(&self, w: &mut BinWriter) {
         match self {

@@ -15,7 +15,7 @@
 //! flush: a 40-point client batch and 24 single-point requests form one
 //! 64-row matrix if they target the same model.
 
-use crate::coordinator::metrics::ServerMetrics;
+use crate::coordinator::metrics::{ProtocolOp, ServerMetrics};
 use crate::coordinator::registry::ModelRegistry;
 use crate::kriging::Surrogate;
 use crate::util::matrix::Matrix;
@@ -414,8 +414,10 @@ fn flush_observes(
             ys.push(row[dim]);
         }
         let xs = Matrix::from_vec(p.rows, dim, xs);
+        let t0 = Instant::now();
         match observer.observe_batch(&xs, &ys) {
             Ok(()) => {
+                metrics.record_op(ProtocolOp::Observe, t0.elapsed().as_secs_f64());
                 metrics.record_observes(p.rows);
                 let _ = p.reply.send(Ok(Vec::new()));
             }

@@ -1,4 +1,11 @@
 //! Serving metrics: counters and latency histograms for the coordinator.
+//!
+//! Latencies are tracked twice: one aggregate histogram (the historical
+//! `lat_*` summary keys, kept stable for dashboards and tests) and one
+//! histogram **per protocol op** ([`ProtocolOp`]) — predict, observe,
+//! suggest and the distributed `spredict` each get their own buckets, so
+//! shard fan-out cost is attributable in `stats` instead of being
+//! averaged into the predict latency it inflates.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -7,7 +14,50 @@ use std::sync::Mutex;
 const BUCKET_BOUNDS_US: [u64; 12] =
     [10, 30, 100, 300, 1_000, 3_000, 10_000, 30_000, 100_000, 300_000, 1_000_000, 3_000_000];
 
-/// Lock-free counters + a mutex-guarded histogram.
+/// Protocol op families with separately tracked latency histograms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProtocolOp {
+    /// `predict`/`predictb` flush execution (one batched `predict_into`).
+    Predict,
+    /// `observe`/`observeb`/`tell` absorption.
+    Observe,
+    /// `suggest` proposal (acquisition maximization over the posterior).
+    Suggest,
+    /// `spredict` raw per-cluster prediction (the shard-worker side of
+    /// the scatter-gather path, protocol v5).
+    ShardPredict,
+}
+
+impl ProtocolOp {
+    const COUNT: usize = 4;
+
+    fn index(self) -> usize {
+        match self {
+            ProtocolOp::Predict => 0,
+            ProtocolOp::Observe => 1,
+            ProtocolOp::Suggest => 2,
+            ProtocolOp::ShardPredict => 3,
+        }
+    }
+
+    fn key(self) -> &'static str {
+        match self {
+            ProtocolOp::Predict => "predict",
+            ProtocolOp::Observe => "observe",
+            ProtocolOp::Suggest => "suggest",
+            ProtocolOp::ShardPredict => "spredict",
+        }
+    }
+
+    const ALL: [ProtocolOp; Self::COUNT] = [
+        ProtocolOp::Predict,
+        ProtocolOp::Observe,
+        ProtocolOp::Suggest,
+        ProtocolOp::ShardPredict,
+    ];
+}
+
+/// Lock-free counters + mutex-guarded histograms.
 #[derive(Debug, Default)]
 pub struct ServerMetrics {
     pub requests: AtomicU64,
@@ -18,9 +68,17 @@ pub struct ServerMetrics {
     /// Candidate points proposed through the `suggest` protocol op
     /// (protocol v4 — the optimization-as-a-service path).
     pub suggests: AtomicU64,
+    /// Raw per-cluster prediction rows served through `spredict`
+    /// (protocol v5 — this process answering as a shard worker).
+    pub spredicts: AtomicU64,
+    /// Scatter-gather merges that had to drop ≥ 1 dead or timed-out
+    /// shard and renormalize over the survivors (protocol v5 — this
+    /// process acting as a shard coordinator).
+    pub degraded: AtomicU64,
     pub batches: AtomicU64,
     pub errors: AtomicU64,
     latencies: Mutex<Histogram>,
+    per_op: Mutex<[Histogram; ProtocolOp::COUNT]>,
 }
 
 #[derive(Debug, Default)]
@@ -29,6 +87,31 @@ struct Histogram {
     total_us: u64,
     n: u64,
     max_us: u64,
+}
+
+impl Histogram {
+    fn record_us(&mut self, us: u64) {
+        let idx = BUCKET_BOUNDS_US.iter().position(|&b| us <= b).unwrap_or(BUCKET_BOUNDS_US.len());
+        self.counts[idx] += 1;
+        self.total_us += us;
+        self.n += 1;
+        self.max_us = self.max_us.max(us);
+    }
+
+    fn percentile_us(&self, p: f64) -> u64 {
+        if self.n == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * self.n as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return if i < BUCKET_BOUNDS_US.len() { BUCKET_BOUNDS_US[i] } else { self.max_us };
+            }
+        }
+        self.max_us
+    }
 }
 
 impl ServerMetrics {
@@ -54,34 +137,45 @@ impl ServerMetrics {
         self.suggests.fetch_add(count as u64, Ordering::Relaxed);
     }
 
+    /// Record `count` rows answered with raw per-cluster posteriors by an
+    /// `spredict` op.
+    pub fn record_spredicts(&self, count: usize) {
+        self.spredicts.fetch_add(count as u64, Ordering::Relaxed);
+    }
+
+    /// Record one scatter-gather merge that dropped ≥ 1 shard.
+    pub fn record_degraded(&self) {
+        self.degraded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one op execution of `seconds` into that op's latency
+    /// histogram **and** the aggregate histogram.
+    pub fn record_op(&self, op: ProtocolOp, seconds: f64) {
+        let us = (seconds * 1e6) as u64;
+        self.latencies.lock().unwrap().record_us(us);
+        self.per_op.lock().unwrap()[op.index()].record_us(us);
+    }
+
     /// Record one served batch of `size` predictions taking `seconds`.
     pub fn record_batch(&self, size: usize, seconds: f64) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.predictions.fetch_add(size as u64, Ordering::Relaxed);
-        let us = (seconds * 1e6) as u64;
-        let mut h = self.latencies.lock().unwrap();
-        let idx = BUCKET_BOUNDS_US.iter().position(|&b| us <= b).unwrap_or(BUCKET_BOUNDS_US.len());
-        h.counts[idx] += 1;
-        h.total_us += us;
-        h.n += 1;
-        h.max_us = h.max_us.max(us);
+        self.record_op(ProtocolOp::Predict, seconds);
     }
 
-    /// Approximate latency percentile from the histogram (µs).
+    /// Approximate latency percentile from the aggregate histogram (µs).
     pub fn latency_percentile_us(&self, p: f64) -> u64 {
-        let h = self.latencies.lock().unwrap();
-        if h.n == 0 {
-            return 0;
-        }
-        let target = ((p / 100.0) * h.n as f64).ceil() as u64;
-        let mut seen = 0;
-        for (i, &c) in h.counts.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                return if i < BUCKET_BOUNDS_US.len() { BUCKET_BOUNDS_US[i] } else { h.max_us };
-            }
-        }
-        h.max_us
+        self.latencies.lock().unwrap().percentile_us(p)
+    }
+
+    /// Approximate latency percentile for one protocol op (µs).
+    pub fn op_percentile_us(&self, op: ProtocolOp, p: f64) -> u64 {
+        self.per_op.lock().unwrap()[op.index()].percentile_us(p)
+    }
+
+    /// Samples recorded for one protocol op.
+    pub fn op_count(&self, op: ProtocolOp) -> u64 {
+        self.per_op.lock().unwrap()[op.index()].n
     }
 
     pub fn mean_latency_us(&self) -> f64 {
@@ -93,21 +187,38 @@ impl ServerMetrics {
         }
     }
 
-    /// One-line human-readable summary.
+    /// One-line human-readable summary. The historical aggregate keys
+    /// come first; per-op percentiles follow, one `<op>_p50/p99` pair per
+    /// op that has recorded at least one sample.
     pub fn summary(&self) -> String {
-        format!(
-            "requests={} predictions={} observes={} suggests={} batches={} errors={} \
-             lat_mean={:.0}µs lat_p50={}µs lat_p99={}µs",
+        let mut s = format!(
+            "requests={} predictions={} observes={} suggests={} spredicts={} \
+             degraded={} batches={} errors={} lat_mean={:.0}µs lat_p50={}µs lat_p99={}µs",
             self.requests.load(Ordering::Relaxed),
             self.predictions.load(Ordering::Relaxed),
             self.observes.load(Ordering::Relaxed),
             self.suggests.load(Ordering::Relaxed),
+            self.spredicts.load(Ordering::Relaxed),
+            self.degraded.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
             self.mean_latency_us(),
             self.latency_percentile_us(50.0),
             self.latency_percentile_us(99.0),
-        )
+        );
+        let per_op = self.per_op.lock().unwrap();
+        for op in ProtocolOp::ALL {
+            let h = &per_op[op.index()];
+            if h.n > 0 {
+                s.push_str(&format!(
+                    " {key}_p50={}µs {key}_p99={}µs",
+                    h.percentile_us(50.0),
+                    h.percentile_us(99.0),
+                    key = op.key()
+                ));
+            }
+        }
+        s
     }
 }
 
@@ -147,6 +258,11 @@ mod tests {
         assert_eq!(m.mean_latency_us(), 0.0);
         assert!(m.summary().contains("requests=0"));
         assert!(m.summary().contains("observes=0"));
+        assert!(m.summary().contains("degraded=0"));
+        for op in ProtocolOp::ALL {
+            assert_eq!(m.op_percentile_us(op, 99.0), 0);
+            assert_eq!(m.op_count(op), 0);
+        }
     }
 
     #[test]
@@ -171,6 +287,55 @@ mod tests {
         assert_eq!(m.predictions.load(Ordering::Relaxed), 0);
         assert_eq!(m.observes.load(Ordering::Relaxed), 0);
         assert!(ServerMetrics::new().summary().contains("suggests=0"));
+    }
+
+    #[test]
+    fn spredict_and_degraded_counters_accumulate() {
+        let m = ServerMetrics::new();
+        m.record_spredicts(16);
+        m.record_spredicts(4);
+        m.record_degraded();
+        assert_eq!(m.spredicts.load(Ordering::Relaxed), 20);
+        assert_eq!(m.degraded.load(Ordering::Relaxed), 1);
+        let s = m.summary();
+        assert!(s.contains("spredicts=20"), "{s}");
+        assert!(s.contains("degraded=1"), "{s}");
+        // Shard rows are neither predictions nor observations.
+        assert_eq!(m.predictions.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn per_op_histograms_are_independent() {
+        let m = ServerMetrics::new();
+        // Slow observes must not inflate the predict percentiles: the
+        // whole point of splitting the buckets by op.
+        for _ in 0..10 {
+            m.record_op(ProtocolOp::Predict, 50e-6); // 50µs → bucket 100
+        }
+        for _ in 0..10 {
+            m.record_op(ProtocolOp::Observe, 0.02); // 20ms → bucket 30ms
+        }
+        m.record_op(ProtocolOp::ShardPredict, 2e-3);
+        assert_eq!(m.op_percentile_us(ProtocolOp::Predict, 99.0), 100);
+        assert_eq!(m.op_percentile_us(ProtocolOp::Observe, 99.0), 30_000);
+        assert_eq!(m.op_percentile_us(ProtocolOp::ShardPredict, 99.0), 3_000);
+        assert_eq!(m.op_count(ProtocolOp::Suggest), 0);
+        // The aggregate histogram still sees everything.
+        assert!(m.latency_percentile_us(99.0) >= 30_000);
+        // Only ops with samples appear in the summary.
+        let s = m.summary();
+        assert!(s.contains("predict_p50=100µs"), "{s}");
+        assert!(s.contains("observe_p99=30000µs"), "{s}");
+        assert!(s.contains("spredict_p50=3000µs"), "{s}");
+        assert!(!s.contains("suggest_p50"), "{s}");
+    }
+
+    #[test]
+    fn record_batch_feeds_the_predict_histogram() {
+        let m = ServerMetrics::new();
+        m.record_batch(4, 50e-6);
+        assert_eq!(m.op_count(ProtocolOp::Predict), 1);
+        assert_eq!(m.op_percentile_us(ProtocolOp::Predict, 100.0), 100);
     }
 
     #[test]

@@ -9,8 +9,10 @@ pub mod batcher;
 pub mod metrics;
 pub mod registry;
 pub mod server;
+pub mod shardpool;
 
 pub use batcher::{Batcher, BatcherConfig};
-pub use metrics::ServerMetrics;
+pub use metrics::{ProtocolOp, ServerMetrics};
 pub use registry::{ModelInfo, ModelRegistry};
-pub use server::{Client, Server, ServerConfig};
+pub use server::{Client, Server, ServerConfig, ShardInfo};
+pub use shardpool::{ShardPool, ShardPoolConfig};

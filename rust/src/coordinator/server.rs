@@ -27,6 +27,26 @@
 //!     (v3 extends the v1 reply with the observes counter inside the
 //!     metrics summary plus the registered model-slot names)
 //!
+//!   v5 (distributed cluster serving):
+//!   `spredict [model] <n> <p1;p2;…> [clusters=c1,c2,…]`
+//!                                    → `ok spreds <g1;g2;…>`
+//!     (raw, uncombined per-cluster posteriors — what a shard worker
+//!     serves to a scatter-gather coordinator. Each `gi` lists the
+//!     answering clusters for point i as `c:mean,variance` entries
+//!     joined by `|`, ascending by cluster id; the optional `clusters=`
+//!     filter restricts evaluation to the listed clusters, as the
+//!     coordinator's single-model routing does. Partials are in the
+//!     serving model's FIT units — Standardized shards deliberately do
+//!     not de-standardize them, so the coordinator's merge applies the
+//!     combiner's variance floor in the same units the monolithic model
+//!     would, and converts only the combined posterior to raw units)
+//!   `shardinfo [model]`              → `ok shard <i>/<s> k=<k> d=<dim>
+//!                                        clusters=<c1,c2,…> algo=<name>`
+//!     (topology handshake: shard index/count — `0/1` for a monolithic
+//!     ensemble — total cluster count, dimensionality and the owned
+//!     cluster ids, validated by the coordinator's connection pool
+//!     before the shard joins a fan-out)
+//!
 //!   v4 (optimization as a service):
 //!   `suggest [model] <q> [bounds]`   → `ok <p1;p2;…;pq>`
 //!     (propose q points to evaluate next, maximizing Expected
@@ -48,15 +68,17 @@
 //! `observe` traffic in place between swaps.
 
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
-use crate::coordinator::metrics::ServerMetrics;
+use crate::coordinator::metrics::{ProtocolOp, ServerMetrics};
 use crate::coordinator::registry::ModelRegistry;
 use crate::kriging::Surrogate;
 use crate::surrogate::SurrogateSpec;
+use crate::util::matrix::Matrix;
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 pub struct ServerConfig {
     pub addr: String,
@@ -76,7 +98,18 @@ impl Server {
     /// Bind and serve a model registry in background threads (one per
     /// connection).
     pub fn start(registry: Arc<ModelRegistry>, cfg: ServerConfig) -> Result<Self> {
-        let metrics = Arc::new(ServerMetrics::new());
+        Self::start_with_metrics(registry, cfg, Arc::new(ServerMetrics::new()))
+    }
+
+    /// [`Self::start`] against caller-owned metrics — so an embedding
+    /// process can share one [`ServerMetrics`] between the server and
+    /// other recorders (the shard coordinator wires its
+    /// [`crate::coordinator::ShardPool`]'s degraded counter this way).
+    pub fn start_with_metrics(
+        registry: Arc<ModelRegistry>,
+        cfg: ServerConfig,
+        metrics: Arc<ServerMetrics>,
+    ) -> Result<Self> {
         let batcher =
             Arc::new(Batcher::start(registry.clone(), cfg.batcher.clone(), metrics.clone()));
         let listener =
@@ -344,6 +377,76 @@ fn dispatch(
             Err(e) => err(format!("{e:#}")),
         };
     }
+    if let Some(rest) = line.strip_prefix("spredict ") {
+        // `spredict [model] <n> <p1;p2;…> [clusters=c1,c2,…]` — raw
+        // per-cluster posteriors for a scatter-gather coordinator. Served
+        // directly (not through the Batcher): the coordinator's batcher
+        // already formed this batch, and re-queueing it would serialize
+        // independent shards behind one flush worker.
+        let mut tokens: Vec<&str> = rest.split_whitespace().collect();
+        let has_filter = tokens.last().is_some_and(|t| t.starts_with("clusters="));
+        let filter: Option<Vec<usize>> = if has_filter {
+            let t = tokens.pop().unwrap();
+            let parsed: std::result::Result<Vec<usize>, _> =
+                t["clusters=".len()..].split(',').map(|c| c.trim().parse()).collect();
+            match parsed {
+                Ok(v) if !v.is_empty() => Some(v),
+                _ => return err(format!("bad cluster filter {t:?}")),
+            }
+        } else {
+            None
+        };
+        let (model, n_str, body) = match tokens.as_slice() {
+            [n, body] => (None, *n, *body),
+            [model, n, body] => (Some(*model), *n, *body),
+            _ => {
+                return err(
+                    "usage: spredict [model] <n> <p1;p2;...> [clusters=c1,c2,...]".into(),
+                )
+            }
+        };
+        let n: usize = match n_str.parse() {
+            Ok(v) => v,
+            Err(_) => return err(format!("bad point count {n_str:?}")),
+        };
+        let mut data = Vec::new();
+        let mut rows = 0;
+        let mut dim = None;
+        for part in body.split(';') {
+            let point = match parse_csv_point(part) {
+                Ok(p) => p,
+                Err(e) => return err(format!("point {}: {e:#}", rows + 1)),
+            };
+            if let Some(d) = dim {
+                if point.len() != d {
+                    return err(format!(
+                        "point {} has {} dims, expected {d}",
+                        rows + 1,
+                        point.len()
+                    ));
+                }
+            } else {
+                dim = Some(point.len());
+            }
+            data.extend_from_slice(&point);
+            rows += 1;
+        }
+        if rows != n {
+            return err(format!("declared {n} points but got {rows}"));
+        }
+        return match spredict_for(model, data, rows, filter.as_deref(), registry, metrics) {
+            Ok(reply) => format!("ok {reply}"),
+            Err(e) => err(format!("{e:#}")),
+        };
+    }
+    if line == "shardinfo" || line.starts_with("shardinfo ") {
+        let model = line.strip_prefix("shardinfo").unwrap().trim();
+        let model = if model.is_empty() { None } else { Some(model) };
+        return match shardinfo_for(model, registry) {
+            Ok(reply) => format!("ok {reply}"),
+            Err(e) => err(format!("{e:#}")),
+        };
+    }
     if let Some(rest) = line.strip_prefix("suggest ") {
         // `suggest [model] <q> [bounds]`. First token is a slot name when
         // it names an existing slot or cannot be a point count.
@@ -364,8 +467,12 @@ fn dispatch(
             Ok(v) if v >= 1 => v,
             _ => return err(format!("bad proposal count {q_str:?}")),
         };
+        let t0 = std::time::Instant::now();
         return match suggest_for(model, q, bounds_str, registry, metrics) {
-            Ok(points) => format!("ok {points}"),
+            Ok(points) => {
+                metrics.record_op(ProtocolOp::Suggest, t0.elapsed().as_secs_f64());
+                format!("ok {points}")
+            }
             Err(e) => err(format!("{e:#}")),
         };
     }
@@ -520,6 +627,85 @@ fn suggest_for(
     Ok(body.join(";"))
 }
 
+/// Execute one `spredict` op: raw per-cluster posteriors from the slot's
+/// [`crate::distributed::ShardPredictor`] view.
+fn spredict_for(
+    model: Option<&str>,
+    data: Vec<f64>,
+    rows: usize,
+    filter: Option<&[usize]>,
+    registry: &ModelRegistry,
+    metrics: &ServerMetrics,
+) -> Result<String> {
+    let target = registry
+        .get(model)
+        .ok_or_else(|| anyhow::anyhow!("no model slot named {:?}", model.unwrap_or("")))?;
+    let sp = target.shard_predictor().ok_or_else(|| {
+        anyhow::anyhow!(
+            "model slot {:?} has no per-cluster decomposition (spredict serves \
+             Cluster Kriging ensembles and shards)",
+            model.unwrap_or("default")
+        )
+    })?;
+    let dim = target.dim();
+    anyhow::ensure!(
+        data.len() == rows * dim,
+        "expected {rows}×{dim} values for model {:?}, got {}",
+        model.unwrap_or("default"),
+        data.len()
+    );
+    let xt = Matrix::from_vec(rows, dim, data);
+    let t0 = std::time::Instant::now();
+    let partials = sp.predict_clusters(&xt, filter)?;
+    metrics.record_op(ProtocolOp::ShardPredict, t0.elapsed().as_secs_f64());
+    metrics.record_spredicts(rows);
+    let body: Vec<String> = partials
+        .iter()
+        .map(|row| {
+            row.iter()
+                .map(|(c, m, v)| format!("{c}:{m},{v}"))
+                .collect::<Vec<_>>()
+                .join("|")
+        })
+        .collect();
+    Ok(format!("spreds {}", body.join(";")))
+}
+
+/// Execute one `shardinfo` op: the topology handshake a coordinator's
+/// connection pool validates against its manifest.
+fn shardinfo_for(model: Option<&str>, registry: &ModelRegistry) -> Result<String> {
+    let target = registry
+        .get(model)
+        .ok_or_else(|| anyhow::anyhow!("no model slot named {:?}", model.unwrap_or("")))?;
+    let sp = target.shard_predictor().ok_or_else(|| {
+        anyhow::anyhow!(
+            "model slot {:?} has no per-cluster decomposition",
+            model.unwrap_or("default")
+        )
+    })?;
+    let (index, count) = sp.shard_index().unwrap_or((0, 1));
+    let clusters: Vec<String> = sp.cluster_ids().iter().map(usize::to_string).collect();
+    Ok(format!(
+        "shard {index}/{count} k={} d={} clusters={} algo={}",
+        sp.k_total(),
+        target.dim(),
+        clusters.join(","),
+        target.name()
+    ))
+}
+
+/// One shard worker's topology, as reported by `shardinfo` (see
+/// [`Client::shard_info`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardInfo {
+    pub index: usize,
+    pub count: usize,
+    pub k_total: usize,
+    pub dim: usize,
+    pub clusters: Vec<usize>,
+    pub algo: String,
+}
+
 /// Minimal blocking client for tests/examples.
 pub struct Client {
     reader: BufReader<TcpStream>,
@@ -534,11 +720,48 @@ impl Client {
         Ok(Self { reader: BufReader::new(stream), writer })
     }
 
+    /// [`Self::connect`] with a connection deadline, for callers that
+    /// must not block on an unreachable server (the shard pool).
+    pub fn connect_with_timeout(addr: &str, timeout: Duration) -> Result<Self> {
+        use std::net::ToSocketAddrs;
+        let sockaddr = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {addr}"))?
+            .next()
+            .with_context(|| format!("{addr} resolves to no address"))?;
+        let stream = TcpStream::connect_timeout(&sockaddr, timeout)
+            .with_context(|| format!("connecting to {addr}"))?;
+        stream.set_nodelay(true)?;
+        let writer = stream.try_clone()?;
+        Ok(Self { reader: BufReader::new(stream), writer })
+    }
+
+    /// Per-request socket deadlines. `None` restores the default
+    /// block-forever behavior. With a read deadline set,
+    /// [`Self::request`] returns an error instead of hanging when the
+    /// server dies mid-response — after which this connection is poisoned
+    /// (a late reply would desynchronize the request/reply pairing) and
+    /// should be dropped and re-established.
+    pub fn set_timeouts(&mut self, read: Option<Duration>, write: Option<Duration>) -> Result<()> {
+        self.reader.get_ref().set_read_timeout(read)?;
+        self.writer.set_write_timeout(write)?;
+        Ok(())
+    }
+
     pub fn request(&mut self, line: &str) -> Result<String> {
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
         let mut reply = String::new();
-        self.reader.read_line(&mut reply)?;
+        let n = self.reader.read_line(&mut reply).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::TimedOut
+            {
+                anyhow::anyhow!("request timed out waiting for a reply (connection poisoned)")
+            } else {
+                anyhow::Error::from(e)
+            }
+        })?;
+        anyhow::ensure!(n > 0, "server closed the connection");
         Ok(reply.trim().to_string())
     }
 
@@ -711,6 +934,102 @@ impl Client {
         let rest = Self::expect_ok(&reply)?;
         anyhow::ensure!(rest.starts_with("told"), "unexpected reply: {reply}");
         Ok(())
+    }
+
+    /// Raw per-cluster posteriors for a batch (protocol v5 `spredict`):
+    /// for each row of `xt`, the `(global_cluster_id, mean, variance)`
+    /// triples the server's model answers for, optionally restricted to
+    /// `filter`. The scatter-gather side of distributed serving.
+    pub fn shard_predict(
+        &mut self,
+        model: Option<&str>,
+        xt: &Matrix,
+        filter: Option<&[usize]>,
+    ) -> Result<Vec<Vec<(usize, f64, f64)>>> {
+        anyhow::ensure!(xt.rows() >= 1, "shard_predict needs at least one point");
+        let body: Vec<String> = (0..xt.rows())
+            .map(|i| xt.row(i).iter().map(f64::to_string).collect::<Vec<_>>().join(","))
+            .collect();
+        let mut line = String::from("spredict ");
+        if let Some(m) = model {
+            line.push_str(m);
+            line.push(' ');
+        }
+        line.push_str(&format!("{} {}", xt.rows(), body.join(";")));
+        if let Some(f) = filter {
+            anyhow::ensure!(!f.is_empty(), "empty cluster filter");
+            let ids: Vec<String> = f.iter().map(usize::to_string).collect();
+            line.push_str(&format!(" clusters={}", ids.join(",")));
+        }
+        let reply = self.request(&line)?;
+        let rest = Self::expect_ok(&reply)?;
+        let rest = rest
+            .strip_prefix("spreds ")
+            .with_context(|| format!("unexpected reply: {reply}"))?;
+        let mut out = Vec::with_capacity(xt.rows());
+        for group in rest.split(';') {
+            let mut entries = Vec::new();
+            for part in group.split('|') {
+                let (c, mv) = part.split_once(':').context("malformed spreds entry")?;
+                let (m, v) = mv.split_once(',').context("malformed spreds pair")?;
+                entries.push((c.parse()?, m.parse()?, v.parse()?));
+            }
+            out.push(entries);
+        }
+        anyhow::ensure!(
+            out.len() == xt.rows(),
+            "server answered {} rows for {} points",
+            out.len(),
+            xt.rows()
+        );
+        Ok(out)
+    }
+
+    /// Topology handshake (protocol v5 `shardinfo`).
+    pub fn shard_info(&mut self, model: Option<&str>) -> Result<ShardInfo> {
+        let line = match model {
+            Some(m) => format!("shardinfo {m}"),
+            None => "shardinfo".to_string(),
+        };
+        let reply = self.request(&line)?;
+        let rest = Self::expect_ok(&reply)?;
+        let rest = rest
+            .strip_prefix("shard ")
+            .with_context(|| format!("unexpected reply: {reply}"))?;
+        let mut index = None;
+        let mut count = None;
+        let mut k_total = None;
+        let mut dim = None;
+        let mut clusters = None;
+        let mut algo = None;
+        for token in rest.split_whitespace() {
+            if let Some((i, c)) = token.split_once('/') {
+                if index.is_none() && !token.contains('=') {
+                    index = Some(i.parse()?);
+                    count = Some(c.parse()?);
+                    continue;
+                }
+            }
+            if let Some(v) = token.strip_prefix("k=") {
+                k_total = Some(v.parse()?);
+            } else if let Some(v) = token.strip_prefix("d=") {
+                dim = Some(v.parse()?);
+            } else if let Some(v) = token.strip_prefix("clusters=") {
+                let ids: std::result::Result<Vec<usize>, _> =
+                    v.split(',').map(str::parse).collect();
+                clusters = Some(ids.context("malformed cluster list")?);
+            } else if let Some(v) = token.strip_prefix("algo=") {
+                algo = Some(v.to_string());
+            }
+        }
+        Ok(ShardInfo {
+            index: index.context("shardinfo reply missing index")?,
+            count: count.context("shardinfo reply missing count")?,
+            k_total: k_total.context("shardinfo reply missing k")?,
+            dim: dim.context("shardinfo reply missing d")?,
+            clusters: clusters.context("shardinfo reply missing clusters")?,
+            algo: algo.unwrap_or_default(),
+        })
     }
 }
 

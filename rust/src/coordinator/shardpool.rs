@@ -1,0 +1,328 @@
+//! [`ShardPool`]: persistent connections from a scatter-gather
+//! coordinator to its shard workers.
+//!
+//! One [`Client`] per shard, kept open across requests (connection setup
+//! is pure latency on the fan-out path) with per-request socket
+//! deadlines so a dead worker costs one timeout, never a hang. Failure
+//! handling is the pool's whole job:
+//!
+//! * a send/receive error or timeout marks the shard **dead** and the
+//!   in-flight fan-out simply proceeds without it (the caller merges the
+//!   survivors — see
+//!   [`Combiner::merge_partial`][crate::cluster_kriging::Combiner::merge_partial]);
+//! * every degraded merge ticks the pool's `degraded` counter and the
+//!   attached [`ServerMetrics`], so operators see partial answers in
+//!   `stats` instead of silently-wider posteriors;
+//! * a background thread retries the connection with backoff and
+//!   revalidates the worker's `shardinfo` (same clusters, same
+//!   dimension) before marking it alive again — a wrong or restarted-
+//!   with-a-different-artifact worker stays dead.
+
+use crate::coordinator::metrics::ServerMetrics;
+use crate::coordinator::server::Client;
+use crate::distributed::ShardManifest;
+use crate::util::matrix::Matrix;
+use anyhow::{ensure, Context, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+pub struct ShardPoolConfig {
+    /// TCP connect deadline per attempt.
+    pub connect_timeout: Duration,
+    /// Read/write socket deadline per request — the fan-out's worst-case
+    /// added latency when a shard dies mid-response.
+    pub request_timeout: Duration,
+    /// Pause between background reconnection attempts.
+    pub retry_backoff: Duration,
+}
+
+impl Default for ShardPoolConfig {
+    fn default() -> Self {
+        Self {
+            connect_timeout: Duration::from_secs(1),
+            request_timeout: Duration::from_secs(5),
+            retry_backoff: Duration::from_millis(500),
+        }
+    }
+}
+
+struct Endpoint {
+    index: usize,
+    addr: String,
+    expected_clusters: Vec<usize>,
+    conn: Mutex<Option<Client>>,
+    alive: AtomicBool,
+    reconnecting: AtomicBool,
+}
+
+/// Persistent, self-healing connections to one sharded deployment.
+pub struct ShardPool {
+    endpoints: Vec<Arc<Endpoint>>,
+    cfg: ShardPoolConfig,
+    dim: usize,
+    /// Scatter-gather merges that dropped ≥ 1 shard.
+    degraded: AtomicU64,
+    metrics: Mutex<Option<Arc<ServerMetrics>>>,
+}
+
+impl ShardPool {
+    /// Connect to `addrs` (one per shard, in shard-index order) and
+    /// validate each worker's `shardinfo` against the manifest. Workers
+    /// that are down or mismatched at startup are tolerated — marked
+    /// dead with background retries — but at least one must be healthy,
+    /// and a *mismatched* (wrong clusters/dimension) worker is a hard
+    /// error: that is a topology bug, not an outage.
+    pub fn connect(
+        addrs: &[String],
+        manifest: &ShardManifest,
+        cfg: ShardPoolConfig,
+    ) -> Result<Arc<Self>> {
+        ensure!(
+            addrs.len() == manifest.shard_count(),
+            "{} shard addresses for a {}-shard manifest",
+            addrs.len(),
+            manifest.shard_count()
+        );
+        let endpoints: Vec<Arc<Endpoint>> = addrs
+            .iter()
+            .enumerate()
+            .map(|(index, addr)| {
+                Arc::new(Endpoint {
+                    index,
+                    addr: addr.clone(),
+                    expected_clusters: manifest.shards[index].clone(),
+                    conn: Mutex::new(None),
+                    alive: AtomicBool::new(false),
+                    reconnecting: AtomicBool::new(false),
+                })
+            })
+            .collect();
+        let pool = Arc::new(Self {
+            endpoints,
+            cfg,
+            dim: manifest.dim,
+            degraded: AtomicU64::new(0),
+            metrics: Mutex::new(None),
+        });
+        let mut healthy = 0;
+        for i in 0..pool.endpoints.len() {
+            match pool.dial(i) {
+                Ok(mut client) => {
+                    // A *reachable* worker serving the wrong clusters or
+                    // dimension is a topology bug, not an outage — fail
+                    // loudly instead of retrying forever.
+                    pool.validate(i, &mut client).with_context(|| {
+                        format!(
+                            "shard {i} at {} does not match the manifest",
+                            pool.endpoints[i].addr
+                        )
+                    })?;
+                    *pool.endpoints[i].conn.lock().unwrap() = Some(client);
+                    pool.endpoints[i].alive.store(true, Ordering::SeqCst);
+                    healthy += 1;
+                }
+                Err(e) => {
+                    log::warn!(
+                        "shard {i} at {} unavailable at startup ({e:#}); will retry",
+                        pool.endpoints[i].addr
+                    );
+                    pool.schedule_reconnect(i);
+                }
+            }
+        }
+        ensure!(healthy > 0, "no shard worker reachable at startup");
+        Ok(pool)
+    }
+
+    /// Wire the server metrics so degraded merges show up in `stats`.
+    pub fn attach_metrics(&self, metrics: Arc<ServerMetrics>) {
+        *self.metrics.lock().unwrap() = Some(metrics);
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.endpoints.len()
+    }
+
+    /// Liveness snapshot, per shard index.
+    pub fn alive(&self) -> Vec<bool> {
+        self.endpoints.iter().map(|e| e.alive.load(Ordering::SeqCst)).collect()
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.alive().into_iter().filter(|&a| a).count()
+    }
+
+    /// Merges that had to drop ≥ 1 shard, over the pool's lifetime.
+    pub fn degraded_merges(&self) -> u64 {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
+    /// Record one degraded merge (pool counter + attached server
+    /// metrics).
+    pub fn note_degraded(&self) {
+        self.degraded.fetch_add(1, Ordering::Relaxed);
+        if let Some(m) = self.metrics.lock().unwrap().as_ref() {
+            m.record_degraded();
+        }
+    }
+
+    /// Open one worker connection with deadlines (no handshake).
+    fn dial(&self, index: usize) -> Result<Client> {
+        let ep = &self.endpoints[index];
+        let mut client = Client::connect_with_timeout(&ep.addr, self.cfg.connect_timeout)
+            .with_context(|| format!("connecting to shard {index} at {}", ep.addr))?;
+        client.set_timeouts(Some(self.cfg.request_timeout), Some(self.cfg.request_timeout))?;
+        Ok(client)
+    }
+
+    /// `shardinfo` handshake: the worker must serve exactly the manifest's
+    /// cluster set and dimensionality.
+    fn validate(&self, index: usize, client: &mut Client) -> Result<()> {
+        let ep = &self.endpoints[index];
+        let info = client
+            .shard_info(None)
+            .with_context(|| format!("handshaking shard {index} at {}", ep.addr))?;
+        ensure!(
+            info.clusters == ep.expected_clusters,
+            "cluster-set mismatch: shard {index} serves {:?}, manifest expects {:?}",
+            info.clusters,
+            ep.expected_clusters
+        );
+        ensure!(
+            info.dim == self.dim,
+            "dimension mismatch: shard {index} serves d={}, manifest expects d={}",
+            info.dim,
+            self.dim
+        );
+        Ok(())
+    }
+
+    /// Mark a shard dead after a request failure and kick off background
+    /// recovery.
+    fn mark_dead(self: &Arc<Self>, index: usize, why: &anyhow::Error) {
+        let ep = &self.endpoints[index];
+        if ep.alive.swap(false, Ordering::SeqCst) {
+            log::warn!("shard {index} at {} marked dead: {why:#}", ep.addr);
+        }
+        *ep.conn.lock().unwrap() = None;
+        self.schedule_reconnect(index);
+    }
+
+    /// Spawn (at most one) background reconnector for a dead shard. The
+    /// thread holds only a `Weak` pool reference, so dropping the pool
+    /// ends recovery instead of leaking a retry loop forever.
+    fn schedule_reconnect(self: &Arc<Self>, index: usize) {
+        let ep = &self.endpoints[index];
+        if ep.reconnecting.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let weak: Weak<ShardPool> = Arc::downgrade(self);
+        let backoff = self.cfg.retry_backoff;
+        std::thread::spawn(move || loop {
+            std::thread::sleep(backoff);
+            let Some(pool) = weak.upgrade() else { return };
+            let ep = &pool.endpoints[index];
+            // Revalidate on every reconnect: a worker restarted with the
+            // wrong artifact must stay dead, not silently rejoin.
+            match pool.dial(index).and_then(|mut c| {
+                pool.validate(index, &mut c)?;
+                Ok(c)
+            }) {
+                Ok(client) => {
+                    *ep.conn.lock().unwrap() = Some(client);
+                    ep.alive.store(true, Ordering::SeqCst);
+                    ep.reconnecting.store(false, Ordering::SeqCst);
+                    log::info!("shard {index} at {} reconnected", ep.addr);
+                    return;
+                }
+                Err(e) => {
+                    log::debug!("shard {index} reconnect attempt failed: {e:#}");
+                }
+            }
+        });
+    }
+
+    /// `spredict` against one shard. A transport failure marks the shard
+    /// dead (background recovery starts) and surfaces as an error the
+    /// caller treats as "this shard contributed nothing".
+    pub fn shard_predict(
+        self: &Arc<Self>,
+        index: usize,
+        xt: &Matrix,
+        filter: Option<&[usize]>,
+    ) -> Result<Vec<Vec<(usize, f64, f64)>>> {
+        let ep = &self.endpoints[index];
+        let mut guard = ep.conn.lock().unwrap();
+        let client = guard
+            .as_mut()
+            .with_context(|| format!("shard {index} at {} is down", ep.addr))?;
+        match client.shard_predict(None, xt, filter) {
+            Ok(rows) => {
+                ensure!(
+                    rows.len() == xt.rows(),
+                    "shard {index} answered {} rows for {} points",
+                    rows.len(),
+                    xt.rows()
+                );
+                Ok(rows)
+            }
+            Err(e) => {
+                // An `err …` protocol reply is the worker *rejecting* the
+                // request over a healthy, still-in-sync connection (e.g. a
+                // hot-swapped slot that transiently lost its cluster
+                // decomposition) — this fan-out proceeds without the
+                // shard, but the connection is NOT an outage. Only
+                // transport-level failures (closed/timed-out socket,
+                // garbled reply) poison the shard.
+                if e.to_string().contains("server error:") {
+                    Err(e.context(format!("shard {index} rejected the request")))
+                } else {
+                    drop(guard);
+                    self.mark_dead(index, &e);
+                    Err(e.context(format!("shard {index} at {} failed", ep.addr)))
+                }
+            }
+        }
+    }
+
+    /// Fan one batch out to every live shard concurrently; `None` marks
+    /// a shard that was dead or failed mid-request (and is now
+    /// recovering in the background).
+    pub fn scatter(self: &Arc<Self>, xt: &Matrix) -> Vec<Option<Vec<Vec<(usize, f64, f64)>>>> {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..self.endpoints.len())
+                .map(|i| scope.spawn(move || self.shard_predict(i, xt, None).ok()))
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("scatter worker panicked")).collect()
+        })
+    }
+
+    /// Forward a group of observations to one shard (protocol v3
+    /// `observeb` on the worker). Returns how many the worker absorbed.
+    pub fn observe_rows(self: &Arc<Self>, index: usize, xs: &Matrix, ys: &[f64]) -> Result<usize> {
+        let ep = &self.endpoints[index];
+        let mut guard = ep.conn.lock().unwrap();
+        let client = guard
+            .as_mut()
+            .with_context(|| format!("shard {index} at {} is down", ep.addr))?;
+        let points: Vec<&[f64]> = (0..xs.rows()).map(|i| xs.row(i)).collect();
+        match client.observe_batch(None, &points, ys) {
+            Ok(n) => Ok(n),
+            Err(e) => {
+                // An `err …` protocol reply is the worker *rejecting* the
+                // batch (shape, capability) over a healthy connection;
+                // only transport-level failures (closed/timed-out socket,
+                // garbled reply) poison the shard.
+                if e.to_string().contains("server error:") {
+                    Err(e.context(format!("shard {index} rejected observations")))
+                } else {
+                    drop(guard);
+                    self.mark_dead(index, &e);
+                    Err(e.context(format!("shard {index} at {} failed", ep.addr)))
+                }
+            }
+        }
+    }
+}

@@ -113,6 +113,25 @@ impl Standardizer {
         Self { x_mean, x_std, y_mean, y_std }
     }
 
+    /// Standardize query features only — one output matrix, no Dataset /
+    /// target-vector detour. Sits on the serving hot path (raw-unit
+    /// queries against standardized-unit models: [`Standardized`]
+    /// wrappers and the distributed coordinator's routing).
+    ///
+    /// [`Standardized`]: crate::surrogate::Standardized
+    pub fn transform_x(&self, xt: &Matrix) -> Matrix {
+        let (n, d) = xt.shape();
+        let mut out = Matrix::zeros(n, d);
+        for i in 0..n {
+            let src = xt.row(i);
+            let dst = out.row_mut(i);
+            for j in 0..d {
+                dst[j] = (src[j] - self.x_mean[j]) / self.x_std[j];
+            }
+        }
+        out
+    }
+
     /// Standardize a dataset (z-score features and target).
     pub fn transform(&self, ds: &Dataset) -> Dataset {
         let (n, d) = ds.x.shape();

@@ -1,0 +1,85 @@
+//! Distributed cluster serving: shard a fitted Cluster Kriging ensemble
+//! across worker processes and serve it through a scatter-gather
+//! coordinator.
+//!
+//! The paper's decomposition is the whole story here: a k-cluster model
+//! is k independent Kriging posteriors plus an **associative** merge —
+//! both the inverse-variance optimal weighting (Eq. 12) and the
+//! membership mixture (Eq. 15–16) reduce per-cluster `(mean, variance)`
+//! pairs, so the merge works just as well over a network as over a
+//! `Vec<ClusterPrediction>` (the "aggregate submodel posteriors" view
+//! that Nested Kriging formalizes). One `ckrig serve` process is bounded
+//! by one machine; k clusters are embarrassingly shardable:
+//!
+//! ```text
+//!                       predictb (client)
+//!                             │
+//!                  ┌──────────▼──────────┐
+//!                  │ coordinator          │  ShardManifest: Membership,
+//!                  │ (ShardedClusterKriging│  Combiner, shard→cluster map
+//!                  │  + ShardPool)        │
+//!                  └──┬───────┬───────┬──┘
+//!             spredict│       │       │        (protocol v5, persistent
+//!                  ┌──▼──┐ ┌──▼──┐ ┌──▼──┐      connections, deadlines)
+//!                  │shard│ │shard│ │shard│    each: ClusterShard artifact
+//!                  │  0  │ │  1  │ │  2  │    = its clusters' Kriging
+//!                  └─────┘ └─────┘ └─────┘      models + the full oracle
+//! ```
+//!
+//! * [`ClusterShard`] — one worker's slice of the ensemble: a subset of
+//!   the per-cluster models plus the **full** serialized
+//!   [`crate::cluster_kriging::Membership`], so any node can route. It is
+//!   a first-class [`crate::kriging::Surrogate`] (TAG_SHARD artifacts,
+//!   observable, servable standalone) whose `spredict` answers carry raw,
+//!   *uncombined* [`crate::cluster_kriging::ClusterPrediction`]s.
+//! * [`ShardManifest`] — the coordinator's topology + routing state:
+//!   shard→cluster assignment, combiner, routing oracle, and the
+//!   training-fold standardizer when shards are raw-unit wrapped.
+//! * [`ShardedClusterKriging`] — the coordinator-side model: fans a
+//!   batch out over a [`crate::coordinator::ShardPool`], merges partial
+//!   posteriors through [`crate::cluster_kriging::Combiner::merge_partial`]
+//!   (the exact in-process weight math), and degrades gracefully — a
+//!   dead or timed-out shard is dropped from the merge with the
+//!   survivors' weights renormalized, a `stats`-visible `degraded`
+//!   counter ticks, and reconnection retries in the background.
+//!   Observations route to the owning shard via `Membership::route`.
+//! * [`split_artifact`] — the `ckrig shard` tool: split a fitted
+//!   ClusterKriging (or Standardized-wrapped) artifact into per-shard
+//!   artifacts + a manifest.
+
+pub mod shard;
+pub mod sharded;
+
+pub use shard::{split_artifact, ClusterShard, ShardManifest, SplitOutput};
+pub use sharded::ShardedClusterKriging;
+
+use crate::util::matrix::Matrix;
+
+/// Raw per-cluster posterior access — what a shard worker serves over
+/// protocol v5 `spredict` and a scatter-gather coordinator merges.
+/// Implemented by [`ClusterShard`] (its owned subset), by
+/// [`crate::cluster_kriging::ClusterKriging`] (all clusters — the
+/// one-shard topology and the equivalence reference), and forwarded by
+/// the serving wrappers ([`crate::surrogate::Standardized`],
+/// [`crate::online::OnlineModel`]).
+pub trait ShardPredictor: Send + Sync {
+    /// Global cluster ids this predictor answers for, ascending.
+    fn cluster_ids(&self) -> Vec<usize>;
+
+    /// Total cluster count of the (pre-split) ensemble.
+    fn k_total(&self) -> usize;
+
+    /// `(shard_index, shard_count)` for a true shard; `None` for a
+    /// monolithic ensemble serving all clusters.
+    fn shard_index(&self) -> Option<(usize, usize)>;
+
+    /// Per-row raw posteriors: for each row of `xt`, the
+    /// `(global_cluster_id, mean, variance)` triple of every owned
+    /// cluster — restricted to `filter` when given — in ascending
+    /// cluster-id order. Errors when `filter` selects no owned cluster.
+    fn predict_clusters(
+        &self,
+        xt: &Matrix,
+        filter: Option<&[usize]>,
+    ) -> anyhow::Result<Vec<Vec<(usize, f64, f64)>>>;
+}

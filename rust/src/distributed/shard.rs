@@ -1,0 +1,804 @@
+//! Shard artifacts: splitting a fitted [`ClusterKriging`] into
+//! per-worker [`ClusterShard`]s plus a coordinator [`ShardManifest`].
+//!
+//! A shard is a *complete, servable model*: its slice of the per-cluster
+//! Kriging models (factors included) plus the **full** routing oracle,
+//! so any node can route an observation to the owning cluster and a
+//! shard server can answer standalone predictions (partially, over its
+//! own clusters) if asked directly. Both artifact kinds reuse the CKRG
+//! container (v3): `TAG_SHARD` loads back through the one
+//! [`crate::surrogate::SurrogateSpec::load`] dispatch like every other
+//! model, `TAG_SHARD_MANIFEST` is deliberately *not* servable and loads
+//! through [`ShardManifest::load`] only.
+//!
+//! Cluster→shard assignment is round-robin (`cluster c → shard c mod S`),
+//! so cluster sizes balance without a packing pass and ownership is
+//! computable from the id alone.
+
+use crate::cluster_kriging::combiner::ClusterPrediction;
+use crate::cluster_kriging::model::dedup_snapshot;
+use crate::cluster_kriging::{ClusterKriging, Combiner, Membership};
+use crate::data::Standardizer;
+use crate::distributed::ShardPredictor;
+use crate::kriging::{OrdinaryKriging, Prediction, Surrogate};
+use crate::surrogate::artifact;
+use crate::util::binio::{BinReader, BinWriter};
+use crate::util::matrix::Matrix;
+use crate::util::threadpool::{default_workers, scoped_map};
+use anyhow::{bail, ensure, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One worker's slice of a split Cluster Kriging ensemble.
+pub struct ClusterShard {
+    shard_index: usize,
+    shard_count: usize,
+    /// Global cluster ids owned by this shard, ascending; parallel to
+    /// `models`.
+    cluster_ids: Vec<usize>,
+    models: Vec<OrdinaryKriging>,
+    membership: Membership,
+    combiner: Combiner,
+    flavor: String,
+    /// Cached display name ("OWCK[2/4]").
+    name: String,
+    dim: usize,
+    k_total: usize,
+    /// Per-owned-cluster training sizes (diagnostics).
+    pub cluster_sizes: Vec<usize>,
+}
+
+impl ClusterShard {
+    /// Split a fitted ensemble into `shard_count` shards, round-robin by
+    /// cluster id. Each shard receives its own deep copy of the routing
+    /// oracle. Shard workers then serve one shard each; the matching
+    /// [`ShardManifest`] (built **before** this consumes the model) is
+    /// what a coordinator boots from.
+    pub fn split(model: ClusterKriging, shard_count: usize) -> Result<Vec<ClusterShard>> {
+        let k = model.k();
+        ensure!(shard_count >= 1, "shard count must be ≥ 1");
+        ensure!(
+            shard_count <= k,
+            "cannot split {k} clusters across {shard_count} shards (empty shards)"
+        );
+        let (models, membership, combiner, flavor, dim, cluster_sizes) = model.into_parts();
+        let mut per_shard: Vec<(Vec<usize>, Vec<OrdinaryKriging>, Vec<usize>)> =
+            (0..shard_count).map(|_| (Vec::new(), Vec::new(), Vec::new())).collect();
+        for (ci, m) in models.into_iter().enumerate() {
+            let s = ci % shard_count;
+            per_shard[s].0.push(ci);
+            per_shard[s].1.push(m);
+            per_shard[s].2.push(cluster_sizes[ci]);
+        }
+        let mut shards = Vec::with_capacity(shard_count);
+        for (s, (cluster_ids, models, cluster_sizes)) in per_shard.into_iter().enumerate() {
+            // Every shard carries a bit-identical deep copy of the full
+            // routing oracle — "any node can route".
+            let membership = membership.deep_clone();
+            shards.push(ClusterShard {
+                shard_index: s,
+                shard_count,
+                name: format!("{flavor}[{s}/{shard_count}]"),
+                cluster_ids,
+                models,
+                membership,
+                combiner,
+                flavor: flavor.clone(),
+                dim,
+                k_total: k,
+                cluster_sizes,
+            });
+        }
+        Ok(shards)
+    }
+
+    pub fn shard(&self) -> (usize, usize) {
+        (self.shard_index, self.shard_count)
+    }
+
+    pub fn owned_clusters(&self) -> &[usize] {
+        &self.cluster_ids
+    }
+
+    pub fn k_total(&self) -> usize {
+        self.k_total
+    }
+
+    pub fn flavor(&self) -> &str {
+        &self.flavor
+    }
+
+    /// Absorb one observation into the owned cluster `Membership::route`
+    /// picks — identical arithmetic to
+    /// [`ClusterKriging::observe_point`], restricted to ownership: a
+    /// point routed to a cluster another shard owns is a recoverable
+    /// error naming the owner, so a coordinator (or operator) can
+    /// redirect it.
+    pub fn observe_point(&mut self, x: &[f64], y: f64) -> Result<()> {
+        if x.len() != self.dim {
+            bail!("observe: point has {} dims, shard expects {}", x.len(), self.dim);
+        }
+        let routed = self.membership.route(x).min(self.k_total - 1);
+        match self.cluster_ids.binary_search(&routed) {
+            Ok(pos) => {
+                self.models[pos]
+                    .observe_point(x, y)
+                    .with_context(|| format!("cluster {routed} observe failed"))?;
+                self.cluster_sizes[pos] += 1;
+                Ok(())
+            }
+            Err(_) => bail!(
+                "point routes to cluster {routed}, owned by shard {} (this is shard {}/{})",
+                routed % self.shard_count,
+                self.shard_index,
+                self.shard_count
+            ),
+        }
+    }
+
+    pub(crate) fn write_artifact(&self, w: &mut BinWriter) {
+        w.put_str(&self.flavor);
+        w.put_u8(match self.combiner {
+            Combiner::OptimalWeights => 0,
+            Combiner::MembershipMixture => 1,
+            Combiner::SingleModel => 2,
+        });
+        w.put_usize(self.dim);
+        w.put_usize(self.k_total);
+        w.put_usize(self.shard_index);
+        w.put_usize(self.shard_count);
+        w.put_usize_slice(&self.cluster_ids);
+        w.put_usize_slice(&self.cluster_sizes);
+        w.put_usize(self.models.len());
+        for m in &self.models {
+            m.write_artifact(w);
+        }
+        self.membership.write_artifact(w);
+    }
+
+    pub(crate) fn read_artifact(r: &mut BinReader<'_>, version: u32) -> Result<Self> {
+        let flavor = r.get_str()?;
+        let combiner = match r.get_u8()? {
+            0 => Combiner::OptimalWeights,
+            1 => Combiner::MembershipMixture,
+            2 => Combiner::SingleModel,
+            other => bail!("unknown combiner tag {other}"),
+        };
+        let dim = r.get_usize()?;
+        let k_total = r.get_usize()?;
+        let shard_index = r.get_usize()?;
+        let shard_count = r.get_usize()?;
+        let cluster_ids = r.get_usize_vec()?;
+        let cluster_sizes = r.get_usize_vec()?;
+        let n_models = r.get_usize()?;
+        ensure!(
+            shard_count >= 1 && shard_index < shard_count,
+            "shard artifact index {shard_index} out of range for {shard_count} shards"
+        );
+        ensure!(
+            n_models == cluster_ids.len() && n_models == cluster_sizes.len() && n_models >= 1,
+            "shard artifact model/cluster-id count mismatch"
+        );
+        ensure!(
+            cluster_ids.windows(2).all(|w| w[0] < w[1])
+                && cluster_ids.iter().all(|&c| c < k_total),
+            "shard artifact cluster ids not ascending in 0..{k_total}"
+        );
+        let mut models = Vec::with_capacity(n_models);
+        for _ in 0..n_models {
+            let m = OrdinaryKriging::read_artifact(r, version)?;
+            ensure!(
+                crate::kriging::Surrogate::dim(&m) == dim,
+                "per-cluster model dimension disagrees with shard"
+            );
+            models.push(m);
+        }
+        let membership = Membership::read_artifact(r)?;
+        Ok(Self {
+            name: format!("{flavor}[{shard_index}/{shard_count}]"),
+            shard_index,
+            shard_count,
+            cluster_ids,
+            models,
+            membership,
+            combiner,
+            flavor,
+            dim,
+            k_total,
+            cluster_sizes,
+        })
+    }
+}
+
+/// Per-row raw posteriors for a subset of a cluster set: every model in
+/// `models` (global ids in `ids`, ascending, selected down to `filter`)
+/// batch-predicts the whole `xt` in parallel — the same
+/// one-worker-per-model arithmetic as the in-process weighted predict
+/// path, so a scatter-gather merge reproduces it bit for bit.
+fn predict_cluster_subset(
+    models: &[OrdinaryKriging],
+    ids: &[usize],
+    xt: &Matrix,
+    filter: Option<&[usize]>,
+) -> Result<Vec<Vec<(usize, f64, f64)>>> {
+    let selected: Vec<usize> = match filter {
+        None => (0..models.len()).collect(),
+        Some(f) => (0..models.len()).filter(|&i| f.contains(&ids[i])).collect(),
+    };
+    ensure!(
+        !selected.is_empty(),
+        "no requested cluster is owned here (owned {:?}, requested {:?})",
+        ids,
+        filter.unwrap_or(&[])
+    );
+    let per_model: Vec<Result<Prediction>> = scoped_map(&selected, default_workers(), |_, &i| {
+        // One assembly worker per model: the map above already
+        // parallelizes across the selected models.
+        models[i]
+            .predict_with_workers(xt, 1)
+            .with_context(|| format!("cluster {} predict failed", ids[i]))
+    });
+    let mut out = vec![Vec::with_capacity(selected.len()); xt.rows()];
+    for (slot, pred) in selected.iter().zip(per_model) {
+        let pred = pred?;
+        for (row, entries) in out.iter_mut().enumerate() {
+            entries.push((ids[*slot], pred.mean[row], pred.variance[row]));
+        }
+    }
+    Ok(out)
+}
+
+impl ShardPredictor for ClusterShard {
+    fn cluster_ids(&self) -> Vec<usize> {
+        self.cluster_ids.clone()
+    }
+
+    fn k_total(&self) -> usize {
+        self.k_total
+    }
+
+    fn shard_index(&self) -> Option<(usize, usize)> {
+        Some((self.shard_index, self.shard_count))
+    }
+
+    fn predict_clusters(
+        &self,
+        xt: &Matrix,
+        filter: Option<&[usize]>,
+    ) -> Result<Vec<Vec<(usize, f64, f64)>>> {
+        ensure!(
+            xt.cols() == self.dim,
+            "spredict: points have {} dims, shard expects {}",
+            xt.cols(),
+            self.dim
+        );
+        predict_cluster_subset(&self.models, &self.cluster_ids, xt, filter)
+    }
+}
+
+impl ShardPredictor for ClusterKriging {
+    fn cluster_ids(&self) -> Vec<usize> {
+        (0..self.k()).collect()
+    }
+
+    fn k_total(&self) -> usize {
+        self.k()
+    }
+
+    fn shard_index(&self) -> Option<(usize, usize)> {
+        None
+    }
+
+    fn predict_clusters(
+        &self,
+        xt: &Matrix,
+        filter: Option<&[usize]>,
+    ) -> Result<Vec<Vec<(usize, f64, f64)>>> {
+        ensure!(
+            xt.cols() == crate::kriging::Surrogate::dim(self),
+            "spredict: points have {} dims, model expects {}",
+            xt.cols(),
+            crate::kriging::Surrogate::dim(self)
+        );
+        let ids: Vec<usize> = (0..self.k()).collect();
+        predict_cluster_subset(self.models(), &ids, xt, filter)
+    }
+}
+
+impl Surrogate for ClusterShard {
+    fn predict(&self, xt: &Matrix) -> Result<Prediction> {
+        let mut mean = vec![0.0; xt.rows()];
+        let mut variance = vec![0.0; xt.rows()];
+        self.predict_into(xt, &mut mean, &mut variance)?;
+        Ok(Prediction { mean, variance })
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Standalone shard predictions merge the *owned* posteriors with
+    /// renormalized weights — an honest partial view (exactly what a
+    /// degraded coordinator would compute from this shard alone).
+    fn predict_into(&self, xt: &Matrix, mean: &mut [f64], variance: &mut [f64]) -> Result<()> {
+        let partials = self.predict_clusters(xt, None)?;
+        for (i, entries) in partials.iter().enumerate() {
+            let preds: Vec<ClusterPrediction> = entries
+                .iter()
+                .map(|&(_, m, v)| ClusterPrediction { mean: m, variance: v })
+                .collect();
+            let weights = self.membership.weights(xt.row(i), self.k_total);
+            let routed = self.membership.route(xt.row(i)).min(self.k_total - 1);
+            let out = self.combiner.merge_partial(&preds, &self.cluster_ids, &weights, routed);
+            mean[i] = out.mean;
+            variance[i] = out.variance;
+        }
+        Ok(())
+    }
+
+    fn shard_predictor(&self) -> Option<&dyn ShardPredictor> {
+        Some(self)
+    }
+
+    fn as_online(&self) -> Option<&dyn crate::online::OnlineSurrogate> {
+        Some(self)
+    }
+
+    fn as_online_mut(&mut self) -> Option<&mut dyn crate::online::OnlineSurrogate> {
+        Some(self)
+    }
+
+    fn save(&self, w: &mut dyn std::io::Write) -> Result<()> {
+        let mut payload = BinWriter::new();
+        self.write_artifact(&mut payload);
+        artifact::write_model(w, artifact::TAG_SHARD, &payload.into_bytes())
+    }
+}
+
+impl crate::online::OnlineSurrogate for ClusterShard {
+    fn observe(&mut self, x: &[f64], y: f64) -> Result<()> {
+        self.observe_point(x, y)
+    }
+
+    fn training_snapshot(&self) -> (Matrix, Vec<f64>) {
+        dedup_snapshot(&self.models, self.dim)
+    }
+}
+
+/// Coordinator-side topology + routing state for one sharded ensemble.
+pub struct ShardManifest {
+    pub flavor: String,
+    pub combiner: Combiner,
+    pub dim: usize,
+    pub k_total: usize,
+    /// Cluster ids per shard index (round-robin assignment).
+    pub shards: Vec<Vec<usize>>,
+    pub membership: Membership,
+    /// Present when the shard artifacts are [`Standardized`]-wrapped: the
+    /// routing oracle lives in fit (standardized) units, so the
+    /// coordinator standardizes a raw-unit query before routing; the
+    /// shards' answers already come back in raw units.
+    pub standardizer: Option<Standardizer>,
+}
+
+impl ShardManifest {
+    /// Build the manifest for splitting `model` into `shard_count`
+    /// shards. Call **before** [`ClusterShard::split`] consumes the
+    /// model; the round-robin assignment here is the one `split` applies.
+    pub fn from_model(
+        model: &ClusterKriging,
+        shard_count: usize,
+        standardizer: Option<Standardizer>,
+    ) -> Result<Self> {
+        let k = model.k();
+        ensure!(
+            shard_count >= 1 && shard_count <= k,
+            "cannot split {k} clusters across {shard_count} shards"
+        );
+        if let Some(s) = &standardizer {
+            ensure!(
+                s.x_mean.len() == crate::kriging::Surrogate::dim(model),
+                "standardizer/model dimension mismatch"
+            );
+        }
+        let mut shards = vec![Vec::new(); shard_count];
+        for c in 0..k {
+            shards[c % shard_count].push(c);
+        }
+        Ok(Self {
+            flavor: model.flavor().to_string(),
+            combiner: model.combiner(),
+            dim: crate::kriging::Surrogate::dim(model),
+            k_total: k,
+            shards,
+            membership: model.membership().deep_clone(),
+            standardizer,
+        })
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard index owning a global cluster id (round-robin).
+    pub fn owner_of(&self, cluster: usize) -> usize {
+        cluster % self.shards.len()
+    }
+
+    pub fn save(&self, w: &mut dyn std::io::Write) -> Result<()> {
+        let mut p = BinWriter::new();
+        p.put_str(&self.flavor);
+        p.put_u8(match self.combiner {
+            Combiner::OptimalWeights => 0,
+            Combiner::MembershipMixture => 1,
+            Combiner::SingleModel => 2,
+        });
+        p.put_usize(self.dim);
+        p.put_usize(self.k_total);
+        p.put_usize(self.shards.len());
+        for s in &self.shards {
+            p.put_usize_slice(s);
+        }
+        self.membership.write_artifact(&mut p);
+        match &self.standardizer {
+            None => p.put_bool(false),
+            Some(s) => {
+                p.put_bool(true);
+                p.put_f64_slice(&s.x_mean);
+                p.put_f64_slice(&s.x_std);
+                p.put_f64(s.y_mean);
+                p.put_f64(s.y_std);
+            }
+        }
+        artifact::write_model(w, artifact::TAG_SHARD_MANIFEST, &p.into_bytes())
+    }
+
+    pub fn save_to_path(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating manifest {}", path.display()))?;
+        let mut w = std::io::BufWriter::new(file);
+        self.save(&mut w)?;
+        use std::io::Write as _;
+        Ok(w.flush()?)
+    }
+
+    pub fn load(mut r: impl std::io::Read) -> Result<Self> {
+        let (_version, tag, payload) = artifact::read_model(&mut r)?;
+        ensure!(
+            tag == artifact::TAG_SHARD_MANIFEST,
+            "not a shard manifest (found a {} artifact)",
+            artifact::tag_name(tag)
+        );
+        let mut p = BinReader::new(&payload);
+        let flavor = p.get_str()?;
+        let combiner = match p.get_u8()? {
+            0 => Combiner::OptimalWeights,
+            1 => Combiner::MembershipMixture,
+            2 => Combiner::SingleModel,
+            other => bail!("unknown combiner tag {other}"),
+        };
+        let dim = p.get_usize()?;
+        let k_total = p.get_usize()?;
+        let shard_count = p.get_usize()?;
+        ensure!(
+            shard_count >= 1 && shard_count <= k_total && k_total >= 1,
+            "manifest topology inconsistent ({shard_count} shards, {k_total} clusters)"
+        );
+        let mut shards = Vec::with_capacity(shard_count);
+        for _ in 0..shard_count {
+            shards.push(p.get_usize_vec()?);
+        }
+        let mut seen = vec![false; k_total];
+        for (s, ids) in shards.iter().enumerate() {
+            for &c in ids {
+                ensure!(c < k_total && !seen[c], "manifest shard {s} repeats cluster {c}");
+                seen[c] = true;
+            }
+        }
+        ensure!(seen.iter().all(|&s| s), "manifest does not cover every cluster");
+        let membership = Membership::read_artifact(&mut p)?;
+        let standardizer = if p.get_bool()? {
+            let x_mean = p.get_f64_vec()?;
+            let x_std = p.get_f64_vec()?;
+            let y_mean = p.get_f64()?;
+            let y_std = p.get_f64()?;
+            ensure!(
+                x_mean.len() == dim && x_std.len() == dim,
+                "manifest standardizer dimension mismatch"
+            );
+            Some(Standardizer { x_mean, x_std, y_mean, y_std })
+        } else {
+            None
+        };
+        Ok(Self { flavor, combiner, dim, k_total, shards, membership, standardizer })
+    }
+
+    pub fn load_path(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("opening manifest {}", path.display()))?;
+        Self::load(std::io::BufReader::new(file))
+            .with_context(|| format!("loading manifest {}", path.display()))
+    }
+}
+
+/// What [`split_artifact`] wrote.
+pub struct SplitOutput {
+    pub manifest_path: PathBuf,
+    pub shard_paths: Vec<PathBuf>,
+    /// Cluster ids per shard, in shard-index order.
+    pub assignment: Vec<Vec<usize>>,
+}
+
+/// The `ckrig shard` tool: split a fitted Cluster Kriging artifact
+/// (plain, or [`Standardized`]-wrapped as `ckrig fit` writes them) into
+/// `shard_count` per-worker shard artifacts plus a coordinator manifest
+/// under `out_dir`. Standardized inputs yield Standardized-wrapped
+/// shards (each carries the standardizer copy) and a manifest that
+/// standardizes before routing — raw-unit queries stay raw-unit end to
+/// end.
+pub fn split_artifact(
+    path: impl AsRef<Path>,
+    shard_count: usize,
+    out_dir: impl AsRef<Path>,
+) -> Result<SplitOutput> {
+    use crate::surrogate::Standardized;
+    let path = path.as_ref();
+    let out_dir = out_dir.as_ref();
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening artifact {}", path.display()))?;
+    let (version, tag, payload) = artifact::read_model(&mut std::io::BufReader::new(file))
+        .with_context(|| format!("reading artifact {}", path.display()))?;
+
+    let (model, standardizer) = match tag {
+        artifact::TAG_CLUSTER_KRIGING => {
+            (ClusterKriging::read_artifact(&mut BinReader::new(&payload), version)?, None)
+        }
+        artifact::TAG_STANDARDIZED => {
+            let mut r = BinReader::new(&payload);
+            let (std, nested) = Standardized::read_parts(&mut r)?;
+            let (nested_version, nested_tag, nested_payload) =
+                artifact::read_model(&mut std::io::Cursor::new(nested))?;
+            ensure!(
+                nested_tag == artifact::TAG_CLUSTER_KRIGING,
+                "only Cluster Kriging artifacts can be sharded; this Standardized artifact \
+                 wraps a {} model",
+                artifact::tag_name(nested_tag)
+            );
+            let mut nested_reader = BinReader::new(&nested_payload);
+            let ck = ClusterKriging::read_artifact(&mut nested_reader, nested_version)?;
+            (ck, Some(std))
+        }
+        other => bail!(
+            "only Cluster Kriging artifacts can be sharded (found a {} artifact)",
+            artifact::tag_name(other)
+        ),
+    };
+
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    let manifest = ShardManifest::from_model(&model, shard_count, standardizer.clone())?;
+    let assignment = manifest.shards.clone();
+    let shards = ClusterShard::split(model, shard_count)?;
+    let mut shard_paths = Vec::with_capacity(shards.len());
+    for shard in shards {
+        let (idx, _) = shard.shard();
+        let shard_path = out_dir.join(format!("shard-{idx}.ck"));
+        let model: Box<dyn Surrogate> = match &standardizer {
+            Some(std) => Box::new(Standardized::new(Box::new(shard), std.clone())),
+            None => Box::new(shard),
+        };
+        crate::surrogate::save_to_path(model.as_ref(), &shard_path)?;
+        shard_paths.push(shard_path);
+    }
+    let manifest_path = out_dir.join("manifest.ck");
+    manifest.save_to_path(&manifest_path)?;
+    Ok(SplitOutput { manifest_path, shard_paths, assignment })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster_kriging::builder;
+    use crate::kriging::hyperopt::NuggetMode;
+    use crate::kriging::HyperOpt;
+    use crate::util::proptest::gen_matrix;
+    use crate::util::rng::Rng;
+
+    fn fitted(flavor: &str, k: usize, n: usize, seed: u64) -> (ClusterKriging, Matrix) {
+        let mut rng = Rng::new(seed);
+        let x = gen_matrix(&mut rng, n, 2, -3.0, 3.0);
+        let y: Vec<f64> =
+            (0..n).map(|i| x.row(i)[0].sin() + 0.3 * x.row(i)[1] * x.row(i)[1]).collect();
+        let opt = HyperOpt {
+            restarts: 1,
+            max_evals: 10,
+            isotropic: true,
+            nugget: NuggetMode::Fixed(1e-8),
+            ..HyperOpt::default()
+        };
+        let cfg = builder::flavor(flavor, k, seed, opt).unwrap();
+        let model = ClusterKriging::fit(&x, &y, cfg).unwrap();
+        let probe = gen_matrix(&mut rng, 16, 2, -3.0, 3.0);
+        (model, probe)
+    }
+
+    #[test]
+    fn split_covers_all_clusters_round_robin() {
+        let (model, _) = fitted("OWCK", 5, 120, 1);
+        let k = model.k();
+        let shards = ClusterShard::split(model, 2).unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].owned_clusters(), &[0, 2, 4]);
+        assert_eq!(shards[1].owned_clusters(), &[1, 3]);
+        for s in &shards {
+            assert_eq!(s.k_total(), k);
+        }
+        // Splitting into more shards than clusters is rejected.
+        let (model, _) = fitted("OWCK", 2, 80, 2);
+        assert!(ClusterShard::split(model, 3).is_err());
+    }
+
+    #[test]
+    fn shard_partials_match_monolithic_models() {
+        let (model, probe) = fitted("OWCK", 4, 120, 3);
+        // Reference: the monolithic ensemble's own raw per-cluster view.
+        let reference = model.predict_clusters(&probe, None).unwrap();
+        let shards = {
+            let (m2, _) = fitted("OWCK", 4, 120, 3); // identical fit (same seed)
+            ClusterShard::split(m2, 2).unwrap()
+        };
+        for shard in &shards {
+            let partials = shard.predict_clusters(&probe, None).unwrap();
+            for (row, entries) in partials.iter().enumerate() {
+                for &(cid, mean, var) in entries {
+                    let (_, rm, rv) = reference[row]
+                        .iter()
+                        .copied()
+                        .find(|&(c, _, _)| c == cid)
+                        .expect("reference covers every cluster");
+                    assert_eq!(mean.to_bits(), rm.to_bits(), "row {row} cluster {cid} mean");
+                    assert_eq!(var.to_bits(), rv.to_bits(), "row {row} cluster {cid} var");
+                }
+            }
+        }
+        // The cluster filter narrows the answer to the requested subset.
+        let only = shards[0].owned_clusters()[0];
+        let filtered = shards[0].predict_clusters(&probe, Some(&[only])).unwrap();
+        assert!(filtered.iter().all(|e| e.len() == 1 && e[0].0 == only));
+        // Filtering for a cluster the shard doesn't own is an error.
+        let foreign = shards[1].owned_clusters()[0];
+        assert!(shards[0].predict_clusters(&probe, Some(&[foreign])).is_err());
+    }
+
+    #[test]
+    fn shard_artifact_roundtrips_bit_identically() {
+        let (model, probe) = fitted("MTCK", 4, 100, 5);
+        let shards = ClusterShard::split(model, 2).unwrap();
+        for shard in shards {
+            let before = shard.predict_clusters(&probe, None).unwrap();
+            let mut bytes = Vec::new();
+            shard.save(&mut bytes).unwrap();
+            let loaded = crate::surrogate::SurrogateSpec::load(bytes.as_slice()).unwrap();
+            let sp = loaded.shard_predictor().expect("loaded shard keeps spredict");
+            assert_eq!(sp.shard_index(), shard.shard_index());
+            assert_eq!(sp.cluster_ids(), shard.owned_clusters());
+            assert_eq!(sp.k_total(), shard.k_total());
+            let after = sp.predict_clusters(&probe, None).unwrap();
+            for (a, b) in before.iter().zip(&after) {
+                for (&(ca, ma, va), &(cb, mb, vb)) in a.iter().zip(b) {
+                    assert_eq!(ca, cb);
+                    assert_eq!(ma.to_bits(), mb.to_bits());
+                    assert_eq!(va.to_bits(), vb.to_bits());
+                }
+            }
+            // And it stays observable through the generic online path.
+            let mut loaded = loaded;
+            assert!(loaded.as_online_mut().is_some());
+        }
+    }
+
+    #[test]
+    fn shard_observe_routes_and_rejects_foreign_points() {
+        let (model, _) = fitted("OWCK", 4, 120, 7);
+        let mut rng = Rng::new(8);
+        // Each shard owns exactly one cluster; across many probes every
+        // point must be accepted by exactly one shard, mentioning the
+        // owner in the other shards' errors.
+        let mut shards = ClusterShard::split(model, 4).unwrap();
+        for _ in 0..20 {
+            let p = [rng.uniform_in(-3.0, 3.0), rng.uniform_in(-3.0, 3.0)];
+            let mut accepted = 0;
+            for s in shards.iter_mut() {
+                match s.observe_point(&p, 0.5) {
+                    Ok(()) => accepted += 1,
+                    Err(e) => {
+                        assert!(e.to_string().contains("owned by shard"), "{e:#}")
+                    }
+                }
+            }
+            assert_eq!(accepted, 1, "each point must have exactly one owner");
+        }
+        // Dimension mismatch is recoverable.
+        assert!(shards[0].observe_point(&[1.0], 0.0).is_err());
+    }
+
+    #[test]
+    fn manifest_roundtrips_and_validates() {
+        let (model, probe) = fitted("GMMCK", 3, 100, 9);
+        let manifest = ShardManifest::from_model(&model, 2, None).unwrap();
+        assert_eq!(manifest.shards, vec![vec![0, 2], vec![1]]);
+        assert_eq!(manifest.owner_of(2), 0);
+        let mut bytes = Vec::new();
+        manifest.save(&mut bytes).unwrap();
+        let back = ShardManifest::load(bytes.as_slice()).unwrap();
+        assert_eq!(back.flavor, manifest.flavor);
+        assert_eq!(back.combiner, manifest.combiner);
+        assert_eq!(back.k_total, manifest.k_total);
+        assert_eq!(back.shards, manifest.shards);
+        assert!(back.standardizer.is_none());
+        // The routing oracle survives bit-identically.
+        for i in 0..probe.rows() {
+            let x = probe.row(i);
+            assert_eq!(back.membership.route(x), manifest.membership.route(x));
+            let a = back.membership.weights(x, back.k_total);
+            let b = manifest.membership.weights(x, manifest.k_total);
+            for (wa, wb) in a.iter().zip(&b) {
+                assert_eq!(wa.to_bits(), wb.to_bits());
+            }
+        }
+        // A manifest is not a servable model.
+        let err = crate::surrogate::SurrogateSpec::load(bytes.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("manifest"), "{err:#}");
+        // A model artifact is not a manifest.
+        let mut model_bytes = Vec::new();
+        Surrogate::save(&model, &mut model_bytes).unwrap();
+        assert!(ShardManifest::load(model_bytes.as_slice()).is_err());
+    }
+
+    #[test]
+    fn split_artifact_tool_handles_plain_and_standardized() {
+        let dir = std::env::temp_dir().join(format!("ckrig_split_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (model, probe) = fitted("OWCK", 4, 100, 11);
+
+        // Plain ClusterKriging artifact.
+        let plain_path = dir.join("plain.ck");
+        crate::surrogate::save_to_path(&model, &plain_path).unwrap();
+        let out = split_artifact(&plain_path, 2, dir.join("plain_shards")).unwrap();
+        assert_eq!(out.shard_paths.len(), 2);
+        assert_eq!(out.assignment, vec![vec![0, 2], vec![1, 3]]);
+        let manifest = ShardManifest::load_path(&out.manifest_path).unwrap();
+        assert!(manifest.standardizer.is_none());
+        let s0 = crate::surrogate::SurrogateSpec::load_path(&out.shard_paths[0]).unwrap();
+        assert_eq!(s0.shard_predictor().unwrap().cluster_ids(), vec![0, 2]);
+
+        // Standardized-wrapped artifact (what `ckrig fit --out` writes).
+        let std = Standardizer {
+            x_mean: vec![0.5, -0.5],
+            x_std: vec![2.0, 2.0],
+            y_mean: 1.0,
+            y_std: 3.0,
+        };
+        let wrapped = crate::surrogate::Standardized::new(Box::new(model), std);
+        let std_path = dir.join("standardized.ck");
+        crate::surrogate::save_to_path(&wrapped, &std_path).unwrap();
+        let out = split_artifact(&std_path, 2, dir.join("std_shards")).unwrap();
+        let manifest = ShardManifest::load_path(&out.manifest_path).unwrap();
+        assert!(manifest.standardizer.is_some());
+        let s0 = crate::surrogate::SurrogateSpec::load_path(&out.shard_paths[0]).unwrap();
+        let sp = s0.shard_predictor().expect("standardized shard forwards spredict");
+        assert_eq!(sp.cluster_ids(), vec![0, 2]);
+        // Raw-unit queries flow through the wrapper.
+        assert!(sp.predict_clusters(&probe, None).is_ok());
+
+        // Non-cluster artifacts are rejected with a clear message.
+        let err = split_artifact(&std_path, 99, dir.join("x")).unwrap_err();
+        assert!(err.to_string().contains("shards"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,312 @@
+//! [`ShardedClusterKriging`]: the coordinator-side model of a sharded
+//! ensemble — scatter a batch over the shard workers, gather raw
+//! per-cluster posteriors, merge through the in-process combiner.
+//!
+//! It is a plain [`Surrogate`], so it slots into the existing serving
+//! stack unchanged: the [`crate::coordinator::Batcher`] micro-batches
+//! client `predictb` traffic into one `predict_into` call, which this
+//! type answers by fanning `spredict` out over a persistent
+//! [`ShardPool`] and merging with
+//! [`Combiner::merge_partial`][crate::cluster_kriging::Combiner::merge_partial]
+//! — the exact weight math the monolithic model uses, which is why a
+//! fully-healthy fleet reproduces `ClusterKriging::predict` bit for bit.
+//!
+//! **Degradation contract:** a dead or timed-out shard contributes
+//! nothing to the merge; the survivors' weights renormalize (the
+//! combiner's partial-merge semantics), one `degraded` tick lands in the
+//! pool/server metrics, and the pool retries the connection in the
+//! background. Requests fail only when *no* shard answers. Single-model
+//! routing (MTCK) degrades the same way: if the routed cluster's owner
+//! is down, the batch falls back to an optimal-weights merge over
+//! whoever answers — an answer with honest variance beats no answer.
+
+use crate::cluster_kriging::{ClusterPrediction, Combiner};
+use crate::coordinator::ShardPool;
+use crate::distributed::ShardManifest;
+use crate::kriging::{Prediction, Surrogate};
+use crate::online::{OnlineObserver, OnlineStats};
+use crate::util::matrix::Matrix;
+use anyhow::{ensure, Context, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Coordinator-side scatter-gather model over a pool of shard workers.
+pub struct ShardedClusterKriging {
+    manifest: ShardManifest,
+    pool: Arc<ShardPool>,
+    name: String,
+    /// Observations routed to owning shards over this model's lifetime.
+    observed: AtomicU64,
+}
+
+impl ShardedClusterKriging {
+    pub fn new(manifest: ShardManifest, pool: Arc<ShardPool>) -> Result<Self> {
+        ensure!(
+            pool.shard_count() == manifest.shard_count(),
+            "pool has {} shards but the manifest expects {}",
+            pool.shard_count(),
+            manifest.shard_count()
+        );
+        let name = format!("sharded-{}x{}", manifest.flavor, manifest.shard_count());
+        Ok(Self { manifest, pool, name, observed: AtomicU64::new(0) })
+    }
+
+    pub fn manifest(&self) -> &ShardManifest {
+        &self.manifest
+    }
+
+    pub fn pool(&self) -> &Arc<ShardPool> {
+        &self.pool
+    }
+
+    /// Query points in routing units: the oracle was fitted in
+    /// (possibly standardized) fit units, while clients speak raw units.
+    /// Returns `None` when they coincide (no standardizer).
+    fn routing_view(&self, xt: &Matrix) -> Option<Matrix> {
+        self.manifest.standardizer.as_ref().map(|s| s.transform_x(xt))
+    }
+
+    /// Weighted-combiner path: one fan-out of the whole batch to every
+    /// shard, then a per-row partial merge over whoever answered.
+    fn predict_weighted(
+        &self,
+        xt: &Matrix,
+        rxt: &Matrix,
+        mean: &mut [f64],
+        variance: &mut [f64],
+    ) -> Result<()> {
+        let k = self.manifest.k_total;
+        let results = self.pool.scatter(xt);
+        let answered = results.iter().filter(|r| r.is_some()).count();
+        ensure!(answered > 0, "no shard answered the prediction fan-out");
+        if answered < results.len() {
+            self.pool.note_degraded();
+        }
+        let mut ids: Vec<usize> = Vec::with_capacity(k);
+        let mut preds: Vec<ClusterPrediction> = Vec::with_capacity(k);
+        let mut pairs: Vec<(usize, f64, f64)> = Vec::with_capacity(k);
+        for i in 0..xt.rows() {
+            pairs.clear();
+            for shard_rows in results.iter().flatten() {
+                pairs.extend_from_slice(&shard_rows[i]);
+            }
+            // Ascending cluster order — the monolithic combine iterates
+            // models 0..k, and matching its summation order keeps the
+            // healthy-fleet result bit-identical.
+            pairs.sort_unstable_by_key(|p| p.0);
+            // A worker whose slot was hot-swapped behind the pool's back
+            // could answer for clusters it doesn't own; a duplicated id
+            // would silently double-weight the merge. Served answers must
+            // be wrong loudly, not quietly.
+            ensure!(
+                pairs.windows(2).all(|w| w[0].0 < w[1].0)
+                    && pairs.last().is_none_or(|p| p.0 < k),
+                "shard fan-out returned duplicate or out-of-range cluster ids \
+                 (a worker is serving a different topology than the manifest)"
+            );
+            ids.clear();
+            preds.clear();
+            for &(c, m, v) in &pairs {
+                ids.push(c);
+                preds.push(ClusterPrediction { mean: m, variance: v });
+            }
+            let weights = self.manifest.membership.weights(rxt.row(i), k);
+            let out = self.manifest.combiner.merge_partial(&preds, &ids, &weights, 0);
+            mean[i] = out.mean;
+            variance[i] = out.variance;
+        }
+        Ok(())
+    }
+
+    /// Single-model (MTCK) path: group rows by routed cluster — the same
+    /// grouping the monolithic batch path uses — and send each group to
+    /// the owning shard only, with a cluster filter so the worker
+    /// evaluates exactly one model per group.
+    fn predict_routed(
+        &self,
+        xt: &Matrix,
+        rxt: &Matrix,
+        mean: &mut [f64],
+        variance: &mut [f64],
+    ) -> Result<()> {
+        let k = self.manifest.k_total;
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for i in 0..xt.rows() {
+            groups[self.manifest.membership.route(rxt.row(i)).min(k - 1)].push(i);
+        }
+        let mut dropped = false;
+        for (ci, rows) in groups.iter().enumerate() {
+            if rows.is_empty() {
+                continue;
+            }
+            let sub = xt.select_rows(rows);
+            let owner = self.manifest.owner_of(ci);
+            let only = [ci];
+            match self.pool.shard_predict(owner, &sub, Some(&only[..])) {
+                Ok(partials) => {
+                    for (local, &row) in rows.iter().enumerate() {
+                        let &(got, m, v) = partials
+                            .get(local)
+                            .and_then(|e| e.first())
+                            .context("shard returned a short spredict reply")?;
+                        ensure!(
+                            got == ci,
+                            "shard {owner} answered cluster {got} for a cluster-{ci} request"
+                        );
+                        mean[row] = m;
+                        variance[row] = v;
+                    }
+                }
+                Err(e) => {
+                    // The routed owner is down: degrade this group to an
+                    // optimal-weights merge over the surviving shards.
+                    dropped = true;
+                    log::warn!(
+                        "shard {owner} unavailable for routed cluster {ci} ({e:#}); \
+                         merging survivors"
+                    );
+                    let results = self.pool.scatter(&sub);
+                    let mut pairs: Vec<(usize, f64, f64)> = Vec::with_capacity(k);
+                    for (local, &row) in rows.iter().enumerate() {
+                        pairs.clear();
+                        for shard_rows in results.iter().flatten() {
+                            pairs.extend_from_slice(&shard_rows[local]);
+                        }
+                        ensure!(
+                            !pairs.is_empty(),
+                            "no shard answered for routed cluster {ci}"
+                        );
+                        pairs.sort_unstable_by_key(|p| p.0);
+                        let ids: Vec<usize> = pairs.iter().map(|p| p.0).collect();
+                        let preds: Vec<ClusterPrediction> = pairs
+                            .iter()
+                            .map(|&(_, m, v)| ClusterPrediction { mean: m, variance: v })
+                            .collect();
+                        // `routed = ci` is absent from `ids` (its owner is
+                        // down), so merge_partial takes its degraded
+                        // optimal-weights branch.
+                        let out = self.manifest.combiner.merge_partial(&preds, &ids, &[], ci);
+                        mean[row] = out.mean;
+                        variance[row] = out.variance;
+                    }
+                }
+            }
+        }
+        if dropped {
+            self.pool.note_degraded();
+        }
+        Ok(())
+    }
+}
+
+impl Surrogate for ShardedClusterKriging {
+    fn predict(&self, xt: &Matrix) -> Result<Prediction> {
+        let mut mean = vec![0.0; xt.rows()];
+        let mut variance = vec![0.0; xt.rows()];
+        self.predict_into(xt, &mut mean, &mut variance)?;
+        Ok(Prediction { mean, variance })
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn dim(&self) -> usize {
+        self.manifest.dim
+    }
+
+    fn predict_into(&self, xt: &Matrix, mean: &mut [f64], variance: &mut [f64]) -> Result<()> {
+        ensure!(
+            xt.cols() == self.manifest.dim,
+            "predict: points have {} dims, sharded model expects {}",
+            xt.cols(),
+            self.manifest.dim
+        );
+        let routing = self.routing_view(xt);
+        let rxt = routing.as_ref().unwrap_or(xt);
+        match self.manifest.combiner {
+            Combiner::SingleModel => self.predict_routed(xt, rxt, mean, variance)?,
+            _ => self.predict_weighted(xt, rxt, mean, variance)?,
+        }
+        // Standardized shards answer `spredict` in fit units (see the
+        // `ShardPredictor` impl on `Standardized`): the merge above ran in
+        // the same units the monolithic model combines in — variance
+        // floor included — and only the *combined* posterior converts
+        // back to raw units, exactly as `Standardized::predict_into`
+        // does. Bit-identical to the unsharded artifact.
+        if let Some(std) = &self.manifest.standardizer {
+            for m in mean.iter_mut() {
+                *m = std.inverse_y(*m);
+            }
+            for v in variance.iter_mut() {
+                *v = std.inverse_var(*v);
+            }
+        }
+        Ok(())
+    }
+
+    fn observer(&self) -> Option<&dyn OnlineObserver> {
+        Some(self)
+    }
+}
+
+impl OnlineObserver for ShardedClusterKriging {
+    /// Route each observation to the shard owning its
+    /// `Membership::route` cluster and forward it over the wire — the
+    /// cluster-local O(n_c²) update happens *on the worker*, so streams
+    /// scale with the fleet exactly like predictions do. Groups destined
+    /// for different shards are independent: on a shard failure the
+    /// other groups still absorb, and the error reports how many
+    /// observations landed.
+    fn observe_batch(&self, xs: &Matrix, ys: &[f64]) -> Result<()> {
+        ensure!(
+            xs.cols() == self.manifest.dim,
+            "observe: points have {} dims, sharded model expects {}",
+            xs.cols(),
+            self.manifest.dim
+        );
+        ensure!(
+            xs.rows() == ys.len(),
+            "observe: {} points but {} targets",
+            xs.rows(),
+            ys.len()
+        );
+        let routing = self.routing_view(xs);
+        let rxs = routing.as_ref().unwrap_or(xs);
+        let k = self.manifest.k_total;
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); self.manifest.shard_count()];
+        for i in 0..xs.rows() {
+            let routed = self.manifest.membership.route(rxs.row(i)).min(k - 1);
+            groups[self.manifest.owner_of(routed)].push(i);
+        }
+        let mut absorbed = 0usize;
+        let mut failure: Option<anyhow::Error> = None;
+        for (shard, rows) in groups.iter().enumerate() {
+            if rows.is_empty() {
+                continue;
+            }
+            let sub = xs.select_rows(rows);
+            let sys: Vec<f64> = rows.iter().map(|&i| ys[i]).collect();
+            match self.pool.observe_rows(shard, &sub, &sys) {
+                Ok(n) => absorbed += n,
+                Err(e) => {
+                    failure.get_or_insert(e.context(format!("shard {shard} observe failed")));
+                }
+            }
+        }
+        self.observed.fetch_add(absorbed as u64, Ordering::Relaxed);
+        match failure {
+            None => Ok(()),
+            Some(e) => {
+                Err(e.context(format!("absorbed {absorbed} of {} observations", ys.len())))
+            }
+        }
+    }
+
+    fn online_stats(&self) -> OnlineStats {
+        OnlineStats {
+            observed: self.observed.load(Ordering::Relaxed),
+            ..Default::default()
+        }
+    }
+}

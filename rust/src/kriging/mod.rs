@@ -85,6 +85,18 @@ pub trait Surrogate: Send + Sync {
     fn observer(&self) -> Option<&dyn crate::online::OnlineObserver> {
         None
     }
+
+    /// Raw per-cluster posterior view for distributed serving (protocol
+    /// v5 `spredict`): models that decompose into per-cluster Kriging
+    /// posteriors — [`crate::cluster_kriging::ClusterKriging`], the
+    /// split-off [`crate::distributed::ClusterShard`], and the wrappers
+    /// around either — expose them here so a shard worker can serve
+    /// *uncombined* `ClusterPrediction`s for a scatter-gather coordinator
+    /// to merge. The default `None` marks models with no cluster
+    /// decomposition (plain Kriging, SoD, FITC, BCM, doubles).
+    fn shard_predictor(&self) -> Option<&dyn crate::distributed::ShardPredictor> {
+        None
+    }
 }
 
 impl Surrogate for OrdinaryKriging {

@@ -47,6 +47,14 @@
 //!    batches with the constant liar, and absorbs evaluations through the
 //!    same `observe` arithmetic; protocol v4 adds `suggest`/`tell` so any
 //!    served model doubles as an optimization service.
+//! 7. **Distribute** — the k-cluster decomposition shards across
+//!    processes ([`distributed`]): `ckrig shard` splits a fitted
+//!    ensemble into per-cluster shard artifacts plus a routing manifest,
+//!    shard workers serve raw per-cluster posteriors (protocol v5
+//!    `spredict`), and a scatter-gather coordinator merges them through
+//!    the same combiner arithmetic — dropping dead shards with
+//!    renormalized weights and reconnecting in the background — so one
+//!    serving endpoint spans a fleet instead of a machine.
 //!
 //! Architecture: a three-layer Rust + JAX + Pallas stack. The Rust layer
 //! (this crate) owns coordination — clustering, parallel fit, routing,
@@ -68,3 +76,4 @@ pub mod runtime;
 pub mod coordinator;
 pub mod online;
 pub mod optimize;
+pub mod distributed;

@@ -3,13 +3,21 @@
 //! Subcommands:
 //!   experiment  regenerate the paper's tables/figure data
 //!   fit         fit one flavor on a dataset and score a holdout
-//!   serve       start the TCP prediction server on a fitted model
+//!   serve       start the TCP prediction server on a fitted model,
+//!               a shard worker (--shard) or a scatter-gather
+//!               coordinator (--manifest + --shards)
+//!   shard       split a fitted Cluster Kriging artifact into per-worker
+//!               shard artifacts + a coordinator manifest (protocol v5)
 //!   stream      stream observations into a running server (protocol v3)
 //!   optimize    run a budgeted ask/tell EGO loop on a benchmark function
 //!   info        show PJRT platform + discovered artifacts
 
 use anyhow::{bail, Context, Result};
-use cluster_kriging::coordinator::{BatcherConfig, Client, ModelRegistry, Server, ServerConfig};
+use cluster_kriging::coordinator::{
+    BatcherConfig, Client, ModelRegistry, Server, ServerConfig, ServerMetrics, ShardPool,
+    ShardPoolConfig,
+};
+use cluster_kriging::distributed::{self, ShardManifest, ShardedClusterKriging};
 use cluster_kriging::data::functions;
 use cluster_kriging::data::synthetic::from_benchmark;
 use cluster_kriging::data::{uci_like, Dataset, Standardizer};
@@ -37,6 +45,7 @@ fn main() {
         Some("experiment") => cmd_experiment(&args),
         Some("fit") => cmd_fit(&args),
         Some("serve") => cmd_serve(&args),
+        Some("shard") => cmd_shard(&args),
         Some("stream") => cmd_stream(&args),
         Some("optimize") => cmd_optimize(&args),
         Some("info") => cmd_info(&args),
@@ -64,6 +73,10 @@ fn print_usage() {
          serve      --artifact model.ck [--name SLOT] [--addr host:port]\n\
          \u{20}          (or fit-then-serve: --dataset <name> --algo SPEC)\n\
          \u{20}          [--staleness N] [--drift-z Z] [--drift-window W]\n\
+         \u{20}          (shard worker: --shard dir/shard-0.ck)\n\
+         \u{20}          (coordinator: --manifest dir/manifest.ck\n\
+         \u{20}           --shards host0:port,host1:port,… [--shard-timeout MS])\n\
+         shard      --artifact model.ck --shards N [--out DIR]\n\
          stream     --addr host:port --dataset <name> [--n N] [--batch B]\n\
          \u{20}          [--model SLOT] [--seed S] [--drift D]\n\
          optimize   --algo SPEC --fn <benchmark> --budget N [--init N] [--q B]\n\
@@ -230,6 +243,9 @@ fn cmd_fit(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7471").to_string();
     let name = args.get_or("name", "default").to_string();
+    if let Some(manifest_path) = args.get("manifest") {
+        return serve_coordinator(args, &addr, &name, manifest_path);
+    }
     let policy = OnlinePolicy {
         staleness_budget: args.get_parsed_or("staleness", 512)?,
         drift_window: args.get_parsed_or("drift-window", 64)?,
@@ -240,8 +256,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // `refit` carries the spec when we fitted it ourselves (fit-then-
     // serve); artifact boots don't know their spec, so they observe
     // incrementally without policy-triggered refits.
+    // `--shard` is the worker role of a sharded deployment: same boot
+    // path as `--artifact` (shard artifacts are ordinary servable
+    // models), announced with its slice of the topology.
+    let artifact_arg = args.get("artifact").or_else(|| args.get("shard"));
     let (model, refit): (Box<dyn Surrogate>, Option<RefitConfig>) =
-        if let Some(artifact) = args.get("artifact") {
+        if let Some(artifact) = artifact_arg {
             // Millisecond cold boot: load the fitted model, no refit.
             let t0 = std::time::Instant::now();
             let model = SurrogateSpec::load_path(artifact)?;
@@ -251,6 +271,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 model.dim(),
                 t0.elapsed().as_secs_f64() * 1e3
             );
+            if args.get("shard").is_some() {
+                let sp = model.shard_predictor().context(
+                    "serve --shard needs a shard (or Cluster Kriging) artifact; \
+                     this model has no per-cluster decomposition",
+                )?;
+                let (i, s) = sp.shard_index().unwrap_or((0, 1));
+                eprintln!(
+                    "shard worker {i}/{s}: serving clusters {:?} of {} (spredict/shardinfo ready)",
+                    sp.cluster_ids(),
+                    sp.k_total()
+                );
+            }
             (model, None)
         } else {
             let dataset: String = args.require("dataset").context(
@@ -323,6 +355,95 @@ fn cmd_serve(args: &Args) -> Result<()> {
             None => eprintln!("{}", server.metrics.summary()),
         }
     }
+}
+
+/// Boot the scatter-gather coordinator role (protocol v5): load a shard
+/// manifest, connect the persistent pool to the worker fleet, and serve
+/// the ordinary `predict`/`predictb`/`observe` protocol on top of it —
+/// clients cannot tell a coordinator from a monolithic server except by
+/// the `stats` line's shard fields.
+fn serve_coordinator(args: &Args, addr: &str, name: &str, manifest_path: &str) -> Result<()> {
+    let shards: Vec<String> = args.get_list("shards")?.context(
+        "serve --manifest needs --shards addr0,addr1,… (one worker address per shard, \
+         in shard-index order)",
+    )?;
+    let manifest = ShardManifest::load_path(manifest_path)?;
+    let pool_cfg = ShardPoolConfig {
+        request_timeout: std::time::Duration::from_millis(
+            args.get_parsed_or("shard-timeout", 5_000u64)?,
+        ),
+        ..ShardPoolConfig::default()
+    };
+    let pool = ShardPool::connect(&shards, &manifest, pool_cfg)?;
+    eprintln!(
+        "shard pool up: {}/{} workers healthy",
+        pool.alive_count(),
+        pool.shard_count()
+    );
+    let model = ShardedClusterKriging::new(manifest, Arc::clone(&pool))?;
+    let dim = model.dim();
+    eprintln!(
+        "coordinating {} — {} clusters across {} shards, combiner {}",
+        model.name(),
+        model.manifest().k_total,
+        model.manifest().shard_count(),
+        model.manifest().combiner.name()
+    );
+    let registry = Arc::new(ModelRegistry::new(name.to_string(), Arc::new(model)));
+    let metrics = Arc::new(ServerMetrics::new());
+    pool.attach_metrics(Arc::clone(&metrics));
+    let server = Server::start_with_metrics(
+        registry,
+        ServerConfig { addr: addr.to_string(), batcher: BatcherConfig::default() },
+        metrics,
+    )?;
+    println!(
+        "serving on {} — scatter-gather coordinator: `predict [model] x1,...,x{dim}` | \
+         `predictb [model] <n> <p1;p2;...>` | `observe [model] x1,...,x{dim},y` | \
+         `observeb [model] <n> <o1;o2;...>` | `stats` | `ping` \
+         (observations route to the owning shard)",
+        server.local_addr
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(5));
+        eprintln!(
+            "{} | shards alive {}/{} degraded_merges={}",
+            server.metrics.summary(),
+            pool.alive_count(),
+            pool.shard_count(),
+            pool.degraded_merges()
+        );
+    }
+}
+
+/// Split a fitted Cluster Kriging artifact into per-worker shard
+/// artifacts plus the coordinator manifest — the offline half of
+/// distributed serving.
+fn cmd_shard(args: &Args) -> Result<()> {
+    let artifact: String = args.require("artifact")?;
+    let shards: usize = args.require("shards")?;
+    let out = args.get_or("out", "shards");
+    let t0 = std::time::Instant::now();
+    let result = distributed::split_artifact(&artifact, shards, out)?;
+    for (path, clusters) in result.shard_paths.iter().zip(&result.assignment) {
+        println!("wrote {} (clusters {clusters:?})", path.display());
+    }
+    println!(
+        "wrote {} (split {} shards in {:.3}s)",
+        result.manifest_path.display(),
+        result.shard_paths.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    println!();
+    println!("start one worker per shard, then the coordinator:");
+    for (i, path) in result.shard_paths.iter().enumerate() {
+        println!("  ckrig serve --shard {} --addr host{i}:port", path.display());
+    }
+    println!(
+        "  ckrig serve --manifest {} --shards addr0,addr1,… --addr host:port",
+        result.manifest_path.display()
+    );
+    Ok(())
 }
 
 /// Stream a dataset's rows into a running server as observations — the

@@ -64,6 +64,11 @@ pub struct OnlineModel {
     inner: RwLock<Box<dyn Surrogate>>,
     algo: String,
     dim: usize,
+    /// Whether the wrapped model exposes a
+    /// [`crate::distributed::ShardPredictor`] — captured at construction
+    /// so [`Surrogate::shard_predictor`] can answer without holding the
+    /// inner lock in its return value.
+    shard_capable: bool,
     policy: OnlinePolicy,
     observed: AtomicU64,
     since_refit: AtomicU64,
@@ -85,11 +90,13 @@ impl OnlineModel {
         }
         let algo = inner.name().to_string();
         let dim = inner.dim();
+        let shard_capable = inner.shard_predictor().is_some();
         let drift = Mutex::new(DriftMonitor::new(policy.drift_window));
         Ok(Self {
             inner: RwLock::new(inner),
             algo,
             dim,
+            shard_capable,
             policy,
             observed: AtomicU64::new(0),
             since_refit: AtomicU64::new(0),
@@ -220,6 +227,44 @@ impl Surrogate for OnlineModel {
 
     fn observer(&self) -> Option<&dyn OnlineObserver> {
         Some(self)
+    }
+
+    fn shard_predictor(&self) -> Option<&dyn crate::distributed::ShardPredictor> {
+        // Shard artifacts served behind this adapter (observe-capable
+        // shard workers) keep answering `spredict` through it.
+        if self.shard_capable {
+            Some(self)
+        } else {
+            None
+        }
+    }
+}
+
+impl crate::distributed::ShardPredictor for OnlineModel {
+    fn cluster_ids(&self) -> Vec<usize> {
+        self.inner.read().unwrap().shard_predictor().map(|s| s.cluster_ids()).unwrap_or_default()
+    }
+
+    fn k_total(&self) -> usize {
+        self.inner.read().unwrap().shard_predictor().map_or(0, |s| s.k_total())
+    }
+
+    fn shard_index(&self) -> Option<(usize, usize)> {
+        self.inner.read().unwrap().shard_predictor().and_then(|s| s.shard_index())
+    }
+
+    fn predict_clusters(
+        &self,
+        xt: &Matrix,
+        filter: Option<&[usize]>,
+    ) -> Result<Vec<Vec<(usize, f64, f64)>>> {
+        let guard = self.inner.read().unwrap();
+        // A background refit could in principle swap in a non-shard
+        // generation; fail recoverably rather than panicking mid-serve.
+        let sp = guard
+            .shard_predictor()
+            .ok_or_else(|| anyhow::anyhow!("served model generation lost shard capability"))?;
+        sp.predict_clusters(xt, filter)
     }
 }
 

@@ -27,12 +27,16 @@
 //!   Kriging model (appended after the v1 fields) and the SoD reservoir
 //!   counters. v1 payloads still load — targets are reconstructed from
 //!   the stored factor via `y = L·Lᵀ·α + μ̂·1`.
+//! * **v3** — adds the distributed sharding artifacts: `TAG_SHARD` (one
+//!   shard's subset of a Cluster Kriging ensemble plus the full routing
+//!   oracle) and `TAG_SHARD_MANIFEST` (the coordinator-side shard map).
+//!   No existing payload layout changed; v1/v2 files still load.
 
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{Read, Write};
 
 pub const MAGIC: [u8; 4] = *b"CKRG";
-pub const VERSION: u32 = 2;
+pub const VERSION: u32 = 3;
 pub const MIN_VERSION: u32 = 1;
 
 /// Model-type tags (one per `Surrogate` implementation that persists).
@@ -42,6 +46,12 @@ pub const TAG_FITC: u8 = 3;
 pub const TAG_BCM: u8 = 4;
 pub const TAG_CLUSTER_KRIGING: u8 = 5;
 pub const TAG_STANDARDIZED: u8 = 6;
+/// One shard of a split Cluster Kriging ensemble
+/// ([`crate::distributed::ClusterShard`]) — a servable model.
+pub const TAG_SHARD: u8 = 7;
+/// A coordinator shard manifest ([`crate::distributed::ShardManifest`]) —
+/// routing + topology state, deliberately **not** a servable model.
+pub const TAG_SHARD_MANIFEST: u8 = 8;
 
 /// Human-readable artifact kind for a tag (diagnostics, `models` replies).
 pub fn tag_name(tag: u8) -> &'static str {
@@ -52,6 +62,8 @@ pub fn tag_name(tag: u8) -> &'static str {
         TAG_BCM => "BCM",
         TAG_CLUSTER_KRIGING => "ClusterKriging",
         TAG_STANDARDIZED => "Standardized",
+        TAG_SHARD => "ClusterShard",
+        TAG_SHARD_MANIFEST => "ShardManifest",
         _ => "unknown",
     }
 }

@@ -220,6 +220,13 @@ pub(crate) fn read_boxed(
         artifact::TAG_BCM => Box::new(Bcm::read_artifact(r, version)?),
         artifact::TAG_CLUSTER_KRIGING => Box::new(ClusterKriging::read_artifact(r, version)?),
         artifact::TAG_STANDARDIZED => Box::new(Standardized::read_artifact(r)?),
+        artifact::TAG_SHARD => {
+            Box::new(crate::distributed::ClusterShard::read_artifact(r, version)?)
+        }
+        artifact::TAG_SHARD_MANIFEST => bail!(
+            "a shard manifest is not a servable model; boot a coordinator with \
+             `ckrig serve --manifest <path> --shards <addr,…>` instead"
+        ),
         other => bail!("unknown artifact model tag {other}"),
     })
 }

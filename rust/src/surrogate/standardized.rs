@@ -35,19 +35,9 @@ impl Standardized {
         &self.std
     }
 
-    /// Standardize query features only — one output matrix, no Dataset /
-    /// target-vector detour (this sits on the serving hot path).
+    /// Standardize query features only (serving hot path).
     fn transform_x(&self, xt: &Matrix) -> Matrix {
-        let (n, d) = xt.shape();
-        let mut out = Matrix::zeros(n, d);
-        for i in 0..n {
-            let src = xt.row(i);
-            let dst = out.row_mut(i);
-            for j in 0..d {
-                dst[j] = (src[j] - self.std.x_mean[j]) / self.std.x_std[j];
-            }
-        }
-        out
+        self.std.transform_x(xt)
     }
 
     pub(crate) fn write_artifact(&self, w: &mut BinWriter) -> Result<()> {
@@ -63,7 +53,12 @@ impl Standardized {
         Ok(())
     }
 
-    pub(crate) fn read_artifact(r: &mut BinReader<'_>) -> Result<Self> {
+    /// Decode the payload's standardizer and borrow the nested framed
+    /// artifact bytes — the one place the payload layout is known. Used
+    /// by [`Self::read_artifact`] and by the shard splitter
+    /// ([`crate::distributed::split_artifact`]), which needs the wrapped
+    /// model's *concrete* bytes rather than a `Box<dyn Surrogate>`.
+    pub(crate) fn read_parts<'a>(r: &mut BinReader<'a>) -> Result<(Standardizer, &'a [u8])> {
         let x_mean = r.get_f64_vec()?;
         let x_std = r.get_f64_vec()?;
         let y_mean = r.get_f64()?;
@@ -73,12 +68,17 @@ impl Standardized {
             "standardizer shape mismatch in artifact"
         );
         let nested = r.get_bytes()?;
+        Ok((Standardizer { x_mean, x_std, y_mean, y_std }, nested))
+    }
+
+    pub(crate) fn read_artifact(r: &mut BinReader<'_>) -> Result<Self> {
+        let (std, nested) = Self::read_parts(r)?;
         let inner = crate::surrogate::SurrogateSpec::load(nested)?;
         anyhow::ensure!(
-            inner.dim() == x_mean.len(),
+            inner.dim() == std.x_mean.len(),
             "standardizer/model dimension mismatch in artifact"
         );
-        Ok(Self { inner, std: Standardizer { x_mean, x_std, y_mean, y_std } })
+        Ok(Self { inner, std })
     }
 }
 
@@ -132,6 +132,52 @@ impl Surrogate for Standardized {
         } else {
             None
         }
+    }
+
+    fn shard_predictor(&self) -> Option<&dyn crate::distributed::ShardPredictor> {
+        // Shard-capable exactly when the wrapped model is. Queries are
+        // standardized in, but the partials come back in *fit units* (see
+        // the `ShardPredictor` impl below).
+        if self.inner.shard_predictor().is_some() {
+            Some(self)
+        } else {
+            None
+        }
+    }
+}
+
+/// `spredict` partials stay in the wrapped model's **fit units** —
+/// deliberately *not* de-standardized here. The combiner's variance
+/// floor (see [`crate::cluster_kriging::combiner`]) must compare
+/// variances in the same units the monolithic model combines in, or a
+/// small target scale (y_std ≪ 1) would push every raw-unit variance
+/// under the floor and flip the merge onto its degenerate branch. The
+/// scatter-gather coordinator owns unit conversion: it merges fit-unit
+/// partials and de-standardizes the *combined* posterior, bit-identical
+/// to what this wrapper's own `predict_into` does.
+impl crate::distributed::ShardPredictor for Standardized {
+    fn cluster_ids(&self) -> Vec<usize> {
+        self.inner.shard_predictor().map(|s| s.cluster_ids()).unwrap_or_default()
+    }
+
+    fn k_total(&self) -> usize {
+        self.inner.shard_predictor().map_or(0, |s| s.k_total())
+    }
+
+    fn shard_index(&self) -> Option<(usize, usize)> {
+        self.inner.shard_predictor().and_then(|s| s.shard_index())
+    }
+
+    fn predict_clusters(
+        &self,
+        xt: &Matrix,
+        filter: Option<&[usize]>,
+    ) -> Result<Vec<Vec<(usize, f64, f64)>>> {
+        let sp = self
+            .inner
+            .shard_predictor()
+            .ok_or_else(|| anyhow::anyhow!("wrapped model is not shard-capable"))?;
+        sp.predict_clusters(&self.transform_x(xt), filter)
     }
 }
 

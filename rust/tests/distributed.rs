@@ -1,0 +1,574 @@
+//! Distributed cluster serving, end to end.
+//!
+//! * The acceptance gate: scatter-gather `spredict` across shard
+//!   workers over real TCP matches in-process `ClusterKriging::predict`
+//!   to ≤ 1e-12 on all four clustering methods (k-means, FCM, GMM,
+//!   regression tree).
+//! * Kill-one-shard: under concurrent `predictb` load, shutting a worker
+//!   down drops ZERO client requests — answers degrade to renormalized
+//!   merges over the survivors and the `degraded` counter becomes
+//!   visible in `stats`.
+//! * Background reconnection: a worker that is down at pool startup is
+//!   tolerated and joins the fleet when it comes up.
+//! * Observation routing: coordinator `observeb` lands each point on the
+//!   shard owning its routed cluster, and only there.
+//! * The real binary: `ckrig fit` → `ckrig shard` → worker processes
+//!   (`serve --shard`) → coordinator process (`serve --manifest`) →
+//!   client `predictb` matching the monolithic artifact.
+
+use cluster_kriging::cluster_kriging::{builder, ClusterKriging, Combiner};
+use cluster_kriging::coordinator::{
+    BatcherConfig, Client, ModelRegistry, Server, ServerConfig, ServerMetrics, ShardPool,
+    ShardPoolConfig,
+};
+use cluster_kriging::distributed::{ClusterShard, ShardManifest, ShardedClusterKriging};
+use cluster_kriging::kriging::{HyperOpt, NuggetMode, Surrogate};
+use cluster_kriging::online::{OnlineModel, OnlinePolicy};
+use cluster_kriging::surrogate::SurrogateSpec;
+use cluster_kriging::util::matrix::Matrix;
+use cluster_kriging::util::proptest::gen_matrix;
+use cluster_kriging::util::rng::Rng;
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn fit_flavor(flavor: &str, k: usize, n: usize, seed: u64) -> (ClusterKriging, Matrix) {
+    let mut rng = Rng::new(seed);
+    let x = gen_matrix(&mut rng, n, 2, -3.0, 3.0);
+    let y: Vec<f64> =
+        (0..n).map(|i| x.row(i)[0].sin() + 0.3 * x.row(i)[1] * x.row(i)[1]).collect();
+    let opt = HyperOpt {
+        restarts: 1,
+        max_evals: 10,
+        isotropic: true,
+        nugget: NuggetMode::Fixed(1e-8),
+        ..HyperOpt::default()
+    };
+    let cfg = builder::flavor(flavor, k, seed, opt).unwrap();
+    let model = ClusterKriging::fit(&x, &y, cfg).unwrap();
+    let probe = gen_matrix(&mut rng, 24, 2, -3.0, 3.0);
+    (model, probe)
+}
+
+fn worker_server(model: Arc<dyn Surrogate>) -> Server {
+    Server::start_with_model(
+        model,
+        ServerConfig { addr: "127.0.0.1:0".into(), batcher: BatcherConfig::default() },
+    )
+    .unwrap()
+}
+
+fn pool_config() -> ShardPoolConfig {
+    ShardPoolConfig {
+        request_timeout: Duration::from_secs(10),
+        retry_backoff: Duration::from_millis(100),
+        ..ShardPoolConfig::default()
+    }
+}
+
+/// Split `model` into `shard_count` worker servers over real TCP and
+/// return them with a connected coordinator model. `online` wraps each
+/// shard in the serving adapter so workers accept `observeb`.
+fn start_fleet(
+    model: ClusterKriging,
+    shard_count: usize,
+    online: bool,
+) -> (Vec<Server>, Arc<ShardPool>, ShardedClusterKriging) {
+    let manifest = ShardManifest::from_model(&model, shard_count, None).unwrap();
+    let shards = ClusterShard::split(model, shard_count).unwrap();
+    let mut workers = Vec::with_capacity(shard_count);
+    let mut addrs = Vec::with_capacity(shard_count);
+    for shard in shards {
+        let served: Arc<dyn Surrogate> = if online {
+            Arc::new(
+                OnlineModel::try_new(Box::new(shard), OnlinePolicy::default())
+                    .unwrap_or_else(|_| panic!("shards must be online-capable")),
+            )
+        } else {
+            Arc::new(shard)
+        };
+        let server = worker_server(served);
+        addrs.push(server.local_addr.to_string());
+        workers.push(server);
+    }
+    let pool = ShardPool::connect(&addrs, &manifest, pool_config()).unwrap();
+    let sharded = ShardedClusterKriging::new(manifest, Arc::clone(&pool)).unwrap();
+    (workers, pool, sharded)
+}
+
+/// THE acceptance gate: for every clustering method, the scatter-gather
+/// prediction over real TCP shard workers matches the in-process
+/// monolithic prediction to ≤ 1e-12 — both straight off the coordinator
+/// model and through a full coordinator server speaking `predictb`.
+#[test]
+fn sharded_matches_monolithic_on_all_four_methods() {
+    for (flavor, k, shard_count) in
+        [("OWCK", 4, 2), ("OWFCK", 3, 3), ("GMMCK", 3, 2), ("MTCK", 4, 2)]
+    {
+        let (reference, probe) = fit_flavor(flavor, k, 160, 7);
+        // Same data + same seed ⇒ a bit-identical second fit to shard.
+        let (to_shard, _) = fit_flavor(flavor, k, 160, 7);
+        assert_eq!(reference.k(), to_shard.k(), "{flavor}: fits diverged");
+        let expect = reference.predict_batch(&probe);
+
+        let (_workers, pool, sharded) = start_fleet(to_shard, shard_count, false);
+        let got = sharded.predict(&probe).unwrap();
+        for i in 0..probe.rows() {
+            assert!(
+                (expect.mean[i] - got.mean[i]).abs() <= 1e-12,
+                "{flavor}: mean diverged at {i}: {} vs {}",
+                expect.mean[i],
+                got.mean[i]
+            );
+            assert!(
+                (expect.variance[i] - got.variance[i]).abs() <= 1e-12,
+                "{flavor}: variance diverged at {i}: {} vs {}",
+                expect.variance[i],
+                got.variance[i]
+            );
+        }
+        assert_eq!(pool.degraded_merges(), 0, "{flavor}: healthy fleet reported degraded");
+
+        // Through a real coordinator server + the line protocol.
+        let metrics = Arc::new(ServerMetrics::new());
+        pool.attach_metrics(Arc::clone(&metrics));
+        let coordinator = Server::start_with_metrics(
+            Arc::new(ModelRegistry::new("default", Arc::new(sharded))),
+            ServerConfig { addr: "127.0.0.1:0".into(), batcher: BatcherConfig::default() },
+            metrics,
+        )
+        .unwrap();
+        let mut client = Client::connect(&coordinator.local_addr.to_string()).unwrap();
+        let rows: Vec<Vec<f64>> = (0..probe.rows()).map(|i| probe.row(i).to_vec()).collect();
+        let out = client.predict_batch(None, &rows).unwrap();
+        for (i, (m, v)) in out.into_iter().enumerate() {
+            assert!(
+                (expect.mean[i] - m).abs() <= 1e-12 && (expect.variance[i] - v).abs() <= 1e-12,
+                "{flavor}: protocol-path prediction diverged at {i}"
+            );
+        }
+        let stats = client.stats().unwrap();
+        assert!(stats.contains("degraded=0"), "{stats}");
+    }
+}
+
+/// `spredict`/`shardinfo` over the wire: raw partials round-trip exactly
+/// and the handshake describes the topology.
+#[test]
+fn spredict_protocol_roundtrips_raw_partials() {
+    let (model, probe) = fit_flavor("OWCK", 4, 120, 11);
+    let reference: Vec<Vec<(usize, f64, f64)>> = {
+        use cluster_kriging::distributed::ShardPredictor as _;
+        model.predict_clusters(&probe, None).unwrap()
+    };
+    let (to_shard, _) = fit_flavor("OWCK", 4, 120, 11);
+    let shards = ClusterShard::split(to_shard, 2).unwrap();
+    let worker = worker_server(Arc::new(
+        shards.into_iter().next().unwrap(),
+    ));
+    let mut client = Client::connect(&worker.local_addr.to_string()).unwrap();
+
+    let info = client.shard_info(None).unwrap();
+    assert_eq!((info.index, info.count), (0, 2));
+    assert_eq!(info.k_total, 4);
+    assert_eq!(info.dim, 2);
+    assert_eq!(info.clusters, vec![0, 2]);
+
+    let partials = client.shard_predict(None, &probe, None).unwrap();
+    assert_eq!(partials.len(), probe.rows());
+    for (row, entries) in partials.iter().enumerate() {
+        assert_eq!(entries.len(), 2, "shard 0 owns clusters 0 and 2");
+        for &(cid, mean, var) in entries {
+            let (_, rm, rv) =
+                reference[row].iter().copied().find(|&(c, _, _)| c == cid).unwrap();
+            assert_eq!(mean.to_bits(), rm.to_bits(), "row {row} cluster {cid}");
+            assert_eq!(var.to_bits(), rv.to_bits(), "row {row} cluster {cid}");
+        }
+    }
+    // Cluster filter narrows the reply; foreign clusters are an error.
+    let filtered = client.shard_predict(None, &probe, Some(&[2])).unwrap();
+    assert!(filtered.iter().all(|e| e.len() == 1 && e[0].0 == 2));
+    assert!(client.shard_predict(None, &probe, Some(&[1])).is_err());
+    // Worker-side metrics attribute the op.
+    assert_eq!(
+        worker.metrics.spredicts.load(Ordering::Relaxed),
+        2 * probe.rows() as u64
+    );
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("spredict_p50="), "{stats}");
+    // Non-cluster models reject spredict cleanly.
+    assert!(client.request("spredict abc").unwrap().starts_with("err"));
+}
+
+/// Kill one of three shards under concurrent `predictb` load: zero
+/// dropped requests, finite degraded answers, a visible `degraded`
+/// counter, and the pool marks the worker dead.
+#[test]
+fn kill_one_shard_drops_zero_requests() {
+    let (model, _) = fit_flavor("OWCK", 3, 150, 13);
+    let (mut workers, pool, sharded) = start_fleet(model, 3, false);
+    let metrics = Arc::new(ServerMetrics::new());
+    pool.attach_metrics(Arc::clone(&metrics));
+    let coordinator = Server::start_with_metrics(
+        Arc::new(ModelRegistry::new("default", Arc::new(sharded))),
+        ServerConfig { addr: "127.0.0.1:0".into(), batcher: BatcherConfig::default() },
+        metrics,
+    )
+    .unwrap();
+    let addr = coordinator.local_addr.to_string();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let served = Arc::new(AtomicU64::new(0));
+    let mut traffic = Vec::new();
+    for t in 0..4 {
+        let addr = addr.clone();
+        let stop = Arc::clone(&stop);
+        let served = Arc::clone(&served);
+        traffic.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            let mut i = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let p = vec![
+                    ((t * 97 + i) % 60) as f64 / 10.0 - 3.0,
+                    ((t * 31 + i * 7) % 60) as f64 / 10.0 - 3.0,
+                ];
+                let out = c
+                    .predict_batch(None, &[&p[..], &p[..]])
+                    .expect("predictb dropped during shard kill");
+                assert!(
+                    out.iter().all(|(m, v)| m.is_finite() && *v >= 0.0),
+                    "non-finite degraded answer"
+                );
+                served.fetch_add(out.len() as u64, Ordering::Relaxed);
+                i += 1;
+            }
+        }));
+    }
+
+    // Let healthy traffic flow, then kill shard 1.
+    let healthy_deadline = Instant::now() + Duration::from_secs(20);
+    while served.load(Ordering::Relaxed) < 50 {
+        assert!(Instant::now() < healthy_deadline, "no healthy traffic served");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    workers[1].shutdown();
+
+    // Keep hammering until degraded merges are visible.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while pool.degraded_merges() == 0 {
+        assert!(Instant::now() < deadline, "kill never surfaced as degraded");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let after_kill = served.load(Ordering::Relaxed);
+    // And confirm traffic keeps succeeding *after* the degradation.
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while served.load(Ordering::Relaxed) < after_kill + 100 {
+        assert!(Instant::now() < deadline, "traffic stalled after shard kill");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    for t in traffic {
+        t.join().expect("a client request was dropped");
+    }
+    assert_eq!(pool.alive(), vec![true, false, true]);
+    assert!(pool.degraded_merges() > 0);
+    // The coordinator's stats surface the degradation; predictions never
+    // errored.
+    let mut c = Client::connect(&addr).unwrap();
+    let stats = c.stats().unwrap();
+    assert!(!stats.contains("degraded=0"), "{stats}");
+    assert_eq!(coordinator.metrics.errors.load(Ordering::Relaxed), 0, "{stats}");
+}
+
+/// A worker that is down at startup is tolerated (the pool starts
+/// degraded) and joins the fleet when it appears — background
+/// reconnection with `shardinfo` revalidation.
+#[test]
+fn dead_shard_at_startup_reconnects_in_background() {
+    let (model, probe) = fit_flavor("OWCK", 4, 120, 17);
+    let reference = model.predict_batch(&probe);
+    let manifest = ShardManifest::from_model(&model, 2, None).unwrap();
+    let mut shards = ClusterShard::split(model, 2).unwrap();
+    let late_shard = shards.pop().unwrap(); // shard 1, started later
+    let worker0 = worker_server(Arc::new(shards.pop().unwrap()));
+
+    // Reserve a port for the late worker, then free it for the server.
+    let placeholder = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let late_addr = placeholder.local_addr().unwrap().to_string();
+    drop(placeholder);
+
+    let addrs = vec![worker0.local_addr.to_string(), late_addr.clone()];
+    let pool = ShardPool::connect(&addrs, &manifest, pool_config()).unwrap();
+    assert_eq!(pool.alive(), vec![true, false]);
+    let sharded = ShardedClusterKriging::new(manifest, Arc::clone(&pool)).unwrap();
+
+    // Degraded from the start: answers come from shard 0 alone.
+    let degraded_pred = sharded.predict(&probe).unwrap();
+    assert!(degraded_pred.mean.iter().all(|m| m.is_finite()));
+    assert!(pool.degraded_merges() > 0);
+
+    // Bring the late worker up on the promised address; the pool's
+    // background retry must adopt it.
+    let _worker1 = Server::start_with_model(
+        Arc::new(late_shard),
+        ServerConfig { addr: late_addr, batcher: BatcherConfig::default() },
+    )
+    .unwrap();
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while pool.alive_count() < 2 {
+        assert!(Instant::now() < deadline, "pool never reconnected the late shard");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    // Fully healthy again: back to the monolithic answer, ≤ 1e-12.
+    let healed = sharded.predict(&probe).unwrap();
+    for i in 0..probe.rows() {
+        assert!(
+            (reference.mean[i] - healed.mean[i]).abs() <= 1e-12,
+            "healed fleet diverged at {i}"
+        );
+    }
+}
+
+/// Coordinator-side `observeb` routes every observation to the shard
+/// owning its routed cluster — cluster-local O(n_c²) updates on the
+/// worker that holds the cluster, nothing anywhere else.
+#[test]
+fn observations_route_to_the_owning_shard() {
+    let (model, _) = fit_flavor("OWCK", 4, 120, 19);
+    // Expected ownership per probe point, from the (deep-cloned) oracle.
+    let manifest_probe = ShardManifest::from_model(&model, 2, None).unwrap();
+    let (workers, pool, sharded) = start_fleet(model, 2, true);
+    let metrics = Arc::new(ServerMetrics::new());
+    pool.attach_metrics(Arc::clone(&metrics));
+    let coordinator = Server::start_with_metrics(
+        Arc::new(ModelRegistry::new("default", Arc::new(sharded))),
+        ServerConfig { addr: "127.0.0.1:0".into(), batcher: BatcherConfig::default() },
+        metrics,
+    )
+    .unwrap();
+    let mut client = Client::connect(&coordinator.local_addr.to_string()).unwrap();
+
+    let mut rng = Rng::new(23);
+    let n = 24;
+    let points: Vec<Vec<f64>> = (0..n)
+        .map(|_| vec![rng.uniform_in(-3.0, 3.0), rng.uniform_in(-3.0, 3.0)])
+        .collect();
+    let ys: Vec<f64> = points.iter().map(|p| p[0].sin() + 0.3 * p[1] * p[1]).collect();
+    let mut expected_per_shard = vec![0u64; 2];
+    for p in &points {
+        let routed = manifest_probe.membership.route(p).min(manifest_probe.k_total - 1);
+        expected_per_shard[manifest_probe.owner_of(routed)] += 1;
+    }
+    assert_eq!(client.observe_batch(None, &points, &ys).unwrap(), n);
+
+    for (s, worker) in workers.iter().enumerate() {
+        assert_eq!(
+            worker.metrics.observes.load(Ordering::Relaxed),
+            expected_per_shard[s],
+            "shard {s} absorbed the wrong observation count"
+        );
+    }
+    let stats = client.stats().unwrap();
+    assert!(stats.contains(&format!("observes={n}")), "{stats}");
+}
+
+struct KillOnDrop(Child);
+
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn ckrig() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_ckrig"))
+}
+
+fn spawn_serving(args: &[&str]) -> (KillOnDrop, String) {
+    let mut child = KillOnDrop(
+        ckrig()
+            .args(args)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawning ckrig serve"),
+    );
+    let stdout = child.0.stdout.take().unwrap();
+    let mut lines = BufReader::new(stdout).lines();
+    let addr = loop {
+        let line = lines
+            .next()
+            .expect("serve exited before announcing its address")
+            .unwrap();
+        if let Some(rest) = line.strip_prefix("serving on ") {
+            break rest.split_whitespace().next().unwrap().to_string();
+        }
+    };
+    (child, addr)
+}
+
+/// The whole distributed lifecycle through the real binary: fit an
+/// artifact, split it with `ckrig shard`, serve each shard as a separate
+/// OS process, coordinate them from a third process, and check client
+/// predictions against the monolithic artifact loaded in-process.
+#[test]
+fn binary_shard_split_serve_coordinate() {
+    let dir = std::env::temp_dir().join(format!("ckrig_distributed_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let artifact = dir.join("owck4.ck");
+
+    let out = ckrig()
+        .args([
+            "fit",
+            "--dataset",
+            "himmelblau",
+            "--n",
+            "200",
+            "--algo",
+            "owck:4",
+            "--seed",
+            "5",
+            "--out",
+            artifact.to_str().unwrap(),
+        ])
+        .output()
+        .expect("running ckrig fit");
+    assert!(
+        out.status.success(),
+        "fit failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    let shard_dir = dir.join("shards");
+    let out = ckrig()
+        .args([
+            "shard",
+            "--artifact",
+            artifact.to_str().unwrap(),
+            "--shards",
+            "2",
+            "--out",
+            shard_dir.to_str().unwrap(),
+        ])
+        .output()
+        .expect("running ckrig shard");
+    assert!(
+        out.status.success(),
+        "shard failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let manifest_path = shard_dir.join("manifest.ck");
+    assert!(manifest_path.exists());
+
+    // Two worker processes, then the coordinator process.
+    let (_w0, addr0) = spawn_serving(&[
+        "serve",
+        "--shard",
+        shard_dir.join("shard-0.ck").to_str().unwrap(),
+        "--addr",
+        "127.0.0.1:0",
+    ]);
+    let (_w1, addr1) = spawn_serving(&[
+        "serve",
+        "--shard",
+        shard_dir.join("shard-1.ck").to_str().unwrap(),
+        "--addr",
+        "127.0.0.1:0",
+    ]);
+    let (_coord, coord_addr) = spawn_serving(&[
+        "serve",
+        "--manifest",
+        manifest_path.to_str().unwrap(),
+        "--shards",
+        &format!("{addr0},{addr1}"),
+        "--addr",
+        "127.0.0.1:0",
+    ]);
+
+    // Reference: the monolithic artifact loaded in this process.
+    let monolithic = SurrogateSpec::load_path(&artifact).unwrap();
+    let mut rng = Rng::new(3);
+    let probe = gen_matrix(&mut rng, 12, 2, -4.0, 4.0);
+    let expect = monolithic.predict(&probe).unwrap();
+
+    let mut client = Client::connect(&coord_addr).unwrap();
+    let rows: Vec<Vec<f64>> = (0..probe.rows()).map(|i| probe.row(i).to_vec()).collect();
+    let got = client.predict_batch(None, &rows).unwrap();
+    for (i, (m, v)) in got.into_iter().enumerate() {
+        // Standardized shards answer in fit units and the coordinator
+        // de-standardizes the combined posterior — the same op order as
+        // the monolithic artifact, so this holds to ≤ 1e-12 too.
+        assert!(
+            (expect.mean[i] - m).abs() <= 1e-12,
+            "process-level mean diverged at {i}: {} vs {m}",
+            expect.mean[i]
+        );
+        assert!(
+            (expect.variance[i] - v).abs() <= 1e-12,
+            "process-level variance diverged at {i}: {} vs {v}",
+            expect.variance[i]
+        );
+    }
+    // Observations stream through the coordinator into the owning shard.
+    assert_eq!(client.observe_batch(None, &rows[..3], &[0.1, 0.2, 0.3]).unwrap(), 3);
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("observes=3"), "{stats}");
+    assert!(stats.contains("degraded=0"), "{stats}");
+
+    // The workers really answered raw-partial traffic.
+    let mut w_client = Client::connect(&addr0).unwrap();
+    let w_stats = w_client.stats().unwrap();
+    assert!(w_stats.contains("spredicts="), "{w_stats}");
+    assert!(!w_stats.contains("spredicts=0 "), "worker 0 served no spredict: {w_stats}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Satellite: client sockets honor per-request deadlines instead of
+/// hanging forever on a stuck server.
+#[test]
+fn client_request_times_out_instead_of_hanging() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    // Accept and then never reply.
+    std::thread::spawn(move || {
+        let _conn = listener.accept();
+        std::thread::sleep(Duration::from_secs(60));
+    });
+    let mut c = Client::connect_with_timeout(&addr, Duration::from_secs(2)).unwrap();
+    c.set_timeouts(Some(Duration::from_millis(200)), Some(Duration::from_millis(200)))
+        .unwrap();
+    let t0 = Instant::now();
+    let err = c.request("ping").unwrap_err();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "request did not respect the read deadline"
+    );
+    assert!(err.to_string().contains("timed out"), "{err:#}");
+}
+
+/// The pool refuses a topology that contradicts the manifest — a
+/// reachable worker serving the wrong clusters is a hard error, not a
+/// retry loop.
+#[test]
+fn pool_rejects_mismatched_worker() {
+    let (model, _) = fit_flavor("OWCK", 4, 120, 29);
+    let manifest = ShardManifest::from_model(&model, 2, None).unwrap();
+    let mut shards = ClusterShard::split(model, 2).unwrap();
+    // Both addresses point at shard 1's worker: shard 0's handshake sees
+    // the wrong cluster set.
+    let worker1 = worker_server(Arc::new(shards.pop().unwrap()));
+    let addr = worker1.local_addr.to_string();
+    let err = ShardPool::connect(&[addr.clone(), addr], &manifest, pool_config()).unwrap_err();
+    assert!(err.to_string().contains("does not match the manifest"), "{err:#}");
+
+    // A wrong-combiner mixup is caught too: Combiner survives the
+    // manifest roundtrip (spot-check while the fixture is handy).
+    assert_eq!(manifest.combiner, Combiner::OptimalWeights);
+}
