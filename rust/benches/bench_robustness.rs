@@ -1,0 +1,187 @@
+//! Bench: durability overhead and recovery time (§R1 in EXPERIMENTS.md).
+//!
+//! The WAL sits on the observe hot path — every streamed observation is
+//! framed, checksummed, appended, and (policy-depending) fsynced before
+//! the model applies it. This bench quantifies what each [`FsyncPolicy`]
+//! costs per observation against the bare in-process `observe`, and how
+//! long crash recovery (`wal::recover` + replay) takes for the same
+//! stream.
+//!
+//!   R1  per-observation overhead: none (no WAL) vs always vs every-8
+//!       vs interval-5ms, identical model state per policy (each run
+//!       reloads the same artifact). Override the stream length with
+//!       `CKRIG_ROBUST_N` (default 256).
+//!   R2  recovery wall time: re-open the `always` run's WAL directory,
+//!       truncation scan + checkpoint load + replay into a fresh
+//!       artifact load.
+//!
+//! Results are written to `BENCH_robustness.json` (override with
+//! `CKRIG_BENCH_ROBUSTNESS_JSON`) so CI can track the durability tax.
+//!
+//! ```bash
+//! CKRIG_ROBUST_N=1024 cargo bench --bench bench_robustness
+//! ```
+
+use cluster_kriging::kernel::{Kernel, KernelKind};
+use cluster_kriging::kriging::{OrdinaryKriging, Surrogate};
+use cluster_kriging::online::wal::{self, Durability, DurabilityConfig, FsyncPolicy};
+use cluster_kriging::surrogate::{self, SurrogateSpec};
+use cluster_kriging::util::matrix::Matrix;
+use cluster_kriging::util::rng::Rng;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ckrig_bench_robust_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn main() {
+    let n = 400usize;
+    let d = 2usize;
+    let stream = env_usize("CKRIG_ROBUST_N", 256);
+    let mut rng = Rng::new(11);
+
+    // One fitted model, saved once; every policy run reloads it so each
+    // measures the same incremental-Cholesky work and differs only in
+    // the durability layer.
+    let x = Matrix::from_vec(n, d, rng.uniform_vec(n * d, -3.0, 3.0));
+    let y: Vec<f64> = (0..n).map(|i| x.row(i)[0].sin() + 0.4 * x.row(i)[1] * x.row(i)[1]).collect();
+    let kernel = Kernel::new(KernelKind::SquaredExponential, vec![0.8, 1.1]);
+    let fitted = OrdinaryKriging::fit(x, &y, kernel, 1e-6).unwrap();
+    let root = temp_dir("artifact");
+    let artifact = root.join("model.ck");
+    surrogate::save_to_path(&fitted, &artifact).unwrap();
+    drop(fitted);
+
+    let points: Vec<Vec<f64>> = (0..stream)
+        .map(|_| vec![rng.uniform_in(-3.0, 3.0), rng.uniform_in(-3.0, 3.0)])
+        .collect();
+    let ys: Vec<f64> = points.iter().map(|p| p[0].sin() + 0.4 * p[1] * p[1]).collect();
+
+    println!("== R1: observe-path durability overhead, model n={n}, stream {stream} points ==");
+    let policies: [(&str, Option<FsyncPolicy>); 4] = [
+        ("none", None),
+        ("always", Some(FsyncPolicy::Always)),
+        ("every-8", Some(FsyncPolicy::EveryN(8))),
+        ("interval-5ms", Some(FsyncPolicy::Interval(Duration::from_millis(5)))),
+    ];
+    let mut baseline = 0.0f64;
+    let mut records: Vec<String> = Vec::new();
+    let mut always_dir: Option<PathBuf> = None;
+    for (name, policy) in policies {
+        let mut model = SurrogateSpec::load_path(&artifact).unwrap();
+        let elapsed = match policy {
+            None => {
+                let t0 = Instant::now();
+                for (p, yi) in points.iter().zip(&ys) {
+                    model.as_online_mut().unwrap().observe(p, *yi).unwrap();
+                }
+                t0.elapsed().as_secs_f64()
+            }
+            Some(fsync) => {
+                let dir = temp_dir(name);
+                let rec = wal::recover(&dir, fsync).unwrap();
+                let dur = Durability::new(
+                    rec.wal,
+                    &DurabilityConfig { dir: dir.clone(), fsync, checkpoint_every: 0 },
+                );
+                let t0 = Instant::now();
+                for (p, yi) in points.iter().zip(&ys) {
+                    let mut data = p.clone();
+                    data.push(*yi);
+                    dur.append_then("default", 1, d + 1, &data, || {
+                        model.as_online_mut().unwrap().observe(p, *yi)
+                    })
+                    .unwrap();
+                }
+                dur.flush().unwrap();
+                let elapsed = t0.elapsed().as_secs_f64();
+                if name == "always" {
+                    always_dir = Some(dir);
+                } else {
+                    let _ = std::fs::remove_dir_all(&dir);
+                }
+                elapsed
+            }
+        };
+        let per = elapsed / stream as f64;
+        if baseline == 0.0 {
+            baseline = per;
+        }
+        let overhead = per / baseline;
+        println!(
+            "  {name:<13} {:>9.1} µs/obs | {:>9.0} obs/s | {overhead:>6.2}x vs no WAL",
+            per * 1e6,
+            1.0 / per
+        );
+        records.push(format!(
+            concat!(
+                "    {{\n",
+                "      \"policy\": \"{name}\",\n",
+                "      \"s_per_obs\": {per:.9},\n",
+                "      \"obs_per_s\": {rate:.0},\n",
+                "      \"overhead_vs_no_wal\": {overhead:.3}\n",
+                "    }}"
+            ),
+            name = name,
+            per = per,
+            rate = 1.0 / per,
+            overhead = overhead,
+        ));
+    }
+
+    // == R2: recovery time — re-open the `always` WAL and replay it ==
+    let dir = always_dir.expect("the always run leaves its WAL behind");
+    let t0 = Instant::now();
+    let rec = wal::recover(&dir, FsyncPolicy::Always).unwrap();
+    let recover_s = t0.elapsed().as_secs_f64();
+    assert_eq!(rec.replay.len(), stream, "every appended record must replay");
+    let mut fresh = SurrogateSpec::load_path(&artifact).unwrap();
+    let t0 = Instant::now();
+    let applied = wal::replay_into(fresh.as_mut(), &rec.replay, "default").unwrap();
+    let replay_s = t0.elapsed().as_secs_f64();
+    assert_eq!(applied, stream);
+    println!(
+        "\n== R2: recovery — scan {:.2} ms, replay {stream} obs {:.2} ms ({:.1} µs/obs) ==",
+        recover_s * 1e3,
+        replay_s * 1e3,
+        replay_s / stream as f64 * 1e6
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&root);
+
+    let json_path = std::env::var("CKRIG_BENCH_ROBUSTNESS_JSON")
+        .unwrap_or_else(|_| "BENCH_robustness.json".into());
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"model_n\": {n},\n",
+            "  \"d\": {d},\n",
+            "  \"stream\": {stream},\n",
+            "  \"policies\": [\n{policies}\n  ],\n",
+            "  \"recovery\": {{\n",
+            "    \"records\": {stream},\n",
+            "    \"scan_s\": {recover:.9},\n",
+            "    \"replay_s\": {replay:.9}\n",
+            "  }}\n",
+            "}}\n"
+        ),
+        n = n,
+        d = d,
+        stream = stream,
+        policies = records.join(",\n"),
+        recover = recover_s,
+        replay = replay_s,
+    );
+    match std::fs::write(&json_path, &json) {
+        Ok(()) => println!("\nwrote {json_path}"),
+        Err(e) => eprintln!("\nfailed to write {json_path}: {e}"),
+    }
+}

@@ -18,6 +18,7 @@
 use crate::coordinator::metrics::{ProtocolOp, ServerMetrics};
 use crate::coordinator::registry::ModelRegistry;
 use crate::kriging::Surrogate;
+use crate::online::wal::Durability;
 use crate::util::matrix::Matrix;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -82,6 +83,19 @@ impl Batcher {
         cfg: BatcherConfig,
         metrics: Arc<ServerMetrics>,
     ) -> Self {
+        Self::start_with_wal(registry, cfg, metrics, None)
+    }
+
+    /// Spawn the batching worker with an optional write-ahead log:
+    /// when present, every observe request is appended (and fsynced per
+    /// the log's policy) **before** it is applied to the model, so an
+    /// `ok` reply implies the observation survives a crash.
+    pub fn start_with_wal(
+        registry: Arc<ModelRegistry>,
+        cfg: BatcherConfig,
+        metrics: Arc<ServerMetrics>,
+        wal: Option<Arc<Durability>>,
+    ) -> Self {
         let shared = Arc::new(Shared {
             queue: Mutex::new(Vec::new()),
             available: Condvar::new(),
@@ -90,7 +104,7 @@ impl Batcher {
         let worker_shared = shared.clone();
         let worker_registry = registry.clone();
         let worker = std::thread::spawn(move || {
-            worker_loop(worker_shared, worker_registry, cfg, metrics);
+            worker_loop(worker_shared, worker_registry, cfg, metrics, wal);
         });
         Self { shared, worker: Some(worker), registry }
     }
@@ -193,6 +207,19 @@ impl Batcher {
     pub fn depth(&self) -> usize {
         self.shared.queue.lock().unwrap().iter().map(|p| p.rows).sum()
     }
+
+    /// Wait until the flush queue is empty (graceful-drain path).
+    /// Returns false if `timeout` expired with work still queued.
+    pub fn drain(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        while self.depth() > 0 {
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        true
+    }
 }
 
 impl Drop for Batcher {
@@ -210,6 +237,7 @@ fn worker_loop(
     registry: Arc<ModelRegistry>,
     cfg: BatcherConfig,
     metrics: Arc<ServerMetrics>,
+    wal: Option<Arc<Durability>>,
 ) {
     // Worker-owned buffers, reused across flushes: the batch matrix plus
     // the predict_into output pair. Steady state allocates nothing.
@@ -267,10 +295,19 @@ fn worker_loop(
         // map, no per-request key clones.
         let first_key = key_of(&batch[0]).to_string();
         if batch[1..].iter().all(|p| key_of(p) == first_key) {
-            flush_group(
-                &first_key, batch, &registry, &metrics, &mut xt_data, &mut mean_buf,
-                &mut var_buf,
-            );
+            // A panicking model must not take the worker thread (and
+            // with it every future request) down: contain it, count it,
+            // and let the dropped reply channels error the batch out.
+            let flushed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                flush_group(
+                    &first_key, batch, &registry, &metrics, &mut xt_data, &mut mean_buf,
+                    &mut var_buf, wal.as_deref(),
+                );
+            }));
+            if flushed.is_err() {
+                metrics.record_panic();
+                log::warn!("batch flush for slot {first_key:?} panicked; requests dropped");
+            }
             continue;
         }
 
@@ -287,10 +324,16 @@ fn worker_loop(
         }
         for key in order {
             let group = groups.remove(&key).unwrap();
-            flush_group(
-                &key, group, &registry, &metrics, &mut xt_data, &mut mean_buf,
-                &mut var_buf,
-            );
+            let flushed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                flush_group(
+                    &key, group, &registry, &metrics, &mut xt_data, &mut mean_buf,
+                    &mut var_buf, wal.as_deref(),
+                );
+            }));
+            if flushed.is_err() {
+                metrics.record_panic();
+                log::warn!("batch flush for slot {key:?} panicked; requests dropped");
+            }
         }
     }
 }
@@ -308,6 +351,7 @@ fn flush_group(
     xt_data: &mut Vec<f64>,
     mean_buf: &mut Vec<f64>,
     var_buf: &mut Vec<f64>,
+    wal: Option<&Durability>,
 ) {
     let model = match registry.get(Some(key)) {
         Some(m) => m,
@@ -338,7 +382,7 @@ fn flush_group(
     let (observes, group): (Vec<Pending>, Vec<Pending>) =
         group.into_iter().partition(|p| p.kind == ReqKind::Observe);
     if !observes.is_empty() {
-        flush_observes(key, model.as_ref(), observes, metrics, dim);
+        flush_observes(key, model.as_ref(), observes, metrics, dim, wal);
     }
     if group.is_empty() {
         return;
@@ -390,6 +434,7 @@ fn flush_observes(
     group: Vec<Pending>,
     metrics: &ServerMetrics,
     dim: usize,
+    wal: Option<&Durability>,
 ) {
     let observer = match model.observer() {
         Some(o) => o,
@@ -415,7 +460,16 @@ fn flush_observes(
         }
         let xs = Matrix::from_vec(p.rows, dim, xs);
         let t0 = Instant::now();
-        match observer.observe_batch(&xs, &ys) {
+        // Log-then-apply: with a WAL attached, the request's raw rows
+        // are durable (per the fsync policy) before the model mutates,
+        // and the lock held across both keeps checkpoints consistent.
+        let applied = match wal {
+            Some(d) => {
+                d.append_then(key, p.rows, dim + 1, &p.data, || observer.observe_batch(&xs, &ys))
+            }
+            None => observer.observe_batch(&xs, &ys),
+        };
+        match applied {
             Ok(()) => {
                 metrics.record_op(ProtocolOp::Observe, t0.elapsed().as_secs_f64());
                 metrics.record_observes(p.rows);
@@ -685,5 +739,79 @@ mod tests {
         );
         assert_eq!(b.depth(), 0);
         drop(b); // must not hang
+    }
+
+    /// Test double whose first predict panics; later calls succeed.
+    struct PanicOnce {
+        dim: usize,
+        armed: std::sync::atomic::AtomicBool,
+    }
+
+    impl Surrogate for PanicOnce {
+        fn predict(&self, xt: &Matrix) -> anyhow::Result<Prediction> {
+            if self.armed.swap(false, Ordering::SeqCst) {
+                panic!("injected model panic");
+            }
+            Ok(Prediction { mean: vec![0.0; xt.rows()], variance: vec![0.0; xt.rows()] })
+        }
+        fn name(&self) -> &str {
+            "panic-once"
+        }
+        fn dim(&self) -> usize {
+            self.dim
+        }
+    }
+
+    #[test]
+    fn model_panic_is_contained_and_counted() {
+        let metrics = Arc::new(ServerMetrics::new());
+        let b = Batcher::start(
+            registry_of(Arc::new(PanicOnce {
+                dim: 1,
+                armed: std::sync::atomic::AtomicBool::new(true),
+            })),
+            BatcherConfig::default(),
+            metrics.clone(),
+        );
+        let err = b.predict_one(&[1.0]).unwrap_err();
+        assert!(err.to_string().contains("dropped"), "{err}");
+        assert_eq!(metrics.panics.load(Ordering::Relaxed), 1);
+        // The worker thread survived the panic and keeps serving.
+        assert!(b.predict_one(&[2.0]).is_ok());
+    }
+
+    #[test]
+    fn wal_attached_observes_are_logged_before_apply() {
+        use crate::online::wal::{recover, Durability, DurabilityConfig, FsyncPolicy};
+        let dir = std::env::temp_dir().join(format!("ckrig_batwal_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = DurabilityConfig {
+            dir: dir.clone(),
+            fsync: FsyncPolicy::Always,
+            checkpoint_every: 0,
+        };
+        let rec = recover(&dir, cfg.fsync).unwrap();
+        let dur = Durability::new(rec.wal, &cfg);
+        let model = Arc::new(ObservableEcho::new(2));
+        let b = Batcher::start_with_wal(
+            registry_of(model.clone()),
+            BatcherConfig::default(),
+            Arc::new(ServerMetrics::new()),
+            Some(Arc::clone(&dur)),
+        );
+        b.observe_rows(None, vec![1.0, 2.0, 10.0, 3.0, 4.0, 20.0], 2).unwrap();
+        b.observe_rows(None, vec![5.0, 6.0, 30.0], 1).unwrap();
+        assert_eq!(model.absorbed.lock().unwrap().len(), 3);
+        assert_eq!(dur.last_seq(), 2, "one wal record per observe request");
+        drop(b);
+        drop(dur);
+        // Everything acknowledged is on disk.
+        let rec = recover(&dir, FsyncPolicy::Always).unwrap();
+        assert_eq!(rec.replay.len(), 2);
+        assert_eq!(rec.replay[0].model, "default");
+        assert_eq!(rec.replay[0].rows, 2);
+        assert_eq!(rec.replay[0].data, vec![1.0, 2.0, 10.0, 3.0, 4.0, 20.0]);
+        assert_eq!(rec.replay[1].data, vec![5.0, 6.0, 30.0]);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -75,6 +75,12 @@ pub struct ServerMetrics {
     /// shard and renormalize over the survivors (protocol v5 — this
     /// process acting as a shard coordinator).
     pub degraded: AtomicU64,
+    /// Idempotent sub-requests re-issued against a freshly reconnected
+    /// shard after a transport failure (robustness layer).
+    pub retries: AtomicU64,
+    /// Request handlers or background workers that panicked and were
+    /// contained by `catch_unwind` instead of taking down the process.
+    pub panics: AtomicU64,
     pub batches: AtomicU64,
     pub errors: AtomicU64,
     latencies: Mutex<Histogram>,
@@ -148,6 +154,16 @@ impl ServerMetrics {
         self.degraded.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one retried sub-request (after a transport failure).
+    pub fn record_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one contained panic.
+    pub fn record_panic(&self) {
+        self.panics.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Record one op execution of `seconds` into that op's latency
     /// histogram **and** the aggregate histogram.
     pub fn record_op(&self, op: ProtocolOp, seconds: f64) {
@@ -193,13 +209,16 @@ impl ServerMetrics {
     pub fn summary(&self) -> String {
         let mut s = format!(
             "requests={} predictions={} observes={} suggests={} spredicts={} \
-             degraded={} batches={} errors={} lat_mean={:.0}µs lat_p50={}µs lat_p99={}µs",
+             degraded={} retries={} panics={} batches={} errors={} \
+             lat_mean={:.0}µs lat_p50={}µs lat_p99={}µs",
             self.requests.load(Ordering::Relaxed),
             self.predictions.load(Ordering::Relaxed),
             self.observes.load(Ordering::Relaxed),
             self.suggests.load(Ordering::Relaxed),
             self.spredicts.load(Ordering::Relaxed),
             self.degraded.load(Ordering::Relaxed),
+            self.retries.load(Ordering::Relaxed),
+            self.panics.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
             self.mean_latency_us(),
@@ -302,6 +321,19 @@ mod tests {
         assert!(s.contains("degraded=1"), "{s}");
         // Shard rows are neither predictions nor observations.
         assert_eq!(m.predictions.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn retry_and_panic_counters_accumulate() {
+        let m = ServerMetrics::new();
+        m.record_retry();
+        m.record_retry();
+        m.record_panic();
+        assert_eq!(m.retries.load(Ordering::Relaxed), 2);
+        assert_eq!(m.panics.load(Ordering::Relaxed), 1);
+        let s = m.summary();
+        assert!(s.contains("retries=2"), "{s}");
+        assert!(s.contains("panics=1"), "{s}");
     }
 
     #[test]

@@ -14,5 +14,5 @@ pub mod shardpool;
 pub use batcher::{Batcher, BatcherConfig};
 pub use metrics::{ProtocolOp, ServerMetrics};
 pub use registry::{ModelInfo, ModelRegistry};
-pub use server::{Client, Server, ServerConfig, ShardInfo};
+pub use server::{Client, Health, RetryPolicy, ServeOptions, Server, ServerConfig, ShardInfo};
 pub use shardpool::{ShardPool, ShardPoolConfig};

@@ -59,6 +59,17 @@
 //!     value; rides the observe flush queue, so the posterior the next
 //!     flush serves has absorbed it)
 //!
+//!   v6 (robustness / operations):
+//!   `health`                         → `ok health ready=<bool> draining=<bool>
+//!                                        depth=<n> panics=<n>
+//!                                        [wal_seq=<n> wal_unsynced=<n>]
+//!                                        [shards_alive=<a>/<t>]`
+//!     (readiness + liveness for orchestrators: `draining` flips when a
+//!     SIGTERM/SIGINT drain begins, `depth` is the flush-queue
+//!     backpressure, `wal_*` report write-ahead-log sequence and fsync
+//!     lag when the server runs with `--wal`, and `shards_alive` counts
+//!     healthy shard connections on a scatter-gather coordinator)
+//!
 //! Requests funnel through the [`Batcher`], so concurrent clients are
 //! served in dynamically-formed micro-batches; observations join the
 //! same flush queue and apply before that flush's predictions. Models
@@ -71,18 +82,75 @@ use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::metrics::{ProtocolOp, ServerMetrics};
 use crate::coordinator::registry::ModelRegistry;
 use crate::kriging::Surrogate;
+use crate::online::wal::Durability;
 use crate::surrogate::SurrogateSpec;
 use crate::util::matrix::Matrix;
+use crate::util::{faults, Rng};
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 pub struct ServerConfig {
     pub addr: String,
     pub batcher: BatcherConfig,
+}
+
+/// Liveness/readiness state behind the `health` protocol op. Shared
+/// between the server, the drain loop (`draining`), the WAL layer
+/// (`wal_*`) and a coordinator's shard pool (`shards_*`) — all atomics,
+/// so every reader is wait-free.
+#[derive(Debug, Default)]
+pub struct Health {
+    /// Set when a graceful shutdown began: the process still answers,
+    /// but orchestrators should route new traffic elsewhere.
+    pub draining: AtomicBool,
+    pub wal_attached: AtomicBool,
+    pub wal_last_seq: AtomicU64,
+    /// Appended-but-unsynced WAL records (the durability lag).
+    pub wal_unsynced: AtomicU64,
+    pub shards_total: AtomicU64,
+    pub shards_down: AtomicU64,
+}
+
+impl Health {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Ready = not draining, and (for a coordinator) at least one shard
+    /// healthy. A degraded-but-serving fleet stays ready.
+    pub fn ready(&self) -> bool {
+        if self.draining.load(Ordering::Relaxed) {
+            return false;
+        }
+        let total = self.shards_total.load(Ordering::Relaxed);
+        total == 0 || self.shards_down.load(Ordering::Relaxed) < total
+    }
+
+    /// Mirror the WAL counters (called from the serve loop).
+    pub fn observe_wal(&self, dur: &Durability) {
+        self.wal_attached.store(true, Ordering::Relaxed);
+        self.wal_last_seq.store(dur.last_seq(), Ordering::Relaxed);
+        self.wal_unsynced.store(dur.unsynced(), Ordering::Relaxed);
+    }
+}
+
+/// Extras for [`Server::start_with_options`]: caller-owned metrics, an
+/// optional write-ahead log for the observe path, and the shared health
+/// state the `health` op reports.
+pub struct ServeOptions {
+    pub metrics: Arc<ServerMetrics>,
+    pub wal: Option<Arc<Durability>>,
+    pub health: Arc<Health>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self { metrics: Arc::new(ServerMetrics::new()), wal: None, health: Health::new() }
+    }
 }
 
 /// A running prediction server.
@@ -92,6 +160,7 @@ pub struct Server {
     accept_thread: Option<std::thread::JoinHandle<()>>,
     pub metrics: Arc<ServerMetrics>,
     registry: Arc<ModelRegistry>,
+    health: Arc<Health>,
 }
 
 impl Server {
@@ -110,8 +179,23 @@ impl Server {
         cfg: ServerConfig,
         metrics: Arc<ServerMetrics>,
     ) -> Result<Self> {
-        let batcher =
-            Arc::new(Batcher::start(registry.clone(), cfg.batcher.clone(), metrics.clone()));
+        Self::start_with_options(registry, cfg, ServeOptions { metrics, ..Default::default() })
+    }
+
+    /// The full-control start: caller-owned metrics plus the durability
+    /// and health wiring (`ckrig serve --wal` boots through this).
+    pub fn start_with_options(
+        registry: Arc<ModelRegistry>,
+        cfg: ServerConfig,
+        opts: ServeOptions,
+    ) -> Result<Self> {
+        let ServeOptions { metrics, wal, health } = opts;
+        let batcher = Arc::new(Batcher::start_with_wal(
+            registry.clone(),
+            cfg.batcher.clone(),
+            metrics.clone(),
+            wal,
+        ));
         let listener =
             TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
         let local_addr = listener.local_addr()?;
@@ -121,17 +205,20 @@ impl Server {
         let accept_stop = stop.clone();
         let accept_metrics = metrics.clone();
         let accept_registry = registry.clone();
+        let accept_health = health.clone();
         let accept_thread = std::thread::spawn(move || {
             let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
             while !accept_stop.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
+                        let _ = faults::hit("accept-delay");
                         let b = batcher.clone();
                         let m = accept_metrics.clone();
                         let r = accept_registry.clone();
                         let s = accept_stop.clone();
+                        let h = accept_health.clone();
                         conns.push(std::thread::spawn(move || {
-                            let _ = handle_connection(stream, b, r, m, s);
+                            let _ = handle_connection(stream, b, r, m, s, h);
                         }));
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -162,6 +249,7 @@ impl Server {
             accept_thread: Some(accept_thread),
             metrics,
             registry,
+            health,
         })
     }
 
@@ -177,7 +265,18 @@ impl Server {
         &self.registry
     }
 
+    /// The health state this server's `health` op reports.
+    pub fn health(&self) -> &Arc<Health> {
+        &self.health
+    }
+
+    /// Stop accepting and join every connection thread. In-flight
+    /// requests complete (each connection finishes its current
+    /// dispatch before noticing the stop flag), and dropping the
+    /// batcher afterwards drains whatever its flush queue still holds —
+    /// so shutdown doubles as the graceful drain.
     pub fn shutdown(&mut self) {
+        self.health.draining.store(true, Ordering::Relaxed);
         self.stop.store(true, Ordering::Relaxed);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
@@ -191,12 +290,17 @@ impl Drop for Server {
     }
 }
 
+/// Sentinel reply: close the connection without answering (used by the
+/// fault-injection `spredict-drop` point to simulate a vanished shard).
+const DROP_REPLY: &str = "\u{0}drop";
+
 fn handle_connection(
     stream: TcpStream,
     batcher: Arc<Batcher>,
     registry: Arc<ModelRegistry>,
     metrics: Arc<ServerMetrics>,
     stop: Arc<AtomicBool>,
+    health: Arc<Health>,
 ) -> Result<()> {
     stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
     // Line-sized writes + request/response ping-pong: Nagle + delayed ACK
@@ -213,7 +317,29 @@ fn handle_connection(
         match reader.read_line(&mut line) {
             Ok(0) => return Ok(()), // client closed
             Ok(_) => {
-                let reply = dispatch(line.trim(), &batcher, &registry, &metrics);
+                // Injected `delay` actions stall here (read/write
+                // stalls); an injected `err` severs the connection the
+                // way a dying peer would.
+                if faults::hit("conn-read").is_err() {
+                    return Ok(());
+                }
+                // One poisoned request must not take down the connection
+                // thread (or the process): contain the panic, count it,
+                // and answer with a protocol error.
+                let reply = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    dispatch(line.trim(), &batcher, &registry, &metrics, &health)
+                }))
+                .unwrap_or_else(|_| {
+                    metrics.record_panic();
+                    metrics.record_error();
+                    "err internal: request handler panicked".to_string()
+                });
+                if reply == DROP_REPLY {
+                    return Ok(());
+                }
+                if faults::hit("conn-write").is_err() {
+                    return Ok(());
+                }
                 writer.write_all(reply.as_bytes())?;
                 writer.write_all(b"\n")?;
             }
@@ -244,6 +370,7 @@ fn dispatch(
     batcher: &Batcher,
     registry: &ModelRegistry,
     metrics: &ServerMetrics,
+    health: &Health,
 ) -> String {
     metrics.record_request();
     let err = |msg: String| {
@@ -252,6 +379,30 @@ fn dispatch(
     };
     if line == "ping" {
         return "ok pong".into();
+    }
+    if line == "health" {
+        let mut s = format!(
+            "ok health ready={} draining={} depth={} panics={}",
+            health.ready(),
+            health.draining.load(Ordering::Relaxed),
+            batcher.depth(),
+            metrics.panics.load(Ordering::Relaxed),
+        );
+        if health.wal_attached.load(Ordering::Relaxed) {
+            s.push_str(&format!(
+                " wal_seq={} wal_unsynced={}",
+                health.wal_last_seq.load(Ordering::Relaxed),
+                health.wal_unsynced.load(Ordering::Relaxed),
+            ));
+        }
+        let total = health.shards_total.load(Ordering::Relaxed);
+        if total > 0 {
+            s.push_str(&format!(
+                " shards_alive={}/{total}",
+                total.saturating_sub(health.shards_down.load(Ordering::Relaxed)),
+            ));
+        }
+        return s;
     }
     if line == "stats" {
         let slots: Vec<String> =
@@ -433,6 +584,14 @@ fn dispatch(
         }
         if rows != n {
             return err(format!("declared {n} points but got {rows}"));
+        }
+        // Chaos hooks for the distributed path: `spredict` stalls/errors
+        // here; `spredict-drop` severs the connection without a reply.
+        if faults::hit("spredict-drop").is_err() {
+            return DROP_REPLY.into();
+        }
+        if let Err(e) = faults::hit("spredict") {
+            return err(format!("{e:#}"));
         }
         return match spredict_for(model, data, rows, filter.as_deref(), registry, metrics) {
             Ok(reply) => format!("ok {reply}"),
@@ -706,18 +865,45 @@ pub struct ShardInfo {
     pub algo: String,
 }
 
+/// Capped exponential backoff with full jitter for [`Client`] retries
+/// of **idempotent** ops. Attempt `k` (1-based) sleeps a uniform random
+/// duration in `[0, min(cap, base·2^(k-1))]` before reconnecting.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Extra attempts beyond the first (0 = retries disabled).
+    pub max_retries: u32,
+    pub base: Duration,
+    pub cap: Duration,
+    /// Seed for the deterministic jitter stream.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_retries: 2,
+            base: Duration::from_millis(25),
+            cap: Duration::from_secs(1),
+            seed: 0x5EED_7E57,
+        }
+    }
+}
+
 /// Minimal blocking client for tests/examples.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    addr: String,
+    read_timeout: Option<Duration>,
+    write_timeout: Option<Duration>,
+    retry: Option<RetryPolicy>,
+    jitter: Rng,
 }
 
 impl Client {
     pub fn connect(addr: &str) -> Result<Self> {
         let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true)?;
-        let writer = stream.try_clone()?;
-        Ok(Self { reader: BufReader::new(stream), writer })
+        Self::from_stream(stream, addr)
     }
 
     /// [`Self::connect`] with a connection deadline, for callers that
@@ -731,9 +917,28 @@ impl Client {
             .with_context(|| format!("{addr} resolves to no address"))?;
         let stream = TcpStream::connect_timeout(&sockaddr, timeout)
             .with_context(|| format!("connecting to {addr}"))?;
+        Self::from_stream(stream, addr)
+    }
+
+    fn from_stream(stream: TcpStream, addr: &str) -> Result<Self> {
         stream.set_nodelay(true)?;
         let writer = stream.try_clone()?;
-        Ok(Self { reader: BufReader::new(stream), writer })
+        Ok(Self {
+            reader: BufReader::new(stream),
+            writer,
+            addr: addr.to_string(),
+            read_timeout: None,
+            write_timeout: None,
+            retry: None,
+            jitter: Rng::new(0x5EED_7E57),
+        })
+    }
+
+    /// Enable reconnect-and-retry for idempotent requests.
+    pub fn with_retry(mut self, policy: RetryPolicy) -> Self {
+        self.jitter = Rng::new(policy.seed);
+        self.retry = Some(policy);
+        self
     }
 
     /// Per-request socket deadlines. `None` restores the default
@@ -741,11 +946,60 @@ impl Client {
     /// [`Self::request`] returns an error instead of hanging when the
     /// server dies mid-response — after which this connection is poisoned
     /// (a late reply would desynchronize the request/reply pairing) and
-    /// should be dropped and re-established.
+    /// should be dropped and re-established (or left to the retry path,
+    /// which reconnects before re-sending).
     pub fn set_timeouts(&mut self, read: Option<Duration>, write: Option<Duration>) -> Result<()> {
         self.reader.get_ref().set_read_timeout(read)?;
         self.writer.set_write_timeout(write)?;
+        self.read_timeout = read;
+        self.write_timeout = write;
         Ok(())
+    }
+
+    /// Replace a poisoned connection with a fresh one to the same
+    /// address, re-applying the configured socket deadlines.
+    fn reconnect(&mut self) -> Result<()> {
+        let stream = TcpStream::connect(&self.addr)
+            .with_context(|| format!("reconnecting to {}", self.addr))?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(self.read_timeout)?;
+        stream.set_write_timeout(self.write_timeout)?;
+        self.writer = stream.try_clone()?;
+        self.reader = BufReader::new(stream);
+        Ok(())
+    }
+
+    /// One request with reconnect-and-retry, for **idempotent** ops only
+    /// (`predictb`/`spredict`/`shardinfo`/…). Mutating ops (`observe`,
+    /// `tell`) must never route through here: a timed-out mutation may
+    /// already have been applied, and re-sending it would double-apply.
+    /// Without a [`RetryPolicy`] this is plain [`Self::request`].
+    fn request_idempotent(&mut self, line: &str) -> Result<String> {
+        let Some(policy) = self.retry.clone() else {
+            return self.request(line);
+        };
+        let mut last_err = None;
+        for attempt in 0..=policy.max_retries {
+            if attempt > 0 {
+                let exp = policy.base.saturating_mul(1u32 << (attempt - 1).min(20));
+                let cap = exp.min(policy.cap);
+                // Full jitter: uniform in [0, cap] decorrelates clients
+                // hammering a just-recovered server.
+                let sleep = cap.mul_f64(self.jitter.uniform());
+                std::thread::sleep(sleep);
+                if let Err(e) = self.reconnect() {
+                    last_err = Some(e);
+                    continue;
+                }
+            }
+            match self.request(line) {
+                Ok(reply) => return Ok(reply),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.unwrap_or_else(|| anyhow::anyhow!("retries exhausted"))).with_context(
+            || format!("after {} attempts against {}", policy.max_retries + 1, self.addr),
+        )
     }
 
     pub fn request(&mut self, line: &str) -> Result<String> {
@@ -788,7 +1042,7 @@ impl Client {
             None => "predictb ".to_string(),
         };
         let reply =
-            self.request(&format!("{prefix}{} {}", points.len(), body.join(";")))?;
+            self.request_idempotent(&format!("{prefix}{} {}", points.len(), body.join(";")))?;
         let rest = Self::expect_ok(&reply)?;
         let mut out = Vec::with_capacity(points.len());
         for pair in rest.split(';') {
@@ -961,7 +1215,7 @@ impl Client {
             let ids: Vec<String> = f.iter().map(usize::to_string).collect();
             line.push_str(&format!(" clusters={}", ids.join(",")));
         }
-        let reply = self.request(&line)?;
+        let reply = self.request_idempotent(&line)?;
         let rest = Self::expect_ok(&reply)?;
         let rest = rest
             .strip_prefix("spreds ")
@@ -991,7 +1245,7 @@ impl Client {
             Some(m) => format!("shardinfo {m}"),
             None => "shardinfo".to_string(),
         };
-        let reply = self.request(&line)?;
+        let reply = self.request_idempotent(&line)?;
         let rest = Self::expect_ok(&reply)?;
         let rest = rest
             .strip_prefix("shard ")
@@ -1373,5 +1627,57 @@ mod tests {
             server.metrics.predictions.load(std::sync::atomic::Ordering::Relaxed),
             80
         );
+    }
+
+    #[test]
+    fn health_op_reports_ready() {
+        let server = start_server();
+        let mut c = Client::connect(&server.local_addr.to_string()).unwrap();
+        let reply = c.request("health").unwrap();
+        assert!(reply.starts_with("ok health ready=true draining=false"), "{reply}");
+        assert!(reply.contains("depth="), "{reply}");
+        assert!(reply.contains("panics=0"), "{reply}");
+        // No WAL or shard pool attached → those fields stay absent.
+        assert!(!reply.contains("wal_seq="), "{reply}");
+        assert!(!reply.contains("shards_alive="), "{reply}");
+    }
+
+    #[test]
+    fn retry_recovers_idempotent_request_after_connection_drop() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let fake = std::thread::spawn(move || {
+            // First connection dies without replying; the second serves.
+            let (first, _) = listener.accept().unwrap();
+            drop(first);
+            let (mut conn, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.starts_with("predictb"), "{line}");
+            conn.write_all(b"ok 3,0.5\n").unwrap();
+        });
+        let mut c = Client::connect(&addr).unwrap().with_retry(RetryPolicy {
+            max_retries: 2,
+            base: Duration::from_millis(1),
+            cap: Duration::from_millis(5),
+            seed: 7,
+        });
+        let out = c.predict_batch(None, &[[1.0, 2.0]]).unwrap();
+        assert_eq!(out, vec![(3.0, 0.5)]);
+        fake.join().unwrap();
+    }
+
+    #[test]
+    fn without_retry_a_dropped_connection_is_an_error() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let fake = std::thread::spawn(move || {
+            let (first, _) = listener.accept().unwrap();
+            drop(first);
+        });
+        let mut c = Client::connect(&addr).unwrap();
+        assert!(c.predict_batch(None, &[[1.0, 2.0]]).is_err());
+        fake.join().unwrap();
     }
 }

@@ -19,7 +19,7 @@
 //!   with-a-different-artifact worker stays dead.
 
 use crate::coordinator::metrics::ServerMetrics;
-use crate::coordinator::server::Client;
+use crate::coordinator::server::{Client, Health};
 use crate::distributed::ShardManifest;
 use crate::util::matrix::Matrix;
 use anyhow::{ensure, Context, Result};
@@ -64,7 +64,11 @@ pub struct ShardPool {
     dim: usize,
     /// Scatter-gather merges that dropped ≥ 1 shard.
     degraded: AtomicU64,
+    /// Immediate same-request retries after a transport failure
+    /// (successful or not — the attempt is what's counted).
+    retries: AtomicU64,
     metrics: Mutex<Option<Arc<ServerMetrics>>>,
+    health: Mutex<Option<Arc<Health>>>,
 }
 
 impl ShardPool {
@@ -104,7 +108,9 @@ impl ShardPool {
             cfg,
             dim: manifest.dim,
             degraded: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
             metrics: Mutex::new(None),
+            health: Mutex::new(None),
         });
         let mut healthy = 0;
         for i in 0..pool.endpoints.len() {
@@ -141,6 +147,24 @@ impl ShardPool {
         *self.metrics.lock().unwrap() = Some(metrics);
     }
 
+    /// Wire a [`Health`] endpoint so shard liveness shows up in the
+    /// coordinator's `health` replies. Seeds the totals immediately.
+    pub fn attach_health(&self, health: Arc<Health>) {
+        health.shards_total.store(self.endpoints.len() as u64, Ordering::Relaxed);
+        *self.health.lock().unwrap() = Some(health);
+        self.refresh_health();
+    }
+
+    /// Mirror the current down-shard count into the attached health
+    /// endpoint (no-op until [`Self::attach_health`]).
+    fn refresh_health(&self) {
+        if let Some(h) = self.health.lock().unwrap().as_ref() {
+            let down =
+                self.endpoints.iter().filter(|e| !e.alive.load(Ordering::SeqCst)).count();
+            h.shards_down.store(down as u64, Ordering::Relaxed);
+        }
+    }
+
     pub fn shard_count(&self) -> usize {
         self.endpoints.len()
     }
@@ -157,6 +181,21 @@ impl ShardPool {
     /// Merges that had to drop ≥ 1 shard, over the pool's lifetime.
     pub fn degraded_merges(&self) -> u64 {
         self.degraded.load(Ordering::Relaxed)
+    }
+
+    /// Immediate retries attempted after transport failures, over the
+    /// pool's lifetime.
+    pub fn retried_requests(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    /// Record one immediate retry attempt (pool counter + attached
+    /// server metrics).
+    fn note_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+        if let Some(m) = self.metrics.lock().unwrap().as_ref() {
+            m.record_retry();
+        }
     }
 
     /// Record one degraded merge (pool counter + attached server
@@ -207,6 +246,7 @@ impl ShardPool {
             log::warn!("shard {index} at {} marked dead: {why:#}", ep.addr);
         }
         *ep.conn.lock().unwrap() = None;
+        self.refresh_health();
         self.schedule_reconnect(index);
     }
 
@@ -234,6 +274,7 @@ impl ShardPool {
                     *ep.conn.lock().unwrap() = Some(client);
                     ep.alive.store(true, Ordering::SeqCst);
                     ep.reconnecting.store(false, Ordering::SeqCst);
+                    pool.refresh_health();
                     log::info!("shard {index} at {} reconnected", ep.addr);
                     return;
                 }
@@ -279,12 +320,59 @@ impl ShardPool {
                 if e.to_string().contains("server error:") {
                     Err(e.context(format!("shard {index} rejected the request")))
                 } else {
+                    // Transport failure. `spredict` is idempotent, so try
+                    // once more against a freshly dialed (and revalidated)
+                    // connection before declaring an outage: a single
+                    // dropped connection or worker restart heals here for
+                    // the cost of one reconnect, instead of a degraded
+                    // merge plus the background backoff loop.
                     drop(guard);
-                    self.mark_dead(index, &e);
-                    Err(e.context(format!("shard {index} at {} failed", ep.addr)))
+                    self.note_retry();
+                    match self.redial_and_predict(index, xt, filter) {
+                        Ok(rows) => {
+                            log::info!(
+                                "shard {index} at {} recovered on immediate retry",
+                                ep.addr
+                            );
+                            Ok(rows)
+                        }
+                        Err(retry_err) => {
+                            self.mark_dead(index, &retry_err);
+                            Err(e.context(format!(
+                                "shard {index} at {} failed (retry: {retry_err:#})",
+                                ep.addr
+                            )))
+                        }
+                    }
                 }
             }
         }
+    }
+
+    /// The immediate-retry leg of [`Self::shard_predict`]: fresh dial,
+    /// full `shardinfo` revalidation (a restarted-with-the-wrong-artifact
+    /// worker must not sneak back in), one request. On success the fresh
+    /// connection replaces the poisoned one and the shard stays alive.
+    fn redial_and_predict(
+        self: &Arc<Self>,
+        index: usize,
+        xt: &Matrix,
+        filter: Option<&[usize]>,
+    ) -> Result<Vec<Vec<(usize, f64, f64)>>> {
+        let ep = &self.endpoints[index];
+        let mut client = self.dial(index)?;
+        self.validate(index, &mut client)?;
+        let rows = client.shard_predict(None, xt, filter)?;
+        ensure!(
+            rows.len() == xt.rows(),
+            "shard {index} answered {} rows for {} points",
+            rows.len(),
+            xt.rows()
+        );
+        *ep.conn.lock().unwrap() = Some(client);
+        ep.alive.store(true, Ordering::SeqCst);
+        self.refresh_health();
+        Ok(rows)
     }
 
     /// Fan one batch out to every live shard concurrently; `None` marks
@@ -301,6 +389,12 @@ impl ShardPool {
 
     /// Forward a group of observations to one shard (protocol v3
     /// `observeb` on the worker). Returns how many the worker absorbed.
+    ///
+    /// Unlike [`Self::shard_predict`] there is NO immediate retry here:
+    /// `observeb` mutates the worker, and a timed-out request may have
+    /// been applied before the connection died — re-sending it would
+    /// double-count the observations. A transport failure just marks the
+    /// shard dead and lets the caller decide what to do with the batch.
     pub fn observe_rows(self: &Arc<Self>, index: usize, xs: &Matrix, ys: &[f64]) -> Result<usize> {
         let ep = &self.endpoints[index];
         let mut guard = ep.conn.lock().unwrap();

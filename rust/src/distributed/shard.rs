@@ -458,12 +458,11 @@ impl ShardManifest {
 
     pub fn save_to_path(&self, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();
-        let file = std::fs::File::create(path)
-            .with_context(|| format!("creating manifest {}", path.display()))?;
-        let mut w = std::io::BufWriter::new(file);
-        self.save(&mut w)?;
-        use std::io::Write as _;
-        Ok(w.flush()?)
+        crate::util::fsio::atomic_write(path, |w| {
+            self.save(w)
+                .with_context(|| format!("serializing manifest {}", path.display()))
+        })?;
+        Ok(())
     }
 
     pub fn load(mut r: impl std::io::Read) -> Result<Self> {

@@ -14,23 +14,50 @@
 
 use anyhow::{bail, Context, Result};
 use cluster_kriging::coordinator::{
-    BatcherConfig, Client, ModelRegistry, Server, ServerConfig, ServerMetrics, ShardPool,
-    ShardPoolConfig,
+    BatcherConfig, Client, Health, ModelRegistry, ServeOptions, Server, ServerConfig,
+    ServerMetrics, ShardPool, ShardPoolConfig,
 };
-use cluster_kriging::distributed::{self, ShardManifest, ShardedClusterKriging};
 use cluster_kriging::data::functions;
 use cluster_kriging::data::synthetic::from_benchmark;
 use cluster_kriging::data::{uci_like, Dataset, Standardizer};
+use cluster_kriging::distributed::{self, ShardManifest, ShardedClusterKriging};
 use cluster_kriging::eval::experiments::{run_all, ExperimentConfig};
 use cluster_kriging::eval::report::{self, PaperTable};
 use cluster_kriging::eval::HarnessConfig;
 use cluster_kriging::kriging::{HyperOpt, Surrogate};
 use cluster_kriging::metrics;
+use cluster_kriging::online::wal::{self, Durability, DurabilityConfig, FsyncPolicy};
 use cluster_kriging::online::{OnlineModel, OnlinePolicy, RefitConfig};
 use cluster_kriging::optimize::{Acquisition, Bounds, Optimizer, OptimizerConfig};
 use cluster_kriging::surrogate::{self, FitOptions, Standardized, SurrogateSpec};
 use cluster_kriging::util::cli::Args;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+
+/// Flipped by the SIGTERM/SIGINT handler; the serve loops poll it and
+/// drain instead of dying mid-request.
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+fn install_signal_handlers() {
+    extern "C" fn on_signal(_sig: i32) {
+        // Only async-signal-safe work here: one atomic store.
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_signal as usize);
+        signal(SIGINT, on_signal as usize);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {}
 
 fn main() {
     env_logger_lite();
@@ -73,6 +100,9 @@ fn print_usage() {
          serve      --artifact model.ck [--name SLOT] [--addr host:port]\n\
          \u{20}          (or fit-then-serve: --dataset <name> --algo SPEC)\n\
          \u{20}          [--staleness N] [--drift-z Z] [--drift-window W]\n\
+         \u{20}          [--wal DIR [--fsync always|never|every-N|interval-MS]\n\
+         \u{20}           [--checkpoint-every N]]  (durable observe + crash recovery;\n\
+         \u{20}           SIGTERM/SIGINT drain, checkpoint, and exit cleanly)\n\
          \u{20}          (shard worker: --shard dir/shard-0.ck)\n\
          \u{20}          (coordinator: --manifest dir/manifest.ck\n\
          \u{20}           --shards host0:port,host1:port,… [--shard-timeout MS])\n\
@@ -243,6 +273,12 @@ fn cmd_fit(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7471").to_string();
     let name = args.get_or("name", "default").to_string();
+    // Chaos testing: arm named fault-injection points for this process.
+    // Errors loudly on a binary built without the feature, so a chaos
+    // suite can never silently run against an uninstrumented server.
+    if let Some(spec) = args.get("faults") {
+        cluster_kriging::util::faults::arm(spec)?;
+    }
     if let Some(manifest_path) = args.get("manifest") {
         return serve_coordinator(args, &addr, &name, manifest_path);
     }
@@ -260,8 +296,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // path as `--artifact` (shard artifacts are ordinary servable
     // models), announced with its slice of the topology.
     let artifact_arg = args.get("artifact").or_else(|| args.get("shard"));
+
+    // Durability (--wal DIR): recover the checkpoint + WAL tail before
+    // anything serves, then log every acknowledged observation ahead of
+    // applying it. A recovered checkpoint overrides --artifact — it is a
+    // later durable state of the same model.
+    let fsync = FsyncPolicy::parse(args.get_or("fsync", "always"))?;
+    let checkpoint_every: u64 = args.get_parsed_or("checkpoint-every", 1024u64)?;
+    let wal_dir = args.get("wal").map(PathBuf::from);
+    let mut recovery = match &wal_dir {
+        Some(dir) => Some(wal::recover(dir, fsync)?),
+        None => None,
+    };
+    let recovered = recovery.as_mut().and_then(|r| r.checkpoint.take());
+
     let (model, refit): (Box<dyn Surrogate>, Option<RefitConfig>) =
-        if let Some(artifact) = artifact_arg {
+        if let Some((seq, model)) = recovered {
+            eprintln!(
+                "recovered checkpoint at seq {seq}: {} ({} dims) from {}",
+                model.name(),
+                model.dim(),
+                wal_dir.as_ref().expect("checkpoint implies --wal").display()
+            );
+            (model, None)
+        } else if let Some(artifact) = artifact_arg {
             // Millisecond cold boot: load the fitted model, no refit.
             let t0 = std::time::Instant::now();
             let model = SurrogateSpec::load_path(artifact)?;
@@ -298,6 +356,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
             (Box::new(model), Some(refit))
         };
 
+    let mut model = model;
+    let durability = match recovery {
+        Some(rec) => {
+            if !rec.replay.is_empty() {
+                let n = wal::replay_into(model.as_mut(), &rec.replay, &name)?;
+                eprintln!("replayed {n} WAL observations into slot {name:?}");
+            }
+            let dir = wal_dir.clone().expect("recovery implies --wal");
+            Some(Durability::new(rec.wal, &DurabilityConfig { dir, fsync, checkpoint_every }))
+        }
+        None => None,
+    };
+
     let dim = model.dim();
     // Online-capable models serve behind the OnlineModel adapter so the
     // protocol's observe/observeb ops work; fit-once models serve as-is.
@@ -323,20 +394,44 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(adapter) = &online {
         adapter.bind(&registry, &name);
     }
-    let server = Server::start(
-        registry,
+    let health = Health::new();
+    let mut server = Server::start_with_options(
+        Arc::clone(&registry),
         ServerConfig { addr, batcher: BatcherConfig::default() },
+        ServeOptions {
+            metrics: Arc::new(ServerMetrics::new()),
+            wal: durability.clone(),
+            health: Arc::clone(&health),
+        },
     )?;
+    let ckpt_stop = Arc::new(AtomicBool::new(false));
+    let checkpointer = durability
+        .as_ref()
+        .map(|d| wal::spawn_checkpointer(d, &registry, &name, Arc::clone(&ckpt_stop)));
+    if let Some(d) = &durability {
+        // Mark the WAL attached before the address is announced, so the
+        // very first `health` reply already carries the wal fields.
+        health.observe_wal(d);
+    }
     println!(
         "serving on {} — protocol: `predict [model] x1,...,x{dim}` | \
          `predictb [model] <n> <p1;p2;...>` | `observe [model] x1,...,x{dim},y` | \
          `observeb [model] <n> <o1;o2;...>` | `suggest [model] <q> [bounds]` | \
          `tell [model] x1,...,x{dim},y` | `models` | `load <path> [name]` | \
-         `swap <name>` | `stats` | `ping`",
+         `swap <name>` | `stats` | `health` | `ping`",
         server.local_addr
     );
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(5));
+    install_signal_handlers();
+    let mut ticks = 0u64;
+    while !SHUTDOWN.load(Ordering::SeqCst) {
+        std::thread::sleep(std::time::Duration::from_millis(250));
+        if let Some(d) = &durability {
+            health.observe_wal(d);
+        }
+        ticks += 1;
+        if ticks % 20 != 0 {
+            continue;
+        }
         // Resolve the slot each tick: background refits hot-swap fresh
         // adapter generations in, and their counters are per-generation.
         let live = server
@@ -355,6 +450,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
             None => eprintln!("{}", server.metrics.summary()),
         }
     }
+    // Graceful drain: stop accepting, let in-flight requests and the
+    // flush queue finish, then make the absorbed state durable so the
+    // next boot replays nothing.
+    eprintln!("signal received; draining…");
+    server.shutdown();
+    ckpt_stop.store(true, Ordering::SeqCst);
+    if let Some(handle) = checkpointer {
+        let _ = handle.join();
+    }
+    if let Some(d) = &durability {
+        if let Some(m) = registry.get(Some(name.as_str())) {
+            let seq = d.checkpoint(m.as_ref())?;
+            eprintln!("final checkpoint at seq {seq}");
+        }
+        d.flush()?;
+    }
+    eprintln!("drained; exiting");
+    Ok(())
 }
 
 /// Boot the scatter-gather coordinator role (protocol v5): load a shard
@@ -392,28 +505,43 @@ fn serve_coordinator(args: &Args, addr: &str, name: &str, manifest_path: &str) -
     let registry = Arc::new(ModelRegistry::new(name.to_string(), Arc::new(model)));
     let metrics = Arc::new(ServerMetrics::new());
     pool.attach_metrics(Arc::clone(&metrics));
-    let server = Server::start_with_metrics(
+    let health = Health::new();
+    pool.attach_health(Arc::clone(&health));
+    // No --wal on the coordinator: observations are durable on the shard
+    // workers that own them, not on the router in front of them.
+    let mut server = Server::start_with_options(
         registry,
         ServerConfig { addr: addr.to_string(), batcher: BatcherConfig::default() },
-        metrics,
+        ServeOptions { metrics, wal: None, health },
     )?;
     println!(
         "serving on {} — scatter-gather coordinator: `predict [model] x1,...,x{dim}` | \
          `predictb [model] <n> <p1;p2;...>` | `observe [model] x1,...,x{dim},y` | \
-         `observeb [model] <n> <o1;o2;...>` | `stats` | `ping` \
+         `observeb [model] <n> <o1;o2;...>` | `stats` | `health` | `ping` \
          (observations route to the owning shard)",
         server.local_addr
     );
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(5));
+    install_signal_handlers();
+    let mut ticks = 0u64;
+    while !SHUTDOWN.load(Ordering::SeqCst) {
+        std::thread::sleep(std::time::Duration::from_millis(250));
+        ticks += 1;
+        if ticks % 20 != 0 {
+            continue;
+        }
         eprintln!(
-            "{} | shards alive {}/{} degraded_merges={}",
+            "{} | shards alive {}/{} degraded_merges={} retries={}",
             server.metrics.summary(),
             pool.alive_count(),
             pool.shard_count(),
-            pool.degraded_merges()
+            pool.degraded_merges(),
+            pool.retried_requests()
         );
     }
+    eprintln!("signal received; draining…");
+    server.shutdown();
+    eprintln!("drained; exiting");
+    Ok(())
 }
 
 /// Split a fitted Cluster Kriging artifact into per-worker shard

@@ -24,6 +24,10 @@
 //!   policy-triggered background refits that hot-swap the fresh model
 //!   through the [`crate::coordinator::ModelRegistry`] without dropping
 //!   in-flight traffic.
+//! * [`wal`] — durability: every acknowledged observation is written to
+//!   a checksummed write-ahead log before it touches the model, a
+//!   background checkpointer snapshots the live artifact, and
+//!   `ckrig serve --wal DIR` replays checkpoint + log tail on boot.
 //!
 //! Online state survives `save`/`load`: model artifacts are written at
 //! container version 2, which persists the training targets (and the
@@ -32,9 +36,11 @@
 
 pub mod policy;
 pub mod serve;
+pub mod wal;
 
 pub use policy::{DriftMonitor, OnlinePolicy, RefitReason};
 pub use serve::{OnlineModel, RefitConfig};
+pub use wal::{Durability, DurabilityConfig, FsyncPolicy, WalRecord};
 
 use crate::kriging::Surrogate;
 use crate::util::matrix::Matrix;

@@ -19,6 +19,14 @@
 //! updating the old model incrementally and stay in the shared history,
 //! so the next refit includes them even though the freshly fitted model
 //! does not.
+//!
+//! Every lock acquisition here recovers from poisoning
+//! (`unwrap_or_else(PoisonError::into_inner)`): a panic in one request
+//! handler must not turn every later `predict` on the slot into a
+//! panic cascade. The inner model's per-point updates commit on success,
+//! so a poisoned write lock leaves the model holding the absorbed
+//! prefix — consistent, just possibly mid-batch — which is exactly the
+//! state the error path already reports.
 
 use crate::coordinator::ModelRegistry;
 use crate::data::{Dataset, Standardizer};
@@ -29,7 +37,7 @@ use crate::surrogate::{FitOptions, Standardized, SurrogateSpec};
 use crate::util::matrix::Matrix;
 use anyhow::Result;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock, Weak};
+use std::sync::{Arc, Mutex, PoisonError, RwLock, Weak};
 
 /// What a background refit refits: the spec is re-fitted from scratch on
 /// the accumulated history with a fresh hyper-parameter search.
@@ -112,7 +120,7 @@ impl OnlineModel {
     /// registry exists.
     pub fn with_refit(mut self, cfg: RefitConfig) -> Self {
         let (x, y) = {
-            let guard = self.inner.read().unwrap();
+            let guard = self.inner.read().unwrap_or_else(PoisonError::into_inner);
             guard.as_online().expect("validated at construction").training_snapshot()
         };
         self.history =
@@ -131,8 +139,9 @@ impl OnlineModel {
     /// No-op unless [`Self::with_refit`] configured a recipe.
     pub fn bind(&self, registry: &Arc<ModelRegistry>, slot: &str) {
         if let Some(shared) = &self.refit {
-            *shared.registry.lock().unwrap() = Arc::downgrade(registry);
-            *shared.slot.lock().unwrap() = slot.to_string();
+            *shared.registry.lock().unwrap_or_else(PoisonError::into_inner) =
+                Arc::downgrade(registry);
+            *shared.slot.lock().unwrap_or_else(PoisonError::into_inner) = slot.to_string();
         }
     }
 
@@ -143,7 +152,7 @@ impl OnlineModel {
             observed: self.observed.load(Ordering::Relaxed),
             since_refit: self.since_refit.load(Ordering::Relaxed),
             refits: self.refit.as_ref().map_or(0, |s| s.refits.load(Ordering::Relaxed)),
-            drift: self.drift.lock().unwrap().mean(),
+            drift: self.drift.lock().unwrap_or_else(PoisonError::into_inner).mean(),
         }
     }
 
@@ -160,53 +169,72 @@ impl OnlineModel {
         }
         // Judge the next window against the post-refit model, and stop
         // this generation's triggers from re-firing while the refit runs.
-        self.drift.lock().unwrap().reset();
+        self.drift.lock().unwrap_or_else(PoisonError::into_inner).reset();
         self.since_refit.store(0, Ordering::Relaxed);
         log::info!("online refit triggered ({reason:?}) for {}", self.algo);
         let policy = self.policy;
         let shared = Arc::clone(shared);
         let history = Arc::clone(history);
         std::thread::spawn(move || {
-            let ds = {
-                let h = history.lock().unwrap();
-                Dataset::new(
-                    "online-refit",
-                    Matrix::from_vec(h.y.len(), h.dim, h.x.clone()),
-                    h.y.clone(),
-                )
-            };
-            let fitted = (|| -> Result<Box<dyn Surrogate>> {
-                let std = Standardizer::fit(&ds);
-                let tr = std.transform(&ds);
-                let model = shared.cfg.spec.fit(&tr, &shared.cfg.opts)?;
-                Ok(Box::new(Standardized::new(model, std)))
-            })();
-            match fitted.and_then(|model| {
-                OnlineModel::try_new(model, policy)
-                    .map_err(|_| anyhow::anyhow!("refit produced a non-online model"))
-            }) {
-                Ok(mut fresh) => {
-                    fresh.history = Some(history);
-                    fresh.refit = Some(Arc::clone(&shared));
-                    if let Some(registry) = shared.registry.lock().unwrap().upgrade() {
-                        let slot = shared.slot.lock().unwrap().clone();
-                        registry.insert(slot.clone(), Arc::new(fresh));
-                        shared.refits.fetch_add(1, Ordering::SeqCst);
-                        log::info!("online refit swapped into slot {slot:?}");
-                    } else {
-                        log::warn!("online refit finished but the registry is gone");
+            // A panic inside the numeric fit must not take the refit
+            // machinery down with it: the serving generation keeps
+            // answering, and `in_flight` is released below either way so
+            // a later trigger can try again.
+            let release = Arc::clone(&shared);
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+                let ds = {
+                    let h = history.lock().unwrap_or_else(PoisonError::into_inner);
+                    Dataset::new(
+                        "online-refit",
+                        Matrix::from_vec(h.y.len(), h.dim, h.x.clone()),
+                        h.y.clone(),
+                    )
+                };
+                let fitted = (|| -> Result<Box<dyn Surrogate>> {
+                    let std = Standardizer::fit(&ds);
+                    let tr = std.transform(&ds);
+                    let model = shared.cfg.spec.fit(&tr, &shared.cfg.opts)?;
+                    Ok(Box::new(Standardized::new(model, std)))
+                })();
+                match fitted.and_then(|model| {
+                    OnlineModel::try_new(model, policy)
+                        .map_err(|_| anyhow::anyhow!("refit produced a non-online model"))
+                }) {
+                    Ok(mut fresh) => {
+                        fresh.history = Some(history);
+                        fresh.refit = Some(Arc::clone(&shared));
+                        if let Some(registry) = shared
+                            .registry
+                            .lock()
+                            .unwrap_or_else(PoisonError::into_inner)
+                            .upgrade()
+                        {
+                            let slot = shared
+                                .slot
+                                .lock()
+                                .unwrap_or_else(PoisonError::into_inner)
+                                .clone();
+                            registry.insert(slot.clone(), Arc::new(fresh));
+                            shared.refits.fetch_add(1, Ordering::SeqCst);
+                            log::info!("online refit swapped into slot {slot:?}");
+                        } else {
+                            log::warn!("online refit finished but the registry is gone");
+                        }
                     }
+                    Err(e) => log::warn!("online background refit failed: {e:#}"),
                 }
-                Err(e) => log::warn!("online background refit failed: {e:#}"),
+            }));
+            if outcome.is_err() {
+                log::warn!("online background refit panicked; keeping the serving generation");
             }
-            shared.in_flight.store(false, Ordering::SeqCst);
+            release.in_flight.store(false, Ordering::SeqCst);
         });
     }
 }
 
 impl Surrogate for OnlineModel {
     fn predict(&self, xt: &Matrix) -> Result<Prediction> {
-        self.inner.read().unwrap().predict(xt)
+        self.inner.read().unwrap_or_else(PoisonError::into_inner).predict(xt)
     }
 
     fn name(&self) -> &str {
@@ -218,11 +246,11 @@ impl Surrogate for OnlineModel {
     }
 
     fn predict_into(&self, xt: &Matrix, mean: &mut [f64], variance: &mut [f64]) -> Result<()> {
-        self.inner.read().unwrap().predict_into(xt, mean, variance)
+        self.inner.read().unwrap_or_else(PoisonError::into_inner).predict_into(xt, mean, variance)
     }
 
     fn save(&self, w: &mut dyn std::io::Write) -> Result<()> {
-        self.inner.read().unwrap().save(w)
+        self.inner.read().unwrap_or_else(PoisonError::into_inner).save(w)
     }
 
     fn observer(&self) -> Option<&dyn OnlineObserver> {
@@ -242,15 +270,28 @@ impl Surrogate for OnlineModel {
 
 impl crate::distributed::ShardPredictor for OnlineModel {
     fn cluster_ids(&self) -> Vec<usize> {
-        self.inner.read().unwrap().shard_predictor().map(|s| s.cluster_ids()).unwrap_or_default()
+        self.inner
+            .read()
+            .unwrap_or_else(PoisonError::into_inner)
+            .shard_predictor()
+            .map(|s| s.cluster_ids())
+            .unwrap_or_default()
     }
 
     fn k_total(&self) -> usize {
-        self.inner.read().unwrap().shard_predictor().map_or(0, |s| s.k_total())
+        self.inner
+            .read()
+            .unwrap_or_else(PoisonError::into_inner)
+            .shard_predictor()
+            .map_or(0, |s| s.k_total())
     }
 
     fn shard_index(&self) -> Option<(usize, usize)> {
-        self.inner.read().unwrap().shard_predictor().and_then(|s| s.shard_index())
+        self.inner
+            .read()
+            .unwrap_or_else(PoisonError::into_inner)
+            .shard_predictor()
+            .and_then(|s| s.shard_index())
     }
 
     fn predict_clusters(
@@ -258,7 +299,7 @@ impl crate::distributed::ShardPredictor for OnlineModel {
         xt: &Matrix,
         filter: Option<&[usize]>,
     ) -> Result<Vec<Vec<(usize, f64, f64)>>> {
-        let guard = self.inner.read().unwrap();
+        let guard = self.inner.read().unwrap_or_else(PoisonError::into_inner);
         // A background refit could in principle swap in a non-shard
         // generation; fail recoverably rather than panicking mid-serve.
         let sp = guard
@@ -296,7 +337,10 @@ impl OnlineObserver for OnlineModel {
         // the model actually incorporated.
         let mut mean = vec![0.0; m];
         let mut var = vec![0.0; m];
-        self.inner.read().unwrap().predict_into(xs, &mut mean, &mut var)?;
+        self.inner
+            .read()
+            .unwrap_or_else(PoisonError::into_inner)
+            .predict_into(xs, &mut mean, &mut var)?;
         let residuals: Vec<f64> = (0..m)
             .map(|i| (ys[i] - mean[i]) / (var[i].max(0.0) + 1e-12).sqrt())
             .collect();
@@ -307,7 +351,7 @@ impl OnlineObserver for OnlineModel {
         // refit history consistent with the model no matter what.
         let mut absorbed = 0;
         let failure = {
-            let mut guard = self.inner.write().unwrap();
+            let mut guard = self.inner.write().unwrap_or_else(PoisonError::into_inner);
             let online = guard.as_online_mut().expect("validated at construction");
             let mut failure = None;
             for i in 0..m {
@@ -326,13 +370,13 @@ impl OnlineObserver for OnlineModel {
         // over the stream).
         if absorbed > 0 {
             {
-                let mut drift = self.drift.lock().unwrap();
+                let mut drift = self.drift.lock().unwrap_or_else(PoisonError::into_inner);
                 for &r in &residuals[..absorbed] {
                     drift.push(r);
                 }
             }
             if let Some(history) = &self.history {
-                let mut h = history.lock().unwrap();
+                let mut h = history.lock().unwrap_or_else(PoisonError::into_inner);
                 h.x.extend_from_slice(&xs.as_slice()[..absorbed * self.dim]);
                 h.y.extend_from_slice(&ys[..absorbed]);
                 let cap = self.policy.history_cap;
@@ -347,7 +391,7 @@ impl OnlineObserver for OnlineModel {
                 self.since_refit.fetch_add(absorbed as u64, Ordering::Relaxed) + absorbed as u64;
             // 4. Policy check.
             let reason = {
-                let drift = self.drift.lock().unwrap();
+                let drift = self.drift.lock().unwrap_or_else(PoisonError::into_inner);
                 self.policy.should_refit(since as usize, &drift)
             };
             if let Some(reason) = reason {
@@ -365,7 +409,7 @@ impl OnlineObserver for OnlineModel {
     }
 
     fn training_snapshot(&self) -> Option<(Matrix, Vec<f64>)> {
-        let guard = self.inner.read().unwrap();
+        let guard = self.inner.read().unwrap_or_else(PoisonError::into_inner);
         guard.as_online().map(|o| o.training_snapshot())
     }
 }

@@ -1,0 +1,741 @@
+//! Write-ahead log + checkpointing for durable online serving.
+//!
+//! PRs 3–5 made the server *stateful*: `observe`/`observeb`/`tell`
+//! mutate live model state that otherwise exists only in RAM. This
+//! module closes the durability gap with the classic WAL discipline:
+//!
+//! 1. **Log first.** Every observation batch is framed, checksummed
+//!    (FNV-1a over the payload) and appended to `wal.log` *before* it is
+//!    applied to the in-memory model — only then is `ok` sent. A
+//!    configurable [`FsyncPolicy`] trades latency for the durability
+//!    window (`always` / `every-N` / `interval-MS` / `never`).
+//! 2. **Checkpoint.** A background checkpointer snapshots the live model
+//!    through the existing artifact format. The covered sequence number
+//!    is embedded *inside* the checkpoint file, so `{model, seq}` flip
+//!    atomically under one rename ([`crate::util::fsio::atomic_write`])
+//!    and the WAL can then be truncated. A crash between the rename and
+//!    the truncation is harmless: replay filters `seq <= checkpoint seq`,
+//!    so nothing is double-applied.
+//! 3. **Recover.** [`recover`] loads the checkpoint (if any), scans the
+//!    WAL — truncating a torn or checksum-corrupt tail at the last good
+//!    record boundary — and returns the records beyond the checkpoint
+//!    for replay. Under fixed hyperparameters (artifact boot, no
+//!    background refit) the recovered model is bit-identical to the
+//!    pre-crash one, because incremental absorption is deterministic.
+//!
+//! Consistency between log and model is enforced by a single mutex:
+//! [`Durability::append_then`] holds it across append + fsync + apply,
+//! and [`Durability::checkpoint`] takes the same lock around snapshot +
+//! truncate, so a checkpoint can never observe half of a record's
+//! effect. Lock order is always WAL lock → model lock.
+
+use crate::kriging::Surrogate;
+use crate::surrogate::artifact::fnv1a;
+use crate::surrogate::SurrogateSpec;
+use crate::util::binio::{BinReader, BinWriter};
+use crate::util::{faults, fsio, Matrix};
+use anyhow::{bail, ensure, Context, Result};
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError, Weak};
+use std::time::{Duration, Instant};
+
+/// WAL file magic + format version (`CKWL`, little-endian u32 version).
+pub const WAL_MAGIC: [u8; 4] = *b"CKWL";
+const WAL_VERSION: u32 = 1;
+const WAL_HEADER_LEN: u64 = 8;
+
+/// Checkpoint container magic (`CKCP`): version, covered seq, then the
+/// model artifact bytes verbatim.
+pub const CKPT_MAGIC: [u8; 4] = *b"CKCP";
+const CKPT_VERSION: u32 = 1;
+
+/// File names inside a `--wal DIR`.
+pub const WAL_FILE: &str = "wal.log";
+pub const CHECKPOINT_FILE: &str = "checkpoint.ck";
+
+/// When to fsync the log relative to appends.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// fsync on every append: zero acknowledged-but-lost window.
+    Always,
+    /// fsync once per N appends.
+    EveryN(u64),
+    /// fsync when at least this much time has passed since the last
+    /// sync (checked at append time and by the checkpointer tick).
+    Interval(Duration),
+    /// Never fsync from the append path (OS page cache decides).
+    Never,
+}
+
+impl FsyncPolicy {
+    /// Parse `always` / `never` / `every-N` / `interval-MS`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "always" => Ok(Self::Always),
+            "never" | "off" => Ok(Self::Never),
+            _ => {
+                if let Some(n) = s.strip_prefix("every-") {
+                    let n: u64 = n.parse().with_context(|| format!("bad fsync policy {s:?}"))?;
+                    Ok(Self::EveryN(n.max(1)))
+                } else if let Some(ms) = s.strip_prefix("interval-") {
+                    let ms: u64 =
+                        ms.parse().with_context(|| format!("bad fsync policy {s:?}"))?;
+                    Ok(Self::Interval(Duration::from_millis(ms)))
+                } else {
+                    bail!("bad fsync policy {s:?} (want always | never | every-N | interval-MS)")
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for FsyncPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Always => write!(f, "always"),
+            Self::Never => write!(f, "never"),
+            Self::EveryN(n) => write!(f, "every-{n}"),
+            Self::Interval(d) => write!(f, "interval-{}", d.as_millis()),
+        }
+    }
+}
+
+/// One durably logged observation batch: `rows` rows of `width` values
+/// each (`width - 1` features followed by the target), aimed at registry
+/// slot `model`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WalRecord {
+    pub seq: u64,
+    pub model: String,
+    pub rows: usize,
+    pub width: usize,
+    pub data: Vec<f64>,
+}
+
+fn encode_record(rec: &WalRecord) -> Vec<u8> {
+    let mut payload = BinWriter::new();
+    payload.put_u64(rec.seq);
+    payload.put_str(&rec.model);
+    payload.put_usize(rec.rows);
+    payload.put_usize(rec.width);
+    payload.put_f64_slice(&rec.data);
+    let payload = payload.into_bytes();
+    let mut frame = Vec::with_capacity(payload.len() + 12);
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+    frame.extend_from_slice(&payload);
+    frame
+}
+
+fn decode_payload(payload: &[u8]) -> Result<WalRecord> {
+    let mut r = BinReader::new(payload);
+    let seq = r.get_u64()?;
+    let model = r.get_str()?;
+    let rows = r.get_usize()?;
+    let width = r.get_usize()?;
+    let data = r.get_f64_vec()?;
+    ensure!(
+        data.len() == rows * width,
+        "wal record seq {seq}: {} values for {rows}x{width}",
+        data.len()
+    );
+    Ok(WalRecord { seq, model, rows, width, data })
+}
+
+/// The append side of the log. Single-threaded by construction —
+/// [`Durability`] wraps it in the mutex that defines the WAL↔model
+/// consistency protocol.
+pub struct Wal {
+    file: File,
+    path: PathBuf,
+    policy: FsyncPolicy,
+    next_seq: u64,
+    appends_since_sync: u64,
+    last_sync: Instant,
+    dirty: bool,
+}
+
+impl Wal {
+    /// Open (or create) the log at `path`, validating every record and
+    /// truncating a torn or corrupt tail at the last good boundary.
+    /// Returns the surviving records in append order.
+    pub fn open(path: &Path, policy: FsyncPolicy) -> Result<(Self, Vec<WalRecord>)> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(path)
+            .with_context(|| format!("opening wal {}", path.display()))?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)?;
+
+        let mut records = Vec::new();
+        let mut good = WAL_HEADER_LEN;
+        if bytes.len() < WAL_HEADER_LEN as usize
+            || bytes[..4] != WAL_MAGIC
+            || u32::from_le_bytes(bytes[4..8].try_into().unwrap()) != WAL_VERSION
+        {
+            // A header can only be missing/torn if the process died while
+            // creating an empty log — there is nothing to lose yet.
+            if !bytes.is_empty() {
+                log::warn!("wal {}: unreadable header, starting fresh", path.display());
+            }
+            file.set_len(0)?;
+            file.seek(SeekFrom::Start(0))?;
+            file.write_all(&WAL_MAGIC)?;
+            file.write_all(&WAL_VERSION.to_le_bytes())?;
+            file.sync_all()?;
+        } else {
+            let mut pos = WAL_HEADER_LEN as usize;
+            loop {
+                if bytes.len() - pos < 12 {
+                    break; // clean end (0 left) or torn frame header
+                }
+                let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+                let check = u64::from_le_bytes(bytes[pos + 4..pos + 12].try_into().unwrap());
+                if bytes.len() - pos - 12 < len {
+                    log::warn!(
+                        "wal {}: torn final record (frame wants {len} bytes, {} present); \
+                         truncating",
+                        path.display(),
+                        bytes.len() - pos - 12
+                    );
+                    break;
+                }
+                let payload = &bytes[pos + 12..pos + 12 + len];
+                if fnv1a(payload) != check {
+                    log::warn!(
+                        "wal {}: checksum mismatch at offset {pos}; truncating tail \
+                         ({} good records kept)",
+                        path.display(),
+                        records.len()
+                    );
+                    break;
+                }
+                match decode_payload(payload) {
+                    Ok(rec) => records.push(rec),
+                    Err(e) => {
+                        log::warn!("wal {}: undecodable record at {pos} ({e:#}); truncating",
+                            path.display());
+                        break;
+                    }
+                }
+                pos += 12 + len;
+            }
+            good = pos as u64;
+            if good < bytes.len() as u64 {
+                file.set_len(good)?;
+                file.sync_all()?;
+            }
+            file.seek(SeekFrom::Start(good))?;
+        }
+        let next_seq = records.last().map_or(1, |r| r.seq + 1);
+        Ok((
+            Wal {
+                file,
+                path: path.to_path_buf(),
+                policy,
+                next_seq,
+                appends_since_sync: 0,
+                last_sync: Instant::now(),
+                dirty: false,
+            },
+            records,
+        ))
+    }
+
+    /// Append one record, honoring the fsync policy. Returns the
+    /// assigned sequence number once the frame is written (and synced,
+    /// when the policy says so).
+    pub fn append(&mut self, model: &str, rows: usize, width: usize, data: &[f64]) -> Result<u64> {
+        ensure!(data.len() == rows * width, "append: {} values for {rows}x{width}", data.len());
+        let seq = self.next_seq;
+        let frame = encode_record(&WalRecord {
+            seq,
+            model: model.to_string(),
+            rows,
+            width,
+            data: data.to_vec(),
+        });
+        self.file
+            .write_all(&frame)
+            .with_context(|| format!("appending to wal {}", self.path.display()))?;
+        self.dirty = true;
+        self.appends_since_sync += 1;
+        faults::hit("wal-pre-fsync")?;
+        let due = match self.policy {
+            FsyncPolicy::Always => true,
+            FsyncPolicy::EveryN(n) => self.appends_since_sync >= n,
+            FsyncPolicy::Interval(d) => self.last_sync.elapsed() >= d,
+            FsyncPolicy::Never => false,
+        };
+        if due {
+            self.sync()?;
+        }
+        self.next_seq = seq + 1;
+        faults::hit("wal-post-append")?;
+        Ok(seq)
+    }
+
+    /// Force the log to disk.
+    pub fn sync(&mut self) -> Result<()> {
+        if self.dirty {
+            self.file
+                .sync_data()
+                .with_context(|| format!("fsyncing wal {}", self.path.display()))?;
+            self.dirty = false;
+            self.appends_since_sync = 0;
+            self.last_sync = Instant::now();
+        }
+        Ok(())
+    }
+
+    /// Sync if an interval policy is overdue (checkpointer tick).
+    pub fn sync_if_due(&mut self) -> Result<()> {
+        if let FsyncPolicy::Interval(d) = self.policy {
+            if self.dirty && self.last_sync.elapsed() >= d {
+                self.sync()?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Truncate back to an empty (header-only) log after a checkpoint.
+    /// Sequence numbers keep counting — they are never reused.
+    pub fn reset(&mut self) -> Result<()> {
+        self.file.set_len(WAL_HEADER_LEN)?;
+        self.file.seek(SeekFrom::Start(WAL_HEADER_LEN))?;
+        self.file.sync_data()?;
+        self.dirty = false;
+        self.appends_since_sync = 0;
+        self.last_sync = Instant::now();
+        Ok(())
+    }
+
+    /// Records appended but not yet fsynced.
+    pub fn unsynced_records(&self) -> u64 {
+        if self.dirty {
+            self.appends_since_sync
+        } else {
+            0
+        }
+    }
+
+    /// Highest assigned sequence number (0 if none yet).
+    pub fn last_seq(&self) -> u64 {
+        self.next_seq - 1
+    }
+
+    fn bump_next_seq(&mut self, at_least: u64) {
+        self.next_seq = self.next_seq.max(at_least);
+    }
+}
+
+/// Write a checkpoint: covered seq + full model artifact, atomically.
+pub fn write_checkpoint(path: &Path, model: &dyn Surrogate, seq: u64) -> Result<u64> {
+    fsio::atomic_write(path, |w| {
+        w.write_all(&CKPT_MAGIC)?;
+        w.write_all(&CKPT_VERSION.to_le_bytes())?;
+        w.write_all(&seq.to_le_bytes())?;
+        faults::hit("ckpt-pre-rename")?;
+        model.save(w).context("serializing checkpoint model")
+    })
+    .with_context(|| format!("writing checkpoint {}", path.display()))
+}
+
+/// Read a checkpoint back: `(covered seq, model)`.
+pub fn read_checkpoint(path: &Path) -> Result<(u64, Box<dyn Surrogate>)> {
+    let file =
+        File::open(path).with_context(|| format!("opening checkpoint {}", path.display()))?;
+    let mut r = std::io::BufReader::new(file);
+    let mut head = [0u8; 16];
+    r.read_exact(&mut head)
+        .with_context(|| format!("reading checkpoint header {}", path.display()))?;
+    ensure!(head[..4] == CKPT_MAGIC, "{} is not a checkpoint file", path.display());
+    let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
+    ensure!(version == CKPT_VERSION, "unsupported checkpoint version {version}");
+    let seq = u64::from_le_bytes(head[8..16].try_into().unwrap());
+    let model = SurrogateSpec::load(&mut r)
+        .with_context(|| format!("loading checkpoint model {}", path.display()))?;
+    Ok((seq, model))
+}
+
+/// Everything [`recover`] found in a WAL directory.
+pub struct Recovery {
+    /// `(covered seq, model)` from the checkpoint, if one exists.
+    pub checkpoint: Option<(u64, Box<dyn Surrogate>)>,
+    /// Validated records beyond the checkpoint, in append order.
+    pub replay: Vec<WalRecord>,
+    /// The opened log, positioned for appending.
+    pub wal: Wal,
+}
+
+/// Open a WAL directory: load the checkpoint, scan + repair the log,
+/// and filter the records that still need replaying. An empty or
+/// missing directory boots clean.
+pub fn recover(dir: &Path, policy: FsyncPolicy) -> Result<Recovery> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating wal dir {}", dir.display()))?;
+    let ckpt_path = dir.join(CHECKPOINT_FILE);
+    let checkpoint =
+        if ckpt_path.exists() { Some(read_checkpoint(&ckpt_path)?) } else { None };
+    let covered = checkpoint.as_ref().map_or(0, |(seq, _)| *seq);
+    let (mut wal, records) = Wal::open(&dir.join(WAL_FILE), policy)?;
+    wal.bump_next_seq(covered + 1);
+    let replay: Vec<WalRecord> = records.into_iter().filter(|r| r.seq > covered).collect();
+    Ok(Recovery { checkpoint, replay, wal })
+}
+
+/// Apply replayed records to a freshly booted model. Records aimed at
+/// other registry slots are skipped with a warning (runtime-loaded
+/// slots are not part of single-model recovery), as are records whose
+/// apply fails — the pre-crash client never got an `ok` for those
+/// either, because append happens before apply. Returns rows applied.
+pub fn replay_into(model: &mut dyn Surrogate, records: &[WalRecord], slot: &str) -> Result<usize> {
+    if records.is_empty() {
+        return Ok(0);
+    }
+    let online = model
+        .as_online_mut()
+        .context("wal replay needs an online-capable model")?;
+    let mut applied = 0;
+    for rec in records {
+        if rec.model != slot {
+            log::warn!(
+                "wal replay: skipping record seq {} for unknown slot {:?} (serving {:?})",
+                rec.seq,
+                rec.model,
+                slot
+            );
+            continue;
+        }
+        let d = rec.width - 1;
+        let mut xs = Matrix::zeros(rec.rows, d);
+        let mut ys = Vec::with_capacity(rec.rows);
+        for i in 0..rec.rows {
+            let row = &rec.data[i * rec.width..(i + 1) * rec.width];
+            xs.row_mut(i).copy_from_slice(&row[..d]);
+            ys.push(row[d]);
+        }
+        match online.observe_batch(&xs, &ys) {
+            Ok(()) => applied += rec.rows,
+            Err(e) => {
+                log::warn!("wal replay: record seq {} failed to apply ({e:#}); skipping", rec.seq)
+            }
+        }
+    }
+    Ok(applied)
+}
+
+/// Durable-observe configuration carried by `ckrig serve --wal`.
+#[derive(Debug, Clone)]
+pub struct DurabilityConfig {
+    pub dir: PathBuf,
+    pub fsync: FsyncPolicy,
+    /// Observations between automatic checkpoints (0 disables the count
+    /// trigger; drain still checkpoints).
+    pub checkpoint_every: u64,
+}
+
+/// The serving-facing durability handle: the WAL behind the mutex that
+/// orders appends, applies and checkpoints.
+pub struct Durability {
+    inner: Mutex<Wal>,
+    dir: PathBuf,
+    checkpoint_every: u64,
+    since_checkpoint: AtomicU64,
+    last_seq: AtomicU64,
+    unsynced: AtomicU64,
+    checkpoints: AtomicU64,
+}
+
+impl Durability {
+    pub fn new(wal: Wal, cfg: &DurabilityConfig) -> Arc<Self> {
+        let last = wal.last_seq();
+        Arc::new(Durability {
+            inner: Mutex::new(wal),
+            dir: cfg.dir.clone(),
+            checkpoint_every: cfg.checkpoint_every,
+            since_checkpoint: AtomicU64::new(0),
+            last_seq: AtomicU64::new(last),
+            unsynced: AtomicU64::new(0),
+            checkpoints: AtomicU64::new(0),
+        })
+    }
+
+    /// Append one acknowledged observation batch and, once it is as
+    /// durable as the fsync policy promises, apply it to the in-memory
+    /// model. The WAL lock is held across both steps so a concurrent
+    /// checkpoint can never snapshot a model state the log does not
+    /// cover. If `apply` fails the record stays in the log, but the
+    /// client gets an error — replay skips records that fail the same
+    /// deterministic way.
+    pub fn append_then<T>(
+        &self,
+        slot: &str,
+        rows: usize,
+        width: usize,
+        data: &[f64],
+        apply: impl FnOnce() -> Result<T>,
+    ) -> Result<T> {
+        let mut wal = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        wal.append(slot, rows, width, data)?;
+        self.last_seq.store(wal.last_seq(), Ordering::Relaxed);
+        self.unsynced.store(wal.unsynced_records(), Ordering::Relaxed);
+        let out = apply()?;
+        self.since_checkpoint.fetch_add(rows as u64, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    /// Snapshot `model` into the checkpoint file (atomic rename) and
+    /// truncate the log. Call with the *current serving generation*;
+    /// takes the WAL lock, then the model's read lock via `save`.
+    pub fn checkpoint(&self, model: &dyn Surrogate) -> Result<u64> {
+        let mut wal = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        wal.sync()?;
+        let seq = wal.last_seq();
+        write_checkpoint(&self.dir.join(CHECKPOINT_FILE), model, seq)?;
+        wal.reset()?;
+        self.since_checkpoint.store(0, Ordering::Relaxed);
+        self.unsynced.store(0, Ordering::Relaxed);
+        self.checkpoints.fetch_add(1, Ordering::Relaxed);
+        Ok(seq)
+    }
+
+    /// True once enough observations accumulated to warrant a snapshot.
+    pub fn wants_checkpoint(&self) -> bool {
+        self.checkpoint_every > 0
+            && self.since_checkpoint.load(Ordering::Relaxed) >= self.checkpoint_every
+    }
+
+    /// Periodic maintenance: flush an overdue interval-policy log.
+    pub fn tick(&self) {
+        let mut wal = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Err(e) = wal.sync_if_due() {
+            log::warn!("wal interval sync failed: {e:#}");
+        }
+        self.unsynced.store(wal.unsynced_records(), Ordering::Relaxed);
+    }
+
+    /// Force the log to disk (drain path).
+    pub fn flush(&self) -> Result<()> {
+        let mut wal = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        wal.sync()?;
+        self.unsynced.store(0, Ordering::Relaxed);
+        Ok(())
+    }
+
+    pub fn last_seq(&self) -> u64 {
+        self.last_seq.load(Ordering::Relaxed)
+    }
+
+    /// Appended-but-unsynced record count (the `health` WAL lag).
+    pub fn unsynced(&self) -> u64 {
+        self.unsynced.load(Ordering::Relaxed)
+    }
+
+    pub fn checkpoints_taken(&self) -> u64 {
+        self.checkpoints.load(Ordering::Relaxed)
+    }
+}
+
+/// Spawn the background checkpointer: every ~200ms it flushes an
+/// overdue interval-policy WAL and, once the observation-count trigger
+/// fires, snapshots the current serving generation from `registry`.
+/// Holds weak refs so the thread dies with the server; `stop` ends it
+/// promptly on drain.
+pub fn spawn_checkpointer(
+    dur: &Arc<Durability>,
+    registry: &Arc<crate::coordinator::ModelRegistry>,
+    slot: &str,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    let dur: Weak<Durability> = Arc::downgrade(dur);
+    let registry: Weak<crate::coordinator::ModelRegistry> = Arc::downgrade(registry);
+    let slot = slot.to_string();
+    std::thread::spawn(move || loop {
+        std::thread::sleep(Duration::from_millis(200));
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let (Some(dur), Some(registry)) = (dur.upgrade(), registry.upgrade()) else {
+            return;
+        };
+        dur.tick();
+        if dur.wants_checkpoint() {
+            if let Some(model) = registry.get(Some(&slot)) {
+                match dur.checkpoint(model.as_ref()) {
+                    Ok(seq) => log::info!("checkpointed {slot} at wal seq {seq}"),
+                    Err(e) => log::warn!("checkpoint failed: {e:#}"),
+                }
+            }
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_wal(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("ckrig_wal_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(WAL_FILE)
+    }
+
+    fn append_n(wal: &mut Wal, n: usize) {
+        for i in 0..n {
+            wal.append("live", 1, 3, &[i as f64, 1.0, 2.0]).unwrap();
+        }
+    }
+
+    #[test]
+    fn fsync_policy_parse() {
+        assert_eq!(FsyncPolicy::parse("always").unwrap(), FsyncPolicy::Always);
+        assert_eq!(FsyncPolicy::parse("never").unwrap(), FsyncPolicy::Never);
+        assert_eq!(FsyncPolicy::parse("every-8").unwrap(), FsyncPolicy::EveryN(8));
+        assert_eq!(
+            FsyncPolicy::parse("interval-50").unwrap(),
+            FsyncPolicy::Interval(Duration::from_millis(50))
+        );
+        assert!(FsyncPolicy::parse("sometimes").is_err());
+        for p in ["always", "never", "every-8", "interval-50"] {
+            assert_eq!(FsyncPolicy::parse(p).unwrap().to_string(), p);
+        }
+    }
+
+    #[test]
+    fn append_reopen_roundtrip() {
+        let path = temp_wal("roundtrip");
+        let (mut wal, recs) = Wal::open(&path, FsyncPolicy::Always).unwrap();
+        assert!(recs.is_empty(), "fresh log must be empty");
+        append_n(&mut wal, 5);
+        assert_eq!(wal.last_seq(), 5);
+        drop(wal);
+        let (wal, recs) = Wal::open(&path, FsyncPolicy::Always).unwrap();
+        assert_eq!(recs.len(), 5);
+        assert_eq!(recs[0].seq, 1);
+        assert_eq!(recs[4].data[0], 4.0);
+        assert_eq!(wal.last_seq(), 5);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn torn_final_record_truncated_on_open() {
+        let path = temp_wal("torn");
+        let (mut wal, _) = Wal::open(&path, FsyncPolicy::Always).unwrap();
+        append_n(&mut wal, 3);
+        drop(wal);
+        // Simulate a torn append: a frame header promising more payload
+        // than the file holds.
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&500u32.to_le_bytes()).unwrap();
+        f.write_all(&0xDEADu64.to_le_bytes()).unwrap();
+        f.write_all(&[7u8; 20]).unwrap();
+        drop(f);
+        let before = std::fs::metadata(&path).unwrap().len();
+        let (mut wal, recs) = Wal::open(&path, FsyncPolicy::Always).unwrap();
+        assert_eq!(recs.len(), 3, "good prefix must survive");
+        let after = std::fs::metadata(&path).unwrap().len();
+        assert!(after < before, "torn tail must be truncated");
+        // The repaired log keeps appending correctly.
+        append_n(&mut wal, 1);
+        drop(wal);
+        let (_, recs) = Wal::open(&path, FsyncPolicy::Always).unwrap();
+        assert_eq!(recs.len(), 4);
+        assert_eq!(recs[3].seq, 4);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn checksum_corrupt_record_preserves_prefix() {
+        let path = temp_wal("corrupt");
+        let (mut wal, _) = Wal::open(&path, FsyncPolicy::Always).unwrap();
+        append_n(&mut wal, 4);
+        let len = std::fs::metadata(&path).unwrap().len();
+        drop(wal);
+        // Flip one payload byte inside the last record.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let idx = len as usize - 5;
+        bytes[idx] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let (_, recs) = Wal::open(&path, FsyncPolicy::Always).unwrap();
+        assert_eq!(recs.len(), 3, "records before the corrupt one must survive");
+        assert_eq!(recs.last().unwrap().seq, 3);
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn corruption_mid_log_drops_everything_after() {
+        let path = temp_wal("midlog");
+        let (mut wal, _) = Wal::open(&path, FsyncPolicy::Always).unwrap();
+        append_n(&mut wal, 6);
+        drop(wal);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x55;
+        std::fs::write(&path, &bytes).unwrap();
+        let (_, recs) = Wal::open(&path, FsyncPolicy::Always).unwrap();
+        assert!(recs.len() < 6, "corruption must cut the log");
+        for (i, r) in recs.iter().enumerate() {
+            assert_eq!(r.seq, i as u64 + 1, "surviving prefix must be contiguous");
+        }
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn empty_or_missing_dir_boots_clean() {
+        let dir = std::env::temp_dir().join(format!("ckrig_wal_clean_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let rec = recover(&dir, FsyncPolicy::Always).unwrap();
+        assert!(rec.checkpoint.is_none());
+        assert!(rec.replay.is_empty());
+        assert_eq!(rec.wal.last_seq(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn recovery_skips_records_covered_by_checkpoint_seq() {
+        // recover() must filter seq <= covered even when the WAL was not
+        // truncated (= crash between checkpoint rename and reset).
+        let dir = std::env::temp_dir().join(format!("ckrig_wal_cover_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let (mut wal, _) = Wal::open(&dir.join(WAL_FILE), FsyncPolicy::Always).unwrap();
+        append_n(&mut wal, 5);
+        drop(wal);
+        // A checkpoint covering seq 3 exists but the log was never
+        // truncated — exactly the crash window between rename and
+        // reset. Replay must skip the covered prefix.
+        let (mut wal, recs) = Wal::open(&dir.join(WAL_FILE), FsyncPolicy::Always).unwrap();
+        let covered = 3u64;
+        wal.bump_next_seq(covered + 1);
+        let replay: Vec<_> = recs.into_iter().filter(|r| r.seq > covered).collect();
+        assert_eq!(replay.len(), 2);
+        assert_eq!(replay[0].seq, 4);
+        assert_eq!(wal.last_seq(), 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn every_n_policy_tracks_unsynced() {
+        let path = temp_wal("everyn");
+        let (mut wal, _) = Wal::open(&path, FsyncPolicy::EveryN(3)).unwrap();
+        wal.append("live", 1, 2, &[0.0, 0.0]).unwrap();
+        wal.append("live", 1, 2, &[1.0, 0.0]).unwrap();
+        assert_eq!(wal.unsynced_records(), 2);
+        wal.append("live", 1, 2, &[2.0, 0.0]).unwrap();
+        assert_eq!(wal.unsynced_records(), 0, "third append must sync");
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+}

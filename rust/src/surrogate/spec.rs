@@ -232,23 +232,15 @@ pub(crate) fn read_boxed(
 }
 
 /// Save any surrogate to a file, returning the artifact size in bytes.
+/// The write is atomic (temp file + fsync + rename): a crash mid-save
+/// can never leave a truncated artifact in place of the old good one.
 pub fn save_to_path(model: &dyn Surrogate, path: impl AsRef<Path>) -> Result<u64> {
     let path = path.as_ref();
-    if let Some(parent) = path.parent() {
-        if !parent.as_os_str().is_empty() {
-            std::fs::create_dir_all(parent)
-                .with_context(|| format!("creating {}", parent.display()))?;
-        }
-    }
-    let file = std::fs::File::create(path)
-        .with_context(|| format!("creating artifact {}", path.display()))?;
-    let mut w = std::io::BufWriter::new(file);
-    model
-        .save(&mut w)
-        .with_context(|| format!("serializing {} to {}", model.name(), path.display()))?;
-    use std::io::Write as _;
-    w.flush()?;
-    Ok(std::fs::metadata(path)?.len())
+    crate::util::fsio::atomic_write(path, |w| {
+        model
+            .save(w)
+            .with_context(|| format!("serializing {} to {}", model.name(), path.display()))
+    })
 }
 
 #[cfg(test)]

@@ -1,0 +1,226 @@
+//! Fault injection for chaos testing, compiled behind the
+//! `fault-injection` cargo feature.
+//!
+//! The serving stack is instrumented with named injection points —
+//! `faults::hit("wal-post-append")` and friends — that are free no-ops
+//! in a normal build. With `--features fault-injection`, points are
+//! armed through the `CKRIG_FAULTS` environment variable or
+//! `ckrig serve --faults SPEC`:
+//!
+//! ```text
+//! CKRIG_FAULTS = entry[,entry...]
+//! entry        = <point>:<action>[@<skip>][x<count>]
+//! action       = crash | err | delay-<ms>
+//! ```
+//!
+//! The first `skip` hits at a point pass through untouched; the next
+//! `count` hits fire (default: every subsequent hit). Actions:
+//!
+//! - `crash` — kill the process on the spot with SIGKILL (no unwinding,
+//!   no destructors, no flushes: the moral equivalent of `kill -9`).
+//! - `err` — return an injected error from the hit.
+//! - `delay-<ms>` — stall the hitting thread for `<ms>` milliseconds.
+//!
+//! Instrumented points: `wal-pre-fsync` and `wal-post-append` (durable
+//! observe path), `ckpt-pre-rename` (checkpoint writer), `accept-delay`
+//! (listener accept loop), `conn-read` / `conn-write` (per-request
+//! socket handling), `spredict` and `spredict-drop` (shard predict
+//! handler; `drop` severs the connection without replying).
+
+use anyhow::Result;
+
+/// Report a hit at a named injection point. Without the
+/// `fault-injection` feature this is an inlined `Ok(())`.
+#[inline]
+pub fn hit(point: &str) -> Result<()> {
+    #[cfg(feature = "fault-injection")]
+    return armed::hit(point);
+    #[cfg(not(feature = "fault-injection"))]
+    {
+        let _ = point;
+        Ok(())
+    }
+}
+
+/// Arm (or re-arm) the process-wide fault plan from a spec string.
+/// Errors in a build without the feature so a `--faults` flag can't be
+/// silently ignored.
+pub fn arm(spec: &str) -> Result<()> {
+    #[cfg(feature = "fault-injection")]
+    return armed::arm(spec);
+    #[cfg(not(feature = "fault-injection"))]
+    {
+        let _ = spec;
+        anyhow::bail!("fault injection not compiled in; rebuild with --features fault-injection")
+    }
+}
+
+#[cfg(feature = "fault-injection")]
+mod armed {
+    use anyhow::{bail, Context, Result};
+    use std::sync::{Mutex, OnceLock};
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    enum Action {
+        Crash,
+        Err,
+        DelayMs(u64),
+    }
+
+    #[derive(Debug)]
+    struct Entry {
+        point: String,
+        action: Action,
+        /// Hits that pass through before the entry starts firing.
+        skip: u64,
+        /// Hits that fire once armed; `u64::MAX` = forever.
+        count: u64,
+        hits: u64,
+    }
+
+    static PLAN: OnceLock<Mutex<Vec<Entry>>> = OnceLock::new();
+
+    fn plan() -> &'static Mutex<Vec<Entry>> {
+        PLAN.get_or_init(|| {
+            let spec = std::env::var("CKRIG_FAULTS").unwrap_or_default();
+            let entries = match parse(&spec) {
+                Ok(e) => e,
+                Err(err) => {
+                    eprintln!("ignoring malformed CKRIG_FAULTS: {err:#}");
+                    Vec::new()
+                }
+            };
+            Mutex::new(entries)
+        })
+    }
+
+    pub fn arm(spec: &str) -> Result<()> {
+        let entries = parse(spec)?;
+        *plan().lock().unwrap_or_else(std::sync::PoisonError::into_inner) = entries;
+        Ok(())
+    }
+
+    pub fn hit(point: &str) -> Result<()> {
+        let fired = {
+            let mut entries = plan().lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            let mut fired = None;
+            for e in entries.iter_mut().filter(|e| e.point == point) {
+                let n = e.hits;
+                e.hits += 1;
+                if n >= e.skip && n - e.skip < e.count {
+                    fired = Some(e.action);
+                    break;
+                }
+            }
+            fired
+        };
+        match fired {
+            None => Ok(()),
+            Some(Action::Crash) => {
+                eprintln!("fault-injection: crashing at {point}");
+                die();
+            }
+            Some(Action::Err) => bail!("injected fault at {point}"),
+            Some(Action::DelayMs(ms)) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                Ok(())
+            }
+        }
+    }
+
+    /// Die like `kill -9`: SIGKILL ourselves where possible so no
+    /// unwinding, atexit hooks, or buffered flushes run.
+    fn die() -> ! {
+        #[cfg(unix)]
+        {
+            extern "C" {
+                fn kill(pid: i32, sig: i32) -> i32;
+                fn getpid() -> i32;
+            }
+            const SIGKILL: i32 = 9;
+            unsafe {
+                kill(getpid(), SIGKILL);
+            }
+        }
+        std::process::abort()
+    }
+
+    fn parse(spec: &str) -> Result<Vec<Entry>> {
+        let mut entries = Vec::new();
+        for raw in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (point, rest) = raw
+                .split_once(':')
+                .with_context(|| format!("fault entry {raw:?}: expected <point>:<action>"))?;
+            let mut head = rest;
+            let mut count = None;
+            if let Some((h, c)) = head.rsplit_once('x') {
+                if let Ok(c) = c.parse::<u64>() {
+                    head = h;
+                    count = Some(c);
+                }
+            }
+            let mut skip = 0;
+            if let Some((h, s)) = head.rsplit_once('@') {
+                skip = s
+                    .parse::<u64>()
+                    .with_context(|| format!("fault entry {raw:?}: bad skip {s:?}"))?;
+                head = h;
+            }
+            let action = match head {
+                "crash" => Action::Crash,
+                "err" => Action::Err,
+                _ => match head.strip_prefix("delay-") {
+                    Some(ms) => Action::DelayMs(
+                        ms.parse()
+                            .with_context(|| format!("fault entry {raw:?}: bad delay {ms:?}"))?,
+                    ),
+                    None => bail!("fault entry {raw:?}: unknown action {head:?}"),
+                },
+            };
+            entries.push(Entry {
+                point: point.to_string(),
+                action,
+                skip,
+                count: count.unwrap_or(u64::MAX),
+                hits: 0,
+            });
+        }
+        Ok(entries)
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn parse_grammar() {
+            let e = parse("wal-post-append:crash@3x1, spredict:delay-250, conn-write:errx2")
+                .unwrap();
+            assert_eq!(e.len(), 3);
+            assert_eq!(e[0].point, "wal-post-append");
+            assert_eq!(e[0].action, Action::Crash);
+            assert_eq!((e[0].skip, e[0].count), (3, 1));
+            assert_eq!(e[1].action, Action::DelayMs(250));
+            assert_eq!((e[1].skip, e[1].count), (0, u64::MAX));
+            assert_eq!(e[2].action, Action::Err);
+            assert_eq!((e[2].skip, e[2].count), (0, 2));
+            assert!(parse("nocolon").is_err());
+            assert!(parse("p:explode").is_err());
+            assert!(parse("p:delay-abc").is_err());
+        }
+
+        #[test]
+        fn skip_and_count_windows() {
+            // Exercised via arm()+hit() on a point name no product code
+            // uses, so parallel tests can't interfere.
+            arm("test-window:err@2x2").unwrap();
+            assert!(hit("test-window").is_ok(), "hit 1 is inside skip");
+            assert!(hit("test-window").is_ok(), "hit 2 is inside skip");
+            assert!(hit("test-window").is_err(), "hit 3 fires");
+            assert!(hit("test-window").is_err(), "hit 4 fires");
+            assert!(hit("test-window").is_ok(), "hit 5 is past the count");
+            assert!(hit("unrelated-point").is_ok());
+            arm("").unwrap();
+        }
+    }
+}

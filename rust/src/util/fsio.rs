@@ -1,0 +1,130 @@
+//! Crash-safe filesystem primitives.
+//!
+//! Every artifact the crate persists (fitted models, shard splits, WAL
+//! checkpoints) goes through [`atomic_write`]: serialize into a hidden
+//! temp file in the target directory, fsync the file, rename it over the
+//! destination, then fsync the directory so the rename itself survives
+//! power loss. A reader never observes a partial file — it sees the old
+//! content or the new content, nothing in between — and a crash mid-save
+//! can no longer destroy the previous good copy.
+
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Atomically replace `path` with whatever `write` serializes.
+///
+/// Returns the byte length of the written file. On any error the temp
+/// file is removed and the previous content of `path` (if any) is left
+/// untouched.
+pub fn atomic_write(
+    path: &Path,
+    write: impl FnOnce(&mut dyn Write) -> Result<()>,
+) -> Result<u64> {
+    let parent = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    std::fs::create_dir_all(&parent)
+        .with_context(|| format!("creating {}", parent.display()))?;
+    let stem = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "artifact".into());
+    let tmp = parent.join(format!(".{stem}.tmp.{}", std::process::id()));
+
+    let result = (|| -> Result<u64> {
+        let file = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        let mut buf = std::io::BufWriter::new(file);
+        write(&mut buf)?;
+        buf.flush()?;
+        let file = buf
+            .into_inner()
+            .map_err(|e| anyhow::anyhow!("flushing {}: {e}", tmp.display()))?;
+        // File content must be durable *before* the rename publishes it:
+        // otherwise the rename can survive a crash while the bytes do not.
+        file.sync_all()
+            .with_context(|| format!("fsyncing {}", tmp.display()))?;
+        let bytes = file.metadata()?.len();
+        drop(file);
+        std::fs::rename(&tmp, path).with_context(|| {
+            format!("renaming {} over {}", tmp.display(), path.display())
+        })?;
+        sync_dir(&parent)?;
+        Ok(bytes)
+    })();
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
+}
+
+/// fsync a directory so a just-renamed or just-created entry is durable.
+/// No-op on platforms where directories cannot be opened as files.
+pub fn sync_dir(dir: &Path) -> Result<()> {
+    #[cfg(unix)]
+    if let Ok(d) = std::fs::File::open(dir) {
+        d.sync_all()
+            .with_context(|| format!("fsyncing directory {}", dir.display()))?;
+    }
+    #[cfg(not(unix))]
+    let _ = dir;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("ckrig_fsio_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn atomic_write_replaces_content() {
+        let dir = temp_dir("replace");
+        let path = dir.join("a.bin");
+        let n = atomic_write(&path, |w| {
+            w.write_all(b"first")?;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(n, 5);
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        atomic_write(&path, |w| {
+            w.write_all(b"second")?;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failed_write_preserves_old_file() {
+        let dir = temp_dir("preserve");
+        let path = dir.join("b.bin");
+        atomic_write(&path, |w| {
+            w.write_all(b"good")?;
+            Ok(())
+        })
+        .unwrap();
+        let err = atomic_write(&path, |w| {
+            w.write_all(b"partial")?;
+            anyhow::bail!("serializer blew up")
+        });
+        assert!(err.is_err());
+        assert_eq!(std::fs::read(&path).unwrap(), b"good", "old file must survive");
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "temp file not cleaned up");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -8,6 +8,8 @@
 pub mod binio;
 pub mod cli;
 pub mod csv;
+pub mod faults;
+pub mod fsio;
 pub mod matrix;
 pub mod proptest;
 pub mod rng;

@@ -1,0 +1,308 @@
+//! Fault-injection chaos suite (v6). Compiled only with
+//! `--features fault-injection`; every scenario drives the real `ckrig`
+//! binary with armed injection points (`--faults`).
+//!
+//! * Crash-recovery gate: SIGKILL a `serve --wal` process mid-observe
+//!   stream (armed post-append crash), restart, and verify zero
+//!   acknowledged-but-lost observations — the rebooted server predicts
+//!   ≤ 1e-12 from an identically-fed never-crashed model.
+//! * Distributed chaos gate: injected stalls and connection drops on one
+//!   shard worker drop ZERO coordinator predictions; the degraded and
+//!   retry counters move, and the fleet heals back to ≤ 1e-12 of the
+//!   monolithic model once the faults disarm.
+//! * Client retry: a server that severs its first replies is transparent
+//!   to a `Client` with a `RetryPolicy`, and an error without one.
+#![cfg(feature = "fault-injection")]
+
+use cluster_kriging::cluster_kriging::{builder, ClusterKriging};
+use cluster_kriging::coordinator::{Client, RetryPolicy, ShardPool, ShardPoolConfig};
+use cluster_kriging::distributed::{self, ShardManifest, ShardedClusterKriging};
+use cluster_kriging::kernel::{Kernel, KernelKind};
+use cluster_kriging::kriging::{HyperOpt, NuggetMode, OrdinaryKriging, Surrogate};
+use cluster_kriging::surrogate::{self, SurrogateSpec};
+use cluster_kriging::util::proptest::gen_matrix;
+use cluster_kriging::util::rng::Rng;
+use std::io::{BufRead, BufReader};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn target(row: &[f64]) -> f64 {
+    row[0].sin() + 0.4 * row[1] * row[1]
+}
+
+fn fitted_ok(n: usize, seed: u64) -> Box<dyn Surrogate> {
+    let mut rng = Rng::new(seed);
+    let x = gen_matrix(&mut rng, n, 2, -3.0, 3.0);
+    let y: Vec<f64> = (0..n).map(|i| target(x.row(i))).collect();
+    let kernel = Kernel::new(KernelKind::SquaredExponential, vec![0.8, 1.1]);
+    Box::new(OrdinaryKriging::fit(x, &y, kernel, 1e-6).unwrap())
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ckrig_chaos_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+struct KillOnDrop(Child);
+
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn ckrig() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_ckrig"))
+}
+
+fn spawn_serve(args: &[&str]) -> (KillOnDrop, String) {
+    let mut child = KillOnDrop(
+        ckrig()
+            .arg("serve")
+            .args(args)
+            .args(["--addr", "127.0.0.1:0"])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawning ckrig serve"),
+    );
+    let stdout = child.0.stdout.take().unwrap();
+    let mut lines = BufReader::new(stdout).lines();
+    let addr = loop {
+        let line = lines
+            .next()
+            .expect("serve exited before announcing its address")
+            .unwrap();
+        if let Some(rest) = line.strip_prefix("serving on ") {
+            break rest.split_whitespace().next().unwrap().to_string();
+        }
+    };
+    (child, addr)
+}
+
+/// THE crash-recovery gate. The armed `wal-post-append:crash@4` point
+/// lets four observations through (appended, fsynced, applied, acked),
+/// then SIGKILLs the serving process on the fifth — after its record is
+/// durable but before it is applied or acknowledged. Recovery must hold
+/// exactly the five durable records: all four acked observations (the
+/// zero-loss guarantee) plus the durable-but-unacked fifth.
+#[test]
+fn sigkill_mid_stream_loses_no_acknowledged_observation() {
+    let dir = temp_dir("crash");
+    let artifact = dir.join("model.ck");
+    let model = fitted_ok(40, 31);
+    surrogate::save_to_path(model.as_ref(), &artifact).unwrap();
+    let wal_dir = dir.join("wal");
+
+    let (mut child, addr) = spawn_serve(&[
+        "--artifact",
+        artifact.to_str().unwrap(),
+        "--wal",
+        wal_dir.to_str().unwrap(),
+        "--fsync",
+        "always",
+        "--faults",
+        "wal-post-append:crash@4",
+    ]);
+    let mut client = Client::connect(&addr).unwrap();
+
+    let mut rng = Rng::new(41);
+    let stream = gen_matrix(&mut rng, 5, 2, -3.0, 3.0);
+    let mut durable: Vec<(Vec<f64>, f64)> = Vec::new();
+    for i in 0..stream.rows() {
+        let row = stream.row(i).to_vec();
+        let yi = target(&row);
+        let ack = client.observe(&row, yi);
+        durable.push((row, yi));
+        if i < 4 {
+            ack.unwrap_or_else(|e| panic!("observe {i} should be acked, got {e:#}"));
+        } else {
+            assert!(ack.is_err(), "observe {i} must die with the process");
+        }
+    }
+    let status = child.0.wait().unwrap();
+    assert!(!status.success(), "the armed crash point must SIGKILL the server");
+
+    // Reboot over the same WAL; no checkpoint was ever taken, so the
+    // artifact boots and the whole log replays.
+    let (child2, addr2) = spawn_serve(&[
+        "--artifact",
+        artifact.to_str().unwrap(),
+        "--wal",
+        wal_dir.to_str().unwrap(),
+    ]);
+    let mut client2 = Client::connect(&addr2).unwrap();
+
+    // Never-crashed twin: the same artifact fed the five durable
+    // observations in order.
+    let mut reference = SurrogateSpec::load_path(&artifact).unwrap();
+    for (row, yi) in &durable {
+        reference.as_online_mut().unwrap().observe(row, *yi).unwrap();
+    }
+    let probe = gen_matrix(&mut rng, 12, 2, -3.5, 3.5);
+    let expected = reference.predict(&probe).unwrap();
+    for i in 0..probe.rows() {
+        let (mean, variance) = client2.predict(probe.row(i)).unwrap();
+        let scale = expected.mean[i].abs().max(1.0);
+        assert!(
+            (mean - expected.mean[i]).abs() <= 1e-12 * scale,
+            "recovered mean {i}: {} vs never-crashed {}",
+            mean,
+            expected.mean[i]
+        );
+        assert!(
+            (variance - expected.variance[i]).abs()
+                <= 1e-12 * expected.variance[i].abs().max(1.0),
+            "recovered variance {i}: {} vs never-crashed {}",
+            variance,
+            expected.variance[i]
+        );
+    }
+    drop(child2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The distributed chaos gate. Worker 1 is armed with a 700 ms stall on
+/// its first `spredict` plus three connection drops starting at its
+/// second — exercising, in order: a stall absorbed by the request
+/// deadline, a drop healed by the pool's immediate retry (or failing
+/// that, a degraded merge + background reconnect), and a clean fleet
+/// once the injection window is exhausted. Every coordinator prediction
+/// must succeed throughout, and the healed fleet must match the
+/// monolithic model to ≤ 1e-12.
+#[test]
+fn shard_stalls_and_drops_degrade_but_never_fail_the_coordinator() {
+    let dir = temp_dir("fleet");
+    let artifact = dir.join("owck4.ck");
+    let mut rng = Rng::new(7);
+    let x = gen_matrix(&mut rng, 160, 2, -3.0, 3.0);
+    let y: Vec<f64> = (0..160).map(|i| target(x.row(i))).collect();
+    let opt = HyperOpt {
+        restarts: 1,
+        max_evals: 10,
+        isotropic: true,
+        nugget: NuggetMode::Fixed(1e-8),
+        ..HyperOpt::default()
+    };
+    let cfg = builder::flavor("OWCK", 4, 7, opt).unwrap();
+    let mono = ClusterKriging::fit(&x, &y, cfg).unwrap();
+    let probe = gen_matrix(&mut rng, 16, 2, -3.0, 3.0);
+    let expected = mono.predict_batch(&probe);
+    surrogate::save_to_path(&mono, &artifact).unwrap();
+
+    let split = distributed::split_artifact(artifact.to_str().unwrap(), 2, dir.to_str().unwrap())
+        .unwrap();
+    let manifest = ShardManifest::load_path(&split.manifest_path).unwrap();
+
+    // Worker 0 is healthy; worker 1 carries the injection plan.
+    let (_w0, addr0) = spawn_serve(&["--shard", split.shard_paths[0].to_str().unwrap()]);
+    let (_w1, addr1) = spawn_serve(&[
+        "--shard",
+        split.shard_paths[1].to_str().unwrap(),
+        "--faults",
+        "spredict:delay-700x1,spredict-drop:err@1x3",
+    ]);
+    let pool = ShardPool::connect(
+        &[addr0, addr1],
+        &manifest,
+        ShardPoolConfig {
+            request_timeout: Duration::from_secs(2),
+            retry_backoff: Duration::from_millis(100),
+            ..ShardPoolConfig::default()
+        },
+    )
+    .unwrap();
+    let sharded = ShardedClusterKriging::new(manifest, Arc::clone(&pool)).unwrap();
+
+    // Hammer the fan-out until the fleet heals back to the monolithic
+    // answer. Every single prediction along the way must succeed —
+    // degraded merges included.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut requests = 0u64;
+    loop {
+        let got = sharded
+            .predict(&probe)
+            .unwrap_or_else(|e| panic!("coordinator dropped request {requests}: {e:#}"));
+        requests += 1;
+        let healed = pool.alive_count() == 2
+            && (0..probe.rows()).all(|i| {
+                (got.mean[i] - expected.mean[i]).abs() <= 1e-12
+                    && (got.variance[i] - expected.variance[i]).abs() <= 1e-12
+            });
+        if healed && requests >= 6 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "fleet never healed: alive {}/{}, degraded={}, retries={}",
+            pool.alive_count(),
+            pool.shard_count(),
+            pool.degraded_merges(),
+            pool.retried_requests()
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(
+        pool.retried_requests() >= 1,
+        "the injected drops must exercise the immediate-retry path"
+    );
+    assert!(
+        pool.degraded_merges() >= 1,
+        "a drop that out-survives the retry must surface as a degraded merge"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A server that severs its first two replies (`conn-write:errx2`) looks
+/// like a flaky network: a plain client surfaces the failure, a client
+/// with a `RetryPolicy` reconnects and succeeds transparently.
+#[test]
+fn client_retry_rides_out_severed_replies() {
+    let dir = temp_dir("retry");
+    let artifact = dir.join("model.ck");
+    let model = fitted_ok(30, 13);
+    surrogate::save_to_path(model.as_ref(), &artifact).unwrap();
+
+    let (child, addr) = spawn_serve(&[
+        "--artifact",
+        artifact.to_str().unwrap(),
+        "--faults",
+        "conn-write:errx2",
+    ]);
+
+    let probe = vec![0.3, -0.7];
+    let reference = SurrogateSpec::load_path(&artifact).unwrap();
+    let expected = reference
+        .predict(&cluster_kriging::util::matrix::Matrix::from_vec(1, 2, probe.clone()))
+        .unwrap();
+
+    // Without retry: the severed reply is an error (hit 1).
+    let mut plain = Client::connect(&addr).unwrap();
+    assert!(plain.predict_batch(None, &[&probe[..]]).is_err());
+
+    // With retry: hit 2 severs the first attempt, the reconnected second
+    // attempt passes.
+    let mut retrying = Client::connect(&addr).unwrap().with_retry(RetryPolicy {
+        max_retries: 2,
+        base: Duration::from_millis(5),
+        cap: Duration::from_millis(50),
+        seed: 3,
+    });
+    let got = retrying.predict_batch(None, &[&probe[..]]).unwrap();
+    assert_eq!(got.len(), 1);
+    assert!(
+        (got[0].0 - expected.mean[0]).abs() <= 1e-12
+            && (got[0].1 - expected.variance[0]).abs() <= 1e-12,
+        "retried answer diverged: {:?} vs ({}, {})",
+        got[0],
+        expected.mean[0],
+        expected.variance[0]
+    );
+    drop(child);
+    let _ = std::fs::remove_dir_all(&dir);
+}
