@@ -1,0 +1,260 @@
+//! Bench: streaming ingestion and bounded-memory serving (§M1/§M2 in
+//! EXPERIMENTS.md §Streaming).
+//!
+//!   M1  wall time and **enforced** peak resident bytes for a chunked
+//!       two-pass `fit_stream` over a synthetic row source at two memory
+//!       budgets. The source generates rows on the fly, so nothing but
+//!       the fit's own state is ever resident — the `peak <= budget`
+//!       assert is the gate the MemoryMeter must hold. Override the row
+//!       count with `CKRIG_STREAM_N` (default 1,000,000) and the budgets
+//!       with `CKRIG_STREAM_BUDGETS_MB` (default "32,128").
+//!   M2  prequential (predict-then-observe) rolling RMSE on a drifting
+//!       stream: sliding-window eviction vs grow-forever on the same
+//!       seed model. Windowed must win — old observations answer for a
+//!       regime that no longer exists. Override the stream length with
+//!       `CKRIG_STREAM_DRIFT_N` (default 400).
+//!
+//! Results are written to `BENCH_stream.json` (override with
+//! `CKRIG_BENCH_STREAM_JSON`) so CI tracks both gates from every push.
+//!
+//! ```bash
+//! CKRIG_STREAM_N=200000 CKRIG_STREAM_BUDGETS_MB=16,64 \
+//!   cargo bench --bench bench_stream
+//! ```
+
+use cluster_kriging::data::synthetic::drift_stream;
+use cluster_kriging::kriging::{HyperOpt, NuggetMode, Surrogate};
+use cluster_kriging::online::{OnlineModel, OnlineObserver, OnlinePolicy};
+use cluster_kriging::stream::{fit_stream, RowSource, StreamFitConfig};
+use cluster_kriging::util::matrix::Matrix;
+use cluster_kriging::util::rng::Rng;
+use std::time::Instant;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// The §M1 ground truth: smooth, nonlinear in the first two coordinates,
+/// linear in the rest (any d ≥ 2).
+fn target(r: &[f64]) -> f64 {
+    r[0].sin() + 0.5 * r[1] * r[1] + 0.25 * r[2..].iter().sum::<f64>()
+}
+
+/// A [`RowSource`] that *generates* its rows chunk by chunk — the bench
+/// can feed a million-point stream without ever materializing it, so
+/// measured peak memory is the fit's alone.
+struct SynthSource {
+    n: usize,
+    d: usize,
+    chunk_rows: usize,
+    at: usize,
+    seed: u64,
+    rng: Rng,
+}
+
+impl SynthSource {
+    fn new(n: usize, d: usize, chunk_rows: usize, seed: u64) -> Self {
+        Self { n, d, chunk_rows, at: 0, seed, rng: Rng::new(seed) }
+    }
+}
+
+impl RowSource for SynthSource {
+    fn reset(&mut self) -> anyhow::Result<()> {
+        // Re-seeding replays the identical stream for pass 2.
+        self.at = 0;
+        self.rng = Rng::new(self.seed);
+        Ok(())
+    }
+
+    fn next_chunk(&mut self) -> anyhow::Result<Option<Matrix>> {
+        if self.at >= self.n {
+            return Ok(None);
+        }
+        let rows = self.chunk_rows.min(self.n - self.at);
+        let mut chunk = Matrix::zeros(rows, self.d + 1);
+        for i in 0..rows {
+            let row = chunk.row_mut(i);
+            for v in row.iter_mut().take(self.d) {
+                *v = self.rng.uniform_in(-2.0, 2.0);
+            }
+            row[self.d] = target(&row[..self.d]);
+        }
+        self.at += rows;
+        Ok(Some(chunk))
+    }
+}
+
+fn main() {
+    let n = env_usize("CKRIG_STREAM_N", 1_000_000);
+    let d = env_usize("CKRIG_STREAM_D", 6).max(2);
+    let k = env_usize("CKRIG_STREAM_K", 8);
+    let budgets: Vec<usize> = std::env::var("CKRIG_STREAM_BUDGETS_MB")
+        .unwrap_or_else(|_| "32,128".into())
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    assert!(!budgets.is_empty(), "CKRIG_STREAM_BUDGETS_MB parsed to nothing");
+
+    // Fresh probe points the fit never saw, for a learned-something gate:
+    // streamed predictions must beat predicting the target mean.
+    let pn = 2000;
+    let mut prng = Rng::new(987);
+    let px = Matrix::from_vec(pn, d, prng.uniform_vec(pn * d, -2.0, 2.0));
+    let py: Vec<f64> = (0..pn).map(|i| target(px.row(i))).collect();
+    let y_mean = py.iter().sum::<f64>() / pn as f64;
+    let spread =
+        (py.iter().map(|v| (v - y_mean) * (v - y_mean)).sum::<f64>() / pn as f64).sqrt();
+
+    println!("== M1: streaming fit, {n} rows × {d}-D, multiscale k={k} ==");
+    let mut m1_records: Vec<String> = Vec::new();
+    for &budget_mb in &budgets {
+        let mut src = SynthSource::new(n, d, 4096, 42);
+        let cfg = StreamFitConfig::new(k, budget_mb << 20);
+        let t0 = Instant::now();
+        let (model, rep) = fit_stream(&mut src, &cfg).unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        assert!(
+            rep.peak_bytes <= rep.budget_bytes,
+            "memory budget violated: peak {} B > budget {} B",
+            rep.peak_bytes,
+            rep.budget_bytes
+        );
+        assert_eq!(rep.rows, n as u64, "fit must account for every streamed row");
+        let pred = model.predict(&px).unwrap();
+        let sse: f64 = py.iter().zip(&pred.mean).map(|(a, b)| (a - b) * (a - b)).sum();
+        let rmse = (sse / pn as f64).sqrt();
+        assert!(rmse < spread, "stream fit RMSE {rmse:.3} no better than target σ {spread:.3}");
+        let mb = 1.0 / (1u64 << 20) as f64;
+        println!(
+            "  {budget_mb:>4} MB budget: {secs:>8.2} s ({:>9.0} rows/s) | cap {:>4}/model | \
+             peak {:>6.1} MB | probe RMSE {rmse:.3} (target σ {spread:.3})",
+            n as f64 / secs,
+            rep.cap_per_model,
+            rep.peak_bytes as f64 * mb
+        );
+        m1_records.push(format!(
+            concat!(
+                "      {{\n",
+                "        \"budget_mb\": {budget},\n",
+                "        \"wall_s\": {secs:.3},\n",
+                "        \"rows_per_s\": {rate:.0},\n",
+                "        \"cap_per_model\": {cap},\n",
+                "        \"peak_bytes\": {peak},\n",
+                "        \"budget_bytes\": {bytes},\n",
+                "        \"probe_rmse\": {rmse:.6},\n",
+                "        \"target_sigma\": {spread:.6}\n",
+                "      }}"
+            ),
+            budget = budget_mb,
+            secs = secs,
+            rate = n as f64 / secs,
+            cap = rep.cap_per_model,
+            peak = rep.peak_bytes,
+            bytes = rep.budget_bytes,
+            rmse = rmse,
+            spread = spread,
+        ));
+    }
+
+    // == M2: rolling RMSE under drift — sliding window vs grow-forever ==
+    let stream = env_usize("CKRIG_STREAM_DRIFT_N", 400).max(160);
+    let window = 60;
+    let eval_from = stream * 5 / 8;
+    let f0 = |x: &[f64]| x[0].sin() + 0.5 * x[1];
+    let f1 = |x: &[f64]| -x[0].sin() - 0.5 * x[1] + 4.0;
+    let (xs, ys) = drift_stream(f0, f1, stream, 2, -2.0, 2.0, 0.01, 21);
+    let seed_model = || -> Box<dyn Surrogate> {
+        // Fitted on the f0 regime — exactly what a server boots with
+        // before the stream drifts away from it.
+        let m = 30;
+        let mut rng = Rng::new(6);
+        let x = Matrix::from_vec(m, 2, rng.uniform_vec(m * 2, -2.0, 2.0));
+        let y: Vec<f64> = (0..m).map(|i| f0(x.row(i))).collect();
+        let opt = HyperOpt {
+            restarts: 1,
+            max_evals: 10,
+            isotropic: true,
+            nugget: NuggetMode::Fixed(1e-6),
+            ..HyperOpt::default()
+        };
+        Box::new(opt.fit(x, &y).unwrap())
+    };
+    let run = |window: usize| -> (f64, f64, usize) {
+        let policy = OnlinePolicy {
+            staleness_budget: 0,
+            drift_zscore: 1e9,
+            window,
+            ..OnlinePolicy::default()
+        };
+        let online = OnlineModel::try_new(seed_model(), policy)
+            .unwrap_or_else(|m| panic!("{} should be online-capable", m.name()));
+        let t0 = Instant::now();
+        let mut sse = 0.0;
+        let mut count = 0usize;
+        for t in 0..xs.rows() {
+            let xrow = Matrix::from_vec(1, 2, xs.row(t).to_vec());
+            let pred = online.predict(&xrow).unwrap().mean[0];
+            if t >= eval_from {
+                sse += (pred - ys[t]) * (pred - ys[t]);
+                count += 1;
+            }
+            online.observer().unwrap().observe_batch(&xrow, &[ys[t]]).unwrap();
+        }
+        ((sse / count as f64).sqrt(), t0.elapsed().as_secs_f64(), online.stats().train_points)
+    };
+    let (w_rmse, w_secs, w_points) = run(window);
+    let (g_rmse, g_secs, g_points) = run(0);
+    assert!(
+        w_rmse < g_rmse,
+        "windowed rolling RMSE {w_rmse:.4} should beat grow-forever {g_rmse:.4} under drift"
+    );
+    assert!(w_points <= window, "window leaked: {w_points} > {window}");
+    println!(
+        "\n== M2: prequential rolling RMSE under drift, {stream} obs (tail from {eval_from}) =="
+    );
+    println!("  window={window:<4} RMSE {w_rmse:.4} | {w_secs:.2} s | {w_points:>4} live points");
+    println!("  grow-forever RMSE {g_rmse:.4} | {g_secs:.2} s | {g_points:>4} live points");
+
+    let json_path = std::env::var("CKRIG_BENCH_STREAM_JSON")
+        .unwrap_or_else(|_| "BENCH_stream.json".into());
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"m1\": {{\n",
+            "    \"rows\": {n},\n",
+            "    \"d\": {d},\n",
+            "    \"k\": {k},\n",
+            "    \"runs\": [\n{runs}\n    ]\n",
+            "  }},\n",
+            "  \"m2\": {{\n",
+            "    \"stream\": {stream},\n",
+            "    \"eval_from\": {eval_from},\n",
+            "    \"window\": {window},\n",
+            "    \"windowed_rmse\": {wr:.6},\n",
+            "    \"grow_forever_rmse\": {gr:.6},\n",
+            "    \"windowed_s\": {ws:.6},\n",
+            "    \"grow_forever_s\": {gs:.6},\n",
+            "    \"windowed_points\": {wp},\n",
+            "    \"grow_forever_points\": {gp}\n",
+            "  }}\n",
+            "}}\n"
+        ),
+        n = n,
+        d = d,
+        k = k,
+        runs = m1_records.join(",\n"),
+        stream = stream,
+        eval_from = eval_from,
+        window = window,
+        wr = w_rmse,
+        gr = g_rmse,
+        ws = w_secs,
+        gs = g_secs,
+        wp = w_points,
+        gp = g_points,
+    );
+    match std::fs::write(&json_path, &json) {
+        Ok(()) => println!("\nwrote {json_path}"),
+        Err(e) => eprintln!("\nfailed to write {json_path}: {e}"),
+    }
+}

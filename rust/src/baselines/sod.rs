@@ -177,6 +177,18 @@ impl crate::online::OnlineSurrogate for SubsetOfData {
     fn training_snapshot(&self) -> (Matrix, Vec<f64>) {
         (self.model.x_train().clone(), self.model.y_train().to_vec())
     }
+
+    fn training_len(&self) -> usize {
+        self.model.n_train()
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.model.resident_bytes()
+    }
+
+    // `forget_oldest` keeps the default `Ok(false)`: the reservoir is
+    // already bounded at `m`, and its slots are age-agnostic — evicting
+    // "row 0" would bias the uniform sample, not bound memory further.
 }
 
 #[cfg(test)]

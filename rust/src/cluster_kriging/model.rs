@@ -321,6 +321,12 @@ impl crate::online::OnlineSurrogate for ClusterKriging {
     fn training_snapshot(&self) -> (Matrix, Vec<f64>) {
         dedup_snapshot(&self.models, self.dim)
     }
+
+    fn resident_bytes(&self) -> usize {
+        // Per-cluster factors, not the deduped snapshot estimate — the
+        // whole point of the partition is that Σ n_c² ≪ n².
+        self.models.iter().map(|m| m.resident_bytes()).sum()
+    }
 }
 
 /// Distinct training observations across a set of per-cluster models.

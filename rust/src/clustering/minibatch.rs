@@ -1,0 +1,390 @@
+//! Mini-batch k-means (Sculley 2010) — the streaming partitioner.
+//!
+//! Full-batch Lloyd ([`super::kmeans`]) iterates over all n points per
+//! step, which is exactly what a bounded-memory ingestion path cannot
+//! afford. Sculley's variant consumes the stream in small batches and
+//! moves each centroid by a per-centroid learning rate `1/count` toward
+//! every point assigned to it — a convex combination that converges on
+//! the same objective (Eq. 7) with one pass over the data.
+//!
+//! Two streaming-specific mechanisms:
+//!
+//! * **Lazy k-means++ seeding** — rows are buffered until at least `k`
+//!   have been seen, then seeded with the same spread-proportional rule
+//!   as the batch path, so early chunks don't bias the initial layout.
+//! * **Reservoir reseeding** — a seeded uniform reservoir over the whole
+//!   stream backs empty-cluster repair: a centroid that goes
+//!   `reseed_patience` batches without a single assignment is torn down
+//!   and re-planted at the reservoir point farthest from the current
+//!   centroid set (the streaming analogue of Lloyd's farthest-point
+//!   repair, which needs all n points).
+
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+use crate::util::stats::sq_dist;
+
+/// Configuration for [`MiniBatchKMeans`].
+#[derive(Debug, Clone)]
+pub struct MiniBatchConfig {
+    pub k: usize,
+    /// Uniform sample of the stream kept for empty-cluster repair.
+    pub reservoir_capacity: usize,
+    /// Batches a centroid may go without assignments before reseeding.
+    pub reseed_patience: u32,
+    pub seed: u64,
+}
+
+impl MiniBatchConfig {
+    pub fn new(k: usize) -> Self {
+        Self { k, reservoir_capacity: 256, reseed_patience: 10, seed: 0xC2 }
+    }
+}
+
+/// Streaming k-means state: feed chunks with [`partial_fit`], read the
+/// layout back with [`centroids`] / [`assign`].
+///
+/// [`partial_fit`]: MiniBatchKMeans::partial_fit
+/// [`centroids`]: MiniBatchKMeans::centroids
+/// [`assign`]: MiniBatchKMeans::assign
+#[derive(Debug, Clone)]
+pub struct MiniBatchKMeans {
+    cfg: MiniBatchConfig,
+    /// `Some` once seeded; `k×d`.
+    centroids: Option<Matrix>,
+    /// Lifetime assignment counts (drives the `1/count` learning rate).
+    counts: Vec<u64>,
+    /// Consecutive batches with zero assignments, per centroid.
+    idle: Vec<u32>,
+    /// Rows buffered before seeding (flat, `init_d` wide).
+    init_buf: Vec<f64>,
+    d: Option<usize>,
+    /// Uniform reservoir over every row ever offered (flat rows).
+    reservoir: Vec<f64>,
+    reservoir_rows: usize,
+    seen: u64,
+    batches: u64,
+    rng: Rng,
+}
+
+impl MiniBatchKMeans {
+    pub fn new(cfg: MiniBatchConfig) -> Self {
+        assert!(cfg.k >= 1, "k must be >= 1");
+        let rng = Rng::new(cfg.seed);
+        let (k, cap) = (cfg.k, cfg.reservoir_capacity.max(cfg.k));
+        Self {
+            cfg,
+            centroids: None,
+            counts: vec![0; k],
+            idle: vec![0; k],
+            init_buf: Vec::new(),
+            d: None,
+            reservoir: Vec::with_capacity(cap),
+            reservoir_rows: 0,
+            seen: 0,
+            batches: 0,
+            rng,
+        }
+    }
+
+    /// Rows offered so far (across all batches).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// `Some(k×d)` once at least `k` rows have been offered.
+    pub fn centroids(&self) -> Option<&Matrix> {
+        self.centroids.as_ref()
+    }
+
+    /// Consume the state, returning the centroid matrix.
+    ///
+    /// Panics if fewer than `k` rows were ever offered.
+    pub fn into_centroids(self) -> Matrix {
+        self.centroids.expect("mini-batch k-means never seeded: fewer than k rows offered")
+    }
+
+    /// Absorb one chunk of the stream.
+    ///
+    /// Panics if `chunk` has zero columns or its width disagrees with
+    /// earlier chunks.
+    pub fn partial_fit(&mut self, chunk: &Matrix) {
+        if chunk.rows() == 0 {
+            return;
+        }
+        assert!(chunk.cols() > 0, "chunk has zero columns");
+        let d = *self.d.get_or_insert(chunk.cols());
+        assert_eq!(chunk.cols(), d, "chunk width changed mid-stream");
+
+        for i in 0..chunk.rows() {
+            self.offer_reservoir(chunk.row(i));
+        }
+        self.seen += chunk.rows() as u64;
+
+        if self.centroids.is_none() {
+            self.init_buf.extend_from_slice(chunk.as_slice());
+            if self.init_buf.len() / d < self.cfg.k {
+                return; // still too few rows to seed k centroids
+            }
+            let buf =
+                Matrix::from_vec(self.init_buf.len() / d, d, std::mem::take(&mut self.init_buf));
+            self.centroids = Some(plus_plus_init(&buf, self.cfg.k, &mut self.rng));
+            self.absorb_batch(&buf);
+            return;
+        }
+        self.absorb_batch(chunk);
+    }
+
+    /// Sculley's inner loop: per-point nearest-centroid assignment and a
+    /// `1/count` gradient step, then end-of-batch starvation repair.
+    fn absorb_batch(&mut self, batch: &Matrix) {
+        let centroids = self.centroids.as_mut().expect("seeded");
+        let k = centroids.rows();
+        let mut hit = vec![false; k];
+        for i in 0..batch.rows() {
+            let xi = batch.row(i);
+            let c = nearest(centroids, xi).0;
+            self.counts[c] += 1;
+            hit[c] = true;
+            let eta = 1.0 / self.counts[c] as f64;
+            let row = centroids.row_mut(c);
+            for j in 0..row.len() {
+                row[j] += eta * (xi[j] - row[j]);
+            }
+        }
+        self.batches += 1;
+        for c in 0..k {
+            if hit[c] {
+                self.idle[c] = 0;
+            } else {
+                self.idle[c] += 1;
+            }
+        }
+        self.reseed_starved();
+    }
+
+    /// Replant every centroid idle past the patience at the reservoir
+    /// point farthest from the current centroid set.
+    fn reseed_starved(&mut self) {
+        let d = self.d.expect("seeded");
+        for c in 0..self.cfg.k {
+            if self.idle[c] < self.cfg.reseed_patience || self.reservoir_rows == 0 {
+                continue;
+            }
+            let centroids = self.centroids.as_ref().expect("seeded");
+            let far = (0..self.reservoir_rows)
+                .max_by(|&a, &b| {
+                    let da = nearest(centroids, &self.reservoir[a * d..(a + 1) * d]).1;
+                    let db = nearest(centroids, &self.reservoir[b * d..(b + 1) * d]).1;
+                    da.partial_cmp(&db).unwrap()
+                })
+                .expect("reservoir non-empty");
+            let row = self.reservoir[far * d..(far + 1) * d].to_vec();
+            self.centroids.as_mut().expect("seeded").row_mut(c).copy_from_slice(&row);
+            self.counts[c] = 1;
+            self.idle[c] = 0;
+        }
+    }
+
+    /// Classic `cap / seen` reservoir acceptance, same rule as
+    /// [`crate::baselines::SubsetOfData::offer`].
+    fn offer_reservoir(&mut self, row: &[f64]) {
+        let cap = self.cfg.reservoir_capacity.max(self.cfg.k);
+        if self.reservoir_rows < cap {
+            self.reservoir.extend_from_slice(row);
+            self.reservoir_rows += 1;
+            return;
+        }
+        if self.rng.next_u64() % (self.seen + 1) < cap as u64 {
+            let slot = self.rng.below(cap);
+            let d = row.len();
+            self.reservoir[slot * d..(slot + 1) * d].copy_from_slice(row);
+        }
+    }
+
+    /// Nearest-centroid labels for `xt`. Panics before seeding.
+    pub fn assign(&self, xt: &Matrix) -> Vec<usize> {
+        super::kmeans::assign(self.centroids.as_ref().expect("not seeded"), xt)
+    }
+
+    /// Within-cluster sum of squares of `x` under the current layout
+    /// (the Eq. 7 objective, evaluated on whatever sample the caller can
+    /// afford to hold). Panics before seeding.
+    pub fn inertia_on(&self, x: &Matrix) -> f64 {
+        let centroids = self.centroids.as_ref().expect("not seeded");
+        (0..x.rows()).map(|i| nearest(centroids, x.row(i)).1).sum()
+    }
+}
+
+fn nearest(centroids: &Matrix, x: &[f64]) -> (usize, f64) {
+    let mut best = (0usize, f64::INFINITY);
+    for c in 0..centroids.rows() {
+        let dist = sq_dist(x, centroids.row(c));
+        if dist < best.1 {
+            best = (c, dist);
+        }
+    }
+    best
+}
+
+/// k-means++ seeding, identical rule to the batch path.
+fn plus_plus_init(x: &Matrix, k: usize, rng: &mut Rng) -> Matrix {
+    let (n, d) = x.shape();
+    let mut centroids = Matrix::zeros(k, d);
+    let first = rng.below(n);
+    centroids.row_mut(0).copy_from_slice(x.row(first));
+    let mut min_d: Vec<f64> = (0..n).map(|i| sq_dist(x.row(i), centroids.row(0))).collect();
+    for c in 1..k {
+        let total: f64 = min_d.iter().sum();
+        let pick = if total > 0.0 { rng.weighted_index(&min_d) } else { rng.below(n) };
+        centroids.row_mut(c).copy_from_slice(x.row(pick));
+        for i in 0..n {
+            let dist = sq_dist(x.row(i), centroids.row(c));
+            if dist < min_d[i] {
+                min_d[i] = dist;
+            }
+        }
+    }
+    centroids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::kmeans::{self, KMeansConfig};
+    use crate::util::proptest::{check_default, gen_matrix, gen_size};
+
+    fn two_blobs(n_per: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut rows = Vec::with_capacity(n_per * 4);
+        for _ in 0..n_per {
+            rows.push(rng.normal_with(0.0, 0.2));
+            rows.push(rng.normal_with(0.0, 0.2));
+        }
+        for _ in 0..n_per {
+            rows.push(rng.normal_with(8.0, 0.2));
+            rows.push(rng.normal_with(8.0, 0.2));
+        }
+        Matrix::from_vec(n_per * 2, 2, rows)
+    }
+
+    /// Stream a dataset in fixed chunks through `partial_fit`.
+    fn stream(mb: &mut MiniBatchKMeans, x: &Matrix, chunk: usize) {
+        let (n, d) = x.shape();
+        let mut at = 0;
+        while at < n {
+            let hi = (at + chunk).min(n);
+            let rows: Vec<f64> =
+                (at..hi).flat_map(|i| x.row(i).iter().copied()).collect();
+            mb.partial_fit(&Matrix::from_vec(hi - at, d, rows));
+            at = hi;
+        }
+    }
+
+    #[test]
+    fn separates_two_blobs_streamed() {
+        let x = two_blobs(100, 1);
+        let mut mb = MiniBatchKMeans::new(MiniBatchConfig::new(2));
+        stream(&mut mb, &x, 32);
+        let labels = mb.assign(&x);
+        let first = labels[0];
+        assert!(labels[..100].iter().all(|&l| l == first));
+        assert!(labels[100..].iter().all(|&l| l != first));
+    }
+
+    /// The ISSUE's inertia-gap gate: one streamed pass must land within a
+    /// modest factor of the full-batch multi-restart optimum.
+    #[test]
+    fn inertia_gap_vs_full_batch_is_small() {
+        let mut rng = Rng::new(7);
+        // Four well-spread Gaussian blobs in 3-D.
+        let centers = [[0.0, 0.0, 0.0], [6.0, 0.0, 0.0], [0.0, 6.0, 0.0], [6.0, 6.0, 6.0]];
+        let n_per = 150;
+        let mut rows = Vec::new();
+        for c in &centers {
+            for _ in 0..n_per {
+                for &m in c {
+                    rows.push(rng.normal_with(m, 0.5));
+                }
+            }
+        }
+        let x = Matrix::from_vec(n_per * centers.len(), 3, rows);
+        let full = kmeans::fit(&x, &KMeansConfig::new(4));
+        let mut mb = MiniBatchKMeans::new(MiniBatchConfig::new(4));
+        stream(&mut mb, &x, 50);
+        let gap = mb.inertia_on(&x) / full.inertia;
+        assert!(gap < 1.5, "mini-batch inertia {gap:.3}x the full-batch optimum");
+    }
+
+    #[test]
+    fn starved_centroid_is_reseeded_from_reservoir() {
+        // Seed with k=3 where one point is a far outlier that never
+        // recurs: the centroid planted there starves and must be pulled
+        // back into the populated region by the reservoir repair.
+        let mut mb = MiniBatchKMeans::new(MiniBatchConfig {
+            reseed_patience: 3,
+            ..MiniBatchConfig::new(3)
+        });
+        let init = Matrix::from_rows(&[&[0.0, 0.0], &[1.0, 1.0], &[500.0, 500.0]]);
+        mb.partial_fit(&init);
+        let mut rng = Rng::new(9);
+        for _ in 0..20 {
+            let rows: Vec<f64> = (0..40).map(|_| rng.uniform_in(-1.0, 2.0)).collect();
+            mb.partial_fit(&Matrix::from_vec(20, 2, rows));
+        }
+        let c = mb.centroids().unwrap();
+        for i in 0..c.rows() {
+            assert!(
+                c.row(i).iter().all(|v| v.abs() < 50.0),
+                "centroid {i} still stranded at {:?}",
+                c.row(i)
+            );
+        }
+    }
+
+    #[test]
+    fn buffers_until_k_rows_seen() {
+        let mut mb = MiniBatchKMeans::new(MiniBatchConfig::new(4));
+        mb.partial_fit(&Matrix::from_rows(&[&[0.0], &[1.0]]));
+        assert!(mb.centroids().is_none());
+        mb.partial_fit(&Matrix::from_rows(&[&[2.0], &[3.0]]));
+        assert_eq!(mb.centroids().unwrap().rows(), 4);
+        assert_eq!(mb.seen(), 4);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let x = two_blobs(60, 3);
+        let run = |seed| {
+            let mut mb = MiniBatchKMeans::new(MiniBatchConfig { seed, ..MiniBatchConfig::new(3) });
+            stream(&mut mb, &x, 25);
+            mb.into_centroids()
+        };
+        let (a, b) = (run(42), run(42));
+        for i in 0..a.rows() {
+            assert_eq!(a.row(i), b.row(i));
+        }
+    }
+
+    #[test]
+    fn labels_valid_and_centroids_finite_prop() {
+        check_default(|rng| {
+            let n = gen_size(rng, 10, 80);
+            let k = gen_size(rng, 1, 5.min(n));
+            let x = gen_matrix(rng, n, 3, -5.0, 5.0);
+            let mut mb = MiniBatchKMeans::new(MiniBatchConfig {
+                seed: rng.next_u64(),
+                ..MiniBatchConfig::new(k)
+            });
+            stream(&mut mb, &x, gen_size(rng, 1, 16));
+            crate::prop_assert!(mb.centroids().is_some(), "n >= k must seed");
+            let labels = mb.assign(&x);
+            crate::prop_assert!(labels.iter().all(|&l| l < k), "label out of range");
+            let c = mb.centroids().unwrap();
+            crate::prop_assert!(
+                c.as_slice().iter().all(|v| v.is_finite()),
+                "non-finite centroid"
+            );
+            Ok(())
+        });
+    }
+}

@@ -4,10 +4,13 @@
 //! * hard clustering — [`kmeans`] (OWCK);
 //! * soft clustering with overlap — [`fcm`] (OWFCK) and [`gmm`] (GMMCK);
 //! * objective-space partitioning — [`regression_tree`] (MTCK);
-//! plus the trivial [`random`] partitioner used as an ablation baseline.
+//! plus the trivial [`random`] partitioner used as an ablation baseline,
+//! and [`minibatch`] — a streaming k-means for datasets that never fit
+//! in memory at once (the [`crate::stream`] ingestion path).
 
 pub mod fcm;
 pub mod gmm;
 pub mod kmeans;
+pub mod minibatch;
 pub mod random;
 pub mod regression_tree;

@@ -402,17 +402,44 @@ fn dispatch(
                 total.saturating_sub(health.shards_down.load(Ordering::Relaxed)),
             ));
         }
+        // Aggregate memory posture of the online slots — the number an
+        // orchestrator watches to confirm eviction policies are holding.
+        let (points, bytes) = registry
+            .list()
+            .into_iter()
+            .filter_map(|m| registry.get(Some(&m.name)))
+            .filter_map(|model| model.observer().map(|o| o.online_stats()))
+            .fold((0usize, 0usize), |(p, b), os| {
+                (p + os.train_points, b + os.resident_bytes)
+            });
+        s.push_str(&format!(" model_points={points} model_bytes={bytes}"));
         return s;
     }
     if line == "stats" {
-        let slots: Vec<String> =
-            registry.list().into_iter().map(|m| m.name).collect();
-        return format!(
+        let mut slots = Vec::new();
+        let mut online = Vec::new();
+        for m in registry.list() {
+            if let Some(os) = registry
+                .get(Some(&m.name))
+                .and_then(|model| model.observer().map(|o| o.online_stats()))
+            {
+                online.push(format!(
+                    "{}[points={} history={} bytes={} evicted={}]",
+                    m.name, os.train_points, os.history_len, os.resident_bytes, os.evicted
+                ));
+            }
+            slots.push(m.name);
+        }
+        let mut s = format!(
             "ok {} slots={} default={}",
             metrics.summary(),
             slots.join(","),
             registry.default_name()
         );
+        if !online.is_empty() {
+            s.push_str(&format!(" online={}", online.join(",")));
+        }
+        return s;
     }
     if line == "models" {
         let rows: Vec<String> = registry
@@ -1380,8 +1407,12 @@ mod tests {
             Ok(())
         }
         fn online_stats(&self) -> crate::online::OnlineStats {
+            let n = self.ys.lock().unwrap().len();
             crate::online::OnlineStats {
-                observed: self.ys.lock().unwrap().len() as u64,
+                observed: n as u64,
+                train_points: n,
+                history_len: n,
+                resident_bytes: n * (self.dim + 1) * std::mem::size_of::<f64>(),
                 ..Default::default()
             }
         }
@@ -1426,6 +1457,28 @@ mod tests {
             server.metrics.observes.load(std::sync::atomic::Ordering::Relaxed),
             3
         );
+    }
+
+    #[test]
+    fn stats_and_health_report_model_memory() {
+        let server = Server::start_with_model(
+            Arc::new(Running::new(2)),
+            ServerConfig { addr: "127.0.0.1:0".into(), batcher: BatcherConfig::default() },
+        )
+        .unwrap();
+        let mut c = Client::connect(&server.local_addr.to_string()).unwrap();
+        c.observe(&[1.0, 2.0], 10.0).unwrap();
+        c.observe(&[3.0, 4.0], 20.0).unwrap();
+        // Per-slot history length + resident bytes ride the stats reply…
+        let stats = c.stats().unwrap();
+        assert!(
+            stats.contains("[points=2 history=2 bytes=48 evicted=0]"),
+            "{stats}"
+        );
+        // …and the aggregates ride health, next to the existing fields.
+        let health = c.request("health").unwrap();
+        assert!(health.contains("model_points=2"), "{health}");
+        assert!(health.contains("model_bytes=48"), "{health}");
     }
 
     #[test]

@@ -36,6 +36,43 @@ pub fn from_benchmark(
     Dataset::new(bench.name, Matrix::from_vec(n, d, xdata), y)
 }
 
+/// A deterministic **non-stationary** stream: the target drifts linearly
+/// from `f0` at the start to `f1` at the end,
+/// `y_t = (1 − w_t)·f0(x_t) + w_t·f1(x_t)` with `w_t = t / (n − 1)`.
+/// Points are uniform in `[lo, hi]^d`; `noise_sd` adds iid Gaussian
+/// observation noise. This is the workload where bounded-memory
+/// forgetting must beat grow-forever serving: old observations answer for
+/// a function that no longer exists (rolling-RMSE tests and
+/// `BENCH_stream.json` §M2).
+pub fn drift_stream(
+    f0: impl Fn(&[f64]) -> f64,
+    f1: impl Fn(&[f64]) -> f64,
+    n: usize,
+    d: usize,
+    lo: f64,
+    hi: f64,
+    noise_sd: f64,
+    seed: u64,
+) -> (Matrix, Vec<f64>) {
+    assert!(n >= 2, "drift_stream needs at least 2 points");
+    let mut rng = Rng::new(seed);
+    let mut x = Matrix::zeros(n, d);
+    let mut y = Vec::with_capacity(n);
+    for t in 0..n {
+        let row = x.row_mut(t);
+        for v in row.iter_mut() {
+            *v = rng.uniform_in(lo, hi);
+        }
+        let w = t as f64 / (n - 1) as f64;
+        let mut v = (1.0 - w) * f0(row) + w * f1(row);
+        if noise_sd > 0.0 {
+            v += rng.normal_with(0.0, noise_sd);
+        }
+        y.push(v);
+    }
+    (x, y)
+}
+
 /// Latin hypercube sample in `[lo, hi]^d` (used by the surrogate-
 /// optimization example for space-filling designs).
 pub fn latin_hypercube(n: usize, d: usize, lo: f64, hi: f64, seed: u64) -> Matrix {
@@ -101,6 +138,22 @@ mod tests {
         let a = from_benchmark(b, 20, 3, 0.1, 7);
         let c = from_benchmark(b, 20, 3, 0.1, 7);
         assert_eq!(a.y, c.y);
+    }
+
+    #[test]
+    fn drift_stream_interpolates_between_regimes() {
+        let f0 = |x: &[f64]| x[0];
+        let f1 = |x: &[f64]| -x[0] + 10.0;
+        let (x, y) = drift_stream(f0, f1, 101, 1, -1.0, 1.0, 0.0, 11);
+        assert_eq!(x.rows(), 101);
+        // Endpoints are pure regimes, the midpoint is the exact blend.
+        assert_eq!(y[0], f0(x.row(0)));
+        assert_eq!(y[100], f1(x.row(100)));
+        let mid = 0.5 * f0(x.row(50)) + 0.5 * f1(x.row(50));
+        assert!((y[50] - mid).abs() < 1e-12);
+        // Deterministic given the seed.
+        let (_, y2) = drift_stream(f0, f1, 101, 1, -1.0, 1.0, 0.0, 11);
+        assert_eq!(y, y2);
     }
 
     #[test]

@@ -155,4 +155,21 @@ impl crate::online::OnlineSurrogate for OrdinaryKriging {
     fn training_snapshot(&self) -> (Matrix, Vec<f64>) {
         (self.x_train().clone(), self.y_train().to_vec())
     }
+
+    fn training_len(&self) -> usize {
+        self.n_train()
+    }
+
+    fn resident_bytes(&self) -> usize {
+        OrdinaryKriging::resident_bytes(self)
+    }
+
+    fn forget_oldest(&mut self) -> anyhow::Result<bool> {
+        // `observe` appends, so row 0 is always the oldest point.
+        if self.n_train() <= 1 {
+            return Ok(false);
+        }
+        self.forget_point(0)?;
+        Ok(true)
+    }
 }

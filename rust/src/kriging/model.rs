@@ -268,6 +268,24 @@ impl OrdinaryKriging {
         self.commit(x_aug, y_aug, chol)
     }
 
+    /// Drop training point `i` with no replacement — the pure eviction
+    /// half of sliding-window forgetting: O(n²) via
+    /// [`Cholesky::removed_row`] with the same commit-on-success
+    /// atomicity as the other online ops. A model cannot forget its last
+    /// point (`EmptyTrainingSet`), so bounded windows stay ≥ 1.
+    pub fn forget_point(&mut self, i: usize) -> Result<(), KrigingError> {
+        let n = self.x.rows();
+        assert!(i < n, "forget_point: index {i} out of range for {n} training points");
+        if n == 1 {
+            return Err(KrigingError::EmptyTrainingSet);
+        }
+        let keep: Vec<usize> = (0..n).filter(|&j| j != i).collect();
+        let x_kept = self.x.select_rows(&keep);
+        let y_kept: Vec<f64> = keep.iter().map(|&j| self.y[j]).collect();
+        let chol = self.chol.removed_row(i);
+        self.commit(x_kept, y_kept, chol)
+    }
+
     fn validate_observation(&self, x_new: &[f64], y_new: f64) -> Result<(), KrigingError> {
         if x_new.len() != self.kernel.dim() {
             return Err(KrigingError::DimMismatch {
@@ -373,6 +391,20 @@ impl OrdinaryKriging {
         Ok(())
     }
 
+    /// Posterior mean only — O(n·d) per point (one correlation row
+    /// dotted with α), skipping the O(n²) variance solve. The streaming
+    /// residual pass calls this once per streamed row, where the full
+    /// [`Self::predict_one`] would turn ingestion quadratic in the
+    /// coarse-model size.
+    pub fn predict_mean_one(&self, xt: &[f64]) -> f64 {
+        let n = self.x.rows();
+        let mut mu = self.mu_hat;
+        for j in 0..n {
+            mu += self.kernel.corr(xt, self.x.row(j)) * self.alpha[j];
+        }
+        mu
+    }
+
     /// Single-point prediction (used by the router fast path).
     pub fn predict_one(&self, xt: &[f64]) -> (f64, f64) {
         let n = self.x.rows();
@@ -440,6 +472,15 @@ impl OrdinaryKriging {
     /// Prediction weights α = C⁻¹(y − μ̂1).
     pub fn alpha(&self) -> &[f64] {
         &self.alpha
+    }
+
+    /// Approximate bytes of fitted state resident in memory: the n×n
+    /// factor dominates, plus training inputs, targets, and weights.
+    /// Lets the serving `stats`/`health` ops make window eviction and
+    /// the streaming memory budget observable.
+    pub fn resident_bytes(&self) -> usize {
+        let (n, d) = self.x.shape();
+        (n * n + n * d + 2 * n) * std::mem::size_of::<f64>()
     }
 
     /// Serialize every fitted quantity — including the Cholesky factor,
@@ -835,6 +876,30 @@ mod tests {
         assert!((vo - vf).abs() < 1e-8, "{vo} vs {vf}");
         assert_eq!(m.n_train(), 25);
         assert_eq!(m.y_train().len(), 25);
+    }
+
+    #[test]
+    fn forget_point_matches_fit_from_scratch() {
+        let (mut m, x, y) = toy_model(25, 13, 1e-6);
+        m.forget_point(11).unwrap();
+        assert_eq!(m.n_train(), 24);
+        let keep: Vec<usize> = (0..25).filter(|&j| j != 11).collect();
+        let y_ref: Vec<f64> = keep.iter().map(|&j| y[j]).collect();
+        let fresh =
+            OrdinaryKriging::fit(x.select_rows(&keep), &y_ref, m.kernel().clone(), 1e-6).unwrap();
+        let (mo, vo) = m.predict_one(&[0.2, 0.4]);
+        let (mf, vf) = fresh.predict_one(&[0.2, 0.4]);
+        assert!((mo - mf).abs() < 1e-8, "{mo} vs {mf}");
+        assert!((vo - vf).abs() < 1e-8, "{vo} vs {vf}");
+    }
+
+    #[test]
+    fn forget_point_refuses_to_empty_the_model() {
+        let x = Matrix::from_rows(&[&[0.0, 0.0]]);
+        let kern = Kernel::se_isotropic(2, 1.0);
+        let mut m = OrdinaryKriging::fit(x, &[1.0], kern, 1e-8).unwrap();
+        assert!(matches!(m.forget_point(0), Err(KrigingError::EmptyTrainingSet)));
+        assert_eq!(m.n_train(), 1, "failed forget mutated the model");
     }
 
     #[test]

@@ -47,7 +47,16 @@
 //!    batches with the constant liar, and absorbs evaluations through the
 //!    same `observe` arithmetic; protocol v4 adds `suggest`/`tell` so any
 //!    served model doubles as an optimization service.
-//! 7. **Distribute** — the k-cluster decomposition shards across
+//! 7. **Stream** — datasets larger than memory are ingested in bounded
+//!    chunks ([`stream`]): `ckrig fit --stream` drives two passes over a
+//!    CSV it never fully holds — mini-batch k-means + a reservoir sketch
+//!    the layout, then per-cluster models fit and free as their rows
+//!    arrive — under an enforced `--memory-budget`, producing a coarse
+//!    global + fine residual-model ensemble (`multiscale:k`) with the
+//!    same artifact round-trip as every batch-fit model; on the serving
+//!    side, sliding-window eviction keeps long-running `observe` streams
+//!    at O(window²) instead of growing forever.
+//! 8. **Distribute** — the k-cluster decomposition shards across
 //!    processes ([`distributed`]): `ckrig shard` splits a fitted
 //!    ensemble into per-cluster shard artifacts plus a routing manifest,
 //!    shard workers serve raw per-cluster posteriors (protocol v5
@@ -77,3 +86,4 @@ pub mod coordinator;
 pub mod online;
 pub mod optimize;
 pub mod distributed;
+pub mod stream;

@@ -736,6 +736,94 @@ mod tests {
     }
 
     #[test]
+    fn ten_thousand_alternating_ops_track_refactorization() {
+        // A served model under sliding-window eviction applies
+        // remove/append/rank-1 ops continuously for days; the short-cycle
+        // props above cannot see slow error accumulation. This runs 10k
+        // alternating ops on one factor, tracking the matrix they imply,
+        // and pins the factor against a from-scratch refactorization
+        // every 500 ops.
+        //
+        // The tracked matrix is kept provably SPD throughout: it starts
+        // as an absolute-exponential kernel Gram over strictly increasing
+        // 1-D positions (well-conditioned, unlike an SE Gram on a grid),
+        // and every op preserves `A ⪰ Gram(positions)` — rank-1 adds are
+        // PSD, principal submatrices keep the ordering, and appended
+        // kernel rows then have a positive Schur complement.
+        let mut rng = crate::util::rng::Rng::new(0xA11);
+        let corr = |a: f64, b: f64| (-(a - b).abs()).exp();
+        const NUGGET: f64 = 1e-8;
+        let (min_w, max_w) = (8usize, 24usize);
+
+        let mut next_pos = 0.0f64;
+        let mut pos: Vec<f64> = Vec::new();
+        for _ in 0..16 {
+            next_pos += 0.25 + 0.5 * rng.uniform();
+            pos.push(next_pos);
+        }
+        let m0 = pos.len();
+        let mut a = Matrix::zeros(m0, m0);
+        for i in 0..m0 {
+            for j in 0..m0 {
+                a[(i, j)] = if i == j { 1.0 + NUGGET } else { corr(pos[i], pos[j]) };
+            }
+        }
+        let mut c = Cholesky::new(&a).unwrap();
+
+        let mut ops = 0usize;
+        let mut checks = 0usize;
+        while ops < 10_000 {
+            let m = pos.len();
+            match rng.below(3) {
+                0 if m > min_w => {
+                    let r = rng.below(m);
+                    c.remove_row(r);
+                    pos.remove(r);
+                    let keep: Vec<usize> = (0..m).filter(|&i| i != r).collect();
+                    a = a.select_rows(&keep).transpose().select_rows(&keep);
+                }
+                1 if m < max_w => {
+                    next_pos += 0.25 + 0.5 * rng.uniform();
+                    let row: Vec<f64> = pos.iter().map(|&p| corr(next_pos, p)).collect();
+                    c.append(&row, 1.0 + NUGGET).expect("SPD append cannot fail");
+                    pos.push(next_pos);
+                    let mut grown = Matrix::zeros(m + 1, m + 1);
+                    for i in 0..m {
+                        for j in 0..m {
+                            grown[(i, j)] = a[(i, j)];
+                        }
+                        grown[(i, m)] = row[i];
+                        grown[(m, i)] = row[i];
+                    }
+                    grown[(m, m)] = 1.0 + NUGGET;
+                    a = grown;
+                }
+                2 => {
+                    let v: Vec<f64> = (0..m).map(|_| rng.uniform_in(-0.2, 0.2)).collect();
+                    for i in 0..m {
+                        for j in 0..m {
+                            a[(i, j)] += v[i] * v[j];
+                        }
+                    }
+                    let mut l = c.l().clone();
+                    let mut work = v;
+                    rank_one_update(&mut l, 0, &mut work);
+                    c = Cholesky::from_parts(l, c.jitter()).unwrap();
+                }
+                _ => continue, // window bound hit; redraw (not an op)
+            }
+            ops += 1;
+            if ops % 500 == 0 {
+                let fresh = Cholesky::new(&a).unwrap();
+                let diff = c.l().max_abs_diff(fresh.l());
+                assert!(diff < 1e-6, "factor drifted by {diff} after {ops} ops (w={})", pos.len());
+                checks += 1;
+            }
+        }
+        assert_eq!(checks, 20, "every pinned checkpoint must have run");
+    }
+
+    #[test]
     fn rank_one_update_matches_direct_factorization() {
         let mut rng = crate::util::rng::Rng::new(11);
         for n in [1usize, 3, 8, 17] {

@@ -29,6 +29,7 @@ use cluster_kriging::metrics;
 use cluster_kriging::online::wal::{self, Durability, DurabilityConfig, FsyncPolicy};
 use cluster_kriging::online::{OnlineModel, OnlinePolicy, RefitConfig};
 use cluster_kriging::optimize::{Acquisition, Bounds, Optimizer, OptimizerConfig};
+use cluster_kriging::stream::{fit_stream, CsvRowSource, StreamFitConfig};
 use cluster_kriging::surrogate::{self, FitOptions, Standardized, SurrogateSpec};
 use cluster_kriging::util::cli::Args;
 use std::path::PathBuf;
@@ -97,9 +98,15 @@ fn print_usage() {
          \u{20}          [--datasets a,b] [--algos SoD,MTCK] [--out results/]\n\
          fit        --dataset <name> --algo SPEC [--seed S] [--n N] [--out model.ck]\n\
          \u{20}          (or legacy --flavor OWCK|OWFCK|GMMCK|MTCK --k K)\n\
+         \u{20}          (streaming: --stream data.csv --memory-budget MB [--k K]\n\
+         \u{20}           [--chunk-rows N] [--no-header] — bounded-memory two-pass\n\
+         \u{20}           multiscale fit; the CSV is never fully resident)\n\
          serve      --artifact model.ck [--name SLOT] [--addr host:port]\n\
          \u{20}          (or fit-then-serve: --dataset <name> --algo SPEC)\n\
          \u{20}          [--staleness N] [--drift-z Z] [--drift-window W]\n\
+         \u{20}          [--window N] (sliding-window eviction: keep serving\n\
+         \u{20}           O(window²) forever)  [--drift-evict F] (on drift, shed\n\
+         \u{20}           the oldest F·window points instead of refitting)\n\
          \u{20}          [--wal DIR [--fsync always|never|every-N|interval-MS]\n\
          \u{20}           [--checkpoint-every N]]  (durable observe + crash recovery;\n\
          \u{20}           SIGTERM/SIGINT drain, checkpoint, and exit cleanly)\n\
@@ -114,7 +121,7 @@ fn print_usage() {
          info       [--artifacts DIR]\n\
          \n\
          SPEC names any algorithm: mtck:8 owck:4 sod:512 fitc:64 bcm:8\n\
-         \u{20}    bcm-sh:8 kriging — `fit --out` writes a binary artifact that\n\
+         \u{20}    bcm-sh:8 multiscale:8 kriging — `fit --out` writes a binary artifact that\n\
          \u{20}    `serve --artifact` boots in milliseconds (no refit); the live\n\
          \u{20}    server hot-swaps models via `load <path> [name]` + `swap <name>`,\n\
          \u{20}    absorbs `observe`/`observeb` traffic in place (O(n_c²) cluster-\n\
@@ -196,7 +203,8 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         let csv = report::fig2_csv(&grids);
         let path = format!("{out_dir}/fig2.csv");
         std::fs::write(&path, &csv)?;
-        eprintln!("wrote {path} ({} rows)", csv.lines().count() - 1);
+        let rows: usize = grids.iter().flatten().map(|c| c.sweep.len()).sum();
+        eprintln!("wrote {path} ({rows} rows)");
     }
     Ok(())
 }
@@ -238,6 +246,9 @@ fn fit_spec(ds: &Dataset, spec: &SurrogateSpec, seed: u64) -> Result<(Standardiz
 }
 
 fn cmd_fit(args: &Args) -> Result<()> {
+    if let Some(path) = args.get("stream") {
+        return cmd_fit_stream(args, path);
+    }
     let dataset: String = args.require("dataset")?;
     let seed: u64 = args.get_parsed_or("seed", 1)?;
     let n: Option<usize> = args.get_parsed_or("n", 0).ok().filter(|&n| n > 0);
@@ -270,6 +281,52 @@ fn cmd_fit(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Bounded-memory fit from a CSV that is never fully resident: two
+/// chunked passes over the file build a multiscale (coarse trend +
+/// per-cluster residual) ensemble while a hard ledger keeps peak
+/// resident bytes under `--memory-budget` MB.
+fn cmd_fit_stream(args: &Args, path: &str) -> Result<()> {
+    let budget_mb: usize = args.get_parsed_or("memory-budget", 256)?;
+    anyhow::ensure!(budget_mb > 0, "--memory-budget is in MB and must be positive");
+    let default_k: usize = args.get_parsed_or("k", 8)?;
+    let k = match resolve_spec(args, &format!("multiscale:{default_k}"))? {
+        SurrogateSpec::Multiscale { k } => k,
+        other => bail!("fit --stream builds the multiscale flavor; got --algo {other}"),
+    };
+    let chunk_rows: usize = args.get_parsed_or("chunk-rows", 4096)?;
+    anyhow::ensure!(chunk_rows > 0, "--chunk-rows must be positive");
+    let has_header = !args.has_flag("no-header");
+
+    let cfg = StreamFitConfig {
+        chunk_rows,
+        seed: args.get_parsed_or("seed", 1)?,
+        ..StreamFitConfig::new(k, budget_mb << 20)
+    };
+    let mut src = CsvRowSource::open(path, cfg.chunk_rows, has_header)?;
+    eprintln!("streaming {path} (budget {budget_mb} MB, k={k}, chunks of {chunk_rows} rows)…");
+    let t0 = std::time::Instant::now();
+    let (model, rep) = fit_stream(&mut src, &cfg)?;
+    let fit_s = t0.elapsed().as_secs_f64();
+
+    let peak = rep.peak_bytes as f64 / (1u64 << 20) as f64;
+    let total = rep.budget_bytes as f64 / (1u64 << 20) as f64;
+    println!("algo        : {} (multiscale:{k})", model.name());
+    println!("rows        : {} in {} chunks ({} dims)", rep.rows, rep.chunks, rep.d);
+    println!("fit_seconds : {fit_s:.3}");
+    println!("cap/model   : {} points", rep.cap_per_model);
+    println!("coarse      : {} points", rep.coarse_points);
+    println!("clusters    : {:?} points", rep.cluster_points);
+    println!("dropped     : {} rows", rep.dropped_rows);
+    println!("peak memory : {peak:.1} MB of {total:.1} MB budget");
+
+    if let Some(out) = args.get("out") {
+        let bytes = surrogate::save_to_path(&model, out)?;
+        println!("artifact    : {out} ({bytes} bytes)");
+        println!("serve it    : ckrig serve --artifact {out}");
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7471").to_string();
     let name = args.get_or("name", "default").to_string();
@@ -286,6 +343,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         staleness_budget: args.get_parsed_or("staleness", 512)?,
         drift_window: args.get_parsed_or("drift-window", 64)?,
         drift_zscore: args.get_parsed_or("drift-z", 3.0)?,
+        window: args.get_parsed_or("window", 0)?,
+        drift_evict: args.get_parsed_or("drift-evict", 0.0)?,
         ..OnlinePolicy::default()
     };
 
@@ -440,12 +499,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .and_then(|m| m.observer().map(|o| o.online_stats()));
         match live {
             Some(s) => eprintln!(
-                "{} | online: observed={} since_refit={} refits={} drift={:.2}",
+                "{} | online: observed={} since_refit={} refits={} drift={:.2} \
+                 points={} evicted={} bytes={}",
                 server.metrics.summary(),
                 s.observed,
                 s.since_refit,
                 s.refits,
-                s.drift
+                s.drift,
+                s.train_points,
+                s.evicted,
+                s.resident_bytes
             ),
             None => eprintln!("{}", server.metrics.summary()),
         }

@@ -72,6 +72,32 @@ pub trait OnlineSurrogate: Surrogate {
     /// the inducing set; for overlapping Cluster Kriging partitions,
     /// duplicated rows are returned once.
     fn training_snapshot(&self) -> (Matrix, Vec<f64>);
+
+    /// Number of training points currently held. The default counts the
+    /// snapshot; implementations with a cheap counter should override.
+    fn training_len(&self) -> usize {
+        self.training_snapshot().1.len()
+    }
+
+    /// Approximate resident bytes of fitted state (factors + training
+    /// rows), for `stats`/`health` replies and eviction accounting. The
+    /// default estimates from the snapshot shape assuming one dense
+    /// factor; models that know better should override.
+    fn resident_bytes(&self) -> usize {
+        let (x, _) = self.training_snapshot();
+        let (n, d) = (x.rows(), x.cols());
+        (n * n + n * d + 2 * n) * std::mem::size_of::<f64>()
+    }
+
+    /// Drop the **oldest** training point, if this model supports
+    /// bounded-memory forgetting. Returns `Ok(true)` when a point was
+    /// evicted, `Ok(false)` when the model either cannot forget (the
+    /// default) or refuses to shrink further (e.g. one point left).
+    /// Eviction policies treat `Ok(false)` as "stop evicting", not as an
+    /// error.
+    fn forget_oldest(&mut self) -> anyhow::Result<bool> {
+        Ok(false)
+    }
 }
 
 /// Counters a serving adapter exposes for `stats` replies and tests.
@@ -86,6 +112,16 @@ pub struct OnlineStats {
     /// Current mean standardized residual over the drift window
     /// (0.0 until the window has filled).
     pub drift: f64,
+    /// Training points currently held by the live model (the eviction
+    /// policy's subject; bounded by `OnlinePolicy::window` when set).
+    pub train_points: usize,
+    /// Raw-unit refit-history length (bounded by `history_cap`).
+    pub history_len: usize,
+    /// Approximate resident bytes of the live model's fitted state.
+    pub resident_bytes: usize,
+    /// Training points evicted over this adapter's lifetime (window +
+    /// drift eviction combined).
+    pub evicted: u64,
 }
 
 /// Shared observation endpoint for `Arc<dyn Surrogate>` registry slots:

@@ -13,6 +13,14 @@
 //!   window mean above `drift_zscore` means the underlying function moved
 //!   and the model is confidently wrong — refit now, don't wait for the
 //!   budget.
+//!
+//! Orthogonal to both, the **eviction policy** bounds the *model itself*:
+//! with `window > 0` the serving adapter forgets the oldest training
+//! point whenever the in-model count exceeds the window (per-observation
+//! cost stays O(window²) forever), and with `drift_evict > 0` a tripped
+//! drift trigger sheds that fraction of the window instead of scheduling
+//! a refit — the fast reaction for non-stationary streams where the old
+//! regime's points are actively hurting.
 
 /// When to trigger a background refit for an online-serving model slot.
 #[derive(Debug, Clone, Copy)]
@@ -32,11 +40,31 @@ pub struct OnlinePolicy {
     /// which is exactly what a drifting workload wants refits to see.
     /// 0 disables the bound.
     pub history_cap: usize,
+    /// Upper bound on training points held *in the live model*. After
+    /// each absorbed batch the serving adapter evicts oldest points
+    /// ([`crate::online::OnlineSurrogate::forget_oldest`]) until the
+    /// model is back at the window, keeping per-observation cost
+    /// O(window²) on unbounded streams. 0 disables eviction
+    /// (grow-forever). Models that cannot forget ignore the window.
+    pub window: usize,
+    /// Fraction of the *window* (or of the current training set when no
+    /// window is set) evicted when the drift trigger fires, in `[0, 1]`.
+    /// When positive, a drift trip sheds the oldest points and resets the
+    /// monitor instead of scheduling a background refit — staleness
+    /// refits still run. 0.0 keeps the refit-on-drift behavior.
+    pub drift_evict: f64,
 }
 
 impl Default for OnlinePolicy {
     fn default() -> Self {
-        Self { staleness_budget: 512, drift_window: 64, drift_zscore: 3.0, history_cap: 65_536 }
+        Self {
+            staleness_budget: 512,
+            drift_window: 64,
+            drift_zscore: 3.0,
+            history_cap: 65_536,
+            window: 0,
+            drift_evict: 0.0,
+        }
     }
 }
 
@@ -60,6 +88,29 @@ impl OnlinePolicy {
             return Some(RefitReason::Staleness);
         }
         None
+    }
+
+    /// Points to evict to bring a model holding `n_train` points back
+    /// under the sliding window (0 when no window is set or the model is
+    /// within it).
+    pub fn window_excess(&self, n_train: usize) -> usize {
+        if self.window == 0 {
+            0
+        } else {
+            n_train.saturating_sub(self.window)
+        }
+    }
+
+    /// Points to shed on a drift trip: `drift_evict` of the window (or of
+    /// the current training set when no window is set), never the whole
+    /// model. 0 means drift keeps triggering refits instead.
+    pub fn drift_evict_count(&self, n_train: usize) -> usize {
+        if self.drift_evict <= 0.0 || !self.drift_evict.is_finite() {
+            return 0;
+        }
+        let base = if self.window > 0 { self.window.min(n_train) } else { n_train };
+        let count = (base as f64 * self.drift_evict.min(1.0)).floor() as usize;
+        count.min(n_train.saturating_sub(1))
     }
 }
 
@@ -180,6 +231,30 @@ mod tests {
         d.push(f64::INFINITY);
         assert!(d.mean().is_finite());
         assert!(d.mean() > 1e5);
+    }
+
+    #[test]
+    fn window_excess_counts_overflow_only() {
+        let p = OnlinePolicy { window: 32, ..OnlinePolicy::default() };
+        assert_eq!(p.window_excess(30), 0);
+        assert_eq!(p.window_excess(32), 0);
+        assert_eq!(p.window_excess(37), 5);
+        let unbounded = OnlinePolicy { window: 0, ..OnlinePolicy::default() };
+        assert_eq!(unbounded.window_excess(10_000), 0, "window 0 disables eviction");
+    }
+
+    #[test]
+    fn drift_evict_sheds_a_fraction_but_never_everything() {
+        let p = OnlinePolicy { window: 40, drift_evict: 0.25, ..OnlinePolicy::default() };
+        assert_eq!(p.drift_evict_count(100), 10, "quarter of the window");
+        assert_eq!(p.drift_evict_count(8), 2, "quarter of what is actually held");
+        let no_window = OnlinePolicy { window: 0, drift_evict: 0.5, ..OnlinePolicy::default() };
+        assert_eq!(no_window.drift_evict_count(60), 30);
+        assert_eq!(no_window.drift_evict_count(1), 0, "never empties the model");
+        let disabled = OnlinePolicy { drift_evict: 0.0, ..OnlinePolicy::default() };
+        assert_eq!(disabled.drift_evict_count(1000), 0);
+        let overshoot = OnlinePolicy { drift_evict: 5.0, ..OnlinePolicy::default() };
+        assert_eq!(overshoot.drift_evict_count(10), 9, "clamped to n-1");
     }
 
     #[test]

@@ -31,7 +31,7 @@
 use crate::coordinator::ModelRegistry;
 use crate::data::{Dataset, Standardizer};
 use crate::kriging::{Prediction, Surrogate};
-use crate::online::policy::{DriftMonitor, OnlinePolicy};
+use crate::online::policy::{DriftMonitor, OnlinePolicy, RefitReason};
 use crate::online::{OnlineObserver, OnlineStats};
 use crate::surrogate::{FitOptions, Standardized, SurrogateSpec};
 use crate::util::matrix::Matrix;
@@ -80,6 +80,7 @@ pub struct OnlineModel {
     policy: OnlinePolicy,
     observed: AtomicU64,
     since_refit: AtomicU64,
+    evicted: AtomicU64,
     drift: Mutex<DriftMonitor>,
     history: Option<Arc<Mutex<History>>>,
     refit: Option<Arc<RefitShared>>,
@@ -108,6 +109,7 @@ impl OnlineModel {
             policy,
             observed: AtomicU64::new(0),
             since_refit: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
             drift,
             history: None,
             refit: None,
@@ -148,11 +150,24 @@ impl OnlineModel {
     /// Current counters (also reachable through
     /// [`Surrogate::observer`] / [`OnlineObserver::online_stats`]).
     pub fn stats(&self) -> OnlineStats {
+        let (train_points, resident_bytes) = {
+            let guard = self.inner.read().unwrap_or_else(PoisonError::into_inner);
+            guard
+                .as_online()
+                .map_or((0, 0), |o| (o.training_len(), o.resident_bytes()))
+        };
+        let history_len = self.history.as_ref().map_or(0, |h| {
+            h.lock().unwrap_or_else(PoisonError::into_inner).y.len()
+        });
         OnlineStats {
             observed: self.observed.load(Ordering::Relaxed),
             since_refit: self.since_refit.load(Ordering::Relaxed),
             refits: self.refit.as_ref().map_or(0, |s| s.refits.load(Ordering::Relaxed)),
             drift: self.drift.lock().unwrap_or_else(PoisonError::into_inner).mean(),
+            train_points,
+            history_len,
+            resident_bytes,
+            evicted: self.evicted.load(Ordering::Relaxed),
         }
     }
 
@@ -394,8 +409,50 @@ impl OnlineObserver for OnlineModel {
                 let drift = self.drift.lock().unwrap_or_else(PoisonError::into_inner);
                 self.policy.should_refit(since as usize, &drift)
             };
+            // 5. Bounded-memory forgetting. The sliding window trims the
+            // model back after every batch (per-observation cost stays
+            // O(window²) forever); a drift trip with `drift_evict` set
+            // sheds a chunk of the oldest regime *instead of* refitting —
+            // the O(window²)-per-point reaction, not the O(n³) one.
+            let drift_evicting = matches!(reason, Some(RefitReason::Drift))
+                && self.policy.drift_evict > 0.0;
+            if self.policy.window > 0 || drift_evicting {
+                let mut evicted: u64 = 0;
+                {
+                    let mut guard =
+                        self.inner.write().unwrap_or_else(PoisonError::into_inner);
+                    let online = guard.as_online_mut().expect("validated at construction");
+                    let n = online.training_len();
+                    let mut target = self.policy.window_excess(n);
+                    if drift_evicting {
+                        target = target.max(self.policy.drift_evict_count(n));
+                    }
+                    for _ in 0..target {
+                        // `Ok(false)` = model cannot (or refuses to)
+                        // shrink further; an error never fails the
+                        // already-acknowledged observations.
+                        match online.forget_oldest() {
+                            Ok(true) => evicted += 1,
+                            Ok(false) => break,
+                            Err(e) => {
+                                log::warn!("online eviction stopped early: {e:#}");
+                                break;
+                            }
+                        }
+                    }
+                }
+                if evicted > 0 {
+                    self.evicted.fetch_add(evicted, Ordering::Relaxed);
+                }
+                if drift_evicting {
+                    // The old regime is gone; judge the next window fresh.
+                    self.drift.lock().unwrap_or_else(PoisonError::into_inner).reset();
+                }
+            }
             if let Some(reason) = reason {
-                self.spawn_refit(reason);
+                if !drift_evicting {
+                    self.spawn_refit(reason);
+                }
             }
         }
         match failure {
@@ -491,6 +548,104 @@ mod tests {
         assert!(obs.observe_batch(&Matrix::zeros(1, 3), &[1.0]).is_err());
         assert!(obs.observe_batch(&Matrix::zeros(2, 2), &[1.0]).is_err());
         assert_eq!(online.stats().observed, 0);
+    }
+
+    #[test]
+    fn window_eviction_bounds_the_live_model() {
+        let policy = OnlinePolicy {
+            staleness_budget: 0,
+            drift_zscore: 1e9,
+            window: 30,
+            ..OnlinePolicy::default()
+        };
+        let online = adapt(fitted_ok(25, 5), policy);
+        let mut rng = Rng::new(12);
+        for _ in 0..20 {
+            let xs = gen_matrix(&mut rng, 2, 2, -2.0, 2.0);
+            let ys: Vec<f64> =
+                (0..2).map(|i| xs.row(i)[0].sin() + 0.5 * xs.row(i)[1]).collect();
+            online.observer().unwrap().observe_batch(&xs, &ys).unwrap();
+            assert!(
+                online.stats().train_points <= 30,
+                "window breached: {} points",
+                online.stats().train_points
+            );
+        }
+        let stats = online.stats();
+        assert_eq!(stats.observed, 40);
+        assert_eq!(stats.train_points, 30, "model should sit exactly at the window");
+        assert_eq!(stats.evicted, 35, "25 seed + 40 observed - 30 window");
+        assert!(stats.resident_bytes > 0);
+    }
+
+    #[test]
+    fn windowed_eviction_beats_grow_forever_under_drift() {
+        // Prequential (predict-then-observe) rolling RMSE on a
+        // non-stationary stream whose regime flips away from the seed
+        // model's function. Grow-forever keeps answering for the dead
+        // regime; the sliding window tracks the live one.
+        let f0 = |x: &[f64]| x[0].sin() + 0.5 * x[1];
+        let f1 = |x: &[f64]| -x[0].sin() - 0.5 * x[1] + 4.0;
+        let (xs, ys) =
+            crate::data::synthetic::drift_stream(f0, f1, 400, 2, -2.0, 2.0, 0.01, 21);
+        let run = |window: usize| -> f64 {
+            let policy = OnlinePolicy {
+                staleness_budget: 0,
+                drift_zscore: 1e9,
+                window,
+                ..OnlinePolicy::default()
+            };
+            // Same seed model both runs: fitted on the f0 regime.
+            let online = adapt(fitted_ok(30, 6), policy);
+            let mut sse = 0.0;
+            let mut count = 0usize;
+            for t in 0..xs.rows() {
+                let xrow = Matrix::from_vec(1, 2, xs.row(t).to_vec());
+                let pred = online.predict(&xrow).unwrap().mean[0];
+                if t >= 250 {
+                    sse += (pred - ys[t]) * (pred - ys[t]);
+                    count += 1;
+                }
+                online.observer().unwrap().observe_batch(&xrow, &[ys[t]]).unwrap();
+            }
+            if window > 0 {
+                assert!(online.stats().train_points <= window);
+            }
+            (sse / count as f64).sqrt()
+        };
+        let windowed = run(60);
+        let grow_forever = run(0);
+        assert!(
+            windowed < grow_forever,
+            "windowed rolling RMSE {windowed:.4} should beat grow-forever \
+             {grow_forever:.4} under drift"
+        );
+    }
+
+    #[test]
+    fn drift_trip_sheds_points_instead_of_refitting() {
+        let policy = OnlinePolicy {
+            staleness_budget: 0,
+            drift_window: 16,
+            drift_zscore: 2.0,
+            drift_evict: 0.25,
+            ..OnlinePolicy::default()
+        };
+        let online = adapt(fitted_ok(40, 7), policy);
+        let mut rng = Rng::new(13);
+        // A shifted regime: pre-update residuals are tens of σ, so the
+        // drift window trips as soon as it fills.
+        for _ in 0..10 {
+            let xs = gen_matrix(&mut rng, 4, 2, -2.0, 2.0);
+            let ys: Vec<f64> = (0..4)
+                .map(|i| xs.row(i)[0].sin() + 0.5 * xs.row(i)[1] + 25.0)
+                .collect();
+            online.observer().unwrap().observe_batch(&xs, &ys).unwrap();
+        }
+        let stats = online.stats();
+        assert!(stats.evicted > 0, "drift eviction never fired: {stats:?}");
+        assert_eq!(stats.refits, 0, "drift must evict, not refit");
+        assert!(stats.train_points < 40 + 40, "eviction should have shrunk the model");
     }
 
     #[test]

@@ -1,0 +1,623 @@
+//! Two-pass chunked ingestion under an enforced memory budget.
+//!
+//! [`fit_stream`] builds a [`Multiscale`] ensemble from a [`RowSource`]
+//! it never fully holds:
+//!
+//! * **Pass 1 (layout)** — each chunk flows through mini-batch k-means,
+//!   per-column running moments, and a uniform reservoir that becomes
+//!   the coarse training set. Nothing retained scales with n.
+//! * **Pass 2 (residuals)** — chunks are re-streamed, standardized with
+//!   the pass-1 moments, reduced to coarse-model residuals (mean-only
+//!   predictions, O(m·d) per row), and spilled to bounded per-cluster
+//!   buffers. A cluster whose buffer fills is fitted **mid-stream** and
+//!   its buffer freed; rows arriving after that are dropped (counted in
+//!   the report). Fitting on the stream prefix instead of a uniform
+//!   subsample is the price of freeing buffers before end-of-stream.
+//!
+//! Memory is planned, then enforced. [`plan_cap`] sizes every buffer
+//! from the budget up front (solving `a·cap² + b·cap = budget` for the
+//! per-model row cap, since the resident Cholesky factors dominate at
+//! `8·cap²` bytes each), and a [`MemoryMeter`] charges every allocation
+//! class against the budget as the run proceeds — a bookkeeping bug
+//! surfaces as a hard error, not a silent OOM. Peak resident bytes are
+//! reported for the bench gates (`BENCH_stream.json` §M1).
+
+use crate::clustering::minibatch::{MiniBatchConfig, MiniBatchKMeans};
+use crate::data::Standardizer;
+use crate::kriging::{HyperOpt, OrdinaryKriging};
+use crate::stream::multiscale::Multiscale;
+use crate::surrogate::Standardized;
+use crate::util::csv::CsvChunks;
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Context, Result};
+use std::path::{Path, PathBuf};
+
+const F: usize = std::mem::size_of::<f64>();
+
+/// A rewindable stream of data chunks, each `d` feature columns plus the
+/// target as the **last** column. Both passes must see the same rows in
+/// the same order; [`fit_stream`] verifies the row counts agree.
+pub trait RowSource {
+    /// Rewind to the beginning (called before each pass).
+    fn reset(&mut self) -> Result<()>;
+
+    /// Next chunk, or `None` at end of stream.
+    fn next_chunk(&mut self) -> Result<Option<Matrix>>;
+}
+
+/// [`RowSource`] over a CSV file via [`CsvChunks`]; `reset` re-opens the
+/// file, so the two passes cost two sequential reads and O(chunk) memory.
+pub struct CsvRowSource {
+    path: PathBuf,
+    chunk_rows: usize,
+    has_header: bool,
+    inner: Option<CsvChunks<std::io::BufReader<std::fs::File>>>,
+}
+
+impl CsvRowSource {
+    pub fn open(path: impl AsRef<Path>, chunk_rows: usize, has_header: bool) -> Result<Self> {
+        let mut src = Self { path: path.as_ref().into(), chunk_rows, has_header, inner: None };
+        src.reset()?; // fail fast on an unreadable path
+        Ok(src)
+    }
+}
+
+impl RowSource for CsvRowSource {
+    fn reset(&mut self) -> Result<()> {
+        self.inner = Some(CsvChunks::open(&self.path, self.chunk_rows, self.has_header)?);
+        Ok(())
+    }
+
+    fn next_chunk(&mut self) -> Result<Option<Matrix>> {
+        match self.inner.as_mut().expect("reset before read").next() {
+            Some(chunk) => Ok(Some(chunk?)),
+            None => Ok(None),
+        }
+    }
+}
+
+/// [`RowSource`] over an in-memory dataset — the batch `multiscale:k`
+/// spec path and the unit tests.
+pub struct MemorySource {
+    x: Matrix,
+    y: Vec<f64>,
+    chunk_rows: usize,
+    at: usize,
+}
+
+impl MemorySource {
+    pub fn new(x: Matrix, y: Vec<f64>, chunk_rows: usize) -> Self {
+        assert_eq!(x.rows(), y.len(), "x/y length mismatch");
+        assert!(chunk_rows > 0, "chunk_rows must be >= 1");
+        Self { x, y, chunk_rows, at: 0 }
+    }
+}
+
+impl RowSource for MemorySource {
+    fn reset(&mut self) -> Result<()> {
+        self.at = 0;
+        Ok(())
+    }
+
+    fn next_chunk(&mut self) -> Result<Option<Matrix>> {
+        let n = self.x.rows();
+        if self.at >= n {
+            return Ok(None);
+        }
+        let hi = (self.at + self.chunk_rows).min(n);
+        let d = self.x.cols();
+        let mut data = Vec::with_capacity((hi - self.at) * (d + 1));
+        for i in self.at..hi {
+            data.extend_from_slice(self.x.row(i));
+            data.push(self.y[i]);
+        }
+        let chunk = Matrix::from_vec(hi - self.at, d + 1, data);
+        self.at = hi;
+        Ok(Some(chunk))
+    }
+}
+
+/// Resident-byte ledger with a hard budget. Charges fail the run instead
+/// of exceeding the budget; the peak is what the bench gates pin.
+pub struct MemoryMeter {
+    budget: usize,
+    current: usize,
+    peak: usize,
+}
+
+impl MemoryMeter {
+    pub fn new(budget: usize) -> Self {
+        Self { budget, current: 0, peak: 0 }
+    }
+
+    /// Account `bytes` of new resident state; errors if it would push
+    /// the total past the budget.
+    pub fn charge(&mut self, bytes: usize, what: &str) -> Result<()> {
+        ensure!(
+            self.current.saturating_add(bytes) <= self.budget,
+            "memory budget exceeded: {what} needs {bytes} B on top of {} B resident \
+             (budget {} B)",
+            self.current,
+            self.budget
+        );
+        self.current += bytes;
+        self.peak = self.peak.max(self.current);
+        Ok(())
+    }
+
+    /// Return `bytes` to the budget (freed state).
+    pub fn release(&mut self, bytes: usize) {
+        self.current = self.current.saturating_sub(bytes);
+    }
+
+    pub fn current(&self) -> usize {
+        self.current
+    }
+
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+}
+
+/// Configuration for [`fit_stream`].
+#[derive(Debug, Clone)]
+pub struct StreamFitConfig {
+    /// Fine clusters (the `multiscale:k` knob).
+    pub k: usize,
+    /// Rows per streamed chunk.
+    pub chunk_rows: usize,
+    /// Hard resident-byte budget for the whole fit.
+    pub memory_budget: usize,
+    /// Ceiling on rows per model even when the budget would allow more —
+    /// keeps the O(cap³) per-model fits bounded in time as well.
+    pub max_model_points: usize,
+    /// Hyper-parameter search per model. Defaults to the fast isotropic
+    /// preset: a streaming fit runs k+1 searches back to back.
+    pub hyperopt: HyperOpt,
+    pub seed: u64,
+}
+
+impl StreamFitConfig {
+    pub fn new(k: usize, memory_budget: usize) -> Self {
+        Self {
+            k,
+            chunk_rows: 4096,
+            memory_budget,
+            max_model_points: 2048,
+            hyperopt: HyperOpt { restarts: 1, max_evals: 20, isotropic: true, ..HyperOpt::fast() },
+            seed: 0x57EA,
+        }
+    }
+}
+
+/// What a streaming fit did — row accounting and the metered memory
+/// trajectory (`peak_bytes <= budget_bytes` is the §M1 bench gate).
+#[derive(Debug, Clone)]
+pub struct StreamFitReport {
+    pub rows: u64,
+    pub chunks: usize,
+    pub d: usize,
+    /// Rows per model the budget plan allowed.
+    pub cap_per_model: usize,
+    /// Coarse (reservoir) training-set size.
+    pub coarse_points: usize,
+    /// Fine training-set size per cluster.
+    pub cluster_points: Vec<usize>,
+    /// Pass-2 rows dropped because their cluster had already fitted.
+    pub dropped_rows: u64,
+    pub peak_bytes: usize,
+    pub budget_bytes: usize,
+}
+
+/// Solve the budget for the per-model row cap. Resident state at peak:
+/// k+1 model factors (`8·cap²` each), k+1 row buffers
+/// (`8·cap·(d+1)`), one in-flight fit (distance cache + candidate
+/// factor, `2·8·cap²`), plus fixed chunk/k-means state.
+fn plan_cap(cfg: &StreamFitConfig, d: usize) -> Result<usize> {
+    let fixed = 2 * cfg.chunk_rows * (d + 1) * F // chunk + standardized scratch
+        + (256 + cfg.k) * d * F; // k-means reservoir + centroids
+    ensure!(
+        cfg.memory_budget > fixed,
+        "memory budget {} B cannot hold even one {}-row chunk in {d}-D ({} B fixed \
+         overhead); raise the budget or lower chunk_rows",
+        cfg.memory_budget,
+        cfg.chunk_rows,
+        fixed
+    );
+    let avail = (cfg.memory_budget - fixed) as f64;
+    let a = ((cfg.k + 3) * F) as f64; // cap² terms: k+1 factors + 2 fit transient
+    let b = ((cfg.k + 1) * (d + 1) * F) as f64; // cap terms: row buffers
+    let cap = ((-b + (b * b + 4.0 * a * avail).sqrt()) / (2.0 * a)).floor() as usize;
+    let cap = cap.min(cfg.max_model_points);
+    ensure!(
+        cap >= 16,
+        "memory budget {} B too small for k = {} in {d}-D: it allows only {cap} rows \
+         per model (need >= 16)",
+        cfg.memory_budget,
+        cfg.k
+    );
+    Ok(cap)
+}
+
+/// Per-column running moments (Welford) that become the standardizer.
+struct Moments {
+    n: u64,
+    mean: Vec<f64>,
+    m2: Vec<f64>,
+    y_mean: f64,
+    y_m2: f64,
+}
+
+impl Moments {
+    fn new(d: usize) -> Self {
+        Self { n: 0, mean: vec![0.0; d], m2: vec![0.0; d], y_mean: 0.0, y_m2: 0.0 }
+    }
+
+    fn push(&mut self, x: &[f64], y: f64) {
+        self.n += 1;
+        let w = 1.0 / self.n as f64;
+        for j in 0..x.len() {
+            let delta = x[j] - self.mean[j];
+            self.mean[j] += delta * w;
+            self.m2[j] += delta * (x[j] - self.mean[j]);
+        }
+        let delta = y - self.y_mean;
+        self.y_mean += delta * w;
+        self.y_m2 += delta * (y - self.y_mean);
+    }
+
+    /// Same floor rules as [`Standardizer::fit`]: constant columns are
+    /// left unscaled.
+    fn into_standardizer(self) -> Standardizer {
+        let n = self.n.max(1) as f64;
+        let floor = |m2: f64| {
+            let s = (m2 / n).sqrt();
+            if s < 1e-12 {
+                1.0
+            } else {
+                s
+            }
+        };
+        Standardizer {
+            x_std: self.m2.iter().map(|&m2| floor(m2)).collect(),
+            x_mean: self.mean,
+            y_mean: self.y_mean,
+            y_std: floor(self.y_m2),
+        }
+    }
+}
+
+/// Uniform reservoir of `(x, y)` rows over the whole stream — the coarse
+/// training set (same `cap / seen` rule as SoD's inducing reservoir).
+struct RowReservoir {
+    cap: usize,
+    d: usize,
+    x: Vec<f64>,
+    y: Vec<f64>,
+    seen: u64,
+    rng: Rng,
+}
+
+impl RowReservoir {
+    fn new(cap: usize, d: usize, seed: u64) -> Self {
+        Self { cap, d, x: Vec::new(), y: Vec::new(), seen: 0, rng: Rng::new(seed) }
+    }
+
+    fn offer(&mut self, x: &[f64], y: f64) {
+        self.seen += 1;
+        if self.y.len() < self.cap {
+            self.x.extend_from_slice(x);
+            self.y.push(y);
+            return;
+        }
+        if self.rng.next_u64() % self.seen < self.cap as u64 {
+            let slot = self.rng.below(self.cap);
+            self.x[slot * self.d..(slot + 1) * self.d].copy_from_slice(x);
+            self.y[slot] = y;
+        }
+    }
+
+    fn take(self) -> (Matrix, Vec<f64>) {
+        (Matrix::from_vec(self.y.len(), self.d, self.x), self.y)
+    }
+}
+
+/// Fit a multiscale ensemble from a stream under `cfg.memory_budget`.
+///
+/// Returns the model wrapped with the pass-1 [`Standardizer`] (so it
+/// serves raw-unit queries) plus the ingestion report. The source must
+/// yield identical rows on both passes.
+pub fn fit_stream(
+    src: &mut dyn RowSource,
+    cfg: &StreamFitConfig,
+) -> Result<(Standardized, StreamFitReport)> {
+    ensure!(cfg.k >= 1, "k must be >= 1");
+    ensure!(cfg.chunk_rows >= 1, "chunk_rows must be >= 1");
+    let mut meter = MemoryMeter::new(cfg.memory_budget);
+
+    // ---- pass 1: layout, moments, coarse reservoir ----
+    src.reset().context("rewinding source for pass 1")?;
+    let mut mb = MiniBatchKMeans::new(MiniBatchConfig {
+        seed: cfg.seed ^ 0x00C2,
+        ..MiniBatchConfig::new(cfg.k)
+    });
+    let mut state: Option<(Moments, RowReservoir, usize)> = None; // (.., cap)
+    let mut rows_total: u64 = 0;
+    let mut chunks = 0usize;
+    while let Some(chunk) = src.next_chunk()? {
+        if chunk.rows() == 0 {
+            continue;
+        }
+        ensure!(
+            chunk.cols() >= 2,
+            "stream rows need at least one feature column plus a trailing target column"
+        );
+        let d = chunk.cols() - 1;
+        if state.is_none() {
+            let cap = plan_cap(cfg, d)?;
+            meter.charge(2 * cfg.chunk_rows * (d + 1) * F, "chunk buffers")?;
+            meter.charge((256 + cfg.k) * d * F, "mini-batch k-means state")?;
+            meter.charge(cap * (d + 1) * F, "coarse reservoir")?;
+            state = Some((Moments::new(d), RowReservoir::new(cap, d, cfg.seed ^ 0x5EED), cap));
+        }
+        let (moments, reservoir, _) = state.as_mut().expect("initialized above");
+        ensure!(chunk.cols() - 1 == moments.mean.len(), "row width changed mid-stream");
+        let mut xonly = Vec::with_capacity(chunk.rows() * d);
+        for i in 0..chunk.rows() {
+            let row = chunk.row(i);
+            let (x, y) = (&row[..d], row[d]);
+            ensure!(
+                y.is_finite() && x.iter().all(|v| v.is_finite()),
+                "non-finite value in stream row {}",
+                rows_total + i as u64 + 1
+            );
+            moments.push(x, y);
+            reservoir.offer(x, y);
+            xonly.extend_from_slice(x);
+        }
+        mb.partial_fit(&Matrix::from_vec(chunk.rows(), d, xonly));
+        rows_total += chunk.rows() as u64;
+        chunks += 1;
+    }
+    let Some((moments, reservoir, cap)) = state else {
+        bail!("stream is empty");
+    };
+    ensure!(
+        rows_total >= cfg.k as u64,
+        "stream has {rows_total} rows; need at least k = {}",
+        cfg.k
+    );
+    let d = moments.mean.len();
+    let std = moments.into_standardizer();
+
+    // Routing centroids, mapped into standardized coordinates so routing
+    // at fit and at predict happen in the model's units.
+    let mut centroids = mb.into_centroids();
+    for c in 0..centroids.rows() {
+        let row = centroids.row_mut(c);
+        for j in 0..d {
+            row[j] = (row[j] - std.x_mean[j]) / std.x_std[j];
+        }
+    }
+
+    // ---- coarse fit on the standardized reservoir ----
+    let (rx, ry) = reservoir.take();
+    let coarse_points = ry.len();
+    let mut zx = Matrix::zeros(coarse_points, d);
+    for i in 0..coarse_points {
+        let (src_row, dst) = (rx.row(i), zx.row_mut(i));
+        for j in 0..d {
+            dst[j] = (src_row[j] - std.x_mean[j]) / std.x_std[j];
+        }
+    }
+    let zy: Vec<f64> = ry.iter().map(|v| (v - std.y_mean) / std.y_std).collect();
+    drop(rx);
+    meter.charge(2 * coarse_points * coarse_points * F, "coarse fit transient")?;
+    let coarse_opt = HyperOpt { seed: cfg.seed ^ 0xC0A5, ..cfg.hyperopt.clone() };
+    let coarse = coarse_opt.fit(zx, &zy).context("fitting the coarse model")?;
+    meter.release(2 * coarse_points * coarse_points * F);
+    meter.release(cap * (d + 1) * F); // reservoir rows consumed by the fit
+    meter.charge(coarse.resident_bytes(), "coarse model")?;
+
+    // ---- pass 2: standardize, residualize, spill, fit-and-free ----
+    src.reset().context("rewinding source for pass 2")?;
+    let mut bufs: Vec<(Vec<f64>, Vec<f64>)> =
+        (0..cfg.k).map(|_| (Vec::new(), Vec::new())).collect();
+    let mut charged = vec![false; cfg.k];
+    let mut fine: Vec<Option<OrdinaryKriging>> = (0..cfg.k).map(|_| None).collect();
+    let mut dropped = 0u64;
+    let mut rows_pass2 = 0u64;
+
+    let mut fit_cluster = |c: usize,
+                           bufs: &mut Vec<(Vec<f64>, Vec<f64>)>,
+                           fine: &mut Vec<Option<OrdinaryKriging>>,
+                           meter: &mut MemoryMeter|
+     -> Result<()> {
+        let (bx, by) = std::mem::take(&mut bufs[c]);
+        let nc = by.len();
+        meter.charge(2 * nc * nc * F, "cluster fit transient")?;
+        let opt = HyperOpt { seed: cfg.seed ^ (0xF1_u64 + c as u64), ..cfg.hyperopt.clone() };
+        let model = opt
+            .fit(Matrix::from_vec(nc, d, bx), &by)
+            .with_context(|| format!("fitting fine model for cluster {c}"))?;
+        meter.release(2 * nc * nc * F);
+        meter.release(cap * (d + 1) * F); // buffer freed
+        meter.charge(model.resident_bytes(), &format!("fine model {c}"))?;
+        fine[c] = Some(model);
+        Ok(())
+    };
+
+    while let Some(chunk) = src.next_chunk()? {
+        ensure!(
+            chunk.cols() == d + 1,
+            "pass 2 saw {}-wide rows but pass 1 saw {}",
+            chunk.cols(),
+            d + 1
+        );
+        for i in 0..chunk.rows() {
+            let row = chunk.row(i);
+            let mut z = vec![0.0; d];
+            for j in 0..d {
+                z[j] = (row[j] - std.x_mean[j]) / std.x_std[j];
+            }
+            let zy = (row[d] - std.y_mean) / std.y_std;
+            let mut best = (0usize, f64::INFINITY);
+            for c in 0..centroids.rows() {
+                let dist = crate::util::stats::sq_dist(&z, centroids.row(c));
+                if dist < best.1 {
+                    best = (c, dist);
+                }
+            }
+            let c = best.0;
+            if fine[c].is_some() {
+                dropped += 1; // cluster already fitted and freed
+                continue;
+            }
+            if !charged[c] {
+                meter.charge(cap * (d + 1) * F, "cluster buffer")?;
+                charged[c] = true;
+            }
+            let resid = zy - coarse.predict_mean_one(&z);
+            bufs[c].0.extend_from_slice(&z);
+            bufs[c].1.push(resid);
+            if bufs[c].1.len() >= cap {
+                fit_cluster(c, &mut bufs, &mut fine, &mut meter)?;
+            }
+        }
+        rows_pass2 += chunk.rows() as u64;
+    }
+    ensure!(
+        rows_pass2 == rows_total,
+        "source yielded {rows_pass2} rows in pass 2 but {rows_total} in pass 1; \
+         RowSource::reset must replay the same stream"
+    );
+    for c in 0..cfg.k {
+        if fine[c].is_none() && !bufs[c].1.is_empty() {
+            fit_cluster(c, &mut bufs, &mut fine, &mut meter)?;
+        }
+    }
+
+    let cluster_points: Vec<usize> =
+        fine.iter().map(|f| f.as_ref().map_or(0, |m| m.n_train())).collect();
+    let report = StreamFitReport {
+        rows: rows_total,
+        chunks,
+        d,
+        cap_per_model: cap,
+        coarse_points,
+        cluster_points,
+        dropped_rows: dropped,
+        peak_bytes: meter.peak(),
+        budget_bytes: cfg.memory_budget,
+    };
+    let ms = Multiscale::new(coarse, centroids, fine)?;
+    Ok((Standardized::new(Box::new(ms), std), report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kriging::Surrogate;
+
+    fn smooth_dataset(n: usize, seed: u64) -> (Matrix, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let x = Matrix::from_vec(n, 2, rng.uniform_vec(n * 2, -3.0, 3.0));
+        let y: Vec<f64> =
+            (0..n).map(|i| x.row(i)[0].sin() + 0.5 * x.row(i)[1] * x.row(i)[1]).collect();
+        (x, y)
+    }
+
+    fn rmse(model: &dyn Surrogate, xt: &Matrix, truth: &[f64]) -> f64 {
+        let p = model.predict(xt).unwrap();
+        let sse: f64 = p.mean.iter().zip(truth).map(|(a, b)| (a - b) * (a - b)).sum();
+        (sse / truth.len() as f64).sqrt()
+    }
+
+    #[test]
+    fn stream_fit_tracks_batch_fit_at_small_n() {
+        // The acceptance gate: on data small enough to also fit batch,
+        // the streamed model must predict within a pinned tolerance of a
+        // batch fit on the same rows.
+        let (x, y) = smooth_dataset(400, 31);
+        let (xt, yt) = smooth_dataset(120, 32);
+        let mut src = MemorySource::new(x.clone(), y.clone(), 64);
+        let cfg = StreamFitConfig::new(4, 64 << 20);
+        let (streamed, report) = fit_stream(&mut src, &cfg).unwrap();
+        assert_eq!(report.rows, 400);
+        assert!(report.peak_bytes <= report.budget_bytes);
+
+        let opt = HyperOpt { restarts: 1, max_evals: 20, isotropic: true, ..HyperOpt::default() };
+        let batch = opt.fit(x, &y).unwrap();
+        let rs = rmse(&streamed, &xt, &yt);
+        let rb = rmse(&batch, &xt, &yt);
+        assert!(
+            rs <= rb + 0.15,
+            "streamed RMSE {rs:.4} strayed past batch RMSE {rb:.4} + 0.15"
+        );
+    }
+
+    #[test]
+    fn budget_bounds_peak_and_buffers() {
+        let (x, y) = smooth_dataset(2000, 33);
+        let mut src = MemorySource::new(x, y, 128);
+        let budget = 2 << 20; // 2 MB: forces small per-model caps
+        let cfg = StreamFitConfig { chunk_rows: 128, ..StreamFitConfig::new(3, budget) };
+        let (model, report) = fit_stream(&mut src, &cfg).unwrap();
+        assert!(report.peak_bytes <= budget, "peak {} > budget {budget}", report.peak_bytes);
+        assert!(report.cap_per_model < 2000, "budget should force subsampling");
+        assert!(report.coarse_points <= report.cap_per_model);
+        for (c, &n) in report.cluster_points.iter().enumerate() {
+            assert!(n <= report.cap_per_model, "cluster {c} overfilled: {n}");
+        }
+        // The bounded model still predicts sanely.
+        let (xt, yt) = smooth_dataset(100, 34);
+        let r = rmse(&model, &xt, &yt);
+        let spread = crate::util::stats::variance(&yt).sqrt();
+        assert!(r < spread, "streamed model no better than predicting the mean");
+    }
+
+    #[test]
+    fn too_small_budget_is_a_clean_error() {
+        let (x, y) = smooth_dataset(100, 35);
+        let mut src = MemorySource::new(x, y, 32);
+        let cfg = StreamFitConfig { chunk_rows: 32, ..StreamFitConfig::new(4, 64 << 10) };
+        let err = fit_stream(&mut src, &cfg).unwrap_err().to_string();
+        assert!(err.contains("budget"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn empty_and_undersized_streams_rejected() {
+        let mut empty = MemorySource::new(Matrix::zeros(0, 2), vec![], 16);
+        assert!(fit_stream(&mut empty, &StreamFitConfig::new(2, 8 << 20)).is_err());
+        let (x, y) = smooth_dataset(3, 36);
+        let mut tiny = MemorySource::new(x, y, 16);
+        let err =
+            fit_stream(&mut tiny, &StreamFitConfig::new(8, 8 << 20)).unwrap_err().to_string();
+        assert!(err.contains("at least k"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn csv_source_roundtrips_through_file() {
+        let (x, y) = smooth_dataset(250, 37);
+        let dir = std::env::temp_dir().join(format!("ckrig_stream_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("train.csv");
+        let mut text = String::from("x0,x1,y\n");
+        for i in 0..x.rows() {
+            text.push_str(&format!("{},{},{}\n", x.row(i)[0], x.row(i)[1], y[i]));
+        }
+        std::fs::write(&path, text).unwrap();
+
+        let mut src = CsvRowSource::open(&path, 64, true).unwrap();
+        let cfg = StreamFitConfig::new(3, 32 << 20);
+        let (model, report) = fit_stream(&mut src, &cfg).unwrap();
+        assert_eq!(report.rows, 250);
+        assert_eq!(report.d, 2);
+        assert!(report.chunks >= 4, "250 rows / 64-row chunks");
+        let (xt, yt) = smooth_dataset(80, 38);
+        let r = rmse(&model, &xt, &yt);
+        assert!(r < 0.6, "CSV-streamed model RMSE too high: {r}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

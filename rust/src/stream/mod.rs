@@ -1,0 +1,40 @@
+//! Streaming ingestion: build cluster-Kriging ensembles from data that
+//! never fits in memory.
+//!
+//! Every other fitting path in this crate assumes the full dataset is
+//! resident — the partitioners iterate over all n points per step and
+//! the per-cluster fits hold all their rows at once. This module lifts
+//! that assumption for `ckrig fit --stream`, following *Efficient
+//! Multiscale Gaussian Process Regression using Hierarchical Clustering*
+//! (arXiv 1511.02258): a **coarse** global model captures the trend from
+//! a bounded uniform sample, and **fine** per-cluster models fit the
+//! coarse model's *residuals*, so locality is handled where the coarse
+//! sample is too sparse.
+//!
+//! The driver ([`ingest::fit_stream`]) makes two bounded passes over a
+//! [`ingest::RowSource`]:
+//!
+//! 1. **Layout pass** — every chunk flows through mini-batch k-means
+//!    ([`crate::clustering::minibatch`]), per-column running moments
+//!    (the eventual [`crate::data::dataset::Standardizer`]), and a
+//!    uniform reservoir that becomes the coarse training set.
+//! 2. **Residual pass** — chunks are re-streamed, standardized, reduced
+//!    to coarse-model residuals, and spilled to bounded per-cluster
+//!    buffers; a cluster whose buffer fills is fitted *mid-stream* and
+//!    its buffer freed, so peak memory never depends on n.
+//!
+//! Peak resident bytes are metered and **enforced** against the caller's
+//! `--memory-budget` ([`ingest::MemoryMeter`]); buffer capacities are
+//! planned from the budget up front so a conforming run cannot bust it.
+//! The result is a [`multiscale::Multiscale`] surrogate (spec flavor
+//! `multiscale:k`) with the same artifact round-trip, serving, and
+//! online-observation surface as every batch-fit model.
+
+pub mod ingest;
+pub mod multiscale;
+
+pub use ingest::{
+    fit_stream, CsvRowSource, MemoryMeter, MemorySource, RowSource, StreamFitConfig,
+    StreamFitReport,
+};
+pub use multiscale::Multiscale;

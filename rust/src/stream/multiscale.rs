@@ -1,0 +1,372 @@
+//! The multiscale surrogate: coarse global trend + fine residual models.
+//!
+//! Paper-adjacent design (arXiv 1511.02258): a single Kriging model on a
+//! bounded uniform sample of the stream captures the global trend at
+//! O(m³) for reservoir size m, and one small model per k-means cluster
+//! fits the coarse model's **residuals** on that cluster's rows. A
+//! prediction routes to the nearest centroid and composes both scales:
+//!
+//! ```text
+//!   mean(x) = coarse_mean(x) + fine_c(x)           c = nearest centroid
+//!   var(x)  = coarse_var(x)  + fine_var_c(x)
+//! ```
+//!
+//! The variance sum treats the scales as independent — conservative
+//! (coarse uncertainty is partly explained by the fine fit), which is
+//! the right failure direction for acquisition functions and serving.
+//! Clusters that received no rows have no fine model and fall back to
+//! the coarse posterior alone.
+
+use crate::clustering::kmeans;
+use crate::kriging::{OrdinaryKriging, Prediction, Surrogate};
+use crate::util::matrix::Matrix;
+use anyhow::{ensure, Result};
+
+/// Fitted multiscale ensemble (spec flavor `multiscale:k`). Built by
+/// [`crate::stream::ingest::fit_stream`]; all fields are in the same
+/// (typically standardized) units.
+pub struct Multiscale {
+    coarse: OrdinaryKriging,
+    /// k×d routing centroids from the layout pass.
+    centroids: Matrix,
+    /// Per-cluster residual models; `None` for clusters that never
+    /// received rows in the residual pass.
+    fine: Vec<Option<OrdinaryKriging>>,
+}
+
+impl Multiscale {
+    pub fn new(
+        coarse: OrdinaryKriging,
+        centroids: Matrix,
+        fine: Vec<Option<OrdinaryKriging>>,
+    ) -> Result<Self> {
+        let d = coarse.kernel().dim();
+        ensure!(centroids.rows() == fine.len(), "one fine slot per centroid");
+        ensure!(centroids.rows() >= 1, "multiscale needs at least one cluster");
+        ensure!(centroids.cols() == d, "centroid/coarse dimension mismatch");
+        for (c, f) in fine.iter().enumerate() {
+            if let Some(m) = f {
+                ensure!(m.kernel().dim() == d, "fine model {c} dimension mismatch");
+            }
+        }
+        Ok(Self { coarse, centroids, fine })
+    }
+
+    /// Number of clusters (fine slots, fitted or not).
+    pub fn k(&self) -> usize {
+        self.fine.len()
+    }
+
+    pub fn coarse(&self) -> &OrdinaryKriging {
+        &self.coarse
+    }
+
+    pub fn centroids(&self) -> &Matrix {
+        &self.centroids
+    }
+
+    /// Fine model for cluster `c`, if that cluster received rows.
+    pub fn fine(&self, c: usize) -> Option<&OrdinaryKriging> {
+        self.fine[c].as_ref()
+    }
+
+    /// Nearest-centroid route for one point.
+    pub fn route(&self, x: &[f64]) -> usize {
+        let mut best = (0usize, f64::INFINITY);
+        for c in 0..self.centroids.rows() {
+            let dist = crate::util::stats::sq_dist(x, self.centroids.row(c));
+            if dist < best.1 {
+                best = (c, dist);
+            }
+        }
+        best.0
+    }
+
+    /// Total training points across both scales.
+    pub fn n_train(&self) -> usize {
+        self.coarse.n_train()
+            + self.fine.iter().flatten().map(|m| m.n_train()).sum::<usize>()
+    }
+
+    pub(crate) fn write_artifact(&self, w: &mut crate::util::binio::BinWriter) {
+        w.put_matrix(&self.centroids);
+        self.coarse.write_artifact(w);
+        w.put_usize(self.fine.len());
+        for f in &self.fine {
+            w.put_bool(f.is_some());
+            if let Some(m) = f {
+                m.write_artifact(w);
+            }
+        }
+    }
+
+    pub(crate) fn read_artifact(
+        r: &mut crate::util::binio::BinReader<'_>,
+        version: u32,
+    ) -> Result<Self> {
+        let centroids = r.get_matrix()?;
+        let coarse = OrdinaryKriging::read_artifact(r, version)?;
+        let k = r.get_usize()?;
+        ensure!(k == centroids.rows(), "fine-slot count disagrees with centroids in artifact");
+        let mut fine = Vec::with_capacity(k);
+        for _ in 0..k {
+            fine.push(if r.get_bool()? {
+                Some(OrdinaryKriging::read_artifact(r, version)?)
+            } else {
+                None
+            });
+        }
+        Self::new(coarse, centroids, fine)
+    }
+}
+
+impl Surrogate for Multiscale {
+    fn predict(&self, xt: &Matrix) -> Result<Prediction> {
+        let m = xt.rows();
+        let mut mean = vec![0.0; m];
+        let mut variance = vec![0.0; m];
+        self.predict_into(xt, &mut mean, &mut variance)?;
+        Ok(Prediction { mean, variance })
+    }
+
+    fn name(&self) -> &str {
+        "Multiscale"
+    }
+
+    fn dim(&self) -> usize {
+        self.centroids.cols()
+    }
+
+    fn predict_into(&self, xt: &Matrix, mean: &mut [f64], variance: &mut [f64]) -> Result<()> {
+        // Coarse scale over the whole batch first…
+        Surrogate::predict_into(&self.coarse, xt, mean, variance)?;
+        // …then each fine model corrects its routed rows in one batch.
+        let labels = kmeans::assign(&self.centroids, xt);
+        for c in 0..self.fine.len() {
+            let Some(model) = &self.fine[c] else { continue };
+            let idx: Vec<usize> = (0..xt.rows()).filter(|&i| labels[i] == c).collect();
+            if idx.is_empty() {
+                continue;
+            }
+            let sub = xt.select_rows(&idx);
+            let fine = model.predict(&sub)?;
+            for (slot, &i) in idx.iter().enumerate() {
+                mean[i] += fine.mean[slot];
+                variance[i] += fine.variance[slot];
+            }
+        }
+        Ok(())
+    }
+
+    fn save(&self, w: &mut dyn std::io::Write) -> Result<()> {
+        let mut payload = crate::util::binio::BinWriter::new();
+        self.write_artifact(&mut payload);
+        crate::surrogate::artifact::write_model(
+            w,
+            crate::surrogate::artifact::TAG_MULTISCALE,
+            &payload.into_bytes(),
+        )
+    }
+
+    fn as_online(&self) -> Option<&dyn crate::online::OnlineSurrogate> {
+        Some(self)
+    }
+
+    fn as_online_mut(&mut self) -> Option<&mut dyn crate::online::OnlineSurrogate> {
+        Some(self)
+    }
+}
+
+impl crate::online::OnlineSurrogate for Multiscale {
+    /// Route the observation and absorb its **coarse residual** into the
+    /// fine model of that cluster (O(n_c²)); the coarse trend stays
+    /// frozen, exactly as at fit time. A cluster observing its first
+    /// point grows a 1-point fine model under the coarse kernel's
+    /// hyper-parameters.
+    fn observe(&mut self, x: &[f64], y: f64) -> Result<()> {
+        ensure!(
+            x.len() == self.dim(),
+            "observe: point has {} dims, model expects {}",
+            x.len(),
+            self.dim()
+        );
+        ensure!(
+            y.is_finite() && x.iter().all(|v| v.is_finite()),
+            "observe: non-finite observation"
+        );
+        let resid = y - self.coarse.predict_mean_one(x);
+        let c = self.route(x);
+        match &mut self.fine[c] {
+            Some(model) => model.observe_point(x, resid)?,
+            slot @ None => {
+                let x1 = Matrix::from_vec(1, x.len(), x.to_vec());
+                *slot = Some(OrdinaryKriging::fit(
+                    x1,
+                    &[resid],
+                    self.coarse.kernel().clone(),
+                    self.coarse.nugget(),
+                )?);
+            }
+        }
+        Ok(())
+    }
+
+    /// The fine models' rows with the coarse trend added back — the
+    /// refit engine's data source. The coarse reservoir rows are not
+    /// recoverable from the fitted state (their targets were consumed
+    /// into the trend), so the snapshot is the fine sample only.
+    fn training_snapshot(&self) -> (Matrix, Vec<f64>) {
+        let d = self.dim();
+        let mut xs: Vec<f64> = Vec::new();
+        let mut ys: Vec<f64> = Vec::new();
+        let mut rows = 0usize;
+        for model in self.fine.iter().flatten() {
+            let x = model.x_train();
+            xs.extend_from_slice(x.as_slice());
+            for i in 0..x.rows() {
+                ys.push(model.y_train()[i] + self.coarse.predict_mean_one(x.row(i)));
+            }
+            rows += x.rows();
+        }
+        (Matrix::from_vec(rows, d, xs), ys)
+    }
+
+    fn training_len(&self) -> usize {
+        self.fine.iter().flatten().map(|m| m.n_train()).sum()
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.coarse.resident_bytes()
+            + self.fine.iter().flatten().map(|m| m.resident_bytes()).sum::<usize>()
+            + self.centroids.rows() * self.centroids.cols() * std::mem::size_of::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::Kernel;
+    use crate::util::rng::Rng;
+
+    /// Hand-assemble a tiny two-cluster multiscale model on y = x² where
+    /// the coarse scale only sees a linear trend.
+    fn toy() -> Multiscale {
+        let mut rng = Rng::new(5);
+        let n = 24;
+        let xs: Vec<f64> = (0..n).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+        let x = Matrix::from_vec(n, 1, xs.clone());
+        let y: Vec<f64> = xs.iter().map(|v| v * v).collect();
+        // Coarse: fit on a sparse subset (every 4th point).
+        let idx: Vec<usize> = (0..n).step_by(4).collect();
+        let coarse = OrdinaryKriging::fit(
+            x.select_rows(&idx),
+            &idx.iter().map(|&i| y[i]).collect::<Vec<_>>(),
+            Kernel::se_isotropic(1, 0.5),
+            1e-6,
+        )
+        .unwrap();
+        // Fine: residual models on the two half-lines.
+        let centroids = Matrix::from_rows(&[&[-1.0], &[1.0]]);
+        let mut fine = Vec::new();
+        for c in 0..2 {
+            let members: Vec<usize> =
+                (0..n).filter(|&i| (xs[i] < 0.0) == (c == 0)).collect();
+            let resid: Vec<f64> = members
+                .iter()
+                .map(|&i| y[i] - coarse.predict_mean_one(x.row(i)))
+                .collect();
+            fine.push(Some(
+                OrdinaryKriging::fit(
+                    x.select_rows(&members),
+                    &resid,
+                    Kernel::se_isotropic(1, 2.0),
+                    1e-6,
+                )
+                .unwrap(),
+            ));
+        }
+        Multiscale::new(coarse, centroids, fine).unwrap()
+    }
+
+    #[test]
+    fn fine_scale_improves_on_coarse_alone() {
+        let ms = toy();
+        let mut rng = Rng::new(6);
+        let m = 40;
+        let xs: Vec<f64> = (0..m).map(|_| rng.uniform_in(-1.8, 1.8)).collect();
+        let xt = Matrix::from_vec(m, 1, xs.clone());
+        let truth: Vec<f64> = xs.iter().map(|v| v * v).collect();
+        let multi = ms.predict(&xt).unwrap();
+        let coarse = ms.coarse().predict(&xt).unwrap();
+        let sse = |p: &[f64]| -> f64 {
+            p.iter().zip(&truth).map(|(a, b)| (a - b) * (a - b)).sum()
+        };
+        assert!(
+            sse(&multi.mean) < sse(&coarse.mean),
+            "residual correction must beat the coarse trend: {} vs {}",
+            sse(&multi.mean),
+            sse(&coarse.mean)
+        );
+        assert!(multi.variance.iter().all(|v| v.is_finite() && *v >= 0.0));
+    }
+
+    #[test]
+    fn missing_fine_model_falls_back_to_coarse() {
+        let ms = toy();
+        let sparse =
+            Multiscale::new(ms.coarse().clone(), ms.centroids().clone(), vec![None, None])
+                .unwrap();
+        let xt = Matrix::from_rows(&[&[0.5], &[-0.5]]);
+        let a = sparse.predict(&xt).unwrap();
+        let b = sparse.coarse().predict(&xt).unwrap();
+        assert_eq!(a.mean, b.mean);
+        assert_eq!(a.variance, b.variance);
+    }
+
+    #[test]
+    fn observe_routes_residual_into_fine_model() {
+        let mut ms = toy();
+        let before = ms.fine(1).unwrap().n_train();
+        crate::online::OnlineSurrogate::observe(&mut ms, &[1.2], 1.44).unwrap();
+        assert_eq!(ms.fine(1).unwrap().n_train(), before + 1);
+        // The observed point should now be (near-)interpolated.
+        let (mu, _) = {
+            let p = ms.predict(&Matrix::from_rows(&[&[1.2]])).unwrap();
+            (p.mean[0], p.variance[0])
+        };
+        assert!((mu - 1.44).abs() < 0.2, "observed point poorly fit: {mu}");
+    }
+
+    #[test]
+    fn snapshot_recovers_original_targets() {
+        let ms = toy();
+        let (x, y) = crate::online::OnlineSurrogate::training_snapshot(&ms);
+        assert_eq!(x.rows(), y.len());
+        assert_eq!(x.rows(), crate::online::OnlineSurrogate::training_len(&ms));
+        for i in 0..x.rows() {
+            let truth = x.row(i)[0] * x.row(i)[0];
+            assert!(
+                (y[i] - truth).abs() < 1e-6,
+                "snapshot target {i} diverged: {} vs {truth}",
+                y[i]
+            );
+        }
+    }
+
+    #[test]
+    fn artifact_roundtrip_preserves_predictions() {
+        let ms = toy();
+        let mut bytes = Vec::new();
+        Surrogate::save(&ms, &mut bytes).unwrap();
+        let loaded = crate::surrogate::SurrogateSpec::load(&mut bytes.as_slice()).unwrap();
+        assert_eq!(loaded.name(), "Multiscale");
+        assert_eq!(loaded.dim(), 1);
+        let xt = Matrix::from_rows(&[&[-1.3], &[0.0], &[0.7]]);
+        let a = ms.predict(&xt).unwrap();
+        let b = loaded.predict(&xt).unwrap();
+        for i in 0..xt.rows() {
+            assert_eq!(a.mean[i].to_bits(), b.mean[i].to_bits(), "mean {i}");
+            assert_eq!(a.variance[i].to_bits(), b.variance[i].to_bits(), "variance {i}");
+        }
+    }
+}

@@ -31,12 +31,15 @@
 //!   shard's subset of a Cluster Kriging ensemble plus the full routing
 //!   oracle) and `TAG_SHARD_MANIFEST` (the coordinator-side shard map).
 //!   No existing payload layout changed; v1/v2 files still load.
+//! * **v4** — adds `TAG_MULTISCALE` (the streaming coarse + fine residual
+//!   ensemble from [`crate::stream::Multiscale`]). No existing payload
+//!   layout changed; v1/v2/v3 files still load.
 
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{Read, Write};
 
 pub const MAGIC: [u8; 4] = *b"CKRG";
-pub const VERSION: u32 = 3;
+pub const VERSION: u32 = 4;
 pub const MIN_VERSION: u32 = 1;
 
 /// Model-type tags (one per `Surrogate` implementation that persists).
@@ -52,6 +55,9 @@ pub const TAG_SHARD: u8 = 7;
 /// A coordinator shard manifest ([`crate::distributed::ShardManifest`]) —
 /// routing + topology state, deliberately **not** a servable model.
 pub const TAG_SHARD_MANIFEST: u8 = 8;
+/// Multiscale streaming ensemble ([`crate::stream::Multiscale`]): a coarse
+/// global model plus per-cluster residual models and routing centroids.
+pub const TAG_MULTISCALE: u8 = 9;
 
 /// Human-readable artifact kind for a tag (diagnostics, `models` replies).
 pub fn tag_name(tag: u8) -> &'static str {
@@ -64,6 +70,7 @@ pub fn tag_name(tag: u8) -> &'static str {
         TAG_STANDARDIZED => "Standardized",
         TAG_SHARD => "ClusterShard",
         TAG_SHARD_MANIFEST => "ShardManifest",
+        TAG_MULTISCALE => "Multiscale",
         _ => "unknown",
     }
 }

@@ -28,6 +28,10 @@ pub enum SurrogateSpec {
     /// A Cluster Kriging flavor ("OWCK"/"OWFCK"/"GMMCK"/"MTCK"/"RANDOM-CK")
     /// with `k` clusters.
     ClusterKriging { flavor: String, k: usize },
+    /// Streaming multiscale ensemble with `k` fine residual clusters
+    /// (coarse global model + per-cluster residual models; see
+    /// [`crate::stream`]).
+    Multiscale { k: usize },
     /// Full (unapproximated) Ordinary Kriging — the reference the
     /// approximations are trying to match.
     FullKriging,
@@ -72,6 +76,7 @@ impl SurrogateSpec {
             SurrogateSpec::Bcm { shared: true, .. } => "BCM sh.".into(),
             SurrogateSpec::Bcm { shared: false, .. } => "BCM".into(),
             SurrogateSpec::ClusterKriging { flavor, .. } => flavor.clone(),
+            SurrogateSpec::Multiscale { .. } => "Multiscale".into(),
             SurrogateSpec::FullKriging => "Kriging".into(),
         }
     }
@@ -81,7 +86,9 @@ impl SurrogateSpec {
     pub fn knob(&self) -> usize {
         match self {
             SurrogateSpec::Sod { m } | SurrogateSpec::Fitc { m } => *m,
-            SurrogateSpec::Bcm { k, .. } | SurrogateSpec::ClusterKriging { k, .. } => *k,
+            SurrogateSpec::Bcm { k, .. }
+            | SurrogateSpec::ClusterKriging { k, .. }
+            | SurrogateSpec::Multiscale { k } => *k,
             SurrogateSpec::FullKriging => 1,
         }
     }
@@ -111,6 +118,7 @@ impl SurrogateSpec {
             "bcm-sh" | "bcm-shared" => {
                 SurrogateSpec::Bcm { k: need("module count")?, shared: true }
             }
+            "multiscale" => SurrogateSpec::Multiscale { k: need("cluster count")? },
             "kriging" | "gp" => SurrogateSpec::FullKriging,
             _ => {
                 let upper = head.to_ascii_uppercase();
@@ -161,6 +169,22 @@ impl SurrogateSpec {
                 let cfg = builder::flavor(flavor, *k, opts.seed, opts.hyperopt.clone())?;
                 Box::new(ClusterKriging::fit(&ds.x, &ds.y, cfg)?)
             }
+            SurrogateSpec::Multiscale { k } => {
+                // Batch data through the streaming driver with an
+                // effectively unlimited budget: same code path as
+                // `fit --stream`, minus the memory pressure. The result
+                // carries its own standardizer (fitted from streamed
+                // moments), so it serves the dataset's units as-is.
+                let mut src =
+                    crate::stream::MemorySource::new(ds.x.clone(), ds.y.clone(), 4096);
+                let cfg = crate::stream::StreamFitConfig {
+                    hyperopt: opts.hyperopt.clone(),
+                    seed: opts.seed,
+                    ..crate::stream::StreamFitConfig::new(*k, usize::MAX / 2)
+                };
+                let (model, _report) = crate::stream::fit_stream(&mut src, &cfg)?;
+                Box::new(model)
+            }
             SurrogateSpec::FullKriging => {
                 Box::new(opts.hyperopt.fit(ds.x.clone(), &ds.y)?)
             }
@@ -196,6 +220,7 @@ impl std::fmt::Display for SurrogateSpec {
             SurrogateSpec::ClusterKriging { flavor, k } => {
                 write!(f, "{}:{k}", flavor.to_ascii_lowercase())
             }
+            SurrogateSpec::Multiscale { k } => write!(f, "multiscale:{k}"),
             SurrogateSpec::FullKriging => write!(f, "kriging"),
         }
     }
@@ -220,6 +245,9 @@ pub(crate) fn read_boxed(
         artifact::TAG_BCM => Box::new(Bcm::read_artifact(r, version)?),
         artifact::TAG_CLUSTER_KRIGING => Box::new(ClusterKriging::read_artifact(r, version)?),
         artifact::TAG_STANDARDIZED => Box::new(Standardized::read_artifact(r)?),
+        artifact::TAG_MULTISCALE => {
+            Box::new(crate::stream::Multiscale::read_artifact(r, version)?)
+        }
         artifact::TAG_SHARD => {
             Box::new(crate::distributed::ClusterShard::read_artifact(r, version)?)
         }
@@ -256,6 +284,7 @@ mod tests {
             SurrogateSpec::Bcm { k: 4, shared: true },
             SurrogateSpec::ClusterKriging { flavor: "OWCK".into(), k: 8 },
             SurrogateSpec::ClusterKriging { flavor: "RANDOM-CK".into(), k: 2 },
+            SurrogateSpec::Multiscale { k: 6 },
             SurrogateSpec::FullKriging,
         ] {
             let text = spec.to_string();
@@ -271,6 +300,7 @@ mod tests {
         );
         assert_eq!(SurrogateSpec::parse("Kriging").unwrap(), SurrogateSpec::FullKriging);
         assert!(SurrogateSpec::parse("sod").is_err(), "missing knob");
+        assert!(SurrogateSpec::parse("multiscale").is_err(), "missing knob");
         assert!(SurrogateSpec::parse("sod:abc").is_err());
         assert!(SurrogateSpec::parse("bogus:3").is_err());
     }

@@ -226,6 +226,22 @@ impl crate::online::OnlineSurrogate for Standardized {
         let y: Vec<f64> = ys.iter().map(|&v| self.std.inverse_y(v)).collect();
         (x, y)
     }
+
+    fn training_len(&self) -> usize {
+        self.inner.as_online().expect("checked by as_online").training_len()
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.inner.as_online().expect("checked by as_online").resident_bytes()
+    }
+
+    fn forget_oldest(&mut self) -> Result<bool> {
+        let inner_name = self.inner.name().to_string();
+        self.inner
+            .as_online_mut()
+            .ok_or_else(|| anyhow::anyhow!("wrapped {inner_name} model is not online-capable"))?
+            .forget_oldest()
+    }
 }
 
 #[cfg(test)]
@@ -290,6 +306,20 @@ mod tests {
         assert!((sy[last] - y_new).abs() < 1e-9);
         // Dimension mismatch is recoverable.
         assert!(m.observe(&[1.0, 2.0], 0.0).is_err());
+    }
+
+    #[test]
+    fn forget_oldest_drops_the_first_point() {
+        let (mut m, ds) = make();
+        let n0 = m.training_len();
+        assert_eq!(n0, ds.n());
+        assert!(m.resident_bytes() > 0);
+        assert!(m.forget_oldest().unwrap());
+        assert_eq!(m.training_len(), n0 - 1);
+        // Row 0 (the oldest) is gone; the snapshot now leads with what
+        // was the second point, still in raw units.
+        let (sx, _) = m.training_snapshot();
+        assert!((sx.row(0)[0] - ds.x.row(1)[0]).abs() < 1e-9);
     }
 
     #[test]

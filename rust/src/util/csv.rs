@@ -58,11 +58,132 @@ pub fn parse(text: &str, has_header: bool) -> Result<NumericCsv> {
 }
 
 /// Read and parse a CSV file.
+///
+/// Slurps the whole file; fine for reports and small datasets. Streaming
+/// callers that must stay within a memory budget use [`CsvChunks`].
 pub fn read_file(path: impl AsRef<Path>, has_header: bool) -> Result<NumericCsv> {
     let path = path.as_ref();
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading {}", path.display()))?;
     parse(&text, has_header)
+}
+
+/// Chunked CSV reader: yields fixed-row-count [`Matrix`] chunks from any
+/// [`BufRead`] without ever materializing the full table.
+///
+/// Same dialect as [`parse`] — comma-separated numeric fields, blank
+/// lines and `#` comments skipped, optional header as the first
+/// non-comment line, ragged rows and bad numbers rejected with 1-based
+/// line numbers. Peak memory is one chunk (`chunk_rows × width` floats)
+/// plus the line buffer, independent of file size.
+pub struct CsvChunks<R: std::io::BufRead> {
+    reader: R,
+    chunk_rows: usize,
+    has_header: bool,
+    header: Option<Vec<String>>,
+    width: Option<usize>,
+    lineno: usize,
+    done: bool,
+}
+
+impl CsvChunks<std::io::BufReader<std::fs::File>> {
+    /// Open a file for chunked reading.
+    pub fn open(path: impl AsRef<Path>, chunk_rows: usize, has_header: bool) -> Result<Self> {
+        let path = path.as_ref();
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        Ok(Self::new(std::io::BufReader::new(file), chunk_rows, has_header))
+    }
+}
+
+impl<R: std::io::BufRead> CsvChunks<R> {
+    /// Panics if `chunk_rows == 0`.
+    pub fn new(reader: R, chunk_rows: usize, has_header: bool) -> Self {
+        assert!(chunk_rows > 0, "chunk_rows must be >= 1");
+        Self { reader, chunk_rows, has_header, header: None, width: None, lineno: 0, done: false }
+    }
+
+    /// Column names, once the header line has been consumed (i.e. after
+    /// the first chunk when constructed with `has_header = true`).
+    pub fn header(&self) -> Option<&[String]> {
+        self.header.as_deref()
+    }
+
+    /// Row width, known after the first data row.
+    pub fn cols(&self) -> Option<usize> {
+        self.width
+    }
+
+    /// Pull the next chunk: up to `chunk_rows` parsed rows, fewer at end
+    /// of input, `None` once the input is exhausted.
+    fn next_chunk(&mut self) -> Result<Option<Matrix>> {
+        let mut data: Vec<f64> = Vec::new();
+        let mut rows = 0usize;
+        let mut line = String::new();
+        while rows < self.chunk_rows {
+            line.clear();
+            let read = self
+                .reader
+                .read_line(&mut line)
+                .with_context(|| format!("line {}: read error", self.lineno + 1))?;
+            if read == 0 {
+                break; // EOF
+            }
+            self.lineno += 1;
+            let trimmed = line.trim();
+            if trimmed.is_empty() || trimmed.starts_with('#') {
+                continue;
+            }
+            if self.has_header && self.header.is_none() && self.width.is_none() {
+                self.header = Some(trimmed.split(',').map(|s| s.trim().to_string()).collect());
+                continue;
+            }
+            let lineno = self.lineno;
+            let row: Vec<f64> = trimmed
+                .split(',')
+                .map(|f| {
+                    f.trim()
+                        .parse::<f64>()
+                        .with_context(|| format!("line {lineno}: bad number {f:?}"))
+                })
+                .collect::<Result<_>>()?;
+            match self.width {
+                Some(w) if row.len() != w => {
+                    bail!("line {lineno}: expected {w} fields, got {}", row.len())
+                }
+                Some(_) => {}
+                None => self.width = Some(row.len()),
+            }
+            data.extend(row);
+            rows += 1;
+        }
+        if rows == 0 {
+            return Ok(None);
+        }
+        let cols = self.width.expect("rows > 0 implies width known");
+        Ok(Some(Matrix::from_vec(rows, cols, data)))
+    }
+}
+
+impl<R: std::io::BufRead> Iterator for CsvChunks<R> {
+    type Item = Result<Matrix>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.done {
+            return None;
+        }
+        match self.next_chunk() {
+            Ok(Some(chunk)) => Some(Ok(chunk)),
+            Ok(None) => {
+                self.done = true;
+                None
+            }
+            Err(e) => {
+                self.done = true; // a parse error poisons the stream
+                Some(Err(e))
+            }
+        }
+    }
 }
 
 /// Serialize a matrix (and optional header) as CSV text.
@@ -127,6 +248,44 @@ mod tests {
         let back = parse(&text, true).unwrap();
         assert_eq!(back.data, m);
         assert_eq!(back.header.unwrap(), vec!["x", "y"]);
+    }
+
+    #[test]
+    fn chunks_match_batch_parse() {
+        let text = "# comment\nx,y\n1,2\n3,4\n\n5,6\n7,8\n9,10\n";
+        let batch = parse(text, true).unwrap();
+        let mut chunks = CsvChunks::new(std::io::Cursor::new(text), 2, true);
+        let mut rows: Vec<Vec<f64>> = Vec::new();
+        let mut sizes = Vec::new();
+        for chunk in chunks.by_ref() {
+            let m = chunk.unwrap();
+            sizes.push(m.rows());
+            for i in 0..m.rows() {
+                rows.push(m.row(i).to_vec());
+            }
+        }
+        assert_eq!(sizes, vec![2, 2, 1], "fixed-size chunks with a short tail");
+        assert_eq!(chunks.header().unwrap(), ["x".to_string(), "y".to_string()]);
+        assert_eq!(chunks.cols(), Some(2));
+        assert_eq!(rows.len(), batch.data.rows());
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.as_slice(), batch.data.row(i));
+        }
+    }
+
+    #[test]
+    fn chunks_reject_ragged_and_stop() {
+        let mut chunks = CsvChunks::new(std::io::Cursor::new("1,2\n3\n5,6\n"), 1, false);
+        assert!(chunks.next().unwrap().is_ok());
+        let err = chunks.next().unwrap().unwrap_err().to_string();
+        assert!(err.contains("line 2"), "error should carry the line number: {err}");
+        assert!(chunks.next().is_none(), "a parse error poisons the stream");
+    }
+
+    #[test]
+    fn chunks_empty_input() {
+        let mut chunks = CsvChunks::new(std::io::Cursor::new("# only comments\n\n"), 4, false);
+        assert!(chunks.next().is_none());
     }
 
     #[test]

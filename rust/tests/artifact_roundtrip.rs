@@ -43,6 +43,7 @@ fn all_specs() -> Vec<SurrogateSpec> {
         SurrogateSpec::Fitc { m: 16 },
         SurrogateSpec::Bcm { k: 2, shared: true },
         SurrogateSpec::Bcm { k: 2, shared: false },
+        SurrogateSpec::Multiscale { k: 2 },
         SurrogateSpec::FullKriging,
     ];
     for flavor in cluster_kriging::cluster_kriging::builder::FLAVORS {
