@@ -8,6 +8,7 @@
 use crate::cluster_kriging::combiner::{ClusterPrediction, Combiner};
 use crate::cluster_kriging::partitioner::{Membership, Partition, Partitioner};
 use crate::kriging::{HyperOpt, OrdinaryKriging, Prediction, Surrogate};
+use crate::obs::trace;
 use crate::util::matrix::Matrix;
 use crate::util::threadpool::{default_workers, scoped_map};
 use anyhow::{bail, Context, Result};
@@ -192,6 +193,10 @@ impl ClusterKriging {
         let m = xt.rows();
         assert_eq!(mean.len(), m, "predict_batch_into: mean buffer size");
         assert_eq!(variance.len(), m, "predict_batch_into: variance buffer size");
+        // Per-cluster predicts run on scoped worker threads; hand the
+        // calling thread's ambient trace context across so the models'
+        // kernel-assembly / triangular-solve spans land in the tree.
+        let ctx = trace::current();
         match self.combiner {
             Combiner::SingleModel => {
                 // Group rows by routed cluster, batch-predict per group.
@@ -203,6 +208,7 @@ impl ClusterKriging {
                     if rows.is_empty() {
                         return None;
                     }
+                    let _guard = ctx.clone().map(trace::enter);
                     let sub = xt.select_rows(rows);
                     // One assembly worker per model: the map above already
                     // parallelizes across routed groups.
@@ -222,24 +228,27 @@ impl ClusterKriging {
                 // models), then combine per point.
                 let models: Vec<usize> = (0..self.k()).collect();
                 let per_model = scoped_map(&models, default_workers(), |_, &ci| {
+                    let _guard = ctx.clone().map(trace::enter);
                     // One assembly worker per model: the map above already
                     // parallelizes across the k models.
                     self.models[ci].predict_with_workers(xt, 1).expect("dims checked")
                 });
-                let mut preds = Vec::with_capacity(self.k());
-                for i in 0..m {
-                    preds.clear();
-                    for pm in &per_model {
-                        preds.push(ClusterPrediction {
-                            mean: pm.mean[i],
-                            variance: pm.variance[i],
-                        });
+                trace::span("combine", || {
+                    let mut preds = Vec::with_capacity(self.k());
+                    for i in 0..m {
+                        preds.clear();
+                        for pm in &per_model {
+                            preds.push(ClusterPrediction {
+                                mean: pm.mean[i],
+                                variance: pm.variance[i],
+                            });
+                        }
+                        let weights = self.membership.weights(xt.row(i), self.k());
+                        let out = self.combiner.combine(&preds, &weights, 0);
+                        mean[i] = out.mean;
+                        variance[i] = out.variance;
                     }
-                    let weights = self.membership.weights(xt.row(i), self.k());
-                    let out = self.combiner.combine(&preds, &weights, 0);
-                    mean[i] = out.mean;
-                    variance[i] = out.variance;
-                }
+                });
             }
         }
     }

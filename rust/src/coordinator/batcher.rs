@@ -18,6 +18,7 @@
 use crate::coordinator::metrics::{ProtocolOp, ServerMetrics};
 use crate::coordinator::registry::ModelRegistry;
 use crate::kriging::Surrogate;
+use crate::obs::trace::{self, TraceCtx};
 use crate::online::wal::Durability;
 use crate::util::matrix::Matrix;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -48,6 +49,10 @@ struct Pending {
     model: Option<String>,
     reply: Sender<anyhow::Result<Vec<(f64, f64)>>>,
     enqueued: Instant,
+    /// Trace context of a sampled/forced request ([`crate::obs::trace`]):
+    /// the flush records this request's queue-wait under it and bills the
+    /// shared batch work to the first traced request in the group.
+    trace: Option<TraceCtx>,
 }
 
 #[derive(Debug, Clone)]
@@ -138,7 +143,21 @@ impl Batcher {
         data: Vec<f64>,
         rows: usize,
     ) -> anyhow::Result<Vec<(f64, f64)>> {
-        self.enqueue(ReqKind::Predict, model, data, rows)
+        self.enqueue(ReqKind::Predict, model, data, rows, None)
+    }
+
+    /// [`Self::predict_rows`] with a trace context attached: the flush
+    /// worker records this request's queue-wait span under `trace` and,
+    /// when this is the first traced request of its flush, the shared
+    /// batch-assembly and predict spans too.
+    pub fn predict_rows_traced(
+        &self,
+        model: Option<&str>,
+        data: Vec<f64>,
+        rows: usize,
+        trace: Option<TraceCtx>,
+    ) -> anyhow::Result<Vec<(f64, f64)>> {
+        self.enqueue(ReqKind::Predict, model, data, rows, trace)
     }
 
     /// Enqueue `rows` observations for one model slot; each row is the
@@ -153,7 +172,7 @@ impl Batcher {
         data: Vec<f64>,
         rows: usize,
     ) -> anyhow::Result<()> {
-        self.enqueue(ReqKind::Observe, model, data, rows).map(|_| ())
+        self.enqueue(ReqKind::Observe, model, data, rows, None).map(|_| ())
     }
 
     fn enqueue(
@@ -162,6 +181,7 @@ impl Batcher {
         model: Option<&str>,
         data: Vec<f64>,
         rows: usize,
+        trace: Option<TraceCtx>,
     ) -> anyhow::Result<Vec<(f64, f64)>> {
         let target = self
             .registry
@@ -197,6 +217,7 @@ impl Batcher {
                 model: model.map(str::to_string),
                 reply: tx,
                 enqueued: Instant::now(),
+                trace,
             });
         }
         self.shared.available.notify_one();
@@ -388,16 +409,32 @@ fn flush_group(
         return;
     }
 
+    // Tracing: each traced request owns its queue-wait span; the shared
+    // flush work (assembly + predict, and whatever the model records
+    // beneath predict) is billed to the first traced request's tree.
+    for p in &group {
+        if let Some(ctx) = &p.trace {
+            let wait_us = p.enqueued.elapsed().as_micros() as u64;
+            let now = ctx.tracer.now_us();
+            ctx.record("queue-wait", now.saturating_sub(wait_us), wait_us);
+        }
+    }
+    let _trace_guard = group.iter().find_map(|p| p.trace.clone()).map(trace::enter);
+
     let rows: usize = group.iter().map(|p| p.rows).sum();
     xt_data.clear();
-    for p in &group {
-        xt_data.extend_from_slice(&p.data);
-    }
+    trace::span("batch-assembly", || {
+        for p in &group {
+            xt_data.extend_from_slice(&p.data);
+        }
+    });
     let xt = Matrix::from_vec(rows, dim, std::mem::take(xt_data));
     mean_buf.resize(rows, 0.0);
     var_buf.resize(rows, 0.0);
     let t0 = Instant::now();
-    let result = model.predict_into(&xt, &mut mean_buf[..rows], &mut var_buf[..rows]);
+    let result = trace::span("predict", || {
+        model.predict_into(&xt, &mut mean_buf[..rows], &mut var_buf[..rows])
+    });
     // Reclaim the matrix buffer for the next flush.
     *xt_data = xt.into_vec();
 
@@ -570,6 +607,34 @@ mod tests {
         );
         let out = b.predict_rows(None, vec![1.0, 0.0, 2.0, 0.0, 3.0, 0.0], 3).unwrap();
         assert_eq!(out.iter().map(|p| p.0).collect::<Vec<_>>(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn traced_request_records_flush_spans() {
+        use crate::obs::trace::{Sampling, TraceCtx, Tracer};
+        let b = Batcher::start(
+            registry_of(Arc::new(Echo::new(2))),
+            BatcherConfig::default(),
+            Arc::new(ServerMetrics::new()),
+        );
+        let tracer = Arc::new(Tracer::new(64, Sampling::Always));
+        let trace_id = tracer.sample().unwrap();
+        let root = tracer.next_id();
+        let ctx = TraceCtx { tracer: Arc::clone(&tracer), trace_id, parent: root };
+        b.predict_rows_traced(None, vec![1.0, 2.0], 1, Some(ctx)).unwrap();
+
+        let spans = tracer.spans_for(trace_id);
+        let names: Vec<&str> = spans.iter().map(|s| s.name.as_str()).collect();
+        for want in ["queue-wait", "batch-assembly", "predict"] {
+            assert!(names.contains(&want), "missing span {want:?} in {names:?}");
+        }
+        // Flush spans hang off the request's root, not off each other.
+        assert!(spans.iter().all(|s| s.parent_id == root), "{spans:?}");
+
+        // Untraced requests leave no spans behind.
+        let before = spans.len();
+        b.predict_one(&[0.0, 0.0]).unwrap();
+        assert_eq!(tracer.spans_for(trace_id).len(), before);
     }
 
     #[test]

@@ -6,13 +6,17 @@
 //! suggest and the distributed `spredict` each get their own buckets, so
 //! shard fan-out cost is attributable in `stats` instead of being
 //! averaged into the predict latency it inflates.
+//!
+//! Everything here is lock-free ([`AtomicHistogram`] buckets and
+//! `AtomicU64` counters): `record_op` on the predict path used to
+//! serialize every connection thread through two mutex acquisitions per
+//! op, and `summary()` took the aggregate lock three more times per
+//! render. Now a record is a handful of relaxed atomic adds and a
+//! reader can scrape mid-flight without stalling a single request.
 
+use crate::obs::hist::{AtomicHistogram, HistogramSnapshot};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
-
-/// Fixed logarithmic latency buckets (µs).
-const BUCKET_BOUNDS_US: [u64; 12] =
-    [10, 30, 100, 300, 1_000, 3_000, 10_000, 30_000, 100_000, 300_000, 1_000_000, 3_000_000];
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
 
 /// Protocol op families with separately tracked latency histograms.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -40,7 +44,8 @@ impl ProtocolOp {
         }
     }
 
-    fn key(self) -> &'static str {
+    /// Stable key used in `stats` summaries and `metricsx` labels.
+    pub fn key(self) -> &'static str {
         match self {
             ProtocolOp::Predict => "predict",
             ProtocolOp::Observe => "observe",
@@ -49,7 +54,8 @@ impl ProtocolOp {
         }
     }
 
-    const ALL: [ProtocolOp; Self::COUNT] = [
+    /// Every tracked op, in summary order.
+    pub const ALL: [ProtocolOp; Self::COUNT] = [
         ProtocolOp::Predict,
         ProtocolOp::Observe,
         ProtocolOp::Suggest,
@@ -57,8 +63,10 @@ impl ProtocolOp {
     ];
 }
 
-/// Lock-free counters + mutex-guarded histograms.
-#[derive(Debug, Default)]
+/// Lock-free counters + lock-free bucket histograms, plus the process
+/// identity gauges (`uptime_s`, `started_unix`, build version) that
+/// fleet dashboards use to spot restarts and version skew.
+#[derive(Debug)]
 pub struct ServerMetrics {
     pub requests: AtomicU64,
     pub predictions: AtomicU64,
@@ -83,46 +91,48 @@ pub struct ServerMetrics {
     pub panics: AtomicU64,
     pub batches: AtomicU64,
     pub errors: AtomicU64,
-    latencies: Mutex<Histogram>,
-    per_op: Mutex<[Histogram; ProtocolOp::COUNT]>,
-}
-
-#[derive(Debug, Default)]
-struct Histogram {
-    counts: [u64; BUCKET_BOUNDS_US.len() + 1],
-    total_us: u64,
-    n: u64,
-    max_us: u64,
-}
-
-impl Histogram {
-    fn record_us(&mut self, us: u64) {
-        let idx = BUCKET_BOUNDS_US.iter().position(|&b| us <= b).unwrap_or(BUCKET_BOUNDS_US.len());
-        self.counts[idx] += 1;
-        self.total_us += us;
-        self.n += 1;
-        self.max_us = self.max_us.max(us);
-    }
-
-    fn percentile_us(&self, p: f64) -> u64 {
-        if self.n == 0 {
-            return 0;
-        }
-        let target = ((p / 100.0) * self.n as f64).ceil() as u64;
-        let mut seen = 0;
-        for (i, &c) in self.counts.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                return if i < BUCKET_BOUNDS_US.len() { BUCKET_BOUNDS_US[i] } else { self.max_us };
-            }
-        }
-        self.max_us
-    }
+    latencies: AtomicHistogram,
+    per_op: [AtomicHistogram; ProtocolOp::COUNT],
+    started: Instant,
+    started_unix: u64,
 }
 
 impl ServerMetrics {
     pub fn new() -> Self {
-        Self::default()
+        Self {
+            requests: AtomicU64::new(0),
+            predictions: AtomicU64::new(0),
+            observes: AtomicU64::new(0),
+            suggests: AtomicU64::new(0),
+            spredicts: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            latencies: AtomicHistogram::new(),
+            per_op: Default::default(),
+            started: Instant::now(),
+            started_unix: SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0),
+        }
+    }
+
+    /// Seconds since this metrics object (≈ the server) was created.
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Wall-clock boot time (seconds since the Unix epoch).
+    pub fn started_unix(&self) -> u64 {
+        self.started_unix
+    }
+
+    /// Crate version baked into the binary, for version-skew dashboards.
+    pub fn version() -> &'static str {
+        env!("CARGO_PKG_VERSION")
     }
 
     pub fn record_request(&self) {
@@ -165,11 +175,11 @@ impl ServerMetrics {
     }
 
     /// Record one op execution of `seconds` into that op's latency
-    /// histogram **and** the aggregate histogram.
+    /// histogram **and** the aggregate histogram. Lock-free.
     pub fn record_op(&self, op: ProtocolOp, seconds: f64) {
         let us = (seconds * 1e6) as u64;
-        self.latencies.lock().unwrap().record_us(us);
-        self.per_op.lock().unwrap()[op.index()].record_us(us);
+        self.latencies.record_us(us);
+        self.per_op[op.index()].record_us(us);
     }
 
     /// Record one served batch of `size` predictions taking `seconds`.
@@ -181,26 +191,31 @@ impl ServerMetrics {
 
     /// Approximate latency percentile from the aggregate histogram (µs).
     pub fn latency_percentile_us(&self, p: f64) -> u64 {
-        self.latencies.lock().unwrap().percentile_us(p)
+        self.latencies.percentile_us(p)
     }
 
     /// Approximate latency percentile for one protocol op (µs).
     pub fn op_percentile_us(&self, op: ProtocolOp, p: f64) -> u64 {
-        self.per_op.lock().unwrap()[op.index()].percentile_us(p)
+        self.per_op[op.index()].percentile_us(p)
     }
 
     /// Samples recorded for one protocol op.
     pub fn op_count(&self, op: ProtocolOp) -> u64 {
-        self.per_op.lock().unwrap()[op.index()].n
+        self.per_op[op.index()].count()
+    }
+
+    /// Bucket snapshot of the aggregate latency histogram (exposition).
+    pub fn latency_snapshot(&self) -> HistogramSnapshot {
+        self.latencies.snapshot()
+    }
+
+    /// Bucket snapshot of one op's latency histogram (exposition).
+    pub fn op_snapshot(&self, op: ProtocolOp) -> HistogramSnapshot {
+        self.per_op[op.index()].snapshot()
     }
 
     pub fn mean_latency_us(&self) -> f64 {
-        let h = self.latencies.lock().unwrap();
-        if h.n == 0 {
-            0.0
-        } else {
-            h.total_us as f64 / h.n as f64
-        }
+        self.latencies.mean_us()
     }
 
     /// One-line human-readable summary. The historical aggregate keys
@@ -225,10 +240,9 @@ impl ServerMetrics {
             self.latency_percentile_us(50.0),
             self.latency_percentile_us(99.0),
         );
-        let per_op = self.per_op.lock().unwrap();
         for op in ProtocolOp::ALL {
-            let h = &per_op[op.index()];
-            if h.n > 0 {
+            let h = &self.per_op[op.index()];
+            if h.count() > 0 {
                 s.push_str(&format!(
                     " {key}_p50={}µs {key}_p99={}µs",
                     h.percentile_us(50.0),
@@ -244,6 +258,7 @@ impl ServerMetrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::hist::BUCKET_BOUNDS_US;
 
     #[test]
     fn counters_accumulate() {
@@ -415,5 +430,36 @@ mod tests {
         let m = ServerMetrics::new();
         m.record_batch(1, 0.0);
         assert_eq!(m.latency_percentile_us(100.0), BUCKET_BOUNDS_US[0]);
+    }
+
+    #[test]
+    fn identity_gauges_are_present() {
+        let m = ServerMetrics::new();
+        assert!(m.uptime_s() >= 0.0);
+        assert!(m.started_unix() > 1_500_000_000, "boot time predates the crate");
+        assert!(!ServerMetrics::version().is_empty());
+    }
+
+    #[test]
+    fn recording_under_concurrency_loses_nothing() {
+        use std::sync::Arc;
+        // The lock-free rewrite's contract: concurrent record_op calls
+        // from many connection threads all land.
+        let m = Arc::new(ServerMetrics::new());
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let m = Arc::clone(&m);
+                std::thread::spawn(move || {
+                    for _ in 0..500 {
+                        m.record_op(ProtocolOp::Predict, 50e-6);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(m.op_count(ProtocolOp::Predict), 4000);
+        assert_eq!(m.latency_snapshot().n, 4000);
     }
 }

@@ -70,6 +70,26 @@
 //!     lag when the server runs with `--wal`, and `shards_alive` counts
 //!     healthy shard connections on a scatter-gather coordinator)
 //!
+//!   v7 (observability):
+//!   `metricsx`                       → Prometheus text exposition,
+//!                                      terminated by a `# EOF` line
+//!     (the protocol's one multi-line reply — counters, latency bucket
+//!     histograms, WAL lag, shard liveness and per-model quality gauges,
+//!     scrapeable with `nc`; see [`crate::obs::export`])
+//!   `predictb … [trace=<hex>]`       → as v2, recording a span tree
+//!     (the optional trailing token forces a trace under a client-chosen
+//!     ID; without it the server's sampler decides. `spredict` accepts
+//!     the same token — that is how a coordinator propagates its trace
+//!     ID to shard workers)
+//!   `trace <hex>`                    → `ok trace <hex> <n> <spans>`
+//!     (every retained span of that trace: the local ones plus, on a
+//!     coordinator, spans collected from the shard pool relabeled
+//!     `shard-<i>` — one line stitching the cross-process tree)
+//!   `traces`                         → `ok traces <hex>,<hex>,…`
+//!     (recently retained trace IDs, most recent first)
+//!   `stats`/`health` append `uptime_s=<s> started_unix=<s> version=<v>`
+//!     (process identity for restart/version-skew dashboards)
+//!
 //! Requests funnel through the [`Batcher`], so concurrent clients are
 //! served in dynamically-formed micro-batches; observations join the
 //! same flush queue and apply before that flush's predictions. Models
@@ -81,7 +101,10 @@
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::metrics::{ProtocolOp, ServerMetrics};
 use crate::coordinator::registry::ModelRegistry;
+use crate::coordinator::shardpool::ShardPool;
 use crate::kriging::Surrogate;
+use crate::obs::export::{self, PromText};
+use crate::obs::trace::{self, Span, TraceCtx, Tracer, WireSpan};
 use crate::online::wal::Durability;
 use crate::surrogate::SurrogateSpec;
 use crate::util::matrix::Matrix;
@@ -139,17 +162,31 @@ impl Health {
 }
 
 /// Extras for [`Server::start_with_options`]: caller-owned metrics, an
-/// optional write-ahead log for the observe path, and the shared health
-/// state the `health` op reports.
+/// optional write-ahead log for the observe path, the shared health
+/// state the `health` op reports, the span recorder behind protocol v7
+/// tracing, and — on a scatter-gather coordinator — the shard pool the
+/// `trace` op collects remote spans from.
 pub struct ServeOptions {
     pub metrics: Arc<ServerMetrics>,
     pub wal: Option<Arc<Durability>>,
     pub health: Arc<Health>,
+    /// Span recorder for this process. Defaults to a disabled tracer
+    /// (client-forced `trace=` requests still record).
+    pub tracer: Arc<Tracer>,
+    /// Shard pool to fan `trace <id>` collection out to (coordinator
+    /// role only).
+    pub pool: Option<Arc<ShardPool>>,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        Self { metrics: Arc::new(ServerMetrics::new()), wal: None, health: Health::new() }
+        Self {
+            metrics: Arc::new(ServerMetrics::new()),
+            wal: None,
+            health: Health::new(),
+            tracer: Arc::new(Tracer::disabled()),
+            pool: None,
+        }
     }
 }
 
@@ -161,6 +198,7 @@ pub struct Server {
     pub metrics: Arc<ServerMetrics>,
     registry: Arc<ModelRegistry>,
     health: Arc<Health>,
+    tracer: Arc<Tracer>,
 }
 
 impl Server {
@@ -189,7 +227,7 @@ impl Server {
         cfg: ServerConfig,
         opts: ServeOptions,
     ) -> Result<Self> {
-        let ServeOptions { metrics, wal, health } = opts;
+        let ServeOptions { metrics, wal, health, tracer, pool } = opts;
         let batcher = Arc::new(Batcher::start_with_wal(
             registry.clone(),
             cfg.batcher.clone(),
@@ -206,6 +244,7 @@ impl Server {
         let accept_metrics = metrics.clone();
         let accept_registry = registry.clone();
         let accept_health = health.clone();
+        let accept_tracer = tracer.clone();
         let accept_thread = std::thread::spawn(move || {
             let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
             while !accept_stop.load(Ordering::Relaxed) {
@@ -217,8 +256,10 @@ impl Server {
                         let r = accept_registry.clone();
                         let s = accept_stop.clone();
                         let h = accept_health.clone();
+                        let t = accept_tracer.clone();
+                        let sp = pool.clone();
                         conns.push(std::thread::spawn(move || {
-                            let _ = handle_connection(stream, b, r, m, s, h);
+                            let _ = handle_connection(stream, b, r, m, s, h, t, sp);
                         }));
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -250,6 +291,7 @@ impl Server {
             metrics,
             registry,
             health,
+            tracer,
         })
     }
 
@@ -268,6 +310,11 @@ impl Server {
     /// The health state this server's `health` op reports.
     pub fn health(&self) -> &Arc<Health> {
         &self.health
+    }
+
+    /// The span recorder this server's `trace` op reads from.
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.tracer
     }
 
     /// Stop accepting and join every connection thread. In-flight
@@ -301,6 +348,8 @@ fn handle_connection(
     metrics: Arc<ServerMetrics>,
     stop: Arc<AtomicBool>,
     health: Arc<Health>,
+    tracer: Arc<Tracer>,
+    pool: Option<Arc<ShardPool>>,
 ) -> Result<()> {
     stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
     // Line-sized writes + request/response ping-pong: Nagle + delayed ACK
@@ -327,7 +376,15 @@ fn handle_connection(
                 // thread (or the process): contain the panic, count it,
                 // and answer with a protocol error.
                 let reply = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    dispatch(line.trim(), &batcher, &registry, &metrics, &health)
+                    dispatch(
+                        line.trim(),
+                        &batcher,
+                        &registry,
+                        &metrics,
+                        &health,
+                        &tracer,
+                        pool.as_deref(),
+                    )
                 }))
                 .unwrap_or_else(|_| {
                     metrics.record_panic();
@@ -371,6 +428,8 @@ fn dispatch(
     registry: &ModelRegistry,
     metrics: &ServerMetrics,
     health: &Health,
+    tracer: &Arc<Tracer>,
+    pool: Option<&ShardPool>,
 ) -> String {
     metrics.record_request();
     let err = |msg: String| {
@@ -379,6 +438,32 @@ fn dispatch(
     };
     if line == "ping" {
         return "ok pong".into();
+    }
+    if line == "metricsx" {
+        return metricsx_for(batcher, registry, metrics, health);
+    }
+    if line == "traces" {
+        let ids: Vec<String> =
+            tracer.recent_traces(16).into_iter().map(|id| format!("{id:x}")).collect();
+        return format!("ok traces {}", ids.join(","));
+    }
+    if let Some(rest) = line.strip_prefix("trace ") {
+        let id = match u64::from_str_radix(rest.trim(), 16) {
+            Ok(v) if v != 0 => v,
+            _ => return err(format!("bad trace id {:?}", rest.trim())),
+        };
+        let mut spans: Vec<WireSpan> = tracer
+            .spans_for(id)
+            .into_iter()
+            .map(|span| WireSpan { proc: "local".into(), span })
+            .collect();
+        // Coordinator role: the same trace ID was propagated to shard
+        // workers (`spredict … trace=`), so stitch their spans in,
+        // relabeled `shard-<i>` by the pool.
+        if let Some(pool) = pool {
+            spans.extend(pool.collect_trace(id));
+        }
+        return format!("ok trace {id:x} {} {}", spans.len(), trace::encode_wire(&spans));
     }
     if line == "health" {
         let mut s = format!(
@@ -413,6 +498,12 @@ fn dispatch(
                 (p + os.train_points, b + os.resident_bytes)
             });
         s.push_str(&format!(" model_points={points} model_bytes={bytes}"));
+        s.push_str(&format!(
+            " uptime_s={:.0} started_unix={} version={}",
+            metrics.uptime_s(),
+            metrics.started_unix(),
+            ServerMetrics::version(),
+        ));
         return s;
     }
     if line == "stats" {
@@ -439,6 +530,12 @@ fn dispatch(
         if !online.is_empty() {
             s.push_str(&format!(" online={}", online.join(",")));
         }
+        s.push_str(&format!(
+            " uptime_s={:.0} started_unix={} version={}",
+            metrics.uptime_s(),
+            metrics.started_unix(),
+            ServerMetrics::version(),
+        ));
         return s;
     }
     if line == "models" {
@@ -511,8 +608,20 @@ fn dispatch(
         };
     }
     if let Some(rest) = line.strip_prefix("predictb ") {
-        // `predictb [model] <n> <p1;p2;…>`.
-        let tokens: Vec<&str> = rest.split_whitespace().collect();
+        // `predictb [model] <n> <p1;p2;…> [trace=<hex>]`. A trailing
+        // `trace=` token forces a trace under the client's ID (protocol
+        // v7); without it the tracer's sampler decides.
+        let mut tokens: Vec<&str> = rest.split_whitespace().collect();
+        let forced = match tokens.last() {
+            Some(t) if t.starts_with("trace=") => {
+                let t = tokens.pop().unwrap();
+                match u64::from_str_radix(&t["trace=".len()..], 16) {
+                    Ok(v) if v != 0 => Some(v),
+                    _ => return err(format!("bad trace id {t:?}")),
+                }
+            }
+            _ => None,
+        };
         let (model, n_str, body) = match tokens.as_slice() {
             [n, body] => (None, *n, *body),
             [model, n, body] => (Some(*model), *n, *body),
@@ -547,13 +656,35 @@ fn dispatch(
         if rows != n {
             return err(format!("declared {n} points but got {rows}"));
         }
-        return match batcher.predict_rows(model, data, rows) {
+        // Mint the root span before enqueueing so the flush worker's
+        // queue-wait/batch spans parent under it; record it after the
+        // reply so its duration covers the full enqueue-to-answer time.
+        let root = forced
+            .or_else(|| tracer.sample())
+            .map(|trace_id| (trace_id, tracer.next_id(), tracer.now_us()));
+        let ctx = root.map(|(trace_id, root_id, _)| TraceCtx {
+            tracer: Arc::clone(tracer),
+            trace_id,
+            parent: root_id,
+        });
+        let reply = match batcher.predict_rows_traced(model, data, rows, ctx) {
             Ok(pairs) => {
                 let body: Vec<String> = pairs.into_iter().map(fmt_pair).collect();
                 format!("ok {}", body.join(";"))
             }
             Err(e) => err(format!("{e:#}")),
         };
+        if let Some((trace_id, root_id, start_us)) = root {
+            tracer.record(Span {
+                trace_id,
+                span_id: root_id,
+                parent_id: 0,
+                name: "predictb".into(),
+                start_us,
+                dur_us: tracer.now_us().saturating_sub(start_us),
+            });
+        }
+        return reply;
     }
     if let Some(rest) = line.strip_prefix("spredict ") {
         // `spredict [model] <n> <p1;p2;…> [clusters=c1,c2,…]` — raw
@@ -562,6 +693,18 @@ fn dispatch(
         // already formed this batch, and re-queueing it would serialize
         // independent shards behind one flush worker.
         let mut tokens: Vec<&str> = rest.split_whitespace().collect();
+        // An optional `trace=` token rides after `clusters=` (protocol
+        // v7): the coordinator propagating its trace ID into this shard.
+        let forced = match tokens.last() {
+            Some(t) if t.starts_with("trace=") => {
+                let t = tokens.pop().unwrap();
+                match u64::from_str_radix(&t["trace=".len()..], 16) {
+                    Ok(v) if v != 0 => Some(v),
+                    _ => return err(format!("bad trace id {t:?}")),
+                }
+            }
+            _ => None,
+        };
         let has_filter = tokens.last().is_some_and(|t| t.starts_with("clusters="));
         let filter: Option<Vec<usize>> = if has_filter {
             let t = tokens.pop().unwrap();
@@ -620,7 +763,31 @@ fn dispatch(
         if let Err(e) = faults::hit("spredict") {
             return err(format!("{e:#}"));
         }
-        return match spredict_for(model, data, rows, filter.as_deref(), registry, metrics) {
+        // A forced trace wraps execution in an `spredict` root span;
+        // model internals (kernel assembly, solves) nest under it via
+        // the ambient context.
+        let root = forced.map(|trace_id| (trace_id, tracer.next_id(), tracer.now_us()));
+        let result = {
+            let _guard = root.map(|(trace_id, root_id, _)| {
+                trace::enter(TraceCtx {
+                    tracer: Arc::clone(tracer),
+                    trace_id,
+                    parent: root_id,
+                })
+            });
+            spredict_for(model, data, rows, filter.as_deref(), registry, metrics)
+        };
+        if let Some((trace_id, root_id, start_us)) = root {
+            tracer.record(Span {
+                trace_id,
+                span_id: root_id,
+                parent_id: 0,
+                name: "spredict".into(),
+                start_us,
+                dur_us: tracer.now_us().saturating_sub(start_us),
+            });
+        }
+        return match result {
             Ok(reply) => format!("ok {reply}"),
             Err(e) => err(format!("{e:#}")),
         };
@@ -754,6 +921,183 @@ fn dispatch(
         };
     }
     err(format!("unknown command {line:?}"))
+}
+
+/// Assemble the `metricsx` exposition document: everything `stats`
+/// reports, as Prometheus-style text, plus WAL lag, shard liveness,
+/// latency bucket histograms and the per-model prequential quality
+/// gauges. Lives here because the server is the one place that sees the
+/// metrics, the health gauges and the model registry at once.
+fn metricsx_for(
+    batcher: &Batcher,
+    registry: &ModelRegistry,
+    metrics: &ServerMetrics,
+    health: &Health,
+) -> String {
+    fn model_rows<'a>(
+        online: &'a [(String, crate::online::OnlineStats)],
+        f: impl Fn(&crate::online::OnlineStats) -> f64,
+    ) -> Vec<(Vec<(&'a str, &'a str)>, f64)> {
+        online.iter().map(|(name, os)| (vec![("model", name.as_str())], f(os))).collect()
+    }
+    let c = |a: &AtomicU64| a.load(Ordering::Relaxed);
+
+    let mut p = PromText::new();
+    p.gauge("ckrig_uptime_seconds", "Seconds since this server booted.", metrics.uptime_s());
+    p.gauge(
+        "ckrig_started_unix",
+        "Boot wall-clock time (Unix seconds).",
+        metrics.started_unix() as f64,
+    );
+    p.gauge_family(
+        "ckrig_build_info",
+        "Build identity (constant 1; version in the label).",
+        &[(vec![("version", ServerMetrics::version())], 1.0)],
+    );
+    p.counter("ckrig_requests_total", "Protocol requests received.", c(&metrics.requests));
+    p.counter("ckrig_predictions_total", "Prediction rows served.", c(&metrics.predictions));
+    p.counter("ckrig_observes_total", "Observations absorbed.", c(&metrics.observes));
+    p.counter("ckrig_suggests_total", "Candidate points proposed.", c(&metrics.suggests));
+    p.counter(
+        "ckrig_spredicts_total",
+        "Raw per-cluster rows served as a shard worker.",
+        c(&metrics.spredicts),
+    );
+    p.counter(
+        "ckrig_degraded_total",
+        "Scatter-gather merges that dropped at least one shard.",
+        c(&metrics.degraded),
+    );
+    p.counter("ckrig_retries_total", "Shard sub-requests retried.", c(&metrics.retries));
+    p.counter("ckrig_panics_total", "Contained request-handler panics.", c(&metrics.panics));
+    p.counter("ckrig_batches_total", "Prediction flushes executed.", c(&metrics.batches));
+    p.counter("ckrig_errors_total", "Protocol errors answered.", c(&metrics.errors));
+    p.gauge(
+        "ckrig_ready",
+        "1 when this process should receive traffic.",
+        health.ready() as u64 as f64,
+    );
+    p.gauge(
+        "ckrig_draining",
+        "1 while a graceful drain is in progress.",
+        health.draining.load(Ordering::Relaxed) as u64 as f64,
+    );
+    p.gauge("ckrig_queue_depth_points", "Flush-queue backlog in points.", batcher.depth() as f64);
+    if health.wal_attached.load(Ordering::Relaxed) {
+        p.gauge(
+            "ckrig_wal_last_seq",
+            "Last write-ahead-log sequence number appended.",
+            c(&health.wal_last_seq) as f64,
+        );
+        p.gauge(
+            "ckrig_wal_unsynced",
+            "Appended-but-unsynced WAL records (durability lag).",
+            c(&health.wal_unsynced) as f64,
+        );
+    }
+    let shards_total = c(&health.shards_total);
+    if shards_total > 0 {
+        p.gauge("ckrig_shards_total", "Shard workers in the fan-out pool.", shards_total as f64);
+        p.gauge(
+            "ckrig_shards_alive",
+            "Shard workers currently serving.",
+            shards_total.saturating_sub(c(&health.shards_down)) as f64,
+        );
+    }
+    p.histogram_family(
+        "ckrig_request_latency_us",
+        "Aggregate op execution latency (µs buckets).",
+        &[(vec![], metrics.latency_snapshot())],
+    );
+    let op_rows: Vec<_> = ProtocolOp::ALL
+        .iter()
+        .filter(|op| metrics.op_count(**op) > 0)
+        .map(|op| (vec![("op", op.key())], metrics.op_snapshot(*op)))
+        .collect();
+    p.histogram_family("ckrig_op_latency_us", "Per-op execution latency (µs buckets).", &op_rows);
+
+    // Per-model gauges: memory/refit posture plus prequential quality,
+    // one labeled sample per online slot.
+    let online: Vec<(String, crate::online::OnlineStats)> = registry
+        .list()
+        .into_iter()
+        .filter_map(|m| {
+            registry
+                .get(Some(&m.name))
+                .and_then(|model| model.observer().map(|o| (m.name, o.online_stats())))
+        })
+        .collect();
+    p.gauge_family(
+        "ckrig_model_train_points",
+        "Training points currently held by the live model.",
+        &model_rows(&online, |os| os.train_points as f64),
+    );
+    p.gauge_family(
+        "ckrig_model_resident_bytes",
+        "Approximate resident bytes of fitted state.",
+        &model_rows(&online, |os| os.resident_bytes as f64),
+    );
+    p.gauge_family(
+        "ckrig_model_history_len",
+        "Raw-unit refit-history length.",
+        &model_rows(&online, |os| os.history_len as f64),
+    );
+    p.gauge_family(
+        "ckrig_model_evicted_total",
+        "Training points evicted over the adapter's lifetime.",
+        &model_rows(&online, |os| os.evicted as f64),
+    );
+    p.gauge_family(
+        "ckrig_model_refits_total",
+        "Background refits hot-swapped in over the adapter's lifetime.",
+        &model_rows(&online, |os| os.refits as f64),
+    );
+    p.gauge_family(
+        "ckrig_model_observed_total",
+        "Observations absorbed over the adapter's lifetime.",
+        &model_rows(&online, |os| os.observed as f64),
+    );
+    p.gauge_family(
+        "ckrig_model_drift",
+        "Rolling mean standardized residual (the refit trigger).",
+        &model_rows(&online, |os| os.drift),
+    );
+    p.gauge_family(
+        "ckrig_model_quality_scored_total",
+        "Observations prequentially scored against the pre-update posterior.",
+        &model_rows(&online, |os| os.quality.scored as f64),
+    );
+    p.gauge_family(
+        "ckrig_model_mean_z2",
+        "Rolling mean squared standardized residual (1 = calibrated).",
+        &model_rows(&online, |os| os.quality.mean_z2),
+    );
+    p.gauge_family(
+        "ckrig_model_coverage90",
+        "Empirical 90% interval coverage (nominal 0.90).",
+        &model_rows(&online, |os| os.quality.coverage90),
+    );
+    p.gauge_family(
+        "ckrig_model_coverage95",
+        "Empirical 95% interval coverage (nominal 0.95).",
+        &model_rows(&online, |os| os.quality.coverage95),
+    );
+    p.gauge_family(
+        "ckrig_model_coverage99",
+        "Empirical 99% interval coverage (nominal 0.99).",
+        &model_rows(&online, |os| os.quality.coverage99),
+    );
+    p.gauge_family(
+        "ckrig_model_quality_rmse",
+        "Windowed prequential prediction RMSE (raw units).",
+        &model_rows(&online, |os| os.quality.rmse),
+    );
+    p.gauge_family(
+        "ckrig_model_calibration_flagged",
+        "1 when empirical interval coverage deviates beyond tolerance.",
+        &model_rows(&online, |os| os.quality.flagged() as u64 as f64),
+    );
+    p.finish()
 }
 
 /// Execute one `suggest` op: propose `q` points that maximize Expected
@@ -1057,6 +1401,18 @@ impl Client {
         model: Option<&str>,
         points: &[P],
     ) -> Result<Vec<(f64, f64)>> {
+        self.predict_batch_traced(model, points, None)
+    }
+
+    /// [`Self::predict_batch`] with a forced trace ID (protocol v7): the
+    /// server records the request's span tree under `trace`, ready for a
+    /// follow-up [`Self::trace_spans`] call.
+    pub fn predict_batch_traced<P: AsRef<[f64]>>(
+        &mut self,
+        model: Option<&str>,
+        points: &[P],
+        trace: Option<u64>,
+    ) -> Result<Vec<(f64, f64)>> {
         anyhow::ensure!(!points.is_empty(), "predict_batch needs at least one point");
         let body: Vec<String> = points
             .iter()
@@ -1068,8 +1424,11 @@ impl Client {
             Some(m) => format!("predictb {m} "),
             None => "predictb ".to_string(),
         };
-        let reply =
-            self.request_idempotent(&format!("{prefix}{} {}", points.len(), body.join(";")))?;
+        let mut line = format!("{prefix}{} {}", points.len(), body.join(";"));
+        if let Some(t) = trace {
+            line.push_str(&format!(" trace={t:x}"));
+        }
+        let reply = self.request_idempotent(&line)?;
         let rest = Self::expect_ok(&reply)?;
         let mut out = Vec::with_capacity(points.len());
         for pair in rest.split(';') {
@@ -1227,6 +1586,18 @@ impl Client {
         xt: &Matrix,
         filter: Option<&[usize]>,
     ) -> Result<Vec<Vec<(usize, f64, f64)>>> {
+        self.shard_predict_traced(model, xt, filter, None)
+    }
+
+    /// [`Self::shard_predict`] propagating a trace ID (protocol v7), so
+    /// the shard records its spans under the coordinator's trace.
+    pub fn shard_predict_traced(
+        &mut self,
+        model: Option<&str>,
+        xt: &Matrix,
+        filter: Option<&[usize]>,
+        trace: Option<u64>,
+    ) -> Result<Vec<Vec<(usize, f64, f64)>>> {
         anyhow::ensure!(xt.rows() >= 1, "shard_predict needs at least one point");
         let body: Vec<String> = (0..xt.rows())
             .map(|i| xt.row(i).iter().map(f64::to_string).collect::<Vec<_>>().join(","))
@@ -1241,6 +1612,9 @@ impl Client {
             anyhow::ensure!(!f.is_empty(), "empty cluster filter");
             let ids: Vec<String> = f.iter().map(usize::to_string).collect();
             line.push_str(&format!(" clusters={}", ids.join(",")));
+        }
+        if let Some(t) = trace {
+            line.push_str(&format!(" trace={t:x}"));
         }
         let reply = self.request_idempotent(&line)?;
         let rest = Self::expect_ok(&reply)?;
@@ -1311,6 +1685,75 @@ impl Client {
             clusters: clusters.context("shardinfo reply missing clusters")?,
             algo: algo.unwrap_or_default(),
         })
+    }
+
+    /// Full `metricsx` exposition document (protocol v7) — the line
+    /// protocol's one multi-line reply; reads until the `# EOF`
+    /// terminator, which is included in the returned text.
+    pub fn metricsx(&mut self) -> Result<String> {
+        self.writer.write_all(b"metricsx\n")?;
+        let mut out = String::new();
+        loop {
+            let mut line = String::new();
+            let n = self.reader.read_line(&mut line).map_err(|e| {
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut
+                {
+                    anyhow::anyhow!("metricsx timed out mid-document (connection poisoned)")
+                } else {
+                    anyhow::Error::from(e)
+                }
+            })?;
+            anyhow::ensure!(n > 0, "server closed the connection mid-metricsx");
+            if out.is_empty() && line.starts_with("err ") {
+                anyhow::bail!("server error: {}", line.trim());
+            }
+            out.push_str(&line);
+            if line.trim_end() == export::EOF_MARKER {
+                return Ok(out);
+            }
+        }
+    }
+
+    /// Fetch a stitched trace tree (protocol v7 `trace <id>`): every
+    /// retained span of `trace_id` on the answering server — tagged
+    /// `local` — plus, on a coordinator, the `shard-<i>` spans collected
+    /// from its pool.
+    pub fn trace_spans(&mut self, trace_id: u64) -> Result<Vec<WireSpan>> {
+        let reply = self.request_idempotent(&format!("trace {trace_id:x}"))?;
+        let rest = Self::expect_ok(&reply)?;
+        let rest = rest
+            .strip_prefix("trace ")
+            .with_context(|| format!("unexpected reply: {reply}"))?;
+        let mut parts = rest.splitn(3, ' ');
+        let id = parts.next().context("trace reply missing id")?;
+        anyhow::ensure!(
+            u64::from_str_radix(id, 16).ok() == Some(trace_id),
+            "server answered for trace {id}, asked for {trace_id:x}"
+        );
+        let declared: usize = parts.next().context("trace reply missing count")?.parse()?;
+        let spans = trace::decode_spans(trace_id, parts.next().unwrap_or(""));
+        anyhow::ensure!(
+            spans.len() == declared,
+            "trace reply declared {declared} spans but decoded {}",
+            spans.len()
+        );
+        Ok(spans)
+    }
+
+    /// Recently retained trace IDs on the server, most recent first
+    /// (protocol v7 `traces`).
+    pub fn recent_traces(&mut self) -> Result<Vec<u64>> {
+        let reply = self.request_idempotent("traces")?;
+        let rest = Self::expect_ok(&reply)?;
+        let rest = rest
+            .strip_prefix("traces")
+            .with_context(|| format!("unexpected reply: {reply}"))?;
+        rest.split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(|t| u64::from_str_radix(t, 16).with_context(|| format!("bad trace id {t:?}")))
+            .collect()
     }
 }
 
@@ -1732,5 +2175,106 @@ mod tests {
         let mut c = Client::connect(&addr).unwrap();
         assert!(c.predict_batch(None, &[[1.0, 2.0]]).is_err());
         fake.join().unwrap();
+    }
+
+    #[test]
+    fn stats_and_health_carry_process_identity() {
+        let server = start_server();
+        let mut c = Client::connect(&server.local_addr.to_string()).unwrap();
+        for reply in [c.request("stats").unwrap(), c.request("health").unwrap()] {
+            assert!(reply.contains("uptime_s="), "{reply}");
+            assert!(reply.contains("started_unix="), "{reply}");
+            assert!(
+                reply.contains(&format!("version={}", ServerMetrics::version())),
+                "{reply}"
+            );
+        }
+    }
+
+    #[test]
+    fn metricsx_emits_parseable_exposition() {
+        let server = Server::start_with_model(
+            Arc::new(Running::new(2)),
+            ServerConfig { addr: "127.0.0.1:0".into(), batcher: BatcherConfig::default() },
+        )
+        .unwrap();
+        let mut c = Client::connect(&server.local_addr.to_string()).unwrap();
+        c.observe(&[1.0, 2.0], 10.0).unwrap();
+        c.predict(&[0.0, 0.0]).unwrap();
+        let text = c.metricsx().unwrap();
+        assert!(text.trim_end().ends_with(export::EOF_MARKER), "{text}");
+        // The parse-everything gate: every non-comment line must be a
+        // well-formed sample.
+        let samples = export::parse(&text).unwrap();
+        let get = |name: &str| samples.iter().find(|s| s.name == name);
+        assert_eq!(get("ckrig_predictions_total").unwrap().value, 1.0);
+        assert_eq!(get("ckrig_observes_total").unwrap().value, 1.0);
+        assert!(get("ckrig_uptime_seconds").is_some());
+        assert!(get("ckrig_ready").unwrap().value == 1.0);
+        let build = get("ckrig_build_info").unwrap();
+        assert!(build.labels.iter().any(|(k, v)| k == "version" && !v.is_empty()));
+        // Per-model quality gauges carry the slot label.
+        let cov = get("ckrig_model_coverage95").unwrap();
+        assert_eq!(cov.labels, vec![("model".to_string(), "default".to_string())]);
+        assert!(get("ckrig_model_quality_scored_total").is_some());
+        assert!(samples.iter().any(|s| s.name == "ckrig_op_latency_us_bucket"));
+        // No WAL/pool attached → those gauges stay absent.
+        assert!(get("ckrig_wal_last_seq").is_none());
+        assert!(get("ckrig_shards_total").is_none());
+        // The connection still serves line ops after the multi-line reply.
+        assert_eq!(c.request("ping").unwrap(), "ok pong");
+    }
+
+    #[test]
+    fn forced_trace_records_and_answers_tree() {
+        let server = start_server();
+        let mut c = Client::connect(&server.local_addr.to_string()).unwrap();
+        let id = 0xabc123;
+        c.predict_batch_traced(None, &[vec![1.0, 2.0]], Some(id)).unwrap();
+        let spans = c.trace_spans(id).unwrap();
+        let names: Vec<&str> = spans.iter().map(|w| w.span.name.as_str()).collect();
+        for want in ["predictb", "queue-wait", "batch-assembly", "predict"] {
+            assert!(names.contains(&want), "missing {want:?} in {names:?}");
+        }
+        assert!(spans.iter().all(|w| w.proc == "local"), "{spans:?}");
+        // The root span parents every flush span.
+        let root = spans.iter().find(|w| w.span.name == "predictb").unwrap();
+        assert_eq!(root.span.parent_id, 0);
+        assert!(spans
+            .iter()
+            .filter(|w| w.span.name != "predictb")
+            .all(|w| w.span.parent_id == root.span.span_id));
+        // `traces` lists the retained ID; unknown traces answer empty;
+        // malformed IDs are protocol errors.
+        assert!(c.recent_traces().unwrap().contains(&id));
+        assert_eq!(c.trace_spans(0xdead).unwrap().len(), 0);
+        assert!(c.request("trace zzz").unwrap().starts_with("err"));
+        assert!(c.request("predictb 1 1,2 trace=0").unwrap().starts_with("err"));
+    }
+
+    #[test]
+    fn sampler_mints_traces_without_client_cooperation() {
+        use crate::obs::trace::Sampling;
+        let server = Server::start_with_options(
+            Arc::new(ModelRegistry::new("default", Arc::new(Sum))),
+            ServerConfig { addr: "127.0.0.1:0".into(), batcher: BatcherConfig::default() },
+            ServeOptions {
+                tracer: Arc::new(Tracer::new(256, Sampling::Always)),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut c = Client::connect(&server.local_addr.to_string()).unwrap();
+        // A plain predictb (no trace= token) still gets sampled.
+        c.predict_batch(None, &[vec![1.0, 2.0]]).unwrap();
+        let ids = c.recent_traces().unwrap();
+        assert_eq!(ids.len(), 1, "{ids:?}");
+        let spans = c.trace_spans(ids[0]).unwrap();
+        assert!(spans.iter().any(|w| w.span.name == "predictb"), "{spans:?}");
+        // With the default (disabled) tracer, nothing is minted.
+        let plain = start_server();
+        let mut c = Client::connect(&plain.local_addr.to_string()).unwrap();
+        c.predict_batch(None, &[vec![1.0, 2.0]]).unwrap();
+        assert!(c.recent_traces().unwrap().is_empty());
     }
 }

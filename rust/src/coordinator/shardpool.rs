@@ -21,6 +21,7 @@
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::server::{Client, Health};
 use crate::distributed::ShardManifest;
+use crate::obs::trace::{self, WireSpan};
 use crate::util::matrix::Matrix;
 use anyhow::{ensure, Context, Result};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -288,18 +289,44 @@ impl ShardPool {
     /// `spredict` against one shard. A transport failure marks the shard
     /// dead (background recovery starts) and surfaces as an error the
     /// caller treats as "this shard contributed nothing".
+    ///
+    /// When the calling thread carries an ambient trace context
+    /// ([`trace::current`]), the trace ID rides the wire (`trace=` on
+    /// `spredict`, so the worker records its server-side spans under the
+    /// same trace) and the full round trip is recorded coordinator-side
+    /// as a `shard-<i>-rtt` span — the gap between RTT and the worker's
+    /// own `spredict` span is network + queueing.
     pub fn shard_predict(
         self: &Arc<Self>,
         index: usize,
         xt: &Matrix,
         filter: Option<&[usize]>,
     ) -> Result<Vec<Vec<(usize, f64, f64)>>> {
+        let Some(ctx) = trace::current() else {
+            return self.shard_predict_wire(index, xt, filter, None);
+        };
+        let start = ctx.tracer.now_us();
+        let out = self.shard_predict_wire(index, xt, filter, Some(ctx.trace_id));
+        let dur = ctx.tracer.now_us().saturating_sub(start);
+        ctx.record(&format!("shard-{index}-rtt"), start, dur);
+        out
+    }
+
+    /// The wire leg of [`Self::shard_predict`]: pooled connection,
+    /// liveness bookkeeping, immediate retry.
+    fn shard_predict_wire(
+        self: &Arc<Self>,
+        index: usize,
+        xt: &Matrix,
+        filter: Option<&[usize]>,
+        trace_id: Option<u64>,
+    ) -> Result<Vec<Vec<(usize, f64, f64)>>> {
         let ep = &self.endpoints[index];
         let mut guard = ep.conn.lock().unwrap();
         let client = guard
             .as_mut()
             .with_context(|| format!("shard {index} at {} is down", ep.addr))?;
-        match client.shard_predict(None, xt, filter) {
+        match client.shard_predict_traced(None, xt, filter, trace_id) {
             Ok(rows) => {
                 ensure!(
                     rows.len() == xt.rows(),
@@ -328,7 +355,7 @@ impl ShardPool {
                     // merge plus the background backoff loop.
                     drop(guard);
                     self.note_retry();
-                    match self.redial_and_predict(index, xt, filter) {
+                    match self.redial_and_predict(index, xt, filter, trace_id) {
                         Ok(rows) => {
                             log::info!(
                                 "shard {index} at {} recovered on immediate retry",
@@ -358,11 +385,12 @@ impl ShardPool {
         index: usize,
         xt: &Matrix,
         filter: Option<&[usize]>,
+        trace_id: Option<u64>,
     ) -> Result<Vec<Vec<(usize, f64, f64)>>> {
         let ep = &self.endpoints[index];
         let mut client = self.dial(index)?;
         self.validate(index, &mut client)?;
-        let rows = client.shard_predict(None, xt, filter)?;
+        let rows = client.shard_predict_traced(None, xt, filter, trace_id)?;
         ensure!(
             rows.len() == xt.rows(),
             "shard {index} answered {} rows for {} points",
@@ -378,13 +406,52 @@ impl ShardPool {
     /// Fan one batch out to every live shard concurrently; `None` marks
     /// a shard that was dead or failed mid-request (and is now
     /// recovering in the background).
+    ///
+    /// The calling thread's ambient trace context (if any) is cloned
+    /// into every scatter thread — thread-locals do not cross
+    /// [`std::thread::scope`] on their own — so per-shard RTT spans and
+    /// the on-the-wire trace ID survive the fan-out.
     pub fn scatter(self: &Arc<Self>, xt: &Matrix) -> Vec<Option<Vec<Vec<(usize, f64, f64)>>>> {
+        let ctx = trace::current();
         std::thread::scope(|scope| {
             let handles: Vec<_> = (0..self.endpoints.len())
-                .map(|i| scope.spawn(move || self.shard_predict(i, xt, None).ok()))
+                .map(|i| {
+                    let ctx = ctx.clone();
+                    scope.spawn(move || {
+                        let _guard = ctx.map(trace::enter);
+                        self.shard_predict(i, xt, None).ok()
+                    })
+                })
                 .collect();
             handles.into_iter().map(|h| h.join().expect("scatter worker panicked")).collect()
         })
+    }
+
+    /// Gather retained spans for `trace_id` from every live shard worker
+    /// (protocol v7 `trace` op), relabeling each span's process from the
+    /// worker's own `local` to `shard-<i>`. Best-effort diagnostics: a
+    /// shard that is down or fails the request contributes nothing, and
+    /// is **not** marked dead over it — tracing must never take a
+    /// serving connection down.
+    pub fn collect_trace(&self, trace_id: u64) -> Vec<WireSpan> {
+        let mut out = Vec::new();
+        for ep in &self.endpoints {
+            if !ep.alive.load(Ordering::SeqCst) {
+                continue;
+            }
+            let mut guard = ep.conn.lock().unwrap();
+            let Some(client) = guard.as_mut() else { continue };
+            match client.trace_spans(trace_id) {
+                Ok(spans) => out.extend(spans.into_iter().map(|mut w| {
+                    w.proc = format!("shard-{}", ep.index);
+                    w
+                })),
+                Err(e) => {
+                    log::debug!("trace collection from shard {} failed: {e:#}", ep.index);
+                }
+            }
+        }
+        out
     }
 
     /// Forward a group of observations to one shard (protocol v3

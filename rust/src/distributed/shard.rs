@@ -230,7 +230,12 @@ fn predict_cluster_subset(
         ids,
         filter.unwrap_or(&[])
     );
+    // Per-cluster predicts run on scoped worker threads; hand the calling
+    // thread's ambient trace context across so the models' kernel-
+    // assembly / triangular-solve spans land in the request's tree.
+    let ctx = crate::obs::trace::current();
     let per_model: Vec<Result<Prediction>> = scoped_map(&selected, default_workers(), |_, &i| {
+        let _guard = ctx.clone().map(crate::obs::trace::enter);
         // One assembly worker per model: the map above already
         // parallelizes across the selected models.
         models[i]

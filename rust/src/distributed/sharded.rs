@@ -24,6 +24,7 @@ use crate::cluster_kriging::{ClusterPrediction, Combiner};
 use crate::coordinator::ShardPool;
 use crate::distributed::ShardManifest;
 use crate::kriging::{Prediction, Surrogate};
+use crate::obs::trace;
 use crate::online::{OnlineObserver, OnlineStats};
 use crate::util::matrix::Matrix;
 use anyhow::{ensure, Context, Result};
@@ -85,36 +86,39 @@ impl ShardedClusterKriging {
         let mut ids: Vec<usize> = Vec::with_capacity(k);
         let mut preds: Vec<ClusterPrediction> = Vec::with_capacity(k);
         let mut pairs: Vec<(usize, f64, f64)> = Vec::with_capacity(k);
-        for i in 0..xt.rows() {
-            pairs.clear();
-            for shard_rows in results.iter().flatten() {
-                pairs.extend_from_slice(&shard_rows[i]);
+        trace::span("combine", || -> Result<()> {
+            for i in 0..xt.rows() {
+                pairs.clear();
+                for shard_rows in results.iter().flatten() {
+                    pairs.extend_from_slice(&shard_rows[i]);
+                }
+                // Ascending cluster order — the monolithic combine iterates
+                // models 0..k, and matching its summation order keeps the
+                // healthy-fleet result bit-identical.
+                pairs.sort_unstable_by_key(|p| p.0);
+                // A worker whose slot was hot-swapped behind the pool's back
+                // could answer for clusters it doesn't own; a duplicated id
+                // would silently double-weight the merge. Served answers must
+                // be wrong loudly, not quietly.
+                ensure!(
+                    pairs.windows(2).all(|w| w[0].0 < w[1].0)
+                        && pairs.last().is_none_or(|p| p.0 < k),
+                    "shard fan-out returned duplicate or out-of-range cluster ids \
+                     (a worker is serving a different topology than the manifest)"
+                );
+                ids.clear();
+                preds.clear();
+                for &(c, m, v) in &pairs {
+                    ids.push(c);
+                    preds.push(ClusterPrediction { mean: m, variance: v });
+                }
+                let weights = self.manifest.membership.weights(rxt.row(i), k);
+                let out = self.manifest.combiner.merge_partial(&preds, &ids, &weights, 0);
+                mean[i] = out.mean;
+                variance[i] = out.variance;
             }
-            // Ascending cluster order — the monolithic combine iterates
-            // models 0..k, and matching its summation order keeps the
-            // healthy-fleet result bit-identical.
-            pairs.sort_unstable_by_key(|p| p.0);
-            // A worker whose slot was hot-swapped behind the pool's back
-            // could answer for clusters it doesn't own; a duplicated id
-            // would silently double-weight the merge. Served answers must
-            // be wrong loudly, not quietly.
-            ensure!(
-                pairs.windows(2).all(|w| w[0].0 < w[1].0)
-                    && pairs.last().is_none_or(|p| p.0 < k),
-                "shard fan-out returned duplicate or out-of-range cluster ids \
-                 (a worker is serving a different topology than the manifest)"
-            );
-            ids.clear();
-            preds.clear();
-            for &(c, m, v) in &pairs {
-                ids.push(c);
-                preds.push(ClusterPrediction { mean: m, variance: v });
-            }
-            let weights = self.manifest.membership.weights(rxt.row(i), k);
-            let out = self.manifest.combiner.merge_partial(&preds, &ids, &weights, 0);
-            mean[i] = out.mean;
-            variance[i] = out.variance;
-        }
+            Ok(())
+        })?;
         Ok(())
     }
 

@@ -14,6 +14,7 @@
 use crate::kernel::cache::DistanceCache;
 use crate::kernel::Kernel;
 use crate::linalg::{Cholesky, CholeskyError};
+use crate::obs::trace;
 use crate::util::matrix::Matrix;
 use crate::util::threadpool::default_workers;
 use std::sync::Arc;
@@ -368,8 +369,11 @@ impl OrdinaryKriging {
             let xt_chunk = xt.select_rows(&rows);
             // Vectorized assembly: GEMM trick for SE, row-parallel scalar
             // otherwise (falls back to the plain loop for tiny chunks).
-            let rt = self.kernel.cross_corr_fast(&xt_chunk, &self.x, workers); // c×n
-            let c_inv_r = self.chol.solve_matrix(&rt.transpose()); // n×c
+            let rt = trace::span("kernel-assembly", || {
+                self.kernel.cross_corr_fast(&xt_chunk, &self.x, workers)
+            }); // c×n
+            let c_inv_r =
+                trace::span("triangular-solve", || self.chol.solve_matrix(&rt.transpose())); // n×c
             for (ci, &row) in rows.iter().enumerate() {
                 let r = rt.row(ci);
                 let mut mu = self.mu_hat;

@@ -64,6 +64,13 @@
 //!    the same combiner arithmetic — dropping dead shards with
 //!    renormalized weights and reconnecting in the background — so one
 //!    serving endpoint spans a fleet instead of a machine.
+//! 9. **Watch** — every stage above is observable in production
+//!    ([`obs`]): sampled request traces span coordinator, batcher and
+//!    shard workers (protocol v7 `trace <id>`), the `metricsx` op
+//!    exports Prometheus-style text (lock-free counters and histograms
+//!    plus WAL lag and shard liveness), and prequential scoring tracks
+//!    each served model's calibration — z², 90/95/99% interval coverage
+//!    and rolling RMSE — rendered live by `ckrig top`.
 //!
 //! Architecture: a three-layer Rust + JAX + Pallas stack. The Rust layer
 //! (this crate) owns coordination — clustering, parallel fit, routing,
@@ -83,6 +90,7 @@ pub mod metrics;
 pub mod eval;
 pub mod runtime;
 pub mod coordinator;
+pub mod obs;
 pub mod online;
 pub mod optimize;
 pub mod distributed;

@@ -10,6 +10,7 @@
 //!               shard artifacts + a coordinator manifest (protocol v5)
 //!   stream      stream observations into a running server (protocol v3)
 //!   optimize    run a budgeted ask/tell EGO loop on a benchmark function
+//!   top         live dashboard over a running server's `metricsx` feed
 //!   info        show PJRT platform + discovered artifacts
 
 use anyhow::{bail, Context, Result};
@@ -26,6 +27,7 @@ use cluster_kriging::eval::report::{self, PaperTable};
 use cluster_kriging::eval::HarnessConfig;
 use cluster_kriging::kriging::{HyperOpt, Surrogate};
 use cluster_kriging::metrics;
+use cluster_kriging::obs::{export, Sampling, Tracer};
 use cluster_kriging::online::wal::{self, Durability, DurabilityConfig, FsyncPolicy};
 use cluster_kriging::online::{OnlineModel, OnlinePolicy, RefitConfig};
 use cluster_kriging::optimize::{Acquisition, Bounds, Optimizer, OptimizerConfig};
@@ -76,6 +78,7 @@ fn main() {
         Some("shard") => cmd_shard(&args),
         Some("stream") => cmd_stream(&args),
         Some("optimize") => cmd_optimize(&args),
+        Some("top") => cmd_top(&args),
         Some("info") => cmd_info(&args),
         _ => {
             print_usage();
@@ -92,7 +95,7 @@ fn print_usage() {
     println!(
         "ckrig — Cluster Kriging (van Stein et al., 2017)\n\
          \n\
-         USAGE: ckrig <experiment|fit|serve|info> [options]\n\
+         USAGE: ckrig <experiment|fit|serve|top|info> [options]\n\
          \n\
          experiment --table 1|2|3 | --figure 2 [--paper-scale] [--folds N]\n\
          \u{20}          [--datasets a,b] [--algos SoD,MTCK] [--out results/]\n\
@@ -110,6 +113,9 @@ fn print_usage() {
          \u{20}          [--wal DIR [--fsync always|never|every-N|interval-MS]\n\
          \u{20}           [--checkpoint-every N]]  (durable observe + crash recovery;\n\
          \u{20}           SIGTERM/SIGINT drain, checkpoint, and exit cleanly)\n\
+         \u{20}          [--trace-sample N] [--trace-capacity M]  (request tracing:\n\
+         \u{20}           0=forced `trace=` only (default), 1=every request, N=1-in-N;\n\
+         \u{20}           dump a tree with the `trace <id>` protocol op)\n\
          \u{20}          (shard worker: --shard dir/shard-0.ck)\n\
          \u{20}          (coordinator: --manifest dir/manifest.ck\n\
          \u{20}           --shards host0:port,host1:port,… [--shard-timeout MS])\n\
@@ -118,6 +124,8 @@ fn print_usage() {
          \u{20}          [--model SLOT] [--seed S] [--drift D]\n\
          optimize   --algo SPEC --fn <benchmark> --budget N [--init N] [--q B]\n\
          \u{20}          [--acq ei|poi|lcb[:v]] [--pool P] [--dim D] [--seed S]\n\
+         top        [--addr host:port] [--interval MS] [--once]  (live dashboard:\n\
+         \u{20}          counters, latency percentiles, per-model calibration)\n\
          info       [--artifacts DIR]\n\
          \n\
          SPEC names any algorithm: mtck:8 owck:4 sod:512 fitc:64 bcm:8\n\
@@ -327,6 +335,22 @@ fn cmd_fit_stream(args: &Args, path: &str) -> Result<()> {
     Ok(())
 }
 
+/// Build the serve-side span recorder from `--trace-sample N` (0 = off:
+/// only client-forced `trace=` requests record; 1 = every request;
+/// N = one request in N) and `--trace-capacity M` (ring size).
+fn tracer_from_args(args: &Args) -> Result<Arc<Tracer>> {
+    let sample: u64 = args.get_parsed_or("trace-sample", 0u64)?;
+    let capacity: usize =
+        args.get_parsed_or("trace-capacity", cluster_kriging::obs::trace::DEFAULT_CAPACITY)?;
+    anyhow::ensure!(capacity > 0, "--trace-capacity must be positive");
+    let sampling = match sample {
+        0 => Sampling::Off,
+        1 => Sampling::Always,
+        n => Sampling::Sampled(n),
+    };
+    Ok(Arc::new(Tracer::new(capacity, sampling)))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7471").to_string();
     let name = args.get_or("name", "default").to_string();
@@ -461,6 +485,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             metrics: Arc::new(ServerMetrics::new()),
             wal: durability.clone(),
             health: Arc::clone(&health),
+            tracer: tracer_from_args(args)?,
+            pool: None,
         },
     )?;
     let ckpt_stop = Arc::new(AtomicBool::new(false));
@@ -575,7 +601,13 @@ fn serve_coordinator(args: &Args, addr: &str, name: &str, manifest_path: &str) -
     let mut server = Server::start_with_options(
         registry,
         ServerConfig { addr: addr.to_string(), batcher: BatcherConfig::default() },
-        ServeOptions { metrics, wal: None, health },
+        ServeOptions {
+            metrics,
+            wal: None,
+            health,
+            tracer: tracer_from_args(args)?,
+            pool: Some(Arc::clone(&pool)),
+        },
     )?;
     println!(
         "serving on {} — scatter-gather coordinator: `predict [model] x1,...,x{dim}` | \
@@ -760,6 +792,154 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         stats.fits, stats.incremental, secs
     );
     Ok(())
+}
+
+/// Live terminal dashboard over a running server: poll the `metricsx`
+/// exposition (plus the one-line `stats` reply for the raw view), parse
+/// it with the same parser the tests use, and render counters, latency
+/// percentiles and per-model calibration with a `[MISCALIBRATED]` flag
+/// wherever prequential coverage has drifted off nominal.
+fn cmd_top(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7471").to_string();
+    let interval_ms: u64 = args.get_parsed_or("interval", 2_000u64)?;
+    let once = args.has_flag("once");
+    let mut client =
+        Client::connect(&addr).with_context(|| format!("connecting to server at {addr}"))?;
+    loop {
+        let text = client.metricsx().context("server does not speak `metricsx` (v7)")?;
+        let samples = export::parse(&text)?;
+        let stats = client.stats()?;
+        if !once {
+            // ANSI clear + home: a refreshing dashboard, not a scrolling log.
+            print!("\x1b[2J\x1b[H");
+        }
+        render_top(&addr, &samples, &stats);
+        if once {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(interval_ms.max(100)));
+    }
+}
+
+/// One dashboard frame from parsed exposition samples.
+fn render_top(addr: &str, samples: &[export::Sample], stats: &str) {
+    let val = |name: &str| samples.iter().find(|s| s.name == name).map_or(0.0, |s| s.value);
+    let have = |name: &str| samples.iter().any(|s| s.name == name);
+    let version = samples
+        .iter()
+        .find(|s| s.name == "ckrig_build_info")
+        .and_then(|s| s.labels.iter().find(|(k, _)| k == "version"))
+        .map(|(_, v)| v.as_str())
+        .unwrap_or("?");
+    println!(
+        "ckrig top — {addr}  v{version}  up {:.0}s  {}{}",
+        val("ckrig_uptime_seconds"),
+        if val("ckrig_ready") >= 1.0 { "ready" } else { "NOT READY" },
+        if val("ckrig_draining") >= 1.0 { " (draining)" } else { "" },
+    );
+    println!(
+        "reqs {:.0}  preds {:.0}  obs {:.0}  suggests {:.0}  batches {:.0}  \
+         errors {:.0}  degraded {:.0}  retries {:.0}  panics {:.0}  queue {:.0} pts",
+        val("ckrig_requests_total"),
+        val("ckrig_predictions_total"),
+        val("ckrig_observes_total"),
+        val("ckrig_suggests_total"),
+        val("ckrig_batches_total"),
+        val("ckrig_errors_total"),
+        val("ckrig_degraded_total"),
+        val("ckrig_retries_total"),
+        val("ckrig_panics_total"),
+        val("ckrig_queue_depth_points"),
+    );
+    println!(
+        "latency p50 {:.0}µs  p99 {:.0}µs",
+        hist_percentile(samples, "ckrig_request_latency_us", 50.0),
+        hist_percentile(samples, "ckrig_request_latency_us", 99.0),
+    );
+    if have("ckrig_shards_total") {
+        println!(
+            "shards {:.0}/{:.0} alive",
+            val("ckrig_shards_alive"),
+            val("ckrig_shards_total")
+        );
+    }
+    if have("ckrig_wal_last_seq") {
+        println!(
+            "wal seq {:.0}  unsynced {:.0}",
+            val("ckrig_wal_last_seq"),
+            val("ckrig_wal_unsynced")
+        );
+    }
+    let mut models: Vec<&str> = samples
+        .iter()
+        .filter(|s| s.name.starts_with("ckrig_model_"))
+        .filter_map(|s| s.labels.iter().find(|(k, _)| k == "model"))
+        .map(|(_, v)| v.as_str())
+        .collect();
+    models.sort_unstable();
+    models.dedup();
+    let mval = |name: &str, model: &str| {
+        samples
+            .iter()
+            .find(|s| {
+                s.name == name && s.labels.iter().any(|(k, v)| k == "model" && v == model)
+            })
+            .map_or(0.0, |s| s.value)
+    };
+    if !models.is_empty() {
+        println!();
+        println!(
+            "{:<14} {:>8} {:>8} {:>6} {:>6} {:>6}  {:^16} {:>8}",
+            "model", "points", "observed", "refits", "drift", "z2", "cov 90/95/99", "rmse"
+        );
+        for m in models {
+            let flagged = mval("ckrig_model_calibration_flagged", m) >= 1.0;
+            println!(
+                "{:<14} {:>8.0} {:>8.0} {:>6.0} {:>6.2} {:>6.2}  {:.2}/{:.2}/{:.2}  {:>8.3}{}",
+                m,
+                mval("ckrig_model_train_points", m),
+                mval("ckrig_model_observed_total", m),
+                mval("ckrig_model_refits_total", m),
+                mval("ckrig_model_drift", m),
+                mval("ckrig_model_mean_z2", m),
+                mval("ckrig_model_coverage90", m),
+                mval("ckrig_model_coverage95", m),
+                mval("ckrig_model_coverage99", m),
+                mval("ckrig_model_quality_rmse", m),
+                if flagged { "  [MISCALIBRATED]" } else { "" }
+            );
+        }
+    }
+    println!();
+    println!("stats: {stats}");
+}
+
+/// Approximate percentile from a (single, unlabeled) exposition
+/// histogram's cumulative `le=` buckets: the upper bound of the first
+/// bucket whose cumulative count reaches the target rank.
+fn hist_percentile(samples: &[export::Sample], name: &str, p: f64) -> f64 {
+    let bucket_name = format!("{name}_bucket");
+    let mut buckets: Vec<(f64, f64)> = samples
+        .iter()
+        .filter(|s| s.name == bucket_name)
+        .filter_map(|s| {
+            let le = &s.labels.iter().find(|(k, _)| k == "le")?.1;
+            let bound = if le == "+Inf" { f64::INFINITY } else { le.parse().ok()? };
+            Some((bound, s.value))
+        })
+        .collect();
+    buckets.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let total = buckets.last().map_or(0.0, |b| b.1);
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let target = (p / 100.0 * total).ceil().max(1.0);
+    for (bound, cum) in &buckets {
+        if *cum >= target {
+            return *bound;
+        }
+    }
+    f64::INFINITY
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -1,0 +1,319 @@
+//! Prometheus text-exposition rendering for the `metricsx` protocol op.
+//!
+//! [`PromText`] is a small builder over the standard text format
+//! (`# HELP` / `# TYPE` headers, `name{label="v"} value` samples,
+//! cumulative `_bucket{le=...}` histograms), terminated by a literal
+//! `# EOF` line. The terminator is load-bearing: `metricsx` is the line
+//! protocol's one multi-line reply, and both [`crate::coordinator::Client`]
+//! and a bare `nc` scrape read until that sentinel.
+//!
+//! The builder owns formatting and escaping only; *what* gets exported
+//! (counters, WAL lag, per-model coverage gauges) is assembled by the
+//! server, which is the one place that can see the metrics, the health
+//! gauges and the model registry at once.
+
+use crate::obs::hist::{HistogramSnapshot, BUCKET_BOUNDS_US};
+
+/// Terminator line for the `metricsx` reply.
+pub const EOF_MARKER: &str = "# EOF";
+
+/// Incremental builder for one exposition document.
+#[derive(Debug, Default)]
+pub struct PromText {
+    buf: String,
+}
+
+impl PromText {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn header(&mut self, name: &str, help: &str, kind: &str) {
+        self.buf.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+    }
+
+    fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: &str) {
+        self.buf.push_str(name);
+        if !labels.is_empty() {
+            self.buf.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.buf.push(',');
+                }
+                self.buf.push_str(&format!("{k}=\"{}\"", escape_label(v)));
+            }
+            self.buf.push('}');
+        }
+        self.buf.push(' ');
+        self.buf.push_str(value);
+        self.buf.push('\n');
+    }
+
+    /// One unlabeled counter sample with its header.
+    pub fn counter(&mut self, name: &str, help: &str, value: u64) {
+        self.header(name, help, "counter");
+        self.sample(name, &[], &value.to_string());
+    }
+
+    /// One unlabeled gauge sample with its header.
+    pub fn gauge(&mut self, name: &str, help: &str, value: f64) {
+        self.header(name, help, "gauge");
+        self.sample(name, &[], &fmt_f64(value));
+    }
+
+    /// A labeled gauge family: one header, one sample per entry.
+    pub fn gauge_family(&mut self, name: &str, help: &str, rows: &[(Vec<(&str, &str)>, f64)]) {
+        if rows.is_empty() {
+            return;
+        }
+        self.header(name, help, "gauge");
+        for (labels, value) in rows {
+            self.sample(name, labels, &fmt_f64(*value));
+        }
+    }
+
+    /// A labeled counter family: one header, one sample per entry.
+    pub fn counter_family(&mut self, name: &str, help: &str, rows: &[(Vec<(&str, &str)>, u64)]) {
+        if rows.is_empty() {
+            return;
+        }
+        self.header(name, help, "counter");
+        for (labels, value) in rows {
+            self.sample(name, labels, &value.to_string());
+        }
+    }
+
+    /// A histogram family over the crate's fixed µs buckets: cumulative
+    /// `_bucket{le=...}` samples (plus `+Inf`), `_sum` and `_count`, one
+    /// set per labeled row.
+    pub fn histogram_family(
+        &mut self,
+        name: &str,
+        help: &str,
+        rows: &[(Vec<(&str, &str)>, HistogramSnapshot)],
+    ) {
+        if rows.is_empty() {
+            return;
+        }
+        self.header(name, help, "histogram");
+        for (labels, snap) in rows {
+            let mut cum = 0u64;
+            for (i, &bound) in BUCKET_BOUNDS_US.iter().enumerate() {
+                cum += snap.counts[i];
+                let le = bound.to_string();
+                let mut l: Vec<(&str, &str)> = labels.clone();
+                l.push(("le", le.as_str()));
+                self.sample(&format!("{name}_bucket"), &l, &cum.to_string());
+            }
+            cum += snap.counts[BUCKET_BOUNDS_US.len()];
+            let mut l: Vec<(&str, &str)> = labels.clone();
+            l.push(("le", "+Inf"));
+            self.sample(&format!("{name}_bucket"), &l, &cum.to_string());
+            self.sample(&format!("{name}_sum"), labels, &snap.total_us.to_string());
+            self.sample(&format!("{name}_count"), labels, &cum.to_string());
+        }
+    }
+
+    /// Finish the document: append the `# EOF` terminator and return the
+    /// full text (no trailing newline after the marker — the server's
+    /// line writer adds it).
+    pub fn finish(mut self) -> String {
+        self.buf.push_str(EOF_MARKER);
+        self.buf
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Prometheus sample values: integers render bare, everything else as
+/// shortest-roundtrip float.
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() && v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// One parsed sample line: metric name, labels, value. The `ckrig top`
+/// dashboard and the observability tests scrape through this.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+/// Parse an exposition document (as produced by [`PromText`]) back into
+/// samples. Returns `Err` on any malformed non-comment line — the tests
+/// use this as the "emits parseable Prometheus text" gate.
+pub fn parse(text: &str) -> anyhow::Result<Vec<Sample>> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim_end();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (head, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| anyhow::anyhow!("metricsx: no value separator in {line:?}"))?;
+        let value: f64 =
+            value.parse().map_err(|_| anyhow::anyhow!("metricsx: bad value in {line:?}"))?;
+        let (name, labels) = match head.split_once('{') {
+            None => (head.to_string(), Vec::new()),
+            Some((name, rest)) => {
+                let body = rest
+                    .strip_suffix('}')
+                    .ok_or_else(|| anyhow::anyhow!("metricsx: unclosed labels in {line:?}"))?;
+                let mut labels = Vec::new();
+                for pair in split_label_pairs(body) {
+                    let (k, v) = pair
+                        .split_once('=')
+                        .ok_or_else(|| anyhow::anyhow!("metricsx: bad label in {line:?}"))?;
+                    let v = v
+                        .strip_prefix('"')
+                        .and_then(|v| v.strip_suffix('"'))
+                        .ok_or_else(|| anyhow::anyhow!("metricsx: unquoted label in {line:?}"))?;
+                    labels.push((
+                        k.to_string(),
+                        v.replace("\\n", "\n").replace("\\\"", "\"").replace("\\\\", "\\"),
+                    ));
+                }
+                (name.to_string(), labels)
+            }
+        };
+        anyhow::ensure!(!name.is_empty(), "metricsx: empty metric name in {line:?}");
+        out.push(Sample { name, labels, value });
+    }
+    Ok(out)
+}
+
+/// Split `k1="v1",k2="v2"` on commas outside quotes.
+fn split_label_pairs(body: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut escaped = false;
+    for c in body.chars() {
+        if escaped {
+            cur.push(c);
+            escaped = false;
+            continue;
+        }
+        match c {
+            '\\' => {
+                cur.push(c);
+                escaped = true;
+            }
+            '"' => {
+                cur.push(c);
+                in_quotes = !in_quotes;
+            }
+            ',' if !in_quotes => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::hist::AtomicHistogram;
+
+    #[test]
+    fn counters_and_gauges_roundtrip() {
+        let mut p = PromText::new();
+        p.counter("ckrig_requests_total", "Requests handled.", 42);
+        p.gauge("ckrig_uptime_seconds", "Seconds since boot.", 12.5);
+        p.gauge_family(
+            "ckrig_model_coverage95",
+            "Empirical 95% interval coverage.",
+            &[
+                (vec![("model", "default")], 0.94),
+                (vec![("model", "aux")], 1.0),
+            ],
+        );
+        let text = p.finish();
+        assert!(text.ends_with(EOF_MARKER));
+        let samples = parse(&text).unwrap();
+        assert_eq!(samples.len(), 4);
+        let req = samples.iter().find(|s| s.name == "ckrig_requests_total").unwrap();
+        assert_eq!(req.value, 42.0);
+        let cov = samples
+            .iter()
+            .find(|s| {
+                s.name == "ckrig_model_coverage95"
+                    && s.labels == vec![("model".into(), "default".into())]
+            })
+            .unwrap();
+        assert!((cov.value - 0.94).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative() {
+        let h = AtomicHistogram::new();
+        h.record_us(5); // le=10
+        h.record_us(50); // le=100
+        h.record_us(50);
+        let mut p = PromText::new();
+        p.histogram_family(
+            "ckrig_op_latency_us",
+            "Per-op latency.",
+            &[(vec![("op", "predict")], h.snapshot())],
+        );
+        let text = p.finish();
+        let samples = parse(&text).unwrap();
+        let le = |bound: &str| {
+            samples
+                .iter()
+                .find(|s| {
+                    s.name == "ckrig_op_latency_us_bucket"
+                        && s.labels.iter().any(|(k, v)| k == "le" && v == bound)
+                })
+                .unwrap()
+                .value
+        };
+        assert_eq!(le("10"), 1.0);
+        assert_eq!(le("30"), 1.0);
+        assert_eq!(le("100"), 3.0);
+        assert_eq!(le("+Inf"), 3.0);
+        let count = samples.iter().find(|s| s.name == "ckrig_op_latency_us_count").unwrap();
+        assert_eq!(count.value, 3.0);
+        let sum = samples.iter().find(|s| s.name == "ckrig_op_latency_us_sum").unwrap();
+        assert_eq!(sum.value, 105.0);
+    }
+
+    #[test]
+    fn labels_escape_and_parse_back() {
+        let mut p = PromText::new();
+        p.gauge_family("g", "h", &[(vec![("model", "we\"ird\\name")], 1.0)]);
+        let text = p.finish();
+        let samples = parse(&text).unwrap();
+        assert_eq!(samples[0].labels[0].1, "we\"ird\\name");
+    }
+
+    #[test]
+    fn malformed_lines_are_rejected() {
+        assert!(parse("justaname").is_err());
+        assert!(parse("name notanumber").is_err());
+        assert!(parse("name{unclosed 1").is_err());
+        assert!(parse("# a comment\n\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn empty_families_emit_nothing() {
+        let mut p = PromText::new();
+        p.gauge_family("g", "h", &[]);
+        p.counter_family("c", "h", &[]);
+        p.histogram_family("hh", "h", &[]);
+        assert_eq!(p.finish(), EOF_MARKER);
+    }
+}

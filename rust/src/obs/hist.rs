@@ -1,0 +1,208 @@
+//! Lock-free latency histograms for the serving hot path.
+//!
+//! [`AtomicHistogram`] is the contention fix for the coordinator's
+//! metrics: the previous `Mutex<Histogram>` serialized every connection
+//! thread through two lock acquisitions per recorded op, and `summary()`
+//! re-took the aggregate lock three times per render. Here every bucket
+//! is an `AtomicU64` and a record is four relaxed atomic ops — no lock,
+//! no waiting, identical bucket semantics (inclusive upper bounds, zero
+//! lands in the first bucket, the overflow bucket reports the observed
+//! maximum).
+//!
+//! Reads (`percentile_us`, [`AtomicHistogram::snapshot`]) take a relaxed
+//! snapshot of the buckets; under concurrent writers the answer is
+//! approximate by at most the handful of records that raced the read,
+//! which is exactly the precision a latency dashboard needs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Fixed logarithmic latency buckets (µs), shared by every histogram in
+/// the serving stack and by the Prometheus exposition (`le=` bounds).
+pub const BUCKET_BOUNDS_US: [u64; 12] =
+    [10, 30, 100, 300, 1_000, 3_000, 10_000, 30_000, 100_000, 300_000, 1_000_000, 3_000_000];
+
+/// Bucket count including the unbounded overflow bucket.
+pub const BUCKET_COUNT: usize = BUCKET_BOUNDS_US.len() + 1;
+
+/// A fixed-bucket latency histogram whose every field is an atomic:
+/// writers never block each other or readers.
+#[derive(Debug, Default)]
+pub struct AtomicHistogram {
+    counts: [AtomicU64; BUCKET_COUNT],
+    total_us: AtomicU64,
+    n: AtomicU64,
+    max_us: AtomicU64,
+}
+
+/// A point-in-time copy of an [`AtomicHistogram`], for percentile walks
+/// and Prometheus exposition (cumulative `le` buckets).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HistogramSnapshot {
+    pub counts: [u64; BUCKET_COUNT],
+    pub total_us: u64,
+    pub n: u64,
+    pub max_us: u64,
+}
+
+impl AtomicHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one latency of `us` microseconds. Lock-free: four relaxed
+    /// atomic operations, safe from any number of threads.
+    pub fn record_us(&self, us: u64) {
+        let idx = BUCKET_BOUNDS_US.iter().position(|&b| us <= b).unwrap_or(BUCKET_BOUNDS_US.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.total_us.fetch_add(us, Ordering::Relaxed);
+        self.n.fetch_add(1, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    /// Sum of recorded latencies (µs).
+    pub fn total_us(&self) -> u64 {
+        self.total_us.load(Ordering::Relaxed)
+    }
+
+    /// Largest recorded latency (µs).
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Mean recorded latency (µs); 0.0 when empty.
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.total_us() as f64 / n as f64
+        }
+    }
+
+    /// Copy the current bucket state.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut counts = [0u64; BUCKET_COUNT];
+        for (c, a) in counts.iter_mut().zip(&self.counts) {
+            *c = a.load(Ordering::Relaxed);
+        }
+        HistogramSnapshot {
+            counts,
+            total_us: self.total_us.load(Ordering::Relaxed),
+            n: self.n.load(Ordering::Relaxed),
+            max_us: self.max_us.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Approximate percentile (µs). A percentile landing in a bounded
+    /// bucket reports that bucket's upper bound; one landing in the
+    /// overflow bucket reports the true observed maximum.
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        self.snapshot().percentile_us(p)
+    }
+}
+
+impl HistogramSnapshot {
+    /// Percentile over this snapshot — same contract as
+    /// [`AtomicHistogram::percentile_us`]. The walk uses the sum of the
+    /// snapshotted buckets (not the racy `n` counter) so it is internally
+    /// consistent even when the snapshot raced a writer.
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        let total: u64 = self.counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return if i < BUCKET_BOUNDS_US.len() { BUCKET_BOUNDS_US[i] } else { self.max_us };
+            }
+        }
+        self.max_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_safe() {
+        let h = AtomicHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile_us(99.0), 0);
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.max_us(), 0);
+    }
+
+    #[test]
+    fn bucket_bounds_are_inclusive_upper() {
+        for &bound in &BUCKET_BOUNDS_US {
+            let h = AtomicHistogram::new();
+            h.record_us(bound);
+            assert_eq!(h.percentile_us(100.0), bound);
+        }
+        // One past a bound spills into the next bucket.
+        for w in BUCKET_BOUNDS_US.windows(2) {
+            let h = AtomicHistogram::new();
+            h.record_us(w[0] + 1);
+            assert_eq!(h.percentile_us(100.0), w[1]);
+        }
+    }
+
+    #[test]
+    fn overflow_reports_observed_max() {
+        let h = AtomicHistogram::new();
+        let last = *BUCKET_BOUNDS_US.last().unwrap();
+        h.record_us(last + 123_456);
+        assert_eq!(h.percentile_us(100.0), last + 123_456);
+        assert_eq!(h.max_us(), last + 123_456);
+    }
+
+    #[test]
+    fn zero_lands_in_first_bucket() {
+        let h = AtomicHistogram::new();
+        h.record_us(0);
+        assert_eq!(h.percentile_us(100.0), BUCKET_BOUNDS_US[0]);
+    }
+
+    #[test]
+    fn concurrent_writers_lose_nothing() {
+        use std::sync::Arc;
+        let h = Arc::new(AtomicHistogram::new());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        h.record_us(t * 250 + i % 250);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+        assert_eq!(h.snapshot().counts.iter().sum::<u64>(), 4000);
+    }
+
+    #[test]
+    fn snapshot_matches_live_percentiles() {
+        let h = AtomicHistogram::new();
+        for us in [5, 50, 500, 5_000, 50_000] {
+            h.record_us(us);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.n, 5);
+        for p in [10.0, 50.0, 90.0, 100.0] {
+            assert_eq!(s.percentile_us(p), h.percentile_us(p));
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! Observability for the serving stack: tracing, metrics export, and
+//! model-quality telemetry.
+//!
+//! The paper's premise is a *controlled* trade — cluster Kriging swaps
+//! exact GP inference for approximations whose cost and accuracy must
+//! be watched, not assumed. Seven layers of serving machinery
+//! (batching, hot swap, WAL, sharding, streaming) each added latency
+//! stages and failure modes; this module is the window into all of
+//! them, cheap enough to leave on:
+//!
+//! * [`trace`] — a lock-light ring-buffer span recorder with
+//!   per-request trace IDs minted at the coordinator and propagated to
+//!   shard workers (protocol v7), so one `trace <id>` op dumps the full
+//!   queue-wait → batch-assembly → kernel-assembly → triangular-solve →
+//!   combine → per-shard-RTT tree across processes.
+//! * [`hist`] — lock-free `AtomicU64` bucket histograms backing the
+//!   coordinator's latency metrics (the hot-path contention fix) and
+//!   the Prometheus `le=` exposition.
+//! * [`export`] — the Prometheus text-exposition builder/parser behind
+//!   the `metricsx` op (scrapeable with `nc`, terminated by `# EOF`).
+//! * [`quality`] — prequential model-quality telemetry: every
+//!   `observe`/`tell` scores the incoming point against the current
+//!   posterior *before* absorbing it, feeding rolling z² calibration,
+//!   90/95/99% interval coverage vs nominal, and windowed RMSE per
+//!   model slot.
+
+pub mod export;
+pub mod hist;
+pub mod quality;
+pub mod trace;
+
+pub use export::PromText;
+pub use hist::{AtomicHistogram, HistogramSnapshot, BUCKET_BOUNDS_US};
+pub use quality::{QualityMonitor, QualitySnapshot};
+pub use trace::{Sampling, Span, TraceCtx, Tracer, WireSpan};

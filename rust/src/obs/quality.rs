@@ -1,0 +1,266 @@
+//! Prequential model-quality telemetry.
+//!
+//! Every `observe`/`tell` already computes the model's posterior at the
+//! incoming point *before* absorbing it (the drift monitor's input);
+//! this module turns that same prediction into the three quality
+//! signals a served Kriging model can silently lose:
+//!
+//! * **Calibration** — the mean squared standardized residual
+//!   `z² = ((y−μ)/σ)²` over a rolling window. A well-specified model
+//!   scores ≈ 1; ≪ 1 means the predictive variance is inflated (wasted
+//!   conservatism), ≫ 1 means it is overconfident.
+//! * **Interval coverage** — the empirical fraction of outcomes inside
+//!   the nominal 90/95/99% predictive intervals (`|z|` under the
+//!   two-sided normal quantile). This is the "do the error bars mean
+//!   anything" check practitioners watch first.
+//! * **Windowed RMSE** — plain rolling prediction error, the accuracy
+//!   companion to the two variance diagnostics.
+//!
+//! Scoring-then-absorbing (prequential evaluation) makes every
+//! observation an honest one-point test set: the model never saw the
+//! point it is scored on. The monitor is shared (`Arc`) between a
+//! serving adapter and its background-refit successors so the window
+//! survives hot swaps.
+
+use std::collections::VecDeque;
+use std::sync::{Mutex, PoisonError};
+
+/// Two-sided standard-normal quantiles for the nominal intervals.
+const Z90: f64 = 1.6448536269514722;
+const Z95: f64 = 1.959963984540054;
+const Z99: f64 = 2.5758293035489004;
+
+/// Default rolling-window length (scored points retained).
+pub const DEFAULT_WINDOW: usize = 512;
+
+/// Scored points required before [`QualitySnapshot::flagged`] may fire —
+/// below this the empirical coverage is too noisy to gate on.
+pub const MIN_SCORED_FOR_FLAG: usize = 50;
+
+/// Default tolerance on |empirical − nominal| coverage before a model
+/// is flagged as miscalibrated.
+pub const DEFAULT_COVERAGE_TOL: f64 = 0.05;
+
+/// Rolling prequential scores for one served model slot. Thread-safe;
+/// scoring takes one short mutex on the observe path (which already
+/// holds the model's write lock — this adds no new contention edge).
+#[derive(Debug)]
+pub struct QualityMonitor {
+    inner: Mutex<Window>,
+}
+
+#[derive(Debug)]
+struct Window {
+    cap: usize,
+    /// Per-point (standardized residual z, raw error y−μ).
+    pts: VecDeque<(f64, f64)>,
+    scored: u64,
+}
+
+impl QualityMonitor {
+    pub fn new(window: usize) -> Self {
+        Self { inner: Mutex::new(Window { cap: window.max(1), pts: VecDeque::new(), scored: 0 }) }
+    }
+
+    /// Score one point: `z` is the standardized residual under the
+    /// pre-update posterior, `err` the raw error `y − μ`.
+    pub fn score(&self, z: f64, err: f64) {
+        self.score_batch(&[z], &[err]);
+    }
+
+    /// Score a batch (pairs of standardized residual and raw error).
+    /// Non-finite entries are dropped — a degenerate posterior (σ → 0 on
+    /// a duplicated point) must not poison the window forever.
+    pub fn score_batch(&self, zs: &[f64], errs: &[f64]) {
+        let mut w = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        for (&z, &e) in zs.iter().zip(errs) {
+            if !z.is_finite() || !e.is_finite() {
+                continue;
+            }
+            if w.pts.len() == w.cap {
+                w.pts.pop_front();
+            }
+            w.pts.push_back((z, e));
+            w.scored += 1;
+        }
+    }
+
+    /// Current rolling aggregates.
+    pub fn snapshot(&self) -> QualitySnapshot {
+        let w = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        let n = w.pts.len();
+        if n == 0 {
+            return QualitySnapshot { scored: w.scored, ..Default::default() };
+        }
+        let (mut z2, mut se, mut c90, mut c95, mut c99) = (0.0f64, 0.0f64, 0usize, 0usize, 0usize);
+        for &(z, e) in &w.pts {
+            z2 += z * z;
+            se += e * e;
+            let a = z.abs();
+            c90 += (a <= Z90) as usize;
+            c95 += (a <= Z95) as usize;
+            c99 += (a <= Z99) as usize;
+        }
+        let nf = n as f64;
+        QualitySnapshot {
+            scored: w.scored,
+            window: n,
+            mean_z2: z2 / nf,
+            coverage90: c90 as f64 / nf,
+            coverage95: c95 as f64 / nf,
+            coverage99: c99 as f64 / nf,
+            rmse: (se / nf).sqrt(),
+        }
+    }
+}
+
+/// Point-in-time quality aggregates for one model slot. `Copy` so it
+/// can ride inside [`crate::online::OnlineStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct QualitySnapshot {
+    /// Points scored over the monitor's lifetime.
+    pub scored: u64,
+    /// Points currently in the rolling window.
+    pub window: usize,
+    /// Mean z² over the window (≈ 1 when well-calibrated).
+    pub mean_z2: f64,
+    /// Empirical coverage of the nominal 90% interval.
+    pub coverage90: f64,
+    /// Empirical coverage of the nominal 95% interval.
+    pub coverage95: f64,
+    /// Empirical coverage of the nominal 99% interval.
+    pub coverage99: f64,
+    /// Rolling root-mean-square prediction error (raw units).
+    pub rmse: f64,
+}
+
+impl QualitySnapshot {
+    /// Worst absolute deviation of empirical coverage from nominal,
+    /// across the three tracked intervals.
+    pub fn coverage_gap(&self) -> f64 {
+        let g90 = (self.coverage90 - 0.90).abs();
+        let g95 = (self.coverage95 - 0.95).abs();
+        let g99 = (self.coverage99 - 0.99).abs();
+        g90.max(g95).max(g99)
+    }
+
+    /// Miscalibration flag at tolerance `tol`: enough points scored and
+    /// some interval's empirical coverage off nominal by more than
+    /// `tol`. Both over- and under-coverage flag — inflated variance is
+    /// a defect too (intervals so wide they carry no information).
+    pub fn flagged_at(&self, tol: f64) -> bool {
+        self.window >= MIN_SCORED_FOR_FLAG && self.coverage_gap() > tol
+    }
+
+    /// [`Self::flagged_at`] at the default tolerance.
+    pub fn flagged(&self) -> bool {
+        self.flagged_at(DEFAULT_COVERAGE_TOL)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Standard normal draws via Box–Muller over the crate RNG.
+    fn normals(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            let u1: f64 = rng.uniform_in(1e-12, 1.0);
+            let u2: f64 = rng.uniform_in(0.0, 1.0);
+            let r = (-2.0 * u1.ln()).sqrt();
+            out.push(r * (2.0 * std::f64::consts::PI * u2).cos());
+            if out.len() < n {
+                out.push(r * (2.0 * std::f64::consts::PI * u2).sin());
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn empty_monitor_is_safe() {
+        let q = QualityMonitor::new(16);
+        let s = q.snapshot();
+        assert_eq!(s.scored, 0);
+        assert_eq!(s.window, 0);
+        assert!(!s.flagged());
+        assert_eq!(s.rmse, 0.0);
+    }
+
+    #[test]
+    fn well_specified_coverage_near_nominal() {
+        let q = QualityMonitor::new(4096);
+        for z in normals(2000, 7) {
+            q.score(z, z * 0.3);
+        }
+        let s = q.snapshot();
+        assert_eq!(s.window, 2000);
+        assert!((s.mean_z2 - 1.0).abs() < 0.15, "mean z² {} far from 1", s.mean_z2);
+        assert!((s.coverage90 - 0.90).abs() < 0.03, "c90 {}", s.coverage90);
+        assert!((s.coverage95 - 0.95).abs() < 0.03, "c95 {}", s.coverage95);
+        assert!((s.coverage99 - 0.99).abs() < 0.02, "c99 {}", s.coverage99);
+        assert!(!s.flagged(), "well-specified model flagged: {s:?}");
+    }
+
+    #[test]
+    fn inflated_variance_flags_overcoverage() {
+        // Predictive variance over-reported ×4 → σ doubled → z halved →
+        // the nominal 90% interval empirically covers ~99.9%.
+        let q = QualityMonitor::new(4096);
+        for z in normals(2000, 7) {
+            q.score(z / 2.0, z * 0.3);
+        }
+        let s = q.snapshot();
+        assert!(s.coverage90 > 0.98, "c90 {}", s.coverage90);
+        assert!(s.mean_z2 < 0.4, "mean z² {}", s.mean_z2);
+        assert!(s.flagged(), "4x-inflated variance not flagged: {s:?}");
+    }
+
+    #[test]
+    fn overconfident_variance_flags_undercoverage() {
+        // Variance under-reported ×4 → z doubled → coverage collapses.
+        let q = QualityMonitor::new(4096);
+        for z in normals(2000, 7) {
+            q.score(z * 2.0, z * 0.3);
+        }
+        let s = q.snapshot();
+        assert!(s.coverage95 < 0.85, "c95 {}", s.coverage95);
+        assert!(s.mean_z2 > 2.5, "mean z² {}", s.mean_z2);
+        assert!(s.flagged(), "4x-overconfident variance not flagged: {s:?}");
+    }
+
+    #[test]
+    fn window_slides_and_lifetime_counts() {
+        let q = QualityMonitor::new(4);
+        q.score_batch(&[10.0; 6], &[1.0; 6]);
+        q.score_batch(&[0.0, 0.0], &[0.0, 0.0]);
+        let s = q.snapshot();
+        assert_eq!(s.scored, 8);
+        assert_eq!(s.window, 4);
+        // Two of the wild early points have slid out.
+        assert!((s.mean_z2 - 50.0).abs() < 1e-9, "mean z² {}", s.mean_z2);
+    }
+
+    #[test]
+    fn non_finite_scores_are_dropped() {
+        let q = QualityMonitor::new(8);
+        q.score_batch(&[f64::NAN, 1.0, f64::INFINITY], &[0.0, 0.5, 0.0]);
+        let s = q.snapshot();
+        assert_eq!(s.window, 1);
+        assert_eq!(s.scored, 1);
+        assert!(s.rmse.is_finite());
+    }
+
+    #[test]
+    fn too_few_points_never_flag() {
+        let q = QualityMonitor::new(64);
+        for _ in 0..(MIN_SCORED_FOR_FLAG - 1) {
+            q.score(25.0, 5.0); // grossly overconfident, but tiny sample
+        }
+        assert!(!q.snapshot().flagged());
+        q.score(25.0, 5.0);
+        assert!(q.snapshot().flagged());
+    }
+}

@@ -1,0 +1,552 @@
+//! Structured tracing: a lock-light ring-buffer span recorder with
+//! per-request trace IDs.
+//!
+//! One [`Tracer`] lives in each serving process. The coordinator mints a
+//! trace ID for a sampled (or client-forced) request, threads it through
+//! the [`crate::coordinator::Batcher`] queue, and propagates it to shard
+//! workers over protocol v7 (`spredict ... trace=<hex>`), so the
+//! `trace <id>` op can stitch one tree across every process the request
+//! touched: queue-wait → batch-assembly → predict → kernel-assembly →
+//! triangular-solve → combine → per-shard RTT.
+//!
+//! Design constraints, in order:
+//!
+//! * **Cheap when off.** With [`Sampling::Off`] and no forced trace the
+//!   only cost on the hot path is one relaxed atomic load (sampling
+//!   check) and one thread-local read per [`span`] site.
+//! * **Lock-light when on.** Completed spans go into a fixed-capacity
+//!   ring: one atomic `fetch_add` claims a slot, and the only lock taken
+//!   is that slot's own mutex — writers never contend unless the ring
+//!   wraps onto an in-flight slot. Memory is bounded by construction.
+//! * **No trait surgery.** Deep model code (kernel assembly, triangular
+//!   solves, combiners) records spans through an ambient thread-local
+//!   [`TraceCtx`] instead of new parameters on `Surrogate::predict_into`.
+//!   Cross-thread fan-out (the shard pool's scoped scatter threads)
+//!   clones the ctx explicitly and records manually.
+//!
+//! Clocks are per-process monotonic (`Instant` since the tracer's
+//! epoch, the same source as [`crate::util::timer`]); merged multi-process
+//! trees are aligned by the renderer, not the recorder.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Instant;
+
+/// Default ring capacity (spans retained) for a serving process.
+pub const DEFAULT_CAPACITY: usize = 4096;
+
+/// When the tracer mints trace IDs on its own.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sampling {
+    /// Never mint; only client-forced traces (`trace=<hex>`) record.
+    Off,
+    /// Mint for one request in every `n` (1 behaves like `Always`).
+    Sampled(u64),
+    /// Mint for every request.
+    Always,
+}
+
+/// One completed span in a trace tree. `parent_id == 0` marks a root.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub trace_id: u64,
+    pub span_id: u64,
+    pub parent_id: u64,
+    /// Kebab-case stage name; never contains spaces, commas or
+    /// semicolons (the wire format's separators).
+    pub name: String,
+    /// Microseconds since this process's tracer epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+/// Ring-buffer span recorder. Cheap to clone behind an `Arc`.
+#[derive(Debug)]
+pub struct Tracer {
+    epoch: Instant,
+    sampling: Sampling,
+    /// Monotone ID source for both trace and span IDs (never yields 0).
+    next_id: AtomicU64,
+    /// Sampling decimator (counts every `sample()` call).
+    seq: AtomicU64,
+    head: AtomicU64,
+    slots: Vec<Mutex<Option<Span>>>,
+}
+
+impl Tracer {
+    pub fn new(capacity: usize, sampling: Sampling) -> Self {
+        let capacity = capacity.max(1);
+        Self {
+            epoch: Instant::now(),
+            sampling,
+            next_id: AtomicU64::new(1),
+            seq: AtomicU64::new(0),
+            head: AtomicU64::new(0),
+            slots: (0..capacity).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    /// A tracer that only records client-forced traces.
+    pub fn disabled() -> Self {
+        Self::new(DEFAULT_CAPACITY, Sampling::Off)
+    }
+
+    pub fn sampling(&self) -> Sampling {
+        self.sampling
+    }
+
+    /// Microseconds since this tracer's epoch (monotonic).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Fresh span (or trace) ID; nonzero, unique within this process.
+    pub fn next_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Sampling decision for one incoming request: `Some(trace_id)` when
+    /// this request should be traced. Client-forced traces bypass this
+    /// entirely (the server records under the forced ID regardless).
+    pub fn sample(&self) -> Option<u64> {
+        match self.sampling {
+            Sampling::Off => None,
+            Sampling::Always => Some(mix(self.next_id())),
+            Sampling::Sampled(n) => {
+                let k = self.seq.fetch_add(1, Ordering::Relaxed);
+                if n <= 1 || k % n == 0 {
+                    Some(mix(self.next_id()))
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Record one completed span into the ring, evicting the oldest
+    /// entry when full.
+    pub fn record(&self, span: Span) {
+        let idx = (self.head.fetch_add(1, Ordering::Relaxed) as usize) % self.slots.len();
+        let mut slot = self.slots[idx].lock().unwrap_or_else(PoisonError::into_inner);
+        *slot = Some(span);
+    }
+
+    /// Every retained span of `trace_id`, ordered by start time.
+    pub fn spans_for(&self, trace_id: u64) -> Vec<Span> {
+        let mut out: Vec<Span> = Vec::new();
+        for slot in &self.slots {
+            let guard = slot.lock().unwrap_or_else(PoisonError::into_inner);
+            if let Some(s) = guard.as_ref() {
+                if s.trace_id == trace_id {
+                    out.push(s.clone());
+                }
+            }
+        }
+        out.sort_by_key(|s| (s.start_us, s.span_id));
+        out
+    }
+
+    /// Distinct trace IDs currently retained, most recent first, capped
+    /// at `limit`.
+    pub fn recent_traces(&self, limit: usize) -> Vec<u64> {
+        let head = self.head.load(Ordering::Relaxed) as usize;
+        let cap = self.slots.len();
+        let mut out: Vec<u64> = Vec::new();
+        for back in 1..=cap.min(head) {
+            let idx = (head - back) % cap;
+            let guard = self.slots[idx].lock().unwrap_or_else(PoisonError::into_inner);
+            if let Some(s) = guard.as_ref() {
+                if !out.contains(&s.trace_id) {
+                    out.push(s.trace_id);
+                    if out.len() >= limit {
+                        break;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// SplitMix64 finalizer — spreads the sequential counter into IDs that
+/// look (and dedupe) like real trace IDs. Never returns 0.
+fn mix(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    if z == 0 {
+        x | 1
+    } else {
+        z
+    }
+}
+
+/// Ambient trace context: which tracer, which trace, and which span is
+/// the current parent. Cloned into worker threads explicitly where the
+/// thread-local cannot follow (scoped scatter threads).
+#[derive(Clone)]
+pub struct TraceCtx {
+    pub tracer: Arc<Tracer>,
+    pub trace_id: u64,
+    pub parent: u64,
+}
+
+impl TraceCtx {
+    /// Record a completed child span of this context's parent, from
+    /// explicit timestamps (µs on this ctx's tracer clock). Returns the
+    /// new span's ID so callers can parent further spans under it.
+    pub fn record(&self, name: &str, start_us: u64, dur_us: u64) -> u64 {
+        let span_id = self.tracer.next_id();
+        self.tracer.record(Span {
+            trace_id: self.trace_id,
+            span_id,
+            parent_id: self.parent,
+            name: name.to_string(),
+            start_us,
+            dur_us,
+        });
+        span_id
+    }
+
+    /// Time `f` as a child span of this context's parent.
+    pub fn time<R>(&self, name: &str, f: impl FnOnce() -> R) -> R {
+        let start = self.tracer.now_us();
+        let r = f();
+        let dur = self.tracer.now_us().saturating_sub(start);
+        self.record(name, start, dur);
+        r
+    }
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<TraceCtx>> = const { RefCell::new(None) };
+}
+
+/// Install `ctx` as this thread's ambient context for the returned
+/// guard's lifetime; the previous context is restored on drop (so the
+/// batcher worker can trace one flush without leaking into the next).
+pub fn enter(ctx: TraceCtx) -> CtxGuard {
+    let prev = CURRENT.with(|c| c.borrow_mut().replace(ctx));
+    CtxGuard { prev }
+}
+
+/// Clone of this thread's ambient context, if a trace is active.
+pub fn current() -> Option<TraceCtx> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+/// RAII guard from [`enter`]; restores the prior context on drop.
+pub struct CtxGuard {
+    prev: Option<TraceCtx>,
+}
+
+impl Drop for CtxGuard {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        CURRENT.with(|c| *c.borrow_mut() = prev);
+    }
+}
+
+/// Time `f` as a span under the ambient context. When no trace is
+/// active this is one thread-local read and a direct call — the
+/// always-compiled hot-path cost of an instrumentation site. Nested
+/// [`span`] calls inside `f` become children of this span.
+pub fn span<R>(name: &str, f: impl FnOnce() -> R) -> R {
+    let Some(ctx) = current() else { return f() };
+    let span_id = ctx.tracer.next_id();
+    // Reparent the ambient ctx onto this span for f's duration so
+    // nested sites build a tree instead of a flat list.
+    let _guard = enter(TraceCtx { parent: span_id, ..ctx.clone() });
+    let start = ctx.tracer.now_us();
+    let r = f();
+    let dur = ctx.tracer.now_us().saturating_sub(start);
+    ctx.tracer.record(Span {
+        trace_id: ctx.trace_id,
+        span_id,
+        parent_id: ctx.parent,
+        name: name.to_string(),
+        start_us: start,
+        dur_us: dur,
+    });
+    r
+}
+
+/// A span tagged with the process it was recorded in — the unit of the
+/// `trace <id>` wire format, which must cross process boundaries as one
+/// protocol line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireSpan {
+    /// Process label: `local` for the answering server, `shard-<i>` for
+    /// spans collected from shard workers.
+    pub proc: String,
+    pub span: Span,
+}
+
+/// Encode spans as the single-line wire payload:
+/// `proc,span_id,parent_id,name,start_us,dur_us` entries joined by `;`.
+/// Proc labels and span names are kebab-case by construction, so the
+/// separators never need escaping.
+pub fn encode_spans(proc: &str, spans: &[Span]) -> String {
+    spans
+        .iter()
+        .map(|s| {
+            format!(
+                "{proc},{:x},{:x},{},{},{}",
+                s.span_id, s.parent_id, s.name, s.start_us, s.dur_us
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(";")
+}
+
+/// [`encode_spans`] for an already-tagged multi-process span list — the
+/// coordinator's merged `trace <id>` reply (local spans plus relabeled
+/// shard spans) in one line.
+pub fn encode_wire(spans: &[WireSpan]) -> String {
+    spans
+        .iter()
+        .map(|w| {
+            format!(
+                "{},{:x},{:x},{},{},{}",
+                w.proc, w.span.span_id, w.span.parent_id, w.span.name, w.span.start_us,
+                w.span.dur_us
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(";")
+}
+
+/// Parse the wire payload back into tagged spans, with `trace_id`
+/// reattached. Malformed entries are skipped rather than failing the
+/// whole trace (a shard on an older protocol should degrade, not wedge).
+pub fn decode_spans(trace_id: u64, wire: &str) -> Vec<WireSpan> {
+    let mut out = Vec::new();
+    for entry in wire.split(';').filter(|e| !e.is_empty()) {
+        let f: Vec<&str> = entry.split(',').collect();
+        if f.len() != 6 {
+            continue;
+        }
+        let (Ok(span_id), Ok(parent_id), Ok(start_us), Ok(dur_us)) = (
+            u64::from_str_radix(f[1], 16),
+            u64::from_str_radix(f[2], 16),
+            f[4].parse::<u64>(),
+            f[5].parse::<u64>(),
+        ) else {
+            continue;
+        };
+        out.push(WireSpan {
+            proc: f[0].to_string(),
+            span: Span {
+                trace_id,
+                span_id,
+                parent_id,
+                name: f[3].to_string(),
+                start_us,
+                dur_us,
+            },
+        });
+    }
+    out
+}
+
+/// Render a merged multi-process span list as an indented tree, one
+/// span per line, each process's clock rebased to its earliest span so
+/// the offsets read sensibly side by side.
+pub fn render_tree(spans: &[WireSpan]) -> String {
+    use std::collections::HashMap;
+    let mut base: HashMap<&str, u64> = HashMap::new();
+    for ws in spans {
+        let e = base.entry(ws.proc.as_str()).or_insert(u64::MAX);
+        *e = (*e).min(ws.span.start_us);
+    }
+    // Children under their parent, roots (or orphans) at depth 0.
+    let ids: std::collections::HashSet<u64> = spans.iter().map(|w| w.span.span_id).collect();
+    let mut children: HashMap<u64, Vec<usize>> = HashMap::new();
+    let mut roots: Vec<usize> = Vec::new();
+    for (i, ws) in spans.iter().enumerate() {
+        if ws.span.parent_id != 0 && ids.contains(&ws.span.parent_id) {
+            children.entry(ws.span.parent_id).or_default().push(i);
+        } else {
+            roots.push(i);
+        }
+    }
+    let by_start = |a: &usize, b: &usize| {
+        let (sa, sb) = (&spans[*a].span, &spans[*b].span);
+        (sa.start_us, sa.span_id).cmp(&(sb.start_us, sb.span_id))
+    };
+    roots.sort_by(by_start);
+    for v in children.values_mut() {
+        v.sort_by(by_start);
+    }
+    let mut out = String::new();
+    let mut stack: Vec<(usize, usize)> = roots.iter().rev().map(|&i| (i, 0)).collect();
+    while let Some((i, depth)) = stack.pop() {
+        let ws = &spans[i];
+        let rel = ws.span.start_us - base[ws.proc.as_str()];
+        out.push_str(&format!(
+            "{:indent$}{name} [{proc}] +{rel}µs {dur}µs\n",
+            "",
+            indent = depth * 2,
+            name = ws.span.name,
+            proc = ws.proc,
+            rel = rel,
+            dur = ws.span.dur_us,
+        ));
+        if let Some(kids) = children.get(&ws.span.span_id) {
+            for &k in kids.iter().rev() {
+                stack.push((k, depth + 1));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tracer() -> Arc<Tracer> {
+        Arc::new(Tracer::new(64, Sampling::Always))
+    }
+
+    #[test]
+    fn sampling_modes() {
+        let t = Tracer::new(8, Sampling::Off);
+        assert_eq!(t.sample(), None);
+        let t = Tracer::new(8, Sampling::Always);
+        let a = t.sample().unwrap();
+        let b = t.sample().unwrap();
+        assert_ne!(a, 0);
+        assert_ne!(a, b);
+        let t = Tracer::new(8, Sampling::Sampled(4));
+        let hits = (0..16).filter(|_| t.sample().is_some()).count();
+        assert_eq!(hits, 4);
+    }
+
+    #[test]
+    fn span_nesting_builds_a_tree() {
+        let t = tracer();
+        let id = t.sample().unwrap();
+        {
+            let _g = enter(TraceCtx { tracer: Arc::clone(&t), trace_id: id, parent: 0 });
+            span("outer", || {
+                span("inner", || std::thread::sleep(std::time::Duration::from_micros(200)));
+            });
+        }
+        let spans = t.spans_for(id);
+        assert_eq!(spans.len(), 2);
+        let outer = spans.iter().find(|s| s.name == "outer").unwrap();
+        let inner = spans.iter().find(|s| s.name == "inner").unwrap();
+        assert_eq!(outer.parent_id, 0);
+        assert_eq!(inner.parent_id, outer.span_id);
+        assert!(outer.dur_us >= inner.dur_us);
+    }
+
+    #[test]
+    fn no_ctx_means_no_spans() {
+        let t = tracer();
+        let before = t.recent_traces(16).len();
+        span("untraced", || 42);
+        assert_eq!(t.recent_traces(16).len(), before);
+    }
+
+    #[test]
+    fn ring_evicts_oldest() {
+        let t = Tracer::new(4, Sampling::Always);
+        for i in 0..10u64 {
+            t.record(Span {
+                trace_id: 1,
+                span_id: i + 1,
+                parent_id: 0,
+                name: "s".into(),
+                start_us: i,
+                dur_us: 1,
+            });
+        }
+        let spans = t.spans_for(1);
+        assert_eq!(spans.len(), 4);
+        assert!(spans.iter().all(|s| s.span_id > 6));
+    }
+
+    #[test]
+    fn recent_traces_most_recent_first() {
+        let t = Tracer::new(16, Sampling::Always);
+        for id in [7u64, 8, 9, 8] {
+            t.record(Span {
+                trace_id: id,
+                span_id: t.next_id(),
+                parent_id: 0,
+                name: "s".into(),
+                start_us: 0,
+                dur_us: 0,
+            });
+        }
+        assert_eq!(t.recent_traces(10), vec![8, 9, 7]);
+        assert_eq!(t.recent_traces(1), vec![8]);
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let spans = vec![
+            Span {
+                trace_id: 5,
+                span_id: 0x10,
+                parent_id: 0,
+                name: "predictb".into(),
+                start_us: 100,
+                dur_us: 900,
+            },
+            Span {
+                trace_id: 5,
+                span_id: 0x11,
+                parent_id: 0x10,
+                name: "kernel-assembly".into(),
+                start_us: 150,
+                dur_us: 300,
+            },
+        ];
+        let wire = encode_spans("local", &spans);
+        let back = decode_spans(5, &wire);
+        assert_eq!(back.len(), 2);
+        assert!(back.iter().all(|w| w.proc == "local"));
+        assert_eq!(back[0].span, spans[0]);
+        assert_eq!(back[1].span, spans[1]);
+        // Corrupt entries are skipped, not fatal.
+        let partial = decode_spans(5, &format!("{wire};garbage;x,y"));
+        assert_eq!(partial.len(), 2);
+    }
+
+    #[test]
+    fn tree_renders_nested_spans() {
+        let spans = vec![
+            WireSpan {
+                proc: "local".into(),
+                span: Span {
+                    trace_id: 1,
+                    span_id: 1,
+                    parent_id: 0,
+                    name: "predictb".into(),
+                    start_us: 1000,
+                    dur_us: 500,
+                },
+            },
+            WireSpan {
+                proc: "shard-0".into(),
+                span: Span {
+                    trace_id: 1,
+                    span_id: 2,
+                    parent_id: 0,
+                    name: "spredict".into(),
+                    start_us: 50_000,
+                    dur_us: 200,
+                },
+            },
+        ];
+        let tree = render_tree(&spans);
+        assert!(tree.contains("predictb [local] +0µs"));
+        // Each process is rebased to its own earliest span.
+        assert!(tree.contains("spredict [shard-0] +0µs"));
+    }
+}

@@ -122,6 +122,11 @@ pub struct OnlineStats {
     /// Training points evicted over this adapter's lifetime (window +
     /// drift eviction combined).
     pub evicted: u64,
+    /// Prequential quality telemetry: rolling z² calibration, interval
+    /// coverage vs nominal, and windowed RMSE, scored against the
+    /// pre-update posterior on every absorbed observation
+    /// ([`crate::obs::quality`]).
+    pub quality: crate::obs::quality::QualitySnapshot,
 }
 
 /// Shared observation endpoint for `Arc<dyn Surrogate>` registry slots:

@@ -31,6 +31,7 @@
 use crate::coordinator::ModelRegistry;
 use crate::data::{Dataset, Standardizer};
 use crate::kriging::{Prediction, Surrogate};
+use crate::obs::quality::QualityMonitor;
 use crate::online::policy::{DriftMonitor, OnlinePolicy, RefitReason};
 use crate::online::{OnlineObserver, OnlineStats};
 use crate::surrogate::{FitOptions, Standardized, SurrogateSpec};
@@ -82,6 +83,11 @@ pub struct OnlineModel {
     since_refit: AtomicU64,
     evicted: AtomicU64,
     drift: Mutex<DriftMonitor>,
+    /// Prequential quality scores (z² calibration, interval coverage,
+    /// rolling RMSE), fed from the same pre-update posterior as the
+    /// drift monitor. Shared across refit generations so the window
+    /// survives hot swaps.
+    quality: Arc<QualityMonitor>,
     history: Option<Arc<Mutex<History>>>,
     refit: Option<Arc<RefitShared>>,
 }
@@ -111,6 +117,7 @@ impl OnlineModel {
             since_refit: AtomicU64::new(0),
             evicted: AtomicU64::new(0),
             drift,
+            quality: Arc::new(QualityMonitor::new(crate::obs::quality::DEFAULT_WINDOW)),
             history: None,
             refit: None,
         })
@@ -168,6 +175,7 @@ impl OnlineModel {
             history_len,
             resident_bytes,
             evicted: self.evicted.load(Ordering::Relaxed),
+            quality: self.quality.snapshot(),
         }
     }
 
@@ -190,6 +198,7 @@ impl OnlineModel {
         let policy = self.policy;
         let shared = Arc::clone(shared);
         let history = Arc::clone(history);
+        let quality = Arc::clone(&self.quality);
         std::thread::spawn(move || {
             // A panic inside the numeric fit must not take the refit
             // machinery down with it: the serving generation keeps
@@ -218,6 +227,10 @@ impl OnlineModel {
                     Ok(mut fresh) => {
                         fresh.history = Some(history);
                         fresh.refit = Some(Arc::clone(&shared));
+                        // Quality telemetry spans generations: the
+                        // coverage window keeps scoring the slot, not
+                        // one model instance.
+                        fresh.quality = quality;
                         if let Some(registry) = shared
                             .registry
                             .lock()
@@ -359,6 +372,7 @@ impl OnlineObserver for OnlineModel {
         let residuals: Vec<f64> = (0..m)
             .map(|i| (ys[i] - mean[i]) / (var[i].max(0.0) + 1e-12).sqrt())
             .collect();
+        let errors: Vec<f64> = (0..m).map(|i| ys[i] - mean[i]).collect();
         // 2. Absorb incrementally under fixed hyper-parameters, point by
         // point. The per-model updates are atomic (commit-on-success), so
         // on a mid-batch failure the model holds exactly the absorbed
@@ -390,6 +404,10 @@ impl OnlineObserver for OnlineModel {
                     drift.push(r);
                 }
             }
+            // Prequential scoring: the same pre-update posterior, turned
+            // into calibration/coverage/RMSE telemetry — and like the
+            // drift monitor, only for observations the model absorbed.
+            self.quality.score_batch(&residuals[..absorbed], &errors[..absorbed]);
             if let Some(history) = &self.history {
                 let mut h = history.lock().unwrap_or_else(PoisonError::into_inner);
                 h.x.extend_from_slice(&xs.as_slice()[..absorbed * self.dim]);
@@ -548,6 +566,33 @@ mod tests {
         assert!(obs.observe_batch(&Matrix::zeros(1, 3), &[1.0]).is_err());
         assert!(obs.observe_batch(&Matrix::zeros(2, 2), &[1.0]).is_err());
         assert_eq!(online.stats().observed, 0);
+    }
+
+    #[test]
+    fn quality_telemetry_scores_absorbed_observations() {
+        let online = adapt(fitted_ok(25, 8), OnlinePolicy::default());
+        assert_eq!(online.stats().quality.scored, 0);
+        let mut rng = Rng::new(14);
+        for _ in 0..10 {
+            let xs = gen_matrix(&mut rng, 2, 2, -2.0, 2.0);
+            let ys: Vec<f64> =
+                (0..2).map(|i| xs.row(i)[0].sin() + 0.5 * xs.row(i)[1]).collect();
+            online.observer().unwrap().observe_batch(&xs, &ys).unwrap();
+        }
+        let q = online.stats().quality;
+        assert_eq!(q.scored, 20, "every absorbed point is scored once");
+        assert_eq!(q.window, 20);
+        assert!(q.rmse.is_finite() && q.rmse >= 0.0);
+        assert!(q.mean_z2 >= 0.0);
+        assert!((0.0..=1.0).contains(&q.coverage95));
+        // Rejected batches score nothing.
+        let before = online.stats().quality.scored;
+        assert!(online
+            .observer()
+            .unwrap()
+            .observe_batch(&Matrix::from_vec(1, 2, vec![f64::NAN, 0.0]), &[1.0])
+            .is_err());
+        assert_eq!(online.stats().quality.scored, before);
     }
 
     #[test]
