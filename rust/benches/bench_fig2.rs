@@ -14,6 +14,7 @@ use cluster_kriging::eval::report::{fig2_csv, pareto_front};
 use cluster_kriging::eval::HarnessConfig;
 
 fn main() -> anyhow::Result<()> {
+    cluster_kriging::obs::log::init();
     let paper_scale = std::env::var("CKRIG_PAPER_SCALE").is_ok();
     // The paper's Fig. 2 shows Concrete, CCPP, SARCOS and H1.
     let cfg = ExperimentConfig {
@@ -32,12 +33,12 @@ fn main() -> anyhow::Result<()> {
 
     let t0 = std::time::Instant::now();
     let grids = run_all(&cfg)?;
-    eprintln!("sweeps complete in {:.1}s\n", t0.elapsed().as_secs_f64());
+    log::info!("sweeps complete in {:.1}s", t0.elapsed().as_secs_f64());
 
     std::fs::create_dir_all("results").ok();
     let csv = fig2_csv(&grids);
     std::fs::write("results/fig2.csv", &csv)?;
-    eprintln!("wrote results/fig2.csv ({} rows)", csv.lines().count() - 1);
+    log::info!("wrote results/fig2.csv ({} rows)", csv.lines().count() - 1);
 
     for grid in &grids {
         if grid.is_empty() {

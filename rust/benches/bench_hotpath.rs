@@ -81,6 +81,7 @@ fn time<T>(f: impl FnOnce() -> T) -> (f64, T) {
 }
 
 fn main() {
+    cluster_kriging::obs::log::init();
     let mut rng = Rng::new(3);
     let n = env_usize("CKRIG_N", 2000);
     let d = 4;
@@ -397,7 +398,7 @@ fn main() {
     );
     match std::fs::write(&serving_json_path, &serving_json) {
         Ok(()) => println!("  wrote {serving_json_path}"),
-        Err(e) => eprintln!("  failed to write {serving_json_path}: {e}"),
+        Err(e) => log::warn!("failed to write {serving_json_path}: {e}"),
     }
 
     // == O1: online observe vs full refit — the partition structure's
@@ -471,7 +472,7 @@ fn main() {
     let online_json = format!("[\n{}\n]\n", online_records.join(",\n"));
     match std::fs::write(&online_json_path, &online_json) {
         Ok(()) => println!("  wrote {online_json_path}"),
-        Err(e) => eprintln!("  failed to write {online_json_path}: {e}"),
+        Err(e) => log::warn!("failed to write {online_json_path}: {e}"),
     }
 
     // == A1: optimization — acquisition throughput + suggest latency ==
@@ -584,7 +585,7 @@ fn main() {
     );
     match std::fs::write(&optimize_json_path, &optimize_json) {
         Ok(()) => println!("  wrote {optimize_json_path}"),
-        Err(e) => eprintln!("  failed to write {optimize_json_path}: {e}"),
+        Err(e) => log::warn!("failed to write {optimize_json_path}: {e}"),
     }
 
     // == D1: distributed scatter-gather — shard-count scaling on loopback ==
@@ -720,7 +721,7 @@ fn main() {
         let dist_json = format!("[\n{}\n]\n", dist_records.join(",\n"));
         match std::fs::write(&dist_json_path, &dist_json) {
             Ok(()) => println!("  wrote {dist_json_path}"),
-            Err(e) => eprintln!("  failed to write {dist_json_path}: {e}"),
+            Err(e) => log::warn!("failed to write {dist_json_path}: {e}"),
         }
         std::fs::remove_dir_all(&tmp).ok();
     }
@@ -776,6 +777,6 @@ fn main() {
     );
     match std::fs::write(&json_path, &json) {
         Ok(()) => println!("\nwrote {json_path}"),
-        Err(e) => eprintln!("\nfailed to write {json_path}: {e}"),
+        Err(e) => log::warn!("failed to write {json_path}: {e}"),
     }
 }

@@ -1,5 +1,5 @@
-//! Bench: tracing overhead on the serving hot path (§O1 in
-//! EXPERIMENTS.md).
+//! Bench: observability overhead — tracing on the serving hot path (§O1)
+//! and fit-path telemetry on the hyperopt loop (§O2 in EXPERIMENTS.md).
 //!
 //! The span recorder sits inside every `predictb` — trace-ID minting,
 //! ring-buffer inserts, and the thread-local context hand-off all run
@@ -14,11 +14,21 @@
 //!       three times and keeps its best percentiles so a stray
 //!       scheduler hiccup doesn't masquerade as tracing cost.
 //!
-//! The gate: sampled p99 must stay within 5% of off p99 (plus a small
+//! The O1 gate: sampled p99 must stay within 5% of off p99 (plus a small
 //! absolute epsilon — on CI runners the p99 of a loopback RTT jitters
 //! by tens of µs all by itself). Override the request count with
 //! `CKRIG_OBS_N` (default 300). Results land in `BENCH_obs.json`
 //! (override with `CKRIG_BENCH_OBS_JSON`).
+//!
+//!   O2  full hyperopt wall time with telemetry off, recording
+//!       ([`FitTelemetry`] attached, one event per objective eval), and
+//!       recording with `--progress` requested (the TTY gate makes this
+//!       identical to plain recording when stderr is piped, as on CI).
+//!       Gate: recording ≤ off × 1.03 plus a small absolute epsilon —
+//!       the recorder does one `Instant::now` and one mutex push per
+//!       eval, which must stay invisible next to an O(n³) Cholesky.
+//!       Override the training size with `CKRIG_OBS_FIT_N` (default
+//!       300).
 //!
 //! ```bash
 //! CKRIG_OBS_N=1000 cargo bench --bench bench_obs
@@ -30,7 +40,8 @@ use cluster_kriging::coordinator::{
     ServerMetrics,
 };
 use cluster_kriging::kriging::{HyperOpt, NuggetMode, Surrogate};
-use cluster_kriging::obs::{Sampling, Tracer};
+use cluster_kriging::obs::{FitSink, FitTelemetry, Sampling, Tracer};
+use cluster_kriging::util::matrix::Matrix;
 use cluster_kriging::util::proptest::gen_matrix;
 use cluster_kriging::util::rng::Rng;
 use std::sync::Arc;
@@ -61,7 +72,26 @@ fn run_once(client: &mut Client, batch: &[Vec<f64>], requests: usize) -> Vec<f64
     lat
 }
 
+/// One §O2 measurement: a full multi-restart hyperopt fit, optionally
+/// with a telemetry sink attached, returning wall seconds.
+fn hyperopt_fit_s(x: &Matrix, y: &[f64], telemetry: Option<FitSink>) -> f64 {
+    let opt = HyperOpt {
+        restarts: 2,
+        max_evals: 25,
+        isotropic: false,
+        nugget: NuggetMode::Fixed(1e-8),
+        telemetry,
+        ..HyperOpt::default()
+    };
+    let t0 = Instant::now();
+    let model = opt.fit(x.clone(), y).unwrap();
+    let s = t0.elapsed().as_secs_f64();
+    drop(model);
+    s
+}
+
 fn main() {
+    cluster_kriging::obs::log::init();
     let requests = env_usize("CKRIG_OBS_N", 300);
     let warmup = 20usize;
     let repeats = 3usize;
@@ -159,6 +189,52 @@ fn main() {
         p99s[0]
     );
 
+    // §O2: fit-path telemetry overhead on the hyperopt hot loop.
+    let fit_n = env_usize("CKRIG_OBS_FIT_N", 300);
+    let mut rng2 = Rng::new(31);
+    let fx = gen_matrix(&mut rng2, fit_n, 2, -3.0, 3.0);
+    let fy: Vec<f64> =
+        (0..fit_n).map(|i| fx.row(i)[0].sin() + 0.3 * fx.row(i)[1] * fx.row(i)[1]).collect();
+    println!(
+        "\n== O2: hyperopt wall time vs fit-path telemetry, n={fit_n} d=2, \
+         2 restarts x 25 evals, best of {repeats} =="
+    );
+    hyperopt_fit_s(&fx, &fy, None); // warmup: page in the cache path
+    let mut fit_best = [f64::INFINITY; 3];
+    let mut fit_events = 0usize;
+    for _ in 0..repeats {
+        fit_best[0] = fit_best[0].min(hyperopt_fit_s(&fx, &fy, None));
+        let rec = Arc::new(FitTelemetry::new());
+        fit_best[1] = fit_best[1]
+            .min(hyperopt_fit_s(&fx, &fy, Some(FitSink::new(Arc::clone(&rec)))));
+        fit_events = rec.events().len();
+        let rec = Arc::new(FitTelemetry::with_progress(true));
+        fit_best[2] = fit_best[2].min(hyperopt_fit_s(&fx, &fy, Some(FitSink::new(rec))));
+    }
+    let fit_ratio = fit_best[1] / fit_best[0];
+    println!("  off                  {:>8.4} s", fit_best[0]);
+    println!(
+        "  recording            {:>8.4} s | {fit_ratio:>5.3}x vs off ({fit_events} events)",
+        fit_best[1]
+    );
+    println!("  recording+progress   {:>8.4} s", fit_best[2]);
+    // Hard gate: recording must stay within 3% of off, plus a small
+    // absolute epsilon for scheduler jitter on sub-second fits.
+    let fit_epsilon_s = 0.02;
+    let fit_budget = fit_best[0] * 1.03 + fit_epsilon_s;
+    println!(
+        "\n  gate: recording {:.4} s vs budget {fit_budget:.4} s (off {:.4} s x 1.03 + \
+         {fit_epsilon_s} s)",
+        fit_best[1], fit_best[0]
+    );
+    assert!(
+        fit_best[1] <= fit_budget,
+        "fit-path telemetry cost {:.4} s exceeds 3%-plus-epsilon budget {fit_budget:.4} s \
+         (off {:.4} s)",
+        fit_best[1],
+        fit_best[0]
+    );
+
     let json_path =
         std::env::var("CKRIG_BENCH_OBS_JSON").unwrap_or_else(|_| "BENCH_obs.json".into());
     let json = format!(
@@ -170,7 +246,15 @@ fn main() {
             "  \"repeats\": {repeats},\n",
             "  \"batch_rows\": 8,\n",
             "  \"epsilon_us\": {epsilon:.0},\n",
-            "  \"modes\": [\n{modes}\n  ]\n",
+            "  \"modes\": [\n{modes}\n  ],\n",
+            "  \"o2\": {{\n",
+            "    \"fit_n\": {fit_n},\n",
+            "    \"events\": {fit_events},\n",
+            "    \"off_s\": {off_s:.4},\n",
+            "    \"recording_s\": {recording_s:.4},\n",
+            "    \"recording_progress_s\": {progress_s:.4},\n",
+            "    \"recording_vs_off\": {fit_ratio:.4}\n",
+            "  }}\n",
             "}}\n"
         ),
         n = n,
@@ -179,9 +263,15 @@ fn main() {
         repeats = repeats,
         epsilon = epsilon_us,
         modes = records.join(",\n"),
+        fit_n = fit_n,
+        fit_events = fit_events,
+        off_s = fit_best[0],
+        recording_s = fit_best[1],
+        progress_s = fit_best[2],
+        fit_ratio = fit_ratio,
     );
     match std::fs::write(&json_path, &json) {
         Ok(()) => println!("\nwrote {json_path}"),
-        Err(e) => eprintln!("\nfailed to write {json_path}: {e}"),
+        Err(e) => log::warn!("failed to write {json_path}: {e}"),
     }
 }

@@ -43,6 +43,7 @@ fn temp_dir(tag: &str) -> PathBuf {
 }
 
 fn main() {
+    cluster_kriging::obs::log::init();
     let n = 400usize;
     let d = 2usize;
     let stream = env_usize("CKRIG_ROBUST_N", 256);
@@ -182,6 +183,6 @@ fn main() {
     );
     match std::fs::write(&json_path, &json) {
         Ok(()) => println!("\nwrote {json_path}"),
-        Err(e) => eprintln!("\nfailed to write {json_path}: {e}"),
+        Err(e) => log::warn!("failed to write {json_path}: {e}"),
     }
 }

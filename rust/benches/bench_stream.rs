@@ -85,6 +85,7 @@ impl RowSource for SynthSource {
 }
 
 fn main() {
+    cluster_kriging::obs::log::init();
     let n = env_usize("CKRIG_STREAM_N", 1_000_000);
     let d = env_usize("CKRIG_STREAM_D", 6).max(2);
     let k = env_usize("CKRIG_STREAM_K", 8);
@@ -255,6 +256,6 @@ fn main() {
     );
     match std::fs::write(&json_path, &json) {
         Ok(()) => println!("\nwrote {json_path}"),
-        Err(e) => eprintln!("\nfailed to write {json_path}: {e}"),
+        Err(e) => log::warn!("failed to write {json_path}: {e}"),
     }
 }

@@ -26,6 +26,7 @@ fn bench<R>(name: &str, reps: usize, mut f: impl FnMut() -> R) {
 }
 
 fn main() {
+    cluster_kriging::obs::log::init();
     let mut rng = Rng::new(7);
 
     println!("== kernel matrix (SE, d=8) — the O(n²d) hot spot ==");

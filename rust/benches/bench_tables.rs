@@ -13,6 +13,7 @@ use cluster_kriging::eval::report::{render_table, PaperTable};
 use cluster_kriging::eval::HarnessConfig;
 
 fn main() -> anyhow::Result<()> {
+    cluster_kriging::obs::log::init();
     let paper_scale = std::env::var("CKRIG_PAPER_SCALE").is_ok();
     // Bench default: the three UCI-like sets plus two synthetic regimes
     // (one easy, one multimodal) keeps the run minutes-scale while
@@ -37,7 +38,7 @@ fn main() -> anyhow::Result<()> {
         only_algos: Vec::new(),
     };
 
-    eprintln!(
+    log::info!(
         "bench_tables: paper_scale={paper_scale}, datasets={:?}",
         if cfg.only_datasets.is_empty() {
             vec!["<all 11>".to_string()]
@@ -47,7 +48,7 @@ fn main() -> anyhow::Result<()> {
     );
     let t0 = std::time::Instant::now();
     let grids = run_all(&cfg)?;
-    eprintln!("grid complete in {:.1}s\n", t0.elapsed().as_secs_f64());
+    log::info!("grid complete in {:.1}s", t0.elapsed().as_secs_f64());
 
     for table in [PaperTable::R2, PaperTable::Msll, PaperTable::Smse] {
         println!("{}\n", render_table(&grids, table));
@@ -58,6 +59,6 @@ fn main() -> anyhow::Result<()> {
     for (t, table) in [(1, PaperTable::R2), (2, PaperTable::Msll), (3, PaperTable::Smse)] {
         std::fs::write(format!("results/table{t}.md"), render_table(&grids, table))?;
     }
-    eprintln!("wrote results/table{{1,2,3}}.md");
+    log::info!("wrote results/table{{1,2,3}}.md");
     Ok(())
 }

@@ -58,6 +58,15 @@ impl ClusterKriging {
         // instead of letting each nest a full pool (results are
         // worker-count independent, this is pure scheduling).
         let per_cluster_workers = (workers / partition.clusters.len().max(1)).max(1);
+        if let Some(sink) = &cfg.hyperopt.telemetry {
+            sink.note(
+                "worker-budget",
+                &format!(
+                    "{workers} workers / {} clusters = {per_cluster_workers} per cluster",
+                    partition.clusters.len()
+                ),
+            );
+        }
         // Fit each cluster independently — the paper's parallel step. Each
         // cluster builds one θ-independent distance cache (inside
         // `fit_shared`) that all of its hyperopt objective evaluations
@@ -74,7 +83,17 @@ impl ClusterKriging {
                 if opt.assembly_workers.is_none() {
                     opt.assembly_workers = Some(per_cluster_workers);
                 }
-                opt.fit_shared(xs, &ys).with_context(|| format!("cluster {ci} fit failed"))
+                // Cluster-tag the telemetry handle (if any) so this
+                // worker's phase + hyperopt evals are attributed.
+                let phase = cfg.hyperopt.telemetry.as_ref().map(|s| {
+                    let tagged = s.for_cluster(ci);
+                    opt.telemetry = Some(tagged.clone());
+                    tagged.phase("cluster-fit")
+                });
+                let fit =
+                    opt.fit_shared(xs, &ys).with_context(|| format!("cluster {ci} fit failed"));
+                drop(phase);
+                fit
             });
 
         let mut models = Vec::with_capacity(fits.len());

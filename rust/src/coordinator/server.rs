@@ -489,15 +489,21 @@ fn dispatch(
         }
         // Aggregate memory posture of the online slots — the number an
         // orchestrator watches to confirm eviction policies are holding.
-        let (points, bytes) = registry
+        let (points, bytes, fitting) = registry
             .list()
             .into_iter()
             .filter_map(|m| registry.get(Some(&m.name)))
             .filter_map(|model| model.observer().map(|o| o.online_stats()))
-            .fold((0usize, 0usize), |(p, b), os| {
-                (p + os.train_points, b + os.resident_bytes)
+            .fold((0usize, 0usize, 0usize), |(p, b, f), os| {
+                (
+                    p + os.train_points,
+                    b + os.resident_bytes,
+                    f + os.refit_in_flight as usize,
+                )
             });
-        s.push_str(&format!(" model_points={points} model_bytes={bytes}"));
+        s.push_str(&format!(
+            " model_points={points} model_bytes={bytes} refits_in_flight={fitting}"
+        ));
         s.push_str(&format!(
             " uptime_s={:.0} started_unix={} version={}",
             metrics.uptime_s(),
@@ -514,9 +520,22 @@ fn dispatch(
                 .get(Some(&m.name))
                 .and_then(|model| model.observer().map(|o| o.online_stats()))
             {
+                // Refit posture per slot: idle, or fitting-for-µs, plus
+                // the last completed refit's wall time once one ran.
+                let refit_state = if os.refit_in_flight {
+                    format!("fitting:{}us", os.refit_running_us)
+                } else {
+                    "idle".to_string()
+                };
                 online.push(format!(
-                    "{}[points={} history={} bytes={} evicted={}]",
-                    m.name, os.train_points, os.history_len, os.resident_bytes, os.evicted
+                    "{}[points={} history={} bytes={} evicted={} refit={} last_refit={}us]",
+                    m.name,
+                    os.train_points,
+                    os.history_len,
+                    os.resident_bytes,
+                    os.evicted,
+                    refit_state,
+                    os.last_refit_duration_us,
                 ));
             }
             slots.push(m.name);
@@ -1051,6 +1070,21 @@ fn metricsx_for(
         "ckrig_model_refits_total",
         "Background refits hot-swapped in over the adapter's lifetime.",
         &model_rows(&online, |os| os.refits as f64),
+    );
+    p.gauge_family(
+        "ckrig_model_refit_in_flight",
+        "1 while a background refit is running for the slot.",
+        &model_rows(&online, |os| os.refit_in_flight as u64 as f64),
+    );
+    p.gauge_family(
+        "ckrig_model_refit_running_us",
+        "Wall µs the in-flight background refit has been running (0 idle).",
+        &model_rows(&online, |os| os.refit_running_us as f64),
+    );
+    p.gauge_family(
+        "ckrig_model_last_refit_duration_us",
+        "Wall µs of the last completed background refit attempt.",
+        &model_rows(&online, |os| os.last_refit_duration_us as f64),
     );
     p.gauge_family(
         "ckrig_model_observed_total",
@@ -1915,13 +1949,14 @@ mod tests {
         // Per-slot history length + resident bytes ride the stats reply…
         let stats = c.stats().unwrap();
         assert!(
-            stats.contains("[points=2 history=2 bytes=48 evicted=0]"),
+            stats.contains("[points=2 history=2 bytes=48 evicted=0 refit=idle last_refit=0us]"),
             "{stats}"
         );
         // …and the aggregates ride health, next to the existing fields.
         let health = c.request("health").unwrap();
         assert!(health.contains("model_points=2"), "{health}");
         assert!(health.contains("model_bytes=48"), "{health}");
+        assert!(health.contains("refits_in_flight=0"), "{health}");
     }
 
     #[test]

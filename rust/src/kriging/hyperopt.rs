@@ -40,6 +40,13 @@ pub struct HyperOpt {
     /// model is identical for any worker count.
     pub assembly_workers: Option<usize>,
     pub seed: u64,
+    /// Optional fit-path telemetry sink: when set, every objective
+    /// evaluation records its decoded θ/nugget, the resulting NLL,
+    /// whether it improved the restart's incumbent, and its wall time
+    /// (see [`crate::obs::fitlog`]). `None` (the default) keeps the
+    /// objective's hot loop clock-free. Recording never perturbs the
+    /// search itself — fitted models are bit-identical either way.
+    pub telemetry: Option<crate::obs::FitSink>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -60,6 +67,7 @@ impl Default for HyperOpt {
             isotropic: false,
             assembly_workers: None,
             seed: 0x5EED,
+            telemetry: None,
         }
     }
 }
@@ -131,7 +139,12 @@ impl HyperOpt {
             };
 
             let mut local_best: Option<OrdinaryKriging> = None;
+            let mut eval_idx = 0usize;
             let mut objective = |p: &[f64]| -> f64 {
+                // Clocks only tick when a sink is attached: the bare
+                // search pays one `is_some` branch per evaluation
+                // (bench §O2 gates the recording overhead at ≤3%).
+                let t0 = self.telemetry.as_ref().map(|_| std::time::Instant::now());
                 let (theta, nugget) = decode(p);
                 let kernel = Kernel::new(self.kind, theta);
                 let fitted = match cache.as_ref() {
@@ -151,7 +164,8 @@ impl HyperOpt {
                         workers,
                     ),
                 };
-                match fitted {
+                let mut accepted = false;
+                let value = match fitted {
                     Ok(model) => {
                         let nll = model.nll();
                         let better = local_best
@@ -160,11 +174,28 @@ impl HyperOpt {
                             .unwrap_or(true);
                         if better {
                             local_best = Some(model);
+                            accepted = true;
                         }
                         nll
                     }
                     Err(_) => f64::INFINITY,
+                };
+                if let Some(sink) = &self.telemetry {
+                    let wall_us = t0.map(|t| t.elapsed().as_micros() as u64).unwrap_or(0);
+                    let (theta, nugget) = decode(p);
+                    let nll = value.is_finite().then_some(value);
+                    sink.hyperopt_eval(
+                        restart,
+                        eval_idx,
+                        &theta,
+                        nugget,
+                        nll,
+                        accepted,
+                        wall_us,
+                    );
                 }
+                eval_idx += 1;
+                value
             };
             nelder_mead(&start, 0.5, self.max_evals, &mut objective);
 

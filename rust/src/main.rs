@@ -11,6 +11,9 @@
 //!   stream      stream observations into a running server (protocol v3)
 //!   optimize    run a budgeted ask/tell EGO loop on a benchmark function
 //!   top         live dashboard over a running server's `metricsx` feed
+//!   fitlog      render a `--telemetry` JSONL recording (phase timeline,
+//!               hyperopt convergence, ingestion and optimizer traces)
+//!   benchdiff   compare two bench JSON records and fail on regression
 //!   info        show PJRT platform + discovered artifacts
 
 use anyhow::{bail, Context, Result};
@@ -27,7 +30,7 @@ use cluster_kriging::eval::report::{self, PaperTable};
 use cluster_kriging::eval::HarnessConfig;
 use cluster_kriging::kriging::{HyperOpt, Surrogate};
 use cluster_kriging::metrics;
-use cluster_kriging::obs::{export, Sampling, Tracer};
+use cluster_kriging::obs::{export, FitSink, FitTelemetry, Sampling, Tracer};
 use cluster_kriging::online::wal::{self, Durability, DurabilityConfig, FsyncPolicy};
 use cluster_kriging::online::{OnlineModel, OnlinePolicy, RefitConfig};
 use cluster_kriging::optimize::{Acquisition, Bounds, Optimizer, OptimizerConfig};
@@ -63,7 +66,10 @@ fn install_signal_handlers() {
 fn install_signal_handlers() {}
 
 fn main() {
-    env_logger_lite();
+    // Structured JSONL logging on stderr, filtered by CKRIG_LOG
+    // (off|error|warn|info|debug; default info), optional file sink via
+    // CKRIG_LOG_FILE. Replaces the old ad-hoc env_logger substitute.
+    cluster_kriging::obs::log::init();
     let args = match Args::from_env() {
         Ok(a) => a,
         Err(e) => {
@@ -79,6 +85,8 @@ fn main() {
         Some("stream") => cmd_stream(&args),
         Some("optimize") => cmd_optimize(&args),
         Some("top") => cmd_top(&args),
+        Some("fitlog") => cmd_fitlog(&args),
+        Some("benchdiff") => cmd_benchdiff(&args),
         Some("info") => cmd_info(&args),
         _ => {
             print_usage();
@@ -100,6 +108,9 @@ fn print_usage() {
          experiment --table 1|2|3 | --figure 2 [--paper-scale] [--folds N]\n\
          \u{20}          [--datasets a,b] [--algos SoD,MTCK] [--out results/]\n\
          fit        --dataset <name> --algo SPEC [--seed S] [--n N] [--out model.ck]\n\
+         \u{20}          [--telemetry out.jsonl] [--progress]  (fit-path telemetry:\n\
+         \u{20}           per-phase timings, per-eval hyperopt traces; render with\n\
+         \u{20}           `ckrig fitlog out.jsonl`)\n\
          \u{20}          (or legacy --flavor OWCK|OWFCK|GMMCK|MTCK --k K)\n\
          \u{20}          (streaming: --stream data.csv --memory-budget MB [--k K]\n\
          \u{20}           [--chunk-rows N] [--no-header] — bounded-memory two-pass\n\
@@ -124,8 +135,15 @@ fn print_usage() {
          \u{20}          [--model SLOT] [--seed S] [--drift D]\n\
          optimize   --algo SPEC --fn <benchmark> --budget N [--init N] [--q B]\n\
          \u{20}          [--acq ei|poi|lcb[:v]] [--pool P] [--dim D] [--seed S]\n\
+         \u{20}          [--telemetry out.jsonl] [--progress]  (per-iteration\n\
+         \u{20}           incumbent/acquisition traces + refit phases)\n\
          top        [--addr host:port] [--interval MS] [--once]  (live dashboard:\n\
          \u{20}          counters, latency percentiles, per-model calibration)\n\
+         fitlog     <telemetry.jsonl>  (phase timeline, hyperopt convergence,\n\
+         \u{20}          ingestion/optimizer traces from a --telemetry recording)\n\
+         benchdiff  <old.json> <new.json> [--gate PCT]  (compare bench records;\n\
+         \u{20}          non-zero exit when any gated metric regressed past PCT,\n\
+         \u{20}          default 10)\n\
          info       [--artifacts DIR]\n\
          \n\
          SPEC names any algorithm: mtck:8 owck:4 sod:512 fitc:64 bcm:8\n\
@@ -174,9 +192,10 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         only_datasets: args.get_list::<String>("datasets")?.unwrap_or_default(),
         only_algos: args.get_list::<String>("algos")?.unwrap_or_default(),
     };
-    eprintln!(
-        "running experiment grid (paper_scale={}, folds={})…",
-        cfg.paper_scale, cfg.folds
+    log::info!(
+        "running experiment grid (paper_scale={}, folds={})",
+        cfg.paper_scale,
+        cfg.folds
     );
     let grids = run_all(&cfg)?;
 
@@ -201,7 +220,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             }
             let path = format!("{out_dir}/table{idx}.md");
             std::fs::write(&path, &md)?;
-            eprintln!("wrote {path}");
+            log::info!("wrote {path}");
         }
     }
     if let Some(f) = figure {
@@ -212,7 +231,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         let path = format!("{out_dir}/fig2.csv");
         std::fs::write(&path, &csv)?;
         let rows: usize = grids.iter().flatten().map(|c| c.sweep.len()).sum();
-        eprintln!("wrote {path} ({rows} rows)");
+        log::info!("wrote {path} ({rows} rows)");
     }
     Ok(())
 }
@@ -230,11 +249,40 @@ fn resolve_spec(args: &Args, default_spec: &str) -> Result<SurrogateSpec> {
     SurrogateSpec::parse(default_spec)
 }
 
+/// Build the fit-path telemetry recorder from `--telemetry PATH` and/or
+/// `--progress`: the recorder (kept for the final dump), a top-level
+/// [`FitSink`] to thread through the pipelines, and the dump path.
+fn telemetry_from_args(args: &Args) -> (Option<Arc<FitTelemetry>>, Option<FitSink>) {
+    if args.get("telemetry").is_none() && !args.has_flag("progress") {
+        return (None, None);
+    }
+    let rec = Arc::new(FitTelemetry::with_progress(args.has_flag("progress")));
+    let sink = FitSink::new(Arc::clone(&rec));
+    (Some(rec), Some(sink))
+}
+
+/// Stamp the recording's footer and write the JSONL file, if recording.
+fn telemetry_finish(args: &Args, rec: &Option<Arc<FitTelemetry>>, label: &str) -> Result<()> {
+    let Some(rec) = rec else { return Ok(()) };
+    rec.finish(label);
+    if let Some(path) = args.get("telemetry") {
+        let n = rec.dump_to_path(path)?;
+        println!("telemetry   : {path} ({n} events) — render with `ckrig fitlog {path}`");
+    }
+    Ok(())
+}
+
 /// Fit a spec on a dataset's 80% training fold through the one shared
 /// `SurrogateSpec::fit` path, wrapped with the fold's standardizer so the
 /// model (and its artifact) serves raw-unit queries. Returns the holdout
-/// fold alongside.
-fn fit_spec(ds: &Dataset, spec: &SurrogateSpec, seed: u64) -> Result<(Standardized, Dataset)> {
+/// fold alongside. `telemetry` (already nested under the caller's
+/// top-level phase) records per-eval hyperopt traces when set.
+fn fit_spec(
+    ds: &Dataset,
+    spec: &SurrogateSpec,
+    seed: u64,
+    telemetry: Option<FitSink>,
+) -> Result<(Standardized, Dataset)> {
     let (train, test) = ds.split(0.8, seed);
     // Standardize on the training fold (as the evaluation harness does) —
     // the θ search bounds assume unit-scale inputs.
@@ -245,6 +293,7 @@ fn fit_spec(ds: &Dataset, spec: &SurrogateSpec, seed: u64) -> Result<(Standardiz
             restarts: 1,
             max_evals: 20,
             isotropic: tr.d() > 8,
+            telemetry,
             ..HyperOpt::default()
         },
         seed,
@@ -262,13 +311,20 @@ fn cmd_fit(args: &Args) -> Result<()> {
     let n: Option<usize> = args.get_parsed_or("n", 0).ok().filter(|&n| n > 0);
     let spec = resolve_spec(args, "mtck:4")?;
 
+    let (rec, sink) = telemetry_from_args(args);
+    let phase = sink.as_ref().map(|s| s.phase("load-data"));
     let ds = load_dataset(&dataset, seed, n)?;
-    eprintln!("dataset {} ({}×{}), algo {spec}", ds.name, ds.n(), ds.d());
+    drop(phase);
+    log::info!("dataset {} ({}×{}), algo {spec}", ds.name, ds.n(), ds.d());
     let t0 = std::time::Instant::now();
-    let (model, test) = fit_spec(&ds, &spec, seed)?;
+    let phase = sink.as_ref().map(|s| s.phase("fit"));
+    let (model, test) = fit_spec(&ds, &spec, seed, sink.as_ref().map(|s| s.nested()))?;
+    drop(phase);
     let fit_s = t0.elapsed().as_secs_f64();
     let t1 = std::time::Instant::now();
+    let phase = sink.as_ref().map(|s| s.phase("predict"));
     let pred = model.predict(&test.x)?;
+    drop(phase);
     let pred_s = t1.elapsed().as_secs_f64();
 
     println!("algo        : {} ({spec})", model.name());
@@ -279,13 +335,16 @@ fn cmd_fit(args: &Args) -> Result<()> {
 
     if let Some(out) = args.get("out") {
         let t2 = std::time::Instant::now();
+        let phase = sink.as_ref().map(|s| s.phase("save"));
         let bytes = surrogate::save_to_path(&model, out)?;
+        drop(phase);
         println!(
             "artifact    : {out} ({bytes} bytes, written in {:.3}s)",
             t2.elapsed().as_secs_f64()
         );
         println!("serve it    : ckrig serve --artifact {out}");
     }
+    telemetry_finish(args, &rec, &format!("fit {dataset} {spec}"))?;
     Ok(())
 }
 
@@ -305,15 +364,19 @@ fn cmd_fit_stream(args: &Args, path: &str) -> Result<()> {
     anyhow::ensure!(chunk_rows > 0, "--chunk-rows must be positive");
     let has_header = !args.has_flag("no-header");
 
+    let (rec, sink) = telemetry_from_args(args);
     let cfg = StreamFitConfig {
         chunk_rows,
         seed: args.get_parsed_or("seed", 1)?,
+        telemetry: sink.clone(),
         ..StreamFitConfig::new(k, budget_mb << 20)
     };
     let mut src = CsvRowSource::open(path, cfg.chunk_rows, has_header)?;
-    eprintln!("streaming {path} (budget {budget_mb} MB, k={k}, chunks of {chunk_rows} rows)…");
+    log::info!("streaming {path} (budget {budget_mb} MB, k={k}, chunks of {chunk_rows} rows)");
     let t0 = std::time::Instant::now();
+    let phase = sink.as_ref().map(|s| s.phase("stream-fit"));
     let (model, rep) = fit_stream(&mut src, &cfg)?;
+    drop(phase);
     let fit_s = t0.elapsed().as_secs_f64();
 
     let peak = rep.peak_bytes as f64 / (1u64 << 20) as f64;
@@ -328,10 +391,13 @@ fn cmd_fit_stream(args: &Args, path: &str) -> Result<()> {
     println!("peak memory : {peak:.1} MB of {total:.1} MB budget");
 
     if let Some(out) = args.get("out") {
+        let phase = sink.as_ref().map(|s| s.phase("save"));
         let bytes = surrogate::save_to_path(&model, out)?;
+        drop(phase);
         println!("artifact    : {out} ({bytes} bytes)");
         println!("serve it    : ckrig serve --artifact {out}");
     }
+    telemetry_finish(args, &rec, &format!("fit-stream {path} multiscale:{k}"))?;
     Ok(())
 }
 
@@ -395,7 +461,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let (model, refit): (Box<dyn Surrogate>, Option<RefitConfig>) =
         if let Some((seq, model)) = recovered {
-            eprintln!(
+            log::info!(
                 "recovered checkpoint at seq {seq}: {} ({} dims) from {}",
                 model.name(),
                 model.dim(),
@@ -406,7 +472,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             // Millisecond cold boot: load the fitted model, no refit.
             let t0 = std::time::Instant::now();
             let model = SurrogateSpec::load_path(artifact)?;
-            eprintln!(
+            log::info!(
                 "loaded {} ({} dims) from {artifact} in {:.1} ms",
                 model.name(),
                 model.dim(),
@@ -418,7 +484,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                      this model has no per-cluster decomposition",
                 )?;
                 let (i, s) = sp.shard_index().unwrap_or((0, 1));
-                eprintln!(
+                log::info!(
                     "shard worker {i}/{s}: serving clusters {:?} of {} (spredict/shardinfo ready)",
                     sp.cluster_ids(),
                     sp.k_total()
@@ -433,8 +499,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let n: Option<usize> = args.get_parsed_or("n", 0).ok().filter(|&v| v > 0);
             let spec = resolve_spec(args, "mtck:4")?;
             let ds = load_dataset(&dataset, seed, n)?;
-            eprintln!("fitting {spec} on {} ({}×{})…", ds.name, ds.n(), ds.d());
-            let (model, _) = fit_spec(&ds, &spec, seed)?;
+            log::info!("fitting {spec} on {} ({}×{})", ds.name, ds.n(), ds.d());
+            let (model, _) = fit_spec(&ds, &spec, seed, None)?;
             let refit = RefitConfig { spec, opts: FitOptions::fast() };
             (Box::new(model), Some(refit))
         };
@@ -444,7 +510,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(rec) => {
             if !rec.replay.is_empty() {
                 let n = wal::replay_into(model.as_mut(), &rec.replay, &name)?;
-                eprintln!("replayed {n} WAL observations into slot {name:?}");
+                log::info!("replayed {n} WAL observations into slot {name:?}");
             }
             let dir = wal_dir.clone().expect("recovery implies --wal");
             Some(Durability::new(rec.wal, &DurabilityConfig { dir, fsync, checkpoint_every }))
@@ -466,8 +532,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 (Arc::clone(&adapter) as Arc<dyn Surrogate>, Some(adapter))
             }
             Err(inner) => {
-                eprintln!(
-                    "note: {} is fit-once; observe/observeb will be rejected",
+                log::warn!(
+                    "{} is fit-once; observe/observeb will be rejected",
                     inner.name()
                 );
                 (Arc::from(inner), None)
@@ -524,25 +590,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .get(Some(name.as_str()))
             .and_then(|m| m.observer().map(|o| o.online_stats()));
         match live {
-            Some(s) => eprintln!(
-                "{} | online: observed={} since_refit={} refits={} drift={:.2} \
-                 points={} evicted={} bytes={}",
+            Some(s) => log::info!(
+                "{} | online: observed={} since_refit={} refits={} refit_in_flight={} \
+                 last_refit_us={} drift={:.2} points={} evicted={} bytes={}",
                 server.metrics.summary(),
                 s.observed,
                 s.since_refit,
                 s.refits,
+                s.refit_in_flight,
+                s.last_refit_duration_us,
                 s.drift,
                 s.train_points,
                 s.evicted,
                 s.resident_bytes
             ),
-            None => eprintln!("{}", server.metrics.summary()),
+            None => log::info!("{}", server.metrics.summary()),
         }
     }
     // Graceful drain: stop accepting, let in-flight requests and the
     // flush queue finish, then make the absorbed state durable so the
     // next boot replays nothing.
-    eprintln!("signal received; draining…");
+    log::info!("signal received; draining");
     server.shutdown();
     ckpt_stop.store(true, Ordering::SeqCst);
     if let Some(handle) = checkpointer {
@@ -551,11 +619,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(d) = &durability {
         if let Some(m) = registry.get(Some(name.as_str())) {
             let seq = d.checkpoint(m.as_ref())?;
-            eprintln!("final checkpoint at seq {seq}");
+            log::info!("final checkpoint at seq {seq}");
         }
         d.flush()?;
     }
-    eprintln!("drained; exiting");
+    log::info!("drained; exiting");
     Ok(())
 }
 
@@ -577,14 +645,14 @@ fn serve_coordinator(args: &Args, addr: &str, name: &str, manifest_path: &str) -
         ..ShardPoolConfig::default()
     };
     let pool = ShardPool::connect(&shards, &manifest, pool_cfg)?;
-    eprintln!(
+    log::info!(
         "shard pool up: {}/{} workers healthy",
         pool.alive_count(),
         pool.shard_count()
     );
     let model = ShardedClusterKriging::new(manifest, Arc::clone(&pool))?;
     let dim = model.dim();
-    eprintln!(
+    log::info!(
         "coordinating {} — {} clusters across {} shards, combiner {}",
         model.name(),
         model.manifest().k_total,
@@ -624,7 +692,7 @@ fn serve_coordinator(args: &Args, addr: &str, name: &str, manifest_path: &str) -
         if ticks % 20 != 0 {
             continue;
         }
-        eprintln!(
+        log::info!(
             "{} | shards alive {}/{} degraded_merges={} retries={}",
             server.metrics.summary(),
             pool.alive_count(),
@@ -633,9 +701,9 @@ fn serve_coordinator(args: &Args, addr: &str, name: &str, manifest_path: &str) -
             pool.retried_requests()
         );
     }
-    eprintln!("signal received; draining…");
+    log::info!("signal received; draining");
     server.shutdown();
-    eprintln!("drained; exiting");
+    log::info!("drained; exiting");
     Ok(())
 }
 
@@ -685,8 +753,8 @@ fn cmd_stream(args: &Args) -> Result<()> {
     let ds = load_dataset(&dataset, seed, Some(n))?;
     let mut client = Client::connect(&addr)
         .with_context(|| format!("connecting to server at {addr}"))?;
-    eprintln!(
-        "streaming {} observations from {} ({} dims) to {addr} in batches of {batch}…",
+    log::info!(
+        "streaming {} observations from {} ({} dims) to {addr} in batches of {batch}",
         ds.n(),
         ds.name,
         ds.d()
@@ -700,7 +768,7 @@ fn cmd_stream(args: &Args) -> Result<()> {
         client.observe_batch(model.as_deref(), &points, &ys)?;
         sent = hi;
         if sent % (batch * 8) == 0 || sent == ds.n() {
-            eprintln!("  {sent}/{} | server: {}", ds.n(), client.stats()?);
+            log::info!("{sent}/{} | server: {}", ds.n(), client.stats()?);
         }
     }
     let secs = t0.elapsed().as_secs_f64();
@@ -742,19 +810,22 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     };
     anyhow::ensure!(budget > init, "--budget {budget} must exceed the initial design {init}");
 
+    let (rec, sink) = telemetry_from_args(args);
     let cfg = OptimizerConfig {
         acquisition: acq,
         pool: args.get_parsed_or("pool", 512)?,
         init,
         seed,
+        telemetry: sink.clone(),
         ..OptimizerConfig::new(spec.clone())
     };
-    eprintln!(
+    log::info!(
         "minimizing {fn_name} (d={d}, domain [{lo}, {hi}]) with {spec}: \
          budget {budget}, init {init}, q={q}, acquisition {acq}"
     );
     let mut opt = Optimizer::new(bounds, cfg)?;
     let t0 = std::time::Instant::now();
+    let phase = sink.as_ref().map(|s| s.phase("optimize-loop"));
     let mut evals = 0;
     while evals < budget {
         let ask_q = q.min(budget - evals);
@@ -767,9 +838,10 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         }
         if evals % 10 < ask_q || evals == budget {
             let (_, best) = opt.best().expect("told at least one evaluation");
-            eprintln!("  eval {evals:>4}/{budget}: best {best:.6}");
+            log::info!("eval {evals}/{budget}: best {best:.6}");
         }
     }
+    drop(phase);
     let secs = t0.elapsed().as_secs_f64();
     let (best_x, best_y) = opt.best().expect("budget > 0");
     let stats = opt.stats();
@@ -791,6 +863,49 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         "driver        : {} fits, {} incremental tells, {:.2}s wall",
         stats.fits, stats.incremental, secs
     );
+    telemetry_finish(args, &rec, &format!("optimize {fn_name} {spec}"))?;
+    Ok(())
+}
+
+/// Render a `--telemetry` JSONL recording: phase timeline, hyperopt
+/// convergence table, ingestion and optimizer traces.
+fn cmd_fitlog(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("input"))
+        .context("usage: ckrig fitlog <telemetry.jsonl>")?;
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading telemetry log {path}"))?;
+    let events = cluster_kriging::obs::fitlog::parse_jsonl(&text)?;
+    print!("{}", cluster_kriging::obs::fitlog::render(&events));
+    Ok(())
+}
+
+/// Compare two bench JSON records leaf by leaf and exit non-zero when
+/// any gated metric regressed past `--gate PCT` (default 10%) — the CI
+/// bench-regression gate.
+fn cmd_benchdiff(args: &Args) -> Result<()> {
+    let (old_path, new_path) = match args.positional.as_slice() {
+        [o, n] => (o.as_str(), n.as_str()),
+        _ => bail!("usage: ckrig benchdiff <old.json> <new.json> [--gate PCT]"),
+    };
+    let gate: f64 = args.get_parsed_or("gate", 10.0)?;
+    anyhow::ensure!(gate.is_finite() && gate >= 0.0, "--gate must be a non-negative percent");
+    let old_text = std::fs::read_to_string(old_path)
+        .with_context(|| format!("reading old bench record {old_path}"))?;
+    let new_text = std::fs::read_to_string(new_path)
+        .with_context(|| format!("reading new bench record {new_path}"))?;
+    let report = cluster_kriging::obs::benchdiff::compare(&old_text, &new_text, gate)?;
+    print!("{}", cluster_kriging::obs::benchdiff::render(&report, gate));
+    if !report.regressions.is_empty() {
+        bail!(
+            "{} of {} gated metrics regressed past the {gate}% gate",
+            report.regressions.len(),
+            report.compared
+        );
+    }
     Ok(())
 }
 
@@ -889,13 +1004,25 @@ fn render_top(addr: &str, samples: &[export::Sample], stats: &str) {
     if !models.is_empty() {
         println!();
         println!(
-            "{:<14} {:>8} {:>8} {:>6} {:>6} {:>6}  {:^16} {:>8}",
-            "model", "points", "observed", "refits", "drift", "z2", "cov 90/95/99", "rmse"
+            "{:<14} {:>8} {:>8} {:>6} {:>6} {:>6}  {:^16} {:>8} {:>10}",
+            "model", "points", "observed", "refits", "drift", "z2", "cov 90/95/99", "rmse", "refit"
         );
         for m in models {
             let flagged = mval("ckrig_model_calibration_flagged", m) >= 1.0;
+            // Refit posture: running (with elapsed wall time), last
+            // completed duration, or idle before the first refit.
+            let refit = if mval("ckrig_model_refit_in_flight", m) >= 1.0 {
+                format!("fit {:.1}s", mval("ckrig_model_refit_running_us", m) / 1e6)
+            } else {
+                let last = mval("ckrig_model_last_refit_duration_us", m);
+                if last > 0.0 {
+                    format!("{:.1}s", last / 1e6)
+                } else {
+                    "idle".to_string()
+                }
+            };
             println!(
-                "{:<14} {:>8.0} {:>8.0} {:>6.0} {:>6.2} {:>6.2}  {:.2}/{:.2}/{:.2}  {:>8.3}{}",
+                "{:<14} {:>8.0} {:>8.0} {:>6.0} {:>6.2} {:>6.2}  {:.2}/{:.2}/{:.2}  {:>8.3} {:>10}{}",
                 m,
                 mval("ckrig_model_train_points", m),
                 mval("ckrig_model_observed_total", m),
@@ -906,6 +1033,7 @@ fn render_top(addr: &str, samples: &[export::Sample], stats: &str) {
                 mval("ckrig_model_coverage95", m),
                 mval("ckrig_model_coverage99", m),
                 mval("ckrig_model_quality_rmse", m),
+                refit,
                 if flagged { "  [MISCALIBRATED]" } else { "" }
             );
         }
@@ -959,28 +1087,4 @@ fn cmd_info(args: &Args) -> Result<()> {
         }
     }
     Ok(())
-}
-
-/// Tiny env_logger substitute: honors RUST_LOG=debug|info|warn.
-fn env_logger_lite() {
-    struct L(log::LevelFilter);
-    impl log::Log for L {
-        fn enabled(&self, m: &log::Metadata) -> bool {
-            m.level() <= self.0
-        }
-        fn log(&self, r: &log::Record) {
-            if self.enabled(r.metadata()) {
-                eprintln!("[{}] {}", r.level(), r.args());
-            }
-        }
-        fn flush(&self) {}
-    }
-    let level = match std::env::var("RUST_LOG").as_deref() {
-        Ok("debug") => log::LevelFilter::Debug,
-        Ok("info") => log::LevelFilter::Info,
-        Ok("warn") => log::LevelFilter::Warn,
-        _ => log::LevelFilter::Error,
-    };
-    let _ = log::set_boxed_logger(Box::new(L(level)));
-    log::set_max_level(level);
 }

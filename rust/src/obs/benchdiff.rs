@@ -1,0 +1,380 @@
+//! Bench-regression gating: compare two `BENCH_*.json` records and fail
+//! when a latency/throughput metric regressed past a tolerance.
+//!
+//! The bench harnesses (`bench_hotpath`, `bench_stream`, …) each write a
+//! small hand-rolled JSON record per run. This module flattens such a
+//! record into dotted-path numeric leaves (`modes[1].p99_us`,
+//! `m1.runs[0].rows_per_s`), classifies each leaf by name into
+//! lower-is-better (latencies, wall times, overhead ratios),
+//! higher-is-better (throughputs, speedups) or ungated (configuration
+//! knobs, accuracy numbers), and compares every gated leaf present in
+//! *both* files. `ckrig benchdiff old.json new.json [--gate PCT]` exits
+//! non-zero when any gated leaf is worse by more than the tolerance —
+//! CI runs it with the committed `benchmarks/baseline/` snapshots as
+//! `old` (see EXPERIMENTS.md §FitObservability for the gate policy).
+//!
+//! The parser is a minimal recursive-descent JSON reader (numbers,
+//! strings, bools, null, arrays, objects) — the records are machine
+//! written, small, and this repo takes no serde dependency.
+
+use anyhow::{bail, Context, Result};
+
+// ---------------------------------------------------------------------
+// JSON flattening
+// ---------------------------------------------------------------------
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8> {
+        self.skip_ws();
+        self.bytes
+            .get(self.pos)
+            .copied()
+            .context("unexpected end of JSON input")
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        let got = self.peek()?;
+        if got != b {
+            bail!("expected {:?} at byte {}, found {:?}", b as char, self.pos, got as char);
+        }
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let b = *self
+                .bytes
+                .get(self.pos)
+                .context("unterminated JSON string")?;
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let esc = *self
+                        .bytes
+                        .get(self.pos)
+                        .context("dangling escape in JSON string")?;
+                    self.pos += 1;
+                    match esc {
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let end = (self.pos + 4).min(self.bytes.len());
+                            let hex = std::str::from_utf8(&self.bytes[self.pos..end])
+                                .ok()
+                                .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                .and_then(char::from_u32)
+                                .unwrap_or('\u{fffd}');
+                            out.push(hex);
+                            self.pos = end;
+                        }
+                        other => out.push(other as char),
+                    }
+                }
+                other => out.push(other as char),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<f64> {
+        let start = self.pos;
+        while self
+            .bytes
+            .get(self.pos)
+            .map(|b| matches!(b, b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9'))
+            .unwrap_or(false)
+        {
+            self.pos += 1;
+        }
+        std::str::from_utf8(&self.bytes[start..self.pos])
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .with_context(|| format!("bad JSON number at byte {start}"))
+    }
+
+    fn literal(&mut self, word: &str) -> Result<()> {
+        let end = self.pos + word.len();
+        if self.bytes.get(self.pos..end) == Some(word.as_bytes()) {
+            self.pos = end;
+            Ok(())
+        } else {
+            bail!("bad JSON literal at byte {}", self.pos);
+        }
+    }
+
+    /// Parse one value, appending numeric leaves under `path` to `out`.
+    fn value(&mut self, path: &str, out: &mut Vec<(String, f64)>) -> Result<()> {
+        match self.peek()? {
+            b'{' => {
+                self.pos += 1;
+                if self.peek()? == b'}' {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                loop {
+                    let key = self.string()?;
+                    self.expect(b':')?;
+                    let sub = if path.is_empty() { key } else { format!("{path}.{key}") };
+                    self.value(&sub, out)?;
+                    match self.peek()? {
+                        b',' => self.pos += 1,
+                        b'}' => {
+                            self.pos += 1;
+                            return Ok(());
+                        }
+                        other => bail!("expected ',' or '}}' in object, found {:?}", other as char),
+                    }
+                }
+            }
+            b'[' => {
+                self.pos += 1;
+                if self.peek()? == b']' {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                let mut index = 0usize;
+                loop {
+                    self.value(&format!("{path}[{index}]"), out)?;
+                    index += 1;
+                    match self.peek()? {
+                        b',' => self.pos += 1,
+                        b']' => {
+                            self.pos += 1;
+                            return Ok(());
+                        }
+                        other => bail!("expected ',' or ']' in array, found {:?}", other as char),
+                    }
+                }
+            }
+            b'"' => {
+                self.string()?;
+                Ok(())
+            }
+            b't' => self.literal("true"),
+            b'f' => self.literal("false"),
+            b'n' => self.literal("null"),
+            _ => {
+                let v = self.number()?;
+                if v.is_finite() {
+                    out.push((path.to_string(), v));
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Flatten a JSON document into `(dotted.path, value)` numeric leaves.
+pub fn flatten_json(text: &str) -> Result<Vec<(String, f64)>> {
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    let mut out = Vec::new();
+    p.value("", &mut out)?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        bail!("trailing garbage after JSON document at byte {}", p.pos);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Gating
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Direction {
+    /// Latencies, wall times, overhead ratios: new > old is a regression.
+    LowerBetter,
+    /// Throughputs and speedups: new < old is a regression.
+    HigherBetter,
+}
+
+/// Classify a leaf by the final path segment. `None` means ungated
+/// (configuration knobs like `n`/`k`, accuracy numbers like `rmse` —
+/// tracked by their own test gates, not by run-to-run perf diffing).
+fn gate_class(path: &str) -> Option<Direction> {
+    let leaf = path.rsplit('.').next().unwrap_or(path);
+    let leaf = leaf.split('[').next().unwrap_or(leaf);
+    if leaf.ends_with("per_s") || leaf.contains("speedup") {
+        return Some(Direction::HigherBetter);
+    }
+    if leaf.contains("epsilon") {
+        return None; // gate slack constant, not a measurement
+    }
+    let lower = leaf.contains("p50")
+        || leaf.contains("p99")
+        || leaf.ends_with("_us")
+        || leaf.ends_with("_s")
+        || leaf.contains("s_per_")
+        || leaf.contains("_vs_");
+    lower.then_some(Direction::LowerBetter)
+}
+
+/// One gated leaf compared across the two records.
+#[derive(Debug, Clone)]
+pub struct DiffLine {
+    pub path: String,
+    pub old: f64,
+    pub new: f64,
+    /// Relative change in the *worse* direction: positive means the new
+    /// run is worse by this fraction, whatever the leaf's direction.
+    pub worse_frac: f64,
+}
+
+/// Outcome of comparing two bench records.
+#[derive(Debug, Clone)]
+pub struct DiffReport {
+    /// Gated leaves present in both records.
+    pub compared: usize,
+    /// Leaves worse than the gate, sorted worst-first.
+    pub regressions: Vec<DiffLine>,
+    /// All compared leaves, sorted worst-first (for the report body).
+    pub lines: Vec<DiffLine>,
+}
+
+/// Compare two bench JSON records; `gate_pct` is the allowed regression
+/// in percent (e.g. `10.0` fails anything >10% worse).
+pub fn compare(old_text: &str, new_text: &str, gate_pct: f64) -> Result<DiffReport> {
+    let old = flatten_json(old_text).context("parsing old bench record")?;
+    let new = flatten_json(new_text).context("parsing new bench record")?;
+    let mut lines = Vec::new();
+    for (path, old_v) in &old {
+        let Some(dir) = gate_class(path) else { continue };
+        let Some((_, new_v)) = new.iter().find(|(p, _)| p == path) else { continue };
+        if *old_v <= 0.0 || *new_v < 0.0 {
+            continue; // degenerate measurement; nothing meaningful to gate
+        }
+        let worse_frac = match dir {
+            Direction::LowerBetter => new_v / old_v - 1.0,
+            Direction::HigherBetter => old_v / new_v.max(f64::MIN_POSITIVE) - 1.0,
+        };
+        lines.push(DiffLine { path: path.clone(), old: *old_v, new: *new_v, worse_frac });
+    }
+    lines.sort_by(|a, b| b.worse_frac.total_cmp(&a.worse_frac));
+    let gate = gate_pct / 100.0;
+    let regressions: Vec<DiffLine> =
+        lines.iter().filter(|l| l.worse_frac > gate).cloned().collect();
+    Ok(DiffReport { compared: lines.len(), regressions, lines })
+}
+
+/// Human-readable report: every compared leaf with its relative change,
+/// regressions flagged.
+pub fn render(report: &DiffReport, gate_pct: f64) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "benchdiff: {} gated metrics compared, gate {gate_pct}%\n",
+        report.compared
+    ));
+    for l in &report.lines {
+        let flag = if l.worse_frac > gate_pct / 100.0 { "  << REGRESSION" } else { "" };
+        out.push_str(&format!(
+            "  {:<44} {:>12.6} -> {:>12.6}  {:>+7.1}%{flag}\n",
+            l.path,
+            l.old,
+            l.new,
+            l.worse_frac * 100.0
+        ));
+    }
+    if report.regressions.is_empty() {
+        out.push_str("no regressions past the gate\n");
+    } else {
+        out.push_str(&format!(
+            "{} metric(s) regressed past the {gate_pct}% gate\n",
+            report.regressions.len()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flatten_walks_nested_objects_and_arrays() {
+        let text = r#"{"n": 400, "modes": [{"mode": "off", "p99_us": 120.5},
+            {"mode": "always", "p99_us": 130.0}], "nested": {"deep": {"x_s": 1e-3}},
+            "skip": null, "flag": true, "name": "bench"}"#;
+        let flat = flatten_json(text).unwrap();
+        let get = |k: &str| flat.iter().find(|(p, _)| p == k).map(|(_, v)| *v);
+        assert_eq!(get("n"), Some(400.0));
+        assert_eq!(get("modes[0].p99_us"), Some(120.5));
+        assert_eq!(get("modes[1].p99_us"), Some(130.0));
+        assert_eq!(get("nested.deep.x_s"), Some(1e-3));
+        assert_eq!(flat.len(), 4, "only numeric leaves: {flat:?}");
+    }
+
+    #[test]
+    fn flatten_rejects_malformed_input() {
+        assert!(flatten_json("{").is_err());
+        assert!(flatten_json(r#"{"a": }"#).is_err());
+        assert!(flatten_json(r#"{"a": 1} trailing"#).is_err());
+    }
+
+    #[test]
+    fn classification_by_leaf_name() {
+        assert_eq!(gate_class("modes[1].p99_us"), Some(Direction::LowerBetter));
+        assert_eq!(gate_class("fit_s"), Some(Direction::LowerBetter));
+        assert_eq!(gate_class("observe_s_per_point"), Some(Direction::LowerBetter));
+        assert_eq!(gate_class("policies[0].overhead_vs_no_wal"), Some(Direction::LowerBetter));
+        assert_eq!(gate_class("m1.runs[0].rows_per_s"), Some(Direction::HigherBetter));
+        assert_eq!(gate_class("hyperopt.speedup"), Some(Direction::HigherBetter));
+        assert_eq!(gate_class("n"), None);
+        assert_eq!(gate_class("probe_rmse"), None);
+        assert_eq!(gate_class("epsilon_us"), None);
+    }
+
+    #[test]
+    fn injected_p99_regression_fails_the_gate() {
+        let old = r#"{"n": 200, "modes": [{"mode": "off", "p50_us": 80.0, "p99_us": 100.0}]}"#;
+        let new = r#"{"n": 200, "modes": [{"mode": "off", "p50_us": 80.0, "p99_us": 125.0}]}"#;
+        let report = compare(old, new, 10.0).unwrap();
+        assert_eq!(report.regressions.len(), 1, "{report:?}");
+        assert_eq!(report.regressions[0].path, "modes[0].p99_us");
+        assert!((report.regressions[0].worse_frac - 0.25).abs() < 1e-12);
+        // The same 25% jump passes a 30% gate.
+        assert!(compare(old, new, 30.0).unwrap().regressions.is_empty());
+    }
+
+    #[test]
+    fn throughput_drop_is_a_regression_and_gain_is_not() {
+        let old = r#"{"rows_per_s": 1000.0, "fit_s": 2.0}"#;
+        let drop = r#"{"rows_per_s": 700.0, "fit_s": 2.0}"#;
+        let gain = r#"{"rows_per_s": 1500.0, "fit_s": 1.0}"#;
+        assert_eq!(compare(old, drop, 10.0).unwrap().regressions.len(), 1);
+        assert!(compare(old, gain, 10.0).unwrap().regressions.is_empty());
+    }
+
+    #[test]
+    fn keys_missing_from_either_side_are_skipped() {
+        let old = r#"{"fit_s": 2.0, "gone_s": 1.0}"#;
+        let new = r#"{"fit_s": 2.0, "added_s": 9.0}"#;
+        let report = compare(old, new, 10.0).unwrap();
+        assert_eq!(report.compared, 1);
+        assert!(report.regressions.is_empty());
+    }
+
+    #[test]
+    fn render_flags_regressions() {
+        let old = r#"{"p99_us": 100.0}"#;
+        let new = r#"{"p99_us": 200.0}"#;
+        let report = compare(old, new, 10.0).unwrap();
+        let text = render(&report, 10.0);
+        assert!(text.contains("REGRESSION"), "{text}");
+        assert!(text.contains("p99_us"), "{text}");
+    }
+}

@@ -1,0 +1,1015 @@
+//! Fit-path telemetry: a structured recorder for everything that happens
+//! between "load the data" and "the model is ready".
+//!
+//! The serving stack got spans and metrics in the observability PR; this
+//! module covers the *training* side — the O(n³) hyperopt evaluations,
+//! per-cluster fits, streaming ingestion chunks, optimizer iterations
+//! and background refits that dominate total compute. A
+//! [`FitTelemetry`] recorder collects typed [`Event`]s in memory (one
+//! mutex push per event, timestamps taken only when a recorder is
+//! attached), dumps them as JSONL, and the `ckrig fitlog` subcommand
+//! replays a recording into a phase timeline and a hyperopt convergence
+//! table.
+//!
+//! Pipelines receive the recorder through a cloneable [`FitSink`] handle
+//! carried inside their config structs (`HyperOpt`, `StreamFitConfig`,
+//! `OptimizerConfig`) — there is no global state, so parallel fits and
+//! parallel tests cannot cross-contaminate. [`FitSink::for_cluster`]
+//! tags a handle with a cluster index so per-cluster workers write
+//! attributed events into the shared recorder.
+//!
+//! Phases recorded through a top-level sink (the CLI's `load-data` /
+//! `fit` / `predict` / `save`) are non-overlapping and together account
+//! for the run's wall time; phases recorded through a
+//! [nested](FitSink::nested) or cluster-tagged sink run *inside* (and
+//! possibly in parallel with) a top-level phase, so the renderer reports
+//! them separately and only sums top-level phases against the total.
+
+use crate::obs::log::json_escape;
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// One recorded fit-path event. Timestamps (`t_us`, `start_us`) are
+/// microseconds since the owning recorder's epoch ([`FitTelemetry::new`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A named span of fit work. `nested` phases run inside (possibly in
+    /// parallel with) a top-level phase and are excluded from the
+    /// wall-time accounting sum.
+    Phase { name: String, cluster: Option<usize>, nested: bool, start_us: u64, dur_us: u64 },
+    /// One objective evaluation inside the hyper-parameter search:
+    /// decoded kernel parameters, the resulting negative log-likelihood
+    /// (`None` when the Cholesky failed), whether this eval improved the
+    /// restart's incumbent, and its wall time.
+    HyperoptEval {
+        cluster: Option<usize>,
+        restart: usize,
+        eval: usize,
+        theta: Vec<f64>,
+        nugget: f64,
+        nll: Option<f64>,
+        accepted: bool,
+        wall_us: u64,
+        t_us: u64,
+    },
+    /// One ingested chunk of a streaming fit (`pass` 1 = moments +
+    /// reservoir, `pass` 2 = residual routing), with the memory meter's
+    /// current and high-water readings after the chunk.
+    Chunk {
+        pass: u8,
+        index: usize,
+        rows: usize,
+        wall_us: u64,
+        resident_bytes: usize,
+        peak_bytes: usize,
+        t_us: u64,
+    },
+    /// One `tell` into the Bayesian-optimization driver: the observed
+    /// value, the incumbent after this observation, and the acquisition
+    /// score the proposal carried when it was suggested (`None` for
+    /// design-phase or user-supplied points).
+    OptIter { eval: u64, y: f64, best: f64, acq: Option<f64>, t_us: u64 },
+    /// Free-form key/value annotation (worker budgets, drop reasons).
+    Note { key: String, value: String, cluster: Option<usize>, t_us: u64 },
+    /// Recording footer: run label and total wall time at dump.
+    Meta { label: String, total_us: u64 },
+}
+
+/// In-memory recorder for fit-path [`Event`]s.
+#[derive(Debug)]
+pub struct FitTelemetry {
+    epoch: Instant,
+    events: Mutex<Vec<Event>>,
+    progress: bool,
+}
+
+impl FitTelemetry {
+    pub fn new() -> Self {
+        Self::with_progress(false)
+    }
+
+    /// A recorder that additionally echoes coarse progress lines to
+    /// stderr while recording — only when stderr is a terminal, so
+    /// redirected runs stay clean.
+    pub fn with_progress(progress: bool) -> Self {
+        use std::io::IsTerminal;
+        let progress = progress && std::io::stderr().is_terminal();
+        Self { epoch: Instant::now(), events: Mutex::new(Vec::new()), progress }
+    }
+
+    /// Microseconds since this recorder was created.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    pub fn record(&self, ev: Event) {
+        if self.progress {
+            if let Some(line) = progress_line(&ev) {
+                eprintln!("{line}");
+            }
+        }
+        if let Ok(mut evs) = self.events.lock() {
+            evs.push(ev);
+        }
+    }
+
+    /// Append the [`Event::Meta`] footer (label + total wall time).
+    pub fn finish(&self, label: &str) {
+        let total_us = self.now_us();
+        self.record(Event::Meta { label: label.to_string(), total_us });
+    }
+
+    /// Snapshot of everything recorded so far, in record order.
+    pub fn events(&self) -> Vec<Event> {
+        match self.events.lock() {
+            Ok(e) => e.clone(),
+            Err(_) => Vec::new(),
+        }
+    }
+
+    /// Serialize the recording as JSONL (one event per line).
+    pub fn dump_jsonl(&self, w: &mut dyn Write) -> std::io::Result<()> {
+        for ev in self.events() {
+            writeln!(w, "{}", event_to_json(&ev))?;
+        }
+        Ok(())
+    }
+
+    /// [`Self::dump_jsonl`] to a file path; returns the event count.
+    pub fn dump_to_path(&self, path: impl AsRef<Path>) -> Result<usize> {
+        let path = path.as_ref();
+        let n = self.events().len();
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("creating telemetry file {}", path.display()))?,
+        );
+        self.dump_jsonl(&mut f)
+            .with_context(|| format!("writing telemetry to {}", path.display()))?;
+        Ok(n)
+    }
+}
+
+/// One-line human echo of an event for `--progress` mode; `None` for
+/// event kinds too chatty to echo per record.
+fn progress_line(ev: &Event) -> Option<String> {
+    match ev {
+        Event::Phase { name, cluster, start_us, dur_us, .. } => {
+            let tag = cluster.map(|c| format!(" [c{c}]")).unwrap_or_default();
+            Some(format!(
+                "[{:>9.3}s] phase {name}{tag} done in {:.3}s",
+                (*start_us + *dur_us) as f64 / 1e6,
+                *dur_us as f64 / 1e6,
+            ))
+        }
+        Event::HyperoptEval { cluster, restart, eval, nll, accepted: true, t_us, .. } => {
+            let tag = cluster.map(|c| format!("c{c} ")).unwrap_or_default();
+            Some(format!(
+                "[{:>9.3}s] hyperopt {tag}r{restart} e{eval} nll {}",
+                *t_us as f64 / 1e6,
+                nll.map(|v| format!("{v:.4}")).unwrap_or_else(|| "—".into()),
+            ))
+        }
+        Event::HyperoptEval { .. } => None,
+        Event::Chunk { pass, index, rows, wall_us, peak_bytes, t_us, .. } => Some(format!(
+            "[{:>9.3}s] pass{pass} chunk {index}: {rows} rows in {:.1}ms (peak {:.1} MB)",
+            *t_us as f64 / 1e6,
+            *wall_us as f64 / 1e3,
+            *peak_bytes as f64 / (1u64 << 20) as f64,
+        )),
+        Event::OptIter { eval, y, best, t_us, .. } => Some(format!(
+            "[{:>9.3}s] tell #{eval}: y {y:.6}, best {best:.6}",
+            *t_us as f64 / 1e6,
+        )),
+        Event::Note { .. } | Event::Meta { .. } => None,
+    }
+}
+
+/// Cloneable handle through which pipelines write into a shared
+/// [`FitTelemetry`]. Carried inside fit config structs as
+/// `Option<FitSink>`; `None` (the default everywhere) means "record
+/// nothing, skip the clocks".
+#[derive(Debug, Clone)]
+pub struct FitSink {
+    rec: Arc<FitTelemetry>,
+    cluster: Option<usize>,
+    nested: bool,
+}
+
+impl FitSink {
+    /// A top-level handle: its phases are the ones summed against total
+    /// wall time by the renderer.
+    pub fn new(rec: Arc<FitTelemetry>) -> Self {
+        Self { rec, cluster: None, nested: false }
+    }
+
+    /// A handle whose phases are marked as running inside a top-level
+    /// phase (hand this to sub-pipelines like the streaming driver).
+    pub fn nested(&self) -> Self {
+        Self { rec: Arc::clone(&self.rec), cluster: self.cluster, nested: true }
+    }
+
+    /// A nested handle tagged with a cluster index — per-cluster fit
+    /// workers record attributed events through this.
+    pub fn for_cluster(&self, cluster: usize) -> Self {
+        Self { rec: Arc::clone(&self.rec), cluster: Some(cluster), nested: true }
+    }
+
+    /// The shared recorder (for dumping after the pipelines return).
+    pub fn recorder(&self) -> &Arc<FitTelemetry> {
+        &self.rec
+    }
+
+    /// Microseconds since the recorder epoch.
+    pub fn now_us(&self) -> u64 {
+        self.rec.now_us()
+    }
+
+    /// Open a named phase; the span is recorded when the guard drops.
+    pub fn phase(&self, name: &str) -> PhaseGuard {
+        PhaseGuard {
+            rec: Arc::clone(&self.rec),
+            name: name.to_string(),
+            cluster: self.cluster,
+            nested: self.nested,
+            start_us: self.rec.now_us(),
+        }
+    }
+
+    pub fn hyperopt_eval(
+        &self,
+        restart: usize,
+        eval: usize,
+        theta: &[f64],
+        nugget: f64,
+        nll: Option<f64>,
+        accepted: bool,
+        wall_us: u64,
+    ) {
+        self.rec.record(Event::HyperoptEval {
+            cluster: self.cluster,
+            restart,
+            eval,
+            theta: theta.to_vec(),
+            nugget,
+            nll,
+            accepted,
+            wall_us,
+            t_us: self.rec.now_us(),
+        });
+    }
+
+    pub fn chunk(
+        &self,
+        pass: u8,
+        index: usize,
+        rows: usize,
+        wall_us: u64,
+        resident_bytes: usize,
+        peak_bytes: usize,
+    ) {
+        self.rec.record(Event::Chunk {
+            pass,
+            index,
+            rows,
+            wall_us,
+            resident_bytes,
+            peak_bytes,
+            t_us: self.rec.now_us(),
+        });
+    }
+
+    pub fn opt_iter(&self, eval: u64, y: f64, best: f64, acq: Option<f64>) {
+        self.rec.record(Event::OptIter { eval, y, best, acq, t_us: self.rec.now_us() });
+    }
+
+    pub fn note(&self, key: &str, value: &str) {
+        self.rec.record(Event::Note {
+            key: key.to_string(),
+            value: value.to_string(),
+            cluster: self.cluster,
+            t_us: self.rec.now_us(),
+        });
+    }
+}
+
+/// RAII span for a fit phase (see [`FitSink::phase`]).
+#[derive(Debug)]
+pub struct PhaseGuard {
+    rec: Arc<FitTelemetry>,
+    name: String,
+    cluster: Option<usize>,
+    nested: bool,
+    start_us: u64,
+}
+
+impl Drop for PhaseGuard {
+    fn drop(&mut self) {
+        let dur_us = self.rec.now_us().saturating_sub(self.start_us);
+        self.rec.record(Event::Phase {
+            name: std::mem::take(&mut self.name),
+            cluster: self.cluster,
+            nested: self.nested,
+            start_us: self.start_us,
+            dur_us,
+        });
+    }
+}
+
+// ---------------------------------------------------------------------
+// JSONL encoding / decoding
+// ---------------------------------------------------------------------
+
+/// JSON has no representation for non-finite numbers; encode them as
+/// `null` and decode `null` back to `None`/`NaN`-free options.
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn json_opt_f64(v: Option<f64>) -> String {
+    match v {
+        Some(x) => json_f64(x),
+        None => "null".to_string(),
+    }
+}
+
+fn json_opt_usize(v: Option<usize>) -> String {
+    match v {
+        Some(x) => format!("{x}"),
+        None => "null".to_string(),
+    }
+}
+
+/// One event as a single-line JSON object.
+pub fn event_to_json(ev: &Event) -> String {
+    match ev {
+        Event::Phase { name, cluster, nested, start_us, dur_us } => format!(
+            r#"{{"ev":"phase","name":"{}","cluster":{},"nested":{},"start_us":{},"dur_us":{}}}"#,
+            json_escape(name),
+            json_opt_usize(*cluster),
+            nested,
+            start_us,
+            dur_us,
+        ),
+        Event::HyperoptEval {
+            cluster,
+            restart,
+            eval,
+            theta,
+            nugget,
+            nll,
+            accepted,
+            wall_us,
+            t_us,
+        } => {
+            let theta: Vec<String> = theta.iter().map(|&t| json_f64(t)).collect();
+            format!(
+                r#"{{"ev":"hyperopt_eval","cluster":{},"restart":{},"eval":{},"theta":[{}],"nugget":{},"nll":{},"accepted":{},"wall_us":{},"t_us":{}}}"#,
+                json_opt_usize(*cluster),
+                restart,
+                eval,
+                theta.join(","),
+                json_f64(*nugget),
+                json_opt_f64(*nll),
+                accepted,
+                wall_us,
+                t_us,
+            )
+        }
+        Event::Chunk { pass, index, rows, wall_us, resident_bytes, peak_bytes, t_us } => format!(
+            r#"{{"ev":"chunk","pass":{},"index":{},"rows":{},"wall_us":{},"resident_bytes":{},"peak_bytes":{},"t_us":{}}}"#,
+            pass, index, rows, wall_us, resident_bytes, peak_bytes, t_us,
+        ),
+        Event::OptIter { eval, y, best, acq, t_us } => format!(
+            r#"{{"ev":"opt_iter","eval":{},"y":{},"best":{},"acq":{},"t_us":{}}}"#,
+            eval,
+            json_f64(*y),
+            json_f64(*best),
+            json_opt_f64(*acq),
+            t_us,
+        ),
+        Event::Note { key, value, cluster, t_us } => format!(
+            r#"{{"ev":"note","key":"{}","value":"{}","cluster":{},"t_us":{}}}"#,
+            json_escape(key),
+            json_escape(value),
+            json_opt_usize(*cluster),
+            t_us,
+        ),
+        Event::Meta { label, total_us } => format!(
+            r#"{{"ev":"meta","label":"{}","total_us":{}}}"#,
+            json_escape(label),
+            total_us,
+        ),
+    }
+}
+
+// -- field scanners -----------------------------------------------------
+//
+// We only ever parse lines this module wrote, so a field scanner over
+// the flat single-line objects is enough — no general JSON tree needed
+// (the bench-diff tool has one; see `obs::benchdiff`).
+
+/// The raw text of `"key": <value>` inside a single-line JSON object,
+/// exclusive of the trailing `,` / `}`. String values keep their quotes.
+fn raw_field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let at = line.find(&pat)? + pat.len();
+    let rest = &line[at..];
+    let bytes = rest.as_bytes();
+    let mut i = 0;
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut escaped = false;
+    while i < bytes.len() {
+        let b = bytes[i];
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if b == b'\\' {
+                escaped = true;
+            } else if b == b'"' {
+                in_str = false;
+            }
+        } else {
+            match b {
+                b'"' => in_str = true,
+                b'[' | b'{' => depth += 1,
+                b']' | b'}' if depth > 0 => depth -= 1,
+                b',' | b'}' if depth == 0 => break,
+                _ => {}
+            }
+        }
+        i += 1;
+    }
+    Some(rest[..i].trim())
+}
+
+fn num_field(line: &str, key: &str) -> Option<f64> {
+    raw_field(line, key)?.parse().ok()
+}
+
+fn u64_field(line: &str, key: &str) -> Option<u64> {
+    raw_field(line, key)?.parse().ok()
+}
+
+fn usize_field(line: &str, key: &str) -> Option<usize> {
+    raw_field(line, key)?.parse().ok()
+}
+
+fn bool_field(line: &str, key: &str) -> Option<bool> {
+    raw_field(line, key)?.parse().ok()
+}
+
+fn opt_usize_field(line: &str, key: &str) -> Option<usize> {
+    match raw_field(line, key) {
+        Some("null") | None => None,
+        Some(raw) => raw.parse().ok(),
+    }
+}
+
+fn opt_num_field(line: &str, key: &str) -> Option<f64> {
+    match raw_field(line, key) {
+        Some("null") | None => None,
+        Some(raw) => raw.parse().ok(),
+    }
+}
+
+fn str_field(line: &str, key: &str) -> Option<String> {
+    let raw = raw_field(line, key)?;
+    let inner = raw.strip_prefix('"')?.strip_suffix('"')?;
+    let mut out = String::with_capacity(inner.len());
+    let mut chars = inner.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('r') => out.push('\r'),
+            Some('t') => out.push('\t'),
+            Some('u') => {
+                let hex: String = chars.by_ref().take(4).collect();
+                if let Some(c) = u32::from_str_radix(&hex, 16).ok().and_then(char::from_u32) {
+                    out.push(c);
+                }
+            }
+            Some(other) => out.push(other),
+            None => {}
+        }
+    }
+    Some(out)
+}
+
+fn vec_field(line: &str, key: &str) -> Option<Vec<f64>> {
+    let raw = raw_field(line, key)?;
+    let inner = raw.strip_prefix('[')?.strip_suffix(']')?.trim();
+    if inner.is_empty() {
+        return Some(Vec::new());
+    }
+    inner.split(',').map(|t| t.trim().parse().ok()).collect()
+}
+
+/// Decode one JSONL line back into an [`Event`].
+pub fn event_from_json(line: &str) -> Result<Event> {
+    let miss = |k: &str| anyhow::anyhow!("telemetry line missing {k:?}: {line}");
+    match str_field(line, "ev").as_deref() {
+        Some("phase") => Ok(Event::Phase {
+            name: str_field(line, "name").ok_or_else(|| miss("name"))?,
+            cluster: opt_usize_field(line, "cluster"),
+            nested: bool_field(line, "nested").unwrap_or(false),
+            start_us: u64_field(line, "start_us").ok_or_else(|| miss("start_us"))?,
+            dur_us: u64_field(line, "dur_us").ok_or_else(|| miss("dur_us"))?,
+        }),
+        Some("hyperopt_eval") => Ok(Event::HyperoptEval {
+            cluster: opt_usize_field(line, "cluster"),
+            restart: usize_field(line, "restart").ok_or_else(|| miss("restart"))?,
+            eval: usize_field(line, "eval").ok_or_else(|| miss("eval"))?,
+            theta: vec_field(line, "theta").ok_or_else(|| miss("theta"))?,
+            nugget: num_field(line, "nugget").unwrap_or(f64::NAN),
+            nll: opt_num_field(line, "nll"),
+            accepted: bool_field(line, "accepted").unwrap_or(false),
+            wall_us: u64_field(line, "wall_us").unwrap_or(0),
+            t_us: u64_field(line, "t_us").unwrap_or(0),
+        }),
+        Some("chunk") => Ok(Event::Chunk {
+            pass: u64_field(line, "pass").ok_or_else(|| miss("pass"))? as u8,
+            index: usize_field(line, "index").ok_or_else(|| miss("index"))?,
+            rows: usize_field(line, "rows").ok_or_else(|| miss("rows"))?,
+            wall_us: u64_field(line, "wall_us").unwrap_or(0),
+            resident_bytes: usize_field(line, "resident_bytes").unwrap_or(0),
+            peak_bytes: usize_field(line, "peak_bytes").unwrap_or(0),
+            t_us: u64_field(line, "t_us").unwrap_or(0),
+        }),
+        Some("opt_iter") => Ok(Event::OptIter {
+            eval: u64_field(line, "eval").ok_or_else(|| miss("eval"))?,
+            y: num_field(line, "y").unwrap_or(f64::NAN),
+            best: num_field(line, "best").unwrap_or(f64::NAN),
+            acq: opt_num_field(line, "acq"),
+            t_us: u64_field(line, "t_us").unwrap_or(0),
+        }),
+        Some("note") => Ok(Event::Note {
+            key: str_field(line, "key").ok_or_else(|| miss("key"))?,
+            value: str_field(line, "value").unwrap_or_default(),
+            cluster: opt_usize_field(line, "cluster"),
+            t_us: u64_field(line, "t_us").unwrap_or(0),
+        }),
+        Some("meta") => Ok(Event::Meta {
+            label: str_field(line, "label").ok_or_else(|| miss("label"))?,
+            total_us: u64_field(line, "total_us").ok_or_else(|| miss("total_us"))?,
+        }),
+        Some(other) => bail!("unknown telemetry event kind {other:?}"),
+        None => bail!("telemetry line has no \"ev\" field: {line}"),
+    }
+}
+
+/// Parse a whole JSONL recording (blank lines skipped).
+pub fn parse_jsonl(text: &str) -> Result<Vec<Event>> {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty())
+        .map(event_from_json)
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Accounting + rendering
+// ---------------------------------------------------------------------
+
+/// Sum of top-level (non-nested) phase durations — the quantity the
+/// acceptance gate compares against [`total_us`].
+pub fn top_level_phase_sum_us(events: &[Event]) -> u64 {
+    events
+        .iter()
+        .filter_map(|e| match e {
+            Event::Phase { nested: false, dur_us, .. } => Some(*dur_us),
+            _ => None,
+        })
+        .sum()
+}
+
+/// Total recorded wall time from the [`Event::Meta`] footer.
+pub fn total_us(events: &[Event]) -> Option<u64> {
+    events.iter().rev().find_map(|e| match e {
+        Event::Meta { total_us, .. } => Some(*total_us),
+        _ => None,
+    })
+}
+
+fn fmt_s(us: u64) -> String {
+    format!("{:.3}s", us as f64 / 1e6)
+}
+
+fn cluster_tag(c: Option<usize>) -> String {
+    match c {
+        Some(c) => format!("c{c}"),
+        None => "-".to_string(),
+    }
+}
+
+/// Replay a recording into the human-readable report behind
+/// `ckrig fitlog`: run header, phase timeline, ingestion summary,
+/// hyperopt convergence table, and optimizer iterations.
+pub fn render(events: &[Event]) -> String {
+    let mut out = String::new();
+    let label = events
+        .iter()
+        .rev()
+        .find_map(|e| match e {
+            Event::Meta { label, .. } => Some(label.clone()),
+            _ => None,
+        })
+        .unwrap_or_else(|| "(unlabeled)".to_string());
+    let total = total_us(events);
+    out.push_str(&format!("fit telemetry: {label}\n"));
+    match total {
+        Some(t) => out.push_str(&format!(
+            "total wall: {}   events: {}\n",
+            fmt_s(t),
+            events.len()
+        )),
+        None => out.push_str(&format!(
+            "total wall: (no meta footer)   events: {}\n",
+            events.len()
+        )),
+    }
+
+    // -- phase timeline (top-level), then nested/cluster phases.
+    let mut top: Vec<(&str, u64, u64)> = Vec::new();
+    let mut nested: Vec<(String, Option<usize>, u64)> = Vec::new();
+    for e in events {
+        if let Event::Phase { name, cluster, nested: n, start_us, dur_us } = e {
+            if *n {
+                nested.push((name.clone(), *cluster, *dur_us));
+            } else {
+                top.push((name, *start_us, *dur_us));
+            }
+        }
+    }
+    if !top.is_empty() {
+        top.sort_by_key(|&(_, start, _)| start);
+        out.push_str("\nphase timeline\n");
+        out.push_str(&format!("  {:<14} {:>10} {:>10} {:>8}\n", "phase", "start", "dur", "share"));
+        for (name, start, dur) in &top {
+            let share = total
+                .filter(|&t| t > 0)
+                .map(|t| format!("{:.1}%", 100.0 * *dur as f64 / t as f64))
+                .unwrap_or_else(|| "-".to_string());
+            out.push_str(&format!(
+                "  {:<14} {:>10} {:>10} {:>8}\n",
+                name,
+                fmt_s(*start),
+                fmt_s(*dur),
+                share
+            ));
+        }
+        let sum = top_level_phase_sum_us(events);
+        match total.filter(|&t| t > 0) {
+            Some(t) => out.push_str(&format!(
+                "  phase sum {} = {:.1}% of total wall\n",
+                fmt_s(sum),
+                100.0 * sum as f64 / t as f64
+            )),
+            None => out.push_str(&format!("  phase sum {}\n", fmt_s(sum))),
+        }
+    }
+    if !nested.is_empty() {
+        // Aggregate nested phases by (name, cluster): many chunk-sized
+        // spans collapse into one line each.
+        let mut agg: Vec<(String, Option<usize>, u64, usize)> = Vec::new();
+        for (name, cluster, dur) in nested {
+            match agg.iter_mut().find(|(n, c, _, _)| *n == name && *c == cluster) {
+                Some(slot) => {
+                    slot.2 += dur;
+                    slot.3 += 1;
+                }
+                None => agg.push((name, cluster, dur, 1)),
+            }
+        }
+        agg.sort_by(|a, b| (a.1, &a.0).cmp(&(b.1, &b.0)));
+        out.push_str("\nnested phases (inside the timeline above; clusters fit in parallel)\n");
+        for (name, cluster, dur, count) in agg {
+            out.push_str(&format!(
+                "  [{:>3}] {:<14} {:>10}  ({} span{})\n",
+                cluster_tag(cluster),
+                name,
+                fmt_s(dur),
+                count,
+                if count == 1 { "" } else { "s" }
+            ));
+        }
+    }
+
+    // -- streaming ingestion.
+    let chunks: Vec<(u8, usize, u64, usize)> = events
+        .iter()
+        .filter_map(|e| match e {
+            Event::Chunk { pass, rows, wall_us, peak_bytes, .. } => {
+                Some((*pass, *rows, *wall_us, *peak_bytes))
+            }
+            _ => None,
+        })
+        .collect();
+    if !chunks.is_empty() {
+        out.push_str("\ningestion\n");
+        for pass in [1u8, 2] {
+            let in_pass: Vec<_> = chunks.iter().filter(|c| c.0 == pass).collect();
+            if in_pass.is_empty() {
+                continue;
+            }
+            let rows: usize = in_pass.iter().map(|c| c.1).sum();
+            let wall_us: u64 = in_pass.iter().map(|c| c.2).sum();
+            let peak = in_pass.iter().map(|c| c.3).max().unwrap_or(0);
+            let rate = if wall_us > 0 { rows as f64 / (wall_us as f64 / 1e6) } else { 0.0 };
+            out.push_str(&format!(
+                "  pass {pass}: {} chunks, {rows} rows in {} ({rate:.0} rows/s), peak {:.1} MB\n",
+                in_pass.len(),
+                fmt_s(wall_us),
+                peak as f64 / (1u64 << 20) as f64,
+            ));
+        }
+    }
+
+    // -- hyperopt convergence, one row per eval grouped by cluster.
+    let evals: Vec<&Event> = events
+        .iter()
+        .filter(|e| matches!(e, Event::HyperoptEval { .. }))
+        .collect();
+    if !evals.is_empty() {
+        let mut clusters: Vec<Option<usize>> = evals
+            .iter()
+            .filter_map(|e| match e {
+                Event::HyperoptEval { cluster, .. } => Some(*cluster),
+                _ => None,
+            })
+            .collect();
+        clusters.sort();
+        clusters.dedup();
+        out.push_str("\nhyperopt convergence\n");
+        out.push_str(&format!(
+            "  {:<8} {:>8} {:>8} {:>12} {:>10}  {}\n",
+            "cluster", "evals", "accepts", "best nll", "wall", "best theta"
+        ));
+        for c in clusters {
+            let mut n = 0usize;
+            let mut accepts = 0usize;
+            let mut wall = 0u64;
+            let mut best: Option<(f64, Vec<f64>)> = None;
+            for e in &evals {
+                if let Event::HyperoptEval { cluster, theta, nll, accepted, wall_us, .. } = e {
+                    if *cluster != c {
+                        continue;
+                    }
+                    n += 1;
+                    wall += wall_us;
+                    if *accepted {
+                        accepts += 1;
+                    }
+                    if let Some(v) = nll {
+                        if best.as_ref().map(|(b, _)| v < b).unwrap_or(true) {
+                            best = Some((*v, theta.clone()));
+                        }
+                    }
+                }
+            }
+            let (best_nll, best_theta) = match best {
+                Some((v, th)) => (
+                    format!("{v:.4}"),
+                    format!(
+                        "[{}]",
+                        th.iter().map(|t| format!("{t:.3}")).collect::<Vec<_>>().join(", ")
+                    ),
+                ),
+                None => ("-".to_string(), "-".to_string()),
+            };
+            out.push_str(&format!(
+                "  {:<8} {:>8} {:>8} {:>12} {:>10}  {}\n",
+                cluster_tag(c),
+                n,
+                accepts,
+                best_nll,
+                fmt_s(wall),
+                best_theta
+            ));
+        }
+        out.push_str(&format!("  {} evaluations total\n", evals.len()));
+    }
+
+    // -- optimizer iterations.
+    let iters: Vec<(u64, f64, f64, Option<f64>)> = events
+        .iter()
+        .filter_map(|e| match e {
+            Event::OptIter { eval, y, best, acq, .. } => Some((*eval, *y, *best, *acq)),
+            _ => None,
+        })
+        .collect();
+    if !iters.is_empty() {
+        out.push_str("\noptimizer iterations\n");
+        out.push_str(&format!("  {:>6} {:>14} {:>14} {:>12}\n", "eval", "y", "best", "acq"));
+        for (eval, y, best, acq) in &iters {
+            out.push_str(&format!(
+                "  {:>6} {:>14.6} {:>14.6} {:>12}\n",
+                eval,
+                y,
+                best,
+                acq.map(|a| format!("{a:.4}")).unwrap_or_else(|| "-".to_string())
+            ));
+        }
+    }
+
+    // -- notes.
+    let notes: Vec<(&str, &str, Option<usize>)> = events
+        .iter()
+        .filter_map(|e| match e {
+            Event::Note { key, value, cluster, .. } => {
+                Some((key.as_str(), value.as_str(), *cluster))
+            }
+            _ => None,
+        })
+        .collect();
+    if !notes.is_empty() {
+        out.push_str("\nnotes\n");
+        for (key, value, cluster) in notes {
+            out.push_str(&format!("  [{:>3}] {key}: {value}\n", cluster_tag(cluster)));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<Event> {
+        vec![
+            Event::Phase {
+                name: "load-data".into(),
+                cluster: None,
+                nested: false,
+                start_us: 0,
+                dur_us: 1_000,
+            },
+            Event::Phase {
+                name: "fit".into(),
+                cluster: None,
+                nested: false,
+                start_us: 1_000,
+                dur_us: 98_000,
+            },
+            Event::Phase {
+                name: "cluster-fit".into(),
+                cluster: Some(1),
+                nested: true,
+                start_us: 2_000,
+                dur_us: 40_000,
+            },
+            Event::HyperoptEval {
+                cluster: Some(1),
+                restart: 0,
+                eval: 0,
+                theta: vec![0.5, -1.25],
+                nugget: 1e-8,
+                nll: Some(-12.5),
+                accepted: true,
+                wall_us: 300,
+                t_us: 2_500,
+            },
+            Event::HyperoptEval {
+                cluster: Some(1),
+                restart: 0,
+                eval: 1,
+                theta: vec![0.75, -1.0],
+                nugget: 1e-8,
+                nll: None,
+                accepted: false,
+                wall_us: 120,
+                t_us: 2_700,
+            },
+            Event::Chunk {
+                pass: 1,
+                index: 0,
+                rows: 4096,
+                wall_us: 900,
+                resident_bytes: 1 << 20,
+                peak_bytes: 2 << 20,
+                t_us: 700,
+            },
+            Event::OptIter { eval: 3, y: 1.5, best: 0.25, acq: Some(0.01), t_us: 99_000 },
+            Event::OptIter { eval: 4, y: 9.0, best: 0.25, acq: None, t_us: 99_500 },
+            Event::Note {
+                key: "workers".into(),
+                value: "8 total, 2 per cluster".into(),
+                cluster: None,
+                t_us: 1_100,
+            },
+            Event::Meta { label: "fit mtck:8 \"quoted\"".into(), total_us: 100_000 },
+        ]
+    }
+
+    #[test]
+    fn jsonl_roundtrips_every_event_kind() {
+        let events = sample_events();
+        let text: String =
+            events.iter().map(|e| format!("{}\n", event_to_json(e))).collect();
+        let back = parse_jsonl(&text).unwrap();
+        assert_eq!(back, events);
+    }
+
+    #[test]
+    fn non_finite_numbers_encode_as_null() {
+        let ev = Event::HyperoptEval {
+            cluster: None,
+            restart: 0,
+            eval: 7,
+            theta: vec![0.0],
+            nugget: 1e-8,
+            nll: Some(f64::INFINITY),
+            accepted: false,
+            wall_us: 5,
+            t_us: 10,
+        };
+        let line = event_to_json(&ev);
+        assert!(line.contains("\"nll\":null"), "line: {line}");
+        match event_from_json(&line).unwrap() {
+            Event::HyperoptEval { nll, .. } => assert_eq!(nll, None),
+            other => panic!("decoded wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn recorder_phases_and_sums_account_for_wall_time() {
+        let rec = FitTelemetry::new();
+        {
+            let sink = FitSink::new(Arc::new(rec));
+            {
+                let _p = sink.phase("a");
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            {
+                let _p = sink.phase("b");
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            {
+                let _p = sink.nested().phase("inner");
+            }
+            sink.recorder().finish("test");
+            let events = sink.recorder().events();
+            let sum = top_level_phase_sum_us(&events);
+            let total = total_us(&events).unwrap();
+            assert!(sum > 0 && sum <= total, "sum {sum} vs total {total}");
+            // The nested phase must not contribute to the top-level sum.
+            let all: u64 = events
+                .iter()
+                .filter_map(|e| match e {
+                    Event::Phase { dur_us, .. } => Some(*dur_us),
+                    _ => None,
+                })
+                .sum();
+            assert!(all >= sum);
+        }
+    }
+
+    #[test]
+    fn cluster_sinks_tag_events() {
+        let sink = FitSink::new(Arc::new(FitTelemetry::new()));
+        sink.for_cluster(3).hyperopt_eval(0, 0, &[1.0], 1e-8, Some(0.5), true, 10);
+        sink.note("k", "v");
+        let events = sink.recorder().events();
+        assert!(matches!(events[0], Event::HyperoptEval { cluster: Some(3), .. }));
+        assert!(matches!(&events[1], Event::Note { cluster: None, .. }));
+    }
+
+    #[test]
+    fn render_reports_timeline_and_convergence() {
+        let text = render(&sample_events());
+        assert!(text.contains("phase timeline"), "{text}");
+        assert!(text.contains("hyperopt convergence"), "{text}");
+        assert!(text.contains("load-data"), "{text}");
+        assert!(text.contains("ingestion"), "{text}");
+        assert!(text.contains("optimizer iterations"), "{text}");
+        assert!(text.contains("c1"), "{text}");
+        assert!(text.contains("fit mtck:8"), "{text}");
+        // 99% of the 100ms total is covered by top-level phases.
+        assert!(text.contains("99.0% of total wall"), "{text}");
+    }
+
+    #[test]
+    fn render_handles_empty_and_footerless_recordings() {
+        assert!(render(&[]).contains("no meta footer"));
+        let only_phase = [Event::Phase {
+            name: "fit".into(),
+            cluster: None,
+            nested: false,
+            start_us: 0,
+            dur_us: 10,
+        }];
+        let text = render(&only_phase);
+        assert!(text.contains("phase timeline"), "{text}");
+    }
+}

@@ -1,0 +1,197 @@
+//! Structured, leveled, JSONL-emitting event log for the whole binary.
+//!
+//! This is the fit-side counterpart of the serving-side tracer: every
+//! diagnostic that used to be an ad-hoc `eprintln!` goes through the
+//! standard `log` facade and lands here, formatted as one JSON object
+//! per line on stderr so it is both human-skimmable and greppable
+//! (`jq 'select(.level=="warn")'`).
+//!
+//! Behavior is controlled by two environment variables:
+//!
+//! * `CKRIG_LOG` — `off` | `error` | `warn` | `info` | `debug`
+//!   (default `info`; falls back to `RUST_LOG` when unset so existing
+//!   habits keep working). `off` sets the facade's max level to
+//!   [`LevelFilter::Off`], which turns every `log::…!` call site into a
+//!   single branch on an atomic — zero allocation, zero formatting.
+//! * `CKRIG_LOG_FILE` — when set, every emitted line is also appended
+//!   to this file (best-effort; failures fall back to stderr only).
+//!
+//! The logger additionally keeps the last [`RING_CAPACITY`] formatted
+//! lines in an in-process ring buffer ([`recent`]) so a crash handler or
+//! an op endpoint can dump recent context without re-reading stderr.
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::Write;
+use std::sync::{Mutex, OnceLock};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Lines retained by the in-process ring buffer.
+pub const RING_CAPACITY: usize = 256;
+
+struct JsonLogger {
+    ring: Mutex<VecDeque<String>>,
+    file: Option<Mutex<File>>,
+}
+
+static LOGGER: OnceLock<&'static JsonLogger> = OnceLock::new();
+
+/// Parse a `CKRIG_LOG`-style level word (case-insensitive). Unknown
+/// words fall back to the default (`info`) rather than erroring: a typo
+/// in an env var should never take the process down.
+pub fn parse_level(s: &str) -> ::log::LevelFilter {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "off" | "none" | "0" => ::log::LevelFilter::Off,
+        "error" => ::log::LevelFilter::Error,
+        "warn" | "warning" => ::log::LevelFilter::Warn,
+        "debug" => ::log::LevelFilter::Debug,
+        "trace" => ::log::LevelFilter::Trace,
+        _ => ::log::LevelFilter::Info,
+    }
+}
+
+fn env_level() -> ::log::LevelFilter {
+    match std::env::var("CKRIG_LOG").or_else(|_| std::env::var("RUST_LOG")) {
+        Ok(v) => parse_level(&v),
+        Err(_) => ::log::LevelFilter::Info,
+    }
+}
+
+/// Install the JSONL logger as the `log` facade backend. Idempotent:
+/// callers sprinkle this at every entry point (binary main, bench mains,
+/// integration tests) and the first one wins. When `CKRIG_LOG=off` the
+/// facade max level is `Off`, so disabled call sites cost one atomic
+/// load and allocate nothing.
+pub fn init() {
+    let logger = LOGGER.get_or_init(|| {
+        let file = std::env::var("CKRIG_LOG_FILE").ok().and_then(|path| {
+            std::fs::OpenOptions::new().create(true).append(true).open(path).ok()
+        });
+        Box::leak(Box::new(JsonLogger {
+            ring: Mutex::new(VecDeque::with_capacity(RING_CAPACITY)),
+            file: file.map(Mutex::new),
+        }))
+    });
+    // A second init() (or a foreign logger installed first) is fine —
+    // the facade keeps whichever backend won.
+    let _ = ::log::set_logger(*logger);
+    ::log::set_max_level(env_level());
+}
+
+/// The last up-to-[`RING_CAPACITY`] emitted lines, oldest first. Empty
+/// until [`init`] has run and something logged.
+pub fn recent() -> Vec<String> {
+    match LOGGER.get() {
+        Some(l) => l.ring.lock().map(|r| r.iter().cloned().collect()).unwrap_or_default(),
+        None => Vec::new(),
+    }
+}
+
+/// Escape a string for inclusion inside a JSON string literal.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render one record as a JSONL line (no trailing newline).
+fn format_line(level: ::log::Level, target: &str, msg: &str) -> String {
+    let ts_us = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0);
+    format!(
+        r#"{{"ts_us":{ts_us},"level":"{}","target":"{}","msg":"{}"}}"#,
+        level.as_str().to_ascii_lowercase(),
+        json_escape(target),
+        json_escape(msg),
+    )
+}
+
+impl ::log::Log for JsonLogger {
+    fn enabled(&self, metadata: &::log::Metadata<'_>) -> bool {
+        metadata.level() <= ::log::max_level()
+    }
+
+    fn log(&self, record: &::log::Record<'_>) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let line = format_line(record.level(), record.target(), &record.args().to_string());
+        {
+            let mut err = std::io::stderr().lock();
+            let _ = writeln!(err, "{line}");
+        }
+        if let Some(f) = &self.file {
+            if let Ok(mut f) = f.lock() {
+                let _ = writeln!(f, "{line}");
+            }
+        }
+        if let Ok(mut ring) = self.ring.lock() {
+            if ring.len() == RING_CAPACITY {
+                ring.pop_front();
+            }
+            ring.push_back(line);
+        }
+    }
+
+    fn flush(&self) {
+        let _ = std::io::stderr().flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_words_parse_and_unknowns_default_to_info() {
+        assert_eq!(parse_level("off"), ::log::LevelFilter::Off);
+        assert_eq!(parse_level("OFF"), ::log::LevelFilter::Off);
+        assert_eq!(parse_level("error"), ::log::LevelFilter::Error);
+        assert_eq!(parse_level("Warn"), ::log::LevelFilter::Warn);
+        assert_eq!(parse_level("info"), ::log::LevelFilter::Info);
+        assert_eq!(parse_level("debug"), ::log::LevelFilter::Debug);
+        assert_eq!(parse_level("bogus"), ::log::LevelFilter::Info);
+        assert_eq!(parse_level(""), ::log::LevelFilter::Info);
+    }
+
+    #[test]
+    fn escape_covers_quotes_backslashes_and_control_bytes() {
+        assert_eq!(json_escape("plain"), "plain");
+        assert_eq!(json_escape(r#"a"b"#), r#"a\"b"#);
+        assert_eq!(json_escape(r"a\b"), r"a\\b");
+        assert_eq!(json_escape("a\nb\tc"), r"a\nb\tc");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn formatted_line_is_one_json_object() {
+        let line = format_line(::log::Level::Warn, "ckrig::stream", "chunk 3 \"slow\"");
+        assert!(line.starts_with("{\"ts_us\":"), "line: {line}");
+        assert!(line.ends_with('}'), "line: {line}");
+        assert!(line.contains(r#""level":"warn""#), "line: {line}");
+        assert!(line.contains(r#""target":"ckrig::stream""#), "line: {line}");
+        assert!(line.contains(r#"chunk 3 \"slow\""#), "line: {line}");
+        assert!(!line.contains('\n'));
+    }
+
+    #[test]
+    fn init_is_idempotent_and_recent_is_safe() {
+        init();
+        init();
+        // Whatever other tests logged, the ring must answer without
+        // panicking and stay bounded.
+        assert!(recent().len() <= RING_CAPACITY);
+    }
+}

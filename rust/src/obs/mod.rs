@@ -23,13 +23,29 @@
 //!   posterior *before* absorbing it, feeding rolling z² calibration,
 //!   90/95/99% interval coverage vs nominal, and windowed RMSE per
 //!   model slot.
+//! * [`log`] — the structured, leveled JSONL event log behind the
+//!   standard `log` facade (`CKRIG_LOG` env filter, optional file sink,
+//!   in-process ring buffer); every diagnostic that used to be an
+//!   ad-hoc `eprintln!` goes through it.
+//! * [`fitlog`] — fit-path telemetry: per-eval hyperopt traces,
+//!   per-cluster fit phases, streaming-chunk and optimizer-iteration
+//!   events, recorded through [`FitSink`] handles threaded into the fit
+//!   configs and replayed by `ckrig fitlog`.
+//! * [`benchdiff`] — bench-regression gating: flatten two
+//!   `BENCH_*.json` records and fail when a gated latency/throughput
+//!   leaf regressed past a tolerance (`ckrig benchdiff`, wired into CI
+//!   against `benchmarks/baseline/`).
 
+pub mod benchdiff;
 pub mod export;
+pub mod fitlog;
 pub mod hist;
+pub mod log;
 pub mod quality;
 pub mod trace;
 
 pub use export::PromText;
+pub use fitlog::{FitSink, FitTelemetry};
 pub use hist::{AtomicHistogram, HistogramSnapshot, BUCKET_BOUNDS_US};
 pub use quality::{QualityMonitor, QualitySnapshot};
 pub use trace::{Sampling, Span, TraceCtx, Tracer, WireSpan};

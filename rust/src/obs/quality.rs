@@ -254,6 +254,64 @@ mod tests {
     }
 
     #[test]
+    fn interleaved_non_finite_leaves_aggregates_bit_identical() {
+        // A degenerate posterior (σ → 0) can emit NaN/∞ residuals mid-stream;
+        // they must vanish without perturbing any aggregate bit.
+        let clean = QualityMonitor::new(32);
+        let dirty = QualityMonitor::new(32);
+        for (i, z) in normals(20, 11).into_iter().enumerate() {
+            clean.score(z, z * 0.5);
+            dirty.score(z, z * 0.5);
+            match i % 4 {
+                0 => dirty.score(f64::NAN, 0.0),
+                1 => dirty.score(f64::INFINITY, 1.0),
+                2 => dirty.score(0.0, f64::NEG_INFINITY),
+                _ => dirty.score(f64::NAN, f64::NAN),
+            }
+        }
+        assert_eq!(clean.snapshot(), dirty.snapshot());
+    }
+
+    #[test]
+    fn only_non_finite_matches_empty_window() {
+        let q = QualityMonitor::new(8);
+        q.score_batch(
+            &[f64::NAN, f64::INFINITY, f64::NEG_INFINITY],
+            &[f64::NAN, 0.0, f64::INFINITY],
+        );
+        let s = q.snapshot();
+        assert_eq!(s, QualityMonitor::new(8).snapshot());
+        assert_eq!(s, QualitySnapshot::default());
+        assert!(!s.flagged());
+    }
+
+    #[test]
+    fn flag_boundary_respects_window_cap() {
+        // Lifetime count is irrelevant: a monitor whose window cap sits
+        // below MIN_SCORED_FOR_FLAG must never flag, however long it runs.
+        let capped = QualityMonitor::new(MIN_SCORED_FOR_FLAG - 1);
+        for _ in 0..(3 * MIN_SCORED_FOR_FLAG) {
+            capped.score(25.0, 5.0);
+        }
+        let s = capped.snapshot();
+        assert!(s.scored as usize > MIN_SCORED_FOR_FLAG);
+        assert_eq!(s.window, MIN_SCORED_FOR_FLAG - 1);
+        assert!(!s.flagged(), "window-capped monitor flagged: {s:?}");
+
+        // An uncapped monitor flips exactly at the 50th in-window point.
+        let q = QualityMonitor::new(4 * MIN_SCORED_FOR_FLAG);
+        for i in 1..=MIN_SCORED_FOR_FLAG {
+            q.score(25.0, 5.0);
+            let flagged = q.snapshot().flagged();
+            assert_eq!(
+                flagged,
+                i >= MIN_SCORED_FOR_FLAG,
+                "flag state wrong at {i} scored points"
+            );
+        }
+    }
+
+    #[test]
     fn too_few_points_never_flag() {
         let q = QualityMonitor::new(64);
         for _ in 0..(MIN_SCORED_FOR_FLAG - 1) {

@@ -109,6 +109,13 @@ pub struct OnlineStats {
     pub since_refit: u64,
     /// Completed background refits swapped in via this adapter's hook.
     pub refits: u64,
+    /// Whether a background refit is running for this slot right now.
+    pub refit_in_flight: bool,
+    /// How long the in-flight refit has been running (µs; 0 when idle).
+    pub refit_running_us: u64,
+    /// Wall time of the last completed background refit (µs; 0 before
+    /// the first one finishes).
+    pub last_refit_duration_us: u64,
     /// Current mean standardized residual over the drift window
     /// (0.0 until the window has filled).
     pub drift: f64,

@@ -65,6 +65,18 @@ struct RefitShared {
     cfg: RefitConfig,
     in_flight: AtomicBool,
     refits: AtomicU64,
+    /// Unix-µs timestamp of when the in-flight refit started; 0 = idle.
+    fitting_since_us: AtomicU64,
+    /// Wall time of the most recent refit attempt (µs; 0 before one).
+    last_refit_us: AtomicU64,
+}
+
+/// Wall-clock microseconds since the Unix epoch, for the cross-thread
+/// "fitting since" gauge (monotonic `Instant`s cannot cross `stats()`).
+fn unix_us() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map_or(0, |d| d.as_micros() as u64)
 }
 
 /// A fitted online surrogate adapted for serving: concurrent predictions,
@@ -140,6 +152,8 @@ impl OnlineModel {
             cfg,
             in_flight: AtomicBool::new(false),
             refits: AtomicU64::new(0),
+            fitting_since_us: AtomicU64::new(0),
+            last_refit_us: AtomicU64::new(0),
         }));
         self
     }
@@ -166,10 +180,24 @@ impl OnlineModel {
         let history_len = self.history.as_ref().map_or(0, |h| {
             h.lock().unwrap_or_else(PoisonError::into_inner).y.len()
         });
+        let (refits, refit_in_flight, refit_running_us, last_refit_duration_us) =
+            self.refit.as_ref().map_or((0, false, 0, 0), |s| {
+                let since = s.fitting_since_us.load(Ordering::Acquire);
+                let running = if since > 0 { unix_us().saturating_sub(since) } else { 0 };
+                (
+                    s.refits.load(Ordering::Relaxed),
+                    since > 0,
+                    running,
+                    s.last_refit_us.load(Ordering::Relaxed),
+                )
+            });
         OnlineStats {
             observed: self.observed.load(Ordering::Relaxed),
             since_refit: self.since_refit.load(Ordering::Relaxed),
-            refits: self.refit.as_ref().map_or(0, |s| s.refits.load(Ordering::Relaxed)),
+            refits,
+            refit_in_flight,
+            refit_running_us,
+            last_refit_duration_us,
             drift: self.drift.lock().unwrap_or_else(PoisonError::into_inner).mean(),
             train_points,
             history_len,
@@ -190,6 +218,8 @@ impl OnlineModel {
         if shared.in_flight.swap(true, Ordering::SeqCst) {
             return;
         }
+        shared.fitting_since_us.store(unix_us().max(1), Ordering::Relaxed);
+        let started = std::time::Instant::now();
         // Judge the next window against the post-refit model, and stop
         // this generation's triggers from re-firing while the refit runs.
         self.drift.lock().unwrap_or_else(PoisonError::into_inner).reset();
@@ -255,6 +285,14 @@ impl OnlineModel {
             if outcome.is_err() {
                 log::warn!("online background refit panicked; keeping the serving generation");
             }
+            // Publish the attempt's wall time and return the slot to idle
+            // before the single-flight guard admits the next trigger.
+            release
+                .last_refit_us
+                .store(started.elapsed().as_micros() as u64, Ordering::Relaxed);
+            // Release pairs with the Acquire load in `stats()`: a reader
+            // that sees the slot idle also sees the duration above.
+            release.fitting_since_us.store(0, Ordering::Release);
             release.in_flight.store(false, Ordering::SeqCst);
         });
     }
@@ -740,6 +778,20 @@ mod tests {
                 break;
             }
             assert!(std::time::Instant::now() < deadline, "refit never swapped in");
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        // The duration gauge publishes when the worker releases the
+        // single-flight guard (shortly after the swap).
+        let obs_model = registry.default_model();
+        let obs = obs_model.observer().unwrap();
+        loop {
+            let s = obs.online_stats();
+            if !s.refit_in_flight {
+                assert!(s.last_refit_duration_us > 0, "refit duration gauge not set");
+                assert_eq!(s.refit_running_us, 0, "idle slot must report 0 running µs");
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "refit guard never released");
             std::thread::sleep(std::time::Duration::from_millis(10));
         }
     }

@@ -65,6 +65,12 @@ pub struct OptimizerConfig {
     pub policy: OnlinePolicy,
     /// Seed for the proposal RNG (candidate pools, initial design).
     pub seed: u64,
+    /// Optional fit-path telemetry: one event per `tell` (observed
+    /// value, incumbent, acquisition score of the proposal) plus refit
+    /// phases and — via the fit options — per-eval hyperopt traces
+    /// (see [`crate::obs::fitlog`]). Recording never perturbs the
+    /// seeded proposal stream.
+    pub telemetry: Option<crate::obs::FitSink>,
 }
 
 impl OptimizerConfig {
@@ -84,6 +90,7 @@ impl OptimizerConfig {
             init: 8,
             policy: OnlinePolicy { staleness_budget: 16, ..OnlinePolicy::default() },
             seed: 0x0B97,
+            telemetry: None,
         }
     }
 }
@@ -129,6 +136,10 @@ pub struct Optimizer {
     since_refit: usize,
     drift: DriftMonitor,
     stats: OptimizerStats,
+    // Acquisition score of the most recent proposal; consumed by the
+    // next `tell` so the telemetry row pairs the observed value with
+    // the score that nominated it.
+    last_acq: Option<f64>,
     // Scratch for the batched acquisition evaluation.
     mean_buf: Vec<f64>,
     var_buf: Vec<f64>,
@@ -159,6 +170,7 @@ impl Optimizer {
             since_refit: 0,
             drift,
             stats: OptimizerStats::default(),
+            last_acq: None,
             mean_buf: Vec::new(),
             var_buf: Vec::new(),
             score_buf: Vec::new(),
@@ -240,6 +252,11 @@ impl Optimizer {
         self.y.push(y);
         self.stats.told += 1;
         self.since_refit += 1;
+        if let Some(sink) = &self.cfg.telemetry {
+            let best = self.y.iter().copied().fold(f64::INFINITY, f64::min);
+            let acq = self.last_acq.take();
+            sink.opt_iter(self.stats.told, y, best, acq);
+        }
         if self.model.is_some() {
             if let Some(reason) = self.cfg.policy.should_refit(self.since_refit, &self.drift) {
                 log::debug!("optimizer refit scheduled ({reason:?})");
@@ -302,6 +319,7 @@ impl Optimizer {
                 &mut self.score_buf,
             )?;
             let pick = argmax(&self.score_buf);
+            self.last_acq = Some(self.score_buf[pick]);
             let chosen = pool.row(pick).to_vec();
             if j + 1 < q {
                 self.fantasize(&chosen, best)?;
@@ -359,11 +377,17 @@ impl Optimizer {
         let ds = Dataset::new("optimize", Matrix::from_vec(y.len(), d, x), y);
         let std = Standardizer::fit(&ds);
         let tr = std.transform(&ds);
+        let phase = self.cfg.telemetry.as_ref().map(|s| s.nested().phase("refit"));
+        let mut opts = self.cfg.fit.clone();
+        if opts.hyperopt.telemetry.is_none() {
+            opts.hyperopt.telemetry = self.cfg.telemetry.as_ref().map(|s| s.nested());
+        }
         let inner = self
             .cfg
             .spec
-            .fit(&tr, &self.cfg.fit)
+            .fit(&tr, &opts)
             .with_context(|| format!("fitting {} on {} points", self.cfg.spec, ds.n()))?;
+        drop(phase);
         self.model = Some(Box::new(Standardized::new(inner, std)));
         self.stats.fits += 1;
         Ok(())

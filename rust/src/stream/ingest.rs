@@ -176,6 +176,12 @@ pub struct StreamFitConfig {
     /// preset: a streaming fit runs k+1 searches back to back.
     pub hyperopt: HyperOpt,
     pub seed: u64,
+    /// Optional fit-path telemetry: per-chunk ingestion events (rows,
+    /// wall time, memory-meter readings) plus coarse/cluster fit phases
+    /// (see [`crate::obs::fitlog`]). Falls back to
+    /// `hyperopt.telemetry` when unset, so a sink threaded through
+    /// [`crate::surrogate::FitOptions`] reaches the streaming driver too.
+    pub telemetry: Option<crate::obs::FitSink>,
 }
 
 impl StreamFitConfig {
@@ -187,6 +193,7 @@ impl StreamFitConfig {
             max_model_points: 2048,
             hyperopt: HyperOpt { restarts: 1, max_evals: 20, isotropic: true, ..HyperOpt::fast() },
             seed: 0x57EA,
+            telemetry: None,
         }
     }
 }
@@ -335,6 +342,14 @@ pub fn fit_stream(
     ensure!(cfg.k >= 1, "k must be >= 1");
     ensure!(cfg.chunk_rows >= 1, "chunk_rows must be >= 1");
     let mut meter = MemoryMeter::new(cfg.memory_budget);
+    // Effective telemetry sink, forced nested: everything recorded here
+    // runs inside whatever top-level phase the caller opened around the
+    // whole streaming fit.
+    let sink = cfg
+        .telemetry
+        .clone()
+        .or_else(|| cfg.hyperopt.telemetry.clone())
+        .map(|s| s.nested());
 
     // ---- pass 1: layout, moments, coarse reservoir ----
     src.reset().context("rewinding source for pass 1")?;
@@ -349,6 +364,7 @@ pub fn fit_stream(
         if chunk.rows() == 0 {
             continue;
         }
+        let t_chunk = sink.as_ref().map(|_| std::time::Instant::now());
         ensure!(
             chunk.cols() >= 2,
             "stream rows need at least one feature column plus a trailing target column"
@@ -378,6 +394,10 @@ pub fn fit_stream(
         }
         mb.partial_fit(&Matrix::from_vec(chunk.rows(), d, xonly));
         rows_total += chunk.rows() as u64;
+        if let (Some(s), Some(t0)) = (&sink, t_chunk) {
+            let wall_us = t0.elapsed().as_micros() as u64;
+            s.chunk(1, chunks, chunk.rows(), wall_us, meter.current(), meter.peak());
+        }
         chunks += 1;
     }
     let Some((moments, reservoir, cap)) = state else {
@@ -414,8 +434,14 @@ pub fn fit_stream(
     let zy: Vec<f64> = ry.iter().map(|v| (v - std.y_mean) / std.y_std).collect();
     drop(rx);
     meter.charge(2 * coarse_points * coarse_points * F, "coarse fit transient")?;
-    let coarse_opt = HyperOpt { seed: cfg.seed ^ 0xC0A5, ..cfg.hyperopt.clone() };
+    let coarse_opt = HyperOpt {
+        seed: cfg.seed ^ 0xC0A5,
+        telemetry: sink.clone(),
+        ..cfg.hyperopt.clone()
+    };
+    let coarse_phase = sink.as_ref().map(|s| s.phase("coarse-fit"));
     let coarse = coarse_opt.fit(zx, &zy).context("fitting the coarse model")?;
+    drop(coarse_phase);
     meter.release(2 * coarse_points * coarse_points * F);
     meter.release(cap * (d + 1) * F); // reservoir rows consumed by the fit
     meter.charge(coarse.resident_bytes(), "coarse model")?;
@@ -437,10 +463,16 @@ pub fn fit_stream(
         let (bx, by) = std::mem::take(&mut bufs[c]);
         let nc = by.len();
         meter.charge(2 * nc * nc * F, "cluster fit transient")?;
-        let opt = HyperOpt { seed: cfg.seed ^ (0xF1_u64 + c as u64), ..cfg.hyperopt.clone() };
+        let opt = HyperOpt {
+            seed: cfg.seed ^ (0xF1_u64 + c as u64),
+            telemetry: sink.as_ref().map(|s| s.for_cluster(c)),
+            ..cfg.hyperopt.clone()
+        };
+        let phase = sink.as_ref().map(|s| s.for_cluster(c).phase("cluster-fit"));
         let model = opt
             .fit(Matrix::from_vec(nc, d, bx), &by)
             .with_context(|| format!("fitting fine model for cluster {c}"))?;
+        drop(phase);
         meter.release(2 * nc * nc * F);
         meter.release(cap * (d + 1) * F); // buffer freed
         meter.charge(model.resident_bytes(), &format!("fine model {c}"))?;
@@ -448,7 +480,9 @@ pub fn fit_stream(
         Ok(())
     };
 
+    let mut chunks_pass2 = 0usize;
     while let Some(chunk) = src.next_chunk()? {
+        let t_chunk = sink.as_ref().map(|_| std::time::Instant::now());
         ensure!(
             chunk.cols() == d + 1,
             "pass 2 saw {}-wide rows but pass 1 saw {}",
@@ -486,6 +520,11 @@ pub fn fit_stream(
             }
         }
         rows_pass2 += chunk.rows() as u64;
+        if let (Some(s), Some(t0)) = (&sink, t_chunk) {
+            let wall_us = t0.elapsed().as_micros() as u64;
+            s.chunk(2, chunks_pass2, chunk.rows(), wall_us, meter.current(), meter.peak());
+        }
+        chunks_pass2 += 1;
     }
     ensure!(
         rows_pass2 == rows_total,

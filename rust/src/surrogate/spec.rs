@@ -180,6 +180,7 @@ impl SurrogateSpec {
                 let cfg = crate::stream::StreamFitConfig {
                     hyperopt: opts.hyperopt.clone(),
                     seed: opts.seed,
+                    telemetry: opts.hyperopt.telemetry.clone(),
                     ..crate::stream::StreamFitConfig::new(*k, usize::MAX / 2)
                 };
                 let (model, _report) = crate::stream::fit_stream(&mut src, &cfg)?;

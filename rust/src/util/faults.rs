@@ -86,7 +86,7 @@ mod armed {
             let entries = match parse(&spec) {
                 Ok(e) => e,
                 Err(err) => {
-                    eprintln!("ignoring malformed CKRIG_FAULTS: {err:#}");
+                    log::warn!("ignoring malformed CKRIG_FAULTS: {err:#}");
                     Vec::new()
                 }
             };
@@ -117,7 +117,7 @@ mod armed {
         match fired {
             None => Ok(()),
             Some(Action::Crash) => {
-                eprintln!("fault-injection: crashing at {point}");
+                log::error!("fault-injection: crashing at {point}");
                 die();
             }
             Some(Action::Err) => bail!("injected fault at {point}"),

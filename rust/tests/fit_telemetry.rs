@@ -1,0 +1,142 @@
+//! Integration: fit-path telemetry through the real `ckrig` binary.
+//!
+//! * `ckrig fit --telemetry out.jsonl` on an mtck:8 fit emits a JSONL
+//!   event log whose top-level phase durations account for the total
+//!   recorded wall time (within 5%), with per-cluster hyperopt
+//!   convergence rows for every one of the 8 clusters.
+//! * `ckrig fitlog out.jsonl` replays the log into a human-readable
+//!   phase timeline + convergence table.
+//! * `ckrig benchdiff` exits non-zero on an injected 25% p99 regression
+//!   and zero when old and new snapshots are identical.
+
+use cluster_kriging::obs::fitlog::{parse_jsonl, top_level_phase_sum_us, total_us, Event};
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+fn ckrig() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_ckrig"))
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ckrig_fitlog_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn run_ok(cmd: &mut Command) -> Output {
+    let out = cmd.output().expect("spawning ckrig");
+    assert!(
+        out.status.success(),
+        "ckrig {:?} failed:\nstdout: {}\nstderr: {}",
+        cmd.get_args().collect::<Vec<_>>(),
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    out
+}
+
+#[test]
+fn fit_telemetry_accounts_for_wall_time_and_tags_every_cluster() {
+    let dir = temp_dir("fit");
+    let log_path = dir.join("fit.jsonl");
+    let out = run_ok(ckrig().args([
+        "fit",
+        "--dataset",
+        "ackley",
+        "--n",
+        "300",
+        "--algo",
+        "mtck:8",
+        "--seed",
+        "3",
+        "--telemetry",
+        log_path.to_str().unwrap(),
+    ]));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("telemetry"), "fit did not announce the telemetry file:\n{stdout}");
+
+    let text = std::fs::read_to_string(&log_path).expect("telemetry file written");
+    let events = parse_jsonl(&text).expect("telemetry file parses back");
+    assert!(!events.is_empty());
+
+    // Wall-time accounting: the top-level (non-nested) phases must cover
+    // the recorded total within 5% — nothing substantial may happen
+    // outside a phase span.
+    let total = total_us(&events).expect("Meta footer present") as f64;
+    let sum = top_level_phase_sum_us(&events) as f64;
+    assert!(total > 0.0);
+    let gap = (total - sum).abs() / total;
+    assert!(
+        gap <= 0.05,
+        "top-level phases sum to {sum} µs vs total {total} µs ({:.1}% unaccounted)",
+        gap * 100.0
+    );
+
+    // Convergence traces: every one of the 8 clusters ran a hyperopt
+    // search and logged at least one evaluation row tagged with its id.
+    let mut eval_clusters: BTreeSet<usize> = BTreeSet::new();
+    let mut evals = 0usize;
+    for e in &events {
+        if let Event::HyperoptEval { cluster, theta, wall_us, .. } = e {
+            evals += 1;
+            assert!(!theta.is_empty(), "eval with empty theta");
+            assert!(*wall_us > 0, "eval with zero wall time");
+            if let Some(c) = cluster {
+                eval_clusters.insert(*c);
+            }
+        }
+    }
+    assert_eq!(
+        eval_clusters,
+        (0..8).collect::<BTreeSet<_>>(),
+        "expected hyperopt evals tagged for all 8 clusters ({evals} evals total)"
+    );
+
+    // Per-cluster fit phases ride along, tagged and nested.
+    let cluster_phases = events
+        .iter()
+        .filter(|e| matches!(e, Event::Phase { cluster: Some(_), nested: true, .. }))
+        .count();
+    assert!(cluster_phases >= 8, "expected >=8 nested per-cluster phases, got {cluster_phases}");
+
+    // The renderer replays the same file into the human timeline.
+    let out = run_ok(ckrig().args(["fitlog", log_path.to_str().unwrap()]));
+    let rendered = String::from_utf8_lossy(&out.stdout);
+    assert!(rendered.contains("phase timeline"), "missing phase timeline:\n{rendered}");
+    assert!(rendered.contains("hyperopt convergence"), "missing convergence:\n{rendered}");
+}
+
+#[test]
+fn benchdiff_gates_injected_p99_regression() {
+    let dir = temp_dir("benchdiff");
+    let old = dir.join("old.json");
+    let new = dir.join("new.json");
+    std::fs::write(
+        &old,
+        r#"{"requests": 300, "modes": [{"mode": "off", "p50_us": 80.0, "p99_us": 100.0}]}"#,
+    )
+    .unwrap();
+    std::fs::write(
+        &new,
+        r#"{"requests": 300, "modes": [{"mode": "off", "p50_us": 80.0, "p99_us": 125.0}]}"#,
+    )
+    .unwrap();
+
+    // 25% p99 regression vs the default 10% gate: non-zero exit.
+    let out = ckrig()
+        .args(["benchdiff", old.to_str().unwrap(), new.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(
+        !out.status.success(),
+        "benchdiff passed an injected 25% p99 regression:\n{}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("p99_us"), "report does not name the regressed metric:\n{text}");
+
+    // Identical snapshots: exit zero.
+    run_ok(ckrig().args(["benchdiff", old.to_str().unwrap(), old.to_str().unwrap()]));
+}

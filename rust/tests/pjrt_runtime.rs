@@ -18,7 +18,8 @@ fn artifacts_dir() -> Option<std::path::PathBuf> {
     if dir.join("fit_n32_d2.hlo.txt").exists() {
         Some(dir)
     } else {
-        eprintln!("skipping PJRT integration tests: no artifacts (run `make artifacts`)");
+        cluster_kriging::obs::log::init();
+        log::warn!("skipping PJRT integration tests: no artifacts (run `make artifacts`)");
         None
     }
 }
