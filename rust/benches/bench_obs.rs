@@ -30,6 +30,14 @@
 //!       Override the training size with `CKRIG_OBS_FIT_N` (default
 //!       300).
 //!
+//!   H1  numerical-health probe overhead: full OWCK cluster fits with
+//!       the per-fit Hager 1-norm condition probes on vs off, and
+//!       `predictb` p99 under both settings. Gates: probes-on fit ≤
+//!       off × 1.03 plus the same absolute epsilon as §O2 (the probe is
+//!       a handful of triangular solves riding an O(n³) fit), and the
+//!       predict p99 is unchanged within the §O1 budget — the probe
+//!       never runs on the predict path at all.
+//!
 //! ```bash
 //! CKRIG_OBS_N=1000 cargo bench --bench bench_obs
 //! ```
@@ -90,6 +98,25 @@ fn hyperopt_fit_s(x: &Matrix, y: &[f64], telemetry: Option<FitSink>) -> f64 {
     s
 }
 
+/// One §H1 measurement: a full OWCK cluster fit with the condition
+/// probes toggled, returning wall seconds.
+fn cluster_fit_s(x: &Matrix, y: &[f64], k: usize, probes: bool) -> f64 {
+    cluster_kriging::obs::health::set_probes_enabled(probes);
+    let opt = HyperOpt {
+        restarts: 1,
+        max_evals: 10,
+        isotropic: true,
+        nugget: NuggetMode::Fixed(1e-8),
+        ..HyperOpt::default()
+    };
+    let cfg = builder::flavor("OWCK", k, 29, opt).unwrap();
+    let t0 = Instant::now();
+    let model = ClusterKriging::fit(x, y, cfg).unwrap();
+    let s = t0.elapsed().as_secs_f64();
+    drop(model);
+    s
+}
+
 fn main() {
     cluster_kriging::obs::log::init();
     let requests = env_usize("CKRIG_OBS_N", 300);
@@ -136,6 +163,7 @@ fn main() {
                 health: Health::new(),
                 tracer: Arc::new(Tracer::new(4096, *sampling)),
                 pool: None,
+                slo: None,
             },
         )
         .unwrap();
@@ -235,6 +263,75 @@ fn main() {
         fit_best[0]
     );
 
+    // §H1: numerical-health probe overhead. The Hager condition estimate
+    // runs once per cluster fit off the existing Cholesky factor, so it
+    // must vanish next to the fit itself — and the predict path never
+    // runs it, so its p99 must be flat across the switch.
+    println!("\n== H1: condition-probe overhead, OWCK k={k} n={n}, best of {repeats} ==");
+    cluster_fit_s(&x, &y, k, true); // warmup
+    let mut h1_fit = [f64::INFINITY; 2]; // [probes off, probes on]
+    for _ in 0..repeats {
+        h1_fit[0] = h1_fit[0].min(cluster_fit_s(&x, &y, k, false));
+        h1_fit[1] = h1_fit[1].min(cluster_fit_s(&x, &y, k, true));
+    }
+    let h1_fit_ratio = h1_fit[1] / h1_fit[0];
+    println!("  fit probes-off       {:>8.4} s", h1_fit[0]);
+    println!("  fit probes-on        {:>8.4} s | {h1_fit_ratio:>5.3}x vs off", h1_fit[1]);
+
+    let mut h1_p99 = [f64::INFINITY; 2];
+    {
+        let server = Server::start_with_options(
+            Arc::new(ModelRegistry::new("default", Arc::clone(&model))),
+            ServerConfig { addr: "127.0.0.1:0".into(), batcher: BatcherConfig::default() },
+            ServeOptions {
+                metrics: Arc::new(ServerMetrics::new()),
+                wal: None,
+                health: Health::new(),
+                tracer: Arc::new(Tracer::new(4096, Sampling::Off)),
+                pool: None,
+                slo: None,
+            },
+        )
+        .unwrap();
+        let mut client = Client::connect(&server.local_addr.to_string()).unwrap();
+        run_once(&mut client, &batch, warmup);
+        for _ in 0..repeats {
+            cluster_kriging::obs::health::set_probes_enabled(false);
+            let lat = run_once(&mut client, &batch, requests);
+            h1_p99[0] = h1_p99[0].min(percentile(&lat, 99.0));
+            cluster_kriging::obs::health::set_probes_enabled(true);
+            let lat = run_once(&mut client, &batch, requests);
+            h1_p99[1] = h1_p99[1].min(percentile(&lat, 99.0));
+        }
+    }
+    cluster_kriging::obs::health::set_probes_enabled(true);
+    let h1_p99_ratio = h1_p99[1] / h1_p99[0];
+    println!(
+        "  predict p99 off/on   {:>8.1} / {:>8.1} µs | {h1_p99_ratio:>5.3}x",
+        h1_p99[0], h1_p99[1]
+    );
+    let h1_fit_budget = h1_fit[0] * 1.03 + fit_epsilon_s;
+    let h1_p99_budget = h1_p99[0] * 1.05 + epsilon_us;
+    println!(
+        "\n  gate: probes-on fit {:.4} s vs budget {h1_fit_budget:.4} s, \
+         probes-on p99 {:.1} µs vs budget {h1_p99_budget:.1} µs",
+        h1_fit[1], h1_p99[1]
+    );
+    assert!(
+        h1_fit[1] <= h1_fit_budget,
+        "condition probes cost {:.4} s on the fit, exceeding the 3%-plus-epsilon budget \
+         {h1_fit_budget:.4} s (off {:.4} s)",
+        h1_fit[1],
+        h1_fit[0]
+    );
+    assert!(
+        h1_p99[1] <= h1_p99_budget,
+        "predict p99 {:.1} µs moved with probes on (off {:.1} µs) — the probe must never \
+         touch the predict path",
+        h1_p99[1],
+        h1_p99[0]
+    );
+
     let json_path =
         std::env::var("CKRIG_BENCH_OBS_JSON").unwrap_or_else(|_| "BENCH_obs.json".into());
     let json = format!(
@@ -254,6 +351,14 @@ fn main() {
             "    \"recording_s\": {recording_s:.4},\n",
             "    \"recording_progress_s\": {progress_s:.4},\n",
             "    \"recording_vs_off\": {fit_ratio:.4}\n",
+            "  }},\n",
+            "  \"h1\": {{\n",
+            "    \"fit_off_s\": {h1_fit_off:.4},\n",
+            "    \"fit_on_s\": {h1_fit_on:.4},\n",
+            "    \"fit_vs_off\": {h1_fit_ratio:.4},\n",
+            "    \"predict_p99_off_us\": {h1_p99_off:.1},\n",
+            "    \"predict_p99_on_us\": {h1_p99_on:.1},\n",
+            "    \"predict_p99_vs_off\": {h1_p99_ratio:.4}\n",
             "  }}\n",
             "}}\n"
         ),
@@ -269,6 +374,12 @@ fn main() {
         recording_s = fit_best[1],
         progress_s = fit_best[2],
         fit_ratio = fit_ratio,
+        h1_fit_off = h1_fit[0],
+        h1_fit_on = h1_fit[1],
+        h1_fit_ratio = h1_fit_ratio,
+        h1_p99_off = h1_p99[0],
+        h1_p99_on = h1_p99[1],
+        h1_p99_ratio = h1_p99_ratio,
     );
     match std::fs::write(&json_path, &json) {
         Ok(()) => println!("\nwrote {json_path}"),

@@ -121,6 +121,7 @@ fn combine_optimal(preds: &[ClusterPrediction]) -> ClusterPrediction {
     let certain: Vec<&ClusterPrediction> =
         preds.iter().filter(|p| p.variance <= VAR_FLOOR).collect();
     if !certain.is_empty() {
+        crate::obs::health::counters().note_floor_hit();
         let mean = certain.iter().map(|p| p.mean).sum::<f64>() / certain.len() as f64;
         return ClusterPrediction { mean, variance: 0.0 };
     }
@@ -358,6 +359,17 @@ mod tests {
         let expect = Combiner::OptimalWeights.combine(&preds, &[], 0);
         assert_eq!(out.mean, expect.mean);
         assert_eq!(out.variance, expect.variance);
+    }
+
+    #[test]
+    fn certain_branch_bumps_floor_counter() {
+        // Counters are process-global and tests run concurrently, so
+        // assert on the delta with >=.
+        let before = crate::obs::health::counters().snapshot();
+        let preds = [p(5.0, 0.0), p(100.0, 1.0)];
+        let _ = Combiner::OptimalWeights.combine(&preds, &[], 0);
+        let delta = crate::obs::health::counters().snapshot().delta_since(&before);
+        assert!(delta.combiner_floor_hits >= 1);
     }
 
     #[test]

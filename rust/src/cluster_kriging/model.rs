@@ -416,6 +416,19 @@ impl Surrogate for ClusterKriging {
         Some(self)
     }
 
+    fn health_report(&self) -> Option<crate::obs::health::HealthReport> {
+        let clusters = self
+            .models
+            .iter()
+            .enumerate()
+            .map(|(ci, m)| crate::obs::health::ClusterHealth {
+                cluster: ci,
+                health: m.health_or_probe(),
+            })
+            .collect();
+        Some(crate::obs::health::HealthReport { clusters })
+    }
+
     fn save(&self, w: &mut dyn std::io::Write) -> Result<()> {
         let mut payload = crate::util::binio::BinWriter::new();
         self.write_artifact(&mut payload);

@@ -433,6 +433,10 @@ fn flush_group(
     var_buf.resize(rows, 0.0);
     let t0 = Instant::now();
     let result = trace::span("predict", || {
+        // Inside the timed section, so an injected delay shows up in the
+        // predict latency histogram (and hence the p99 SLO) like a real
+        // slow flush would.
+        crate::util::faults::hit("predict")?;
         model.predict_into(&xt, &mut mean_buf[..rows], &mut var_buf[..rows])
     });
     // Reclaim the matrix buffer for the next flush.

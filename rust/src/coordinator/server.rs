@@ -104,6 +104,7 @@ use crate::coordinator::registry::ModelRegistry;
 use crate::coordinator::shardpool::ShardPool;
 use crate::kriging::Surrogate;
 use crate::obs::export::{self, PromText};
+use crate::obs::slo::{SloEngine, SloInputs, SloReport};
 use crate::obs::trace::{self, Span, TraceCtx, Tracer, WireSpan};
 use crate::online::wal::Durability;
 use crate::surrogate::SurrogateSpec;
@@ -176,6 +177,10 @@ pub struct ServeOptions {
     /// Shard pool to fan `trace <id>` collection out to (coordinator
     /// role only).
     pub pool: Option<Arc<ShardPool>>,
+    /// SLO engine (`ckrig serve --slo`): evaluated on `health`/`stats`/
+    /// `metricsx`, with `ok|warn|breach` statuses appended to those
+    /// replies and state transitions logged once as structured warns.
+    pub slo: Option<Arc<SloEngine>>,
 }
 
 impl Default for ServeOptions {
@@ -186,6 +191,7 @@ impl Default for ServeOptions {
             health: Health::new(),
             tracer: Arc::new(Tracer::disabled()),
             pool: None,
+            slo: None,
         }
     }
 }
@@ -227,7 +233,7 @@ impl Server {
         cfg: ServerConfig,
         opts: ServeOptions,
     ) -> Result<Self> {
-        let ServeOptions { metrics, wal, health, tracer, pool } = opts;
+        let ServeOptions { metrics, wal, health, tracer, pool, slo } = opts;
         let batcher = Arc::new(Batcher::start_with_wal(
             registry.clone(),
             cfg.batcher.clone(),
@@ -258,8 +264,9 @@ impl Server {
                         let h = accept_health.clone();
                         let t = accept_tracer.clone();
                         let sp = pool.clone();
+                        let sl = slo.clone();
                         conns.push(std::thread::spawn(move || {
-                            let _ = handle_connection(stream, b, r, m, s, h, t, sp);
+                            let _ = handle_connection(stream, b, r, m, s, h, t, sp, sl);
                         }));
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -350,6 +357,7 @@ fn handle_connection(
     health: Arc<Health>,
     tracer: Arc<Tracer>,
     pool: Option<Arc<ShardPool>>,
+    slo: Option<Arc<SloEngine>>,
 ) -> Result<()> {
     stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
     // Line-sized writes + request/response ping-pong: Nagle + delayed ACK
@@ -384,6 +392,7 @@ fn handle_connection(
                         &health,
                         &tracer,
                         pool.as_deref(),
+                        slo.as_deref(),
                     )
                 }))
                 .unwrap_or_else(|_| {
@@ -430,6 +439,7 @@ fn dispatch(
     health: &Health,
     tracer: &Arc<Tracer>,
     pool: Option<&ShardPool>,
+    slo: Option<&SloEngine>,
 ) -> String {
     metrics.record_request();
     let err = |msg: String| {
@@ -440,7 +450,7 @@ fn dispatch(
         return "ok pong".into();
     }
     if line == "metricsx" {
-        return metricsx_for(batcher, registry, metrics, health);
+        return metricsx_for(batcher, registry, metrics, health, slo);
     }
     if line == "traces" {
         let ids: Vec<String> =
@@ -510,6 +520,10 @@ fn dispatch(
             metrics.started_unix(),
             ServerMetrics::version(),
         ));
+        if let Some(engine) = slo {
+            let report = evaluate_slo(engine, registry, metrics);
+            s.push_str(&format!(" slo={}", report.worst()));
+        }
         return s;
     }
     if line == "stats" {
@@ -555,6 +569,28 @@ fn dispatch(
             metrics.started_unix(),
             ServerMetrics::version(),
         ));
+        if let Some(engine) = slo {
+            let report = evaluate_slo(engine, registry, metrics);
+            s.push_str(&format!(" slo={}", report.worst()));
+            if !report.models.is_empty() {
+                let per_model: Vec<String> = report
+                    .models
+                    .iter()
+                    .map(|(name, status)| format!("{name}:{status}"))
+                    .collect();
+                s.push_str(&format!(" slo_models={}", per_model.join(",")));
+            }
+        }
+        // Coordinator role: aggregate each shard worker's numerical-health
+        // token so one `stats` answers for the whole fleet.
+        if let Some(pool) = pool {
+            let shealth = pool.collect_health();
+            if !shealth.is_empty() {
+                let rows: Vec<String> =
+                    shealth.iter().map(|(i, tok)| format!("{i}:{tok}")).collect();
+                s.push_str(&format!(" shealth={}", rows.join("|")));
+            }
+        }
         return s;
     }
     if line == "models" {
@@ -942,16 +978,57 @@ fn dispatch(
     err(format!("unknown command {line:?}"))
 }
 
+/// Feed the SLO engine one evaluation round from the live counters and
+/// quality monitors, logging each state transition exactly once as a
+/// structured warn (the engine owns transition dedup, so concurrent
+/// `health`/`stats`/`metricsx` requests cannot double-log).
+fn evaluate_slo(
+    engine: &SloEngine,
+    registry: &ModelRegistry,
+    metrics: &ServerMetrics,
+) -> SloReport {
+    let models: Vec<(String, bool)> = registry
+        .list()
+        .into_iter()
+        .map(|m| {
+            let miscalibrated = registry
+                .get(Some(&m.name))
+                .and_then(|model| {
+                    model.observer().map(|o| o.online_stats().quality.flagged())
+                })
+                .unwrap_or(false);
+            (m.name, miscalibrated)
+        })
+        .collect();
+    let report = engine.evaluate(&SloInputs {
+        predict: metrics.op_snapshot(ProtocolOp::Predict),
+        requests: metrics.requests.load(Ordering::Relaxed),
+        errors: metrics.errors.load(Ordering::Relaxed),
+        models,
+    });
+    for (model, from, to) in &report.transitions {
+        log::warn!(
+            "SLO transition: model={model} {from}->{to} (spec {}, p99={}us err_rate={:.6})",
+            engine.spec(),
+            report.p99_us,
+            report.err_rate,
+        );
+    }
+    report
+}
+
 /// Assemble the `metricsx` exposition document: everything `stats`
 /// reports, as Prometheus-style text, plus WAL lag, shard liveness,
-/// latency bucket histograms and the per-model prequential quality
-/// gauges. Lives here because the server is the one place that sees the
-/// metrics, the health gauges and the model registry at once.
+/// latency bucket histograms, numerical-health counters and the
+/// per-model prequential quality gauges. Lives here because the server
+/// is the one place that sees the metrics, the health gauges and the
+/// model registry at once.
 fn metricsx_for(
     batcher: &Batcher,
     registry: &ModelRegistry,
     metrics: &ServerMetrics,
     health: &Health,
+    slo: Option<&SloEngine>,
 ) -> String {
     fn model_rows<'a>(
         online: &'a [(String, crate::online::OnlineStats)],
@@ -1131,6 +1208,99 @@ fn metricsx_for(
         "1 when empirical interval coverage deviates beyond tolerance.",
         &model_rows(&online, |os| os.quality.flagged() as u64 as f64),
     );
+
+    // Process-wide degeneracy counters: cheap always-on tallies of the
+    // numerical escape hatches the math core had to take.
+    let deg = crate::obs::health::counters().snapshot();
+    p.counter(
+        "ckrig_degeneracy_jitter_escalations_total",
+        "Cholesky factorizations that needed diagonal jitter to go PD.",
+        deg.jitter_escalations,
+    );
+    p.counter(
+        "ckrig_degeneracy_factor_fallbacks_total",
+        "Rank-one updates that fell back to a full refactorization.",
+        deg.factor_fallbacks,
+    );
+    p.counter(
+        "ckrig_degeneracy_combiner_floor_hits_total",
+        "Ensemble combines where a member hit the variance floor.",
+        deg.combiner_floor_hits,
+    );
+    p.counter(
+        "ckrig_degeneracy_nonfinite_rejected_total",
+        "Observations rejected for non-finite coordinates or values.",
+        deg.nonfinite_rejected,
+    );
+    p.counter(
+        "ckrig_degeneracy_nugget_boundary_hits_total",
+        "Hyperparameter evaluations pinned at the nugget search boundary.",
+        deg.nugget_boundary_hits,
+    );
+    p.gauge(
+        "ckrig_degeneracy_last_jitter",
+        "Jitter magnitude of the most recent escalated factorization.",
+        deg.last_jitter,
+    );
+    p.gauge(
+        "ckrig_degeneracy_max_jitter",
+        "Largest jitter magnitude any factorization has needed.",
+        deg.max_jitter,
+    );
+
+    // Per-model conditioning gauges, for slots whose model exposes a
+    // health report. May lazily probe (O(n²) per cluster) — metricsx is
+    // a scrape op, never the predict hot path.
+    let reports: Vec<(String, crate::obs::health::HealthReport)> = registry
+        .list()
+        .into_iter()
+        .filter_map(|m| {
+            registry.get(Some(&m.name)).and_then(|model| {
+                model.health_report().map(|r| (m.name, r))
+            })
+        })
+        .collect();
+    let health_rows = |f: &dyn Fn(&crate::obs::health::HealthReport) -> f64| {
+        reports
+            .iter()
+            .map(|(name, r)| (vec![("model", name.as_str())], f(r)))
+            .collect::<Vec<_>>()
+    };
+    p.gauge_family(
+        "ckrig_model_cond_estimate",
+        "Worst per-cluster 1-norm condition estimate of the fitted factors.",
+        &health_rows(&|r| r.max_cond()),
+    );
+    p.gauge_family(
+        "ckrig_model_jitter",
+        "Largest diagonal jitter any of the model's factorizations needed.",
+        &health_rows(&|r| r.max_jitter()),
+    );
+    p.gauge_family(
+        "ckrig_model_health_class",
+        "Worst conditioning class across clusters (0 ok, 1 warn, 2 critical).",
+        &health_rows(&|r| r.worst_class().code() as f64),
+    );
+
+    // SLO statuses, when the server was started with a spec.
+    if let Some(engine) = slo {
+        let report = evaluate_slo(engine, registry, metrics);
+        p.gauge(
+            "ckrig_slo_worst",
+            "Worst SLO status across dimensions and models (0 ok, 1 warn, 2 breach).",
+            report.worst().code() as f64,
+        );
+        let slo_rows: Vec<(Vec<(&str, &str)>, f64)> = report
+            .models
+            .iter()
+            .map(|(name, status)| (vec![("model", name.as_str())], status.code() as f64))
+            .collect();
+        p.gauge_family(
+            "ckrig_slo_status",
+            "Per-model SLO status (0 ok, 1 warn, 2 breach).",
+            &slo_rows,
+        );
+    }
     p.finish()
 }
 
@@ -1249,13 +1419,19 @@ fn shardinfo_for(model: Option<&str>, registry: &ModelRegistry) -> Result<String
     })?;
     let (index, count) = sp.shard_index().unwrap_or((0, 1));
     let clusters: Vec<String> = sp.cluster_ids().iter().map(usize::to_string).collect();
-    Ok(format!(
+    let mut reply = format!(
         "shard {index}/{count} k={} d={} clusters={} algo={}",
         sp.k_total(),
         target.dim(),
         clusters.join(","),
         target.name()
-    ))
+    );
+    // Numerical-health summary rides along so a coordinator can
+    // aggregate fleet conditioning without a second round-trip.
+    if let Some(report) = target.health_report() {
+        reply.push_str(&format!(" shealth={}", report.wire_token()));
+    }
+    Ok(reply)
 }
 
 /// One shard worker's topology, as reported by `shardinfo` (see
@@ -1268,6 +1444,9 @@ pub struct ShardInfo {
     pub dim: usize,
     pub clusters: Vec<usize>,
     pub algo: String,
+    /// Numerical-health wire token (`cond:…,jit:…,worst:…`), absent when
+    /// the worker predates health reporting or its model exposes none.
+    pub shealth: Option<String>,
 }
 
 /// Capped exponential backoff with full jitter for [`Client`] retries
@@ -1691,6 +1870,7 @@ impl Client {
         let mut dim = None;
         let mut clusters = None;
         let mut algo = None;
+        let mut shealth = None;
         for token in rest.split_whitespace() {
             if let Some((i, c)) = token.split_once('/') {
                 if index.is_none() && !token.contains('=') {
@@ -1709,6 +1889,8 @@ impl Client {
                 clusters = Some(ids.context("malformed cluster list")?);
             } else if let Some(v) = token.strip_prefix("algo=") {
                 algo = Some(v.to_string());
+            } else if let Some(v) = token.strip_prefix("shealth=") {
+                shealth = Some(v.to_string());
             }
         }
         Ok(ShardInfo {
@@ -1718,6 +1900,7 @@ impl Client {
             dim: dim.context("shardinfo reply missing d")?,
             clusters: clusters.context("shardinfo reply missing clusters")?,
             algo: algo.unwrap_or_default(),
+            shealth,
         })
     }
 

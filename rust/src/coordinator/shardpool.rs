@@ -454,6 +454,33 @@ impl ShardPool {
         out
     }
 
+    /// Gather each live worker's numerical-health summary token (the
+    /// `shealth=` field of the `shardinfo` reply). Best-effort
+    /// diagnostics like [`Self::collect_trace`]: a shard that is down,
+    /// fails the request, or predates health reporting contributes
+    /// nothing, and is **not** marked dead over it.
+    pub fn collect_health(&self) -> Vec<(usize, String)> {
+        let mut out = Vec::new();
+        for ep in &self.endpoints {
+            if !ep.alive.load(Ordering::SeqCst) {
+                continue;
+            }
+            let mut guard = ep.conn.lock().unwrap();
+            let Some(client) = guard.as_mut() else { continue };
+            match client.shard_info(None) {
+                Ok(info) => {
+                    if let Some(tok) = info.shealth {
+                        out.push((ep.index, tok));
+                    }
+                }
+                Err(e) => {
+                    log::debug!("health collection from shard {} failed: {e:#}", ep.index);
+                }
+            }
+        }
+        out
+    }
+
     /// Forward a group of observations to one shard (protocol v3
     /// `observeb` on the worker). Returns how many the worker absorbed.
     ///

@@ -348,6 +348,21 @@ impl Surrogate for ClusterShard {
         Some(self)
     }
 
+    fn health_report(&self) -> Option<crate::obs::health::HealthReport> {
+        // Report under GLOBAL cluster ids so a coordinator can aggregate
+        // shard reports without an id collision.
+        let clusters = self
+            .cluster_ids
+            .iter()
+            .zip(&self.models)
+            .map(|(&cid, m)| crate::obs::health::ClusterHealth {
+                cluster: cid,
+                health: m.health_or_probe(),
+            })
+            .collect();
+        Some(crate::obs::health::HealthReport { clusters })
+    }
+
     fn as_online(&self) -> Option<&dyn crate::online::OnlineSurrogate> {
         Some(self)
     }

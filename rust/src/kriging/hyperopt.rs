@@ -146,6 +146,17 @@ impl HyperOpt {
                 // (bench §O2 gates the recording overhead at ≤3%).
                 let t0 = self.telemetry.as_ref().map(|_| std::time::Instant::now());
                 let (theta, nugget) = decode(p);
+                // Degeneracy signal: the simplex pressing the raw nugget
+                // parameter against (or past) its search box means the
+                // optimizer wants a λ outside the allowed range — the
+                // data is noisier (or more degenerate) than the bounds
+                // admit. One relaxed atomic per evaluation.
+                if let NuggetMode::Estimate { log_bounds } = self.nugget {
+                    let raw = p[theta_dims];
+                    if raw <= log_bounds.0 || raw >= log_bounds.1 {
+                        crate::obs::health::counters().note_nugget_boundary();
+                    }
+                }
                 let kernel = Kernel::new(self.kind, theta);
                 let fitted = match cache.as_ref() {
                     Some(c) => OrdinaryKriging::fit_with_cache(
@@ -208,6 +219,11 @@ impl HyperOpt {
             }
         }
 
+        // One condition probe on the winning model only — the ~restarts×
+        // evals interior fits skip it (bench §H1 gates the overhead).
+        if let Some(m) = best.as_mut() {
+            m.probe_health();
+        }
         best.ok_or(KrigingError::NonFinite("likelihood (all restarts failed)"))
     }
 }

@@ -97,6 +97,17 @@ pub trait Surrogate: Send + Sync {
     fn shard_predictor(&self) -> Option<&dyn crate::distributed::ShardPredictor> {
         None
     }
+
+    /// Per-cluster numerical-health report: condition estimates,
+    /// escalated jitter, and points per cluster, as probed at fit time
+    /// (or lazily, off the request path — implementations may run an
+    /// O(n²) estimate per cluster). Consumed by `ckrig doctor`, the
+    /// `metricsx` exposition, and the shard handshake. The default
+    /// `None` marks models with no Kriging factor to probe (baselines,
+    /// test doubles).
+    fn health_report(&self) -> Option<crate::obs::health::HealthReport> {
+        None
+    }
 }
 
 impl Surrogate for OrdinaryKriging {
@@ -144,6 +155,10 @@ impl Surrogate for OrdinaryKriging {
 
     fn as_online_mut(&mut self) -> Option<&mut dyn crate::online::OnlineSurrogate> {
         Some(self)
+    }
+
+    fn health_report(&self) -> Option<crate::obs::health::HealthReport> {
+        Some(crate::obs::health::HealthReport::single(self.health_or_probe()))
     }
 }
 

@@ -14,6 +14,7 @@
 use crate::kernel::cache::DistanceCache;
 use crate::kernel::Kernel;
 use crate::linalg::{Cholesky, CholeskyError};
+use crate::obs::health::ModelHealth;
 use crate::obs::trace;
 use crate::util::matrix::Matrix;
 use crate::util::threadpool::default_workers;
@@ -77,6 +78,10 @@ pub struct OrdinaryKriging {
     sigma2: f64,
     /// Concentrated negative log-likelihood of (θ, λ) on this data.
     nll: f64,
+    /// Cached numerical-health probe (condition estimate + jitter).
+    /// `Some` after a fit-time probe; invalidated to `None` by every
+    /// online update so a stale estimate is never served.
+    health: Option<ModelHealth>,
 }
 
 impl OrdinaryKriging {
@@ -94,7 +99,12 @@ impl OrdinaryKriging {
         kernel: Kernel,
         nugget: f64,
     ) -> Result<Self, KrigingError> {
-        Self::fit_shared_with_workers(x, y, kernel, nugget, default_workers())
+        let mut m = Self::fit_shared_with_workers(x, y, kernel, nugget, default_workers())?;
+        // Probe here, not in fit_core: the hyperopt objective funnels
+        // through fit_with_cache/fit_shared_with_workers hundreds of
+        // times per cluster and must not pay the probe per evaluation.
+        m.probe_health();
+        Ok(m)
     }
 
     /// [`Self::fit_shared`] with an explicit worker budget for the
@@ -169,6 +179,7 @@ impl OrdinaryKriging {
             return Err(KrigingError::RowMismatch { x_rows: n, y_len: y.len() });
         }
         if y.iter().any(|v| !v.is_finite()) {
+            crate::obs::health::counters().note_nonfinite();
             return Err(KrigingError::NonFinite("y"));
         }
         Ok(())
@@ -196,6 +207,7 @@ impl OrdinaryKriging {
             mu_hat,
             sigma2,
             nll,
+            health: None,
         })
     }
 
@@ -226,7 +238,11 @@ impl OrdinaryKriging {
         y_aug.push(y_new);
         let chol = match self.chol.appended(&r, 1.0 + self.nugget) {
             Ok(c) => c,
-            Err(_) => factor_full(&self.kernel, &x_aug, self.nugget)?,
+            Err(_) => {
+                let full = factor_full(&self.kernel, &x_aug, self.nugget)?;
+                note_factor_fallback("observe_point", x_aug.rows(), full.jitter());
+                full
+            }
         };
         self.commit(x_aug, y_aug, chol)
     }
@@ -264,7 +280,11 @@ impl OrdinaryKriging {
         let shrunk = self.chol.removed_row(i);
         let chol = match shrunk.appended(&r, 1.0 + self.nugget) {
             Ok(c) => c,
-            Err(_) => factor_full(&self.kernel, &x_aug, self.nugget)?,
+            Err(_) => {
+                let full = factor_full(&self.kernel, &x_aug, self.nugget)?;
+                note_factor_fallback("replace_point", x_aug.rows(), full.jitter());
+                full
+            }
         };
         self.commit(x_aug, y_aug, chol)
     }
@@ -295,6 +315,7 @@ impl OrdinaryKriging {
             });
         }
         if !y_new.is_finite() || x_new.iter().any(|v| !v.is_finite()) {
+            crate::obs::health::counters().note_nonfinite();
             return Err(KrigingError::NonFinite("observation"));
         }
         Ok(())
@@ -304,6 +325,11 @@ impl OrdinaryKriging {
     /// swap everything in — the single commit point of the online ops.
     fn commit(&mut self, x: Matrix, y: Vec<f64>, chol: Cholesky) -> Result<(), KrigingError> {
         let (alpha, one_c_one, mu_hat, sigma2, nll) = concentrate(&chol, &y)?;
+        // The factor changed: any cached conditioning probe is stale.
+        // Recomputing here would put an O(n²) estimator on the online
+        // observe path, so invalidate and let the next health consumer
+        // (doctor, metricsx) probe lazily.
+        self.health = None;
         self.x = Arc::new(x);
         self.y = y;
         self.chol = chol;
@@ -478,6 +504,38 @@ impl OrdinaryKriging {
         &self.alpha
     }
 
+    /// Run the numerical-health probe and cache the result: a Hager
+    /// 1-norm condition estimate off the existing factor (O(n²)) plus
+    /// the escalated jitter. Called once per fit/refit — never from the
+    /// predict path — and skipped entirely when
+    /// [`crate::obs::health::set_probes_enabled`] turned probes off.
+    pub fn probe_health(&mut self) {
+        if crate::obs::health::probes_enabled() {
+            self.health = Some(self.compute_health());
+        }
+    }
+
+    fn compute_health(&self) -> ModelHealth {
+        ModelHealth {
+            cond_estimate: self.chol.condest_1norm(),
+            jitter: self.chol.jitter(),
+            n: self.x.rows(),
+        }
+    }
+
+    /// The cached fit-time health probe, if one ran and no online update
+    /// invalidated it since.
+    pub fn health(&self) -> Option<ModelHealth> {
+        self.health
+    }
+
+    /// Health snapshot, computing the condition estimate on demand when
+    /// no cached probe is available. O(n²) worst case — strictly for the
+    /// doctor/metrics paths, never the predict hot path.
+    pub fn health_or_probe(&self) -> ModelHealth {
+        self.health.unwrap_or_else(|| self.compute_health())
+    }
+
     /// Approximate bytes of fitted state resident in memory: the n×n
     /// factor dominates, plus training inputs, targets, and weights.
     /// Lets the serving `stats`/`health` ops make window eviction and
@@ -505,6 +563,17 @@ impl OrdinaryKriging {
         // v2: training targets (online state). Appended last so the v1
         // field order above is a strict prefix.
         w.put_f64_slice(&self.y);
+        // v5: optional health probe. Only the condition estimate needs
+        // storing — jitter and n are already recoverable from the fields
+        // above, and a flag byte keeps unprobed models honest (`None`
+        // stays `None` across a save/load round trip).
+        match self.health {
+            Some(h) => {
+                w.put_bool(true);
+                w.put_f64(h.cond_estimate);
+            }
+            None => w.put_bool(false),
+        }
     }
 
     /// Inverse of [`Self::write_artifact`]; validates cross-field shape
@@ -552,17 +621,25 @@ impl OrdinaryKriging {
             let lt = l.matvec(&t);
             (0..n).map(|i| lt[i] + mu_hat).collect()
         };
+        let chol = Cholesky::from_parts(l, jitter)?;
+        let health = if version >= 5 && r.get_bool()? {
+            let cond_estimate = r.get_f64()?;
+            Some(ModelHealth { cond_estimate, jitter: chol.jitter(), n })
+        } else {
+            None
+        };
         Ok(Self {
             kernel: Kernel::new(kind, theta),
             nugget,
             x: Arc::new(x),
             y,
-            chol: Cholesky::from_parts(l, jitter)?,
+            chol,
             alpha,
             one_c_one,
             mu_hat,
             sigma2,
             nll,
+            health,
         })
     }
 }
@@ -575,6 +652,18 @@ fn append_row(x: &Matrix, row: &[f64]) -> Matrix {
     data.extend_from_slice(x.as_slice());
     data.extend_from_slice(row);
     Matrix::from_vec(n + 1, d, data)
+}
+
+/// A silent conditioning change is the one thing an online model must
+/// not do: when an incremental factor update falls back to the full
+/// jitter-escalating refactorization, record it in the degeneracy
+/// counters and the structured log with the jitter it landed on.
+fn note_factor_fallback(op: &'static str, n: usize, jitter: f64) {
+    crate::obs::health::counters().note_factor_fallback();
+    log::warn!(
+        "factor_full fallback in {op}: incremental update hit a non-PD pivot \
+         (n={n}, escalated jitter={jitter:.3e})"
+    );
 }
 
 /// Factor `R(x) + nugget·I` from scratch with jitter escalation — the
@@ -910,13 +999,43 @@ mod tests {
     fn observe_duplicate_point_falls_back_to_refactor() {
         // With a negligible nugget, appending an exact duplicate of a
         // training point makes C singular; the incremental append fails
-        // and the jitter-escalating refactorization must rescue it.
+        // and the jitter-escalating refactorization must rescue it —
+        // and the fallback must be visible in the degeneracy counters,
+        // not silent (the pre-fix behavior).
+        let before = crate::obs::health::counters().snapshot();
         let (mut m, x, _) = toy_model(15, 14, 1e-12);
         let dup = x.row(3).to_vec();
         m.observe_point(&dup, 1.25).unwrap();
         assert_eq!(m.n_train(), 16);
         let pred = m.predict(&x).unwrap();
         assert!(pred.mean.iter().all(|v| v.is_finite()));
+        let delta = crate::obs::health::counters().snapshot().delta_since(&before);
+        assert!(delta.factor_fallbacks >= 1, "fallback not counted");
+        assert!(delta.jitter_escalations >= 1, "escalation not counted");
+    }
+
+    #[test]
+    fn health_probe_lifecycle() {
+        // fit() probes; the probe survives artifact-free cloning; online
+        // updates invalidate it; health_or_probe recomputes on demand.
+        let (mut m, _, _) = toy_model(20, 31, 1e-8);
+        let h = m.health().expect("fit should probe health");
+        assert!(h.cond_estimate.is_finite() && h.cond_estimate >= 1.0);
+        assert_eq!(h.jitter, 0.0, "well-conditioned toy fit needed jitter");
+        assert_eq!(h.n, 20);
+        assert_eq!(h.class(), crate::obs::health::HealthClass::Ok);
+
+        m.observe_point(&[0.31, -0.41], 0.2).unwrap();
+        assert!(m.health().is_none(), "online update must invalidate the probe");
+        let lazy = m.health_or_probe();
+        assert_eq!(lazy.n, 21);
+        assert!(lazy.cond_estimate.is_finite() && lazy.cond_estimate >= 1.0);
+
+        // With probes disabled, fits skip the estimator entirely.
+        crate::obs::health::set_probes_enabled(false);
+        let (m2, _, _) = toy_model(10, 32, 1e-8);
+        crate::obs::health::set_probes_enabled(true);
+        assert!(m2.health().is_none(), "disabled probes still ran");
     }
 
     #[test]

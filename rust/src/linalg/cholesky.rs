@@ -88,7 +88,12 @@ impl Cholesky {
         let mut jitter = 0.0;
         loop {
             match Self::with_jitter_w(a, jitter, workers) {
-                Ok(c) => return Ok(c),
+                Ok(c) => {
+                    if jitter > 0.0 {
+                        crate::obs::health::counters().note_jitter_escalation(jitter);
+                    }
+                    return Ok(c);
+                }
                 Err(e) => {
                     jitter = if jitter == 0.0 { scale * 1e-10 } else { jitter * 10.0 };
                     if jitter > scale * 1e-4 {
@@ -476,6 +481,28 @@ impl Cholesky {
         Self { l, jitter: self.jitter }
     }
 
+    /// Hager 1-norm condition estimate of the factored matrix
+    /// `A (+ jitter·I) = L·Lᵀ` — the per-fit numerical-health probe.
+    ///
+    /// Estimates ‖A‖₁ and ‖A⁻¹‖₁ with Hager's iteration, a handful of
+    /// O(n²) applications of `A` (two triangular matvecs) and `A⁻¹` (one
+    /// solve) off the existing factor: `A` is never formed and nothing
+    /// O(n³) runs, so the probe is cheap enough for once-per-fit use but
+    /// must still stay off the predict hot path. The result is a lower
+    /// bound on the true κ₁, in practice tight within a small factor —
+    /// ample for the ok/warn/critical classification in
+    /// [`crate::obs::health`]. A degenerate factor may yield a
+    /// non-finite estimate, which classifies as critical.
+    pub fn condest_1norm(&self) -> f64 {
+        let n = self.dim();
+        if n == 0 {
+            return 1.0;
+        }
+        let norm_a = hager_onenorm(n, |v| self.l.matvec(&self.l.matvec_t(v)));
+        let norm_ainv = hager_onenorm(n, |v| self.solve(v));
+        norm_a * norm_ainv
+    }
+
     /// Reconstruct `L·Lᵀ` (testing / diagnostics).
     pub fn reconstruct(&self) -> Matrix {
         let n = self.dim();
@@ -493,6 +520,39 @@ impl Cholesky {
         }
         a
     }
+}
+
+/// Hager's 1-norm estimator for a *symmetric* operator given by `apply`
+/// (symmetry lets `Bᵀ·ξ` reuse the same application). A few gradient-
+/// ascent steps on `x ↦ ‖B·x‖₁` over the 1-norm unit ball, starting from
+/// the uniform vector and jumping to the most promising coordinate
+/// vertex; every intermediate estimate is a valid lower bound, so the
+/// running max is returned even if the iteration stalls.
+fn hager_onenorm(n: usize, mut apply: impl FnMut(&[f64]) -> Vec<f64>) -> f64 {
+    let mut x = vec![1.0 / n as f64; n];
+    let mut est = 0.0f64;
+    let mut last_j = usize::MAX;
+    for _ in 0..5 {
+        let y = apply(&x);
+        est = est.max(y.iter().map(|v| v.abs()).sum());
+        let xi: Vec<f64> = y.iter().map(|v| if *v >= 0.0 { 1.0 } else { -1.0 }).collect();
+        let z = apply(&xi);
+        let (mut j, mut zmax) = (0usize, -1.0f64);
+        for (i, v) in z.iter().enumerate() {
+            if v.abs() > zmax {
+                zmax = v.abs();
+                j = i;
+            }
+        }
+        let zx: f64 = z.iter().zip(&x).map(|(a, b)| a * b).sum();
+        if zmax <= zx || j == last_j {
+            break;
+        }
+        last_j = j;
+        x.iter_mut().for_each(|v| *v = 0.0);
+        x[j] = 1.0;
+    }
+    est
 }
 
 /// Rank-1 *update* of the trailing block of a lower-triangular factor:
@@ -842,6 +902,73 @@ mod tests {
             let diff = l.max_abs_diff(fresh.l());
             assert!(diff < 1e-9, "rank-1 update differs by {diff} (n={n})");
         }
+    }
+
+    #[test]
+    fn condest_exact_on_diagonal_matrices() {
+        // κ₁ of a diagonal matrix is max/min diagonal — Hager's vertex
+        // jumps find it exactly.
+        let a = Matrix::from_rows(&[&[1.0, 0.0], &[0.0, 100.0]]);
+        let c = Cholesky::new(&a).unwrap();
+        assert!((c.condest_1norm() - 100.0).abs() < 1e-9);
+        // Identity: perfectly conditioned.
+        let c = Cholesky::new(&Matrix::identity(8)).unwrap();
+        assert!((c.condest_1norm() - 1.0).abs() < 1e-12);
+        // n = 1 degenerates to 1 (‖A‖·‖A⁻¹‖ cancels).
+        let c = Cholesky::new(&Matrix::from_rows(&[&[7.0]])).unwrap();
+        assert!((c.condest_1norm() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn condest_lower_bounds_true_condition_prop() {
+        // The estimate is a lower bound on κ₁, and close enough for an
+        // order-of-magnitude health classification (Hager rarely misses
+        // by more than ~3×; we assert a deliberately loose envelope).
+        check_default(|rng| {
+            let n = gen_size(rng, 2, 16);
+            let a = gen_spd(rng, n);
+            let c = Cholesky::new(&a).map_err(|e| e.to_string())?;
+            // True κ₁ via explicit column norms of A and A⁻¹.
+            let col_norm = |m: &Matrix| {
+                (0..m.cols())
+                    .map(|j| (0..m.rows()).map(|i| m[(i, j)].abs()).sum::<f64>())
+                    .fold(0.0, f64::max)
+            };
+            let inv = c.solve_matrix(&Matrix::identity(n));
+            let true_cond = col_norm(&a) * col_norm(&inv);
+            let est = c.condest_1norm();
+            crate::prop_assert!(est.is_finite() && est > 0.0, "estimate not finite (n={n})");
+            crate::prop_assert!(
+                est <= true_cond * (1.0 + 1e-9),
+                "estimate {est} exceeds true κ₁ {true_cond} (n={n})"
+            );
+            crate::prop_assert!(
+                est >= true_cond / (n as f64 * 50.0),
+                "estimate {est} too loose vs κ₁ {true_cond} (n={n})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn condest_flags_near_singular_regularized_factor() {
+        // The rank-1 matrix rescued by jitter has κ ≈ 2/jitter — the
+        // probe must see an enormous condition number.
+        let a = Matrix::from_rows(&[&[1.0, 1.0], &[1.0, 1.0]]);
+        let c = Cholesky::new_regularized(&a).unwrap();
+        assert!(c.condest_1norm() > 1e6, "cond {} too small", c.condest_1norm());
+    }
+
+    #[test]
+    fn escalation_bumps_degeneracy_counter() {
+        let before = crate::obs::health::counters().snapshot();
+        let a = Matrix::from_rows(&[&[1.0, 1.0], &[1.0, 1.0]]);
+        let c = Cholesky::new_regularized(&a).unwrap();
+        let delta = crate::obs::health::counters().snapshot().delta_since(&before);
+        // Counters are process-global, so concurrent tests may add more;
+        // at least this escalation must be visible with its magnitude.
+        assert!(delta.jitter_escalations >= 1);
+        assert!(delta.max_jitter >= c.jitter());
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //!   stream      stream observations into a running server (protocol v3)
 //!   optimize    run a budgeted ask/tell EGO loop on a benchmark function
 //!   top         live dashboard over a running server's `metricsx` feed
+//!   doctor      numerical-health report for an artifact or live server
 //!   fitlog      render a `--telemetry` JSONL recording (phase timeline,
 //!               hyperopt convergence, ingestion and optimizer traces)
 //!   benchdiff   compare two bench JSON records and fail on regression
@@ -28,9 +29,11 @@ use cluster_kriging::distributed::{self, ShardManifest, ShardedClusterKriging};
 use cluster_kriging::eval::experiments::{run_all, ExperimentConfig};
 use cluster_kriging::eval::report::{self, PaperTable};
 use cluster_kriging::eval::HarnessConfig;
-use cluster_kriging::kriging::{HyperOpt, Surrogate};
+use cluster_kriging::kriging::{HyperOpt, NuggetMode, Surrogate};
 use cluster_kriging::metrics;
-use cluster_kriging::obs::{export, FitSink, FitTelemetry, Sampling, Tracer};
+use cluster_kriging::obs::{
+    export, FitSink, FitTelemetry, HealthClass, HealthReport, Sampling, SloEngine, SloSpec, Tracer,
+};
 use cluster_kriging::online::wal::{self, Durability, DurabilityConfig, FsyncPolicy};
 use cluster_kriging::online::{OnlineModel, OnlinePolicy, RefitConfig};
 use cluster_kriging::optimize::{Acquisition, Bounds, Optimizer, OptimizerConfig};
@@ -85,6 +88,7 @@ fn main() {
         Some("stream") => cmd_stream(&args),
         Some("optimize") => cmd_optimize(&args),
         Some("top") => cmd_top(&args),
+        Some("doctor") => cmd_doctor(&args),
         Some("fitlog") => cmd_fitlog(&args),
         Some("benchdiff") => cmd_benchdiff(&args),
         Some("info") => cmd_info(&args),
@@ -103,11 +107,14 @@ fn print_usage() {
     println!(
         "ckrig — Cluster Kriging (van Stein et al., 2017)\n\
          \n\
-         USAGE: ckrig <experiment|fit|serve|top|info> [options]\n\
+         USAGE: ckrig <experiment|fit|serve|top|doctor|info> [options]\n\
          \n\
          experiment --table 1|2|3 | --figure 2 [--paper-scale] [--folds N]\n\
          \u{20}          [--datasets a,b] [--algos SoD,MTCK] [--out results/]\n\
          fit        --dataset <name> --algo SPEC [--seed S] [--n N] [--out model.ck]\n\
+         \u{20}          [--degenerate]  (duplicate every training row and pin the\n\
+         \u{20}           nugget near zero — a conditioning stress fixture for\n\
+         \u{20}           `ckrig doctor`)\n\
          \u{20}          [--telemetry out.jsonl] [--progress]  (fit-path telemetry:\n\
          \u{20}           per-phase timings, per-eval hyperopt traces; render with\n\
          \u{20}           `ckrig fitlog out.jsonl`)\n\
@@ -127,6 +134,10 @@ fn print_usage() {
          \u{20}          [--trace-sample N] [--trace-capacity M]  (request tracing:\n\
          \u{20}           0=forced `trace=` only (default), 1=every request, N=1-in-N;\n\
          \u{20}           dump a tree with the `trace <id>` protocol op)\n\
+         \u{20}          [--slo p99=5ms,err=0.1%,miscal=off]  (SLO alerting:\n\
+         \u{20}           rolling-window latency/error/calibration statuses in\n\
+         \u{20}           `health`, `stats`, `metricsx` and `ckrig top`; state\n\
+         \u{20}           transitions log one structured warn each)\n\
          \u{20}          (shard worker: --shard dir/shard-0.ck)\n\
          \u{20}          (coordinator: --manifest dir/manifest.ck\n\
          \u{20}           --shards host0:port,host1:port,… [--shard-timeout MS])\n\
@@ -138,7 +149,12 @@ fn print_usage() {
          \u{20}          [--telemetry out.jsonl] [--progress]  (per-iteration\n\
          \u{20}           incumbent/acquisition traces + refit phases)\n\
          top        [--addr host:port] [--interval MS] [--once]  (live dashboard:\n\
-         \u{20}          counters, latency percentiles, per-model calibration)\n\
+         \u{20}          counters, latency percentiles, per-model calibration,\n\
+         \u{20}          conditioning and SLO status)\n\
+         doctor     --artifact model.ck | --addr host:port  (numerical-health\n\
+         \u{20}          report: per-cluster condition estimates, escalated jitter,\n\
+         \u{20}          cluster balance, degeneracy counters, WAL lag, SLO table;\n\
+         \u{20}          exits non-zero on critical conditioning or SLO breach)\n\
          fitlog     <telemetry.jsonl>  (phase timeline, hyperopt convergence,\n\
          \u{20}          ingestion/optimizer traces from a --telemetry recording)\n\
          benchdiff  <old.json> <new.json> [--gate PCT]  (compare bench records;\n\
@@ -282,22 +298,24 @@ fn fit_spec(
     spec: &SurrogateSpec,
     seed: u64,
     telemetry: Option<FitSink>,
+    nugget: Option<f64>,
 ) -> Result<(Standardized, Dataset)> {
     let (train, test) = ds.split(0.8, seed);
     // Standardize on the training fold (as the evaluation harness does) —
     // the θ search bounds assume unit-scale inputs.
     let std = Standardizer::fit(&train);
     let tr = std.transform(&train);
-    let opts = FitOptions {
-        hyperopt: HyperOpt {
-            restarts: 1,
-            max_evals: 20,
-            isotropic: tr.d() > 8,
-            telemetry,
-            ..HyperOpt::default()
-        },
-        seed,
+    let mut hyperopt = HyperOpt {
+        restarts: 1,
+        max_evals: 20,
+        isotropic: tr.d() > 8,
+        telemetry,
+        ..HyperOpt::default()
     };
+    if let Some(v) = nugget {
+        hyperopt.nugget = NuggetMode::Fixed(v);
+    }
+    let opts = FitOptions { hyperopt, seed };
     let model = spec.fit(&tr, &opts)?;
     Ok((Standardized::new(model, std), test))
 }
@@ -313,12 +331,25 @@ fn cmd_fit(args: &Args) -> Result<()> {
 
     let (rec, sink) = telemetry_from_args(args);
     let phase = sink.as_ref().map(|s| s.phase("load-data"));
-    let ds = load_dataset(&dataset, seed, n)?;
+    let mut ds = load_dataset(&dataset, seed, n)?;
     drop(phase);
+    // --degenerate: duplicate every training row and pin the nugget near
+    // zero, so the correlation matrix is numerically singular and the
+    // factorization must escalate jitter — a stress fixture for
+    // `ckrig doctor` and the CI conditioning smoke.
+    let degenerate = args.has_flag("degenerate");
+    let nugget = if degenerate {
+        let idx: Vec<usize> = (0..ds.n()).flat_map(|i| [i, i]).collect();
+        ds = ds.subset(&idx);
+        ds.name.push_str("+dup");
+        Some(1e-12)
+    } else {
+        None
+    };
     log::info!("dataset {} ({}×{}), algo {spec}", ds.name, ds.n(), ds.d());
     let t0 = std::time::Instant::now();
     let phase = sink.as_ref().map(|s| s.phase("fit"));
-    let (model, test) = fit_spec(&ds, &spec, seed, sink.as_ref().map(|s| s.nested()))?;
+    let (model, test) = fit_spec(&ds, &spec, seed, sink.as_ref().map(|s| s.nested()), nugget)?;
     drop(phase);
     let fit_s = t0.elapsed().as_secs_f64();
     let t1 = std::time::Instant::now();
@@ -417,6 +448,21 @@ fn tracer_from_args(args: &Args) -> Result<Arc<Tracer>> {
     Ok(Arc::new(Tracer::new(capacity, sampling)))
 }
 
+/// Build the SLO alerting engine from `--slo SPEC` (e.g.
+/// `p99=5ms,err=0.1%,miscal=off`); `None` when the flag is absent, which
+/// disables SLO evaluation entirely.
+fn slo_from_args(args: &Args) -> Result<Option<Arc<SloEngine>>> {
+    match args.get("slo") {
+        Some(spec) => {
+            let spec =
+                SloSpec::parse(spec).map_err(|e| anyhow::anyhow!("parsing --slo: {e}"))?;
+            log::info!("SLO alerting on: {spec}");
+            Ok(Some(Arc::new(SloEngine::new(spec))))
+        }
+        None => Ok(None),
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7471").to_string();
     let name = args.get_or("name", "default").to_string();
@@ -500,7 +546,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let spec = resolve_spec(args, "mtck:4")?;
             let ds = load_dataset(&dataset, seed, n)?;
             log::info!("fitting {spec} on {} ({}×{})", ds.name, ds.n(), ds.d());
-            let (model, _) = fit_spec(&ds, &spec, seed, None)?;
+            let (model, _) = fit_spec(&ds, &spec, seed, None, None)?;
             let refit = RefitConfig { spec, opts: FitOptions::fast() };
             (Box::new(model), Some(refit))
         };
@@ -553,6 +599,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             health: Arc::clone(&health),
             tracer: tracer_from_args(args)?,
             pool: None,
+            slo: slo_from_args(args)?,
         },
     )?;
     let ckpt_stop = Arc::new(AtomicBool::new(false));
@@ -675,6 +722,7 @@ fn serve_coordinator(args: &Args, addr: &str, name: &str, manifest_path: &str) -
             health,
             tracer: tracer_from_args(args)?,
             pool: Some(Arc::clone(&pool)),
+            slo: slo_from_args(args)?,
         },
     )?;
     println!(
@@ -985,6 +1033,25 @@ fn render_top(addr: &str, samples: &[export::Sample], stats: &str) {
             val("ckrig_wal_unsynced")
         );
     }
+    let jits = val("ckrig_degeneracy_jitter_escalations_total");
+    if jits > 0.0 {
+        println!(
+            "degeneracy: {jits:.0} jitter escalations (max {:.1e})  {:.0} factor fallbacks  \
+             {:.0} floor hits  {:.0} non-finite",
+            val("ckrig_degeneracy_max_jitter"),
+            val("ckrig_degeneracy_factor_fallbacks_total"),
+            val("ckrig_degeneracy_combiner_floor_hits_total"),
+            val("ckrig_degeneracy_nonfinite_rejected_total"),
+        );
+    }
+    if have("ckrig_slo_worst") {
+        let code = |c: f64| match c as u64 {
+            0 => "ok",
+            1 => "warn",
+            _ => "BREACH",
+        };
+        println!("slo: {}", code(val("ckrig_slo_worst")));
+    }
     let mut models: Vec<&str> = samples
         .iter()
         .filter(|s| s.name.starts_with("ckrig_model_"))
@@ -1004,11 +1071,44 @@ fn render_top(addr: &str, samples: &[export::Sample], stats: &str) {
     if !models.is_empty() {
         println!();
         println!(
-            "{:<14} {:>8} {:>8} {:>6} {:>6} {:>6}  {:^16} {:>8} {:>10}",
-            "model", "points", "observed", "refits", "drift", "z2", "cov 90/95/99", "rmse", "refit"
+            "{:<14} {:>8} {:>8} {:>6} {:>6} {:>6}  {:^16} {:>8} {:>10} {:>9} {:>6}",
+            "model",
+            "points",
+            "observed",
+            "refits",
+            "drift",
+            "z2",
+            "cov 90/95/99",
+            "rmse",
+            "refit",
+            "cond",
+            "slo"
         );
         for m in models {
             let flagged = mval("ckrig_model_calibration_flagged", m) >= 1.0;
+            // Conditioning column from the health gauges; "-" for slots
+            // whose model exposes no health report.
+            let cond = if samples.iter().any(|s| {
+                s.name == "ckrig_model_cond_estimate"
+                    && s.labels.iter().any(|(k, v)| k == "model" && v == m)
+            }) {
+                format!("{:.1e}", mval("ckrig_model_cond_estimate", m))
+            } else {
+                "-".to_string()
+            };
+            let slo = if samples.iter().any(|s| {
+                s.name == "ckrig_slo_status"
+                    && s.labels.iter().any(|(k, v)| k == "model" && v == m)
+            }) {
+                match mval("ckrig_slo_status", m) as u64 {
+                    0 => "ok",
+                    1 => "warn",
+                    _ => "BREACH",
+                }
+                .to_string()
+            } else {
+                "-".to_string()
+            };
             // Refit posture: running (with elapsed wall time), last
             // completed duration, or idle before the first refit.
             let refit = if mval("ckrig_model_refit_in_flight", m) >= 1.0 {
@@ -1022,7 +1122,7 @@ fn render_top(addr: &str, samples: &[export::Sample], stats: &str) {
                 }
             };
             println!(
-                "{:<14} {:>8.0} {:>8.0} {:>6.0} {:>6.2} {:>6.2}  {:.2}/{:.2}/{:.2}  {:>8.3} {:>10}{}",
+                "{:<14} {:>8.0} {:>8.0} {:>6.0} {:>6.2} {:>6.2}  {:.2}/{:.2}/{:.2}  {:>8.3} {:>10} {:>9} {:>6}{}",
                 m,
                 mval("ckrig_model_train_points", m),
                 mval("ckrig_model_observed_total", m),
@@ -1034,6 +1134,8 @@ fn render_top(addr: &str, samples: &[export::Sample], stats: &str) {
                 mval("ckrig_model_coverage99", m),
                 mval("ckrig_model_quality_rmse", m),
                 refit,
+                cond,
+                slo,
                 if flagged { "  [MISCALIBRATED]" } else { "" }
             );
         }
@@ -1068,6 +1170,188 @@ fn hist_percentile(samples: &[export::Sample], name: &str, p: f64) -> f64 {
         }
     }
     f64::INFINITY
+}
+
+/// `ckrig doctor` — render a numerical-health report for a saved
+/// artifact (`--artifact model.ck`) or a live server (`--addr
+/// host:port`). Exits non-zero when conditioning is critical or an SLO
+/// is in breach; escalated jitter alone is a warning, not a failure.
+fn cmd_doctor(args: &Args) -> Result<()> {
+    match (args.get("artifact"), args.get("addr")) {
+        (Some(path), None) => doctor_artifact(path),
+        (None, Some(addr)) => doctor_addr(addr),
+        _ => bail!("usage: ckrig doctor --artifact model.ck | --addr host:port"),
+    }
+}
+
+fn doctor_artifact(path: &str) -> Result<()> {
+    let model = SurrogateSpec::load_path(path)?;
+    println!("ckrig doctor — artifact {path} ({})", model.name());
+    let Some(report) = model.health_report() else {
+        // Composition without stored factors (e.g. an empty shard):
+        // nothing to diagnose, and nothing wrong either.
+        println!("model exposes no health report");
+        return Ok(());
+    };
+    render_health_report(&report);
+    let worst = report.worst_class();
+    println!("verdict     : {worst}");
+    anyhow::ensure!(
+        worst != HealthClass::Critical,
+        "doctor: conditioning is critical (estimate past 1e12 — predictions \
+         carry at most a few significant digits)"
+    );
+    Ok(())
+}
+
+/// Per-cluster conditioning table + aggregates for one health report.
+fn render_health_report(report: &HealthReport) {
+    println!(
+        "{:<8} {:>8} {:>13} {:>13} {:>9}",
+        "cluster", "points", "cond(1-norm)", "jitter", "class"
+    );
+    for c in &report.clusters {
+        println!(
+            "{:<8} {:>8} {:>13.3e} {:>13.3e} {:>9}",
+            c.cluster,
+            c.health.n,
+            c.health.cond_estimate,
+            c.health.jitter,
+            c.health.class()
+        );
+    }
+    println!(
+        "clusters    : {} ({} points, balance {:.2})",
+        report.clusters.len(),
+        report.total_points(),
+        report.balance()
+    );
+    let jitter_note = if report.max_jitter() > 0.0 {
+        "  — escalated jitter: the correlation matrix was not PD as given"
+    } else {
+        ""
+    };
+    println!("max cond    : {:.3e}", report.max_cond());
+    println!("max jitter  : {:.3e}{jitter_note}", report.max_jitter());
+}
+
+fn doctor_addr(addr: &str) -> Result<()> {
+    let mut client =
+        Client::connect(addr).with_context(|| format!("connecting to server at {addr}"))?;
+    let text = client.metricsx().context("server does not speak `metricsx` (v7)")?;
+    let samples = export::parse(&text)?;
+    let stats = client.stats()?;
+    let val = |name: &str| samples.iter().find(|s| s.name == name).map_or(0.0, |s| s.value);
+    let have = |name: &str| samples.iter().any(|s| s.name == name);
+    let mval = |name: &str, model: &str| {
+        samples
+            .iter()
+            .find(|s| {
+                s.name == name && s.labels.iter().any(|(k, v)| k == "model" && v == model)
+            })
+            .map_or(0.0, |s| s.value)
+    };
+
+    println!("ckrig doctor — server {addr} (up {:.0}s)", val("ckrig_uptime_seconds"));
+    println!();
+    println!("degeneracy counters");
+    println!("  jitter escalations  : {:.0}", val("ckrig_degeneracy_jitter_escalations_total"));
+    println!(
+        "  jitter last/max     : {:.3e} / {:.3e}{}",
+        val("ckrig_degeneracy_last_jitter"),
+        val("ckrig_degeneracy_max_jitter"),
+        if val("ckrig_degeneracy_max_jitter") > 0.0 { "  (escalated jitter)" } else { "" },
+    );
+    println!("  factor fallbacks    : {:.0}", val("ckrig_degeneracy_factor_fallbacks_total"));
+    println!(
+        "  combiner floor hits : {:.0}",
+        val("ckrig_degeneracy_combiner_floor_hits_total")
+    );
+    println!(
+        "  non-finite rejected : {:.0}",
+        val("ckrig_degeneracy_nonfinite_rejected_total")
+    );
+    println!(
+        "  nugget boundary hits: {:.0}",
+        val("ckrig_degeneracy_nugget_boundary_hits_total")
+    );
+
+    // Per-model conditioning, from the health gauge families.
+    let mut models: Vec<&str> = samples
+        .iter()
+        .filter(|s| s.name == "ckrig_model_cond_estimate")
+        .filter_map(|s| s.labels.iter().find(|(k, _)| k == "model"))
+        .map(|(_, v)| v.as_str())
+        .collect();
+    models.sort_unstable();
+    models.dedup();
+    let mut worst_health = 0.0f64;
+    if !models.is_empty() {
+        println!();
+        println!("{:<14} {:>13} {:>13} {:>9}", "model", "cond(1-norm)", "jitter", "class");
+        for m in &models {
+            let class_code = mval("ckrig_model_health_class", m);
+            worst_health = worst_health.max(class_code);
+            let class = match class_code as u64 {
+                0 => "ok",
+                1 => "warn",
+                _ => "critical",
+            };
+            println!(
+                "{:<14} {:>13.3e} {:>13.3e} {:>9}",
+                m,
+                mval("ckrig_model_cond_estimate", m),
+                mval("ckrig_model_jitter", m),
+                class
+            );
+        }
+    }
+
+    if have("ckrig_wal_last_seq") {
+        println!();
+        println!(
+            "wal         : seq {:.0}, {:.0} unsynced (durability lag)",
+            val("ckrig_wal_last_seq"),
+            val("ckrig_wal_unsynced")
+        );
+    }
+    if have("ckrig_shards_total") {
+        println!(
+            "shards      : {:.0}/{:.0} alive",
+            val("ckrig_shards_alive"),
+            val("ckrig_shards_total")
+        );
+    }
+
+    println!();
+    let slo_breach = if have("ckrig_slo_worst") {
+        let code = |c: f64| match c as u64 {
+            0 => "ok",
+            1 => "warn",
+            _ => "breach",
+        };
+        println!("slo         : worst {}", code(val("ckrig_slo_worst")));
+        let mut slo_models: Vec<&str> = samples
+            .iter()
+            .filter(|s| s.name == "ckrig_slo_status")
+            .filter_map(|s| s.labels.iter().find(|(k, _)| k == "model"))
+            .map(|(_, v)| v.as_str())
+            .collect();
+        slo_models.sort_unstable();
+        slo_models.dedup();
+        for m in &slo_models {
+            println!("  {m:<12}: {}", code(mval("ckrig_slo_status", m)));
+        }
+        val("ckrig_slo_worst") >= 2.0
+    } else {
+        println!("slo         : off (serve with --slo to enable alerting)");
+        false
+    };
+    println!("stats: {stats}");
+
+    anyhow::ensure!(!slo_breach, "doctor: SLO breach");
+    anyhow::ensure!(worst_health < 2.0, "doctor: conditioning is critical");
+    Ok(())
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -147,12 +147,29 @@ pub struct Sample {
 }
 
 /// Parse an exposition document (as produced by [`PromText`]) back into
-/// samples. Returns `Err` on any malformed non-comment line — the tests
-/// use this as the "emits parseable Prometheus text" gate.
+/// samples. Strict by design — the tests and `ckrig top` use this as
+/// the "emits parseable Prometheus text" gate, so every defect is a
+/// hard `Err`, never a panic or a silently-dropped line:
+///
+/// * any malformed non-comment line (no value separator, non-numeric
+///   value, unclosed/unquoted labels);
+/// * a missing `# EOF` terminator (a truncated scrape must not pass as
+///   a short-but-valid document) or content after it;
+/// * duplicate samples (same metric name AND label set) — the symptom
+///   of an exporter registering one family twice.
 pub fn parse(text: &str) -> anyhow::Result<Vec<Sample>> {
     let mut out = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    let mut terminated = false;
     for line in text.lines() {
         let line = line.trim_end();
+        if terminated {
+            anyhow::bail!("metricsx: content after the {EOF_MARKER:?} terminator");
+        }
+        if line == EOF_MARKER {
+            terminated = true;
+            continue;
+        }
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
@@ -185,8 +202,13 @@ pub fn parse(text: &str) -> anyhow::Result<Vec<Sample>> {
             }
         };
         anyhow::ensure!(!name.is_empty(), "metricsx: empty metric name in {line:?}");
+        anyhow::ensure!(
+            seen.insert((name.clone(), labels.clone())),
+            "metricsx: duplicate sample {name:?} with labels {labels:?}"
+        );
         out.push(Sample { name, labels, value });
     }
+    anyhow::ensure!(terminated, "metricsx: missing {EOF_MARKER:?} terminator (truncated reply?)");
     Ok(out)
 }
 
@@ -302,10 +324,43 @@ mod tests {
 
     #[test]
     fn malformed_lines_are_rejected() {
-        assert!(parse("justaname").is_err());
-        assert!(parse("name notanumber").is_err());
-        assert!(parse("name{unclosed 1").is_err());
-        assert!(parse("# a comment\n\n").unwrap().is_empty());
+        assert!(parse("justaname\n# EOF").is_err());
+        assert!(parse("name{unclosed 1\n# EOF").is_err());
+        assert!(parse("# a comment\n\n# EOF").unwrap().is_empty());
+    }
+
+    #[test]
+    fn truncated_document_is_rejected() {
+        // A reply cut off mid-scrape has no terminator and must not pass
+        // as a short-but-valid document.
+        assert!(parse("").is_err());
+        assert!(parse("# a comment\n\n").is_err());
+        assert!(parse("ckrig_requests_total 42\n").is_err());
+        // Content after the terminator is just as suspicious.
+        assert!(parse("# EOF\nckrig_requests_total 42").is_err());
+        // The builder's own output always terminates cleanly.
+        assert!(parse(&PromText::new().finish()).unwrap().is_empty());
+    }
+
+    #[test]
+    fn non_numeric_values_are_rejected() {
+        assert!(parse("name notanumber\n# EOF").is_err());
+        // Spelled-out numbers don't sneak through either. (Note "NaN"
+        // WOULD parse — Rust's f64 parser accepts it — so the word test
+        // uses something unambiguous.)
+        assert!(parse("name twelve\n# EOF").is_err());
+        assert!(parse("name 1.2.3\n# EOF").is_err());
+        assert!(parse("name{model=\"a\"} oops\n# EOF").is_err());
+    }
+
+    #[test]
+    fn duplicate_samples_are_rejected() {
+        // Same name + same labels: an exporter registered a family twice.
+        assert!(parse("m 1\nm 2\n# EOF").is_err());
+        assert!(parse("m{a=\"x\"} 1\nm{a=\"x\"} 1\n# EOF").is_err());
+        // Same name under different labels is the normal family shape.
+        let ok = parse("m{le=\"10\"} 1\nm{le=\"30\"} 2\n# EOF").unwrap();
+        assert_eq!(ok.len(), 2);
     }
 
     #[test]

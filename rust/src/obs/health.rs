@@ -1,0 +1,391 @@
+//! Numerical-health observability: condition-number probes, degeneracy
+//! counters, and per-cluster health reports.
+//!
+//! Cluster Kriging keeps per-cluster correlation matrices small, but
+//! their *conditioning* silently degrades predictions: jitter escalation
+//! in [`crate::linalg::Cholesky::new_regularized`], near-singular kernels
+//! from duplicated points, variance-floored combiner weights, full
+//! refactorization fallbacks in the online ops. This module makes those
+//! events observable without touching the predict hot path:
+//!
+//! * [`DegeneracyCounters`] — process-wide atomic counters, bumped at
+//!   the exact code sites where the math degrades (jitter escalation,
+//!   `factor_full` fallback, combiner variance floor, non-finite input
+//!   rejection, hyperopt nugget-boundary evals). Exported via `metricsx`
+//!   and rendered by `ckrig doctor`.
+//! * [`ModelHealth`] — one model's conditioning snapshot: a cheap 1-norm
+//!   condition estimate off the existing Cholesky factor (never
+//!   recomputed on the predict path), the escalated jitter, and the
+//!   training size, classified Ok/Warn/Critical.
+//! * [`HealthReport`] — the per-cluster roll-up every clustered
+//!   surrogate answers through
+//!   [`crate::kriging::Surrogate::health_report`].
+//!
+//! The condition probe runs once per fit/refit, gated on
+//! [`probes_enabled`] so the §H1 bench can measure its cost; counters
+//! are single relaxed atomics and always on.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+// ---------------------------------------------------------------------
+// Probe switch
+// ---------------------------------------------------------------------
+
+static PROBES_ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Enable or disable the per-fit condition-number probes (§H1 measures
+/// both settings). Counters stay on either way — they are single relaxed
+/// atomics at already-degenerate code sites.
+pub fn set_probes_enabled(on: bool) {
+    PROBES_ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether fits should run the condition probe (default: on).
+pub fn probes_enabled() -> bool {
+    PROBES_ENABLED.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------
+// Degeneracy counters
+// ---------------------------------------------------------------------
+
+/// Process-wide counters of numerical-degeneracy events. One instance
+/// lives in a `static` ([`counters`]); every field is a relaxed atomic
+/// so the instrumented sites cost one uncontended atomic op.
+#[derive(Debug)]
+pub struct DegeneracyCounters {
+    /// Factorizations that only succeeded after jitter escalation.
+    jitter_escalations: AtomicU64,
+    /// f64 bits of the most recent escalated jitter magnitude.
+    last_jitter_bits: AtomicU64,
+    /// f64 bits of the largest escalated jitter seen (non-negative
+    /// floats order identically to their bit patterns, so `fetch_max`
+    /// on the bits is a numeric max).
+    max_jitter_bits: AtomicU64,
+    /// Online updates that fell back to a full refactorization after the
+    /// incremental factor update hit a non-PD pivot.
+    factor_fallbacks: AtomicU64,
+    /// Combiner merges that hit the variance floor (a degenerate
+    /// "certain" cluster posterior dominated the weights).
+    combiner_floor_hits: AtomicU64,
+    /// Non-finite inputs rejected before they could poison a fit or an
+    /// online update.
+    nonfinite_rejected: AtomicU64,
+    /// Hyperopt objective evaluations whose raw nugget parameter sat on
+    /// (or past) the search boundary — the optimizer is pinned against
+    /// the nugget box.
+    nugget_boundary_hits: AtomicU64,
+}
+
+impl DegeneracyCounters {
+    pub const fn new() -> Self {
+        Self {
+            jitter_escalations: AtomicU64::new(0),
+            last_jitter_bits: AtomicU64::new(0),
+            max_jitter_bits: AtomicU64::new(0),
+            factor_fallbacks: AtomicU64::new(0),
+            combiner_floor_hits: AtomicU64::new(0),
+            nonfinite_rejected: AtomicU64::new(0),
+            nugget_boundary_hits: AtomicU64::new(0),
+        }
+    }
+
+    /// A factorization succeeded only after escalating to `jitter`.
+    pub fn note_jitter_escalation(&self, jitter: f64) {
+        self.jitter_escalations.fetch_add(1, Ordering::Relaxed);
+        let bits = jitter.max(0.0).to_bits();
+        self.last_jitter_bits.store(bits, Ordering::Relaxed);
+        self.max_jitter_bits.fetch_max(bits, Ordering::Relaxed);
+    }
+
+    /// An incremental online update fell back to `factor_full`.
+    pub fn note_factor_fallback(&self) {
+        self.factor_fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A combiner merge hit the variance floor.
+    pub fn note_floor_hit(&self) {
+        self.combiner_floor_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A non-finite input was rejected.
+    pub fn note_nonfinite(&self) {
+        self.nonfinite_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A hyperopt eval pinned the nugget against its search boundary.
+    pub fn note_nugget_boundary(&self) {
+        self.nugget_boundary_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of every counter.
+    pub fn snapshot(&self) -> DegeneracySnapshot {
+        DegeneracySnapshot {
+            jitter_escalations: self.jitter_escalations.load(Ordering::Relaxed),
+            last_jitter: f64::from_bits(self.last_jitter_bits.load(Ordering::Relaxed)),
+            max_jitter: f64::from_bits(self.max_jitter_bits.load(Ordering::Relaxed)),
+            factor_fallbacks: self.factor_fallbacks.load(Ordering::Relaxed),
+            combiner_floor_hits: self.combiner_floor_hits.load(Ordering::Relaxed),
+            nonfinite_rejected: self.nonfinite_rejected.load(Ordering::Relaxed),
+            nugget_boundary_hits: self.nugget_boundary_hits.load(Ordering::Relaxed),
+        }
+    }
+}
+
+static COUNTERS: DegeneracyCounters = DegeneracyCounters::new();
+
+/// The process-wide degeneracy counters.
+pub fn counters() -> &'static DegeneracyCounters {
+    &COUNTERS
+}
+
+/// A point-in-time copy of the [`DegeneracyCounters`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DegeneracySnapshot {
+    pub jitter_escalations: u64,
+    pub last_jitter: f64,
+    pub max_jitter: f64,
+    pub factor_fallbacks: u64,
+    pub combiner_floor_hits: u64,
+    pub nonfinite_rejected: u64,
+    pub nugget_boundary_hits: u64,
+}
+
+impl DegeneracySnapshot {
+    /// Event counts accrued since `earlier` (jitter magnitudes keep
+    /// their current values — they are gauges, not counters).
+    pub fn delta_since(&self, earlier: &DegeneracySnapshot) -> DegeneracySnapshot {
+        DegeneracySnapshot {
+            jitter_escalations: self.jitter_escalations - earlier.jitter_escalations,
+            last_jitter: self.last_jitter,
+            max_jitter: self.max_jitter,
+            factor_fallbacks: self.factor_fallbacks - earlier.factor_fallbacks,
+            combiner_floor_hits: self.combiner_floor_hits - earlier.combiner_floor_hits,
+            nonfinite_rejected: self.nonfinite_rejected - earlier.nonfinite_rejected,
+            nugget_boundary_hits: self.nugget_boundary_hits - earlier.nugget_boundary_hits,
+        }
+    }
+
+    /// Sum of all event counters (magnitude gauges excluded) — zero
+    /// means nothing degenerate happened in the covered span.
+    pub fn total_events(&self) -> u64 {
+        self.jitter_escalations
+            + self.factor_fallbacks
+            + self.combiner_floor_hits
+            + self.nonfinite_rejected
+            + self.nugget_boundary_hits
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-model health
+// ---------------------------------------------------------------------
+
+/// 1-norm condition estimate above which a model is flagged `warn`:
+/// roughly half the f64 mantissa is gone.
+pub const COND_WARN: f64 = 1e8;
+
+/// Condition estimate above which a model is flagged `critical`:
+/// predictions carry at most a few significant digits.
+pub const COND_CRITICAL: f64 = 1e12;
+
+/// Conditioning classification of one fitted model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum HealthClass {
+    Ok,
+    Warn,
+    Critical,
+}
+
+impl HealthClass {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            HealthClass::Ok => "ok",
+            HealthClass::Warn => "warn",
+            HealthClass::Critical => "critical",
+        }
+    }
+
+    /// Numeric form for gauge export (0 ok, 1 warn, 2 critical).
+    pub fn code(&self) -> u64 {
+        match self {
+            HealthClass::Ok => 0,
+            HealthClass::Warn => 1,
+            HealthClass::Critical => 2,
+        }
+    }
+}
+
+impl fmt::Display for HealthClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One fitted model's numerical-health snapshot, probed once per
+/// fit/refit off the existing Cholesky factor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelHealth {
+    /// Hager/Higham 1-norm condition estimate of `C = R + λI` (a lower
+    /// bound on the true κ₁, usually tight within a small factor).
+    pub cond_estimate: f64,
+    /// Diagonal jitter the factorization escalated to (0 = PD as given).
+    pub jitter: f64,
+    /// Training points behind the factor.
+    pub n: usize,
+}
+
+impl ModelHealth {
+    /// Classify: `critical` past [`COND_CRITICAL`]; `warn` past
+    /// [`COND_WARN`] or whenever jitter had to be escalated; `ok`
+    /// otherwise. Non-finite estimates are `critical` — the probe itself
+    /// overflowed, which only happens on a degenerate factor.
+    pub fn class(&self) -> HealthClass {
+        if !self.cond_estimate.is_finite() || self.cond_estimate > COND_CRITICAL {
+            HealthClass::Critical
+        } else if self.cond_estimate > COND_WARN || self.jitter > 0.0 {
+            HealthClass::Warn
+        } else {
+            HealthClass::Ok
+        }
+    }
+}
+
+/// One cluster's entry in a [`HealthReport`], labeled with its global
+/// cluster id (shard reports carry non-contiguous ids).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClusterHealth {
+    pub cluster: usize,
+    pub health: ModelHealth,
+}
+
+/// Per-cluster numerical health of a fitted surrogate — what
+/// [`crate::kriging::Surrogate::health_report`] answers and
+/// `ckrig doctor` renders. A plain Kriging model reports one entry.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HealthReport {
+    pub clusters: Vec<ClusterHealth>,
+}
+
+impl HealthReport {
+    /// Report for a single (unclustered) model.
+    pub fn single(health: ModelHealth) -> Self {
+        Self { clusters: vec![ClusterHealth { cluster: 0, health }] }
+    }
+
+    /// Worst condition estimate across clusters (0 when empty).
+    pub fn max_cond(&self) -> f64 {
+        self.clusters.iter().map(|c| c.health.cond_estimate).fold(0.0, f64::max)
+    }
+
+    /// Largest escalated jitter across clusters (0 when none escalated).
+    pub fn max_jitter(&self) -> f64 {
+        self.clusters.iter().map(|c| c.health.jitter).fold(0.0, f64::max)
+    }
+
+    /// Total training points across clusters.
+    pub fn total_points(&self) -> usize {
+        self.clusters.iter().map(|c| c.health.n).sum()
+    }
+
+    /// Points-per-cluster balance: largest / smallest cluster size
+    /// (1.0 = perfectly balanced; empty or degenerate reports answer 1).
+    pub fn balance(&self) -> f64 {
+        let min = self.clusters.iter().map(|c| c.health.n).min().unwrap_or(0);
+        let max = self.clusters.iter().map(|c| c.health.n).max().unwrap_or(0);
+        if min == 0 {
+            1.0
+        } else {
+            max as f64 / min as f64
+        }
+    }
+
+    /// Worst classification across clusters (`Ok` when empty).
+    pub fn worst_class(&self) -> HealthClass {
+        self.clusters.iter().map(|c| c.health.class()).max().unwrap_or(HealthClass::Ok)
+    }
+
+    /// Compact single-token wire form for the `shardinfo` handshake:
+    /// `cond:<max>,jit:<max>,worst:<class>` — parsed leniently by
+    /// consumers, so fields can grow.
+    pub fn wire_token(&self) -> String {
+        format!(
+            "cond:{:.3e},jit:{:.3e},worst:{}",
+            self.max_cond(),
+            self.max_jitter(),
+            self.worst_class()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_snapshot_and_delta() {
+        let c = DegeneracyCounters::new();
+        let before = c.snapshot();
+        c.note_jitter_escalation(1e-8);
+        c.note_jitter_escalation(1e-10);
+        c.note_factor_fallback();
+        c.note_floor_hit();
+        c.note_nonfinite();
+        c.note_nugget_boundary();
+        let after = c.snapshot();
+        let delta = after.delta_since(&before);
+        assert_eq!(delta.jitter_escalations, 2);
+        assert_eq!(delta.factor_fallbacks, 1);
+        assert_eq!(delta.combiner_floor_hits, 1);
+        assert_eq!(delta.nonfinite_rejected, 1);
+        assert_eq!(delta.nugget_boundary_hits, 1);
+        assert_eq!(delta.total_events(), 6);
+        // The magnitude gauges: last follows the most recent event, max
+        // keeps the largest ever seen.
+        assert_eq!(after.last_jitter, 1e-10);
+        assert_eq!(after.max_jitter, 1e-8);
+    }
+
+    #[test]
+    fn classification_thresholds() {
+        let ok = ModelHealth { cond_estimate: 1e4, jitter: 0.0, n: 100 };
+        assert_eq!(ok.class(), HealthClass::Ok);
+        let warn_cond = ModelHealth { cond_estimate: 1e9, jitter: 0.0, n: 100 };
+        assert_eq!(warn_cond.class(), HealthClass::Warn);
+        let warn_jitter = ModelHealth { cond_estimate: 1e2, jitter: 1e-9, n: 100 };
+        assert_eq!(warn_jitter.class(), HealthClass::Warn);
+        let critical = ModelHealth { cond_estimate: 1e13, jitter: 0.0, n: 100 };
+        assert_eq!(critical.class(), HealthClass::Critical);
+        let overflowed = ModelHealth { cond_estimate: f64::INFINITY, jitter: 0.0, n: 3 };
+        assert_eq!(overflowed.class(), HealthClass::Critical);
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let h = |cond: f64, jitter: f64, n: usize| ModelHealth { cond_estimate: cond, jitter, n };
+        let report = HealthReport {
+            clusters: vec![
+                ClusterHealth { cluster: 0, health: h(1e3, 0.0, 40) },
+                ClusterHealth { cluster: 2, health: h(1e10, 2e-9, 10) },
+            ],
+        };
+        assert_eq!(report.max_cond(), 1e10);
+        assert_eq!(report.max_jitter(), 2e-9);
+        assert_eq!(report.total_points(), 50);
+        assert_eq!(report.balance(), 4.0);
+        assert_eq!(report.worst_class(), HealthClass::Warn);
+        let token = report.wire_token();
+        assert!(token.starts_with("cond:"), "{token}");
+        assert!(token.contains("worst:warn"), "{token}");
+    }
+
+    #[test]
+    fn probe_switch_round_trips() {
+        assert!(probes_enabled(), "probes default on");
+        set_probes_enabled(false);
+        assert!(!probes_enabled());
+        set_probes_enabled(true);
+        assert!(probes_enabled());
+    }
+}

@@ -112,14 +112,19 @@ impl HistogramSnapshot {
     /// snapshotted buckets (not the racy `n` counter) so it is internally
     /// consistent even when the snapshot raced a writer.
     pub fn percentile_us(&self, p: f64) -> u64 {
-        let total: u64 = self.counts.iter().sum();
+        // Saturating fold: a deliberately poisoned histogram (buckets at
+        // u64::MAX) must degrade to an approximate answer, not overflow.
+        let total = self.counts.iter().fold(0u64, |acc, &c| acc.saturating_add(c));
         if total == 0 {
             return 0;
         }
-        let target = ((p / 100.0) * total as f64).ceil() as u64;
-        let mut seen = 0;
+        // Clamp the requested percentile (NaN asks for the max) and keep
+        // the target rank at >= 1 so p=0 cannot "find" an empty bucket.
+        let p = if p.is_finite() { p.clamp(0.0, 100.0) } else { 100.0 };
+        let target = (((p / 100.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
         for (i, &c) in self.counts.iter().enumerate() {
-            seen += c;
+            seen = seen.saturating_add(c);
             if seen >= target {
                 return if i < BUCKET_BOUNDS_US.len() { BUCKET_BOUNDS_US[i] } else { self.max_us };
             }
@@ -139,6 +144,55 @@ mod tests {
         assert_eq!(h.percentile_us(99.0), 0);
         assert_eq!(h.mean_us(), 0.0);
         assert_eq!(h.max_us(), 0);
+        // Every percentile of an empty histogram is 0 — including the
+        // degenerate requests.
+        for p in [0.0, 50.0, 100.0, -5.0, 250.0, f64::NAN] {
+            assert_eq!(h.percentile_us(p), 0);
+        }
+    }
+
+    #[test]
+    fn degenerate_percentile_requests_are_clamped() {
+        let h = AtomicHistogram::new();
+        h.record_us(500);
+        // A single-bucket histogram answers its one bound for any p,
+        // even p=0 (rank clamps to the first sample) or NaN.
+        for p in [0.0, 0.001, 50.0, 100.0, 1000.0, -3.0, f64::NAN] {
+            assert_eq!(h.percentile_us(p), 1_000, "p={p}");
+        }
+    }
+
+    #[test]
+    fn all_in_overflow_bucket() {
+        let h = AtomicHistogram::new();
+        let last = *BUCKET_BOUNDS_US.last().unwrap();
+        for i in 0..10 {
+            h.record_us(last + 1 + i);
+        }
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(h.percentile_us(p), last + 10, "p={p}");
+        }
+    }
+
+    #[test]
+    fn saturated_counts_do_not_overflow() {
+        // A snapshot saturated to u64::MAX must stay finite (no panic on
+        // the rank sum in debug builds) and answer a real bucket value.
+        let mut counts = [0u64; BUCKET_COUNT];
+        counts[BUCKET_COUNT - 1] = u64::MAX;
+        let s = HistogramSnapshot { counts, total_us: u64::MAX, n: u64::MAX, max_us: 9_999_999 };
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(s.percentile_us(p), 9_999_999, "p={p}");
+        }
+        // Every bucket saturated: the walk saturates too and degrades to
+        // the first bucket's bound instead of overflowing.
+        let s = HistogramSnapshot {
+            counts: [u64::MAX; BUCKET_COUNT],
+            total_us: u64::MAX,
+            n: u64::MAX,
+            max_us: 9_999_999,
+        };
+        assert_eq!(s.percentile_us(100.0), BUCKET_BOUNDS_US[0]);
     }
 
     #[test]

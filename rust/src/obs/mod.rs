@@ -35,17 +35,31 @@
 //!   `BENCH_*.json` records and fail when a gated latency/throughput
 //!   leaf regressed past a tolerance (`ckrig benchdiff`, wired into CI
 //!   against `benchmarks/baseline/`).
+//! * [`health`] — numerical-health plane: per-fit 1-norm condition
+//!   estimates off the existing Cholesky factor (never on the predict
+//!   hot path), process-wide degeneracy counters (jitter escalation,
+//!   `factor_full` fallbacks, combiner variance-floor hits, non-finite
+//!   rejects, nugget-boundary evals), and the per-cluster
+//!   [`HealthReport`] that `ckrig doctor` renders.
+//! * [`slo`] — `--slo p99=5ms,err=0.1%,miscal=off` objectives judged
+//!   over rolling delta windows of the latency histograms, error
+//!   counters, and calibration flags into per-model `ok|warn|breach`
+//!   statuses, with state transitions reported exactly once.
 
 pub mod benchdiff;
 pub mod export;
 pub mod fitlog;
+pub mod health;
 pub mod hist;
 pub mod log;
 pub mod quality;
+pub mod slo;
 pub mod trace;
 
 pub use export::PromText;
 pub use fitlog::{FitSink, FitTelemetry};
+pub use health::{DegeneracySnapshot, HealthClass, HealthReport, ModelHealth};
 pub use hist::{AtomicHistogram, HistogramSnapshot, BUCKET_BOUNDS_US};
 pub use quality::{QualityMonitor, QualitySnapshot};
+pub use slo::{SloEngine, SloReport, SloSpec, SloStatus};
 pub use trace::{Sampling, Span, TraceCtx, Tracer, WireSpan};

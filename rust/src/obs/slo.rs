@@ -1,0 +1,473 @@
+//! SLO alerting over the serving metrics: a parsed objective spec, a
+//! rolling-window evaluator, and `ok|warn|breach` statuses per model.
+//!
+//! The coordinator already records everything an SLO needs — per-op
+//! latency histograms ([`crate::obs::hist`]), request/error/panic
+//! counters, and per-slot calibration flags from
+//! [`crate::obs::quality::QualityMonitor`]. This module turns them into
+//! operator-facing judgments:
+//!
+//! * [`SloSpec`] — the `--slo p99=5ms,err=0.1%,miscal=off` grammar with
+//!   `parse`/`Display` round-tripping.
+//! * [`SloEngine`] — lazily evaluates *delta windows* between scrapes
+//!   (never on the predict hot path): each `health`/`stats`/`metricsx`
+//!   request diffs the current counters against the last consumed
+//!   snapshot, recomputes statuses once the window holds enough
+//!   samples, and reports state *transitions* exactly once each (logged
+//!   as a structured `CKRIG_LOG` warn event by the server).
+//!
+//! Status is three-valued: `ok`, `warn` at ≥80% of a threshold, and
+//! `breach` past it. A model's status is the worst of the global
+//! latency/error dimensions and its own calibration flag.
+
+use crate::obs::hist::HistogramSnapshot;
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::Mutex;
+
+/// Minimum samples a delta window must hold before a dimension is
+/// re-judged; below this the previous status is carried (20 predicts
+/// cannot establish a p99).
+pub const MIN_WINDOW: u64 = 20;
+
+/// Fraction of a threshold at which `warn` fires.
+const WARN_FRACTION: f64 = 0.8;
+
+// ---------------------------------------------------------------------
+// Spec
+// ---------------------------------------------------------------------
+
+/// A parsed SLO objective: `p99=5ms,err=0.1%,miscal=off`.
+///
+/// * `p99=<dur>` — predict p99 budget; durations take a `us`/`ms`/`s`
+///   suffix (`p99=5ms`, `p99=750us`, `p99=2s`).
+/// * `err=<pct>%` — error budget as a percentage of requests (a bare
+///   number is a fraction: `err=0.001` ≡ `err=0.1%`).
+/// * `miscal=on|off` — whether a model's calibration flag breaches its
+///   SLO (default on).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    pub p99_us: Option<u64>,
+    pub err_rate: Option<f64>,
+    pub miscal: bool,
+}
+
+impl Default for SloSpec {
+    fn default() -> Self {
+        Self { p99_us: None, err_rate: None, miscal: true }
+    }
+}
+
+impl SloSpec {
+    /// Parse the `--slo` grammar. Strict: unknown keys, bad durations,
+    /// and empty specs are errors.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let s = s.trim();
+        if s.is_empty() {
+            return Err("empty SLO spec (expected e.g. p99=5ms,err=0.1%)".into());
+        }
+        let mut spec = SloSpec::default();
+        for part in s.split(',') {
+            let part = part.trim();
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| format!("SLO clause `{part}` is not key=value"))?;
+            match key {
+                "p99" => spec.p99_us = Some(parse_duration_us(value)?),
+                "err" => spec.err_rate = Some(parse_rate(value)?),
+                "miscal" => {
+                    spec.miscal = match value {
+                        "on" => true,
+                        "off" => false,
+                        other => return Err(format!("miscal must be on|off, got `{other}`")),
+                    }
+                }
+                other => return Err(format!("unknown SLO key `{other}` (p99|err|miscal)")),
+            }
+        }
+        Ok(spec)
+    }
+}
+
+impl fmt::Display for SloSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut sep = "";
+        if let Some(us) = self.p99_us {
+            if us >= 1_000_000 && us % 1_000_000 == 0 {
+                write!(f, "p99={}s", us / 1_000_000)?;
+            } else if us >= 1_000 && us % 1_000 == 0 {
+                write!(f, "p99={}ms", us / 1_000)?;
+            } else {
+                write!(f, "p99={us}us")?;
+            }
+            sep = ",";
+        }
+        if let Some(rate) = self.err_rate {
+            write!(f, "{sep}err={}%", rate * 100.0)?;
+            sep = ",";
+        }
+        write!(f, "{sep}miscal={}", if self.miscal { "on" } else { "off" })
+    }
+}
+
+fn parse_duration_us(s: &str) -> Result<u64, String> {
+    let (digits, mult) = if let Some(d) = s.strip_suffix("us") {
+        (d, 1.0)
+    } else if let Some(d) = s.strip_suffix("ms") {
+        (d, 1_000.0)
+    } else if let Some(d) = s.strip_suffix('s') {
+        (d, 1_000_000.0)
+    } else {
+        return Err(format!("duration `{s}` needs a us|ms|s suffix"));
+    };
+    let value: f64 =
+        digits.parse().map_err(|_| format!("duration `{s}` is not a number"))?;
+    if !value.is_finite() || value <= 0.0 {
+        return Err(format!("duration `{s}` must be positive"));
+    }
+    Ok((value * mult).round() as u64)
+}
+
+fn parse_rate(s: &str) -> Result<f64, String> {
+    let (digits, scale) =
+        if let Some(d) = s.strip_suffix('%') { (d, 0.01) } else { (s, 1.0) };
+    let value: f64 = digits.parse().map_err(|_| format!("rate `{s}` is not a number"))?;
+    if !value.is_finite() || value < 0.0 {
+        return Err(format!("rate `{s}` must be non-negative"));
+    }
+    Ok(value * scale)
+}
+
+// ---------------------------------------------------------------------
+// Status
+// ---------------------------------------------------------------------
+
+/// Three-valued SLO judgment, ordered so `max` picks the worst.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SloStatus {
+    Ok,
+    Warn,
+    Breach,
+}
+
+impl SloStatus {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SloStatus::Ok => "ok",
+            SloStatus::Warn => "warn",
+            SloStatus::Breach => "breach",
+        }
+    }
+
+    /// Numeric form for the `ckrig_slo_status` gauge (0|1|2).
+    pub fn code(&self) -> u64 {
+        match self {
+            SloStatus::Ok => 0,
+            SloStatus::Warn => 1,
+            SloStatus::Breach => 2,
+        }
+    }
+}
+
+impl fmt::Display for SloStatus {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+fn judge(measured: f64, threshold: f64) -> SloStatus {
+    if measured > threshold {
+        SloStatus::Breach
+    } else if measured > WARN_FRACTION * threshold {
+        SloStatus::Warn
+    } else {
+        SloStatus::Ok
+    }
+}
+
+// ---------------------------------------------------------------------
+// Engine
+// ---------------------------------------------------------------------
+
+/// Counter readings handed to [`SloEngine::evaluate`] — cumulative
+/// since process start, exactly as the server's metrics report them.
+#[derive(Debug, Clone, Default)]
+pub struct SloInputs {
+    /// Predict-op latency histogram (cumulative).
+    pub predict: HistogramSnapshot,
+    /// Total requests served.
+    pub requests: u64,
+    /// Protocol/handler errors plus recovered panics.
+    pub errors: u64,
+    /// Per model slot: is its calibration currently flagged?
+    pub models: Vec<(String, bool)>,
+}
+
+/// One evaluation's outcome.
+#[derive(Debug, Clone)]
+pub struct SloReport {
+    /// Global latency dimension and the p99 it was judged on (µs).
+    pub latency: SloStatus,
+    pub p99_us: u64,
+    /// Global error dimension and the rate it was judged on.
+    pub errors: SloStatus,
+    pub err_rate: f64,
+    /// Per-model worst-of status, sorted by slot name.
+    pub models: Vec<(String, SloStatus)>,
+    /// State changes this evaluation produced: `(slot, from, to)`.
+    /// Each transition appears in exactly one report.
+    pub transitions: Vec<(String, SloStatus, SloStatus)>,
+}
+
+impl SloReport {
+    /// Worst status across every dimension and model.
+    pub fn worst(&self) -> SloStatus {
+        self.models
+            .iter()
+            .map(|(_, s)| *s)
+            .chain([self.latency, self.errors])
+            .max()
+            .unwrap_or(SloStatus::Ok)
+    }
+}
+
+#[derive(Debug, Default)]
+struct EngineState {
+    prev_hist: HistogramSnapshot,
+    prev_requests: u64,
+    prev_errors: u64,
+    latency: Option<SloStatus>,
+    last_p99_us: u64,
+    errors: Option<SloStatus>,
+    last_err_rate: f64,
+    per_model: HashMap<String, SloStatus>,
+}
+
+/// Rolling-window SLO evaluator. Cheap and lazy: holds one mutex for a
+/// counter diff per scrape, and is only ever invoked from the
+/// `health`/`stats`/`metricsx`/doctor paths — never from predict.
+#[derive(Debug)]
+pub struct SloEngine {
+    spec: SloSpec,
+    state: Mutex<EngineState>,
+}
+
+impl SloEngine {
+    pub fn new(spec: SloSpec) -> Self {
+        Self { spec, state: Mutex::new(EngineState::default()) }
+    }
+
+    pub fn spec(&self) -> &SloSpec {
+        &self.spec
+    }
+
+    /// Judge the delta window since the last evaluation that consumed
+    /// one. Dimensions whose window holds fewer than [`MIN_WINDOW`]
+    /// samples keep their previous status (initially `ok`).
+    pub fn evaluate(&self, inp: &SloInputs) -> SloReport {
+        let mut st = self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+
+        // Latency: p99 over the bucket-count delta since the last
+        // consumed histogram snapshot.
+        if let Some(thr) = self.spec.p99_us {
+            let delta = delta_hist(&inp.predict, &st.prev_hist);
+            let window: u64 = delta.counts.iter().sum();
+            if window >= MIN_WINDOW {
+                let p99 = delta.percentile_us(99.0);
+                st.latency = Some(judge(p99 as f64, thr as f64));
+                st.last_p99_us = p99;
+                st.prev_hist = inp.predict;
+            }
+        }
+
+        // Errors: rate over the request-count delta.
+        if let Some(thr) = self.spec.err_rate {
+            let req = inp.requests.saturating_sub(st.prev_requests);
+            if req >= MIN_WINDOW {
+                let err = inp.errors.saturating_sub(st.prev_errors);
+                let rate = err as f64 / req as f64;
+                st.errors = Some(judge(rate, thr));
+                st.last_err_rate = rate;
+                st.prev_requests = inp.requests;
+                st.prev_errors = inp.errors;
+            }
+        }
+
+        let latency = st.latency.unwrap_or(SloStatus::Ok);
+        let errors = st.errors.unwrap_or(SloStatus::Ok);
+        let global = latency.max(errors);
+
+        let mut models = Vec::with_capacity(inp.models.len());
+        let mut transitions = Vec::new();
+        for (slot, miscalibrated) in &inp.models {
+            let miscal = if self.spec.miscal && *miscalibrated {
+                SloStatus::Breach
+            } else {
+                SloStatus::Ok
+            };
+            let status = global.max(miscal);
+            let prev = st.per_model.insert(slot.clone(), status).unwrap_or(SloStatus::Ok);
+            if prev != status {
+                transitions.push((slot.clone(), prev, status));
+            }
+            models.push((slot.clone(), status));
+        }
+        models.sort_by(|a, b| a.0.cmp(&b.0));
+
+        SloReport {
+            latency,
+            p99_us: st.last_p99_us,
+            errors,
+            err_rate: st.last_err_rate,
+            models,
+            transitions,
+        }
+    }
+}
+
+/// Elementwise saturating difference of two cumulative snapshots. The
+/// overflow bucket keeps the *current* observed max — approximate, but
+/// only consulted when the p99 lands past the largest bounded bucket.
+fn delta_hist(now: &HistogramSnapshot, prev: &HistogramSnapshot) -> HistogramSnapshot {
+    let mut delta = *now;
+    for (d, p) in delta.counts.iter_mut().zip(&prev.counts) {
+        *d = d.saturating_sub(*p);
+    }
+    delta.total_us = now.total_us.saturating_sub(prev.total_us);
+    delta.n = now.n.saturating_sub(prev.n);
+    delta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::hist::AtomicHistogram;
+
+    #[test]
+    fn spec_parse_round_trips() {
+        for s in ["p99=5ms,err=0.1%,miscal=off", "p99=750us,miscal=on", "err=2%,miscal=on"] {
+            let spec = SloSpec::parse(s).unwrap();
+            assert_eq!(spec.to_string(), s, "round-trip of `{s}`");
+        }
+        let spec = SloSpec::parse("p99=2s").unwrap();
+        assert_eq!(spec.p99_us, Some(2_000_000));
+        assert!(spec.miscal, "miscal defaults on");
+        // Bare fraction equals the percentage form.
+        assert_eq!(SloSpec::parse("err=0.001").unwrap().err_rate, Some(0.001));
+        assert_eq!(SloSpec::parse("err=0.1%").unwrap().err_rate, Some(0.001));
+    }
+
+    #[test]
+    fn spec_parse_rejects_malformed() {
+        for bad in
+            ["", "p99=5", "p99=-1ms", "p99=xms", "err=nope", "miscal=maybe", "latency=5ms", "p99"]
+        {
+            assert!(SloSpec::parse(bad).is_err(), "`{bad}` should be rejected");
+        }
+    }
+
+    fn snap(lat_us: u64, n: u64) -> HistogramSnapshot {
+        let h = AtomicHistogram::new();
+        for _ in 0..n {
+            h.record_us(lat_us);
+        }
+        h.snapshot()
+    }
+
+    #[test]
+    fn latency_window_judges_and_carries() {
+        let engine =
+            SloEngine::new(SloSpec::parse("p99=5ms").unwrap());
+        let models = vec![("default".to_string(), false)];
+
+        // Too few samples: status carried as ok, no transition.
+        let r = engine.evaluate(&SloInputs {
+            predict: snap(50_000, 5),
+            models: models.clone(),
+            ..Default::default()
+        });
+        assert_eq!(r.latency, SloStatus::Ok);
+        assert!(r.transitions.is_empty());
+
+        // A full window of 50ms latencies breaches the 5ms budget and
+        // reports the transition exactly once.
+        let r = engine.evaluate(&SloInputs {
+            predict: snap(50_000, 40),
+            models: models.clone(),
+            ..Default::default()
+        });
+        assert_eq!(r.latency, SloStatus::Breach);
+        assert_eq!(r.models, vec![("default".to_string(), SloStatus::Breach)]);
+        assert_eq!(
+            r.transitions,
+            vec![("default".to_string(), SloStatus::Ok, SloStatus::Breach)]
+        );
+
+        // Same counters again: an empty window carries breach silently.
+        let r = engine.evaluate(&SloInputs {
+            predict: snap(50_000, 40),
+            models: models.clone(),
+            ..Default::default()
+        });
+        assert_eq!(r.latency, SloStatus::Breach);
+        assert!(r.transitions.is_empty(), "no repeat transition");
+
+        // A fresh fast window recovers, producing one more transition.
+        let h = AtomicHistogram::new();
+        for _ in 0..40 {
+            h.record_us(50_000);
+        }
+        for _ in 0..200 {
+            h.record_us(100);
+        }
+        let r = engine
+            .evaluate(&SloInputs { predict: h.snapshot(), models, ..Default::default() });
+        assert_eq!(r.latency, SloStatus::Ok);
+        assert_eq!(
+            r.transitions,
+            vec![("default".to_string(), SloStatus::Breach, SloStatus::Ok)]
+        );
+    }
+
+    #[test]
+    fn error_rate_and_miscal_dimensions() {
+        let engine = SloEngine::new(SloSpec::parse("err=1%").unwrap());
+        // 100 requests, 5 errors: 5% > 1% → breach.
+        let r = engine.evaluate(&SloInputs {
+            requests: 100,
+            errors: 5,
+            models: vec![("m".to_string(), false)],
+            ..Default::default()
+        });
+        assert_eq!(r.errors, SloStatus::Breach);
+        assert_eq!(r.worst(), SloStatus::Breach);
+
+        // Miscalibration breaches only when the spec says it does.
+        let strict = SloEngine::new(SloSpec::parse("miscal=on").unwrap());
+        let r = strict.evaluate(&SloInputs {
+            models: vec![("m".to_string(), true)],
+            ..Default::default()
+        });
+        assert_eq!(r.models[0].1, SloStatus::Breach);
+        let lax = SloEngine::new(SloSpec::parse("miscal=off").unwrap());
+        let r = lax.evaluate(&SloInputs {
+            models: vec![("m".to_string(), true)],
+            ..Default::default()
+        });
+        assert_eq!(r.models[0].1, SloStatus::Ok);
+    }
+
+    #[test]
+    fn warn_fires_below_breach() {
+        let engine = SloEngine::new(SloSpec::parse("p99=100ms").unwrap());
+        // p99 recovers to the 100_000us bucket bound: 100% of budget is
+        // not a breach, but past the 80% warn line.
+        let r = engine.evaluate(&SloInputs {
+            predict: snap(90_000, 40),
+            models: vec![("m".to_string(), false)],
+            ..Default::default()
+        });
+        assert_eq!(r.latency, SloStatus::Warn);
+        assert_eq!(r.p99_us, 100_000);
+    }
+}

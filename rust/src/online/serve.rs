@@ -332,6 +332,12 @@ impl Surrogate for OnlineModel {
             None
         }
     }
+
+    fn health_report(&self) -> Option<crate::obs::health::HealthReport> {
+        // May run an O(n²) probe per cluster (post-observe state has no
+        // cached probe) — doctor/metricsx only, never the predict path.
+        self.inner.read().unwrap_or_else(PoisonError::into_inner).health_report()
+    }
 }
 
 impl crate::distributed::ShardPredictor for OnlineModel {
@@ -391,10 +397,10 @@ impl OnlineObserver for OnlineModel {
         );
         // Reject malformed batches before anything mutates — the realistic
         // mid-batch failure (a NaN row) must not partially apply.
-        anyhow::ensure!(
-            ys.iter().all(|v| v.is_finite()) && !xs.has_non_finite(),
-            "observe: batch contains non-finite values"
-        );
+        if ys.iter().any(|v| !v.is_finite()) || xs.has_non_finite() {
+            crate::obs::health::counters().note_nonfinite();
+            anyhow::bail!("observe: batch contains non-finite values");
+        }
         let m = xs.rows();
         // 1. Drift signal: standardized residuals of the *pre-update*
         // posterior at the incoming points. Computed now (against the

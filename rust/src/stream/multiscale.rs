@@ -175,6 +175,24 @@ impl Surrogate for Multiscale {
     fn as_online_mut(&mut self) -> Option<&mut dyn crate::online::OnlineSurrogate> {
         Some(self)
     }
+
+    fn health_report(&self) -> Option<crate::obs::health::HealthReport> {
+        // Cluster 0 is the coarse trend; fine residual models follow as
+        // clusters 1..=k (empty slots contribute nothing).
+        let mut clusters = vec![crate::obs::health::ClusterHealth {
+            cluster: 0,
+            health: self.coarse.health_or_probe(),
+        }];
+        for (c, f) in self.fine.iter().enumerate() {
+            if let Some(m) = f {
+                clusters.push(crate::obs::health::ClusterHealth {
+                    cluster: c + 1,
+                    health: m.health_or_probe(),
+                });
+            }
+        }
+        Some(crate::obs::health::HealthReport { clusters })
+    }
 }
 
 impl crate::online::OnlineSurrogate for Multiscale {
@@ -190,10 +208,10 @@ impl crate::online::OnlineSurrogate for Multiscale {
             x.len(),
             self.dim()
         );
-        ensure!(
-            y.is_finite() && x.iter().all(|v| v.is_finite()),
-            "observe: non-finite observation"
-        );
+        if !y.is_finite() || x.iter().any(|v| !v.is_finite()) {
+            crate::obs::health::counters().note_nonfinite();
+            anyhow::bail!("observe: non-finite observation");
+        }
         let resid = y - self.coarse.predict_mean_one(x);
         let c = self.route(x);
         match &mut self.fine[c] {

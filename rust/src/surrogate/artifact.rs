@@ -4,7 +4,7 @@
 //!
 //! ```text
 //! magic   4 B   b"CKRG"
-//! version 4 B   u32 (currently 2)
+//! version 4 B   u32 (the current [`VERSION`])
 //! tag     1 B   model type (TAG_* constants)
 //! length  8 B   payload byte count
 //! check   8 B   FNV-1a 64 of the payload
@@ -34,12 +34,17 @@
 //! * **v4** — adds `TAG_MULTISCALE` (the streaming coarse + fine residual
 //!   ensemble from [`crate::stream::Multiscale`]). No existing payload
 //!   layout changed; v1/v2/v3 files still load.
+//! * **v5** — adds the optional numerical-health block per Kriging model
+//!   (a flag byte plus the fit-time 1-norm condition estimate, appended
+//!   after the v2 fields; jitter and n are already recoverable from the
+//!   stored factor). No existing payload layout changed; v1–v4 files
+//!   still load and simply report no cached probe.
 
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{Read, Write};
 
 pub const MAGIC: [u8; 4] = *b"CKRG";
-pub const VERSION: u32 = 4;
+pub const VERSION: u32 = 5;
 pub const MIN_VERSION: u32 = 1;
 
 /// Model-type tags (one per `Surrogate` implementation that persists).

@@ -144,6 +144,12 @@ impl Surrogate for Standardized {
             None
         }
     }
+
+    fn health_report(&self) -> Option<crate::obs::health::HealthReport> {
+        // Conditioning is a property of the wrapped model's factors;
+        // standardization only translates units.
+        self.inner.health_report()
+    }
 }
 
 /// `spredict` partials stay in the wrapped model's **fit units** —

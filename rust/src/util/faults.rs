@@ -24,8 +24,10 @@
 //! Instrumented points: `wal-pre-fsync` and `wal-post-append` (durable
 //! observe path), `ckpt-pre-rename` (checkpoint writer), `accept-delay`
 //! (listener accept loop), `conn-read` / `conn-write` (per-request
-//! socket handling), `spredict` and `spredict-drop` (shard predict
-//! handler; `drop` severs the connection without replying).
+//! socket handling), `predict` (inside the batcher's timed predict
+//! section, so delays land in the latency histogram the p99 SLO reads),
+//! `spredict` and `spredict-drop` (shard predict handler; `drop` severs
+//! the connection without replying).
 
 use anyhow::Result;
 

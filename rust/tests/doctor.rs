@@ -1,0 +1,300 @@
+//! Numerical-health observability end to end (`ckrig doctor`, v8).
+//!
+//! * A well-conditioned fit → shard → serve fleet reports zero
+//!   degeneracy-counter deltas, per-cluster condition estimates, `ok`
+//!   SLO status on `health`/`stats`, and aggregated per-shard
+//!   `shealth=` tokens through the coordinator.
+//! * A duplicated-points fit escalates jitter on the affected cluster
+//!   *only*; `ckrig doctor --artifact` renders the escalation through
+//!   the real binary off the persisted artifact.
+//! * (fault-injection) A 20ms injected delay inside the batcher's
+//!   predict span flips the `p99=5ms` SLO to `breach`, `ckrig doctor
+//!   --addr` exits non-zero, and the structured warn transition is
+//!   logged exactly once across repeated evaluations.
+
+use cluster_kriging::cluster_kriging::{builder, ClusterKriging};
+use cluster_kriging::coordinator::{
+    BatcherConfig, Client, Health, ModelRegistry, ServeOptions, Server, ServerConfig,
+    ServerMetrics, ShardPool, ShardPoolConfig,
+};
+use cluster_kriging::distributed::{ClusterShard, ShardManifest, ShardedClusterKriging};
+use cluster_kriging::kriging::{HyperOpt, NuggetMode, Surrogate};
+use cluster_kriging::obs::health::{self, HealthClass};
+use cluster_kriging::obs::{Sampling, SloEngine, SloSpec, Tracer};
+use cluster_kriging::surrogate;
+use cluster_kriging::util::matrix::Matrix;
+use cluster_kriging::util::proptest::gen_matrix;
+use cluster_kriging::util::rng::Rng;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn target(row: &[f64]) -> f64 {
+    row[0].sin() + 0.3 * row[1] * row[1]
+}
+
+fn fit_owck(k: usize, n: usize, seed: u64) -> (ClusterKriging, Matrix) {
+    let mut rng = Rng::new(seed);
+    let x = gen_matrix(&mut rng, n, 2, -3.0, 3.0);
+    let y: Vec<f64> = (0..n).map(|i| target(x.row(i))).collect();
+    let opt = HyperOpt {
+        restarts: 1,
+        max_evals: 10,
+        isotropic: true,
+        nugget: NuggetMode::Fixed(1e-8),
+        ..HyperOpt::default()
+    };
+    let cfg = builder::flavor("OWCK", k, seed, opt).unwrap();
+    let model = ClusterKriging::fit(&x, &y, cfg).unwrap();
+    let probe = gen_matrix(&mut rng, 24, 2, -3.0, 3.0);
+    (model, probe)
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ckrig_doctor_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn ckrig() -> std::process::Command {
+    std::process::Command::new(env!("CARGO_BIN_EXE_ckrig"))
+}
+
+/// Two well-separated blobs whose k=2 clustering is unambiguous: a
+/// clean 4×4 unit-spaced grid, and 4 distinct points duplicated 10×
+/// each — the latter's correlation matrix is singular as given, so a
+/// `Fixed(1e-12)` nugget forces jitter escalation on that cluster only.
+fn two_blob_dataset() -> (Matrix, Vec<f64>) {
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for i in 0..4 {
+        for j in 0..4 {
+            rows.push(vec![-3.0 + i as f64, -3.0 + j as f64]);
+        }
+    }
+    for p in [[2.0, 2.0], [2.0, 3.0], [3.0, 2.0], [3.0, 3.0]] {
+        for _ in 0..10 {
+            rows.push(p.to_vec());
+        }
+    }
+    let y: Vec<f64> = rows.iter().map(|r| target(r)).collect();
+    let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+    (Matrix::from_rows(&refs), y)
+}
+
+/// Scenarios 1 + 2 of the issue, merged so the process-global counter
+/// deltas are ordering-deterministic: the well-conditioned fleet must
+/// see *zero* new degeneracy events, which only holds if the
+/// duplicated-points fit (which escalates on purpose) runs after its
+/// snapshot window closes — i.e. in the same test.
+#[test]
+fn well_conditioned_fleet_is_ok_and_duplicated_cluster_is_flagged() {
+    let dir = temp_dir("artifacts");
+
+    // -- Scenario 1: clean fit → zero degeneracy deltas, healthy report.
+    let before = health::counters().snapshot();
+    let (model, probe) = fit_owck(3, 120, 31);
+    let delta = health::counters().snapshot().delta_since(&before);
+    assert_eq!(delta.jitter_escalations, 0, "clean fit escalated jitter: {delta:?}");
+    assert_eq!(delta.factor_fallbacks, 0, "{delta:?}");
+    assert_eq!(delta.nonfinite_rejected, 0, "{delta:?}");
+
+    let report = model.health_report().expect("cluster kriging reports health");
+    assert_eq!(report.clusters.len(), 3, "{report:?}");
+    assert_eq!(report.total_points(), 120, "{report:?}");
+    for c in &report.clusters {
+        assert!(
+            c.health.cond_estimate.is_finite() && c.health.cond_estimate >= 1.0,
+            "cluster {} condition estimate {:?}",
+            c.cluster,
+            c.health
+        );
+        assert_eq!(c.health.jitter, 0.0, "clean cluster escalated: {:?}", c.health);
+    }
+    assert_ne!(report.worst_class(), HealthClass::Critical, "{report:?}");
+
+    let good_path = dir.join("good.ck");
+    surrogate::save_to_path(&model, &good_path).unwrap();
+
+    // -- Serve it sharded with a lenient SLO: everything stays `ok` and
+    // the coordinator aggregates both workers' shealth tokens.
+    let manifest = ShardManifest::from_model(&model, 2, None).unwrap();
+    let shards = ClusterShard::split(model, 2).unwrap();
+    let mut workers = Vec::new();
+    let mut addrs = Vec::new();
+    for shard in shards {
+        let server = Server::start_with_model(
+            Arc::new(shard),
+            ServerConfig { addr: "127.0.0.1:0".into(), batcher: BatcherConfig::default() },
+        )
+        .unwrap();
+        addrs.push(server.local_addr.to_string());
+        workers.push(server);
+    }
+    let pool_cfg = ShardPoolConfig {
+        request_timeout: Duration::from_secs(10),
+        retry_backoff: Duration::from_millis(100),
+        ..ShardPoolConfig::default()
+    };
+    let pool = ShardPool::connect(&addrs, &manifest, pool_cfg).unwrap();
+    let sharded = ShardedClusterKriging::new(manifest, Arc::clone(&pool)).unwrap();
+    let metrics = Arc::new(ServerMetrics::new());
+    pool.attach_metrics(Arc::clone(&metrics));
+    let health_mon = Health::new();
+    pool.attach_health(Arc::clone(&health_mon));
+    let slo = SloEngine::new(SloSpec::parse("p99=5s,err=50%,miscal=off").unwrap());
+    let coordinator = Server::start_with_options(
+        Arc::new(ModelRegistry::new("default", Arc::new(sharded))),
+        ServerConfig { addr: "127.0.0.1:0".into(), batcher: BatcherConfig::default() },
+        ServeOptions {
+            metrics,
+            wal: None,
+            health: health_mon,
+            tracer: Arc::new(Tracer::new(64, Sampling::Off)),
+            pool: Some(Arc::clone(&pool)),
+            slo: Some(Arc::new(slo)),
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(&coordinator.local_addr.to_string()).unwrap();
+    for i in 0..25 {
+        let row = probe.row(i % probe.rows()).to_vec();
+        let out = client.predict_batch(None, &[row]).unwrap();
+        assert!(out[0].0.is_finite());
+    }
+    let stats = client.stats().unwrap();
+    assert!(stats.contains(" slo=ok"), "{stats}");
+    assert!(stats.contains("slo_models=default:ok"), "{stats}");
+    assert!(stats.contains(" shealth="), "coordinator lost shard health: {stats}");
+    assert!(stats.contains("0:cond:"), "{stats}");
+    assert!(stats.contains("1:cond:"), "{stats}");
+    let health_line = client.request("health").unwrap();
+    assert!(health_line.contains("slo=ok"), "{health_line}");
+
+    // -- Scenario 2: duplicated points escalate the affected cluster only.
+    let (x, y) = two_blob_dataset();
+    let before = health::counters().snapshot();
+    let opt = HyperOpt {
+        restarts: 1,
+        max_evals: 10,
+        isotropic: true,
+        nugget: NuggetMode::Fixed(1e-12),
+        ..HyperOpt::default()
+    };
+    let cfg = builder::flavor("OWCK", 2, 7, opt).unwrap();
+    let dup_model = ClusterKriging::fit(&x, &y, cfg).unwrap();
+    let delta = health::counters().snapshot().delta_since(&before);
+    assert!(delta.jitter_escalations >= 1, "no escalation recorded: {delta:?}");
+    assert!(delta.max_jitter > 0.0, "{delta:?}");
+
+    let report = dup_model.health_report().unwrap();
+    assert_eq!(report.clusters.len(), 2, "{report:?}");
+    let escalated: Vec<_> = report.clusters.iter().filter(|c| c.health.jitter > 0.0).collect();
+    assert_eq!(escalated.len(), 1, "exactly one cluster escalates: {report:?}");
+    assert_eq!(escalated[0].health.n, 40, "wrong cluster flagged: {report:?}");
+    assert!(
+        escalated[0].health.cond_estimate > 1e4,
+        "duplicated cluster should be ill-conditioned: {report:?}"
+    );
+    assert!(report.worst_class() >= HealthClass::Warn, "{report:?}");
+    let clean: Vec<_> = report.clusters.iter().filter(|c| c.health.jitter == 0.0).collect();
+    assert_eq!(clean[0].health.n, 16, "{report:?}");
+
+    let dup_path = dir.join("dup.ck");
+    surrogate::save_to_path(&dup_model, &dup_path).unwrap();
+
+    // -- `ckrig doctor --artifact` through the real binary.
+    let out = ckrig()
+        .args(["doctor", "--artifact", good_path.to_str().unwrap()])
+        .output()
+        .expect("running ckrig doctor");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "doctor failed on a healthy artifact:\nstdout: {text}\nstderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(text.contains("verdict"), "{text}");
+    assert!(!text.contains("escalated jitter"), "healthy artifact flagged: {text}");
+
+    // The duplicated artifact must surface the escalation (warn is exit
+    // 0; only a critical condition estimate fails the run).
+    let out = ckrig()
+        .args(["doctor", "--artifact", dup_path.to_str().unwrap()])
+        .output()
+        .expect("running ckrig doctor");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("escalated jitter"), "escalation not reported: {text}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Scenario 3 (fault-injection builds): a 20ms delay armed inside the
+/// batcher's timed predict span pushes the delta-window p99 far past a
+/// 5ms budget — the SLO flips to `breach`, `ckrig doctor --addr` exits
+/// non-zero, and the engine reports the transition exactly once no
+/// matter how many scrapes re-evaluate it.
+#[cfg(feature = "fault-injection")]
+#[test]
+fn injected_latency_flips_p99_slo_to_breach_and_doctor_fails() {
+    cluster_kriging::obs::log::init();
+    let (model, probe) = fit_owck(3, 100, 53);
+    let engine = Arc::new(SloEngine::new(SloSpec::parse("p99=5ms,err=50%,miscal=off").unwrap()));
+    let server = Server::start_with_options(
+        Arc::new(ModelRegistry::new("default", Arc::new(model))),
+        ServerConfig { addr: "127.0.0.1:0".into(), batcher: BatcherConfig::default() },
+        ServeOptions {
+            metrics: Arc::new(ServerMetrics::new()),
+            wal: None,
+            health: Health::new(),
+            tracer: Arc::new(Tracer::new(64, Sampling::Off)),
+            pool: None,
+            slo: Some(Arc::clone(&engine)),
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr.to_string();
+    let mut client = Client::connect(&addr).unwrap();
+
+    // Baseline: too few predicts to judge a p99 → carried `ok`.
+    let stats = client.stats().unwrap();
+    assert!(stats.contains(" slo=ok"), "{stats}");
+
+    cluster_kriging::util::faults::arm("predict:delay-20").unwrap();
+    for i in 0..25 {
+        let row = probe.row(i % probe.rows()).to_vec();
+        client.predict_batch(None, &[row]).unwrap();
+    }
+    cluster_kriging::util::faults::arm("").unwrap();
+
+    let stats = client.stats().unwrap();
+    assert!(stats.contains(" slo=breach"), "{stats}");
+    assert!(stats.contains("slo_models=default:breach"), "{stats}");
+
+    let transitions = || {
+        cluster_kriging::obs::log::recent()
+            .into_iter()
+            .filter(|l| l.contains("SLO transition") && l.contains("model=default"))
+            .collect::<Vec<_>>()
+    };
+    let seen = transitions();
+    assert_eq!(seen.len(), 1, "transition must log exactly once: {seen:?}");
+    assert!(seen[0].contains("ok->breach"), "{seen:?}");
+
+    // Doctor against the live server: non-zero exit on the breach, and
+    // its extra server-side evaluations must not re-log the transition.
+    let out = ckrig().args(["doctor", "--addr", &addr]).output().expect("running ckrig doctor");
+    assert!(
+        !out.status.success(),
+        "doctor must fail on an SLO breach:\nstdout: {}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("SLO breach"),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let _ = client.stats().unwrap();
+    let seen = transitions();
+    assert_eq!(seen.len(), 1, "repeat evaluations re-logged the transition: {seen:?}");
+}

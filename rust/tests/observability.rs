@@ -88,6 +88,7 @@ fn start_traced_fleet(
             health,
             tracer: Arc::new(Tracer::new(1024, Sampling::Off)),
             pool: Some(Arc::clone(&pool)),
+            slo: None,
         },
     )
     .unwrap();

@@ -167,9 +167,10 @@ fn observed_model_roundtrips_through_artifact_v2() {
 
 #[test]
 fn v1_artifact_loads_and_stays_observable() {
-    // Craft a v1 artifact from a v2 one: the v1 payload is the v2 payload
-    // minus the trailing y slice (8-byte length prefix + n × 8 bytes),
-    // reframed at container version 1.
+    // Craft a v1 artifact from a current one: the v1 payload is the
+    // current payload minus the trailing v5 health block (flag byte +
+    // condition estimate) and v2 y slice (8-byte length prefix + n × 8
+    // bytes), reframed at container version 1.
     let (x, y) = base_data(30, 17);
     let kernel = Kernel::new(KernelKind::SquaredExponential, vec![0.8, 0.8]);
     let model = OrdinaryKriging::fit(x, &y, kernel, 1e-6).unwrap();
@@ -178,7 +179,8 @@ fn v1_artifact_loads_and_stays_observable() {
     let (version, tag, payload) = artifact::read_model(&mut v2_bytes.as_slice()).unwrap();
     assert_eq!(version, artifact::VERSION);
     assert_eq!(tag, artifact::TAG_KRIGING);
-    let v1_payload = &payload[..payload.len() - (8 + 8 * model.n_train())];
+    let health_len = if model.health().is_some() { 1 + 8 } else { 1 };
+    let v1_payload = &payload[..payload.len() - health_len - (8 + 8 * model.n_train())];
     let mut v1_bytes = Vec::new();
     artifact::write_model_versioned(&mut v1_bytes, tag, v1_payload, 1).unwrap();
 
@@ -223,7 +225,8 @@ fn v1_reconstruction_is_exact_for_jittered_factors() {
     let mut v2_bytes = Vec::new();
     model.save(&mut v2_bytes).unwrap();
     let (_, tag, payload) = artifact::read_model(&mut v2_bytes.as_slice()).unwrap();
-    let v1_payload = &payload[..payload.len() - (8 + 8 * model.n_train())];
+    let health_len = if model.health().is_some() { 1 + 8 } else { 1 };
+    let v1_payload = &payload[..payload.len() - health_len - (8 + 8 * model.n_train())];
     let mut v1_bytes = Vec::new();
     artifact::write_model_versioned(&mut v1_bytes, tag, v1_payload, 1).unwrap();
 
